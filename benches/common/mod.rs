@@ -1,0 +1,28 @@
+//! Shared bench scaffolding: every `fig*` bench (a) regenerates its
+//! paper table from the analytic model (the reproduction artifact), and
+//! (b) wall-clock-measures the *executed* algorithm at host-feasible
+//! sizes with the in-tree harness, verifying executed and analytic
+//! ledgers agree where both exist.
+
+use gpu_bucket_sort::experiments::ExpTable;
+use gpu_bucket_sort::util::bench::BenchResult;
+use std::path::Path;
+
+/// Print + persist a regenerated paper table.
+pub fn emit_table(table: &ExpTable) {
+    println!("{}", table.to_markdown());
+    match table.write_csv(Path::new("results")) {
+        Ok(p) => println!("→ {}\n", p.display()),
+        Err(e) => eprintln!("(csv write failed: {e})"),
+    }
+}
+
+/// Persist wall-clock measurements alongside the table.
+pub fn emit_measurements(name: &str, results: &[BenchResult]) {
+    let path = Path::new("results").join(format!("{name}_wallclock.csv"));
+    if let Err(e) = gpu_bucket_sort::util::bench::write_csv(&path, results) {
+        eprintln!("(wallclock csv write failed: {e})");
+    } else {
+        println!("→ {}", path.display());
+    }
+}

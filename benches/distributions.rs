@@ -1,0 +1,36 @@
+//! Distribution robustness benchmark (§5 / X1): executed runs of both
+//! sample sorts across the input-distribution suite — the deterministic
+//! method's estimates stay flat while the randomized baseline
+//! fluctuates. Also wall-clock-measures the native engine per
+//! distribution (host-side robustness).
+
+mod common;
+
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Simulated-device robustness table (executed algorithms).
+    let (table, gbs_spread, rss_spread) = exp::robustness(1 << 19, 7);
+    common::emit_table(&table);
+    println!(
+        "spread (max/min − 1): deterministic {gbs_spread:.4}, randomized {rss_spread:.4}\n"
+    );
+
+    // (b) Native engine wall time per distribution.
+    let engine = NativeEngine::new(NativeParams::default()).unwrap();
+    let bencher = Bencher::from_env();
+    let n = 1 << 22;
+    let mut results = Vec::new();
+    for dist in Distribution::ROBUSTNESS_SUITE {
+        let keys = dist.generate(n, 11);
+        results.push(bencher.bench(format!("dist/native/{dist}"), || {
+            let mut k = keys.clone();
+            engine.sort(&mut k);
+            k
+        }));
+    }
+    common::emit_measurements("distributions", &results);
+}

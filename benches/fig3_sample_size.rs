@@ -1,0 +1,41 @@
+//! Figure 3: total runtime of Algorithm 1 as a function of the sample
+//! size s, for fixed n — the trade-off that selects the paper's s = 64.
+//!
+//! Regenerates the simulated paper-scale series (n ∈ {32M, 64M, 128M})
+//! and wall-clock-measures the executed algorithm's s-sweep at a
+//! host-feasible n, checking the same U-shape appears in both.
+
+mod common;
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Paper-scale table.
+    common::emit_table(&exp::fig3_sample_size(&exp::FIG3_NS, &exp::FIG3_S_VALUES));
+
+    // (b) Executed sweep at n = 1M: wall time of the host execution and
+    // the simulated estimate per s.
+    let n = 1 << 20;
+    let keys = Distribution::Uniform.generate(n, 3);
+    let bencher = Bencher::from_env();
+    let mut results = Vec::new();
+    println!("executed s-sweep at n = {n} (host wall + simulated estimate):");
+    for s in exp::FIG3_S_VALUES {
+        let sorter = BucketSort::new(BucketSortParams { tile: 2048, s });
+        let mut est = 0.0;
+        let r = bencher.bench(format!("fig3/exec/s={s}"), || {
+            let mut k = keys.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let report = sorter.sort(&mut k, &mut sim).unwrap();
+            est = report.total_estimated_ms(sim.spec());
+            k
+        });
+        println!("    s={s:<4} simulated estimate {est:8.2} ms");
+        results.push(r);
+    }
+    common::emit_measurements("fig3", &results);
+}

@@ -1,0 +1,37 @@
+//! Figure 4: GPU Bucket Sort runtime for varying n on the Tesla C1060,
+//! GTX 260 and GTX 285 — near-linear growth, bandwidth-bound device
+//! ordering, and the per-device memory ceilings.
+
+mod common;
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Paper-scale table (1M – 512M, ceilings included).
+    common::emit_table(&exp::fig4_devices(&exp::paper_n_ladder(512 << 20)));
+
+    // (b) Executed runs across devices at n = 1M: same ledger priced per
+    // device; wall time measures the host execution engine.
+    let n = 1 << 20;
+    let keys = Distribution::Uniform.generate(n, 4);
+    let sorter = BucketSort::new(BucketSortParams::default());
+    let bencher = Bencher::from_env();
+    let mut results = Vec::new();
+    for gpu in [GpuModel::TeslaC1060, GpuModel::Gtx260, GpuModel::Gtx285_2G] {
+        let mut est = 0.0;
+        let r = bencher.bench(format!("fig4/exec/{}", gpu.spec().name), || {
+            let mut k = keys.clone();
+            let mut sim = GpuSim::new(gpu.spec());
+            let report = sorter.sort(&mut k, &mut sim).unwrap();
+            est = report.total_estimated_ms(sim.spec());
+            k
+        });
+        println!("    {}: simulated estimate {est:.2} ms", gpu.spec().name);
+        results.push(r);
+    }
+    common::emit_measurements("fig4", &results);
+}

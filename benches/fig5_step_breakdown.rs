@@ -1,0 +1,41 @@
+//! Figure 5: per-step runtime of Algorithm 1 on the GTX 285 — Steps 2
+//! and 9 dominate, the deterministic-sampling overhead (Steps 3–7) is
+//! small, and the relocation (Step 8) is nearly free.
+
+mod common;
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Paper-scale breakdown across the full n range.
+    common::emit_table(&exp::fig5_step_breakdown(&exp::paper_n_ladder(256 << 20)));
+
+    // (b) Executed breakdown at n = 1M, with the host-side wall time of
+    // the full run.
+    let n = 1 << 20;
+    let keys = Distribution::Uniform.generate(n, 5);
+    let sorter = BucketSort::new(BucketSortParams::default());
+    let bencher = Bencher::from_env();
+
+    let mut k = keys.clone();
+    let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+    let report = sorter.sort(&mut k, &mut sim).unwrap();
+    println!("executed per-step estimates at n = {n}:");
+    let steps = report.step_ms(sim.spec());
+    let total: f64 = steps.values().sum();
+    for (step, ms) in &steps {
+        println!("    step {step}: {ms:8.3} ms ({:4.1}%)", 100.0 * ms / total);
+    }
+
+    let r = bencher.bench("fig5/exec/full", || {
+        let mut k = keys.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort(&mut k, &mut sim).unwrap();
+        k
+    });
+    common::emit_measurements("fig5", &[r]);
+}

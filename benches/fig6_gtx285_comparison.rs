@@ -1,0 +1,35 @@
+//! Figure 6: GTX 285 — GPU Bucket Sort vs Randomized Sample Sort [9]
+//! vs Thrust Merge [14]: both sample sorts comparable, Thrust Merge
+//! clearly behind, and the three methods' memory ceilings (256M / 32M /
+//! 16M).
+
+mod common;
+
+use gpu_bucket_sort::algos::Algorithm;
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Paper-scale table.
+    common::emit_table(&exp::fig6_gtx285(&exp::paper_n_ladder(256 << 20)));
+
+    // (b) Executed head-to-head at n = 1M on the simulated GTX 285.
+    let n = 1 << 20;
+    let keys = Distribution::Uniform.generate(n, 6);
+    let bencher = Bencher::from_env();
+    let mut results = Vec::new();
+    for algo in Algorithm::ALL {
+        let mut est = 0.0;
+        let r = bencher.bench(format!("fig6/exec/{algo}"), || {
+            let mut k = keys.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            est = algo.run(&mut k, &mut sim).unwrap();
+            k
+        });
+        println!("    {algo}: simulated estimate {est:.2} ms");
+        results.push(r);
+    }
+    common::emit_measurements("fig6", &results);
+}

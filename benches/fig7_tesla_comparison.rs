@@ -1,0 +1,39 @@
+//! Figure 7: the Figure-6 comparison on the Tesla C1060 — same
+//! ordering, with GPU Bucket Sort alone reaching 512M keys (vs 128M for
+//! the randomized method and 16M for Thrust Merge), plus the §5
+//! sorting-rate series the figure's linearity implies.
+
+mod common;
+
+use gpu_bucket_sort::algos::Algorithm;
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Paper-scale table (to 512M) + rate series.
+    common::emit_table(&exp::fig7_tesla(&exp::paper_n_ladder(512 << 20)));
+    common::emit_table(&exp::sort_rate_series(
+        &exp::paper_n_ladder(512 << 20),
+        GpuModel::TeslaC1060,
+    ));
+
+    // (b) Executed head-to-head at n = 1M on the simulated Tesla.
+    let n = 1 << 20;
+    let keys = Distribution::Uniform.generate(n, 8);
+    let bencher = Bencher::from_env();
+    let mut results = Vec::new();
+    for algo in Algorithm::ALL {
+        let mut est = 0.0;
+        let r = bencher.bench(format!("fig7/exec/{algo}"), || {
+            let mut k = keys.clone();
+            let mut sim = GpuSim::new(GpuModel::TeslaC1060.spec());
+            est = algo.run(&mut k, &mut sim).unwrap();
+            k
+        });
+        println!("    {algo}: simulated estimate {est:.2} ms");
+        results.push(r);
+    }
+    common::emit_measurements("fig7", &results);
+}

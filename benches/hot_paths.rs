@@ -1,0 +1,78 @@
+//! Hot-path wall-clock benchmarks — the §Perf working set: the native
+//! engine against `slice::sort_unstable`, its phases, the bitonic tile
+//! kernel, and the end-to-end service (batching overhead).
+
+mod common;
+
+use gpu_bucket_sort::algos::bitonic;
+use gpu_bucket_sort::config::ServiceConfig;
+use gpu_bucket_sort::coordinator::SortService;
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let mut results = Vec::new();
+
+    // --- native engine vs std sort across sizes --------------------
+    let engine = NativeEngine::new(NativeParams::default()).unwrap();
+    println!("native engine: {} workers", engine.workers());
+    for n in [1usize << 20, 1 << 22, 1 << 24] {
+        let keys = Distribution::Uniform.generate(n, 1);
+
+        let std_r = bencher.bench(format!("hot/std_sort/n={n}"), || {
+            let mut k = keys.clone();
+            k.sort_unstable();
+            k
+        });
+        let nat_r = bencher.bench(format!("hot/native/n={n}"), || {
+            let mut k = keys.clone();
+            engine.sort(&mut k);
+            k
+        });
+        let speedup = std_r.median_ms() / nat_r.median_ms();
+        println!("    n={n}: native speedup over std {speedup:.2}x");
+        results.push(std_r);
+        results.push(nat_r);
+    }
+
+    // --- clone baseline (so sort numbers can be de-biased) ---------
+    {
+        let keys = Distribution::Uniform.generate(1 << 24, 1);
+        results.push(bencher.bench("hot/clone_only/n=16M", || keys.clone()));
+    }
+
+    // --- bitonic tile kernel (Step 2's inner loop) -----------------
+    for tile in [512usize, 2048] {
+        let keys = Distribution::Uniform.generate(tile, 2);
+        results.push(bencher.bench(format!("hot/bitonic_tile/t={tile}"), || {
+            let mut k = keys.clone();
+            bitonic::sort_slice(&mut k);
+            k
+        }));
+    }
+
+    // --- service end-to-end: batching overhead vs direct engine ----
+    {
+        let n = 1 << 18;
+        let keys = Distribution::Uniform.generate(n, 3);
+        let direct = bencher.bench("hot/engine_direct/n=256K", || {
+            let mut k = keys.clone();
+            engine.sort(&mut k);
+            k
+        });
+        let client = SortService::start(ServiceConfig::default()).unwrap();
+        let service = bencher.bench("hot/service_roundtrip/n=256K", || {
+            client.sort_keys(keys.clone()).unwrap()
+        });
+        let overhead =
+            (service.median_ms() - direct.median_ms()) / direct.median_ms() * 100.0;
+        println!("    service overhead over direct engine: {overhead:.1}%");
+        client.shutdown();
+        results.push(direct);
+        results.push(service);
+    }
+
+    common::emit_measurements("hot_paths", &results);
+}

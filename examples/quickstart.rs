@@ -1,0 +1,61 @@
+//! Quickstart: the public API in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // 1. Generate a workload (the paper's uniform u32 keys).
+    let n = 1 << 20;
+    let keys = Distribution::Uniform.generate(n, 42);
+
+    // 2. Sort it with GPU Bucket Sort on a simulated GTX 285: the data
+    //    work happens for real on the host, and the simulator prices the
+    //    exact GPU traffic the algorithm generates.
+    let mut simulated = keys.clone();
+    let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+    let sorter = BucketSort::new(BucketSortParams::default()); // tile=2048, s=64
+    let report = sorter.sort(&mut simulated, &mut sim).expect("fits the device");
+    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, &simulated));
+
+    println!("GPU Bucket Sort, n = {n} on simulated {}:", sim.spec().name);
+    println!(
+        "  estimated on-device time : {:.2} ms",
+        report.total_estimated_ms(sim.spec())
+    );
+    println!(
+        "  sorting rate             : {:.1} Mkeys/s",
+        report.sort_rate_mkeys_s(sim.spec())
+    );
+    println!("  kernel launches          : {}", report.ledger.kernel_count());
+    println!(
+        "  peak device memory       : {:.1} MB",
+        report.peak_device_bytes as f64 / 1e6
+    );
+    println!(
+        "  largest bucket           : {} (guarantee ≤ {})",
+        report.max_bucket,
+        2 * report.padded_n / report.s
+    );
+    for (step, ms) in report.step_ms(sim.spec()) {
+        println!("  step {step}: {ms:.2} ms");
+    }
+
+    // 3. The same algorithm as a real multicore sort (the service's
+    //    production engine).
+    let engine = NativeEngine::new(NativeParams::default()).unwrap();
+    let mut native = keys.clone();
+    let nr = engine.sort(&mut native);
+    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, &native));
+    println!(
+        "\nNative engine ({} workers): {:.2} ms wall = {:.1} Mkeys/s",
+        engine.workers(),
+        nr.wall_ms,
+        nr.rate_mkeys_s()
+    );
+}

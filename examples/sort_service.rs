@@ -1,0 +1,111 @@
+//! End-to-end service driver — the full-system validation run recorded
+//! in EXPERIMENTS.md §End-to-end.
+//!
+//! Starts the batched sort service on the native multicore engine,
+//! drives it with a realistic mixed workload (concurrent tenants,
+//! mixed request sizes and distributions, bursts), and reports
+//! latency percentiles, batching behaviour and aggregate throughput.
+//! If AOT artifacts are present, the same workload (size-capped) is
+//! then replayed against the PJRT engine, proving all three layers
+//! compose: Pallas kernels → JAX pipeline → HLO text → rust runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sort_service
+//! ```
+
+use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortJob, SortService};
+use gpu_bucket_sort::workload::Distribution;
+use std::time::Instant;
+
+fn main() {
+    let cfg = ServiceConfig {
+        verify: true, // every response checked: sorted permutation
+        batch: BatchConfig {
+            max_wait_ms: 2,
+            ..BatchConfig::default()
+        },
+        ..ServiceConfig::default()
+    };
+    println!("=== native engine under mixed load ===");
+    run_load(cfg, 96, 8, &[16 << 10, 128 << 10, 1 << 20]);
+
+    // PJRT replay (sizes capped by the compiled artifact ladder).
+    let pjrt_cfg = ServiceConfig {
+        engine: EngineKind::Pjrt,
+        verify: true,
+        ..ServiceConfig::default()
+    };
+    match SortService::start(pjrt_cfg.clone()) {
+        Ok(client) => {
+            client.shutdown();
+            println!("\n=== PJRT (AOT JAX/Pallas) engine, same workload shape ===");
+            run_load(pjrt_cfg, 24, 4, &[4 << 10, 16 << 10, 64 << 10]);
+        }
+        Err(e) => println!("\n(PJRT replay skipped: {e})"),
+    }
+}
+
+fn run_load(cfg: ServiceConfig, requests: usize, tenants: usize, sizes: &[usize]) {
+    let client = SortService::start(cfg).expect("service starts");
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Gaussian,
+        Distribution::Staggered,
+        Distribution::NearlySorted,
+    ];
+    let t0 = Instant::now();
+    let latencies = std::sync::Mutex::new(Vec::<f64>::new());
+    let mut total_keys = 0usize;
+    std::thread::scope(|scope| {
+        for tenant in 0..tenants {
+            let client = client.clone();
+            let latencies = &latencies;
+            let per_tenant = requests / tenants;
+            scope.spawn(move || {
+                for r in 0..per_tenant {
+                    let n = sizes[(tenant + r) % sizes.len()];
+                    let dist = dists[(tenant * 7 + r) % dists.len()];
+                    let keys = dist.generate(n, (tenant * 1000 + r) as u64);
+                    let t = Instant::now();
+                    let out = client
+                        .sort(SortJob::tagged(keys, format!("tenant-{tenant}")))
+                        .expect("request succeeds");
+                    let ms = t.elapsed().as_secs_f64() * 1e3;
+                    assert_eq!(out.tag.as_deref(), Some(format!("tenant-{tenant}").as_str()));
+                    latencies.lock().unwrap().push(ms);
+                }
+            });
+        }
+        for &n in sizes {
+            total_keys += n;
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let _ = total_keys;
+
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lat[((q * lat.len() as f64) as usize).min(lat.len() - 1)];
+    let snap = client.shutdown();
+    let keys_sorted = snap.counters.get("keys_sorted").copied().unwrap_or(0);
+    let batches = snap.counters.get("batches_dispatched").copied().unwrap_or(0);
+    let reqs = snap.counters.get("requests_completed").copied().unwrap_or(0);
+
+    println!(
+        "{reqs} requests / {batches} batches ({:.2} req/batch) in {wall:.2}s",
+        reqs as f64 / batches.max(1) as f64
+    );
+    println!(
+        "throughput: {:.1} Mkeys/s aggregate",
+        keys_sorted as f64 / wall / 1e6
+    );
+    println!(
+        "latency: p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        lat.last().unwrap()
+    );
+    println!("--- service metrics ---\n{}", snap.summary());
+}

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX/Pallas pipeline → HLO text artifacts + manifest.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example and DESIGN.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``full_sort`` artifact per ladder size plus a ``tile_sort``
+variant for the hybrid coordinator path, and ``manifest.json``
+(schema consumed by rust/src/runtime/manifest.rs).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (n, tile, s) ladder: XLA shapes are static, so the runtime pads each
+# request up to the next compiled capacity. Sizes are kept modest —
+# interpret-mode Pallas networks unroll O(log² n) vector stages and the
+# CPU client executes them eagerly.
+LADDER = [
+    (4_096, 512, 64),
+    (16_384, 512, 64),
+    (65_536, 512, 64),
+    (262_144, 512, 64),
+]
+
+TILE_SORT_SIZES = [(65_536, 512, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_full_sort(n: int, tile: int, s: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.uint32)
+    fn = functools.partial(model.bucket_sort, tile=tile, s=s, interpret=True)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_tile_sort(n: int, tile: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.uint32)
+    fn = functools.partial(model.tile_sort_only, tile=tile, interpret=True)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def build(out_dir: str, ladder=None, tile_sorts=None) -> dict:
+    ladder = LADDER if ladder is None else ladder
+    tile_sorts = TILE_SORT_SIZES if tile_sorts is None else tile_sorts
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for n, tile, s in ladder:
+        model.validate_shape(n, tile, s)
+        name = f"sort_{n}"
+        fname = f"{name}.hlo.txt"
+        text = lower_full_sort(n, tile, s)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            dict(name=name, kind="full_sort", file=fname, n=n, tile=tile, s=s)
+        )
+        print(f"wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    for n, tile, s in tile_sorts:
+        name = f"tile_sort_{n}"
+        fname = f"{name}.hlo.txt"
+        text = lower_tile_sort(n, tile)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            dict(name=name, kind="tile_sort", file=fname, n=n, tile=tile, s=s)
+        )
+        print(f"wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    manifest = dict(version=1, key_dtype="u32", entries=entries)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote manifest.json ({len(entries)} entries)")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="emit only the smallest artifact (fast CI check)",
+    )
+    args = parser.parse_args()
+    if args.smoke:
+        build(args.out, ladder=LADDER[:1], tile_sorts=[])
+    else:
+        build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for GPU Bucket Sort (build-time only).
+
+Each kernel is the TPU-idiomatic re-expression of one CUDA hot-spot of
+the paper (DESIGN.md §Hardware-Adaptation): a thread block working in
+16 KB shared memory becomes one grid step over a BlockSpec tile resident
+in VMEM; SIMT branch-free compare-exchange becomes vectorized
+``jnp.where`` selects on the VPU.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness (against ``ref.py``) is the
+build-time gate. Real-TPU performance is estimated structurally in
+DESIGN.md.
+"""
+
+from . import bitonic, prefix, rank, ref, scatter
+
+__all__ = ["bitonic", "prefix", "rank", "ref", "scatter"]

@@ -1,0 +1,83 @@
+"""Bitonic sorting-network kernels (Steps 2, 4 and 9 of Algorithm 1).
+
+The paper sorts 2K-item sublists with bitonic sort inside each SM's
+shared memory because the network is branch-free and SIMD-perfect (§4).
+The same property makes it VPU-perfect: every substage is two gathers, a
+min, a max and a select over the whole tile. The network is fully
+unrolled at trace time (tile sizes are static), giving
+``log²(T)/2 + log(T)/2`` substages of pure vector ops and no
+data-dependent control flow at all.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(a, idx, k, j):
+    """One substage: compare-exchange pairs ``(i, i^j)`` with direction
+    from bit ``k`` of ``i`` — branch-free (two gathers + min/max +
+    select)."""
+    partner = idx ^ j
+    pv = jnp.take(a, partner, axis=0)
+    asc = (idx & k) == 0
+    lower = (idx & j) == 0
+    take_min = lower == asc
+    return jnp.where(take_min, jnp.minimum(a, pv), jnp.maximum(a, pv))
+
+
+def _sort_vector(a):
+    """Sort a 1-D power-of-two vector with the full bitonic network."""
+    t = a.shape[0]
+    if t <= 1:
+        return a
+    assert t & (t - 1) == 0, f"bitonic needs a power-of-two length, got {t}"
+    idx = jax.lax.iota(jnp.int32, t)
+    k = 2
+    while k <= t:
+        j = k // 2
+        while j >= 1:
+            a = _compare_exchange(a, idx, k, j)
+            j //= 2
+        k *= 2
+    return a
+
+
+def _tile_sort_kernel(x_ref, o_ref):
+    """Sort one (1, T) VMEM-resident tile."""
+    o_ref[...] = _sort_vector(x_ref[...][0])[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _tile_sort_impl(rows, interpret=True):
+    m, t = rows.shape
+    return pl.pallas_call(
+        _tile_sort_kernel,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), rows.dtype),
+        interpret=interpret,
+    )(rows)
+
+
+def tile_sort(rows, *, interpret=True):
+    """Sort every row of ``rows`` (shape (m, T), T a power of two)
+    independently — Step 2 (T = tile) and Step 9 (T = bucket capacity).
+
+    One grid step per row: the row streams HBM→VMEM, the whole network
+    runs in VMEM, and the sorted row streams back — exactly the paper's
+    shared-memory-resident tile sort.
+    """
+    if rows.ndim != 2:
+        raise ValueError(f"tile_sort expects (m, T), got {rows.shape}")
+    return _tile_sort_impl(rows, interpret=interpret)
+
+
+def sort_1d(x, *, interpret=True):
+    """Sort a 1-D power-of-two array (Step 4's sample sort)."""
+    if x.ndim != 1:
+        raise ValueError(f"sort_1d expects a vector, got {x.shape}")
+    return tile_sort(x[None, :], interpret=interpret)[0]

@@ -1,0 +1,56 @@
+"""Step 7 kernel: the column-major prefix sum over bucket sizes
+(Figure 1 of the paper).
+
+The paper runs three launches (column sums on all SMs, a prefix over the
+s column sums on one SM, a parallel column update). The m×s matrix is a
+few MB at most, so on the TPU it fits VMEM whole and the natural form is
+one kernel: a column reduction, an exclusive scan of the s sums, and a
+per-column exclusive scan — all vector ops.
+
+Outputs: ``loc`` (m, s) — start of bucket A_ij in the relocated array;
+``bucket_start`` (s,); ``bucket_size`` (s,).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prefix_kernel(counts_ref, loc_ref, start_ref, size_ref):
+    counts = counts_ref[...]  # (m, s) int32
+    bucket_size = jnp.sum(counts, axis=0, dtype=jnp.int32)  # (s,)
+    csum = jnp.cumsum(bucket_size)
+    bucket_start = csum - bucket_size  # exclusive
+    col_prefix = jnp.cumsum(counts, axis=0) - counts  # exclusive per column
+    loc_ref[...] = bucket_start[None, :] + col_prefix
+    start_ref[...] = bucket_start
+    size_ref[...] = bucket_size
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _column_prefix_impl(counts, interpret=True):
+    m, s = counts.shape
+    return pl.pallas_call(
+        _prefix_kernel,
+        in_specs=[pl.BlockSpec((m, s), lambda: (0, 0))],
+        out_specs=(
+            pl.BlockSpec((m, s), lambda: (0, 0)),
+            pl.BlockSpec((s,), lambda: (0,)),
+            pl.BlockSpec((s,), lambda: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, s), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(counts)
+
+
+def column_prefix(counts, *, interpret=True):
+    """Column-major prefix layout from the (m, s) bucket-size matrix."""
+    if counts.ndim != 2:
+        raise ValueError(f"column_prefix expects (m, s), got {counts.shape}")
+    return _column_prefix_impl(counts.astype(jnp.int32), interpret=interpret)

@@ -1,0 +1,59 @@
+"""Step 6 kernel: Sample Indexing — per-sublist bucket boundaries.
+
+The paper locates each of the s global samples in every sorted sublist
+with a thread-doubling parallel binary search, chosen to avoid shared-
+memory contention on a GPU (§4). On the VPU there is no contention to
+dodge and no divergence to fear, so the idiomatic form is a dense
+broadcast-compare: ``boundary[j] = Σ_p tile[p] < splitter[j]`` — one
+(T × s−1) comparison block per tile, entirely in VMEM, reduced along T.
+Same result, zero control flow (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rank_kernel(tiles_ref, splitters_ref, o_ref):
+    tile = tiles_ref[...][0]  # (T,)
+    splitters = splitters_ref[...]  # (s-1,)
+    t = tile.shape[0]
+    counts = jnp.sum(
+        tile[:, None] < splitters[None, :], axis=0, dtype=jnp.int32
+    )  # (s-1,)
+    o_ref[...] = jnp.concatenate(
+        [counts, jnp.full((1,), t, jnp.int32)]
+    )[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _boundaries_impl(tiles, splitters, interpret=True):
+    m, t = tiles.shape
+    s = splitters.shape[0] + 1
+    return pl.pallas_call(
+        _rank_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((s - 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, s), jnp.int32),
+        interpret=interpret,
+    )(tiles, splitters)
+
+
+def boundaries(tiles, splitters, *, interpret=True):
+    """Boundary matrix b (m, s): ``b[i, j] = |{x ∈ tile_i : x <
+    splitter_j}|`` for j < s−1 and ``b[i, s−1] = T``.
+
+    ``tiles`` is (m, T) with every row sorted; ``splitters`` is the
+    sorted (s−1,) splitter vector of Step 5.
+    """
+    if tiles.ndim != 2 or splitters.ndim != 1:
+        raise ValueError(f"bad shapes {tiles.shape} / {splitters.shape}")
+    if splitters.shape[0] == 0:
+        raise ValueError("need at least one splitter (s >= 2)")
+    return _boundaries_impl(tiles, splitters, interpret=interpret)

@@ -1,0 +1,64 @@
+"""Pure-jnp/numpy oracles — the correctness ground truth every kernel is
+tested against (pytest + hypothesis in python/tests)."""
+
+import numpy as np
+
+
+def tile_sort(rows):
+    """Row-wise sort."""
+    return np.sort(np.asarray(rows), axis=1)
+
+
+def sort_1d(x):
+    """Full sort."""
+    return np.sort(np.asarray(x))
+
+
+def boundaries(tiles, splitters):
+    """Step-6 boundary matrix via searchsorted."""
+    tiles = np.asarray(tiles)
+    splitters = np.asarray(splitters)
+    m, t = tiles.shape
+    s = splitters.shape[0] + 1
+    out = np.empty((m, s), dtype=np.int32)
+    for i in range(m):
+        out[i, : s - 1] = np.searchsorted(tiles[i], splitters, side="left")
+        out[i, s - 1] = t
+    return out
+
+
+def column_prefix(counts):
+    """Step-7 column-major prefix layout."""
+    counts = np.asarray(counts, dtype=np.int64)
+    bucket_size = counts.sum(axis=0)
+    bucket_start = np.concatenate([[0], np.cumsum(bucket_size)[:-1]])
+    col_prefix = np.cumsum(counts, axis=0) - counts
+    loc = bucket_start[None, :] + col_prefix
+    return (
+        loc.astype(np.int32),
+        bucket_start.astype(np.int32),
+        bucket_size.astype(np.int32),
+    )
+
+
+def dest_indices(bounds, loc, bucket_start, cap):
+    """Step-8 destinations into the s×cap padded layout."""
+    bounds = np.asarray(bounds)
+    loc = np.asarray(loc)
+    bucket_start = np.asarray(bucket_start)
+    m, s = bounds.shape
+    # Tile length is the last (inclusive) boundary.
+    t = int(bounds[0, s - 1])
+    out = np.empty((m, t), dtype=np.int32)
+    for i in range(m):
+        p = np.arange(t)
+        j = (p[:, None] >= bounds[i][None, :]).sum(axis=1)
+        prev = np.where(j > 0, bounds[i][np.maximum(j - 1, 0)], 0)
+        within = loc[i][j] - bucket_start[j] + (p - prev)
+        out[i] = j * cap + within
+    return out
+
+
+def bucket_sort(x):
+    """End-to-end oracle for the full pipeline."""
+    return np.sort(np.asarray(x))

@@ -1,0 +1,68 @@
+"""Step 8 kernel: relocation destinations.
+
+The paper's Step 8 is a fully coalesced move of each bucket A_ij to its
+location l_ij. The fixed-shape XLA pipeline relocates straight into the
+*capacity-padded* bucket layout (s rows of ``cap = 2n/s`` keys, the
+deterministic guarantee) so Step 9 can sort fixed-size rows: the
+destination of the element at position p of sublist i is
+
+    j        = #{boundaries b_i· ≤ p}                (its bucket)
+    within   = (loc[i,j] − bucket_start[j]) + (p − b_{i,j−1})
+    dest     = j · cap + within
+
+computed per tile in VMEM with a (T × s) broadcast compare (no control
+flow); the actual move is then a single XLA scatter at L2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dest_kernel(bounds_ref, loc_ref, start_ref, o_ref, *, cap):
+    bounds = bounds_ref[...][0]  # (s,) inclusive prefix boundaries
+    loc = loc_ref[...][0]  # (s,)
+    start = start_ref[...]  # (s,)
+    t = o_ref.shape[1]
+    p = jax.lax.iota(jnp.int32, t)
+    # Bucket of each position: #{j : bounds[j] <= p}.
+    j = jnp.sum(p[:, None] >= bounds[None, :], axis=1, dtype=jnp.int32)
+    prev_bound = jnp.where(j > 0, jnp.take(bounds, jnp.maximum(j - 1, 0)), 0)
+    within_bucket = jnp.take(loc, j) - jnp.take(start, j) + (p - prev_bound)
+    o_ref[...] = (j * cap + within_bucket)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "tile", "interpret"))
+def _dest_impl(bounds, loc, start, cap, tile, interpret=True):
+    m, s = bounds.shape
+    kernel = functools.partial(_dest_kernel, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, tile), jnp.int32),
+        interpret=interpret,
+    )(bounds, loc, start)
+
+
+def dest_indices(bounds, loc, bucket_start, *, cap, tile, interpret=True):
+    """Destination index (into the s×cap padded layout) for every element
+    of every sorted sublist. ``bounds``/``loc`` are the (m, s) Step-6/7
+    matrices; ``bucket_start`` the (s,) sublist starts."""
+    if bounds.shape != loc.shape or bounds.ndim != 2:
+        raise ValueError(f"bad shapes {bounds.shape} / {loc.shape}")
+    return _dest_impl(
+        bounds.astype(jnp.int32),
+        loc.astype(jnp.int32),
+        bucket_start.astype(jnp.int32),
+        cap,
+        tile,
+        interpret=interpret,
+    )

@@ -1,0 +1,123 @@
+"""L2: Algorithm 1 of the paper as one jitted JAX pipeline.
+
+Composes the L1 Pallas kernels into the full deterministic sample sort
+over a fixed-shape uint32 array:
+
+    Step 1–2  tile split + per-tile bitonic sort        (kernels.bitonic)
+    Step 3    s equidistant samples per tile            (strided gather)
+    Step 4    bitonic sort of all s·m samples           (kernels.bitonic)
+    Step 5    s−1 equidistant splitters                 (strided gather)
+    Step 6    per-tile bucket boundaries                (kernels.rank)
+    Step 7    column-major prefix layout                (kernels.prefix)
+    Step 8    relocation into the s×cap padded layout   (kernels.scatter
+              + one XLA scatter)
+    Step 9    per-bucket bitonic sort at capacity       (kernels.bitonic)
+    —         compaction gather back to a flat array
+
+`cap = next_pow2(2n/s)` is the paper's deterministic bucket guarantee
+(Shi & Schaeffer [15]); `u32::MAX` is the padding sentinel, so the rust
+runtime rejects inputs containing it. The whole pipeline is lowered once
+by aot.py to HLO text; python never runs at request time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic, prefix, rank, scatter
+
+MAX_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two ≥ x (≥ 1)."""
+    p = 1
+    while p < max(x, 1):
+        p *= 2
+    return p
+
+
+def bucket_capacity(n: int, s: int) -> int:
+    """The deterministic per-bucket capacity: next_pow2(⌈2n/s⌉)."""
+    return next_pow2(-(-2 * n // s))
+
+
+def validate_shape(n: int, tile: int, s: int) -> None:
+    """Static-shape checks shared by the pipeline and aot.py."""
+    if n <= 0 or n % tile != 0:
+        raise ValueError(f"n={n} must be a positive multiple of tile={tile}")
+    if tile & (tile - 1) or s & (s - 1):
+        raise ValueError(f"tile={tile} and s={s} must be powers of two")
+    if not 2 <= s <= tile or tile % s != 0:
+        raise ValueError(f"need 2 <= s <= tile and s | tile (s={s}, tile={tile})")
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "s", "interpret"))
+def bucket_sort(x, *, tile: int, s: int, interpret: bool = True):
+    """Sort ``x`` (uint32[n], n a multiple of ``tile``) — Algorithm 1."""
+    n = x.shape[0]
+    validate_shape(n, tile, s)
+    m = n // tile
+    cap = bucket_capacity(n, s)
+
+    # Steps 1–2: tile split + local bitonic sort.
+    tiles = bitonic.tile_sort(x.reshape(m, tile), interpret=interpret)
+
+    # Step 3: s equidistant samples per tile (position (p+1)·tile/s − 1).
+    stride = tile // s
+    sample_pos = jnp.arange(1, s + 1) * stride - 1
+    samples = tiles[:, sample_pos].reshape(-1)  # (m·s,)
+
+    # Step 4: sort all samples (MAX-padded up to a power of two; the
+    # pads sort to the tail, beyond every splitter position).
+    padded_samples = next_pow2(m * s)
+    if padded_samples != m * s:
+        samples = jnp.concatenate(
+            [samples, jnp.full((padded_samples - m * s,), MAX_KEY, jnp.uint32)]
+        )
+    sorted_samples = bitonic.sort_1d(samples, interpret=interpret)
+
+    # Step 5: s−1 equidistant splitters (stride m over m·s samples).
+    splitter_pos = jnp.arange(1, s) * m - 1
+    splitters = sorted_samples[splitter_pos]
+
+    # Step 6: per-tile bucket boundaries.
+    bounds = rank.boundaries(tiles, splitters, interpret=interpret)
+
+    # Step 7: column-major prefix layout.
+    counts = bounds - jnp.concatenate(
+        [jnp.zeros((m, 1), jnp.int32), bounds[:, :-1]], axis=1
+    )
+    loc, bucket_start, _bucket_size = prefix.column_prefix(
+        counts, interpret=interpret
+    )
+
+    # Step 8: relocation into the capacity-padded bucket layout.
+    dest = scatter.dest_indices(
+        bounds, loc, bucket_start, cap=cap, tile=tile, interpret=interpret
+    )
+    padded = jnp.full((s * cap,), MAX_KEY, dtype=jnp.uint32)
+    padded = padded.at[dest.reshape(-1)].set(tiles.reshape(-1))
+
+    # Step 9: sort every bucket at its guaranteed capacity.
+    rows = bitonic.tile_sort(padded.reshape(s, cap), interpret=interpret)
+
+    # Compaction: position t of the result lives in bucket j(t) at
+    # offset t − bucket_start[j].
+    t_idx = jnp.arange(n)
+    j_of_t = (
+        jnp.searchsorted(bucket_start, t_idx, side="right").astype(jnp.int32) - 1
+    )
+    within = t_idx - bucket_start[j_of_t]
+    return (rows.reshape(-1)[j_of_t * cap + within],)
+
+
+def tile_sort_only(x, *, tile: int, interpret: bool = True):
+    """Steps 1–2 only (the `tile_sort` artifact variant): returns the
+    per-tile-sorted array, same shape."""
+    n = x.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    m = n // tile
+    return (bitonic.tile_sort(x.reshape(m, tile), interpret=interpret).reshape(n),)

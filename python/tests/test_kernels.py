@@ -1,0 +1,173 @@
+"""L1 kernel correctness: every Pallas kernel against its pure oracle
+(ref.py), with hypothesis sweeping shapes, dtypes and value regimes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitonic, prefix, rank, ref, scatter
+
+POW2_TILES = [2, 8, 64, 256, 1024]
+
+
+def keys_array(rng, shape, regime, dtype=np.uint32):
+    """Value regimes: full-range, small-alphabet (tie-heavy), constant."""
+    if regime == "full":
+        return rng.integers(0, 2**32, size=shape, dtype=np.uint32).astype(dtype)
+    if regime == "ties":
+        return rng.integers(0, 7, size=shape, dtype=np.uint32).astype(dtype)
+    return np.full(shape, 42, dtype=dtype)
+
+
+# ---------------------------------------------------------------- bitonic
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    tile_idx=st.integers(0, len(POW2_TILES) - 1),
+    regime=st.sampled_from(["full", "ties", "const"]),
+    seed=st.integers(0, 2**31),
+)
+def test_tile_sort_matches_ref(m, tile_idx, regime, seed):
+    rng = np.random.default_rng(seed)
+    rows = keys_array(rng, (m, POW2_TILES[tile_idx]), regime)
+    out = np.asarray(bitonic.tile_sort(jnp.asarray(rows)))
+    np.testing.assert_array_equal(out, ref.tile_sort(rows))
+
+
+@pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32])
+def test_tile_sort_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    if np.issubdtype(dtype, np.floating):
+        rows = rng.standard_normal((3, 128)).astype(dtype)
+    else:
+        rows = rng.integers(-1000, 1000, size=(3, 128)).astype(dtype)
+    out = np.asarray(bitonic.tile_sort(jnp.asarray(rows)))
+    np.testing.assert_array_equal(out, np.sort(rows, axis=1))
+
+
+def test_sort_1d_large():
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 2**32, size=8192, dtype=np.uint32)
+    out = np.asarray(bitonic.sort_1d(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_tile_sort_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        bitonic.tile_sort(jnp.zeros((2, 2, 2), jnp.uint32))
+    with pytest.raises(ValueError):
+        bitonic.sort_1d(jnp.zeros((2, 2), jnp.uint32))
+
+
+def test_tile_sort_rejects_non_pow2():
+    with pytest.raises(AssertionError):
+        bitonic.tile_sort(jnp.zeros((1, 48), jnp.uint32))
+
+
+# ------------------------------------------------------------------- rank
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 5),
+    tile=st.sampled_from([16, 64, 256]),
+    s=st.sampled_from([2, 4, 16]),
+    regime=st.sampled_from(["full", "ties"]),
+    seed=st.integers(0, 2**31),
+)
+def test_boundaries_match_ref(m, tile, s, regime, seed):
+    rng = np.random.default_rng(seed)
+    tiles = np.sort(keys_array(rng, (m, tile), regime), axis=1)
+    splitters = np.sort(
+        rng.integers(0, 2**32, size=s - 1, dtype=np.uint32)
+    )
+    out = np.asarray(rank.boundaries(jnp.asarray(tiles), jnp.asarray(splitters)))
+    np.testing.assert_array_equal(out, ref.boundaries(tiles, splitters))
+
+
+def test_boundaries_rejects_empty_splitters():
+    with pytest.raises(ValueError):
+        rank.boundaries(jnp.zeros((1, 8), jnp.uint32), jnp.zeros((0,), jnp.uint32))
+
+
+# ----------------------------------------------------------------- prefix
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    s=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_column_prefix_matches_ref(m, s, seed):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 100, size=(m, s)).astype(np.int32)
+    loc, start, size = prefix.column_prefix(jnp.asarray(counts))
+    rloc, rstart, rsize = ref.column_prefix(counts)
+    np.testing.assert_array_equal(np.asarray(loc), rloc)
+    np.testing.assert_array_equal(np.asarray(start), rstart)
+    np.testing.assert_array_equal(np.asarray(size), rsize)
+
+
+def test_column_prefix_layout_tiles_output():
+    # The (loc, count) segments must tile [0, total) exactly.
+    rng = np.random.default_rng(3)
+    m, s = 5, 4
+    counts = rng.integers(0, 50, size=(m, s)).astype(np.int32)
+    loc, _start, _size = prefix.column_prefix(jnp.asarray(counts))
+    segs = sorted(
+        (int(np.asarray(loc)[i, j]), int(counts[i, j]))
+        for i in range(m)
+        for j in range(s)
+    )
+    expect = 0
+    for st_, ln in segs:
+        assert st_ == expect
+        expect += ln
+    assert expect == counts.sum()
+
+
+# ---------------------------------------------------------------- scatter
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 5),
+    tile=st.sampled_from([16, 64, 256]),
+    s=st.sampled_from([2, 4, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_dest_indices_match_ref(m, tile, s, seed):
+    rng = np.random.default_rng(seed)
+    tiles = np.sort(rng.integers(0, 2**32, size=(m, tile), dtype=np.uint32), axis=1)
+    splitters = np.sort(rng.integers(0, 2**32, size=s - 1, dtype=np.uint32))
+    bounds = ref.boundaries(tiles, splitters)
+    counts = np.diff(bounds, axis=1, prepend=0)
+    loc, start, _ = ref.column_prefix(counts)
+    cap = 2 * (m * tile) // s + 8
+    out = np.asarray(
+        scatter.dest_indices(
+            jnp.asarray(bounds), jnp.asarray(loc), jnp.asarray(start),
+            cap=cap, tile=tile,
+        )
+    )
+    np.testing.assert_array_equal(out, ref.dest_indices(bounds, loc, start, cap))
+
+
+def test_dest_indices_are_unique_and_in_range():
+    rng = np.random.default_rng(4)
+    m, tile, s = 4, 64, 8
+    tiles = np.sort(rng.integers(0, 2**32, size=(m, tile), dtype=np.uint32), axis=1)
+    splitters = np.sort(rng.integers(0, 2**32, size=s - 1, dtype=np.uint32))
+    bounds = ref.boundaries(tiles, splitters)
+    counts = np.diff(bounds, axis=1, prepend=0)
+    loc, start, size = ref.column_prefix(counts)
+    cap = 2 * (m * tile) // s
+    dest = np.asarray(
+        scatter.dest_indices(
+            jnp.asarray(bounds), jnp.asarray(loc), jnp.asarray(start),
+            cap=cap, tile=tile,
+        )
+    ).reshape(-1)
+    assert len(np.unique(dest)) == m * tile, "destinations must be unique"
+    assert dest.min() >= 0
+    assert dest.max() < s * cap

@@ -1,0 +1,94 @@
+"""L2 pipeline correctness: the full Algorithm-1 JAX pipeline against a
+plain sort, across sizes, parameters and value distributions."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def run(x, tile, s):
+    return np.asarray(model.bucket_sort(jnp.asarray(x), tile=tile, s=s)[0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    tile=st.sampled_from([64, 256]),
+    s=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_bucket_sort_matches_np(m, tile, s, seed):
+    if s > tile:
+        return
+    rng = np.random.default_rng(seed)
+    # Avoid the MAX sentinel (the fixed-shape pipeline's documented
+    # keyspace restriction, enforced by the rust runtime).
+    x = rng.integers(0, 2**32 - 1, size=m * tile, dtype=np.uint32)
+    np.testing.assert_array_equal(run(x, tile, s), np.sort(x))
+
+
+@pytest.mark.parametrize(
+    "pattern",
+    ["sorted", "reverse", "moderate_ties", "gaussian"],
+)
+def test_bucket_sort_patterns(pattern):
+    n, tile, s = 4096, 256, 16
+    rng = np.random.default_rng(7)
+    if pattern == "sorted":
+        x = np.sort(rng.integers(0, 2**32 - 1, size=n, dtype=np.uint32))
+    elif pattern == "reverse":
+        x = np.sort(rng.integers(0, 2**32 - 1, size=n, dtype=np.uint32))[::-1].copy()
+    elif pattern == "moderate_ties":
+        # Duplicates up to ~n/s multiplicity stay within the bucket
+        # capacity guarantee.
+        x = rng.integers(0, 64, size=n, dtype=np.uint32) * 1000
+    else:
+        x = np.clip(
+            rng.normal(2**31, 2**28, size=n), 0, 2**32 - 2
+        ).astype(np.uint32)
+    np.testing.assert_array_equal(run(x, tile, s), np.sort(x))
+
+
+def test_bucket_sort_aot_ladder_shape():
+    # The exact (n, tile, s) combinations aot.py ships.
+    from compile.aot import LADDER
+
+    for n, tile, s in LADDER:
+        model.validate_shape(n, tile, s)
+    # Smallest ladder entry end-to-end.
+    n, tile, s = LADDER[0]
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 2**32 - 1, size=n, dtype=np.uint32)
+    np.testing.assert_array_equal(run(x, tile, s), np.sort(x))
+
+
+def test_tile_sort_only_variant():
+    n, tile = 2048, 256
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    out = np.asarray(model.tile_sort_only(jnp.asarray(x), tile=tile)[0])
+    expect = np.sort(x.reshape(-1, tile), axis=1).reshape(-1)
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_validate_shape_rejects_bad_params():
+    with pytest.raises(ValueError):
+        model.validate_shape(1000, 256, 16)  # n not a multiple
+    with pytest.raises(ValueError):
+        model.validate_shape(1024, 100, 10)  # non-pow2
+    with pytest.raises(ValueError):
+        model.validate_shape(1024, 256, 1)  # s < 2
+    with pytest.raises(ValueError):
+        model.validate_shape(1024, 64, 128)  # s > tile
+    model.validate_shape(1024, 256, 16)
+
+
+def test_bucket_capacity_guarantee():
+    assert model.bucket_capacity(4096, 64) == 128
+    assert model.bucket_capacity(4096, 16) == 512
+    assert model.bucket_capacity(100, 4) == 64  # next_pow2(50)
+    assert model.next_pow2(1) == 1
+    assert model.next_pow2(3) == 4

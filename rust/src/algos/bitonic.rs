@@ -1,0 +1,423 @@
+//! Bitonic sorting networks — the engine behind Steps 2, 4 and 9 of
+//! Algorithm 1.
+//!
+//! The paper selects bitonic sort for all three sorting sub-phases
+//! despite its O(n log² n) work, because for the sizes involved "the
+//! simplicity of bitonic sort, its small constants in the running time,
+//! and its perfect match for SIMD style parallelism outweigh the
+//! disadvantage of additional work" (§4). The network is data-oblivious:
+//! no data-dependent branches, hence no SIMT divergence (§2) — every
+//! compare-exchange is a branch-free min/max.
+//!
+//! Two execution contexts:
+//! * [`sort_tile`] — one shared-memory-resident tile (Step 2), all passes
+//!   on SM-local memory;
+//! * [`global_sort`] — an arbitrary power-of-two array in global memory
+//!   (Steps 4 and 9), where merge substages with span ≥ tile are global
+//!   passes (one coalesced read+write of the array each) and the dense
+//!   low-span substages of each merge stage are consolidated into a
+//!   single tile-resident launch, exactly the classic hybrid
+//!   global/shared bitonic of GPUTeraSort [6].
+//!
+//! Every function returns or records exact operation counts; the
+//! `*_analytic` twins produce the same ledger without touching data
+//! (verified equal by property tests), which is what lets the benchmark
+//! harness run the paper's 512M-key configurations.
+
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::{Key, KEY_BYTES};
+
+/// log2 of a power of two.
+#[inline]
+pub fn log2_exact(n: usize) -> u32 {
+    debug_assert!(n.is_power_of_two());
+    n.trailing_zeros()
+}
+
+/// Number of compare-exchange operations of a full bitonic sort network
+/// over `n` (power-of-two) keys: `n/2 · log n · (log n + 1) / 2`.
+pub fn ce_count(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let ln = log2_exact(n) as u64;
+    (n as u64 / 2) * ln * (ln + 1) / 2
+}
+
+/// Number of compare-exchange substages ("passes") of the network:
+/// `log n (log n + 1) / 2`.
+pub fn pass_count(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let ln = log2_exact(n) as u64;
+    ln * (ln + 1) / 2
+}
+
+/// In-place bitonic sort of a power-of-two slice. Returns the number of
+/// compare-exchanges performed (always [`ce_count`]`(len)` — the network
+/// is oblivious).
+///
+/// This is the host-side "real work" of the simulated Step 2; it mirrors
+/// exactly the compare-exchange sequence a 512-thread block would run.
+pub fn sort_slice(a: &mut [Key]) -> u64 {
+    let n = a.len();
+    if n <= 1 {
+        return 0;
+    }
+    assert!(n.is_power_of_two(), "bitonic sort requires power-of-two length");
+    let mut ces: u64 = 0;
+    let mut k = 2usize;
+    while k <= n {
+        let mut j = k >> 1;
+        while j > 0 {
+            ces += half_cleaner(a, k, j);
+            j >>= 1;
+        }
+        k <<= 1;
+    }
+    ces
+}
+
+/// One substage (fixed `k`, `j`): compare-exchange all pairs `(i, i^j)`
+/// with direction given by bit `k` of `i`. Branch-free on the GPU; here
+/// a blocked loop that visits each pair exactly once — pairs with span
+/// `j` sit in 2j-aligned blocks, lower half vs upper half — with
+/// branch-free min/max in the inner loop (§Perf: ~2.4× over the naive
+/// full-index scan with its data-dependent swap branch).
+#[inline]
+fn half_cleaner(a: &mut [Key], k: usize, j: usize) -> u64 {
+    let n = a.len();
+    let mut ces = 0u64;
+    let mut base = 0usize;
+    while base < n {
+        // Direction is constant across a 2j-block only when j < k;
+        // within one block `i & k` is constant iff 2j ≤ k, which holds
+        // for every substage (j ranges k/2 … 1).
+        let ascending = (base & k) == 0;
+        // Zipped halves: no bounds checks in the hot loop (§Perf).
+        let (lo, hi) = a[base..base + 2 * j].split_at_mut(j);
+        if ascending {
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let (mn, mx) = ((*x).min(*y), (*x).max(*y));
+                *x = mn;
+                *y = mx;
+            }
+        } else {
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let (mn, mx) = ((*x).min(*y), (*x).max(*y));
+                *x = mx;
+                *y = mn;
+            }
+        }
+        ces += j as u64;
+        base += 2 * j;
+    }
+    ces
+}
+
+/// Merge an already-bitonic sequence (ascending result). Used by the
+/// Thrust Merge baseline's odd-even stages. Returns compare-exchanges.
+pub fn bitonic_merge(a: &mut [Key]) -> u64 {
+    let n = a.len();
+    if n <= 1 {
+        return 0;
+    }
+    assert!(n.is_power_of_two());
+    let mut ces = 0u64;
+    let mut j = n >> 1;
+    while j > 0 {
+        // k = 2n ⇒ every i has bit-k zero ⇒ all ascending.
+        ces += half_cleaner(a, n << 1, j);
+        j >>= 1;
+    }
+    ces
+}
+
+/// Traffic description of one hybrid global bitonic sort, split into
+/// global-memory substages and tile-consolidated (shared-memory)
+/// substages. `n` and `tile` are in keys; both powers of two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalSortPlan {
+    /// Keys being sorted.
+    pub n: usize,
+    /// Tile (shared-memory window) size in keys.
+    pub tile: usize,
+    /// Substages executed as whole-array global passes (span ≥ tile).
+    pub global_passes: u64,
+    /// Consolidated tile-resident launches (one per merge stage that has
+    /// any span < tile, plus the initial local sort of each tile).
+    pub local_launches: u64,
+    /// Compare-exchanges executed inside tile-resident launches.
+    pub local_ces: u64,
+    /// Compare-exchanges executed by global passes.
+    pub global_ces: u64,
+}
+
+impl GlobalSortPlan {
+    /// Build the plan for sorting `n` keys with shared-memory tiles of
+    /// `tile` keys.
+    pub fn new(n: usize, tile: usize) -> Self {
+        assert!(n.is_power_of_two() && tile.is_power_of_two());
+        if n <= tile {
+            // Whole problem fits in one tile: a single local launch.
+            return GlobalSortPlan {
+                n,
+                tile,
+                global_passes: 0,
+                local_launches: 1,
+                local_ces: ce_count(n),
+                global_ces: 0,
+            };
+        }
+        let ln = log2_exact(n) as u64;
+        let lt = log2_exact(tile) as u64;
+        // Initial phase: sort every tile locally = merge stages k ≤ tile.
+        let mut local_ces = (n as u64 / tile as u64) * ce_count(tile);
+        let mut local_launches = 1u64; // consolidated: one launch sorts all tiles
+        let mut global_passes = 0u64;
+        let mut global_ces = 0u64;
+        // Merge stages k = 2·tile … n: substages j = k/2 … 1.
+        // j ≥ tile → global pass; the j < tile suffix of each stage is
+        // one consolidated tile-resident launch.
+        for k in (lt + 1)..=ln {
+            // Substages with span ≥ tile: j = 2^(k-1) … 2^lt ⇒ k - lt of them.
+            let g = k - lt;
+            global_passes += g;
+            global_ces += g * (n as u64 / 2);
+            // Substages with span < tile: lt of them, consolidated.
+            local_launches += 1;
+            local_ces += lt * (n as u64 / 2);
+        }
+        GlobalSortPlan {
+            n,
+            tile,
+            global_passes,
+            local_launches,
+            local_ces,
+            global_ces,
+        }
+    }
+
+    /// Total compare-exchanges (must equal [`ce_count`]`(n)`).
+    pub fn total_ces(&self) -> u64 {
+        self.local_ces + self.global_ces
+    }
+
+    /// Record this plan's traffic scaled by `num/den` — the virtual-
+    /// padding model: a bitonic network padded from `num` real keys up
+    /// to the power-of-two `den` executes the full pass structure, but
+    /// predicated compare-exchanges against virtual MAX elements touch
+    /// no memory and retire immediately, so traffic and useful compute
+    /// scale with the real fraction.
+    pub fn record_scaled(&self, ledger: &mut Ledger, step: u8, num: usize, den: usize) {
+        assert!(num <= den && den > 0);
+        let mut scaled = Ledger::default();
+        self.record(&mut scaled, step);
+        for k in scaled.kernels() {
+            let mut k = k.clone();
+            k.coalesced_bytes = k.coalesced_bytes * num as u64 / den as u64;
+            k.scattered_transactions = k.scattered_transactions * num as u64 / den as u64;
+            k.smem_ops = k.smem_ops * num as u64 / den as u64;
+            k.compute_ops = k.compute_ops * num as u64 / den as u64;
+            k.divergent_ops = k.divergent_ops * num as u64 / den as u64;
+            k.blocks = (k.blocks * num as u64 / den as u64).max(1);
+            ledger.record(k);
+        }
+    }
+
+    /// Record this plan's traffic into `ledger` tagged as Algorithm-1
+    /// step `step`.
+    ///
+    /// Per launch:
+    /// * global pass — coalesced read+write of the whole array, n/2
+    ///   compare ops;
+    /// * consolidated local launch — coalesced read+write of the whole
+    ///   array once (tiles stream through shared memory), 4 shared-memory
+    ///   accesses per compare-exchange (2 loads + 2 stores), and the
+    ///   compare ops.
+    pub fn record(&self, ledger: &mut Ledger, step: u8) {
+        let bytes = (self.n * KEY_BYTES) as u64;
+        let blocks = (self.n / self.tile).max(1) as u64;
+        let threads = MAX_BLOCK_THREADS.min(self.tile as u32 / 2).max(1);
+
+        if self.n <= self.tile {
+            ledger.begin_kernel(KernelClass::GlobalBitonic, 1, threads);
+            ledger.tag_step(step);
+            ledger.add_coalesced(2 * bytes);
+            ledger.add_smem(4 * self.local_ces);
+            ledger.add_compute(self.local_ces);
+            ledger.end_kernel();
+            return;
+        }
+
+        let ln = log2_exact(self.n) as u64;
+        let lt = log2_exact(self.tile) as u64;
+        let tile_ces = (self.n as u64 / self.tile as u64) * ce_count(self.tile);
+
+        // Initial local sort of all tiles (one consolidated launch).
+        ledger.begin_kernel(KernelClass::GlobalBitonic, blocks, threads);
+        ledger.tag_step(step);
+        ledger.add_coalesced(2 * bytes);
+        ledger.add_smem(4 * tile_ces);
+        ledger.add_compute(tile_ces);
+        ledger.end_kernel();
+
+        for k in (lt + 1)..=ln {
+            // Global passes of this merge stage.
+            for _ in 0..(k - lt) {
+                ledger.begin_kernel(KernelClass::GlobalBitonic, blocks, threads);
+                ledger.tag_step(step);
+                ledger.add_coalesced(2 * bytes);
+                ledger.add_compute(self.n as u64 / 2);
+                ledger.end_kernel();
+            }
+            // Consolidated low-span launch of this merge stage.
+            let ces = lt * (self.n as u64 / 2);
+            ledger.begin_kernel(KernelClass::GlobalBitonic, blocks, threads);
+            ledger.tag_step(step);
+            ledger.add_coalesced(2 * bytes);
+            ledger.add_smem(4 * ces);
+            ledger.add_compute(ces);
+            ledger.end_kernel();
+        }
+    }
+}
+
+/// Sort `a` (power-of-two length) with the hybrid global bitonic network,
+/// recording its traffic into `ledger` tagged as step `step`. The data
+/// work is performed for real; the recorded ledger is identical to
+/// [`global_sort_analytic`] with the same `(n, tile)`.
+pub fn global_sort(a: &mut [Key], tile: usize, ledger: &mut Ledger, step: u8) -> u64 {
+    let plan = GlobalSortPlan::new(a.len().max(1), tile);
+    let ces = sort_slice(a);
+    debug_assert_eq!(
+        ces,
+        plan.total_ces(),
+        "executed CE count diverged from the analytic plan"
+    );
+    if !a.is_empty() {
+        plan.record(ledger, step);
+    }
+    ces
+}
+
+/// Ledger-only twin of [`global_sort`] for paper-scale configurations.
+pub fn global_sort_analytic(n: usize, tile: usize, ledger: &mut Ledger, step: u8) {
+    if n == 0 {
+        return;
+    }
+    GlobalSortPlan::new(n, tile).record(ledger, step);
+}
+
+/// Record the cost of bitonic-sorting `n_effective` real keys under
+/// virtual padding to the next power of two (see
+/// [`GlobalSortPlan::record_scaled`]). This is how Step 9 prices each
+/// sublist B_j: the network shape comes from the padded size, the
+/// traffic from the real keys.
+pub fn global_sort_virtual(n_effective: usize, tile: usize, ledger: &mut Ledger, step: u8) {
+    if n_effective == 0 {
+        return;
+    }
+    let padded = next_pow2(n_effective);
+    GlobalSortPlan::new(padded, tile).record_scaled(ledger, step, n_effective, padded);
+}
+
+/// Round up to the next power of two (min 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+
+    #[test]
+    fn ce_count_closed_form() {
+        // n=2: 1 CE. n=4: 2*2*3/2 = 6. n=8: 4*3*4/2 = 24.
+        assert_eq!(ce_count(1), 0);
+        assert_eq!(ce_count(2), 1);
+        assert_eq!(ce_count(4), 6);
+        assert_eq!(ce_count(8), 24);
+        assert_eq!(pass_count(8), 6);
+    }
+
+    #[test]
+    fn sorts_and_counts_match() {
+        for ln in 0..=12 {
+            let n = 1usize << ln;
+            let mut v: Vec<Key> = (0..n as u32).rev().map(|x| x.wrapping_mul(2654435761)).collect();
+            let ces = sort_slice(&mut v);
+            assert!(is_sorted(&v), "n={n}");
+            assert_eq!(ces, ce_count(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_with_duplicates() {
+        let mut v: Vec<Key> = (0..1024u32).map(|x| x % 7).collect();
+        sort_slice(&mut v);
+        assert!(is_sorted(&v));
+        assert_eq!(v.iter().filter(|&&x| x == 0).count(), 1024 / 7 + 1);
+    }
+
+    #[test]
+    fn merge_of_bitonic_sequence() {
+        // ascending then descending = bitonic.
+        let mut v: Vec<Key> = (0..512u32).chain((0..512u32).rev()).collect();
+        bitonic_merge(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn plan_conserves_ces() {
+        for (n, tile) in [(1 << 14, 1 << 11), (1 << 16, 1 << 11), (1 << 11, 1 << 11), (1 << 8, 1 << 11)] {
+            let p = GlobalSortPlan::new(n, tile);
+            assert_eq!(p.total_ces(), ce_count(n), "n={n} tile={tile}");
+        }
+    }
+
+    #[test]
+    fn plan_pass_structure() {
+        // n = 2^14, tile = 2^11: merge stages 12..14, global passes
+        // (1)+(2)+(3)=6, local launches 1 + 3.
+        let p = GlobalSortPlan::new(1 << 14, 1 << 11);
+        assert_eq!(p.global_passes, 6);
+        assert_eq!(p.local_launches, 4);
+    }
+
+    #[test]
+    fn executed_ledger_equals_analytic() {
+        for ln in [8usize, 11, 13, 14] {
+            let n = 1 << ln;
+            let tile = 1 << 11;
+            let mut v: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2246822519)).collect();
+            let mut led_exec = Ledger::default();
+            global_sort(&mut v, tile, &mut led_exec, 4);
+            assert!(is_sorted(&v));
+            let mut led_ana = Ledger::default();
+            global_sort_analytic(n, tile, &mut led_ana, 4);
+            assert_eq!(led_exec, led_ana, "n={n}");
+        }
+    }
+
+    #[test]
+    fn global_traffic_grows_with_n() {
+        let mut small = Ledger::default();
+        global_sort_analytic(1 << 16, 1 << 11, &mut small, 4);
+        let mut big = Ledger::default();
+        global_sort_analytic(1 << 20, 1 << 11, &mut big, 4);
+        assert!(big.total().coalesced_bytes > small.total().coalesced_bytes * 10);
+    }
+
+    #[test]
+    fn next_pow2_rounding() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+}

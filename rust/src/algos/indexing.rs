@@ -1,0 +1,201 @@
+//! Step 6 of Algorithm 1: Sample Indexing — locate every global sample
+//! (splitter) inside every sorted sublist, partitioning each sublist
+//! A_i into s buckets A_i1 … A_is of sizes a_i1 … a_is.
+//!
+//! On the GPU, each sublist is handled by one block on one SM: the
+//! splitters are loaded to shared memory (done in Step 5) and located by
+//! **parallel binary search with thread doubling** — one thread searches
+//! the s/2-th splitter, then two threads search the s/4-th and 3s/4-th
+//! in the respective halves, iterated log s times (§4). The doubling
+//! order avoids shared-memory contention; the searches themselves are
+//! branch-free fixed-trip-count binary searches, so the ledger records
+//! them as uniform (non-divergent) shared-memory work.
+//!
+//! We return the *boundary matrix* `b[i][j]` = number of keys in sublist
+//! i strictly below splitter j (row-major m×(s-1) stored as m×s with a
+//! final column fixed at `tile`), from which bucket sizes are
+//! `a_ij = b[i][j] − b[i][j−1]`.
+
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::{Key, KEY_BYTES};
+
+/// Branch-free lower bound: number of elements of sorted `t` strictly
+/// less than `key`, in exactly `log2(len)+1` probe steps for
+/// power-of-two `len` — the fixed trip count a SIMT warp would execute.
+/// Returns `(position, probes)`.
+#[inline]
+pub fn fixed_lower_bound(t: &[Key], key: Key) -> (usize, u64) {
+    let mut base = 0usize;
+    let mut size = t.len();
+    let mut probes = 0u64;
+    while size > 1 {
+        let half = size / 2;
+        // Branch-free select on the GPU (predicated); a plain compare here.
+        if t[base + half - 1] < key {
+            base += half;
+        }
+        size -= half;
+        probes += 1;
+    }
+    if !t.is_empty() {
+        probes += 1;
+        if t[base] < key {
+            base += 1;
+        }
+    }
+    (base, probes)
+}
+
+/// Compute the boundary matrix for all sublists. `keys` is tile-aligned
+/// and each tile sorted; `splitters` has length s−1 (sorted). Output is
+/// row-major m×s: `out[i·s + j] = |{x ∈ A_i : x < splitter_j}|` for
+/// j < s−1 and `out[i·s + s−1] = tile`.
+pub fn boundaries(
+    keys: &[Key],
+    tile: usize,
+    splitters: &[Key],
+    ledger: &mut Ledger,
+) -> Vec<u32> {
+    assert!(tile.is_power_of_two());
+    assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
+    let m = keys.len() / tile;
+    let s = splitters.len() + 1;
+    let mut out = vec![0u32; m * s];
+    let mut probes = 0u64;
+    for (i, t) in keys.chunks_exact(tile).enumerate() {
+        debug_assert!(t.windows(2).all(|w| w[0] <= w[1]), "tile {i} not sorted");
+        for (j, &sp) in splitters.iter().enumerate() {
+            let (pos, p) = fixed_lower_bound(t, sp);
+            out[i * s + j] = pos as u32;
+            probes += p;
+        }
+        out[i * s + (s - 1)] = tile as u32;
+    }
+    if m > 0 {
+        record(m, tile, s, probes, ledger);
+    }
+    out
+}
+
+/// Ledger-only twin of [`boundaries`]: the probe count of the fixed-trip
+/// search is shape-determined (`(s−1)·(log2 tile + 1)` per sublist), so
+/// the analytic ledger is exact.
+pub fn analytic(n: usize, tile: usize, s: usize, ledger: &mut Ledger) {
+    assert!(tile.is_power_of_two());
+    assert_eq!(n % tile, 0);
+    let m = n / tile;
+    if m == 0 {
+        return;
+    }
+    let probes = m as u64 * (s as u64 - 1) * (tile.trailing_zeros() as u64 + 1);
+    record(m, tile, s, probes, ledger);
+}
+
+fn record(m: usize, tile: usize, s: usize, probes: u64, ledger: &mut Ledger) {
+    ledger.begin_kernel(
+        KernelClass::SampleIndex,
+        m as u64,
+        (s.min(MAX_BLOCK_THREADS as usize)) as u32,
+    );
+    ledger.tag_step(6);
+    // Each block re-reads its tile through shared memory once (coalesced)
+    // and reads the splitters already resident in shared memory.
+    ledger.add_coalesced((m * tile * KEY_BYTES) as u64);
+    // Every probe is one shared-memory read + one compare.
+    ledger.add_smem(probes);
+    ledger.add_compute(probes);
+    // Boundary matrix write-back.
+    ledger.add_coalesced((m * s * KEY_BYTES) as u64);
+    ledger.end_kernel();
+}
+
+/// Bucket sizes from a boundary row: `a_ij = b_j − b_{j−1}` (`b_{−1}=0`).
+pub fn row_bucket_sizes(boundary_row: &[u32]) -> Vec<u32> {
+    let mut prev = 0u32;
+    boundary_row
+        .iter()
+        .map(|&b| {
+            let a = b - prev;
+            prev = b;
+            a
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lower_bound_matches_std() {
+        let t: Vec<Key> = vec![1, 3, 3, 5, 7, 9, 11, 13];
+        for key in 0..16u32 {
+            let (pos, probes) = fixed_lower_bound(&t, key);
+            assert_eq!(pos, t.partition_point(|&x| x < key), "key={key}");
+            assert_eq!(probes, 4); // log2(8) + 1 — fixed trip count.
+        }
+    }
+
+    #[test]
+    fn lower_bound_edge_sizes() {
+        assert_eq!(fixed_lower_bound(&[], 5), (0, 0));
+        assert_eq!(fixed_lower_bound(&[3], 5), (1, 1));
+        assert_eq!(fixed_lower_bound(&[7], 5), (0, 1));
+    }
+
+    #[test]
+    fn boundary_matrix_correct() {
+        // Two sorted tiles of 8; splitters 4, 10 → s = 3 buckets.
+        let keys: Vec<Key> = vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15];
+        let mut led = Ledger::default();
+        let b = boundaries(&keys, 8, &[4, 10], &mut led);
+        // Tile 0 = 0..8: below 4 → 4, below 10 → 8, total 8.
+        assert_eq!(&b[0..3], &[4, 8, 8]);
+        // Tile 1 = 8..16: below 4 → 0, below 10 → 2, total 8.
+        assert_eq!(&b[3..6], &[0, 2, 8]);
+    }
+
+    #[test]
+    fn bucket_sizes_from_boundaries() {
+        assert_eq!(row_bucket_sizes(&[4, 8, 8]), vec![4, 4, 0]);
+        assert_eq!(row_bucket_sizes(&[0, 2, 8]), vec![0, 2, 6]);
+    }
+
+    #[test]
+    fn sizes_sum_to_tile() {
+        let tile = 64usize;
+        let keys: Vec<Key> = (0..256u32).map(|x| x.wrapping_mul(37) % 97).collect();
+        let mut sorted = keys.clone();
+        for t in sorted.chunks_exact_mut(tile) {
+            t.sort_unstable();
+        }
+        let b = boundaries(&sorted, tile, &[10, 20, 80], &mut Ledger::default());
+        for row in b.chunks_exact(4) {
+            let sizes = row_bucket_sizes(row);
+            assert_eq!(sizes.iter().sum::<u32>(), tile as u32);
+        }
+    }
+
+    #[test]
+    fn ledger_matches_analytic() {
+        let tile = 32usize;
+        let mut keys: Vec<Key> = (0..128u32).map(|x| x.wrapping_mul(41)).collect();
+        for t in keys.chunks_exact_mut(tile) {
+            t.sort_unstable();
+        }
+        let splitters: Vec<Key> = vec![100, 2000, 4000];
+        let mut a = Ledger::default();
+        boundaries(&keys, tile, &splitters, &mut a);
+        let mut b = Ledger::default();
+        analytic(128, tile, 4, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_splitters_single_bucket() {
+        let keys: Vec<Key> = (0..8).collect();
+        let b = boundaries(&keys, 8, &[], &mut Ledger::default());
+        assert_eq!(b, vec![8]);
+    }
+}

@@ -1,0 +1,126 @@
+//! Steps 1–2 of Algorithm 1: split the input into m sublists of
+//! shared-memory size (n/m = 2K items on Table 1 hardware) and bitonic-
+//! sort each sublist on one SM.
+//!
+//! On the GPU this is one kernel launch of m blocks × 512 threads: each
+//! block performs a coalesced read of its tile into shared memory, runs
+//! the bitonic network there (each thread owning n/m/512 = 4 items), and
+//! writes the sorted tile back with a coalesced write (§4). The paper
+//! measured bitonic consistently fastest here against quicksort and
+//! adaptive bitonic sort, because tiles are always 2K items regardless
+//! of n.
+
+use super::bitonic;
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::{Key, KEY_BYTES};
+
+/// Sort every `tile`-sized sublist of `keys` in place and record the
+/// launch. `keys.len()` must be a multiple of `tile`; `tile` a power of
+/// two. Returns the number of tiles (m).
+pub fn run(keys: &mut [Key], tile: usize, ledger: &mut Ledger) -> usize {
+    assert!(tile.is_power_of_two(), "tile must be a power of two");
+    assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
+    let m = keys.len() / tile;
+    if m == 0 {
+        return 0;
+    }
+    let mut total_ces = 0u64;
+    for t in keys.chunks_exact_mut(tile) {
+        total_ces += bitonic::sort_slice(t);
+    }
+    debug_assert_eq!(total_ces, m as u64 * bitonic::ce_count(tile));
+    record(m, tile, ledger);
+    m
+}
+
+/// Ledger-only twin of [`run`] for paper-scale n.
+pub fn analytic(n: usize, tile: usize, ledger: &mut Ledger) -> usize {
+    assert!(tile.is_power_of_two());
+    assert_eq!(n % tile, 0);
+    let m = n / tile;
+    if m > 0 {
+        record(m, tile, ledger);
+    }
+    m
+}
+
+/// One launch, m blocks: coalesced read+write of the whole array plus
+/// the in-shared-memory network (4 shared accesses per compare-exchange:
+/// two loads, two stores).
+fn record(m: usize, tile: usize, ledger: &mut Ledger) {
+    let n = m * tile;
+    let ces = m as u64 * bitonic::ce_count(tile);
+    ledger.begin_kernel(
+        KernelClass::LocalSort,
+        m as u64,
+        MAX_BLOCK_THREADS.min((tile / 2).max(1) as u32),
+    );
+    ledger.tag_step(2);
+    ledger.add_coalesced(2 * (n * KEY_BYTES) as u64);
+    ledger.add_smem(4 * ces);
+    ledger.add_compute(ces);
+    ledger.end_kernel();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+
+    fn scrambled(n: usize) -> Vec<Key> {
+        (0..n as u32).map(|x| x.wrapping_mul(2654435761) ^ 0xABCD).collect()
+    }
+
+    #[test]
+    fn sorts_each_tile_independently() {
+        let tile = 256;
+        let mut keys = scrambled(4 * tile);
+        let mut led = Ledger::default();
+        let m = run(&mut keys, tile, &mut led);
+        assert_eq!(m, 4);
+        for t in keys.chunks_exact(tile) {
+            assert!(is_sorted(t));
+        }
+        // Whole array is (almost surely) not globally sorted.
+        assert!(!is_sorted(&keys));
+    }
+
+    #[test]
+    fn ledger_matches_analytic() {
+        let tile = 128;
+        let mut keys = scrambled(8 * tile);
+        let mut led_exec = Ledger::default();
+        run(&mut keys, tile, &mut led_exec);
+        let mut led_ana = Ledger::default();
+        analytic(8 * tile, tile, &mut led_ana);
+        assert_eq!(led_exec, led_ana);
+    }
+
+    #[test]
+    fn launch_shape() {
+        let mut led = Ledger::default();
+        analytic(16 * 2048, 2048, &mut led);
+        assert_eq!(led.kernel_count(), 1);
+        let k = &led.kernels()[0];
+        assert_eq!(k.step, 2);
+        assert_eq!(k.blocks, 16);
+        assert_eq!(k.threads_per_block, 512);
+        assert_eq!(k.coalesced_bytes, 2 * 16 * 2048 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile-aligned")]
+    fn rejects_misaligned() {
+        let mut keys = scrambled(100);
+        run(&mut keys, 64, &mut Ledger::default());
+    }
+
+    #[test]
+    fn empty_input_no_launch() {
+        let mut keys: Vec<Key> = vec![];
+        let mut led = Ledger::default();
+        assert_eq!(run(&mut keys, 64, &mut led), 0);
+        assert_eq!(led.kernel_count(), 0);
+    }
+}

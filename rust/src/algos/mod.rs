@@ -1,0 +1,131 @@
+//! Sorting algorithms: the paper's GPU BUCKET SORT (Algorithm 1, one
+//! module per step) and every baseline its evaluation compares against.
+//!
+//! All algorithms execute their data movement for real on the host while
+//! recording the exact traffic a Tesla-architecture GPU would generate
+//! into a [`crate::sim::Ledger`]; see [`crate::sim`] for the
+//! hardware-substitution rationale.
+//!
+//! | module | paper artifact |
+//! |---|---|
+//! | [`bitonic`] | the network engine of Steps 2, 4 and 9 |
+//! | [`local_sort`] | Steps 1–2 (split + per-SM shared-memory sort) |
+//! | [`sampling`] | Steps 3 & 5 (equidistant local/global samples) |
+//! | [`indexing`] | Step 6 (parallel binary search → bucket sizes) |
+//! | [`prefix`] | Step 7 (column-major prefix sum, Figure 1) |
+//! | [`relocation`] | Step 8 (coalesced bucket move) |
+//! | [`bucket_sort`] | Algorithm 1 end-to-end |
+//! | [`randomized`] | Leischner et al. randomized sample sort [9] |
+//! | [`thrust_merge`] | Satish et al. Thrust Merge [14] |
+//! | [`radix`] | Satish et al. integer radix sort [14] |
+
+pub mod bitonic;
+pub mod bucket_sort;
+pub mod indexing;
+pub mod local_sort;
+pub mod prefix;
+pub mod radix;
+pub mod randomized;
+pub mod relocation;
+pub mod sampling;
+pub mod thrust_merge;
+
+use crate::error::Result;
+use crate::sim::GpuSim;
+use crate::Key;
+
+/// The algorithms the benchmark harness can run, as a CLI-friendly enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// GPU BUCKET SORT (deterministic sample sort, this paper).
+    BucketSort,
+    /// Randomized sample sort (Leischner et al. [9]).
+    Randomized,
+    /// Thrust Merge (Satish et al. [14]).
+    ThrustMerge,
+    /// Radix sort (Satish et al. [14], integer special case).
+    Radix,
+}
+
+impl Algorithm {
+    /// All algorithms, bucket sort first.
+    pub const ALL: [Algorithm; 4] = [
+        Algorithm::BucketSort,
+        Algorithm::Randomized,
+        Algorithm::ThrustMerge,
+        Algorithm::Radix,
+    ];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+            "bucketsort" | "bucket" | "gbs" | "deterministic" => Some(Algorithm::BucketSort),
+            "randomized" | "samplesort" | "rss" => Some(Algorithm::Randomized),
+            "thrustmerge" | "thrust" | "merge" => Some(Algorithm::ThrustMerge),
+            "radix" => Some(Algorithm::Radix),
+            _ => None,
+        }
+    }
+
+    /// Run this algorithm on `keys` over `sim` with default parameters,
+    /// returning the estimated milliseconds on the sim's own spec.
+    pub fn run(self, keys: &mut [Key], sim: &mut GpuSim) -> Result<f64> {
+        let spec = sim.spec().clone();
+        let ms = match self {
+            Algorithm::BucketSort => bucket_sort::BucketSort::new(Default::default())
+                .sort(keys, sim)?
+                .total_estimated_ms(&spec),
+            Algorithm::Randomized => randomized::RandomizedSampleSort::new(Default::default())
+                .sort(keys, sim)?
+                .total_estimated_ms(&spec),
+            Algorithm::ThrustMerge => thrust_merge::ThrustMergeSort::new(Default::default())
+                .sort(keys, sim)?
+                .total_estimated_ms(&spec),
+            Algorithm::Radix => radix::RadixSort::new(Default::default())
+                .sort(keys, sim)?
+                .total_estimated_ms(&spec),
+        };
+        Ok(ms)
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Algorithm::BucketSort => "GPU Bucket Sort (deterministic)",
+            Algorithm::Randomized => "Randomized Sample Sort [9]",
+            Algorithm::ThrustMerge => "Thrust Merge [14]",
+            Algorithm::Radix => "Radix Sort [14]",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuModel;
+    use crate::is_sorted_permutation;
+
+    #[test]
+    fn parse_algorithms() {
+        assert_eq!(Algorithm::parse("gbs"), Some(Algorithm::BucketSort));
+        assert_eq!(Algorithm::parse("Bucket-Sort"), Some(Algorithm::BucketSort));
+        assert_eq!(Algorithm::parse("rss"), Some(Algorithm::Randomized));
+        assert_eq!(Algorithm::parse("thrust"), Some(Algorithm::ThrustMerge));
+        assert_eq!(Algorithm::parse("radix"), Some(Algorithm::Radix));
+        assert_eq!(Algorithm::parse("bogo"), None);
+    }
+
+    #[test]
+    fn all_algorithms_sort_correctly() {
+        for alg in Algorithm::ALL {
+            let input: Vec<Key> = (0..30_000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+            let mut keys = input.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let ms = alg.run(&mut keys, &mut sim).unwrap();
+            assert!(is_sorted_permutation(&input, &keys), "{alg}");
+            assert!(ms > 0.0, "{alg}");
+        }
+    }
+}

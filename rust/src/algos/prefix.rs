@@ -1,0 +1,188 @@
+//! Step 7 of Algorithm 1: the prefix-sum over bucket sizes that assigns
+//! every bucket A_ij its starting location l_ij in the final sequence.
+//!
+//! The required order is **column-major**: a_11, …, a_m1, a_12, …, a_m2,
+//! …, a_1s, …, a_ms — all sublists' bucket-1 pieces first, then all
+//! bucket-2 pieces, etc., so the relocated array becomes B_1 ∪ … ∪ B_s
+//! with B_j = A_1j ∪ … ∪ A_mj.
+//!
+//! The paper implements it exactly as Figure 1 (three launches, all
+//! coalesced):
+//!   1. parallel **column sums** over the m×s matrix (all SMs),
+//!   2. a prefix sum over the s column sums (one SM, shared memory),
+//!   3. a parallel **update** adding each column's start to the running
+//!      within-column prefix (all SMs).
+
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::KEY_BYTES;
+
+/// The output of Step 7: per-bucket start locations plus the global
+/// layout of the s sublists B_j.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketLayout {
+    /// Row-major m×s matrix: `loc[i·s + j]` = start of bucket A_ij in
+    /// the relocated array.
+    pub loc: Vec<u64>,
+    /// Start of sublist B_j in the relocated array (length s).
+    pub bucket_start: Vec<u64>,
+    /// |B_j| = Σ_i a_ij (length s).
+    pub bucket_size: Vec<u64>,
+}
+
+impl BucketLayout {
+    /// Total keys covered (Σ_j |B_j|).
+    pub fn total(&self) -> u64 {
+        self.bucket_size.iter().sum()
+    }
+
+    /// Largest bucket — the paper's guarantee is `max ≤ 2n/s` [15].
+    pub fn max_bucket(&self) -> u64 {
+        self.bucket_size.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Compute the column-major prefix layout from the row-major m×s bucket
+/// size matrix `counts`.
+pub fn column_prefix(counts: &[u32], m: usize, s: usize, ledger: &mut Ledger) -> BucketLayout {
+    assert_eq!(counts.len(), m * s, "counts must be an m×s matrix");
+
+    // Launch 1: column sums (parallel over columns on the GPU).
+    let mut bucket_size = vec![0u64; s];
+    for i in 0..m {
+        for j in 0..s {
+            bucket_size[j] += counts[i * s + j] as u64;
+        }
+    }
+
+    // Launch 2: exclusive prefix over the s column sums (one SM).
+    let mut bucket_start = vec![0u64; s];
+    let mut acc = 0u64;
+    for j in 0..s {
+        bucket_start[j] = acc;
+        acc += bucket_size[j];
+    }
+
+    // Launch 3: per-column update — within-column exclusive prefix plus
+    // the column start.
+    let mut loc = vec![0u64; m * s];
+    for j in 0..s {
+        let mut run = bucket_start[j];
+        for i in 0..m {
+            loc[i * s + j] = run;
+            run += counts[i * s + j] as u64;
+        }
+    }
+
+    record(m, s, ledger);
+    BucketLayout {
+        loc,
+        bucket_start,
+        bucket_size,
+    }
+}
+
+/// Ledger-only twin of [`column_prefix`].
+pub fn analytic(m: usize, s: usize, ledger: &mut Ledger) {
+    record(m, s, ledger);
+}
+
+fn record(m: usize, s: usize, ledger: &mut Ledger) {
+    let matrix_bytes = (m * s * KEY_BYTES) as u64;
+    let col_bytes = (s * KEY_BYTES) as u64;
+    let col_blocks = (s as u64).max(1);
+    let threads = MAX_BLOCK_THREADS.min(m.max(1) as u32);
+
+    // Launch 1: column sums — read matrix, write s sums.
+    ledger.begin_kernel(KernelClass::PrefixSum, col_blocks, threads);
+    ledger.tag_step(7);
+    ledger.add_coalesced(matrix_bytes + col_bytes);
+    ledger.add_compute((m * s) as u64);
+    ledger.end_kernel();
+
+    // Launch 2: prefix over column sums — one block in shared memory.
+    ledger.begin_kernel(KernelClass::SingleBlock, 1, MAX_BLOCK_THREADS.min(s.max(1) as u32));
+    ledger.tag_step(7);
+    ledger.add_coalesced(2 * col_bytes);
+    ledger.add_smem(2 * s as u64);
+    ledger.add_compute(s as u64);
+    ledger.end_kernel();
+
+    // Launch 3: per-column update — read matrix + starts, write matrix.
+    ledger.begin_kernel(KernelClass::PrefixSum, col_blocks, threads);
+    ledger.tag_step(7);
+    ledger.add_coalesced(2 * matrix_bytes + col_bytes);
+    ledger.add_compute((m * s) as u64);
+    ledger.end_kernel();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_layout_by_hand() {
+        // m=2, s=3; rows: [1,2,3], [4,0,2].
+        let counts = vec![1, 2, 3, 4, 0, 2];
+        let l = column_prefix(&counts, 2, 3, &mut Ledger::default());
+        assert_eq!(l.bucket_size, vec![5, 2, 5]);
+        assert_eq!(l.bucket_start, vec![0, 5, 7]);
+        // Column-major order: A_11 A_21 | A_12 A_22 | A_13 A_23.
+        // Col 0 starts 0: A_11@0 (len 1), A_21@1 (len 4).
+        // Col 1 starts 5: A_12@5 (len 2), A_22@7 (len 0).
+        // Col 2 starts 7: A_13@7 (len 3), A_23@10 (len 2).
+        assert_eq!(l.loc, vec![0, 5, 7, 1, 7, 10]);
+        assert_eq!(l.total(), 12);
+        assert_eq!(l.max_bucket(), 5);
+    }
+
+    #[test]
+    fn locations_are_disjoint_and_cover() {
+        // Property: sorting all (loc, count) pairs tiles [0, total).
+        let m = 7;
+        let s = 5;
+        let counts: Vec<u32> = (0..m * s).map(|x| ((x * 13 + 5) % 9) as u32).collect();
+        let l = column_prefix(&counts, m, s, &mut Ledger::default());
+        let mut segs: Vec<(u64, u32)> = (0..m * s).map(|k| (l.loc[k], counts[k])).collect();
+        segs.sort_unstable();
+        let mut expect = 0u64;
+        for (start, len) in segs {
+            assert_eq!(start, expect);
+            expect += len as u64;
+        }
+        assert_eq!(expect, counts.iter().map(|&c| c as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn column_major_ordering() {
+        // All of bucket j comes before any of bucket j+1.
+        let m = 4;
+        let s = 3;
+        let counts: Vec<u32> = vec![2; m * s];
+        let l = column_prefix(&counts, m, s, &mut Ledger::default());
+        for j in 0..s - 1 {
+            let max_j = (0..m).map(|i| l.loc[i * s + j]).max().unwrap();
+            let min_j1 = (0..m).map(|i| l.loc[i * s + j + 1]).min().unwrap();
+            assert!(max_j < min_j1);
+        }
+    }
+
+    #[test]
+    fn three_launches_recorded() {
+        let mut led = Ledger::default();
+        analytic(16, 8, &mut led);
+        assert_eq!(led.kernel_count(), 3);
+        assert!(led.kernels().iter().all(|k| k.step == 7));
+        assert_eq!(led.kernels()[1].blocks, 1); // the single-SM prefix
+    }
+
+    #[test]
+    fn ledger_matches_analytic() {
+        let counts = vec![1u32; 12];
+        let mut a = Ledger::default();
+        column_prefix(&counts, 4, 3, &mut a);
+        let mut b = Ledger::default();
+        analytic(4, 3, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,186 @@
+//! Baseline: **GPU radix sort** — Satish, Harris & Garland's integer-
+//! specialized method [14], which the paper acknowledges as faster than
+//! any comparison sort "for the special case of integer sorting" (§3).
+//!
+//! LSD radix over 32-bit keys with `DIGIT_BITS`-bit digits: each pass
+//! (1) builds per-block digit histograms (coalesced read), (2) scans
+//! them, and (3) scatters keys to their digit's partition — the scatter
+//! is staged through shared memory so writes leave each block in digit-
+//! contiguous chunks (mostly coalesced, with one transaction per
+//! block-digit stream, like the sample-sort scatter).
+//!
+//! Included because a credible reproduction of the paper's evaluation
+//! context needs the integer-sort reference point: it bounds from below
+//! what any comparison-based method (including GPU BUCKET SORT) can
+//! achieve on u32 keys.
+
+use crate::error::Result;
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::sim::{CostModel, GpuSim};
+use crate::{Key, KEY_BYTES};
+
+/// Bits per radix digit (4 → 16 counting bins, 8 passes over u32).
+pub const DIGIT_BITS: u32 = 4;
+
+/// Counting bins per pass.
+pub const RADIX: usize = 1 << DIGIT_BITS;
+
+/// Parameters of the radix baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RadixParams {
+    /// Keys per block for the histogram/scatter staging.
+    pub tile: usize,
+}
+
+impl Default for RadixParams {
+    fn default() -> Self {
+        RadixParams { tile: 2048 }
+    }
+}
+
+/// Report of one radix sort run.
+#[derive(Debug, Clone)]
+pub struct RadixReport {
+    /// Input size.
+    pub n: usize,
+    /// Traffic ledger.
+    pub ledger: Ledger,
+    /// Digit passes executed (always 32 / DIGIT_BITS).
+    pub passes: usize,
+}
+
+impl RadixReport {
+    /// Estimated milliseconds on `spec`.
+    pub fn total_estimated_ms(&self, spec: &crate::sim::GpuSpec) -> f64 {
+        CostModel::default_params(spec).ledger_ms(&self.ledger)
+    }
+}
+
+/// The radix sorter.
+#[derive(Debug, Clone)]
+pub struct RadixSort {
+    params: RadixParams,
+}
+
+impl RadixSort {
+    /// Peak device footprint per key: ping-pong buffers + histograms.
+    pub const BYTES_PER_KEY: usize = 9;
+
+    /// Construct with the given parameters.
+    pub fn new(params: RadixParams) -> Self {
+        assert!(params.tile.is_power_of_two());
+        RadixSort { params }
+    }
+
+    /// Sort `keys` on the simulated device.
+    pub fn sort(&self, keys: &mut [Key], sim: &mut GpuSim) -> Result<RadixReport> {
+        let n = keys.len();
+        let alloc = sim.alloc(n * Self::BYTES_PER_KEY)?;
+        let mut ledger = Ledger::default();
+        let passes = (Key::BITS / DIGIT_BITS) as usize;
+
+        let mut src = keys.to_vec();
+        let mut dst = vec![0 as Key; n];
+        for p in 0..passes {
+            let shift = p as u32 * DIGIT_BITS;
+            // Counting pass.
+            let mut counts = [0usize; RADIX];
+            for &x in &src {
+                counts[((x >> shift) as usize) & (RADIX - 1)] += 1;
+            }
+            record_pass(n, self.params.tile, false, &mut ledger);
+            // Exclusive scan.
+            let mut starts = [0usize; RADIX];
+            let mut acc = 0usize;
+            for d in 0..RADIX {
+                starts[d] = acc;
+                acc += counts[d];
+            }
+            // Scatter pass (stable).
+            for &x in &src {
+                let d = ((x >> shift) as usize) & (RADIX - 1);
+                dst[starts[d]] = x;
+                starts[d] += 1;
+            }
+            record_pass(n, self.params.tile, true, &mut ledger);
+            std::mem::swap(&mut src, &mut dst);
+        }
+        keys.copy_from_slice(&src);
+
+        sim.free(alloc);
+        sim.ledger_mut().extend_from(&ledger);
+        Ok(RadixReport { n, ledger, passes })
+    }
+}
+
+fn record_pass(n: usize, tile: usize, scatter: bool, ledger: &mut Ledger) {
+    let blocks = n.div_ceil(tile).max(1) as u64;
+    ledger.begin_kernel(KernelClass::RadixPass, blocks, MAX_BLOCK_THREADS);
+    ledger.add_coalesced((n * KEY_BYTES) as u64);
+    // Digit extraction + histogram/offset update per key.
+    ledger.add_compute(2 * n as u64);
+    ledger.add_smem(2 * n as u64);
+    if scatter {
+        ledger.add_coalesced((n * KEY_BYTES) as u64);
+        // One stream flush per block-digit.
+        ledger.add_scattered(blocks * RADIX as u64);
+    }
+    ledger.end_kernel();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuModel;
+    use crate::is_sorted_permutation;
+
+    #[test]
+    fn sorts_various_inputs() {
+        let sorter = RadixSort::new(RadixParams { tile: 256 });
+        for input in [
+            (0..10_000u32).map(|x| x.wrapping_mul(2654435761)).collect::<Vec<_>>(),
+            (0..10_000u32).rev().collect(),
+            vec![42u32; 10_000],
+            vec![u32::MAX, 0, u32::MAX, 1, 2],
+        ] {
+            let mut keys = input.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let r = sorter.sort(&mut keys, &mut sim).unwrap();
+            assert!(is_sorted_permutation(&input, &keys));
+            assert_eq!(r.passes, 8);
+        }
+    }
+
+    #[test]
+    fn faster_than_comparison_sorts() {
+        // §3: radix beats comparison sorts on integers.
+        use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
+        let spec = GpuModel::Gtx285_2G.spec();
+        let n = 1 << 20;
+        let keys: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect();
+
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let radix = RadixSort::new(RadixParams::default())
+            .sort(&mut keys.clone(), &mut sim)
+            .unwrap();
+        let mut sim2 = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let bs = BucketSort::new(BucketSortParams::default())
+            .sort(&mut keys.clone(), &mut sim2)
+            .unwrap();
+        assert!(radix.total_estimated_ms(&spec) < bs.total_estimated_ms(&spec));
+    }
+
+    #[test]
+    fn ledger_is_input_independent() {
+        let sorter = RadixSort::new(RadixParams { tile: 256 });
+        let mk = |keys: Vec<u32>| {
+            let mut keys = keys;
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            sorter.sort(&mut keys, &mut sim).unwrap().ledger
+        };
+        let a = mk((0..5000u32).collect());
+        let b = mk(vec![3u32; 5000]);
+        assert_eq!(a, b);
+    }
+}

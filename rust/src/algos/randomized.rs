@@ -1,0 +1,438 @@
+//! Baseline: the **randomized sample sort** of Leischner, Osipov &
+//! Sanders (IPDPS 2010) [9] — the method the paper matches while
+//! removing its input-dependence.
+//!
+//! Structure (following [9]):
+//! * while a segment is larger than the base-case threshold M, pick
+//!   `a·k` *random* keys, sort them, take every a-th as one of k−1
+//!   splitters, then distribute the segment into k buckets in two
+//!   passes — a histogram pass and a scatter pass — traversing an
+//!   implicit binary search tree of splitters for each key;
+//! * segments ≤ M are sorted with the small-case sorter (a
+//!   shared-memory-tiled bitonic, as in GPU-quicksort descendants);
+//! * buckets whose keys are all equal (detected when adjacent splitters
+//!   collide) terminate immediately — without this, skewed inputs
+//!   recurse forever.
+//!
+//! Because splitters are random, bucket sizes are only *expected* to be
+//! n/k: skewed inputs yield oversized buckets and extra distribution
+//! levels, which is exactly the data-dependent fluctuation the paper's
+//! deterministic method eliminates (§1, §5). The effect emerges
+//! naturally here because the recursion follows the *actual* bucket
+//! sizes.
+
+use super::bitonic;
+use crate::error::Result;
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::sim::{CostModel, GpuSim};
+use crate::{Key, KEY_BYTES};
+use crate::util::Rng;
+
+/// Parameters of randomized sample sort [9].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RandomizedParams {
+    /// Bucket fan-out k per distribution level ([9] uses 128).
+    pub k: usize,
+    /// Oversampling factor a (splitters are drawn from a·k random
+    /// samples).
+    pub oversample: usize,
+    /// Base-case threshold M: segments at most this size go to the
+    /// small-case sorter.
+    pub base_case: usize,
+    /// Shared-memory tile for the small-case sorter.
+    pub tile: usize,
+    /// RNG seed — [9]'s runtime varies over this; fixing it makes a run
+    /// reproducible.
+    pub seed: u64,
+}
+
+impl Default for RandomizedParams {
+    fn default() -> Self {
+        RandomizedParams {
+            k: 128,
+            oversample: 32,
+            base_case: 1 << 18,
+            tile: 2048,
+            seed: 0x5EED_5A17,
+        }
+    }
+}
+
+/// Report of one randomized sample sort run.
+#[derive(Debug, Clone)]
+pub struct RandomizedReport {
+    /// Input size.
+    pub n: usize,
+    /// Traffic ledger (steps untagged — this baseline has no Algorithm-1
+    /// step structure).
+    pub ledger: Ledger,
+    /// Number of distribution levels executed (max over the recursion).
+    pub max_depth: usize,
+    /// Largest bucket produced by any single distribution step,
+    /// normalized by its expected size n_segment/k — the fluctuation
+    /// measure.
+    pub worst_bucket_skew: f64,
+}
+
+impl RandomizedReport {
+    /// Estimated milliseconds on `spec`.
+    pub fn total_estimated_ms(&self, spec: &crate::sim::GpuSpec) -> f64 {
+        CostModel::default_params(spec).ledger_ms(&self.ledger)
+    }
+}
+
+/// The randomized sample sorter.
+#[derive(Debug, Clone)]
+pub struct RandomizedSampleSort {
+    params: RandomizedParams,
+}
+
+/// Memory model of [9]: the implementation keeps the input, an output
+/// buffer, per-block histogram matrices and recursion bookkeeping; its
+/// reported ceilings (≤32M keys on a 1 GB GTX 285, ≤128M on a 4 GB
+/// Tesla — §5) bracket the peak footprint into (15.9, 31.7] bytes per
+/// key; we charge 24. This is what reproduces the paper's "GPU BUCKET
+/// SORT is more memory efficient" observation (8.25 B/key, Figures 6–7).
+pub const BYTES_PER_KEY: usize = 24;
+
+impl RandomizedSampleSort {
+    /// Construct with the given parameters.
+    pub fn new(params: RandomizedParams) -> Self {
+        assert!(params.k >= 2 && params.oversample >= 1 && params.base_case >= params.tile);
+        assert!(params.tile.is_power_of_two());
+        RandomizedSampleSort { params }
+    }
+
+    /// The parameters in use.
+    pub fn params(&self) -> &RandomizedParams {
+        &self.params
+    }
+
+    /// Sort `keys` on the simulated device.
+    pub fn sort(&self, keys: &mut [Key], sim: &mut GpuSim) -> Result<RandomizedReport> {
+        let n = keys.len();
+        let alloc = sim.alloc(n * BYTES_PER_KEY)?;
+        let mut ledger = Ledger::default();
+        let mut rng = Rng::new(self.params.seed);
+        let mut max_depth = 0usize;
+        let mut worst_skew = 0.0f64;
+        self.sort_rec(keys, &mut rng, &mut ledger, 1, &mut max_depth, &mut worst_skew);
+        sim.free(alloc);
+        sim.ledger_mut().extend_from(&ledger);
+        Ok(RandomizedReport {
+            n,
+            ledger,
+            max_depth,
+            worst_bucket_skew: worst_skew,
+        })
+    }
+
+    fn sort_rec(
+        &self,
+        seg: &mut [Key],
+        rng: &mut Rng,
+        ledger: &mut Ledger,
+        depth: usize,
+        max_depth: &mut usize,
+        worst_skew: &mut f64,
+    ) {
+        let n = seg.len();
+        *max_depth = (*max_depth).max(depth);
+        if n <= self.params.base_case {
+            self.base_sort(seg, ledger);
+            return;
+        }
+        // Degenerate-input guard ([9] relies on fresh randomness making
+        // progress w.h.p.; a near-degenerate value distribution can keep
+        // missing minority values in the sample): beyond depth 64, hand
+        // the segment to the small-case sorter outright.
+        if depth > 64 {
+            self.base_sort(seg, ledger);
+            return;
+        }
+        let k = self.params.k;
+
+        // Draw and sort a·k random samples; take every a-th as splitter.
+        let sample_n = (self.params.oversample * k).min(n);
+        let mut sample: Vec<Key> = (0..sample_n)
+            .map(|_| seg[rng.gen_range(n)])
+            .collect();
+        sample.sort_unstable();
+        let splitters: Vec<Key> = (1..k)
+            .map(|i| sample[i * sample_n / k])
+            .collect();
+        record_sample(sample_n, ledger);
+
+        // Histogram pass: every key traverses the splitter search tree.
+        let mut counts = vec![0usize; k];
+        for &x in seg.iter() {
+            counts[bucket_of(&splitters, x)] += 1;
+        }
+        record_pass(n, k, self.params.tile, false, ledger);
+
+        // Prefix + scatter pass.
+        let mut starts = vec![0usize; k + 1];
+        for j in 0..k {
+            starts[j + 1] = starts[j] + counts[j];
+        }
+        let mut out = vec![0 as Key; n];
+        let mut cursor = starts.clone();
+        for &x in seg.iter() {
+            let b = bucket_of(&splitters, x);
+            out[cursor[b]] = x;
+            cursor[b] += 1;
+        }
+        seg.copy_from_slice(&out);
+        record_pass(n, k, self.params.tile, true, ledger);
+
+        let expected = n as f64 / k as f64;
+        for j in 0..k {
+            let (st, en) = (starts[j], starts[j + 1]);
+            let len = en - st;
+            *worst_skew = worst_skew.max(len as f64 / expected);
+            if len <= 1 {
+                continue;
+            }
+            // Equality bucket: adjacent splitters collide ⇒ all keys in
+            // this bucket are equal ⇒ already sorted ([9]'s degenerate-
+            // case handling).
+            let all_equal = (j > 0 && j < k - 1 && splitters[j - 1] == splitters[j])
+                || seg[st..en].iter().all(|&x| x == seg[st]);
+            if all_equal {
+                continue;
+            }
+            if len == n {
+                // No progress this level (every key fell into a single
+                // bucket): bail to the small-case sorter instead of
+                // re-spinning the same partition.
+                self.base_sort(&mut seg[st..en], ledger);
+                continue;
+            }
+            self.sort_rec(&mut seg[st..en], rng, ledger, depth + 1, max_depth, worst_skew);
+        }
+    }
+
+    /// Small-case sorter: tiled bitonic over the padded segment (the
+    /// shared-memory sorter of the GPU implementations).
+    fn base_sort(&self, seg: &mut [Key], ledger: &mut Ledger) {
+        let n = seg.len();
+        if n <= 1 {
+            return;
+        }
+        let p = bitonic::next_pow2(n);
+        let mut buf: Vec<Key> = Vec::with_capacity(p);
+        buf.extend_from_slice(seg);
+        buf.resize(p, Key::MAX);
+        bitonic::global_sort(&mut buf, self.params.tile, ledger, 0);
+        seg.copy_from_slice(&buf[..n]);
+    }
+}
+
+impl RandomizedSampleSort {
+    /// Ledger-only estimate under the **balanced-bucket assumption**
+    /// (uniform input, every distribution level splits exactly k ways) —
+    /// the best case for randomized sample sort, which is precisely the
+    /// workload of the paper's Figures 6 & 7. Unlike
+    /// [`RandomizedSampleSort::sort`] this does not capture the
+    /// input-dependent fluctuation; it is the paper-scale stand-in for
+    /// the uniform-data comparison only.
+    pub fn sort_analytic(&self, n: usize, sim: &mut GpuSim) -> Result<RandomizedReport> {
+        let alloc = sim.alloc(n * BYTES_PER_KEY)?;
+        let mut ledger = Ledger::default();
+        let k = self.params.k;
+        let mut depth = 1usize;
+        let mut seg = n;
+        let mut segments = 1usize;
+        while seg > self.params.base_case {
+            record_sample((self.params.oversample * k).min(seg), &mut ledger);
+            // One histogram + one scatter pass per segment at this level;
+            // consolidated launches cover all segments of the level.
+            for _ in 0..segments {
+                record_pass(seg, k, self.params.tile, false, &mut ledger);
+                record_pass(seg, k, self.params.tile, true, &mut ledger);
+            }
+            seg = seg.div_ceil(k);
+            segments *= k;
+            depth += 1;
+        }
+        for _ in 0..segments {
+            bitonic::global_sort_analytic(
+                bitonic::next_pow2(seg.max(2)),
+                self.params.tile,
+                &mut ledger,
+                0,
+            );
+        }
+        sim.free(alloc);
+        sim.ledger_mut().extend_from(&ledger);
+        Ok(RandomizedReport {
+            n,
+            ledger,
+            max_depth: depth,
+            worst_bucket_skew: 1.0,
+        })
+    }
+}
+
+/// Locate the bucket of `x` by branch-free binary search over the
+/// sorted splitters (the implicit search tree of [9]).
+#[inline]
+fn bucket_of(splitters: &[Key], x: Key) -> usize {
+    splitters.partition_point(|&sp| sp <= x)
+}
+
+fn record_sample(sample_n: usize, ledger: &mut Ledger) {
+    ledger.begin_kernel(KernelClass::Sample, 1, MAX_BLOCK_THREADS);
+    // Random gathers are scattered by construction.
+    ledger.add_scattered(sample_n as u64);
+    ledger.add_compute((sample_n as f64 * (sample_n as f64).log2().max(1.0)) as u64);
+    ledger.end_kernel();
+}
+
+/// One distribution pass over `n` keys with fan-out `k`.
+///
+/// Histogram pass: coalesced read + log2(k) tree steps per key.
+/// Scatter pass: coalesced read, and the write side achieves only
+/// partial coalescing — [9] stages through shared memory, but k open
+/// output streams per block still cost extra transactions; we charge
+/// one scattered transaction per tile-per-bucket stream flush.
+fn record_pass(n: usize, k: usize, tile: usize, scatter: bool, ledger: &mut Ledger) {
+    let blocks = (n.div_ceil(tile)) as u64;
+    let class = if scatter {
+        KernelClass::ScatterAtomic
+    } else {
+        KernelClass::BucketFind
+    };
+    ledger.begin_kernel(class, blocks, MAX_BLOCK_THREADS);
+    ledger.add_coalesced((n * KEY_BYTES) as u64);
+    let tree_steps = (k as f64).log2().ceil() as u64;
+    ledger.add_compute(n as u64 * tree_steps);
+    ledger.add_smem(n as u64 * tree_steps);
+    if scatter {
+        ledger.add_coalesced((n * KEY_BYTES) as u64);
+        ledger.add_scattered(blocks * k as u64);
+        // Atomic cursor updates serialize within a warp — a divergent op
+        // per key.
+        ledger.add_divergent(n as u64 / 4);
+    }
+    ledger.end_kernel();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuModel;
+    use crate::{is_sorted, is_sorted_permutation};
+
+    fn small() -> RandomizedSampleSort {
+        RandomizedSampleSort::new(RandomizedParams {
+            k: 8,
+            oversample: 4,
+            base_case: 512,
+            tile: 256,
+            seed: 42,
+        })
+    }
+
+    #[test]
+    fn sorts_uniform() {
+        let mut keys: Vec<Key> = (0..20_000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        let orig = keys.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let r = small().sort(&mut keys, &mut sim).unwrap();
+        assert!(is_sorted_permutation(&orig, &keys));
+        assert!(r.max_depth >= 2, "should have recursed");
+    }
+
+    #[test]
+    fn sorts_all_equal_without_diverging() {
+        let mut keys = vec![77u32; 50_000];
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let r = small().sort(&mut keys, &mut sim).unwrap();
+        assert!(is_sorted(&keys));
+        // Equality detection terminates the recursion quickly.
+        assert!(r.max_depth <= 3, "depth={}", r.max_depth);
+    }
+
+    #[test]
+    fn sorts_sorted_and_reverse() {
+        for input in [
+            (0..30_000u32).collect::<Vec<_>>(),
+            (0..30_000u32).rev().collect::<Vec<_>>(),
+        ] {
+            let mut keys = input.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            small().sort(&mut keys, &mut sim).unwrap();
+            assert!(is_sorted_permutation(&input, &keys));
+        }
+    }
+
+    #[test]
+    fn runtime_fluctuates_with_distribution() {
+        // The paper's core robustness contrast (§1, §5): randomized
+        // sample sort's cost varies with the input distribution, the
+        // deterministic method's launch/traffic profile does not.
+        use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
+        use crate::workload::Distribution;
+        let spec = GpuModel::Gtx285_2G.spec();
+        let n = 60_000;
+        let sorter = small();
+        let dets = BucketSort::new(BucketSortParams { tile: 256, s: 16 });
+
+        let mut rss_ms = Vec::new();
+        let mut gbs_ledgers = Vec::new();
+        let mut worst_skews = Vec::new();
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Gaussian,
+            Distribution::Staggered,
+            Distribution::NearlySorted,
+        ] {
+            let keys = dist.generate(n, 42);
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let r = sorter.sort(&mut keys.clone(), &mut sim).unwrap();
+            rss_ms.push(r.total_estimated_ms(&spec));
+            worst_skews.push(r.worst_bucket_skew);
+            let mut sim2 = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let g = dets.sort(&mut keys.clone(), &mut sim2).unwrap();
+            gbs_ledgers.push(g.ledger);
+        }
+        // Randomized: bucket sizes skew away from n/k and cost varies.
+        let max = rss_ms.iter().copied().fold(0.0f64, f64::max);
+        let min = rss_ms.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 1.01, "rss should fluctuate: {rss_ms:?}");
+        assert!(
+            worst_skews.iter().any(|&s| s > 1.5),
+            "some distribution should skew buckets: {worst_skews:?}"
+        );
+        // Deterministic: identical launch/traffic profile on every input.
+        for l in &gbs_ledgers[1..] {
+            assert_eq!(l, &gbs_ledgers[0]);
+        }
+    }
+
+    #[test]
+    fn reproducible_with_same_seed() {
+        let mk = || {
+            let mut keys: Vec<Key> = (0..10_000u32).map(|x| x.wrapping_mul(7919)).collect();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            small().sort(&mut keys, &mut sim).unwrap().ledger
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn memory_ceiling_below_bucket_sort() {
+        // §5: randomized sample sort sorts ≤32M on 1 GB, ≤128M on 4 GB.
+        let sorter = RandomizedSampleSort::new(RandomizedParams::default());
+        let mut sim = GpuSim::new(GpuModel::Gtx285_1G.spec());
+        // 32M keys × 32 B/key = 1 GB > usable → borderline: check the
+        // ceiling ordering rather than exact values.
+        let need_32m = (32usize << 20) * BYTES_PER_KEY;
+        assert!(need_32m > sim.spec().usable_global_memory_bytes() / 2);
+        // 64M must not fit on the 1 GB card.
+        assert!(sim.alloc((64 << 20) * BYTES_PER_KEY).is_err());
+        let _ = sorter; // constructed for API parity
+    }
+}

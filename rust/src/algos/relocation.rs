@@ -1,0 +1,184 @@
+//! Step 8 of Algorithm 1: Data Relocation — move every bucket A_ij to
+//! its start location l_ij, producing the s sublists B_1 … B_s.
+//!
+//! The paper singles this step out as "perfectly suited for a GPU": one
+//! parallel coalesced read followed by one parallel coalesced write per
+//! key (§4, and visibly cheap in Figure 5). Each block handles one
+//! sublist A_i: its keys are already contiguous and sorted, each bucket
+//! A_ij is a contiguous segment `[b_{i,j-1}, b_ij)` of the tile, and the
+//! destination of that segment is the contiguous range starting at
+//! l_ij — so both sides of the copy stream linearly.
+
+use super::indexing;
+use super::prefix::BucketLayout;
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::{Key, KEY_BYTES};
+
+/// Relocate all buckets. `keys` is the tile-aligned, per-tile-sorted
+/// array; `boundaries` the m×s boundary matrix of Step 6; `layout` the
+/// Step-7 result. `out` must have `keys.len()` capacity and is fully
+/// overwritten.
+pub fn relocate(
+    keys: &[Key],
+    tile: usize,
+    boundaries_mat: &[u32],
+    layout: &BucketLayout,
+    out: &mut [Key],
+    ledger: &mut Ledger,
+) {
+    assert_eq!(keys.len(), out.len(), "out must match input length");
+    assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
+    let m = keys.len() / tile;
+    if m == 0 {
+        return;
+    }
+    let s = boundaries_mat.len() / m;
+    assert_eq!(boundaries_mat.len(), m * s);
+    assert_eq!(layout.loc.len(), m * s);
+
+    for (i, t) in keys.chunks_exact(tile).enumerate() {
+        let row = &boundaries_mat[i * s..(i + 1) * s];
+        let sizes = indexing::row_bucket_sizes(row);
+        let mut seg_start = 0usize;
+        for j in 0..s {
+            let len = sizes[j] as usize;
+            let dst = layout.loc[i * s + j] as usize;
+            out[dst..dst + len].copy_from_slice(&t[seg_start..seg_start + len]);
+            seg_start += len;
+        }
+        debug_assert_eq!(seg_start, tile);
+    }
+    record(m, tile, s, ledger);
+}
+
+/// Ledger-only twin of [`relocate`].
+pub fn analytic(n: usize, tile: usize, s: usize, ledger: &mut Ledger) {
+    assert_eq!(n % tile, 0);
+    let m = n / tile;
+    if m > 0 {
+        record(m, tile, s, ledger);
+    }
+}
+
+fn record(m: usize, tile: usize, s: usize, ledger: &mut Ledger) {
+    let n = m * tile;
+    ledger.begin_kernel(KernelClass::Relocation, m as u64, MAX_BLOCK_THREADS);
+    ledger.tag_step(8);
+    // Coalesced read of every key plus the per-block boundary/location
+    // rows; the write side streams one segment (avg tile/s keys) per
+    // bucket. Segments at least one memory transaction long coalesce
+    // fully; shorter ones each burn a whole transaction — this is the
+    // high-s coalescing degradation behind Figure 3's right edge.
+    ledger.add_coalesced((n * KEY_BYTES) as u64);
+    ledger.add_coalesced(2 * (m * s * KEY_BYTES) as u64);
+    let seg_bytes = (tile / s).max(1) * KEY_BYTES;
+    if seg_bytes >= crate::sim::spec::MEM_TRANSACTION_BYTES {
+        ledger.add_coalesced((n * KEY_BYTES) as u64);
+    } else {
+        ledger.add_scattered((m * s) as u64);
+    }
+    ledger.add_compute((m * s) as u64);
+    ledger.end_kernel();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::prefix::column_prefix;
+    use crate::algos::{indexing::boundaries, sampling};
+    use crate::is_sorted_permutation;
+
+    /// End-to-end Steps 6–8 on a small instance: after relocation, every
+    /// key of bucket j is ≤ every key of bucket j+1, and the array is a
+    /// permutation of the input.
+    #[test]
+    fn buckets_are_ordered_after_relocation() {
+        let tile = 16usize;
+        let m = 8usize;
+        let n = tile * m;
+        let mut keys: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761) % 1000).collect();
+        let orig = keys.clone();
+        for t in keys.chunks_exact_mut(tile) {
+            t.sort_unstable();
+        }
+        let s = 4usize;
+        let mut led = Ledger::default();
+        let samples = sampling::local_samples(&keys, tile, s, &mut led);
+        let mut sorted_samples = samples.clone();
+        sorted_samples.sort_unstable();
+        let splitters = sampling::select_splitters(&sorted_samples, s, &mut led);
+        let b = boundaries(&keys, tile, &splitters, &mut led);
+        let counts: Vec<u32> = b
+            .chunks_exact(s)
+            .flat_map(|row| indexing::row_bucket_sizes(row))
+            .collect();
+        let layout = column_prefix(&counts, m, s, &mut led);
+        let mut out = vec![0u32; n];
+        relocate(&keys, tile, &b, &layout, &mut out, &mut led);
+
+        // Bucket ordering: every element of B_j < splitter_j ≤ B_{j+1}.
+        for j in 0..s {
+            let st = layout.bucket_start[j] as usize;
+            let en = st + layout.bucket_size[j] as usize;
+            for &x in &out[st..en] {
+                if j > 0 {
+                    assert!(x >= splitters[j - 1]);
+                }
+                if j < s - 1 {
+                    assert!(x < splitters[j]);
+                }
+            }
+        }
+        // Permutation check: sorting each bucket yields a full sort.
+        let mut full = out.clone();
+        for j in 0..s {
+            let st = layout.bucket_start[j] as usize;
+            let en = st + layout.bucket_size[j] as usize;
+            full[st..en].sort_unstable();
+        }
+        assert!(is_sorted_permutation(&orig, &full));
+    }
+
+    #[test]
+    fn ledger_matches_analytic() {
+        let tile = 8;
+        let keys: Vec<Key> = (0..32).collect();
+        let b: Vec<u32> = keys
+            .chunks_exact(tile)
+            .flat_map(|_| vec![4u32, 8])
+            .collect();
+        let counts: Vec<u32> = b
+            .chunks_exact(2)
+            .flat_map(|row| indexing::row_bucket_sizes(row))
+            .collect();
+        let layout = column_prefix(&counts, 4, 2, &mut Ledger::default());
+        let mut out = vec![0u32; 32];
+        let mut a = Ledger::default();
+        relocate(&keys, tile, &b, &layout, &mut out, &mut a);
+        let mut bb = Ledger::default();
+        analytic(32, tile, 2, &mut bb);
+        assert_eq!(a, bb);
+    }
+
+    #[test]
+    fn coalesced_traffic_is_two_passes() {
+        let mut led = Ledger::default();
+        analytic(1 << 20, 2048, 64, &mut led);
+        let k = &led.kernels()[0];
+        // 2 passes × 4 B/key dominate; matrix reads are the small extra.
+        let expect_min = 2 * (1u64 << 20) * 4;
+        assert!(k.coalesced_bytes >= expect_min);
+        assert!(k.coalesced_bytes < expect_min + (1 << 20));
+        assert_eq!(
+            k.scattered_transactions, 0,
+            "Step 8 is fully coalesced at s=64 (segments of 32 keys = 128 B)"
+        );
+
+        // At very large s the segments drop under one transaction and
+        // the write side degrades (Figure 3's right edge).
+        let mut led2 = Ledger::default();
+        analytic(1 << 20, 2048, 512, &mut led2);
+        assert!(led2.kernels()[0].scattered_transactions > 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Steps 3 & 5 of Algorithm 1: equidistant sampling.
+//!
+//! * Step 3 — from each sorted sublist take `s` equidistant samples
+//!   (total s·m). The paper folds this into the write-back of Step 2; we
+//!   keep the strided reads in their own launch record (tagged step 3)
+//!   so Figure 5's per-step split stays observable, but charge them as
+//!   scattered accesses only (no extra full-array pass).
+//! * Step 5 — take `s` equidistant *global samples* from the s·m sorted
+//!   samples; their first `s-1` values act as the bucket splitters. This
+//!   is the deterministic, regular-sampling choice of Shi & Schaeffer
+//!   [15] that yields the guaranteed bucket bound |B_j| ≤ 2n/s.
+
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::{Key, KEY_BYTES};
+
+/// Step 3: `s` equidistant samples from each sorted `tile`-sized sublist
+/// of `keys` (positions `(p+1)·tile/s − 1` within each sublist).
+/// Requires `s` dividing `tile`. Returns the s·m samples in sublist
+/// order.
+pub fn local_samples(keys: &[Key], tile: usize, s: usize, ledger: &mut Ledger) -> Vec<Key> {
+    validate(tile, s);
+    assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
+    let m = keys.len() / tile;
+    let stride = tile / s;
+    let mut out = Vec::with_capacity(m * s);
+    for t in keys.chunks_exact(tile) {
+        for p in 0..s {
+            out.push(t[(p + 1) * stride - 1]);
+        }
+    }
+    if m > 0 {
+        record_local(m, s, ledger);
+    }
+    out
+}
+
+/// Ledger-only twin of [`local_samples`].
+pub fn analytic_local(n: usize, tile: usize, s: usize, ledger: &mut Ledger) -> usize {
+    validate(tile, s);
+    assert_eq!(n % tile, 0);
+    let m = n / tile;
+    if m > 0 {
+        record_local(m, s, ledger);
+    }
+    m * s
+}
+
+fn record_local(m: usize, s: usize, ledger: &mut Ledger) {
+    ledger.begin_kernel(KernelClass::Sample, m as u64, s.min(MAX_BLOCK_THREADS as usize) as u32);
+    ledger.tag_step(3);
+    // Strided reads from the sorted tiles (one transaction each), plus a
+    // coalesced write of the sample array.
+    ledger.add_scattered((m * s) as u64);
+    ledger.add_coalesced((m * s * KEY_BYTES) as u64);
+    ledger.add_compute((m * s) as u64);
+    ledger.end_kernel();
+}
+
+/// Step 5: the `s-1` bucket splitters — equidistant global samples of
+/// the globally sorted sample array (positions `(j+1)·len/s − 1`,
+/// `j = 0..s-1`; the s-th sample is the array maximum and bounds no
+/// bucket, so it is not materialized).
+pub fn select_splitters(sorted_samples: &[Key], s: usize, ledger: &mut Ledger) -> Vec<Key> {
+    assert!(s >= 1);
+    let len = sorted_samples.len();
+    assert!(len >= s, "need at least s samples to select from");
+    let stride = len / s;
+    let splitters: Vec<Key> = (0..s - 1)
+        .map(|j| sorted_samples[(j + 1) * stride - 1])
+        .collect();
+    debug_assert!(splitters.windows(2).all(|w| w[0] <= w[1]));
+    record_splitters(s, ledger);
+    splitters
+}
+
+/// Ledger-only twin of [`select_splitters`].
+pub fn analytic_splitters(len: usize, s: usize, ledger: &mut Ledger) {
+    assert!(len >= s && s >= 1);
+    record_splitters(s, ledger);
+}
+
+fn record_splitters(s: usize, ledger: &mut Ledger) {
+    ledger.begin_kernel(KernelClass::Sample, 1, s.min(MAX_BLOCK_THREADS as usize) as u32);
+    ledger.tag_step(5);
+    ledger.add_scattered(s as u64);
+    ledger.add_coalesced((s * KEY_BYTES) as u64);
+    ledger.add_compute(s as u64);
+    ledger.end_kernel();
+}
+
+fn validate(tile: usize, s: usize) {
+    assert!(s >= 1 && s <= tile, "need 1 <= s <= tile");
+    assert_eq!(tile % s, 0, "s must divide the tile size");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_equidistant_maxima() {
+        // Tile [0..16) sorted; s=4 → stride 4 → samples at 3,7,11,15.
+        let keys: Vec<Key> = (0..16).collect();
+        let mut led = Ledger::default();
+        let s = local_samples(&keys, 16, 4, &mut led);
+        assert_eq!(s, vec![3, 7, 11, 15]);
+    }
+
+    #[test]
+    fn per_tile_sampling() {
+        let mut keys: Vec<Key> = (0..8).collect();
+        keys.extend(100..108);
+        let mut led = Ledger::default();
+        let s = local_samples(&keys, 8, 2, &mut led);
+        assert_eq!(s, vec![3, 7, 103, 107]);
+        assert_eq!(led.kernels()[0].step, 3);
+        assert_eq!(led.kernels()[0].scattered_transactions, 4);
+    }
+
+    #[test]
+    fn ledger_matches_analytic() {
+        let keys: Vec<Key> = (0..64).collect();
+        let mut a = Ledger::default();
+        local_samples(&keys, 16, 8, &mut a);
+        let mut b = Ledger::default();
+        assert_eq!(analytic_local(64, 16, 8, &mut b), 32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn splitters_from_sorted_samples() {
+        let sorted: Vec<Key> = (0..32).collect();
+        let mut led = Ledger::default();
+        let sp = select_splitters(&sorted, 4, &mut led);
+        // stride 8 → positions 7, 15, 23 (3 = s-1 splitters).
+        assert_eq!(sp, vec![7, 15, 23]);
+        assert_eq!(led.kernels()[0].step, 5);
+    }
+
+    #[test]
+    fn single_bucket_means_no_splitters() {
+        let sorted: Vec<Key> = (0..8).collect();
+        let sp = select_splitters(&sorted, 1, &mut Ledger::default());
+        assert!(sp.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "s must divide")]
+    fn rejects_non_dividing_s() {
+        let keys: Vec<Key> = (0..16).collect();
+        local_samples(&keys, 16, 3, &mut Ledger::default());
+    }
+
+    #[test]
+    fn splitter_count_guarantee() {
+        // Property: for any sorted input and valid s, we get exactly s-1
+        // sorted splitters.
+        for s in [1usize, 2, 4, 8, 16] {
+            let sorted: Vec<Key> = (0..256u32).map(|x| x * 3).collect();
+            let sp = select_splitters(&sorted, s, &mut Ledger::default());
+            assert_eq!(sp.len(), s - 1);
+            assert!(sp.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Baseline: **Thrust Merge** — the comparison-based merge sort of
+//! Satish, Harris & Garland (IPDPS 2009) [14], the best GPU comparison
+//! sort before sample sort.
+//!
+//! Structure (following [14]):
+//! * split the input into shared-memory tiles and sort each with an
+//!   **odd-even merge network** (their Batcher's-network choice; same
+//!   O(t log² t) class as our bitonic tile sort);
+//! * then log₂(m) rounds of pairwise **two-way merge**, each round
+//!   streaming the whole array: pairs of sorted runs are merged by
+//!   splitting them into parallel chunks via rank binary searches and
+//!   merging each chunk in shared memory.
+//!
+//! The merge path is the weak spot the paper exploits: unlike a bitonic
+//! pass, a two-way merge advances data-dependently, so its inner loop
+//! branches diverge across a warp (§2's SIMT discussion) — we charge the
+//! per-key merge work as divergent ops, which is what makes this
+//! baseline land at the paper's reported ~3–5× deficit against both
+//! sample sorts (Figures 6 & 7).
+//!
+//! The published code could not sort beyond 16M items ("the current
+//! Thrust Merge Sort code shows memory errors", §5 citing Garland [5]);
+//! [`ThrustMergeSort::MAX_N`] reproduces that operational ceiling.
+
+use super::bitonic;
+use crate::error::{Error, Result};
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::sim::{CostModel, GpuSim};
+use crate::{Key, KEY_BYTES};
+
+/// Parameters of the Thrust Merge baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThrustMergeParams {
+    /// Shared-memory tile size for the initial odd-even sort.
+    pub tile: usize,
+}
+
+impl Default for ThrustMergeParams {
+    fn default() -> Self {
+        ThrustMergeParams { tile: 1024 }
+    }
+}
+
+/// Report of one Thrust Merge run.
+#[derive(Debug, Clone)]
+pub struct ThrustMergeReport {
+    /// Input size.
+    pub n: usize,
+    /// Traffic ledger.
+    pub ledger: Ledger,
+    /// Merge rounds executed.
+    pub rounds: usize,
+}
+
+impl ThrustMergeReport {
+    /// Estimated milliseconds on `spec`.
+    pub fn total_estimated_ms(&self, spec: &crate::sim::GpuSpec) -> f64 {
+        CostModel::default_params(spec).ledger_ms(&self.ledger)
+    }
+}
+
+/// The Thrust Merge sorter.
+#[derive(Debug, Clone)]
+pub struct ThrustMergeSort {
+    params: ThrustMergeParams,
+}
+
+impl ThrustMergeSort {
+    /// Operational ceiling of the published implementation: 16M items
+    /// (§5, [5]). Inputs beyond this return [`Error::Runtime`].
+    pub const MAX_N: usize = 16 << 20;
+
+    /// Peak device footprint per key: input + output ping-pong buffers
+    /// plus rank/offset arrays per round.
+    pub const BYTES_PER_KEY: usize = 16;
+
+    /// Construct with the given parameters.
+    pub fn new(params: ThrustMergeParams) -> Self {
+        assert!(params.tile.is_power_of_two());
+        ThrustMergeSort { params }
+    }
+
+    /// Sort `keys` on the simulated device.
+    pub fn sort(&self, keys: &mut [Key], sim: &mut GpuSim) -> Result<ThrustMergeReport> {
+        let n = keys.len();
+        if n > Self::MAX_N {
+            return Err(Error::Runtime(format!(
+                "Thrust Merge code fails beyond {}M items (memory errors; Garland, private communication [5]) — requested {}M",
+                Self::MAX_N >> 20,
+                n >> 20
+            )));
+        }
+        let alloc = sim.alloc(n * Self::BYTES_PER_KEY)?;
+        let mut ledger = Ledger::default();
+        let tile = self.params.tile;
+
+        // Phase 1: pad to tile multiple, odd-even/bitonic network per tile.
+        let padded = n.div_ceil(tile).max(1) * tile;
+        let mut work: Vec<Key> = Vec::with_capacity(padded);
+        work.extend_from_slice(keys);
+        work.resize(padded, Key::MAX);
+        let m = padded / tile;
+        for t in work.chunks_exact_mut(tile) {
+            bitonic::sort_slice(t);
+        }
+        record_tile_sort(padded, tile, m, &mut ledger);
+
+        // Phase 2: log2(m) two-way merge rounds.
+        let mut rounds = 0usize;
+        let mut run = tile;
+        let mut src = work;
+        let mut dst = vec![0 as Key; padded];
+        while run < padded {
+            for pair_start in (0..padded).step_by(2 * run) {
+                let a_end = (pair_start + run).min(padded);
+                let b_end = (pair_start + 2 * run).min(padded);
+                merge_into(
+                    &src[pair_start..a_end],
+                    &src[a_end..b_end],
+                    &mut dst[pair_start..b_end],
+                );
+            }
+            record_merge_round(padded, tile, &mut ledger);
+            std::mem::swap(&mut src, &mut dst);
+            run *= 2;
+            rounds += 1;
+        }
+        keys.copy_from_slice(&src[..n]);
+
+        sim.free(alloc);
+        sim.ledger_mut().extend_from(&ledger);
+        Ok(ThrustMergeReport { n, ledger, rounds })
+    }
+}
+
+impl ThrustMergeSort {
+    /// Ledger-only twin of [`ThrustMergeSort::sort`]: Thrust Merge's
+    /// pass structure is input-independent (tile sort + ⌈log₂ m⌉ full
+    /// merge rounds), so the analytic ledger matches the executed one
+    /// exactly — this is what runs the paper-scale points of
+    /// Figures 6 & 7.
+    pub fn sort_analytic(&self, n: usize, sim: &mut GpuSim) -> Result<ThrustMergeReport> {
+        if n > Self::MAX_N {
+            return Err(Error::Runtime(format!(
+                "Thrust Merge code fails beyond {}M items (memory errors; Garland, private communication [5]) — requested {}M",
+                Self::MAX_N >> 20,
+                n >> 20
+            )));
+        }
+        let alloc = sim.alloc(n * Self::BYTES_PER_KEY)?;
+        let mut ledger = Ledger::default();
+        let tile = self.params.tile;
+        let padded = n.div_ceil(tile).max(1) * tile;
+        let m = padded / tile;
+        record_tile_sort(padded, tile, m, &mut ledger);
+        let mut rounds = 0usize;
+        let mut run = tile;
+        while run < padded {
+            record_merge_round(padded, tile, &mut ledger);
+            run *= 2;
+            rounds += 1;
+        }
+        sim.free(alloc);
+        sim.ledger_mut().extend_from(&ledger);
+        Ok(ThrustMergeReport { n, ledger, rounds })
+    }
+}
+
+/// Phase 1: one consolidated launch odd-even-sorting every tile in
+/// shared memory.
+fn record_tile_sort(padded: usize, tile: usize, m: usize, ledger: &mut Ledger) {
+    let ces = m as u64 * bitonic::ce_count(tile);
+    ledger.begin_kernel(KernelClass::LocalSort, m as u64, MAX_BLOCK_THREADS);
+    ledger.add_coalesced(2 * (padded * KEY_BYTES) as u64);
+    ledger.add_smem(4 * ces);
+    ledger.add_compute(ces);
+    ledger.end_kernel();
+}
+
+/// Sequential two-way merge (the real work standing in for the GPU's
+/// chunked parallel merge).
+fn merge_into(a: &[Key], b: &[Key], out: &mut [Key]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in out.iter_mut() {
+        let take_a = j >= b.len() || (i < a.len() && a[i] <= b[j]);
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
+    }
+}
+
+/// One merge round over the whole array.
+///
+/// Traffic: coalesced read + write of every key; per key, the rank
+/// binary-search and merge-advance work. The merge inner loop is data-
+/// dependent, so the bulk of its per-key work is charged as divergent
+/// (§2) — calibrated to [14]'s reported ~55 Mkeys/s merge throughput.
+fn record_merge_round(n: usize, tile: usize, ledger: &mut Ledger) {
+    let blocks = n.div_ceil(tile) as u64;
+    ledger.begin_kernel(KernelClass::Merge, blocks, MAX_BLOCK_THREADS);
+    ledger.add_coalesced(2 * (n * KEY_BYTES) as u64);
+    // Rank searches: log2(run) ≈ log2(tile..n) probes; charge log2(n).
+    let probes = (n.max(2) as f64).log2().ceil() as u64;
+    ledger.add_compute(n as u64 * 2 + (n as u64 / tile as u64) * probes);
+    ledger.add_smem(n as u64 * 2);
+    // Divergent merge-advance: ~4 serialized ops per key per round.
+    ledger.add_divergent(4 * n as u64);
+    ledger.end_kernel();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuModel;
+    use crate::is_sorted_permutation;
+
+    fn sorter() -> ThrustMergeSort {
+        ThrustMergeSort::new(ThrustMergeParams { tile: 256 })
+    }
+
+    #[test]
+    fn sorts_various_sizes() {
+        for n in [0usize, 1, 255, 256, 1000, 4096, 50_000] {
+            let mut keys: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect();
+            let orig = keys.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            sorter().sort(&mut keys, &mut sim).unwrap();
+            assert!(is_sorted_permutation(&orig, &keys), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_duplicates_and_sorted_input() {
+        for input in [vec![9u32; 5000], (0..5000u32).collect(), (0..5000u32).rev().collect()] {
+            let mut keys = input.clone();
+            let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            sorter().sort(&mut keys, &mut sim).unwrap();
+            assert!(is_sorted_permutation(&input, &keys));
+        }
+    }
+
+    #[test]
+    fn round_count() {
+        let mut keys: Vec<Key> = (0..4096u32).rev().collect();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let r = sorter().sort(&mut keys, &mut sim).unwrap();
+        // 4096 / 256 = 16 tiles → 4 merge rounds.
+        assert_eq!(r.rounds, 4);
+    }
+
+    #[test]
+    fn sixteen_million_ceiling() {
+        let s = ThrustMergeSort::new(ThrustMergeParams::default());
+        let mut sim = GpuSim::new(GpuModel::TeslaC1060.spec());
+        let mut too_big = vec![0u32; ThrustMergeSort::MAX_N + 1];
+        let err = s.sort(&mut too_big, &mut sim).unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)));
+        assert!(err.to_string().contains("16M"));
+    }
+
+    #[test]
+    fn analytic_matches_executed() {
+        for n in [1000usize, 4096, 100_000] {
+            let mut keys: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect();
+            let mut sim_e = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let exec = sorter().sort(&mut keys, &mut sim_e).unwrap();
+            let mut sim_a = GpuSim::new(GpuModel::Gtx285_2G.spec());
+            let ana = sorter().sort_analytic(n, &mut sim_a).unwrap();
+            assert_eq!(exec.ledger, ana.ledger, "n={n}");
+            assert_eq!(exec.rounds, ana.rounds);
+        }
+    }
+
+    #[test]
+    fn slower_than_deterministic_sample_sort() {
+        // Figures 6 & 7 at the paper's own scale (16M keys, GTX 285):
+        // both sample sorts clearly beat Thrust Merge.
+        use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
+        let spec = GpuModel::Gtx285_2G.spec();
+        let n = 16 << 20;
+
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let tm = ThrustMergeSort::new(ThrustMergeParams::default())
+            .sort_analytic(n, &mut sim)
+            .unwrap();
+        let mut sim2 = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let bs = BucketSort::new(BucketSortParams::default())
+            .sort_analytic(n, &mut sim2)
+            .unwrap();
+
+        let t_tm = tm.total_estimated_ms(&spec);
+        let t_bs = bs.total_estimated_ms(&spec);
+        assert!(
+            t_tm > 1.5 * t_bs,
+            "thrust merge {t_tm:.1} ms should clearly exceed bucket sort {t_bs:.1} ms"
+        );
+    }
+}

@@ -1,0 +1,350 @@
+//! Configuration system: one config drives the service, the CLI and the
+//! experiment harness. Loadable from JSON files (via the in-tree
+//! [`crate::util::json`] module), overridable from the command line.
+//! Unknown fields are rejected; missing fields fall back to defaults, so
+//! partial configs stay forward-compatible.
+
+use crate::algos::bucket_sort::BucketSortParams;
+use crate::error::{Error, Result};
+use crate::exec::NativeParams;
+use crate::sim::GpuModel;
+use crate::util::Json;
+use std::path::Path;
+
+/// Which engine the coordinator serves requests with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Native multicore engine (real performance path).
+    #[default]
+    Native,
+    /// Simulated-GPU engine: executes Algorithm 1 on the host while
+    /// modelling a Table-1 device (traffic ledger + capacity limits).
+    Sim,
+    /// PJRT engine: runs the AOT-compiled JAX/Pallas pipeline through
+    /// the XLA CPU client (fixed shapes from the artifact manifest).
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(EngineKind::Native),
+            "sim" | "simulated" => Some(EngineKind::Sim),
+            "pjrt" | "xla" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Stable config-file name.
+    pub fn id(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Sim => "sim",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Dynamic batcher settings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchConfig {
+    /// Maximum keys merged into one engine pass.
+    pub max_batch_keys: usize,
+    /// Maximum requests merged into one batch.
+    pub max_batch_requests: usize,
+    /// How long an under-full batch may wait for company (ms).
+    pub max_wait_ms: u64,
+    /// Queue depth before backpressure rejections kick in.
+    pub queue_capacity: usize,
+    /// Total queued keys before backpressure (memory budget proxy).
+    pub max_queued_keys: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch_keys: 1 << 22,
+            max_batch_requests: 64,
+            max_wait_ms: 2,
+            queue_capacity: 1024,
+            max_queued_keys: 1 << 27,
+        }
+    }
+}
+
+/// Top-level service configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Simulated device (for [`EngineKind::Sim`]).
+    pub device: GpuModel,
+    /// Algorithm-1 parameters (tile, s).
+    pub sort: BucketSortParams,
+    /// Native engine parameters.
+    pub native: NativeParams,
+    /// Batcher parameters.
+    pub batch: BatchConfig,
+    /// Verify every response is a sorted permutation (costly; tests and
+    /// debugging).
+    pub verify: bool,
+    /// Artifact directory for the PJRT engine.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            engine: EngineKind::Native,
+            device: GpuModel::Gtx285_2G,
+            sort: BucketSortParams::default(),
+            native: NativeParams::default(),
+            batch: BatchConfig::default(),
+            verify: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Load from a JSON file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Config(format!("{}: {e}", path.as_ref().display())))?;
+        Self::from_json(&text)
+    }
+
+    /// Parse from JSON text; missing fields default, unknown fields
+    /// error.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
+        let mut cfg = ServiceConfig::default();
+        let Json::Obj(pairs) = &v else {
+            return Err(Error::Config("config must be a JSON object".into()));
+        };
+        for (key, val) in pairs {
+            match key.as_str() {
+                "engine" => {
+                    let s = str_field(val, "engine")?;
+                    cfg.engine = EngineKind::parse(&s)
+                        .ok_or_else(|| Error::Config(format!("unknown engine {s:?}")))?;
+                }
+                "device" => {
+                    let s = str_field(val, "device")?;
+                    cfg.device = GpuModel::parse(&s)
+                        .ok_or_else(|| Error::Config(format!("unknown device {s:?}")))?;
+                }
+                "sort" => {
+                    cfg.sort = BucketSortParams {
+                        tile: usize_field(val, "tile").unwrap_or(cfg.sort.tile),
+                        s: usize_field(val, "s").unwrap_or(cfg.sort.s),
+                    };
+                }
+                "native" => {
+                    cfg.native = NativeParams {
+                        workers: usize_field(val, "workers").unwrap_or(cfg.native.workers),
+                        samples_per_chunk: usize_field(val, "samples_per_chunk")
+                            .unwrap_or(cfg.native.samples_per_chunk),
+                        bucket_factor: usize_field(val, "bucket_factor")
+                            .unwrap_or(cfg.native.bucket_factor),
+                        sequential_cutoff: usize_field(val, "sequential_cutoff")
+                            .unwrap_or(cfg.native.sequential_cutoff),
+                    };
+                }
+                "batch" => {
+                    cfg.batch = BatchConfig {
+                        max_batch_keys: usize_field(val, "max_batch_keys")
+                            .unwrap_or(cfg.batch.max_batch_keys),
+                        max_batch_requests: usize_field(val, "max_batch_requests")
+                            .unwrap_or(cfg.batch.max_batch_requests),
+                        max_wait_ms: usize_field(val, "max_wait_ms")
+                            .map(|v| v as u64)
+                            .unwrap_or(cfg.batch.max_wait_ms),
+                        queue_capacity: usize_field(val, "queue_capacity")
+                            .unwrap_or(cfg.batch.queue_capacity),
+                        max_queued_keys: usize_field(val, "max_queued_keys")
+                            .unwrap_or(cfg.batch.max_queued_keys),
+                    };
+                }
+                "verify" => {
+                    cfg.verify = val
+                        .as_bool()
+                        .ok_or_else(|| Error::Config("verify must be a bool".into()))?;
+                }
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = str_field(val, "artifacts_dir")?;
+                }
+                other => {
+                    return Err(Error::Config(format!("unknown config field {other:?}")));
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the combination.
+    pub fn validate(&self) -> Result<()> {
+        self.sort.validate()?;
+        if self.batch.max_batch_keys == 0 || self.batch.queue_capacity == 0 {
+            return Err(Error::Config(
+                "batch.max_batch_keys and batch.queue_capacity must be positive".into(),
+            ));
+        }
+        if self.batch.max_batch_requests == 0 {
+            return Err(Error::Config(
+                "batch.max_batch_requests must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serialize to pretty JSON (for `gbs config --print`).
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("engine", Json::str(self.engine.id())),
+            (
+                "device",
+                Json::str(match self.device {
+                    GpuModel::TeslaC1060 => "tesla",
+                    GpuModel::Gtx285_2G => "gtx285",
+                    GpuModel::Gtx285_1G => "gtx285-1g",
+                    GpuModel::Gtx260 => "gtx260",
+                }),
+            ),
+            (
+                "sort",
+                Json::obj(vec![
+                    ("tile", Json::num(self.sort.tile as f64)),
+                    ("s", Json::num(self.sort.s as f64)),
+                ]),
+            ),
+            (
+                "native",
+                Json::obj(vec![
+                    ("workers", Json::num(self.native.workers as f64)),
+                    (
+                        "samples_per_chunk",
+                        Json::num(self.native.samples_per_chunk as f64),
+                    ),
+                    ("bucket_factor", Json::num(self.native.bucket_factor as f64)),
+                    (
+                        "sequential_cutoff",
+                        Json::num(self.native.sequential_cutoff as f64),
+                    ),
+                ]),
+            ),
+            (
+                "batch",
+                Json::obj(vec![
+                    ("max_batch_keys", Json::num(self.batch.max_batch_keys as f64)),
+                    (
+                        "max_batch_requests",
+                        Json::num(self.batch.max_batch_requests as f64),
+                    ),
+                    ("max_wait_ms", Json::num(self.batch.max_wait_ms as f64)),
+                    ("queue_capacity", Json::num(self.batch.queue_capacity as f64)),
+                    (
+                        "max_queued_keys",
+                        Json::num(self.batch.max_queued_keys as f64),
+                    ),
+                ]),
+            ),
+            ("verify", Json::Bool(self.verify)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+        ])
+        .to_string_pretty()
+    }
+}
+
+fn str_field(v: &Json, name: &str) -> Result<String> {
+    v.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Config(format!("{name} must be a string")))
+}
+
+fn usize_field(obj: &Json, key: &str) -> Option<usize> {
+    obj.get(key).and_then(|v| v.as_usize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServiceConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ServiceConfig {
+            engine: EngineKind::Sim,
+            device: GpuModel::Gtx260,
+            verify: true,
+            ..Default::default()
+        };
+        let json = cfg.to_json();
+        let back = ServiceConfig::from_json(&json).unwrap();
+        assert_eq!(cfg, back);
+        // All four devices round-trip.
+        for device in GpuModel::ALL {
+            let c = ServiceConfig {
+                device,
+                ..Default::default()
+            };
+            assert_eq!(ServiceConfig::from_json(&c.to_json()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = ServiceConfig::from_json(r#"{"engine":"sim"}"#).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Sim);
+        assert_eq!(cfg.sort, BucketSortParams::default());
+        assert_eq!(cfg.batch, BatchConfig::default());
+    }
+
+    #[test]
+    fn file_loading() {
+        let dir = std::env::temp_dir().join(format!("gbs_cfg_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"engine":"pjrt","verify":true}"#).unwrap();
+        let cfg = ServiceConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Pjrt);
+        assert!(cfg.verify);
+        assert!(ServiceConfig::from_file(dir.join("missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        // Bad sort params.
+        assert!(ServiceConfig::from_json(r#"{"sort":{"tile":100,"s":3}}"#).is_err());
+        // Zero batch budget.
+        assert!(
+            ServiceConfig::from_json(r#"{"batch":{"max_batch_keys":0}}"#).is_err()
+        );
+        // Unknown field.
+        let err = ServiceConfig::from_json(r#"{"engin":"sim"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown config field"));
+        // Unknown engine/device.
+        assert!(ServiceConfig::from_json(r#"{"engine":"gpu"}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"device":"fermi"}"#).is_err());
+        // Not an object.
+        assert!(ServiceConfig::from_json("[1,2]").is_err());
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("SIM"), Some(EngineKind::Sim));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("gpu"), None);
+        for k in [EngineKind::Native, EngineKind::Sim, EngineKind::Pjrt] {
+            assert_eq!(EngineKind::parse(k.id()), Some(k));
+        }
+    }
+}

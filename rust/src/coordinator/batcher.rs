@@ -1,0 +1,317 @@
+//! The dynamic batcher: groups queued sort requests into engine
+//! dispatches under key-count and request-count budgets.
+//!
+//! Policy (FIFO, no reordering — request identity and fairness beat
+//! packing efficiency for a sort service):
+//! * a batch is **ready** when it reaches `max_batch_keys` or
+//!   `max_batch_requests`, or when the oldest queued request has waited
+//!   `max_wait_ms`;
+//! * an oversized single request (> `max_batch_keys`) always forms its
+//!   own batch — it can never become ready by accumulation;
+//! * **admission control**: the queue rejects new work beyond
+//!   `queue_capacity` requests or `max_queued_keys` keys (backpressure,
+//!   sized to the engine's memory budget).
+//!
+//! Pure synchronous state machine — the async service drives it; tests
+//! drive it directly with a mock clock.
+
+use super::request::{Batch, PendingRequest};
+use crate::config::BatchConfig;
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Queue + assembly state.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatchConfig,
+    queue: VecDeque<PendingRequest>,
+    queued_keys: usize,
+}
+
+impl Batcher {
+    /// New empty batcher.
+    pub fn new(cfg: BatchConfig) -> Self {
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            queued_keys: 0,
+        }
+    }
+
+    /// Queue depth in requests.
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queue depth in keys.
+    pub fn queued_keys(&self) -> usize {
+        self.queued_keys
+    }
+
+    /// Check whether a request of `len` keys can be admitted right now.
+    pub fn can_admit(&self, len: usize) -> Result<()> {
+        if self.queue.len() >= self.cfg.queue_capacity {
+            return Err(Error::Coordinator(format!(
+                "queue full ({} requests) — backpressure",
+                self.queue.len()
+            )));
+        }
+        if self.queued_keys + len > self.cfg.max_queued_keys && !self.queue.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "queued key budget exceeded ({} + {} > {}) — backpressure",
+                self.queued_keys,
+                len,
+                self.cfg.max_queued_keys
+            )));
+        }
+        Ok(())
+    }
+
+    /// Admit a request, or reject it with a backpressure error.
+    pub fn admit(&mut self, req: PendingRequest) -> Result<()> {
+        self.can_admit(req.len())?;
+        self.queued_keys += req.len();
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Deadline by which [`Batcher::poll`] should be called again (the
+    /// oldest request's wait expiry), if any work is queued.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue
+            .front()
+            .map(|r| r.admitted_at + Duration::from_millis(self.cfg.max_wait_ms))
+    }
+
+    /// Assemble the next batch if one is ready at time `now`.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.queue.front()?;
+        let waited = now.saturating_duration_since(oldest.admitted_at);
+        let wait_expired = waited >= Duration::from_millis(self.cfg.max_wait_ms);
+        if !wait_expired && !self.budget_reached() {
+            return None;
+        }
+        Some(self.take_batch())
+    }
+
+    /// Put an assembled batch back at the queue front (the engine
+    /// channel was full). Order is preserved.
+    pub fn restore_front(&mut self, batch: Batch) {
+        for req in batch.requests.into_iter().rev() {
+            self.queued_keys += req.len();
+            self.queue.push_front(req);
+        }
+    }
+
+    /// Assemble whatever is queued right now (shutdown drain).
+    pub fn drain(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.take_batch())
+        }
+    }
+
+    /// True when the queued front already fills a batch budget.
+    fn budget_reached(&self) -> bool {
+        if self.queue.len() >= self.cfg.max_batch_requests {
+            return true;
+        }
+        let mut keys = 0usize;
+        for (i, r) in self.queue.iter().enumerate() {
+            keys += r.len();
+            if keys >= self.cfg.max_batch_keys {
+                return true;
+            }
+            if i + 1 >= self.cfg.max_batch_requests {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Pop the FIFO prefix that fits the budgets (always ≥ 1 request).
+    fn take_batch(&mut self) -> Batch {
+        let mut requests = Vec::new();
+        let mut total_keys = 0usize;
+        while let Some(front) = self.queue.front() {
+            let would_be = total_keys + front.len();
+            let fits = requests.is_empty()
+                || (would_be <= self.cfg.max_batch_keys
+                    && requests.len() < self.cfg.max_batch_requests);
+            if !fits {
+                break;
+            }
+            let req = self.queue.pop_front().expect("front exists");
+            self.queued_keys -= req.len();
+            total_keys += req.len();
+            requests.push(req);
+        }
+        Batch {
+            requests,
+            total_keys,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SortJob;
+
+    fn cfg() -> BatchConfig {
+        BatchConfig {
+            max_batch_keys: 100,
+            max_batch_requests: 4,
+            max_wait_ms: 10,
+            queue_capacity: 8,
+            max_queued_keys: 1000,
+        }
+    }
+
+    type OutcomeRx =
+        std::sync::mpsc::Receiver<crate::error::Result<crate::coordinator::request::SortOutcome>>;
+
+    fn req(id: u64, n: usize, at: Instant) -> (PendingRequest, OutcomeRx) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (
+            PendingRequest {
+                id,
+                job: SortJob::new(vec![0; n]),
+                admitted_at: at,
+                respond_to: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn waits_for_company_until_deadline() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let (r, _rx) = req(1, 10, t0);
+        b.admit(r).unwrap();
+        // Not ready immediately…
+        assert!(b.poll(t0).is_none());
+        assert!(b.poll(t0 + Duration::from_millis(5)).is_none());
+        // …ready once the wait expires.
+        let batch = b.poll(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.queued_requests(), 0);
+    }
+
+    #[test]
+    fn key_budget_triggers_immediately() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let (r1, _x1) = req(1, 60, t0);
+        let (r2, _x2) = req(2, 50, t0);
+        b.admit(r1).unwrap();
+        b.admit(r2).unwrap();
+        // 60 + 50 ≥ 100 → ready without waiting; but the second request
+        // doesn't fit the key budget, so the batch carries only the first.
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.total_keys, 60);
+        // Remainder stays queued.
+        assert_eq!(b.queued_requests(), 1);
+        assert_eq!(b.queued_keys(), 50);
+    }
+
+    #[test]
+    fn request_budget_triggers() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i, 1, t0);
+            b.admit(r).unwrap();
+            rxs.push(rx);
+        }
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.total_keys, 4);
+    }
+
+    #[test]
+    fn oversized_request_forms_own_batch() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let (r, _x) = req(1, 500, t0);
+        b.admit(r).unwrap();
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.total_keys, 500);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i, 10, t0);
+            b.admit(r).unwrap();
+            rxs.push(rx);
+        }
+        let batch = b.poll(t0 + Duration::from_millis(10)).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn backpressure_on_request_count() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let (r, rx) = req(i, 1, t0);
+            b.admit(r).unwrap();
+            rxs.push(rx);
+        }
+        let (r, _x) = req(99, 1, t0);
+        let err = b.admit(r).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)));
+        assert!(err.to_string().contains("backpressure"));
+    }
+
+    #[test]
+    fn backpressure_on_key_budget() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let (r1, _x1) = req(1, 900, t0);
+        b.admit(r1).unwrap();
+        let (r2, _x2) = req(2, 200, t0);
+        assert!(b.admit(r2).is_err());
+        // But an oversized request is admitted when the queue is empty.
+        let mut b2 = Batcher::new(cfg());
+        let (big, _x3) = req(3, 5000, t0);
+        b2.admit(big).unwrap();
+    }
+
+    #[test]
+    fn drain_takes_everything_within_budget() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i, 10, t0);
+            b.admit(r).unwrap();
+            rxs.push(rx);
+        }
+        let batch = b.drain().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(b.drain().is_none());
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = Batcher::new(cfg());
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        let (r, _x) = req(1, 1, t0);
+        b.admit(r).unwrap();
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(10));
+    }
+}

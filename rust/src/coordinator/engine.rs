@@ -1,0 +1,266 @@
+//! Engine abstraction: the three backends a batch can be dispatched to.
+//!
+//! * [`NativeEngine`]-backed — the real multicore path (production).
+//! * Sim-backed — Algorithm 1 over a simulated Table-1 GPU (capacity
+//!   limits and the traffic ledger apply; used by experiments and for
+//!   failure-injection tests via tiny simulated devices).
+//! * PJRT-backed — the AOT JAX/Pallas pipeline via the XLA CPU client
+//!   (fixed shapes from `artifacts/manifest.json`).
+
+use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
+use crate::config::{EngineKind, ServiceConfig};
+use crate::error::{Error, Result};
+use crate::exec::NativeEngine;
+use crate::runtime::PjrtRuntime;
+use crate::sim::{GpuSim, GpuSpec};
+use crate::util::pool;
+use crate::Key;
+
+/// A sort backend able to process a batch of independent jobs.
+///
+/// One engine instance is owned by the service's single engine thread —
+/// it is *constructed on that thread* (see `SortService::start`) — so
+/// implementations may hold non-`Send`/non-`Sync` state (the PJRT
+/// client's `Rc` internals in particular).
+pub trait SortEngine {
+    /// Which configuration enum this engine realizes.
+    fn kind(&self) -> EngineKind;
+
+    /// Sort every job of the batch; one result per job, order preserved.
+    /// Jobs fail individually (e.g. a simulated OOM) without failing the
+    /// batch.
+    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>>;
+
+    /// Largest single job this engine accepts, if bounded.
+    fn max_job_keys(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Native multicore backend: jobs in a batch run concurrently on the
+/// virtual-SM pool, each internally parallel.
+pub struct NativeSortEngine {
+    engine: NativeEngine,
+}
+
+impl NativeSortEngine {
+    /// Build from config.
+    pub fn new(cfg: &ServiceConfig) -> Result<Self> {
+        Ok(NativeSortEngine {
+            engine: NativeEngine::new(cfg.native)?,
+        })
+    }
+
+    /// Access the inner engine (reports, tests).
+    pub fn inner(&self) -> &NativeEngine {
+        &self.engine
+    }
+}
+
+impl SortEngine for NativeSortEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Native
+    }
+
+    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+        // Small jobs run in parallel with each other (dynamic queue —
+        // job sizes vary); the engine parallelizes internally for large
+        // ones, which land in their own batches.
+        let engine = &self.engine;
+        pool::parallel_map(jobs, engine.workers(), |mut keys| {
+            engine.sort(&mut keys);
+            Ok(keys)
+        })
+    }
+}
+
+/// Simulated-GPU backend: Algorithm 1 with full traffic accounting and
+/// the device's memory ceiling.
+pub struct SimSortEngine {
+    spec: GpuSpec,
+    sorter: BucketSort,
+}
+
+impl SimSortEngine {
+    /// Build from config.
+    pub fn new(cfg: &ServiceConfig) -> Result<Self> {
+        Ok(SimSortEngine {
+            spec: cfg.device.spec(),
+            sorter: BucketSort::try_new(cfg.sort)?,
+        })
+    }
+
+    /// Build directly from a spec and params (tests, experiments).
+    pub fn from_parts(spec: GpuSpec, params: BucketSortParams) -> Result<Self> {
+        Ok(SimSortEngine {
+            spec,
+            sorter: BucketSort::try_new(params)?,
+        })
+    }
+}
+
+impl SortEngine for SimSortEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sim
+    }
+
+    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+        jobs.into_iter()
+            .map(|mut keys| {
+                let mut sim = GpuSim::new(self.spec.clone());
+                self.sorter.sort(&mut keys, &mut sim)?;
+                Ok(keys)
+            })
+            .collect()
+    }
+
+    fn max_job_keys(&self) -> Option<usize> {
+        Some(self.spec.max_sortable_keys())
+    }
+}
+
+/// PJRT backend: the AOT-compiled fixed-shape pipeline.
+pub struct PjrtSortEngine {
+    runtime: PjrtRuntime,
+}
+
+impl PjrtSortEngine {
+    /// Load artifacts and warm the executable cache.
+    pub fn new(cfg: &ServiceConfig) -> Result<Self> {
+        let mut runtime = PjrtRuntime::new(cfg.artifacts_dir.clone())?;
+        runtime.warm_up()?;
+        Ok(PjrtSortEngine { runtime })
+    }
+
+    /// The underlying runtime.
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+}
+
+impl SortEngine for PjrtSortEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Pjrt
+    }
+
+    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+        jobs.into_iter()
+            .map(|keys| self.runtime.sort(&keys).map(|(sorted, _cap)| sorted))
+            .collect()
+    }
+
+    fn max_job_keys(&self) -> Option<usize> {
+        Some(self.runtime.manifest().max_sort_capacity())
+    }
+}
+
+/// Build the engine selected by `cfg.engine`.
+pub fn build_engine(cfg: &ServiceConfig) -> Result<Box<dyn SortEngine>> {
+    match cfg.engine {
+        EngineKind::Native => Ok(Box::new(NativeSortEngine::new(cfg)?)),
+        EngineKind::Sim => Ok(Box::new(SimSortEngine::new(cfg)?)),
+        EngineKind::Pjrt => Ok(Box::new(PjrtSortEngine::new(cfg)?)),
+    }
+}
+
+/// Shared post-condition check used by the service's verify mode.
+pub fn verify_outcome(input: &[Key], output: &[Key]) -> Result<()> {
+    if !crate::is_sorted_permutation(input, output) {
+        return Err(Error::Coordinator(
+            "verification failed: output is not a sorted permutation of the input".into(),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuModel;
+
+    #[test]
+    fn native_engine_sorts_batches() {
+        let cfg = ServiceConfig::default();
+        let mut e = NativeSortEngine::new(&cfg).unwrap();
+        let jobs = vec![
+            vec![3u32, 1, 2],
+            vec![],
+            (0..10_000u32).rev().collect::<Vec<_>>(),
+        ];
+        let results = e.sort_batch(jobs.clone());
+        assert_eq!(results.len(), 3);
+        for (inp, res) in jobs.iter().zip(&results) {
+            let out = res.as_ref().unwrap();
+            assert!(crate::is_sorted_permutation(inp, out));
+        }
+        assert_eq!(e.kind(), EngineKind::Native);
+    }
+
+    #[test]
+    fn sim_engine_respects_capacity() {
+        let cfg = ServiceConfig {
+            engine: EngineKind::Sim,
+            device: GpuModel::Gtx260,
+            sort: BucketSortParams { tile: 256, s: 16 },
+            ..Default::default()
+        };
+        let mut e = SimSortEngine::new(&cfg).unwrap();
+        assert!(e.max_job_keys().unwrap() > 64 << 20);
+        let results = e.sort_batch(vec![vec![5u32, 4, 3, 2, 1]]);
+        assert_eq!(results[0].as_ref().unwrap(), &vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn sim_engine_oom_fails_job_not_batch() {
+        // A too-large job fails with OOM while its batch-mates succeed.
+        let mut e = SimSortEngine::from_parts(
+            GpuModel::Gtx260.spec(),
+            BucketSortParams { tile: 256, s: 16 },
+        )
+        .unwrap();
+        let big = vec![1u32; 130 << 20 >> 2]; // ~130M keys? keep it analytic-light: use capacity check instead
+        drop(big);
+        // Use the analytic capacity: a job over max_sortable_keys OOMs.
+        // (Executing a >64M-key sort for real is too slow for a unit
+        // test, so fabricate with a tiny device instead.)
+        let tiny = GpuSpec {
+            name: "tiny".into(),
+            global_memory_bytes: 1 << 20, // 1 MB
+            ..GpuModel::Gtx260.spec()
+        };
+        let mut e_tiny =
+            SimSortEngine::from_parts(tiny, BucketSortParams { tile: 256, s: 16 }).unwrap();
+        let jobs = vec![vec![2u32, 1], vec![0u32; 200_000]];
+        let results = e_tiny.sort_batch(jobs);
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().unwrap_err();
+        assert!(err.is_oom(), "{err}");
+        let _ = e.sort_batch(vec![]);
+    }
+
+    #[test]
+    fn verify_catches_corruption() {
+        assert!(verify_outcome(&[2, 1], &[1, 2]).is_ok());
+        assert!(verify_outcome(&[2, 1], &[1, 3]).is_err());
+        assert!(verify_outcome(&[2, 1], &[2, 1]).is_err());
+    }
+
+    #[test]
+    fn build_engine_dispatches() {
+        let native = build_engine(&ServiceConfig::default()).unwrap();
+        assert_eq!(native.kind(), EngineKind::Native);
+        let sim = build_engine(&ServiceConfig {
+            engine: EngineKind::Sim,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(sim.kind(), EngineKind::Sim);
+        // PJRT without artifacts → manifest error.
+        let pjrt = build_engine(&ServiceConfig {
+            engine: EngineKind::Pjrt,
+            artifacts_dir: "/nonexistent".into(),
+            ..Default::default()
+        });
+        assert!(pjrt.is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Request/response types of the sort service.
+
+use crate::config::EngineKind;
+use crate::Key;
+use std::time::Instant;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// A sort job as submitted by a client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SortJob {
+    /// The keys to sort.
+    pub keys: Vec<Key>,
+    /// Optional client-side tag echoed back in the response (workload
+    /// name, tenant, …).
+    pub tag: Option<String>,
+}
+
+impl SortJob {
+    /// A job with no tag.
+    pub fn new(keys: Vec<Key>) -> Self {
+        SortJob { keys, tag: None }
+    }
+
+    /// A tagged job.
+    pub fn tagged(keys: Vec<Key>, tag: impl Into<String>) -> Self {
+        SortJob {
+            keys,
+            tag: Some(tag.into()),
+        }
+    }
+}
+
+/// A completed sort.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SortOutcome {
+    /// Request id assigned by the service.
+    pub id: RequestId,
+    /// The sorted keys.
+    pub keys: Vec<Key>,
+    /// Echoed job tag.
+    pub tag: Option<String>,
+    /// Which engine served it.
+    pub engine: EngineKind,
+    /// Requests that shared the engine dispatch with this one.
+    pub batch_size: usize,
+    /// Time spent queued before dispatch (ms).
+    pub queue_ms: f64,
+    /// Engine execution time for the whole batch (ms).
+    pub service_ms: f64,
+}
+
+/// Internal: a job admitted to the queue, waiting for batch assembly.
+#[derive(Debug)]
+pub struct PendingRequest {
+    /// Assigned id.
+    pub id: RequestId,
+    /// The job.
+    pub job: SortJob,
+    /// Admission timestamp (queue-delay accounting).
+    pub admitted_at: Instant,
+    /// Completion channel back to the caller (a one-shot: the service
+    /// sends exactly one outcome).
+    pub respond_to: std::sync::mpsc::Sender<crate::error::Result<SortOutcome>>,
+}
+
+impl PendingRequest {
+    /// Key count of the job.
+    pub fn len(&self) -> usize {
+        self.job.keys.len()
+    }
+
+    /// True when the job carries no keys.
+    pub fn is_empty(&self) -> bool {
+        self.job.keys.is_empty()
+    }
+}
+
+/// A group of requests dispatched to the engine together.
+#[derive(Debug)]
+pub struct Batch {
+    /// The member requests, in admission order.
+    pub requests: Vec<PendingRequest>,
+    /// Σ key counts.
+    pub total_keys: usize,
+}
+
+impl Batch {
+    /// Number of member requests.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True when the batch holds no requests.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_constructors() {
+        let j = SortJob::new(vec![3, 1, 2]);
+        assert!(j.tag.is_none());
+        let t = SortJob::tagged(vec![1], "bench");
+        assert_eq!(t.tag.as_deref(), Some("bench"));
+    }
+
+    #[test]
+    fn batch_accessors() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let b = Batch {
+            requests: vec![PendingRequest {
+                id: 1,
+                job: SortJob::new(vec![3, 2, 1]),
+                admitted_at: Instant::now(),
+                respond_to: tx,
+            }],
+            total_keys: 3,
+        };
+        assert_eq!(b.len(), 1);
+        assert!(!b.is_empty());
+        assert_eq!(b.requests[0].len(), 3);
+        assert!(!b.requests[0].is_empty());
+    }
+}

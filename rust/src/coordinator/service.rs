@@ -1,0 +1,346 @@
+//! The sort service: intake thread + dynamic batching + a dedicated
+//! engine thread, on std channels (the build is offline — no async
+//! runtime; a synchronous leader is also truer to the paper's
+//! single-device execution model).
+//!
+//! Topology (one leader, one engine — the paper's system is a single
+//! GPU; scale-out is per-process):
+//!
+//! ```text
+//!  SortClient ──mpsc──▶ intake thread ──(Batch)──▶ engine thread
+//!      ▲                   │ Batcher                  │ SortEngine
+//!      └──── per-request oneshot ◀── outcomes ────────┘
+//! ```
+//!
+//! * The **intake thread** owns the [`Batcher`]: admits requests (or
+//!   rejects with backpressure) and fires a batch when a budget fills or
+//!   the oldest request's wait expires (`recv_timeout` against the
+//!   batcher's deadline).
+//! * The **engine thread** owns the (possibly non-`Sync`) engine — the
+//!   PJRT client in particular — and executes batches serially, like a
+//!   GPU stream. Python is never involved: the PJRT engine runs
+//!   AOT-compiled artifacts.
+//! * Responses travel back through per-request channels, so callers
+//!   blocked on different requests never contend.
+
+use super::batcher::Batcher;
+use super::engine::{self, SortEngine};
+use super::request::{Batch, PendingRequest, SortJob, SortOutcome};
+use crate::config::ServiceConfig;
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+enum ClientMsg {
+    Submit(PendingRequest),
+    Shutdown(mpsc::Sender<()>),
+}
+
+/// Handle to a running sort service. Cloneable; [`SortClient::shutdown`]
+/// (or dropping every clone) stops the service after draining.
+#[derive(Clone, Debug)]
+pub struct SortClient {
+    tx: mpsc::Sender<ClientMsg>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl SortClient {
+    /// Submit a job and block until its outcome arrives.
+    pub fn sort(&self, job: SortJob) -> Result<SortOutcome> {
+        let rx = self.submit(job)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("request dropped during shutdown".into()))?
+    }
+
+    /// Submit without blocking; returns the response channel.
+    pub fn submit(&self, job: SortJob) -> Result<Receiver<Result<SortOutcome>>> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = PendingRequest {
+            id,
+            job,
+            admitted_at: Instant::now(),
+            respond_to: tx,
+        };
+        self.tx
+            .send(ClientMsg::Submit(req))
+            .map_err(|_| Error::Coordinator("service stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Convenience: sort a plain key vector.
+    pub fn sort_keys(&self, keys: Vec<crate::Key>) -> Result<Vec<crate::Key>> {
+        Ok(self.sort(SortJob::new(keys))?.keys)
+    }
+
+    /// Snapshot of the service metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: drain queued work, stop both threads, return
+    /// the final metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if self.tx.send(ClientMsg::Shutdown(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+/// Service constructor namespace.
+pub struct SortService;
+
+impl SortService {
+    /// Start a service with the engine selected by `cfg`.
+    ///
+    /// The engine is constructed **on the engine thread** — PJRT state
+    /// is not `Send`, and a GPU context likewise belongs to the thread
+    /// that drives it. Construction failures are reported back here.
+    pub fn start(cfg: ServiceConfig) -> Result<SortClient> {
+        Self::start_with_factory(cfg, engine::build_engine)
+    }
+
+    /// Start with an explicit engine (tests inject mocks/tiny devices).
+    pub fn start_with_engine<E: SortEngine + Send + 'static>(
+        cfg: ServiceConfig,
+        engine: E,
+    ) -> Result<SortClient> {
+        Self::start_with_factory(cfg, move |_| Ok(Box::new(engine) as Box<dyn SortEngine>))
+    }
+
+    /// Start with an engine factory that runs on the engine thread.
+    pub fn start_with_factory(
+        cfg: ServiceConfig,
+        factory: impl FnOnce(&ServiceConfig) -> Result<Box<dyn SortEngine>> + Send + 'static,
+    ) -> Result<SortClient> {
+        cfg.validate()?;
+        let metrics = Arc::new(Metrics::new());
+        let (client_tx, client_rx) = mpsc::channel::<ClientMsg>();
+        // Bounded: at most 2 batches in flight keeps queue-delay
+        // accounting honest (like a depth-2 GPU stream).
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(2);
+
+        let engine_metrics = metrics.clone();
+        let verify = cfg.verify;
+        let engine_cfg = cfg.clone();
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let engine_in_flight = in_flight.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("gbs-engine".into())
+            .spawn(move || match factory(&engine_cfg) {
+                Ok(engine) => {
+                    let _ = ready_tx.send(Ok(()));
+                    engine_loop(engine, batch_rx, engine_metrics, verify, engine_in_flight);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn engine thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("engine thread died during construction".into()))??;
+
+        let intake_metrics = metrics.clone();
+        let batcher = Batcher::new(cfg.batch);
+        std::thread::Builder::new()
+            .name("gbs-intake".into())
+            .spawn(move || intake_loop(client_rx, batch_tx, batcher, intake_metrics, in_flight))
+            .map_err(|e| Error::Coordinator(format!("spawn intake thread: {e}")))?;
+
+        Ok(SortClient {
+            tx: client_tx,
+            metrics,
+            next_id: Arc::new(AtomicU64::new(1)),
+        })
+    }
+}
+
+fn intake_loop(
+    client_rx: Receiver<ClientMsg>,
+    batch_tx: SyncSender<Batch>,
+    mut batcher: Batcher,
+    metrics: Arc<Metrics>,
+    in_flight: Arc<AtomicU64>,
+) {
+    let mut shutdown_ack: Option<mpsc::Sender<()>> = None;
+    'main: loop {
+        // Fire ready batches, without blocking on a full engine channel:
+        // a blocked intake could not run admission control, and queued
+        // requests would silently bypass backpressure.
+        //
+        // §Perf: when the engine is idle there is nothing to gain from
+        // waiting out the batching window — company can only arrive
+        // while the engine is busy anyway — so drain immediately. This
+        // removes the full max_wait_ms from unloaded-path latency.
+        let mut engine_full = false;
+        loop {
+            let engine_idle = in_flight.load(Ordering::SeqCst) == 0;
+            let batch = if engine_idle {
+                batcher.drain()
+            } else {
+                batcher.poll(Instant::now())
+            };
+            let Some(batch) = batch else { break };
+            in_flight.fetch_add(1, Ordering::SeqCst);
+            match batch_tx.try_send(batch) {
+                Ok(()) => {
+                    metrics.incr("batches_dispatched", 1);
+                }
+                Err(TrySendError::Full(batch)) => {
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    batcher.restore_front(batch);
+                    engine_full = true;
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    fail_all(&mut batcher, "engine stopped");
+                    break 'main;
+                }
+            }
+        }
+
+        let deadline = if engine_full {
+            // Engine busy: check back shortly (it has no way to signal
+            // a freed slot through the channel).
+            Some(Instant::now() + std::time::Duration::from_millis(1))
+        } else {
+            batcher.next_deadline()
+        };
+        let msg = match deadline {
+            Some(deadline) => {
+                let now = Instant::now();
+                if deadline <= now && !engine_full {
+                    continue; // poll again immediately
+                }
+                let wait = deadline.saturating_duration_since(now).max(std::time::Duration::from_micros(100));
+                match client_rx.recv_timeout(wait) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => None,
+                }
+            }
+            None => client_rx.recv().ok(),
+        };
+
+        match msg {
+            Some(ClientMsg::Submit(req)) => {
+                metrics.incr("requests_received", 1);
+                metrics.incr("keys_received", req.len() as u64);
+                if req.is_empty() {
+                    // Zero-key jobs complete immediately (no engine trip).
+                    let outcome = SortOutcome {
+                        id: req.id,
+                        keys: Vec::new(),
+                        tag: req.job.tag,
+                        engine: crate::config::EngineKind::Native,
+                        batch_size: 0,
+                        queue_ms: 0.0,
+                        service_ms: 0.0,
+                    };
+                    let _ = req.respond_to.send(Ok(outcome));
+                    continue;
+                }
+                if let Err(e) = batcher.can_admit(req.len()) {
+                    metrics.incr("requests_rejected", 1);
+                    let _ = req.respond_to.send(Err(e));
+                } else {
+                    batcher.admit(req).expect("can_admit checked");
+                }
+            }
+            Some(ClientMsg::Shutdown(ack)) => {
+                shutdown_ack = Some(ack);
+                break;
+            }
+            None => break, // all clients dropped
+        }
+    }
+    // Drain whatever is still queued.
+    while let Some(batch) = batcher.drain() {
+        metrics.incr("batches_dispatched", 1);
+        metrics.incr("batched_requests", batch.len() as u64);
+        if batch_tx.send(batch).is_err() {
+            fail_all(&mut batcher, "engine stopped");
+            break;
+        }
+    }
+    // Closing batch_tx stops the engine thread once it finishes queued
+    // batches; outcomes are still delivered through per-request channels.
+    drop(batch_tx);
+    if let Some(ack) = shutdown_ack {
+        let _ = ack.send(());
+    }
+}
+
+fn fail_all(batcher: &mut Batcher, why: &str) {
+    while let Some(batch) = batcher.drain() {
+        for req in batch.requests {
+            let _ = req
+                .respond_to
+                .send(Err(Error::Coordinator(why.to_string())));
+        }
+    }
+}
+
+fn engine_loop(
+    mut engine: Box<dyn SortEngine>,
+    batch_rx: Receiver<Batch>,
+    metrics: Arc<Metrics>,
+    verify: bool,
+    in_flight: Arc<AtomicU64>,
+) {
+    while let Ok(batch) = batch_rx.recv() {
+        let dispatched = Instant::now();
+        let batch_size = batch.len();
+        let mut reqs = batch.requests;
+        let jobs: Vec<Vec<crate::Key>> = reqs
+            .iter_mut()
+            .map(|r| std::mem::take(&mut r.job.keys))
+            .collect();
+        let inputs: Option<Vec<Vec<crate::Key>>> = verify.then(|| jobs.clone());
+        let results = engine.sort_batch(jobs);
+        debug_assert_eq!(results.len(), batch_size, "engine must answer every job");
+        // Mark the engine free *before* delivering outcomes: a caller
+        // woken by its response often submits immediately, and must see
+        // an idle engine (else it eats a full batching wait — §Perf).
+        in_flight.fetch_sub(1, Ordering::SeqCst);
+        let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
+        metrics.observe_ms("engine_batch", service_ms);
+
+        for (i, (req, result)) in reqs.into_iter().zip(results).enumerate() {
+            let queue_ms = dispatched
+                .saturating_duration_since(req.admitted_at)
+                .as_secs_f64()
+                * 1e3;
+            metrics.observe_ms("queue_delay", queue_ms);
+            let outcome = result.and_then(|keys| {
+                if let Some(inputs) = &inputs {
+                    engine::verify_outcome(&inputs[i], &keys)?;
+                }
+                metrics.incr("requests_completed", 1);
+                metrics.incr("keys_sorted", keys.len() as u64);
+                Ok(SortOutcome {
+                    id: req.id,
+                    keys,
+                    tag: req.job.tag,
+                    engine: engine.kind(),
+                    batch_size,
+                    queue_ms,
+                    service_ms,
+                })
+            });
+            if outcome.is_err() {
+                metrics.incr("requests_failed", 1);
+            }
+            let _ = req.respond_to.send(outcome);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Crate-wide error type.
+//!
+//! The library keeps a concrete enum (rather than `eyre::Report`) so that
+//! callers — the coordinator in particular — can match on failure classes:
+//! a simulated out-of-memory must be routed differently (reject the
+//! request) than an artifact-loading failure (fall back to the native
+//! engine).
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure classes of the library.
+#[derive(Debug)]
+pub enum Error {
+    /// The simulated device ran out of global memory — mirrors the memory
+    /// ceilings of the paper's Figures 6 & 7 (e.g. Thrust Merge failing
+    /// beyond 16M items).
+    DeviceOom {
+        /// Bytes requested by the failing allocation.
+        requested: usize,
+        /// Bytes still available on the device.
+        available: usize,
+        /// Human-readable device name (e.g. "GTX 285 (2 GB)").
+        device: String,
+    },
+    /// Invalid algorithm parameters (e.g. sample count exceeding the tile
+    /// size, non-power-of-two tile).
+    InvalidParams(String),
+    /// An input failed validation (e.g. the fixed-shape pipeline received
+    /// a key equal to the padding sentinel).
+    InvalidInput(String),
+    /// PJRT / XLA runtime failure (artifact missing, compile error,
+    /// execution error).
+    Runtime(String),
+    /// Artifact manifest problems (missing file, shape mismatch, bad
+    /// JSON).
+    Manifest(String),
+    /// Coordinator-level failure (queue closed, request cancelled,
+    /// backpressure rejection).
+    Coordinator(String),
+    /// Configuration file problems.
+    Config(String),
+    /// Wrapped I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::DeviceOom {
+                requested,
+                available,
+                device,
+            } => write!(
+                f,
+                "device OOM on {device}: requested {requested} B, {available} B available"
+            ),
+            Error::InvalidParams(m) => write!(f, "invalid parameters: {m}"),
+            Error::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// True when the failure is a (simulated or real) memory-capacity
+    /// rejection — the coordinator uses this to classify request failures.
+    pub fn is_oom(&self) -> bool {
+        matches!(self, Error::DeviceOom { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::DeviceOom {
+            requested: 100,
+            available: 10,
+            device: "GTX 260".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("GTX 260"));
+        assert!(s.contains("100"));
+        assert!(e.is_oom());
+        assert!(!Error::InvalidParams("x".into()).is_oom());
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("nope"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Native execution engine: the "virtual SM" pool.
+//!
+//! While [`crate::sim`] reproduces the paper's *GPU* performance
+//! figures, this module is the *real* high-performance path of the
+//! library: Algorithm 1 executed on host cores, one rayon worker
+//! standing in for one SM with a scratchpad-sized chunk. This is what
+//! the coordinator's `native` engine serves requests with, and the
+//! subject of the §Perf optimization pass.
+
+pub mod native;
+
+pub use native::{NativeEngine, NativeParams, NativeReport, PhaseTimes};

@@ -1,0 +1,365 @@
+//! Algorithm 1 on host cores — the deterministic sample sort as a real
+//! multicore parallel sort (the PSRS heritage of the method, Shi &
+//! Schaeffer [15], brought back to the CPU).
+//!
+//! Mapping from the paper's GPU phases:
+//!
+//! | paper | here |
+//! |---|---|
+//! | Step 2: tile per SM in shared memory | chunk per worker, cache-resident sort |
+//! | Steps 3–5: regular sampling | identical (s per chunk → s−1 splitters) |
+//! | Step 6: parallel binary search | `partition_point` per chunk, in parallel |
+//! | Step 7: column-major prefix | identical (small, sequential) |
+//! | Step 8: coalesced relocation | per-bucket parallel gather into disjoint output slices |
+//! | Step 9: sublist sort | per-bucket parallel sort |
+//!
+//! The determinism property carries over: bucket sizes are guaranteed
+//! (≤ 2n/s + chunking slack), so the critical path is balanced without
+//! work stealing.
+
+use crate::error::Result;
+use crate::util::pool;
+use crate::Key;
+use std::time::Instant;
+
+/// Parameters of the native engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NativeParams {
+    /// Worker ("virtual SM") count; 0 = logical cores.
+    pub workers: usize,
+    /// Samples per chunk (the paper's s); the splitter count is
+    /// `buckets − 1` with `buckets = max(workers·bucket_factor, 2)`.
+    pub samples_per_chunk: usize,
+    /// Buckets per worker — >1 gives the tail of the bucket-sort phase
+    /// slack to balance.
+    pub bucket_factor: usize,
+    /// Below this size, fall back to a single-threaded sort (parallel
+    /// setup costs more than it saves).
+    pub sequential_cutoff: usize,
+}
+
+impl Default for NativeParams {
+    fn default() -> Self {
+        NativeParams {
+            workers: 0,
+            samples_per_chunk: 64,
+            bucket_factor: 4,
+            sequential_cutoff: 1 << 15,
+        }
+    }
+}
+
+/// Wall-clock phase breakdown of one native sort (the CPU analogue of
+/// Figure 5).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    /// Steps 1–2: chunk local sorts.
+    pub local_sort_ms: f64,
+    /// Steps 3–5: sampling + splitter selection.
+    pub sampling_ms: f64,
+    /// Steps 6–7: boundaries + prefix layout.
+    pub indexing_ms: f64,
+    /// Step 8: relocation.
+    pub relocation_ms: f64,
+    /// Step 9: bucket sorts.
+    pub bucket_sort_ms: f64,
+}
+
+impl PhaseTimes {
+    /// Sum of all phases.
+    pub fn total_ms(&self) -> f64 {
+        self.local_sort_ms
+            + self.sampling_ms
+            + self.indexing_ms
+            + self.relocation_ms
+            + self.bucket_sort_ms
+    }
+}
+
+/// Report of one native sort.
+#[derive(Debug, Clone)]
+pub struct NativeReport {
+    /// Keys sorted.
+    pub n: usize,
+    /// Chunks (virtual SMs) used.
+    pub chunks: usize,
+    /// Buckets formed.
+    pub buckets: usize,
+    /// Phase breakdown.
+    pub phases: PhaseTimes,
+    /// End-to-end wall time (≥ phase sum; includes glue).
+    pub wall_ms: f64,
+    /// Largest bucket (balance check).
+    pub max_bucket: usize,
+}
+
+impl NativeReport {
+    /// Throughput in million keys per second.
+    pub fn rate_mkeys_s(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.n as f64 / self.wall_ms / 1e3
+    }
+}
+
+/// The native multicore engine.
+#[derive(Debug)]
+pub struct NativeEngine {
+    params: NativeParams,
+    workers: usize,
+}
+
+impl NativeEngine {
+    /// Build an engine.
+    pub fn new(params: NativeParams) -> Result<Self> {
+        let workers = if params.workers == 0 {
+            pool::default_workers()
+        } else {
+            params.workers
+        };
+        Ok(NativeEngine { params, workers })
+    }
+
+    /// The parameters in use.
+    pub fn params(&self) -> &NativeParams {
+        &self.params
+    }
+
+    /// Worker (virtual SM) count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Sort `keys` in place.
+    pub fn sort(&self, keys: &mut [Key]) -> NativeReport {
+        let n = keys.len();
+        let start = Instant::now();
+        // With one worker the PSRS machinery is pure overhead (an extra
+        // full copy + partition passes) — go straight to the sequential
+        // sort (§Perf).
+        if n <= self.params.sequential_cutoff || self.workers <= 1 {
+            let t0 = Instant::now();
+            keys.sort_unstable();
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            return NativeReport {
+                n,
+                chunks: 1,
+                buckets: 1,
+                phases: PhaseTimes {
+                    local_sort_ms: ms,
+                    ..Default::default()
+                },
+                wall_ms: start.elapsed().as_secs_f64() * 1e3,
+                max_bucket: n,
+            };
+        }
+        let report = self.sort_parallel(keys);
+        NativeReport {
+            wall_ms: start.elapsed().as_secs_f64() * 1e3,
+            ..report
+        }
+    }
+
+    fn sort_parallel(&self, keys: &mut [Key]) -> NativeReport {
+        let n = keys.len();
+        let workers = self.workers;
+        let chunks = workers;
+        let chunk_len = n.div_ceil(chunks);
+        let s = self.params.samples_per_chunk.max(2);
+        let buckets = (workers * self.params.bucket_factor).max(2);
+        let mut phases = PhaseTimes::default();
+
+        // Steps 1–2: parallel chunk sorts.
+        let t0 = Instant::now();
+        pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| c.sort_unstable());
+        phases.local_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Steps 3–5: s regular samples per chunk → buckets−1 splitters.
+        // (Sampling touches only s·m keys — sequential is cheapest.)
+        let t0 = Instant::now();
+        let mut samples: Vec<Key> = keys
+            .chunks(chunk_len)
+            .flat_map(|c| {
+                let stride = (c.len() / s).max(1);
+                (0..s).filter_map(move |p| c.get(((p + 1) * stride).saturating_sub(1)).copied())
+            })
+            .collect();
+        samples.sort_unstable();
+        let splitters: Vec<Key> = (1..buckets)
+            .map(|j| samples[(j * samples.len() / buckets).min(samples.len() - 1)])
+            .collect();
+        phases.sampling_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Steps 6–7: per-chunk boundaries, then the column-major prefix.
+        let t0 = Instant::now();
+        let read_keys: &[Key] = keys;
+        let chunk_refs: Vec<&[Key]> = read_keys.chunks(chunk_len).collect();
+        let chunk_bounds: Vec<Vec<usize>> = pool::parallel_map(chunk_refs, workers, |c| {
+            let mut b = Vec::with_capacity(buckets + 1);
+            b.push(0);
+            for &sp in &splitters {
+                b.push(c.partition_point(|&x| x < sp));
+            }
+            b.push(c.len());
+            b
+        });
+        let m = chunk_bounds.len();
+        // loc[i][j] = destination of chunk i's bucket-j segment.
+        let mut bucket_start = vec![0usize; buckets + 1];
+        for j in 0..buckets {
+            let mut total = 0usize;
+            for cb in &chunk_bounds {
+                total += cb[j + 1] - cb[j];
+            }
+            bucket_start[j + 1] = bucket_start[j] + total;
+        }
+        let mut loc = vec![0usize; m * buckets];
+        for j in 0..buckets {
+            let mut run = bucket_start[j];
+            for i in 0..m {
+                loc[i * buckets + j] = run;
+                run += chunk_bounds[i][j + 1] - chunk_bounds[i][j];
+            }
+        }
+        phases.indexing_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Step 8: relocation — parallel per *bucket*, each bucket
+        // gathering its segments from every chunk into a disjoint
+        // output slice.
+        let t0 = Instant::now();
+        let mut out = vec![0 as Key; n];
+        {
+            let mut slices: Vec<&mut [Key]> = Vec::with_capacity(buckets);
+            let mut rest: &mut [Key] = &mut out;
+            for j in 0..buckets {
+                let len = bucket_start[j + 1] - bucket_start[j];
+                let (head, tail) = rest.split_at_mut(len);
+                slices.push(head);
+                rest = tail;
+            }
+            let src: &[Key] = keys;
+            pool::parallel_slices_mut(slices, workers, |j, dst| {
+                let mut off = 0usize;
+                for (i, cb) in chunk_bounds.iter().enumerate() {
+                    let (lo, hi) = (cb[j], cb[j + 1]);
+                    let c_start = i * chunk_len;
+                    let c_end = (c_start + chunk_len).min(n);
+                    let seg = &src[c_start..c_end][lo..hi];
+                    dst[off..off + seg.len()].copy_from_slice(seg);
+                    off += seg.len();
+                }
+                debug_assert_eq!(off, dst.len());
+            });
+        }
+        phases.relocation_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Step 9: parallel bucket sorts over disjoint output slices.
+        let t0 = Instant::now();
+        {
+            let mut slices: Vec<&mut [Key]> = Vec::with_capacity(buckets);
+            let mut rest: &mut [Key] = &mut out;
+            for j in 0..buckets {
+                let len = bucket_start[j + 1] - bucket_start[j];
+                let (head, tail) = rest.split_at_mut(len);
+                slices.push(head);
+                rest = tail;
+            }
+            pool::parallel_slices_mut(slices, workers, |_, b| b.sort_unstable());
+        }
+        phases.bucket_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let max_bucket = (0..buckets)
+            .map(|j| bucket_start[j + 1] - bucket_start[j])
+            .max()
+            .unwrap_or(0);
+        keys.copy_from_slice(&out);
+
+        NativeReport {
+            n,
+            chunks: m,
+            buckets,
+            phases,
+            wall_ms: 0.0, // filled by caller
+            max_bucket,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{is_sorted, is_sorted_permutation};
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new(NativeParams {
+            workers: 4,
+            sequential_cutoff: 1 << 10,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn sorts_various_sizes() {
+        let e = engine();
+        for n in [0usize, 1, 100, 1 << 10, (1 << 10) + 1, 100_000, 1_000_003] {
+            let input: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect();
+            let mut keys = input.clone();
+            let r = e.sort(&mut keys);
+            assert!(is_sorted_permutation(&input, &keys), "n={n}");
+            assert_eq!(r.n, n);
+        }
+    }
+
+    #[test]
+    fn sorts_adversarial_inputs() {
+        let e = engine();
+        for input in [
+            vec![7u32; 200_000],
+            (0..200_000u32).collect(),
+            (0..200_000u32).rev().collect(),
+            (0..200_000u32).map(|x| x % 3).collect(),
+        ] {
+            let mut keys = input.clone();
+            e.sort(&mut keys);
+            assert!(is_sorted_permutation(&input, &keys));
+        }
+    }
+
+    #[test]
+    fn small_inputs_use_sequential_path() {
+        let e = engine();
+        let mut keys: Vec<Key> = (0..512u32).rev().collect();
+        let r = e.sort(&mut keys);
+        assert_eq!(r.chunks, 1);
+        assert!(is_sorted(&keys));
+    }
+
+    #[test]
+    fn phase_times_populated() {
+        let e = engine();
+        let mut keys: Vec<Key> = (0..500_000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        let r = e.sort(&mut keys);
+        assert!(r.phases.local_sort_ms > 0.0);
+        assert!(r.phases.bucket_sort_ms > 0.0);
+        assert!(r.wall_ms >= r.phases.total_ms() * 0.5);
+        assert!(r.rate_mkeys_s() > 0.0);
+        assert!(r.buckets >= 2);
+    }
+
+    #[test]
+    fn buckets_reasonably_balanced_on_uniform() {
+        let e = engine();
+        let input = crate::workload::Distribution::Uniform.generate(1 << 20, 11);
+        let mut keys = input.clone();
+        let r = e.sort(&mut keys);
+        // Deterministic guarantee (plus chunk slack): max ≤ ~2·n/buckets.
+        let bound = 2 * (1 << 20) / r.buckets + (1 << 20) / r.chunks / 8;
+        assert!(
+            r.max_bucket <= bound,
+            "max bucket {} exceeds bound {bound}",
+            r.max_bucket
+        );
+    }
+}

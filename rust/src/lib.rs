@@ -1,0 +1,94 @@
+//! # GPU Bucket Sort — Deterministic Sample Sort For GPUs
+//!
+//! A full reproduction of *Dehne & Zaboli, "Deterministic Sample Sort For
+//! GPUs" (2010)* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the sort *service*: request router, dynamic
+//!   batcher, phase scheduler over a pool of "virtual SMs", a PJRT runtime
+//!   that executes AOT-compiled JAX/Pallas artifacts, a GPU cost-model
+//!   simulator calibrated to the paper's Table 1 hardware, native
+//!   implementations of GPU Bucket Sort and all the paper's baselines
+//!   (randomized sample sort, Thrust Merge, radix), the six input
+//!   distributions of Leischner et al., and the benchmark harness that
+//!   regenerates every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — Algorithm 1 as a jitted JAX
+//!   pipeline, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (tile bitonic sort, bucket ranks, prefix sums, relocation).
+//!
+//! Python never runs on the request path: `make artifacts` emits
+//! `artifacts/*.hlo.txt` once; the rust binary is then self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+//! use gpu_bucket_sort::sim::{GpuSim, GpuModel};
+//!
+//! let mut keys: Vec<u32> = (0..10_000u32).rev().collect();
+//! let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+//! let sorter = BucketSort::new(BucketSortParams::default());
+//! let report = sorter.sort(&mut keys, &mut sim).unwrap();
+//! assert!(keys.windows(2).all(|w| w[0] <= w[1]));
+//! assert!(report.total_estimated_ms(sim.spec()) > 0.0);
+//! ```
+
+pub mod algos;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod exec;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// The key type the paper sorts: 32-bit keys (the paper's experiments use
+/// 4-byte data items). `u32::MAX` is reserved as a padding sentinel by the
+/// fixed-shape (XLA) pipeline; the native pipelines have no such
+/// restriction.
+pub type Key = u32;
+
+/// Bytes per key, used throughout the memory/traffic accounting.
+pub const KEY_BYTES: usize = std::mem::size_of::<Key>();
+
+/// Check that a slice is sorted in non-decreasing order.
+pub fn is_sorted(keys: &[Key]) -> bool {
+    keys.windows(2).all(|w| w[0] <= w[1])
+}
+
+/// Verify `out` is a sorted permutation of `inp` (O(n log n), for tests
+/// and the service's optional self-check mode).
+pub fn is_sorted_permutation(inp: &[Key], out: &[Key]) -> bool {
+    if inp.len() != out.len() || !is_sorted(out) {
+        return false;
+    }
+    let mut a = inp.to_vec();
+    a.sort_unstable();
+    a == out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_detection() {
+        assert!(is_sorted(&[]));
+        assert!(is_sorted(&[1]));
+        assert!(is_sorted(&[1, 1, 2, 3]));
+        assert!(!is_sorted(&[2, 1]));
+    }
+
+    #[test]
+    fn sorted_permutation_detection() {
+        assert!(is_sorted_permutation(&[3, 1, 2], &[1, 2, 3]));
+        assert!(!is_sorted_permutation(&[3, 1, 2], &[1, 2, 4]));
+        assert!(!is_sorted_permutation(&[3, 1], &[1, 2, 3]));
+        assert!(!is_sorted_permutation(&[3, 1, 2], &[3, 1, 2]));
+    }
+}

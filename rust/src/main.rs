@@ -1,0 +1,341 @@
+//! `gbs` — the GPU Bucket Sort launcher.
+//!
+//! ```text
+//! gbs sort        one-shot sort (native / sim / pjrt engine, any algorithm)
+//! gbs serve       run the batched sort service under a synthetic load
+//! gbs experiment  regenerate the paper's tables and figures (CSV + console)
+//! gbs specs       print Table 1
+//! gbs config      print or validate a service config
+//! gbs artifacts   validate the AOT artifact set end-to-end
+//! ```
+//!
+//! Argument parsing is hand-rolled (the build is offline — no clap);
+//! every flag is `--name value`.
+
+use gpu_bucket_sort::algos::Algorithm;
+use gpu_bucket_sort::config::{EngineKind, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortJob, SortService};
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::runtime::PjrtRuntime;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{is_sorted_permutation, Key};
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "sort" => cmd_sort(&flags),
+        "serve" => cmd_serve(&flags),
+        "experiment" | "exp" => cmd_experiment(&flags),
+        "specs" => {
+            println!("{}", exp::table1().to_markdown());
+            Ok(())
+        }
+        "config" => cmd_config(&flags),
+        "artifacts" => cmd_artifacts(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?} (try `gbs help`)")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gbs — Deterministic Sample Sort for GPUs (Dehne & Zaboli 2010) reproduction
+
+USAGE: gbs <command> [--flag value ...]
+
+COMMANDS
+  sort        --n 32M [--dist uniform] [--algo gbs|rss|thrust|radix]
+              [--engine native|sim|pjrt] [--device gtx285] [--seed 1]
+              [--verify true]
+  serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
+              [--engine native] [--config file.json]
+  experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|all>
+              [--out results] [--fast true]
+  specs       print the paper's Table 1
+  config      [--file cfg.json] — print the (default or loaded) config
+  artifacts   [--dir artifacts] — load, compile and smoke-run every artifact"
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| format!("flag --{name} needs a value"))?;
+            flags.insert(name.to_string(), value.clone());
+            i += 2;
+        } else {
+            // bare word (subcommand argument)
+            flags.entry("_arg".into()).or_insert_with(|| a.clone());
+            i += 1;
+        }
+    }
+    Ok(flags)
+}
+
+/// Parse "32M", "512K", "1000000".
+fn parse_size(s: &str) -> Result<usize, String> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix(['M', 'm']) {
+        (p, 1usize << 20)
+    } else if let Some(p) = s.strip_suffix(['K', 'k']) {
+        (p, 1usize << 10)
+    } else {
+        (s, 1)
+    };
+    num.parse::<usize>()
+        .map(|v| v * mult)
+        .map_err(|e| format!("bad size {s:?}: {e}"))
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, name: &str, default: &'a str) -> &'a str {
+    flags.get(name).map(String::as_str).unwrap_or(default)
+}
+
+fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
+    let n = parse_size(flag(flags, "n", "1M"))?;
+    let dist = Distribution::parse(flag(flags, "dist", "uniform"))
+        .ok_or("unknown distribution")?;
+    let seed: u64 = flag(flags, "seed", "1").parse().map_err(|e| format!("{e}"))?;
+    let engine = EngineKind::parse(flag(flags, "engine", "native")).ok_or("unknown engine")?;
+    let verify = flag(flags, "verify", "true") == "true";
+
+    println!("generating {n} keys ({dist}) …");
+    let input = dist.generate(n, seed);
+
+    match engine {
+        EngineKind::Native => {
+            let e = NativeEngine::new(NativeParams::default()).map_err(|e| e.to_string())?;
+            let mut keys = input.clone();
+            let report = e.sort(&mut keys);
+            println!(
+                "native sort: {:.2} ms  ({:.1} Mkeys/s, {} workers, {} buckets)",
+                report.wall_ms,
+                report.rate_mkeys_s(),
+                e.workers(),
+                report.buckets
+            );
+            println!(
+                "  phases: local {:.2} | sampling {:.2} | indexing {:.2} | relocation {:.2} | buckets {:.2} ms",
+                report.phases.local_sort_ms,
+                report.phases.sampling_ms,
+                report.phases.indexing_ms,
+                report.phases.relocation_ms,
+                report.phases.bucket_sort_ms
+            );
+            check(&input, &keys, verify)?;
+        }
+        EngineKind::Sim => {
+            let device = GpuModel::parse(flag(flags, "device", "gtx285")).ok_or("unknown device")?;
+            let algo = Algorithm::parse(flag(flags, "algo", "gbs")).ok_or("unknown algorithm")?;
+            let mut keys = input.clone();
+            let mut sim = GpuSim::new(device.spec());
+            let t0 = Instant::now();
+            let est_ms = algo.run(&mut keys, &mut sim).map_err(|e| e.to_string())?;
+            println!(
+                "{algo} on simulated {device}: estimated {est_ms:.2} ms on-device \
+                 ({:.1} Mkeys/s), host execution {:.0} ms",
+                n as f64 / est_ms / 1e3,
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            println!(
+                "  ledger: {} launches, {:.1} MB effective global traffic, peak device mem {:.1} MB",
+                sim.ledger().kernel_count(),
+                sim.ledger().total().effective_global_bytes() as f64 / 1e6,
+                sim.peak_bytes() as f64 / 1e6
+            );
+            check(&input, &keys, verify)?;
+        }
+        EngineKind::Pjrt => {
+            let dir = flag(flags, "artifacts-dir", "artifacts");
+            let mut rt = PjrtRuntime::new(dir).map_err(|e| e.to_string())?;
+            let t0 = Instant::now();
+            let (sorted, cap) = rt.sort(&input).map_err(|e| e.to_string())?;
+            println!(
+                "pjrt sort via AOT artifact (capacity {cap}): {:.2} ms wall",
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            check(&input, &sorted, verify)?;
+        }
+    }
+    Ok(())
+}
+
+fn check(input: &[Key], output: &[Key], verify: bool) -> Result<(), String> {
+    if verify {
+        if is_sorted_permutation(input, output) {
+            println!("  verified: sorted permutation ✓");
+            Ok(())
+        } else {
+            Err("verification FAILED".into())
+        }
+    } else {
+        Ok(())
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = match flags.get("config") {
+        Some(path) => ServiceConfig::from_file(path).map_err(|e| e.to_string())?,
+        None => {
+            let mut cfg = ServiceConfig::default();
+            if let Some(e) = flags.get("engine") {
+                cfg.engine = EngineKind::parse(e).ok_or("unknown engine")?;
+            }
+            cfg
+        }
+    };
+    let requests: usize = flag(flags, "requests", "64").parse().map_err(|e| format!("{e}"))?;
+    let concurrency: usize = flag(flags, "concurrency", "8").parse().map_err(|e| format!("{e}"))?;
+    let n = parse_size(flag(flags, "n", "1M"))?;
+    let dist = Distribution::parse(flag(flags, "dist", "uniform")).ok_or("unknown distribution")?;
+
+    println!(
+        "service: engine={:?}, {requests} requests × {n} keys ({dist}), {concurrency} client threads",
+        cfg.engine
+    );
+    let client = SortService::start(cfg).map_err(|e| e.to_string())?;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..concurrency {
+            let client = client.clone();
+            scope.spawn(move || {
+                for r in 0..requests / concurrency.max(1) {
+                    let seed = (w * 1000 + r) as u64;
+                    let keys = dist.generate(n, seed);
+                    match client.sort(SortJob::new(keys)) {
+                        Ok(out) => {
+                            assert!(gpu_bucket_sort::is_sorted(&out.keys));
+                        }
+                        Err(e) => eprintln!("request failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = client.shutdown();
+    let sorted = snap.counters.get("keys_sorted").copied().unwrap_or(0);
+    println!(
+        "done in {wall:.2}s — {:.1} Mkeys/s aggregate\n{}",
+        sorted as f64 / wall / 1e6,
+        snap.summary()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(flags: &HashMap<String, String>) -> Result<(), String> {
+    let which = flags
+        .get("_arg")
+        .map(String::as_str)
+        .ok_or("which experiment? (table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|all)")?;
+    let out_dir = std::path::PathBuf::from(flag(flags, "out", "results"));
+    let fast = flag(flags, "fast", "false") == "true";
+
+    let max_n = if fast { 32 << 20 } else { 512 << 20 };
+    let ladder = exp::paper_n_ladder(max_n);
+    let ladder_256 = exp::paper_n_ladder(max_n.min(256 << 20));
+    let fig3_ns: Vec<usize> = if fast {
+        vec![32 << 20]
+    } else {
+        exp::FIG3_NS.to_vec()
+    };
+    let robustness_n = if fast { 1 << 17 } else { 1 << 20 };
+
+    let mut tables = Vec::new();
+    match which {
+        "table1" => tables.push(exp::table1()),
+        "fig3" => tables.push(exp::fig3_sample_size(&fig3_ns, &exp::FIG3_S_VALUES)),
+        "fig4" => tables.push(exp::fig4_devices(&ladder)),
+        "fig5" => tables.push(exp::fig5_step_breakdown(&ladder_256)),
+        "fig6" => tables.push(exp::fig6_gtx285(&ladder_256)),
+        "fig7" => tables.push(exp::fig7_tesla(&ladder)),
+        "rates" => tables.push(exp::sort_rate_series(&ladder, GpuModel::TeslaC1060)),
+        "robustness" => {
+            let (t, g, r) = exp::robustness(robustness_n, 7);
+            println!("spread (max/min − 1): deterministic {g:.4}, randomized {r:.4}");
+            tables.push(t);
+        }
+        "all" => {
+            tables.push(exp::table1());
+            tables.push(exp::fig3_sample_size(&fig3_ns, &exp::FIG3_S_VALUES));
+            tables.push(exp::fig4_devices(&ladder));
+            tables.push(exp::fig5_step_breakdown(&ladder_256));
+            tables.push(exp::fig6_gtx285(&ladder_256));
+            tables.push(exp::fig7_tesla(&ladder));
+            tables.push(exp::sort_rate_series(&ladder, GpuModel::TeslaC1060));
+            let (t, g, r) = exp::robustness(robustness_n, 7);
+            println!("robustness spread: deterministic {g:.4}, randomized {r:.4}");
+            tables.push(t);
+        }
+        other => return Err(format!("unknown experiment {other:?}")),
+    }
+    for t in &tables {
+        println!("{}", t.to_markdown());
+        let path = t.write_csv(&out_dir).map_err(|e| e.to_string())?;
+        println!("→ {}\n", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_config(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = match flags.get("file") {
+        Some(path) => ServiceConfig::from_file(path).map_err(|e| e.to_string())?,
+        None => ServiceConfig::default(),
+    };
+    println!("{}", cfg.to_json());
+    Ok(())
+}
+
+fn cmd_artifacts(flags: &HashMap<String, String>) -> Result<(), String> {
+    let dir = flag(flags, "dir", "artifacts");
+    let mut rt = PjrtRuntime::new(dir).map_err(|e| e.to_string())?;
+    println!(
+        "manifest: {} entries, platform {}",
+        rt.manifest().entries.len(),
+        rt.platform()
+    );
+    let compiled = rt.warm_up().map_err(|e| e.to_string())?;
+    println!("compiled {compiled} full-sort executables");
+    for n in [100usize, 4096] {
+        let keys = Distribution::Uniform.generate(n, 42);
+        let t0 = Instant::now();
+        let (sorted, cap) = rt.sort(&keys).map_err(|e| e.to_string())?;
+        if !is_sorted_permutation(&keys, &sorted) {
+            return Err(format!("artifact produced wrong output at n={n}"));
+        }
+        println!(
+            "  n={n}: ok via capacity {cap} in {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    println!("artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,215 @@
+//! Lightweight service metrics: counters and latency histograms.
+//!
+//! The coordinator records per-request and per-phase observations here;
+//! `gbs serve`'s shutdown summary and the examples print snapshots. No
+//! external metrics stack — the service must stay self-contained.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Number of power-of-two latency buckets (µs scale): bucket i counts
+/// observations in [2^i, 2^{i+1}) µs, up to ~17 minutes.
+const BUCKETS: usize = 30;
+
+/// A histogram over microsecond latencies with power-of-two buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Observation count.
+    pub count: u64,
+    /// Sum of observations (µs).
+    pub sum_us: u64,
+    /// Minimum observation (µs).
+    pub min_us: u64,
+    /// Maximum observation (µs).
+    pub max_us: u64,
+    /// Power-of-two buckets.
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+            buckets: vec![0; BUCKETS],
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation in microseconds.
+    pub fn observe_us(&mut self, us: u64) {
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx] += 1;
+    }
+
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64 / 1e3
+    }
+
+    /// Approximate quantile (bucket upper edge), q in [0,1].
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e3;
+            }
+        }
+        self.max_us as f64 / 1e3
+    }
+}
+
+/// A point-in-time copy of all metrics.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Monotonic counters.
+    pub counters: BTreeMap<String, u64>,
+    /// Latency histograms.
+    pub timers: BTreeMap<String, Histogram>,
+}
+
+impl MetricsSnapshot {
+    /// Render a compact human-readable summary.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, h) in &self.timers {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms\n",
+                h.count,
+                h.mean_ms(),
+                h.quantile_ms(0.5),
+                h.quantile_ms(0.99),
+                h.max_us as f64 / 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<MetricsSnapshot>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Add `delta` to counter `name`.
+    pub fn incr(&self, name: &str, delta: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Record a duration under timer `name`.
+    pub fn observe(&self, name: &str, duration: std::time::Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.timers
+            .entry(name.to_string())
+            .or_default()
+            .observe_us(duration.as_micros() as u64);
+    }
+
+    /// Record milliseconds under timer `name`.
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        self.observe(name, std::time::Duration::from_secs_f64(ms / 1e3));
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("requests", 1);
+        m.incr("requests", 2);
+        m.incr("errors", 1);
+        let s = m.snapshot();
+        assert_eq!(s.counters["requests"], 3);
+        assert_eq!(s.counters["errors"], 1);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for us in [100u64, 200, 400, 800, 1600] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count, 5);
+        assert_eq!(h.min_us, 100);
+        assert_eq!(h.max_us, 1600);
+        assert!((h.mean_ms() - 0.62).abs() < 1e-9);
+        // p50 falls in the bucket containing 400 µs.
+        let p50 = h.quantile_ms(0.5);
+        assert!(p50 >= 0.4 && p50 <= 1.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_edges() {
+        let mut h = Histogram::default();
+        h.observe_us(0); // clamps to bucket 0
+        h.observe_us(u64::MAX / 2); // clamps to last bucket
+        assert_eq!(h.count, 2);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn timers_via_registry() {
+        let m = Metrics::new();
+        m.observe("sort", Duration::from_millis(5));
+        m.observe("sort", Duration::from_millis(10));
+        m.observe_ms("sort", 20.0);
+        let s = m.snapshot();
+        assert_eq!(s.timers["sort"].count, 3);
+        assert!(s.summary().contains("sort"));
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("x", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().counters["x"], 8000);
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT client wrapper: load AOT-compiled HLO-text artifacts and execute
+//! them from the rust request path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo and DESIGN.md): HLO **text** is
+//! the interchange format — jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids. Flow per artifact:
+//!
+//! ```text
+//! HloModuleProto::from_text_file → XlaComputation::from_proto
+//!     → PjRtClient::compile → PjRtLoadedExecutable::execute
+//! ```
+//!
+//! Executables are compiled once and cached; execution marshals `u32`
+//! keys through untyped-byte literals (the xla crate's `NativeType`
+//! convenience constructors don't cover u32, the element type itself
+//! does).
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::error::{Error, Result};
+use crate::Key;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A PJRT CPU runtime holding compiled executables for the artifact set.
+///
+/// Not `Send`/`Sync` by design — the coordinator owns it from a single
+/// engine thread.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("dir", &self.dir)
+            .field("entries", &self.manifest.entries.len())
+            .field("compiled", &self.cache.len())
+            .finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(PjrtRuntime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string of the PJRT client (e.g. "cpu"). Useful for
+    /// diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `entry`.
+    fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&entry.name) {
+            let path = self.manifest.path_of(&self.dir, entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", entry.name)))?;
+            self.cache.insert(entry.name.clone(), exe);
+        }
+        Ok(&self.cache[&entry.name])
+    }
+
+    /// Eagerly compile every full-sort artifact (service warm-up).
+    pub fn warm_up(&mut self) -> Result<usize> {
+        let entries: Vec<ArtifactEntry> = self
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.kind == super::manifest::ArtifactKind::FullSort)
+            .cloned()
+            .collect();
+        for e in &entries {
+            self.executable(e)?;
+        }
+        Ok(entries.len())
+    }
+
+    /// Sort `keys` with the AOT pipeline: pick the smallest compiled
+    /// capacity ≥ n, pad with the `u32::MAX` sentinel, execute, unpad.
+    ///
+    /// Returns the sorted keys and the capacity used. Fails if the input
+    /// contains the sentinel (the fixed-shape pipeline cannot represent
+    /// it) or exceeds every compiled capacity.
+    pub fn sort(&mut self, keys: &[Key]) -> Result<(Vec<Key>, usize)> {
+        if keys.contains(&Key::MAX) {
+            return Err(Error::InvalidInput(
+                "u32::MAX is reserved as the padding sentinel of the AOT pipeline".into(),
+            ));
+        }
+        let entry = self
+            .manifest
+            .best_sort_entry(keys.len())
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no compiled artifact fits n={} (max capacity {})",
+                    keys.len(),
+                    self.manifest.max_sort_capacity()
+                ))
+            })?
+            .clone();
+        let n = keys.len();
+        let cap = entry.n;
+
+        let mut padded: Vec<Key> = Vec::with_capacity(cap);
+        padded.extend_from_slice(keys);
+        padded.resize(cap, Key::MAX);
+
+        let input = literal_from_u32(&padded)?;
+        let exe = self.executable(&entry)?;
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", entry.name)))?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime("executable returned no outputs".into()))?
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("unwrap tuple: {e}")))?;
+        let mut sorted = out
+            .to_vec::<u32>()
+            .map_err(|e| Error::Runtime(format!("read result: {e}")))?;
+        if sorted.len() != cap {
+            return Err(Error::Runtime(format!(
+                "artifact {} returned {} keys, expected {cap}",
+                entry.name,
+                sorted.len()
+            )));
+        }
+        sorted.truncate(n);
+        Ok((sorted, cap))
+    }
+}
+
+/// Build a rank-1 U32 literal from a key slice.
+fn literal_from_u32(data: &[Key]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U32, &[data.len()], bytes)
+        .map_err(|e| Error::Runtime(format!("build literal: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u32> = vec![5, 1, 4, 1, 5, 9, 2, 6];
+        let lit = literal_from_u32(&data).unwrap();
+        assert_eq!(lit.element_count(), 8);
+        assert_eq!(lit.to_vec::<u32>().unwrap(), data);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_manifest_error() {
+        let err = PjrtRuntime::new("/nonexistent/artifacts").unwrap_err();
+        assert!(matches!(err, Error::Manifest(_)), "{err}");
+    }
+}

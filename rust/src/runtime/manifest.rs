@@ -1,0 +1,343 @@
+//! The AOT artifact manifest.
+//!
+//! `make artifacts` (python/compile/aot.py) lowers the L2 JAX pipeline —
+//! which embeds the L1 Pallas kernels — to HLO text, one file per
+//! (variant, shape) configuration, and writes `manifest.json` describing
+//! them. XLA executables are shape-static, so the runtime picks the
+//! smallest compiled size that fits a request and pads with the
+//! `u32::MAX` sentinel.
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// What a compiled artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// The full Algorithm-1 pipeline: u32[n] → sorted u32[n].
+    FullSort,
+    /// Steps 1–3 only: u32[n] → (tiles sorted, local samples) — used by
+    /// the hybrid coordinator path.
+    TileSort,
+    /// Steps 6–8 only: (sorted tiles, splitters) → relocated buckets.
+    RankPrefix,
+}
+
+impl ArtifactKind {
+    /// Stable manifest name.
+    pub fn id(&self) -> &'static str {
+        match self {
+            ArtifactKind::FullSort => "full_sort",
+            ArtifactKind::TileSort => "tile_sort",
+            ArtifactKind::RankPrefix => "rank_prefix",
+        }
+    }
+
+    /// Parse a manifest name.
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "full_sort" => Some(ArtifactKind::FullSort),
+            "tile_sort" => Some(ArtifactKind::TileSort),
+            "rank_prefix" => Some(ArtifactKind::RankPrefix),
+            _ => None,
+        }
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Unique name, e.g. `sort_16384`.
+    pub name: String,
+    /// Variant.
+    pub kind: ArtifactKind,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Key count the executable was compiled for.
+    pub n: usize,
+    /// Tile size baked into the pipeline.
+    pub tile: usize,
+    /// Sample count baked into the pipeline.
+    pub s: usize,
+}
+
+/// The artifact set produced by one `make artifacts` run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Schema version.
+    pub version: u32,
+    /// Key dtype (always `"u32"` for this library).
+    pub key_dtype: String,
+    /// All compiled artifacts.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "{} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let m = Self::from_json(&text)?;
+        m.validate(dir.as_ref())?;
+        Ok(m)
+    }
+
+    /// Parse manifest JSON.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let version = v
+            .req("version")?
+            .as_u64()
+            .ok_or_else(|| Error::Manifest("version must be an integer".into()))?
+            as u32;
+        let key_dtype = v
+            .req("key_dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Manifest("key_dtype must be a string".into()))?
+            .to_string();
+        let entries_json = v
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("entries must be an array".into()))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let field_str = |k: &str| -> Result<String> {
+                e.req(k)?
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Manifest(format!("entry field {k} must be a string")))
+            };
+            let field_usize = |k: &str| -> Result<usize> {
+                e.req(k)?
+                    .as_usize()
+                    .ok_or_else(|| Error::Manifest(format!("entry field {k} must be an integer")))
+            };
+            let kind_s = field_str("kind")?;
+            entries.push(ArtifactEntry {
+                name: field_str("name")?,
+                kind: ArtifactKind::parse(&kind_s)
+                    .ok_or_else(|| Error::Manifest(format!("unknown artifact kind {kind_s:?}")))?,
+                file: field_str("file")?,
+                n: field_usize("n")?,
+                tile: field_usize("tile")?,
+                s: field_usize("s")?,
+            });
+        }
+        Ok(Manifest {
+            version,
+            key_dtype,
+            entries,
+        })
+    }
+
+    /// Serialize to JSON (mirrors what aot.py writes).
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("key_dtype", Json::str(self.key_dtype.clone())),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("name", Json::str(e.name.clone())),
+                                ("kind", Json::str(e.kind.id())),
+                                ("file", Json::str(e.file.clone())),
+                                ("n", Json::num(e.n as f64)),
+                                ("tile", Json::num(e.tile as f64)),
+                                ("s", Json::num(e.s as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Check schema invariants and that every referenced file exists.
+    pub fn validate(&self, dir: &Path) -> Result<()> {
+        if self.version != 1 {
+            return Err(Error::Manifest(format!(
+                "unsupported manifest version {}",
+                self.version
+            )));
+        }
+        if self.key_dtype != "u32" {
+            return Err(Error::Manifest(format!(
+                "unsupported key dtype {:?}",
+                self.key_dtype
+            )));
+        }
+        for e in &self.entries {
+            if e.n == 0 || !e.tile.is_power_of_two() || e.s == 0 || e.n % e.tile != 0 {
+                return Err(Error::Manifest(format!(
+                    "entry {:?} has invalid shape",
+                    e.name
+                )));
+            }
+            let p = dir.join(&e.file);
+            if !p.is_file() {
+                return Err(Error::Manifest(format!(
+                    "artifact file missing: {}",
+                    p.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, dir: &Path, entry: &ArtifactEntry) -> PathBuf {
+        dir.join(&entry.file)
+    }
+
+    /// The smallest [`ArtifactKind::FullSort`] entry with capacity ≥ `n`.
+    pub fn best_sort_entry(&self, n: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::FullSort && e.n >= n)
+            .min_by_key(|e| e.n)
+    }
+
+    /// Largest full-sort capacity available.
+    pub fn max_sort_capacity(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::FullSort)
+            .map(|e| e.n)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            version: 1,
+            key_dtype: "u32".into(),
+            entries: vec![
+                ArtifactEntry {
+                    name: "sort_4096".into(),
+                    kind: ArtifactKind::FullSort,
+                    file: "sort_4096.hlo.txt".into(),
+                    n: 4096,
+                    tile: 256,
+                    s: 16,
+                },
+                ArtifactEntry {
+                    name: "sort_16384".into(),
+                    kind: ArtifactKind::FullSort,
+                    file: "sort_16384.hlo.txt".into(),
+                    n: 16384,
+                    tile: 256,
+                    s: 16,
+                },
+                ArtifactEntry {
+                    name: "tile_4096".into(),
+                    kind: ArtifactKind::TileSort,
+                    file: "tile_4096.hlo.txt".into(),
+                    n: 4096,
+                    tile: 256,
+                    s: 16,
+                },
+            ],
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gbs_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn best_entry_selection() {
+        let m = sample_manifest();
+        assert_eq!(m.best_sort_entry(100).unwrap().n, 4096);
+        assert_eq!(m.best_sort_entry(4096).unwrap().n, 4096);
+        assert_eq!(m.best_sort_entry(4097).unwrap().n, 16384);
+        assert!(m.best_sort_entry(1 << 20).is_none());
+        assert_eq!(m.max_sort_capacity(), 16384);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample_manifest();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn load_and_validate() {
+        let dir = temp_dir("load");
+        let m = sample_manifest();
+        std::fs::write(dir.join("manifest.json"), m.to_json()).unwrap();
+        // Files missing → validation error.
+        assert!(Manifest::load(&dir).is_err());
+        for e in &m.entries {
+            std::fs::write(dir.join(&e.file), "HloModule x").unwrap();
+        }
+        let loaded = Manifest::load(&dir).unwrap();
+        assert_eq!(loaded, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_schema() {
+        let dir = temp_dir("bad");
+        let mut m = sample_manifest();
+        m.version = 9;
+        std::fs::write(dir.join("manifest.json"), m.to_json()).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+
+        let mut m2 = sample_manifest();
+        m2.entries[0].tile = 100; // not a power of two
+        for e in &m2.entries {
+            std::fs::write(dir.join(&e.file), "x").unwrap();
+        }
+        std::fs::write(dir.join("manifest.json"), m2.to_json()).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(Manifest::from_json("{").is_err());
+        assert!(Manifest::from_json(r#"{"version":1}"#).is_err());
+        assert!(Manifest::from_json(
+            r#"{"version":1,"key_dtype":"u32","entries":[{"name":"x","kind":"bogus","file":"f","n":1,"tile":1,"s":1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = temp_dir("missing");
+        std::fs::remove_dir_all(&dir).ok();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            ArtifactKind::FullSort,
+            ArtifactKind::TileSort,
+            ArtifactKind::RankPrefix,
+        ] {
+            assert_eq!(ArtifactKind::parse(k.id()), Some(k));
+        }
+        assert_eq!(ArtifactKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! The PJRT runtime: loading and executing the AOT-compiled JAX/Pallas
+//! artifacts from rust, with python never on the request path.
+//!
+//! * [`manifest`] — the `artifacts/manifest.json` schema and lookup.
+//! * [`client`] — PJRT CPU client, executable cache, u32 marshalling.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::PjrtRuntime;
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

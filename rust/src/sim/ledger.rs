@@ -1,0 +1,353 @@
+//! The traffic ledger: an exact record of the GPU work an algorithm
+//! generates, kept per kernel launch.
+//!
+//! Every algorithm in [`crate::algos`] calls [`Ledger::begin_kernel`] /
+//! [`Ledger::end_kernel`] around each conceptual GPU kernel and records
+//! the traffic that kernel would generate:
+//!
+//! * **coalesced bytes** — global-memory traffic in contiguous,
+//!   transaction-aligned arrays (the paper's "parallel coalesced data
+//!   read/write", §4 Step 8);
+//! * **scattered transactions** — global accesses that each occupy a full
+//!   [`crate::sim::spec::MEM_TRANSACTION_BYTES`] segment regardless of
+//!   payload (uncoalesced access, the failure mode §2 warns about);
+//! * **shared-memory ops** — per-core accesses to the SM-local 16 KB
+//!   memory (an order of magnitude faster than global, §2);
+//! * **compute ops** — scalar operations (compare-exchange counts, index
+//!   arithmetic);
+//! * **divergent ops** — operations executed under a data-dependent
+//!   branch, which the SIMT model serializes (§2's conditional-branching
+//!   discussion); the cost model charges these at a multiple.
+//!
+//! Ledgers add, so a full Algorithm-1 run is the sum of its steps; the
+//! per-step split regenerates the paper's Figure 5.
+
+use std::collections::BTreeMap;
+
+/// Which conceptual GPU kernel produced a launch record. Used by the cost
+/// model to apply per-class efficiency factors and by reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelClass {
+    /// Step 2: bitonic sort of one tile per SM in shared memory.
+    LocalSort,
+    /// Steps 3 & 5: equidistant sample extraction.
+    Sample,
+    /// Steps 4 & 9: bitonic merge passes in global memory.
+    GlobalBitonic,
+    /// Step 6: parallel binary search of global samples in each tile.
+    SampleIndex,
+    /// Step 7: column-sum / prefix / update passes (Figure 1).
+    PrefixSum,
+    /// Step 8: coalesced bucket relocation.
+    Relocation,
+    /// Randomized sample sort: bucket-finding pass (traverses the
+    /// search tree of splitters).
+    BucketFind,
+    /// Randomized sample sort / quicksort-style scatter with atomics.
+    ScatterAtomic,
+    /// Thrust Merge: odd-even merge / two-way merge passes.
+    Merge,
+    /// Radix sort: digit histogram / scan / scatter passes.
+    RadixPass,
+    /// Small sequential or single-block work (e.g. prefix over column
+    /// sums on one SM).
+    SingleBlock,
+    /// Host↔device or other bookkeeping transfers.
+    Transfer,
+}
+
+/// One kernel launch's recorded traffic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Kernel class (cost-model behaviour).
+    pub class: KernelClass,
+    /// Algorithm-1 step this launch belongs to (1–9), or 0 for
+    /// baseline/other work. Drives the Figure 5 per-step breakdown.
+    pub step: u8,
+    /// Thread blocks launched.
+    pub blocks: u64,
+    /// Threads per block.
+    pub threads_per_block: u32,
+    /// Contiguous global-memory traffic in bytes (reads + writes).
+    pub coalesced_bytes: u64,
+    /// Non-contiguous global accesses, each costing a full memory
+    /// transaction.
+    pub scattered_transactions: u64,
+    /// Shared-memory accesses.
+    pub smem_ops: u64,
+    /// Scalar compute operations.
+    pub compute_ops: u64,
+    /// Compute operations under divergent branches (serialized by SIMT).
+    pub divergent_ops: u64,
+}
+
+impl KernelStats {
+    fn new(class: KernelClass, blocks: u64, threads_per_block: u32) -> Self {
+        KernelStats {
+            class,
+            step: 0,
+            blocks,
+            threads_per_block,
+            coalesced_bytes: 0,
+            scattered_transactions: 0,
+            smem_ops: 0,
+            compute_ops: 0,
+            divergent_ops: 0,
+        }
+    }
+
+    /// Total global-memory bytes including the transaction-granularity
+    /// penalty on scattered accesses.
+    pub fn effective_global_bytes(&self) -> u64 {
+        self.coalesced_bytes
+            + self.scattered_transactions * crate::sim::spec::MEM_TRANSACTION_BYTES as u64
+    }
+}
+
+/// Aggregated traffic for one Algorithm-1 step (or a whole run).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StepLedger {
+    /// Number of kernel launches.
+    pub launches: u64,
+    /// Total thread blocks.
+    pub blocks: u64,
+    /// Coalesced global bytes.
+    pub coalesced_bytes: u64,
+    /// Scattered transactions.
+    pub scattered_transactions: u64,
+    /// Shared-memory ops.
+    pub smem_ops: u64,
+    /// Compute ops.
+    pub compute_ops: u64,
+    /// Divergent (serialized) ops.
+    pub divergent_ops: u64,
+}
+
+impl StepLedger {
+    /// Fold one launch into the aggregate.
+    pub fn absorb(&mut self, k: &KernelStats) {
+        self.launches += 1;
+        self.blocks += k.blocks;
+        self.coalesced_bytes += k.coalesced_bytes;
+        self.scattered_transactions += k.scattered_transactions;
+        self.smem_ops += k.smem_ops;
+        self.compute_ops += k.compute_ops;
+        self.divergent_ops += k.divergent_ops;
+    }
+
+    /// Effective global bytes (coalesced + transaction-padded scattered).
+    pub fn effective_global_bytes(&self) -> u64 {
+        self.coalesced_bytes
+            + self.scattered_transactions * crate::sim::spec::MEM_TRANSACTION_BYTES as u64
+    }
+}
+
+/// The full launch-by-launch record of a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Ledger {
+    kernels: Vec<KernelStats>,
+    current: Option<KernelStats>,
+}
+
+impl Ledger {
+    /// Begin recording a kernel launch. Panics if a launch is already
+    /// open — kernels never nest on a GPU stream.
+    pub fn begin_kernel(&mut self, class: KernelClass, blocks: u64, threads_per_block: u32) {
+        assert!(
+            self.current.is_none(),
+            "begin_kernel while a kernel is open"
+        );
+        self.current = Some(KernelStats::new(class, blocks, threads_per_block));
+    }
+
+    /// Tag the open launch with an Algorithm-1 step number (1–9).
+    pub fn tag_step(&mut self, step: u8) {
+        self.cur().step = step;
+    }
+
+    /// Record contiguous global-memory traffic (bytes, reads+writes).
+    pub fn add_coalesced(&mut self, bytes: u64) {
+        self.cur().coalesced_bytes += bytes;
+    }
+
+    /// Record `n` scattered global accesses.
+    pub fn add_scattered(&mut self, transactions: u64) {
+        self.cur().scattered_transactions += transactions;
+    }
+
+    /// Record shared-memory accesses.
+    pub fn add_smem(&mut self, ops: u64) {
+        self.cur().smem_ops += ops;
+    }
+
+    /// Record scalar compute operations.
+    pub fn add_compute(&mut self, ops: u64) {
+        self.cur().compute_ops += ops;
+    }
+
+    /// Record compute operations executed under divergent branches.
+    pub fn add_divergent(&mut self, ops: u64) {
+        self.cur().divergent_ops += ops;
+    }
+
+    /// Close the open launch.
+    pub fn end_kernel(&mut self) {
+        let k = self
+            .current
+            .take()
+            .expect("end_kernel without begin_kernel");
+        self.kernels.push(k);
+    }
+
+    /// Convenience: record a whole launch at once.
+    pub fn record(&mut self, stats: KernelStats) {
+        assert!(self.current.is_none(), "record while a kernel is open");
+        self.kernels.push(stats);
+    }
+
+    fn cur(&mut self) -> &mut KernelStats {
+        self.current
+            .as_mut()
+            .expect("ledger op outside begin/end_kernel")
+    }
+
+    /// All recorded launches.
+    pub fn kernels(&self) -> &[KernelStats] {
+        &self.kernels
+    }
+
+    /// Number of closed launches.
+    pub fn kernel_count(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Aggregate everything into one [`StepLedger`].
+    pub fn total(&self) -> StepLedger {
+        let mut t = StepLedger::default();
+        for k in &self.kernels {
+            t.absorb(k);
+        }
+        t
+    }
+
+    /// Aggregate per Algorithm-1 step (key = step number; 0 = untagged).
+    pub fn by_step(&self) -> BTreeMap<u8, StepLedger> {
+        let mut m: BTreeMap<u8, StepLedger> = BTreeMap::new();
+        for k in &self.kernels {
+            m.entry(k.step).or_default().absorb(k);
+        }
+        m
+    }
+
+    /// Aggregate per kernel class.
+    pub fn by_class(&self) -> BTreeMap<KernelClass, StepLedger> {
+        let mut m: BTreeMap<KernelClass, StepLedger> = BTreeMap::new();
+        for k in &self.kernels {
+            m.entry(k.class).or_default().absorb(k);
+        }
+        m
+    }
+
+    /// Append another ledger's launches (used when assembling a run from
+    /// phases executed on different engines).
+    pub fn extend_from(&mut self, other: &Ledger) {
+        assert!(other.current.is_none(), "cannot merge a ledger with an open kernel");
+        self.kernels.extend(other.kernels.iter().cloned());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_launch(step: u8, bytes: u64) -> KernelStats {
+        KernelStats {
+            class: KernelClass::LocalSort,
+            step,
+            blocks: 4,
+            threads_per_block: 512,
+            coalesced_bytes: bytes,
+            scattered_transactions: 2,
+            smem_ops: 100,
+            compute_ops: 50,
+            divergent_ops: 5,
+        }
+    }
+
+    #[test]
+    fn begin_record_end() {
+        let mut l = Ledger::default();
+        l.begin_kernel(KernelClass::LocalSort, 16, 512);
+        l.tag_step(2);
+        l.add_coalesced(1024);
+        l.add_smem(2048);
+        l.add_compute(512);
+        l.end_kernel();
+        assert_eq!(l.kernel_count(), 1);
+        let k = &l.kernels()[0];
+        assert_eq!(k.step, 2);
+        assert_eq!(k.coalesced_bytes, 1024);
+        assert_eq!(k.smem_ops, 2048);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_kernel while a kernel is open")]
+    fn no_nesting() {
+        let mut l = Ledger::default();
+        l.begin_kernel(KernelClass::LocalSort, 1, 1);
+        l.begin_kernel(KernelClass::Sample, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "end_kernel without begin_kernel")]
+    fn end_requires_begin() {
+        let mut l = Ledger::default();
+        l.end_kernel();
+    }
+
+    #[test]
+    fn step_aggregation() {
+        let mut l = Ledger::default();
+        l.record(sample_launch(2, 100));
+        l.record(sample_launch(2, 200));
+        l.record(sample_launch(9, 300));
+        let by = l.by_step();
+        assert_eq!(by[&2].launches, 2);
+        assert_eq!(by[&2].coalesced_bytes, 300);
+        assert_eq!(by[&9].coalesced_bytes, 300);
+        let t = l.total();
+        assert_eq!(t.launches, 3);
+        assert_eq!(t.coalesced_bytes, 600);
+        assert_eq!(t.scattered_transactions, 6);
+    }
+
+    #[test]
+    fn effective_bytes_pads_scattered() {
+        let k = sample_launch(0, 100);
+        // 100 + 2 * 64.
+        assert_eq!(k.effective_global_bytes(), 100 + 2 * 64);
+    }
+
+    #[test]
+    fn merge_ledgers() {
+        let mut a = Ledger::default();
+        a.record(sample_launch(2, 100));
+        let mut b = Ledger::default();
+        b.record(sample_launch(9, 50));
+        a.extend_from(&b);
+        assert_eq!(a.kernel_count(), 2);
+        assert_eq!(a.total().coalesced_bytes, 150);
+    }
+
+    #[test]
+    fn class_aggregation() {
+        let mut l = Ledger::default();
+        l.record(sample_launch(2, 10));
+        let mut k = sample_launch(9, 20);
+        k.class = KernelClass::GlobalBitonic;
+        l.record(k);
+        let by = l.by_class();
+        assert_eq!(by[&KernelClass::LocalSort].coalesced_bytes, 10);
+        assert_eq!(by[&KernelClass::GlobalBitonic].coalesced_bytes, 20);
+    }
+}

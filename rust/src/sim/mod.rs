@@ -1,0 +1,185 @@
+//! GPU cost-model simulator — the hardware substitution for the paper's
+//! 2009-era nVIDIA testbed (Tesla C1060, GTX 285, GTX 260).
+//!
+//! The paper measures wall-clock time on real GPUs. We have none, so every
+//! algorithm in [`crate::algos`] runs against a [`GpuSim`]: the *data work
+//! is done for real on the host* (so correctness is genuinely tested),
+//! while the simulator keeps an exact [`Ledger`] of the traffic the same
+//! algorithm would generate on the GPU — coalesced global-memory bytes,
+//! scattered transactions, shared-memory operations, compute operations,
+//! and kernel launches — per kernel launch. [`cost`] converts a ledger
+//! into estimated milliseconds for a given [`GpuSpec`] using a
+//! bandwidth/compute roofline per launch.
+//!
+//! The paper itself establishes that its method is **memory-bandwidth
+//! bound** (§5: GPU ordering follows memory bandwidth, not core count), so
+//! a traffic-exact bandwidth model reproduces the *shape* of every figure:
+//! linear growth in n, the s=64 minimum of Figure 3, the per-step
+//! breakdown of Figure 5, the device ordering of Figure 4, and the
+//! capacity ceilings of Figures 6 & 7.
+//!
+//! Two accounting modes keep paper-scale experiments feasible:
+//! * **Execute** — real data moves, exact counts (tests, service path).
+//! * **Analytic** — closed-form counts without data (n up to 512M as in
+//!   Figure 7). Property tests assert both modes produce identical
+//!   ledgers on small inputs.
+
+pub mod cost;
+pub mod ledger;
+pub mod spec;
+
+pub use cost::{CostModel, CostParams};
+pub use ledger::{KernelClass, KernelStats, Ledger, StepLedger};
+pub use spec::{GpuModel, GpuSpec};
+
+use crate::error::{Error, Result};
+
+/// A simulated GPU: a spec, an allocation tracker that enforces the
+/// device's global-memory capacity, and a traffic ledger.
+///
+/// Algorithms request allocations through [`GpuSim::alloc`] before touching
+/// host buffers that stand in for device memory; this is what reproduces
+/// the paper's memory ceilings (GTX 260 → 64M items, GTX 285 2GB → 256M,
+/// Tesla C1060 → 512M; Figures 6 & 7).
+#[derive(Debug, Clone)]
+pub struct GpuSim {
+    spec: GpuSpec,
+    ledger: Ledger,
+    allocated_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl GpuSim {
+    /// Create a fresh simulator for the given hardware spec.
+    pub fn new(spec: GpuSpec) -> Self {
+        GpuSim {
+            spec,
+            ledger: Ledger::default(),
+            allocated_bytes: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// The hardware spec this simulator models.
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    /// The accumulated traffic ledger.
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    /// Mutable ledger access for the algorithm implementations.
+    pub fn ledger_mut(&mut self) -> &mut Ledger {
+        &mut self.ledger
+    }
+
+    /// Reset traffic and allocation state, keeping the spec.
+    pub fn reset(&mut self) {
+        self.ledger = Ledger::default();
+        self.allocated_bytes = 0;
+        self.peak_bytes = 0;
+    }
+
+    /// Claim `bytes` of simulated device global memory.
+    ///
+    /// Fails with [`Error::DeviceOom`] when the device's usable capacity
+    /// (total minus the reserved fraction the driver/framebuffer holds
+    /// back) would be exceeded — this models the paper's per-device
+    /// maximum-sortable-n limits.
+    pub fn alloc(&mut self, bytes: usize) -> Result<Allocation> {
+        let usable = self.spec.usable_global_memory_bytes();
+        let available = usable.saturating_sub(self.allocated_bytes);
+        if bytes > available {
+            return Err(Error::DeviceOom {
+                requested: bytes,
+                available,
+                device: self.spec.name.clone(),
+            });
+        }
+        self.allocated_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.allocated_bytes);
+        Ok(Allocation { bytes })
+    }
+
+    /// Release an allocation previously returned by [`GpuSim::alloc`].
+    pub fn free(&mut self, alloc: Allocation) {
+        self.allocated_bytes = self.allocated_bytes.saturating_sub(alloc.bytes);
+    }
+
+    /// Currently allocated simulated device bytes.
+    pub fn allocated_bytes(&self) -> usize {
+        self.allocated_bytes
+    }
+
+    /// High-water mark of simulated device memory.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Estimated total milliseconds for everything recorded so far, using
+    /// the default cost parameters.
+    pub fn estimated_ms(&self) -> f64 {
+        CostModel::default_params(&self.spec).ledger_ms(&self.ledger)
+    }
+}
+
+/// Token for a simulated device-memory allocation; return it to
+/// [`GpuSim::free`]. Deliberately not `Copy` so double-frees are caught at
+/// compile time.
+#[derive(Debug)]
+#[must_use = "allocations must be freed back to the GpuSim"]
+pub struct Allocation {
+    bytes: usize,
+}
+
+impl Allocation {
+    /// Size of this allocation in bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut sim = GpuSim::new(GpuModel::Gtx260.spec());
+        let a = sim.alloc(1024).unwrap();
+        assert_eq!(sim.allocated_bytes(), 1024);
+        let b = sim.alloc(2048).unwrap();
+        assert_eq!(sim.allocated_bytes(), 3072);
+        assert_eq!(sim.peak_bytes(), 3072);
+        sim.free(a);
+        assert_eq!(sim.allocated_bytes(), 2048);
+        sim.free(b);
+        assert_eq!(sim.allocated_bytes(), 0);
+        assert_eq!(sim.peak_bytes(), 3072);
+    }
+
+    #[test]
+    fn oom_on_capacity() {
+        let mut sim = GpuSim::new(GpuModel::Gtx260.spec());
+        let usable = sim.spec().usable_global_memory_bytes();
+        let err = sim.alloc(usable + 1).unwrap_err();
+        assert!(err.is_oom());
+        // Exactly-usable succeeds.
+        let a = sim.alloc(usable).unwrap();
+        assert!(sim.alloc(1).unwrap_err().is_oom());
+        sim.free(a);
+        assert!(sim.alloc(1).is_ok());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut sim = GpuSim::new(GpuModel::TeslaC1060.spec());
+        let _a = sim.alloc(100).unwrap();
+        sim.ledger_mut().begin_kernel(KernelClass::LocalSort, 1, 1);
+        sim.reset();
+        assert_eq!(sim.allocated_bytes(), 0);
+        assert_eq!(sim.ledger().kernel_count(), 0);
+    }
+}

@@ -1,0 +1,291 @@
+//! Hardware specifications — the paper's Table 1, plus the Tesla-
+//! architecture constants of §2 (SM count, shared memory per SM, warp and
+//! block sizes) needed by the cost model.
+//!
+//! | | Tesla C1060 | GTX 285 (2 GB) | GTX 285 (1 GB) | GTX 260 |
+//! |---|---|---|---|---|
+//! | cores | 240 | 240 | 240 | 216 |
+//! | core clock | 602 MHz | 648 MHz | 648 MHz | 576 MHz |
+//! | global memory | 4 GB | 2 GB | 1 GB | 896 MB |
+//! | memory clock | 1600 MHz | 2322 MHz | 2484 MHz | 1998 MHz |
+//! | bandwidth | 102 GB/s | 149 GB/s | 159 GB/s | 112 GB/s |
+
+
+/// Cores per streaming multiprocessor on the Tesla architecture (§2).
+pub const CORES_PER_SM: u32 = 8;
+
+/// Shared memory per SM in bytes (§2: "a small size (16 KB) low latency
+/// local shared memory").
+pub const SHARED_MEM_BYTES: usize = 16 * 1024;
+
+/// Threads per warp (§2).
+pub const WARP_SIZE: u32 = 32;
+
+/// Maximum threads per block (§2: "blocks of up to 512 threads").
+pub const MAX_BLOCK_THREADS: u32 = 512;
+
+/// Global-memory transaction granularity in bytes. Tesla-class GPUs
+/// service global memory in 32/64/128-byte segments; scattered accesses
+/// degrade to one segment per request, which is how the cost model
+/// penalizes non-coalesced access.
+pub const MEM_TRANSACTION_BYTES: usize = 64;
+
+/// Fraction of global memory usable by an application.
+///
+/// The paper's reported ceilings pin this to 1.0 and reveal the
+/// allocation discipline: 256M keys on the 2 GiB GTX 285 and 512M on
+/// the 4 GiB Tesla each equal **exactly** two n-key buffers of 4-byte
+/// keys (2·256M·4 B = 2 GiB; 2·512M·4 B = 4 GiB). The implementation
+/// therefore cannot hold *any* standalone auxiliary arrays at peak —
+/// the sample/boundary/location matrices and the Step-9 scratch must
+/// live inside whichever of the two big buffers is dead at that phase.
+/// [`crate::algos::bucket_sort`] models exactly that (and checks the
+/// aux fits). The same model yields the GTX 260's 64M ceiling
+/// (128M × 8 B = 1 GiB > 896 MiB).
+pub const USABLE_MEMORY_FRACTION: f64 = 1.0;
+
+/// A GPU hardware description (one column of the paper's Table 1 plus the
+/// §2 architecture constants).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name, e.g. "GTX 285 (2 GB)".
+    pub name: String,
+    /// Total processor cores (`sm_count * CORES_PER_SM`).
+    pub cores: u32,
+    /// Streaming multiprocessor count.
+    pub sm_count: u32,
+    /// Core (graphics) clock in MHz — the Table 1 value.
+    pub core_clock_mhz: u32,
+    /// Shader (processor) clock in MHz: the rate the CUDA cores actually
+    /// execute at on Tesla-architecture parts (~2.3× the graphics
+    /// clock); this is what compute throughput derives from.
+    pub shader_clock_mhz: u32,
+    /// Global DRAM size in bytes.
+    pub global_memory_bytes: usize,
+    /// Memory clock in MHz (Table 1; informational — bandwidth below is
+    /// what the cost model uses).
+    pub memory_clock_mhz: u32,
+    /// Peak memory bandwidth in GB/s (10^9 bytes per second).
+    pub memory_bandwidth_gbs: f64,
+    /// Shared memory per SM in bytes.
+    pub shared_mem_bytes: usize,
+}
+
+impl GpuSpec {
+    /// Global memory available to the sort after driver/context reserve.
+    pub fn usable_global_memory_bytes(&self) -> usize {
+        (self.global_memory_bytes as f64 * USABLE_MEMORY_FRACTION) as usize
+    }
+
+    /// Peak bandwidth in bytes per millisecond.
+    pub fn bandwidth_bytes_per_ms(&self) -> f64 {
+        self.memory_bandwidth_gbs * 1e9 / 1e3
+    }
+
+    /// Aggregate scalar-op throughput in operations per millisecond:
+    /// `cores × shader_clock`. (A deliberately simple peak; the cost
+    /// model's per-class efficiency factors absorb SIMT divergence,
+    /// dual-issue, etc.)
+    pub fn compute_ops_per_ms(&self) -> f64 {
+        self.cores as f64 * self.shader_clock_mhz as f64 * 1e6 / 1e3
+    }
+
+    /// Shared-memory aggregate throughput in accesses per millisecond.
+    /// §2: shared memory is "at least an order of magnitude faster" than
+    /// global memory; we model one access per core per clock.
+    pub fn shared_ops_per_ms(&self) -> f64 {
+        self.compute_ops_per_ms()
+    }
+
+    /// Tile capacity in keys: how many 4-byte keys fit in one SM's shared
+    /// memory, halved for double-buffering/ping-pong space — this gives
+    /// the paper's n/m = 2K items per sublist.
+    pub fn tile_keys(&self) -> usize {
+        self.shared_mem_bytes / crate::KEY_BYTES / 2
+    }
+
+    /// Maximum number of 4-byte keys GPU Bucket Sort can sort on this
+    /// device: the algorithm keeps the input array plus one relocation
+    /// buffer resident (2 × 4 B per key) plus the sample arrays.
+    pub fn max_sortable_keys(&self) -> usize {
+        self.usable_global_memory_bytes() / (2 * crate::KEY_BYTES)
+    }
+}
+
+/// The four devices of the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuModel {
+    /// Tesla C1060: 240 cores, 4 GB, 102 GB/s.
+    TeslaC1060,
+    /// GTX 285 with 2 GB (the paper's main benchmark device).
+    Gtx285_2G,
+    /// GTX 285 with 1 GB (the device of Leischner et al. [9]).
+    Gtx285_1G,
+    /// GTX 260: 216 cores, 896 MB, 112 GB/s.
+    Gtx260,
+}
+
+impl GpuModel {
+    /// All Table 1 devices, in the paper's column order.
+    pub const ALL: [GpuModel; 4] = [
+        GpuModel::TeslaC1060,
+        GpuModel::Gtx285_2G,
+        GpuModel::Gtx285_1G,
+        GpuModel::Gtx260,
+    ];
+
+    /// The Table 1 column for this model.
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            GpuModel::TeslaC1060 => GpuSpec {
+                name: "Tesla C1060".into(),
+                cores: 240,
+                sm_count: 30,
+                core_clock_mhz: 602,
+                shader_clock_mhz: 1296,
+                global_memory_bytes: 4 * 1024 * 1024 * 1024,
+                memory_clock_mhz: 1600,
+                memory_bandwidth_gbs: 102.0,
+                shared_mem_bytes: SHARED_MEM_BYTES,
+            },
+            GpuModel::Gtx285_2G => GpuSpec {
+                name: "GTX 285 (2 GB)".into(),
+                cores: 240,
+                sm_count: 30,
+                core_clock_mhz: 648,
+                shader_clock_mhz: 1476,
+                global_memory_bytes: 2 * 1024 * 1024 * 1024,
+                memory_clock_mhz: 2322,
+                memory_bandwidth_gbs: 149.0,
+                shared_mem_bytes: SHARED_MEM_BYTES,
+            },
+            GpuModel::Gtx285_1G => GpuSpec {
+                name: "GTX 285 (1 GB)".into(),
+                cores: 240,
+                sm_count: 30,
+                core_clock_mhz: 648,
+                shader_clock_mhz: 1476,
+                global_memory_bytes: 1024 * 1024 * 1024,
+                memory_clock_mhz: 2484,
+                memory_bandwidth_gbs: 159.0,
+                shared_mem_bytes: SHARED_MEM_BYTES,
+            },
+            GpuModel::Gtx260 => GpuSpec {
+                name: "GTX 260".into(),
+                cores: 216,
+                sm_count: 27,
+                core_clock_mhz: 576,
+                shader_clock_mhz: 1242,
+                global_memory_bytes: 896 * 1024 * 1024,
+                memory_clock_mhz: 1998,
+                memory_bandwidth_gbs: 112.0,
+                shared_mem_bytes: SHARED_MEM_BYTES,
+            },
+        }
+    }
+
+    /// Parse a user-facing device name (CLI, config files).
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        match s.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
+            "tesla" | "teslac1060" | "c1060" => Some(GpuModel::TeslaC1060),
+            "gtx285" | "gtx2852g" | "gtx2852gb" => Some(GpuModel::Gtx285_2G),
+            "gtx2851g" | "gtx2851gb" => Some(GpuModel::Gtx285_1G),
+            "gtx260" => Some(GpuModel::Gtx260),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for GpuModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.spec().name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 row "Number Of Cores": SMs × 8 cores must reproduce it.
+    #[test]
+    fn table1_core_counts() {
+        for m in GpuModel::ALL {
+            let s = m.spec();
+            assert_eq!(s.cores, s.sm_count * CORES_PER_SM, "{}", s.name);
+        }
+        assert_eq!(GpuModel::TeslaC1060.spec().cores, 240);
+        assert_eq!(GpuModel::Gtx285_2G.spec().cores, 240);
+        assert_eq!(GpuModel::Gtx285_1G.spec().cores, 240);
+        assert_eq!(GpuModel::Gtx260.spec().cores, 216);
+    }
+
+    /// Table 1 rows: clocks, memory sizes, bandwidths.
+    #[test]
+    fn table1_values() {
+        let t = GpuModel::TeslaC1060.spec();
+        assert_eq!(t.core_clock_mhz, 602);
+        assert_eq!(t.memory_clock_mhz, 1600);
+        assert_eq!(t.global_memory_bytes, 4 << 30);
+        assert!((t.memory_bandwidth_gbs - 102.0).abs() < 1e-9);
+
+        let g2 = GpuModel::Gtx285_2G.spec();
+        assert_eq!(g2.core_clock_mhz, 648);
+        assert_eq!(g2.memory_clock_mhz, 2322);
+        assert!((g2.memory_bandwidth_gbs - 149.0).abs() < 1e-9);
+
+        let g1 = GpuModel::Gtx285_1G.spec();
+        assert_eq!(g1.memory_clock_mhz, 2484);
+        assert!((g1.memory_bandwidth_gbs - 159.0).abs() < 1e-9);
+
+        let g260 = GpuModel::Gtx260.spec();
+        assert_eq!(g260.core_clock_mhz, 576);
+        assert_eq!(g260.global_memory_bytes, 896 << 20);
+        assert!((g260.memory_bandwidth_gbs - 112.0).abs() < 1e-9);
+    }
+
+    /// §2: "GTX 285 and Tesla GPUs have 30 SMs ... GTX 260 has 27 SMs".
+    #[test]
+    fn section2_sm_counts() {
+        assert_eq!(GpuModel::TeslaC1060.spec().sm_count, 30);
+        assert_eq!(GpuModel::Gtx285_2G.spec().sm_count, 30);
+        assert_eq!(GpuModel::Gtx260.spec().sm_count, 27);
+    }
+
+    /// The paper's n/m = 2K-item sublists follow from 16 KB shared memory.
+    #[test]
+    fn tile_capacity_is_2k_items() {
+        assert_eq!(GpuModel::Gtx285_2G.spec().tile_keys(), 2048);
+    }
+
+    /// Paper §5 memory ceilings: 64M on GTX 260, 256M on GTX 285 (2 GB),
+    /// 512M on Tesla C1060.
+    #[test]
+    fn paper_memory_ceilings() {
+        let ceil = |m: GpuModel| m.spec().max_sortable_keys();
+        assert!(ceil(GpuModel::Gtx260) >= 64 << 20, "{}", ceil(GpuModel::Gtx260));
+        assert!(ceil(GpuModel::Gtx260) < 128 << 20);
+        assert!(ceil(GpuModel::Gtx285_2G) >= 256 << 20);
+        assert!(ceil(GpuModel::Gtx285_2G) < 512 << 20);
+        assert!(ceil(GpuModel::TeslaC1060) >= 512 << 20);
+        assert!(ceil(GpuModel::TeslaC1060) < 1024 << 20);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(GpuModel::parse("Tesla"), Some(GpuModel::TeslaC1060));
+        assert_eq!(GpuModel::parse("gtx 285"), Some(GpuModel::Gtx285_2G));
+        assert_eq!(GpuModel::parse("GTX-285-1G"), Some(GpuModel::Gtx285_1G));
+        assert_eq!(GpuModel::parse("gtx260"), Some(GpuModel::Gtx260));
+        assert_eq!(GpuModel::parse("fermi"), None);
+    }
+
+    #[test]
+    fn derived_rates() {
+        let s = GpuModel::Gtx285_2G.spec();
+        // 149 GB/s = 149e6 bytes per ms.
+        assert!((s.bandwidth_bytes_per_ms() - 149e6).abs() < 1.0);
+        // 240 cores * 1476 MHz shader clock = 354.24e6 ops/ms.
+        assert!((s.compute_ops_per_ms() - 354.24e6).abs() < 1e3);
+        assert_eq!(s.usable_global_memory_bytes(), s.global_memory_bytes);
+    }
+}

@@ -1,0 +1,229 @@
+//! Benchmark harness — the in-tree stand-in for criterion (offline
+//! build): warmup, adaptive iteration counts, robust statistics, and
+//! CSV/console reporting. Every `benches/*.rs` target builds on this.
+
+use std::time::Instant;
+
+/// Statistics over one benchmark's samples.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id, e.g. `fig4/gtx285/n=33554432`.
+    pub name: String,
+    /// Per-sample wall milliseconds (each sample may aggregate several
+    /// iterations; values are per-iteration).
+    pub samples_ms: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Arithmetic mean (ms).
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Median (ms) — the headline number (robust to scheduler noise).
+    pub fn median_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = v.len() / 2;
+        if v.len() % 2 == 0 {
+            (v[mid - 1] + v[mid]) / 2.0
+        } else {
+            v[mid]
+        }
+    }
+
+    /// Sample standard deviation (ms).
+    pub fn stddev_ms(&self) -> f64 {
+        let n = self.samples_ms.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean_ms();
+        let var = self
+            .samples_ms
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Minimum sample (ms).
+    pub fn min_ms(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<52} median {:>10.3} ms  mean {:>10.3} ms  σ {:>8.3} ms  ({} samples)",
+            self.name,
+            self.median_ms(),
+            self.mean_ms(),
+            self.stddev_ms(),
+            self.samples_ms.len()
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    /// Warmup wall-time budget per benchmark (ms).
+    pub warmup_ms: f64,
+    /// Samples to collect.
+    pub samples: usize,
+    /// Minimum wall time per sample (ms) — iterations are batched until
+    /// a sample takes at least this long.
+    pub min_sample_ms: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_ms: 100.0,
+            samples: 8,
+            min_sample_ms: 10.0,
+        }
+    }
+}
+
+impl Bencher {
+    /// A faster profile for CI / quick runs (honours the
+    /// `GBS_BENCH_FAST=1` environment toggle).
+    pub fn from_env() -> Self {
+        if std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher {
+                warmup_ms: 20.0,
+                samples: 4,
+                min_sample_ms: 2.0,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run one benchmark: `f` is invoked repeatedly; its return value is
+    /// black-boxed.
+    pub fn bench<O>(&self, name: impl Into<String>, mut f: impl FnMut() -> O) -> BenchResult {
+        let name = name.into();
+        // Warmup + calibration.
+        let mut iters_per_sample = 1usize;
+        let warmup_start = Instant::now();
+        let mut one = {
+            let t = Instant::now();
+            black_box(f());
+            t.elapsed().as_secs_f64() * 1e3
+        };
+        while warmup_start.elapsed().as_secs_f64() * 1e3 < self.warmup_ms {
+            let t = Instant::now();
+            black_box(f());
+            one = 0.5 * one + 0.5 * (t.elapsed().as_secs_f64() * 1e3);
+            if one > self.warmup_ms {
+                break;
+            }
+        }
+        if one > 0.0 && one < self.min_sample_ms {
+            iters_per_sample = (self.min_sample_ms / one).ceil() as usize;
+        }
+
+        // Sampling.
+        let mut samples_ms = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            samples_ms.push(t.elapsed().as_secs_f64() * 1e3 / iters_per_sample as f64);
+        }
+        let r = BenchResult { name, samples_ms };
+        println!("{}", r.line());
+        r
+    }
+}
+
+/// Opaque-to-the-optimizer identity (std::hint::black_box wrapper, so
+/// benches don't get constant-folded away).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Write results as CSV (`name,median_ms,mean_ms,stddev_ms,min_ms,samples`).
+pub fn write_csv(path: &std::path::Path, results: &[BenchResult]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::from("name,median_ms,mean_ms,stddev_ms,min_ms,samples\n");
+    for r in results {
+        out.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{:.6},{}\n",
+            r.name,
+            r.median_ms(),
+            r.mean_ms(),
+            r.stddev_ms(),
+            r.min_ms(),
+            r.samples_ms.len()
+        ));
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_by_hand() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples_ms: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+        };
+        assert_eq!(r.median_ms(), 3.0);
+        assert_eq!(r.mean_ms(), 22.0);
+        assert_eq!(r.min_ms(), 1.0);
+        assert!(r.stddev_ms() > 40.0);
+        let even = BenchResult {
+            name: "e".into(),
+            samples_ms: vec![1.0, 3.0],
+        };
+        assert_eq!(even.median_ms(), 2.0);
+    }
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bencher {
+            warmup_ms: 1.0,
+            samples: 5,
+            min_sample_ms: 0.1,
+        };
+        let mut count = 0u64;
+        let r = b.bench("noop", || {
+            count += 1;
+            count
+        });
+        assert_eq!(r.samples_ms.len(), 5);
+        assert!(count >= 5);
+        assert!(r.median_ms() >= 0.0);
+    }
+
+    #[test]
+    fn csv_output() {
+        let dir = std::env::temp_dir().join(format!("gbs_bench_{}", std::process::id()));
+        let path = dir.join("out.csv");
+        let r = BenchResult {
+            name: "x".into(),
+            samples_ms: vec![1.0, 2.0],
+        };
+        write_csv(&path, &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,median_ms"));
+        assert!(text.contains("x,1.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! In-tree substrates. The build environment is offline, so everything a
+//! comparable project would pull from crates.io is implemented here:
+//!
+//! * [`rng`] — xoshiro256++ PRNG + normal/zipf samplers (⇒ rand).
+//! * [`json`] — full JSON parse/serialize (⇒ serde_json).
+//! * [`pool`] — structured std-thread parallelism (⇒ rayon).
+//! * [`bench`] — warmup/sampling benchmark harness (⇒ criterion).
+//! * [`propcheck`] — seeded property-test driver (⇒ proptest).
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,192 @@
+//! Structured parallelism on std threads — the in-tree stand-in for a
+//! data-parallel runtime (the build is offline; no rayon).
+//!
+//! Built on `std::thread::scope`, so closures may borrow stack data.
+//! Two scheduling modes:
+//! * [`parallel_chunks_mut`] / [`parallel_slices_mut`] — static
+//!   round-robin assignment (right for uniform work like tile sorts);
+//! * [`parallel_map`] — dynamic queue (right for skewed work like
+//!   variable-size service batches or bucket sorts).
+//!
+//! Thread spawn costs ~10 µs on Linux; callers gate on input size (the
+//! native engine's `sequential_cutoff`) so the overhead stays ≪ 1% of
+//! useful work.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default worker count: logical cores.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+}
+
+/// Run `f(index, chunk)` over `chunk_len`-sized chunks of `data` on
+/// `workers` threads (static round-robin assignment).
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    parallel_indexed_slices(chunks, workers, &f);
+}
+
+/// Run `f(index, slice)` over an explicit list of disjoint mutable
+/// slices (e.g. per-bucket output regions).
+pub fn parallel_slices_mut<T, F>(slices: Vec<&mut [T]>, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let indexed: Vec<(usize, &mut [T])> = slices.into_iter().enumerate().collect();
+    parallel_indexed_slices(indexed, workers, &f);
+}
+
+fn parallel_indexed_slices<T, F>(chunks: Vec<(usize, &mut [T])>, workers: usize, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let workers = workers.max(1).min(chunks.len().max(1));
+    if workers <= 1 || chunks.len() <= 1 {
+        for (i, c) in chunks {
+            f(i, c);
+        }
+        return;
+    }
+    let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (pos, item) in chunks.into_iter().enumerate() {
+        per_worker[pos % workers].push(item);
+    }
+    std::thread::scope(|s| {
+        for list in per_worker {
+            s.spawn(move || {
+                for (i, c) in list {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Map owned items to outputs on `workers` threads with a dynamic work
+/// queue; output order matches input order.
+pub fn parallel_map<I, O, F>(items: Vec<I>, workers: usize, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(I) -> O + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, I)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let results: Mutex<Vec<Option<O>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().pop_front();
+                match next {
+                    Some((i, item)) => {
+                        let out = f(item);
+                        results.lock().unwrap()[i] = Some(out);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every item processed"))
+        .collect()
+}
+
+/// Run `n_tasks` indexed closures in parallel, collecting outputs in
+/// index order (the "parallel for" shape).
+pub fn parallel_for<O, F>(n_tasks: usize, workers: usize, f: F) -> Vec<O>
+where
+    O: Send,
+    F: Fn(usize) -> O + Sync,
+{
+    parallel_map((0..n_tasks).collect(), workers, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut data: Vec<u32> = vec![0; 1000];
+        parallel_chunks_mut(&mut data, 64, 4, |i, c| {
+            for x in c.iter_mut() {
+                *x = i as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        // Chunk 0 covers [0,64), chunk 15 covers [960,1000).
+        assert_eq!(data[0], 1);
+        assert_eq!(data[999], 16);
+    }
+
+    #[test]
+    fn slices_mut_disjoint() {
+        let mut data: Vec<u32> = vec![0; 100];
+        let (a, b) = data.split_at_mut(30);
+        parallel_slices_mut(vec![a, b], 2, |i, s| {
+            for x in s.iter_mut() {
+                *x = i as u32 + 7;
+            }
+        });
+        assert!(data[..30].iter().all(|&x| x == 7));
+        assert!(data[30..].iter().all(|&x| x == 8));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(items, 8, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_actually_parallel() {
+        // With 4 workers and 4 sleepy tasks, wall time ≈ 1 task.
+        let t0 = std::time::Instant::now();
+        parallel_for(4, 4, |_| std::thread::sleep(std::time::Duration::from_millis(50)));
+        let elapsed = t0.elapsed().as_millis();
+        assert!(elapsed < 150, "elapsed {elapsed} ms — not parallel");
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let counter = AtomicUsize::new(0);
+        let mut data = vec![0u8; 10];
+        parallel_chunks_mut(&mut data, 3, 1, |_, c| {
+            counter.fetch_add(c.len(), Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let mut data: Vec<u8> = vec![];
+        parallel_chunks_mut(&mut data, 4, 4, |_, _| panic!("no chunks"));
+        let out: Vec<u8> = parallel_map(Vec::<u8>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        parallel_slices_mut(Vec::<&mut [u8]>::new(), 4, |_, _| panic!("no slices"));
+    }
+}

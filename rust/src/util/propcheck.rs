@@ -1,0 +1,174 @@
+//! Property-test driver — the in-tree stand-in for proptest (offline
+//! build): seeded case generation with failure reporting and simple
+//! input shrinking for vector-shaped cases.
+//!
+//! ```no_run
+//! use gpu_bucket_sort::util::propcheck::{forall, Gen};
+//!
+//! forall(100, "sorting is idempotent", |g| {
+//!     let mut v = g.vec_u32(0..2000);
+//!     v.sort_unstable();
+//!     let once = v.clone();
+//!     v.sort_unstable();
+//!     assert_eq!(v, once);
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Case generator handed to the property body.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based) — useful for size-scaling inputs.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Raw RNG access.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform usize in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        range.start + self.rng.gen_range(range.end - range.start)
+    }
+
+    /// Uniform u32.
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    /// Uniform u32 below `bound` (small-alphabet inputs provoke ties).
+    pub fn u32_below(&mut self, bound: u32) -> u32 {
+        (self.rng.gen_range(bound.max(1) as usize)) as u32
+    }
+
+    /// A u32 vector with length drawn from `len_range`; values mix
+    /// full-range and small-alphabet regimes to exercise duplicates.
+    pub fn vec_u32(&mut self, len_range: Range<usize>) -> Vec<u32> {
+        let len = if len_range.is_empty() {
+            len_range.start
+        } else {
+            self.usize_in(len_range)
+        };
+        let regime = self.rng.gen_range(4);
+        (0..len)
+            .map(|_| match regime {
+                0 => self.rng.next_u32(),
+                1 => self.u32_below(16),
+                2 => self.u32_below(1 << 10),
+                _ => self.rng.next_u32() % 1_000_000,
+            })
+            .collect()
+    }
+
+    /// One of the listed values.
+    pub fn choose<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        &options[self.rng.gen_range(options.len())]
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+}
+
+/// Run `body` for `cases` generated cases. Panics (with the failing seed
+/// and case index) if any case panics. Honours `GBS_PROP_CASES` to scale
+/// effort and `GBS_PROP_SEED` to reproduce a failure.
+pub fn forall(cases: usize, name: &str, body: impl Fn(&mut Gen)) {
+    let cases = std::env::var("GBS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    let base_seed: u64 = std::env::var("GBS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        // AssertUnwindSafe: the driver aborts on first failure, so
+        // observing state poisoned by the panicking case is impossible.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                case,
+            };
+            body(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case} (reproduce with GBS_PROP_SEED={base_seed} GBS_PROP_CASES={}): {msg}",
+                case + 1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_a_true_property() {
+        forall(50, "reverse twice is identity", |g| {
+            let v = g.vec_u32(0..100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    fn reports_failures_with_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall(50, "all vectors are short", |g| {
+                let v = g.vec_u32(0..100);
+                assert!(v.len() < 5, "got length {}", v.len());
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("GBS_PROP_SEED"), "{msg}");
+        assert!(msg.contains("all vectors are short"), "{msg}");
+    }
+
+    #[test]
+    fn generators_cover_regimes() {
+        let mut tie_heavy = 0;
+        forall(40, "inspect", |g| {
+            let v = g.vec_u32(50..100);
+            assert!(v.len() >= 50 && v.len() < 100);
+        });
+        // Direct generator checks.
+        let mut g = Gen {
+            rng: Rng::new(1),
+            case: 0,
+        };
+        for _ in 0..100 {
+            let v = g.vec_u32(100..101);
+            let distinct = {
+                let mut s = v.clone();
+                s.sort_unstable();
+                s.dedup();
+                s.len()
+            };
+            if distinct < 20 {
+                tie_heavy += 1;
+            }
+        }
+        assert!(tie_heavy > 5, "small-alphabet regime never generated");
+        assert!(*g.choose(&[1, 2, 3]) <= 3);
+        let _ = g.bool(0.5);
+        assert!(g.u32_below(10) < 10);
+    }
+}

@@ -1,0 +1,257 @@
+//! Input-distribution generators.
+//!
+//! The paper evaluates on uniformly distributed random keys — explicitly
+//! noting this is the *best case* for the randomized competitor [9],
+//! whose own evaluation sweeps six distributions to document its input-
+//! dependent fluctuations (§1, §3, §5). To reproduce the robustness
+//! claim (deterministic = flat across distributions, randomized =
+//! fluctuating) we provide the distribution family of Leischner et al. /
+//! Helman et al. plus degenerate patterns, all deterministically seeded.
+
+use crate::util::Rng;
+use crate::Key;
+
+/// The input distributions of the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// i.i.d. uniform over the full u32 range — the paper's Figures 3–7
+    /// workload and the randomized method's best case.
+    Uniform,
+    /// Gaussian (clamped to u32) — mild clustering.
+    Gaussian,
+    /// Zipf over 2^20 distinct values — heavy skew with duplicates.
+    Zipf,
+    /// Staggered: block-permuted ramps (the classic sample-sort stress
+    /// pattern of Helman et al.).
+    Staggered,
+    /// Already sorted ascending.
+    Sorted,
+    /// Sorted with 1% random transpositions.
+    NearlySorted,
+    /// Reverse sorted.
+    ReverseSorted,
+    /// All keys equal — the degenerate duplicate case.
+    AllEqual,
+    /// Two interleaved values — maximal tie pressure on splitters.
+    TwoValues,
+}
+
+impl Distribution {
+    /// The six-distribution robustness suite (matching the spirit of
+    /// [9]'s evaluation) in presentation order.
+    pub const ROBUSTNESS_SUITE: [Distribution; 6] = [
+        Distribution::Uniform,
+        Distribution::Gaussian,
+        Distribution::Zipf,
+        Distribution::Staggered,
+        Distribution::Sorted,
+        Distribution::NearlySorted,
+    ];
+
+    /// Every distribution, including the degenerate extras.
+    pub const ALL: [Distribution; 9] = [
+        Distribution::Uniform,
+        Distribution::Gaussian,
+        Distribution::Zipf,
+        Distribution::Staggered,
+        Distribution::Sorted,
+        Distribution::NearlySorted,
+        Distribution::ReverseSorted,
+        Distribution::AllEqual,
+        Distribution::TwoValues,
+    ];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Distribution> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+            "uniform" => Some(Distribution::Uniform),
+            "gaussian" | "normal" => Some(Distribution::Gaussian),
+            "zipf" => Some(Distribution::Zipf),
+            "staggered" => Some(Distribution::Staggered),
+            "sorted" => Some(Distribution::Sorted),
+            "nearlysorted" | "almostsorted" => Some(Distribution::NearlySorted),
+            "reverse" | "reversesorted" => Some(Distribution::ReverseSorted),
+            "allequal" | "equal" | "constant" => Some(Distribution::AllEqual),
+            "twovalues" | "binary" => Some(Distribution::TwoValues),
+            _ => None,
+        }
+    }
+
+    /// Short stable identifier for CSV output.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Gaussian => "gaussian",
+            Distribution::Zipf => "zipf",
+            Distribution::Staggered => "staggered",
+            Distribution::Sorted => "sorted",
+            Distribution::NearlySorted => "nearly_sorted",
+            Distribution::ReverseSorted => "reverse",
+            Distribution::AllEqual => "all_equal",
+            Distribution::TwoValues => "two_values",
+        }
+    }
+
+    /// Generate `n` keys with this distribution, deterministically from
+    /// `seed`.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<Key> {
+        let mut rng = Rng::new(seed ^ 0xD15C0_u64.wrapping_mul(self.salt()));
+        match self {
+            Distribution::Uniform => (0..n).map(|_| rng.next_u32()).collect(),
+            Distribution::Gaussian => {
+                let mean = u32::MAX as f64 / 2.0;
+                let sigma = u32::MAX as f64 / 8.0;
+                (0..n)
+                    .map(|_| {
+                        (mean + sigma * rng.next_gaussian()).clamp(0.0, u32::MAX as f64 - 1.0)
+                            as u32
+                    })
+                    .collect()
+            }
+            Distribution::Zipf => (0..n).map(|_| rng.next_zipf(1u64 << 20) as u32).collect(),
+            Distribution::Staggered => {
+                // Helman-style staggered: split into 2^b blocks; block i
+                // contributes the ramp starting at a bit-reversed offset,
+                // defeating naive regular samples of unsorted data.
+                let blocks = 64usize;
+                let block_len = n.div_ceil(blocks);
+                let mut out = Vec::with_capacity(n);
+                for b in 0..blocks {
+                    let rev = (b as u32).reverse_bits() >> (32 - 6);
+                    let base = (rev as u64 * (u32::MAX as u64) / blocks as u64) as u32;
+                    for i in 0..block_len {
+                        if out.len() == n {
+                            break;
+                        }
+                        out.push(base.wrapping_add((i as u32).wrapping_mul(2654435761) % 65536));
+                    }
+                }
+                out
+            }
+            Distribution::Sorted => {
+                let mut v: Vec<Key> = (0..n).map(|_| rng.next_u32()).collect();
+                v.sort_unstable();
+                v
+            }
+            Distribution::NearlySorted => {
+                let mut v: Vec<Key> = (0..n).map(|_| rng.next_u32()).collect();
+                v.sort_unstable();
+                let swaps = n / 100;
+                for _ in 0..swaps {
+                    let i = rng.gen_range(n);
+                    let j = rng.gen_range(n);
+                    v.swap(i, j);
+                }
+                v
+            }
+            Distribution::ReverseSorted => {
+                let mut v: Vec<Key> = (0..n).map(|_| rng.next_u32()).collect();
+                v.sort_unstable();
+                v.reverse();
+                v
+            }
+            Distribution::AllEqual => vec![0xCAFE_F00D; n],
+            Distribution::TwoValues => (0..n).map(|i| if i % 2 == 0 { 10 } else { 20 }).collect(),
+        }
+    }
+
+    fn salt(&self) -> u64 {
+        match self {
+            Distribution::Uniform => 1,
+            Distribution::Gaussian => 2,
+            Distribution::Zipf => 3,
+            Distribution::Staggered => 4,
+            Distribution::Sorted => 5,
+            Distribution::NearlySorted => 6,
+            Distribution::ReverseSorted => 7,
+            Distribution::AllEqual => 8,
+            Distribution::TwoValues => 9,
+        }
+    }
+}
+
+impl std::fmt::Display for Distribution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        for d in Distribution::ALL {
+            let a = d.generate(1000, 7);
+            let b = d.generate(1000, 7);
+            assert_eq!(a, b, "{d}");
+            assert_eq!(a.len(), 1000);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = Distribution::Uniform.generate(1000, 1);
+        let b = Distribution::Uniform.generate(1000, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sorted_is_sorted() {
+        assert!(crate::is_sorted(&Distribution::Sorted.generate(5000, 3)));
+        let rev = Distribution::ReverseSorted.generate(5000, 3);
+        assert!(rev.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn nearly_sorted_is_mostly_sorted() {
+        let v = Distribution::NearlySorted.generate(10_000, 3);
+        let inversions = v.windows(2).filter(|w| w[0] > w[1]).count();
+        assert!(inversions > 0, "should not be fully sorted");
+        assert!(inversions < 500, "should be mostly sorted, got {inversions}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let v = Distribution::Zipf.generate(100_000, 3);
+        let ones = v.iter().filter(|&&x| x == 1).count();
+        // Zipf s=1 over 2^20 values: value 1 has probability ~1/H ≈ 7%.
+        assert!(ones > 2_000, "zipf head too light: {ones}");
+    }
+
+    #[test]
+    fn gaussian_is_centered() {
+        let v = Distribution::Gaussian.generate(100_000, 3);
+        let mid = u32::MAX / 2;
+        let within = v
+            .iter()
+            .filter(|&&x| x > mid / 2 && x < mid + mid / 2)
+            .count();
+        assert!(within > 90_000, "gaussian not clustered: {within}");
+    }
+
+    #[test]
+    fn two_values_and_equal() {
+        let v = Distribution::TwoValues.generate(100, 0);
+        assert!(v.iter().all(|&x| x == 10 || x == 20));
+        let e = Distribution::AllEqual.generate(100, 0);
+        assert!(e.iter().all(|&x| x == e[0]));
+    }
+
+    #[test]
+    fn staggered_covers_range() {
+        let v = Distribution::Staggered.generate(64 * 100, 0);
+        let lo = v.iter().filter(|&&x| x < u32::MAX / 4).count();
+        let hi = v.iter().filter(|&&x| x > 3 * (u32::MAX / 4)).count();
+        assert!(lo > 0 && hi > 0, "staggered should span the range");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in Distribution::ALL {
+            assert_eq!(Distribution::parse(d.id()), Some(d), "{d}");
+        }
+        assert_eq!(Distribution::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,83 @@
+//! CLI integration: the `gbs` binary end to end (spawned as a real
+//! process), covering every subcommand.
+
+use std::process::Command;
+
+fn gbs(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_gbs"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_and_specs() {
+    let (ok, text) = gbs(&["help"]);
+    assert!(ok);
+    assert!(text.contains("experiment"));
+    let (ok, text) = gbs(&["specs"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("GTX 285"));
+    assert!(text.contains("102")); // Tesla bandwidth
+}
+
+#[test]
+fn sort_native_and_sim() {
+    let (ok, text) = gbs(&["sort", "--n", "200K", "--engine", "native"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified: sorted permutation"), "{text}");
+
+    let (ok, text) = gbs(&[
+        "sort", "--n", "100K", "--engine", "sim", "--device", "gtx260", "--algo", "rss",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Randomized"), "{text}");
+    assert!(text.contains("verified"), "{text}");
+}
+
+#[test]
+fn sort_rejects_bad_flags() {
+    let (ok, text) = gbs(&["sort", "--n", "bogus"]);
+    assert!(!ok);
+    assert!(text.contains("error"), "{text}");
+    let (ok, _) = gbs(&["sort", "--engine", "warp-drive"]);
+    assert!(!ok);
+    let (ok, _) = gbs(&["frobnicate"]);
+    assert!(!ok);
+}
+
+#[test]
+fn experiment_fast_writes_csv() {
+    let out_dir = std::env::temp_dir().join(format!("gbs_cli_{}", std::process::id()));
+    let out = out_dir.to_str().unwrap();
+    let (ok, text) = gbs(&["experiment", "fig4", "--fast", "true", "--out", out]);
+    assert!(ok, "{text}");
+    assert!(text.contains("| 1M |"), "{text}");
+    let csv = std::fs::read_to_string(out_dir.join("fig4.csv")).unwrap();
+    assert!(csv.starts_with("n,"));
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+#[test]
+fn config_prints_valid_json() {
+    let (ok, text) = gbs(&["config"]);
+    assert!(ok, "{text}");
+    let parsed = gpu_bucket_sort::util::Json::parse(&text).expect("valid json");
+    assert_eq!(parsed.get("engine").and_then(|v| v.as_str()), Some("native"));
+}
+
+#[test]
+fn serve_small_load() {
+    let (ok, text) = gbs(&[
+        "serve", "--requests", "8", "--concurrency", "2", "--n", "50K",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("requests_completed: 8"), "{text}");
+}

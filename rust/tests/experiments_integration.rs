@@ -1,0 +1,79 @@
+//! Experiment-harness integration: every table/figure function runs at
+//! reduced scale, renders, and persists; the qualitative paper claims
+//! encoded in the tables hold end to end.
+
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::GpuModel;
+
+#[test]
+fn all_tables_generate_and_persist() {
+    let dir = std::env::temp_dir().join(format!("gbs_results_{}", std::process::id()));
+    let ladder = exp::paper_n_ladder(64 << 20);
+    let tables = vec![
+        exp::table1(),
+        exp::fig3_sample_size(&[32 << 20], &exp::FIG3_S_VALUES),
+        exp::fig4_devices(&ladder),
+        exp::fig5_step_breakdown(&[32 << 20]),
+        exp::fig6_gtx285(&ladder),
+        exp::fig7_tesla(&ladder),
+        exp::sort_rate_series(&ladder, GpuModel::TeslaC1060),
+    ];
+    for t in &tables {
+        assert!(!t.rows.is_empty(), "{}", t.name);
+        let path = t.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() > t.rows.len(), "{}", t.name);
+        // Console rendering is well-formed.
+        let md = t.to_markdown();
+        assert!(md.contains(&t.name));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn headline_claims_hold_at_paper_scale() {
+    // The cross-figure headline: deterministic ≈ randomized (uniform),
+    // both ≫ Thrust Merge, GBS alone reaches the top of the range.
+    let ns = exp::paper_n_ladder(256 << 20);
+    let fig6 = exp::fig6_gtx285(&ns);
+    let at = |label: &str| {
+        fig6.rows
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, v)| v.clone())
+            .unwrap()
+    };
+    let r16 = at("16M");
+    let (gbs, rss, thrust) = (r16[0].unwrap(), r16[1].unwrap(), r16[2].unwrap());
+    assert!(
+        (0.5..2.0).contains(&(rss / gbs)),
+        "sample sorts comparable: {gbs} vs {rss}"
+    );
+    assert!(thrust > 1.5 * gbs, "thrust clearly slower: {thrust} vs {gbs}");
+    assert!(at("256M")[0].is_some(), "GBS reaches 256M");
+    assert!(at("64M")[1].is_none(), "RSS stops at 32M (1 GB card)");
+    assert!(at("32M")[2].is_none(), "Thrust stops at 16M");
+}
+
+#[test]
+fn fig3_tradeoff_is_u_shaped_at_64m() {
+    let t = exp::fig3_sample_size(&[64 << 20], &exp::FIG3_S_VALUES);
+    let series: Vec<f64> = t.rows.iter().map(|r| r.1[0].unwrap()).collect();
+    let (min_idx, min) = series
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, v)| (i, *v))
+        .unwrap();
+    assert!(min_idx > 0 && min_idx < series.len() - 1, "{series:?}");
+    assert!(series[0] > min * 1.05 && series[series.len() - 1] > min * 1.02);
+}
+
+#[test]
+fn gbs_is_deterministic_across_runs() {
+    // §5: "<1 ms observed variance" — identical estimates for repeated
+    // runs on the same input class.
+    let a = exp::gbs_ms(32 << 20, 64, GpuModel::Gtx285_2G).unwrap();
+    let b = exp::gbs_ms(32 << 20, 64, GpuModel::Gtx285_2G).unwrap();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,48 @@
+//! Integration: the AOT artifacts load, compile and execute through the
+//! rust PJRT runtime, and the results match a host sort. Skips (with a
+//! notice) when `make artifacts` has not been run.
+
+use gpu_bucket_sort::runtime::PjrtRuntime;
+use gpu_bucket_sort::workload::Distribution;
+
+fn runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping PJRT tests ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_sort_correctly() {
+    let Some(mut rt) = runtime() else { return };
+    for n in [1usize, 100, 4095, 4096] {
+        let mut keys = Distribution::Uniform.generate(n, n as u64);
+        // The fixed-shape pipeline reserves u32::MAX as sentinel.
+        for k in keys.iter_mut() {
+            if *k == u32::MAX {
+                *k -= 1;
+            }
+        }
+        let (sorted, cap) = rt.sort(&keys).unwrap();
+        assert!(cap >= n);
+        assert!(gpu_bucket_sort::is_sorted_permutation(&keys, &sorted), "n={n}");
+    }
+}
+
+#[test]
+fn sentinel_keys_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let err = rt.sort(&[1, u32::MAX, 2]).unwrap_err();
+    assert!(err.to_string().contains("sentinel"), "{err}");
+}
+
+#[test]
+fn oversized_requests_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let cap = rt.manifest().max_sort_capacity();
+    let keys = vec![0u32; cap + 1];
+    assert!(rt.sort(&keys).is_err());
+}

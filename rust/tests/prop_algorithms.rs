@@ -1,0 +1,202 @@
+//! Property tests over the algorithm layer (in-tree propcheck driver):
+//! correctness, the deterministic bucket guarantee, analytic↔executed
+//! ledger agreement, and cross-algorithm result agreement over
+//! arbitrary inputs, sizes and parameters.
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::algos::radix::{RadixParams, RadixSort};
+use gpu_bucket_sort::algos::randomized::{RandomizedParams, RandomizedSampleSort};
+use gpu_bucket_sort::algos::thrust_merge::{ThrustMergeParams, ThrustMergeSort};
+use gpu_bucket_sort::algos::{bitonic, Algorithm};
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::propcheck::forall;
+use gpu_bucket_sort::{is_sorted_permutation, Key};
+
+fn sim() -> GpuSim {
+    GpuSim::new(GpuModel::Gtx285_2G.spec())
+}
+
+fn gen_params(g: &mut gpu_bucket_sort::util::propcheck::Gen) -> BucketSortParams {
+    let tile = *g.choose(&[64usize, 128, 256, 512]);
+    let s = *g.choose(&[2usize, 4, 8, 16, 32, 64]);
+    BucketSortParams { tile, s: s.min(tile) }
+}
+
+#[test]
+fn bucket_sort_sorts_anything() {
+    forall(60, "bucket sort = sorted permutation", |g| {
+        let keys = g.vec_u32(0..6000);
+        let params = gen_params(g);
+        let mut out = keys.clone();
+        BucketSort::new(params).sort(&mut out, &mut sim()).unwrap();
+        assert!(is_sorted_permutation(&keys, &out), "params {params:?}");
+    });
+}
+
+#[test]
+fn bucket_guarantee_on_bounded_ties() {
+    forall(40, "max bucket <= 2n/s for tie-bounded inputs", |g| {
+        let params = gen_params(g);
+        let n = g.usize_in(params.tile..params.tile * 40);
+        // Distinct-ish keys: multiplicities stay far below n/s.
+        let keys: Vec<Key> = (0..n)
+            .map(|i| (i as u32).wrapping_mul(2654435761) ^ g.case as u32)
+            .collect();
+        let mut out = keys.clone();
+        let r = BucketSort::new(params).sort(&mut out, &mut sim()).unwrap();
+        // The Shi–Schaeffer bound on real keys, plus the alignment pads
+        // (all equal to the MAX sentinel, they land in the last bucket;
+        // at paper shapes pads ≤ tile−1 ≪ 2n/s, at toy shapes they can
+        // dominate it).
+        let bound = (2 * r.padded_n / r.s + (r.padded_n - n)) as u64;
+        assert!(
+            r.max_bucket <= bound,
+            "n={n} params={params:?} max={} bound={bound}",
+            r.max_bucket,
+        );
+    });
+}
+
+#[test]
+fn analytic_ledger_equals_executed() {
+    forall(40, "analytic == executed ledger (GBS)", |g| {
+        let params = gen_params(g);
+        let n = g.usize_in(1..params.tile * 30);
+        let mut keys = g.vec_u32(n..n + 1);
+        let mut sim_e = sim();
+        let exec = BucketSort::new(params).sort(&mut keys, &mut sim_e).unwrap();
+        let mut sim_a = sim();
+        let ana = BucketSort::new(params).sort_analytic(n, &mut sim_a).unwrap();
+        assert_eq!(exec.ledger, ana.ledger, "n={n} params={params:?}");
+        assert_eq!(exec.peak_device_bytes, ana.peak_device_bytes);
+    });
+}
+
+#[test]
+fn thrust_analytic_equals_executed() {
+    forall(30, "analytic == executed ledger (thrust)", |g| {
+        let n = g.usize_in(1..50_000);
+        let mut keys = g.vec_u32(n..n + 1);
+        let sorter = ThrustMergeSort::new(ThrustMergeParams { tile: 256 });
+        let mut sim_e = sim();
+        let exec = sorter.sort(&mut keys, &mut sim_e).unwrap();
+        let mut sim_a = sim();
+        let ana = sorter.sort_analytic(n, &mut sim_a).unwrap();
+        assert_eq!(exec.ledger, ana.ledger, "n={n}");
+    });
+}
+
+#[test]
+fn all_algorithms_agree() {
+    forall(30, "all four algorithms produce the same output", |g| {
+        let keys = g.vec_u32(0..4000);
+        let mut expected = keys.clone();
+        expected.sort_unstable();
+        for algo in Algorithm::ALL {
+            let mut out = keys.clone();
+            algo.run(&mut out, &mut sim()).unwrap();
+            assert_eq!(out, expected, "{algo}");
+        }
+    });
+}
+
+#[test]
+fn randomized_sorts_with_any_seed() {
+    forall(30, "randomized sample sort is seed-robust", |g| {
+        let keys = g.vec_u32(0..20_000);
+        let sorter = RandomizedSampleSort::new(RandomizedParams {
+            k: *g.choose(&[4usize, 8, 32]),
+            oversample: *g.choose(&[2usize, 8]),
+            base_case: 512,
+            tile: 256,
+            seed: g.rng().next_u64(),
+        });
+        let mut out = keys.clone();
+        sorter.sort(&mut out, &mut sim()).unwrap();
+        assert!(is_sorted_permutation(&keys, &out));
+    });
+}
+
+#[test]
+fn radix_handles_extreme_values() {
+    forall(30, "radix sorts boundary-valued keys", |g| {
+        let mut keys = g.vec_u32(0..3000);
+        // Salt with boundary values.
+        keys.extend_from_slice(&[0, 1, u32::MAX, u32::MAX - 1, 1 << 31]);
+        let mut out = keys.clone();
+        RadixSort::new(RadixParams { tile: 256 })
+            .sort(&mut out, &mut sim())
+            .unwrap();
+        assert!(is_sorted_permutation(&keys, &out));
+    });
+}
+
+#[test]
+fn native_engine_matches_std_sort() {
+    let engine = NativeEngine::new(NativeParams {
+        workers: 4,
+        sequential_cutoff: 1 << 10,
+        ..NativeParams::default()
+    })
+    .unwrap();
+    forall(40, "native engine == std sort", |g| {
+        let keys = g.vec_u32(0..100_000);
+        let mut expected = keys.clone();
+        expected.sort_unstable();
+        let mut out = keys;
+        engine.sort(&mut out);
+        assert_eq!(out, expected);
+    });
+}
+
+#[test]
+fn bitonic_network_is_oblivious() {
+    forall(40, "bitonic CE count depends only on n", |g| {
+        let ln = g.usize_in(0..11);
+        let n = 1usize << ln;
+        let mut a = g.vec_u32(n..n + 1);
+        let mut b: Vec<Key> = (0..n as u32).collect();
+        let ce_a = bitonic::sort_slice(&mut a);
+        let ce_b = bitonic::sort_slice(&mut b);
+        assert_eq!(ce_a, ce_b);
+        assert_eq!(ce_a, bitonic::ce_count(n));
+        assert!(gpu_bucket_sort::is_sorted(&a));
+    });
+}
+
+#[test]
+fn ledger_is_input_independent_for_tie_bounded_inputs() {
+    forall(25, "GBS ledger identical across tie-bounded inputs", |g| {
+        let params = BucketSortParams { tile: 256, s: 16 };
+        let n = g.usize_in(256..8192);
+        // Two different permutations of distinct keys.
+        let a: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        let b: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2246822519)).collect();
+        let mut sim_a = sim();
+        let ra = BucketSort::new(params).sort(&mut a.clone(), &mut sim_a).unwrap();
+        let mut sim_b = sim();
+        let rb = BucketSort::new(params).sort(&mut b.clone(), &mut sim_b).unwrap();
+        assert_eq!(ra.ledger, rb.ledger);
+    });
+}
+
+#[test]
+fn device_capacity_is_monotone() {
+    // If n keys fit a device, any smaller input also fits; if n fails,
+    // larger inputs also fail.
+    let sorter = BucketSort::new(BucketSortParams::default());
+    for gpu in GpuModel::ALL {
+        let mut last_ok = true;
+        for shift in 20..31 {
+            let n = 1usize << shift;
+            let mut s = GpuSim::new(gpu.spec());
+            let ok = sorter.sort_analytic(n, &mut s).is_ok();
+            assert!(
+                !(ok && !last_ok),
+                "{gpu}: capacity not monotone at n=2^{shift}"
+            );
+            last_ok = ok;
+        }
+    }
+}

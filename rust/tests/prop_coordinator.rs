@@ -1,0 +1,148 @@
+//! Property tests over the coordinator: batcher conservation and order
+//! invariants under random request sequences, and service-level
+//! identity/permutation guarantees under random job mixes.
+
+use gpu_bucket_sort::config::{BatchConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{Batcher, PendingRequest, SortJob, SortService};
+use gpu_bucket_sort::util::propcheck::forall;
+use std::time::{Duration, Instant};
+
+type OutcomeRx =
+    std::sync::mpsc::Receiver<gpu_bucket_sort::Result<gpu_bucket_sort::coordinator::SortOutcome>>;
+
+fn req(id: u64, n: usize, at: Instant) -> (PendingRequest, OutcomeRx) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    (
+        PendingRequest {
+            id,
+            job: SortJob::new(vec![0; n]),
+            admitted_at: at,
+            respond_to: tx,
+        },
+        rx,
+    )
+}
+
+#[test]
+fn batcher_conserves_and_orders_requests() {
+    forall(60, "batcher: conservation + FIFO + budgets", |g| {
+        let cfg = BatchConfig {
+            max_batch_keys: g.usize_in(1..500),
+            max_batch_requests: g.usize_in(1..10),
+            max_wait_ms: 5,
+            queue_capacity: 64,
+            max_queued_keys: 1 << 20,
+        };
+        let mut batcher = Batcher::new(cfg);
+        let t0 = Instant::now();
+        let n_reqs = g.usize_in(0..40);
+        let mut admitted = Vec::new();
+        let mut rxs = Vec::new();
+        for id in 0..n_reqs as u64 {
+            let len = g.usize_in(0..300);
+            let (r, rx) = req(id, len, t0);
+            if batcher.admit(r).is_ok() {
+                admitted.push(id);
+                rxs.push(rx);
+            }
+        }
+        // Random interleave of polls and drains, collecting batches.
+        let mut seen = Vec::new();
+        let mut time = t0;
+        while batcher.queued_requests() > 0 {
+            time += Duration::from_millis(g.usize_in(1..10) as u64);
+            let batch = if g.bool(0.3) {
+                batcher.drain()
+            } else {
+                batcher.poll(time)
+            };
+            if let Some(b) = batch {
+                assert!(!b.is_empty(), "batches are never empty");
+                // Budgets hold unless a single oversized request forms
+                // the whole batch.
+                if b.len() > 1 {
+                    assert!(b.total_keys <= cfg.max_batch_keys, "key budget");
+                    assert!(b.len() <= cfg.max_batch_requests, "request budget");
+                }
+                for r in &b.requests {
+                    seen.push(r.id);
+                }
+            }
+        }
+        // Conservation + FIFO: every admitted request exactly once, in
+        // admission order.
+        assert_eq!(seen, admitted);
+    });
+}
+
+#[test]
+fn batcher_restore_front_preserves_order() {
+    forall(30, "restore_front round-trips", |g| {
+        let cfg = BatchConfig {
+            max_batch_keys: 1000,
+            max_batch_requests: 8,
+            max_wait_ms: 0,
+            queue_capacity: 64,
+            max_queued_keys: 1 << 20,
+        };
+        let mut batcher = Batcher::new(cfg);
+        let t0 = Instant::now();
+        let n_reqs = g.usize_in(1..20);
+        let mut rxs = Vec::new();
+        for id in 0..n_reqs as u64 {
+            let (r, rx) = req(id, g.usize_in(0..100), t0);
+            batcher.admit(r).unwrap();
+            rxs.push(rx);
+        }
+        let keys_before = batcher.queued_keys();
+        let batch = batcher.poll(t0 + Duration::from_millis(1)).unwrap();
+        batcher.restore_front(batch);
+        assert_eq!(batcher.queued_keys(), keys_before);
+        // Draining now yields ids in the original order.
+        let mut ids = Vec::new();
+        while let Some(b) = batcher.drain() {
+            ids.extend(b.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, (0..n_reqs as u64).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn service_returns_each_requests_own_keys() {
+    // Random mixes of sizes and distributions, submitted in a burst:
+    // every response is the sorted permutation of its own input, with
+    // matching tags.
+    let cfg = ServiceConfig {
+        verify: false,
+        batch: BatchConfig {
+            max_batch_keys: 1 << 18,
+            max_batch_requests: 6,
+            max_wait_ms: 1,
+            queue_capacity: 256,
+            max_queued_keys: 1 << 24,
+        },
+        ..Default::default()
+    };
+    let client = SortService::start(cfg).unwrap();
+    forall(12, "service identity + permutation", |g| {
+        let jobs: Vec<Vec<u32>> = (0..g.usize_in(1..12)).map(|_| g.vec_u32(0..20_000)).collect();
+        let rxs: Vec<_> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, keys)| {
+                client
+                    .submit(SortJob::tagged(keys.clone(), format!("job-{i}")))
+                    .unwrap()
+            })
+            .collect();
+        for (i, (rx, input)) in rxs.into_iter().zip(&jobs).enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.tag.as_deref(), Some(format!("job-{i}").as_str()));
+            assert!(
+                gpu_bucket_sort::is_sorted_permutation(input, &out.keys),
+                "job {i}"
+            );
+        }
+    });
+    client.shutdown();
+}

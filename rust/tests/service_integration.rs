@@ -1,0 +1,148 @@
+//! Service integration: engine fallback behaviour, verify-mode fault
+//! detection, mixed success/failure batches, metrics consistency, and
+//! sustained concurrent load.
+
+use gpu_bucket_sort::algos::bucket_sort::BucketSortParams;
+use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SimSortEngine, SortEngine, SortJob, SortService};
+use gpu_bucket_sort::sim::{GpuModel, GpuSpec};
+use gpu_bucket_sort::workload::Distribution;
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        verify: true,
+        batch: BatchConfig {
+            max_batch_keys: 1 << 20,
+            max_batch_requests: 8,
+            max_wait_ms: 1,
+            queue_capacity: 256,
+            max_queued_keys: 1 << 26,
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sustained_concurrent_load() {
+    let client = SortService::start(cfg()).unwrap();
+    let total = 64;
+    std::thread::scope(|scope| {
+        for w in 0..8u64 {
+            let client = client.clone();
+            scope.spawn(move || {
+                for r in 0..total / 8 {
+                    let dist = Distribution::ALL[(w as usize + r) % Distribution::ALL.len()];
+                    let keys = dist.generate(5_000 + r * 997, w * 100 + r as u64);
+                    let out = client.sort(SortJob::new(keys.clone())).unwrap();
+                    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, &out.keys));
+                }
+            });
+        }
+    });
+    let snap = client.shutdown();
+    assert_eq!(snap.counters["requests_completed"], total as u64);
+    assert_eq!(snap.counters["requests_received"], total as u64);
+    assert!(!snap.counters.contains_key("requests_failed"));
+    // Latency histograms populated.
+    assert!(snap.timers["engine_batch"].count > 0);
+    assert!(snap.timers["queue_delay"].count >= total as u64);
+}
+
+#[test]
+fn verify_mode_catches_a_corrupting_engine() {
+    /// An engine that returns sorted output for the wrong keys.
+    struct EvilEngine;
+    impl SortEngine for EvilEngine {
+        fn kind(&self) -> EngineKind {
+            EngineKind::Native
+        }
+        fn sort_batch(
+            &mut self,
+            jobs: Vec<Vec<u32>>,
+        ) -> Vec<gpu_bucket_sort::Result<Vec<u32>>> {
+            jobs.into_iter()
+                .map(|mut k| {
+                    k.sort_unstable();
+                    if !k.is_empty() {
+                        k[0] = k[0].wrapping_add(1); // corrupt
+                    }
+                    Ok(k)
+                })
+                .collect()
+        }
+    }
+    let client = SortService::start_with_engine(cfg(), EvilEngine).unwrap();
+    let err = client
+        .sort(SortJob::new(vec![5, 3, 8, 1]))
+        .expect_err("verification must catch the corruption");
+    assert!(err.to_string().contains("verification failed"), "{err}");
+    let snap = client.shutdown();
+    assert_eq!(snap.counters["requests_failed"], 1);
+}
+
+#[test]
+fn mixed_batch_partial_failure() {
+    // Sim engine on a small device: jobs over the ceiling fail with
+    // OOM, batch-mates succeed — in the same batch.
+    let mut config = cfg();
+    config.sort = BucketSortParams { tile: 256, s: 16 };
+    config.batch.max_batch_requests = 4;
+    config.batch.max_wait_ms = 20;
+    let spec = GpuSpec {
+        name: "tiny-2MB".into(),
+        global_memory_bytes: 2 << 20,
+        ..GpuModel::Gtx260.spec()
+    };
+    let engine = SimSortEngine::from_parts(spec, config.sort).unwrap();
+    let client = SortService::start_with_engine(config, engine).unwrap();
+
+    let small = Distribution::Uniform.generate(20_000, 1);
+    let big = Distribution::Uniform.generate(600_000, 2);
+    let rx_small = client.submit(SortJob::new(small.clone())).unwrap();
+    let rx_big = client.submit(SortJob::new(big)).unwrap();
+
+    let ok = rx_small.recv().unwrap().unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&small, &ok.keys));
+    let err = rx_big.recv().unwrap().unwrap_err();
+    assert!(err.is_oom(), "{err}");
+    client.shutdown();
+}
+
+#[test]
+fn engine_construction_failure_reported_synchronously() {
+    let bad = ServiceConfig {
+        engine: EngineKind::Pjrt,
+        artifacts_dir: "/definitely/not/a/dir".into(),
+        ..Default::default()
+    };
+    let err = SortService::start(bad).expect_err("construction must fail");
+    assert!(err.to_string().contains("manifest"), "{err}");
+}
+
+#[test]
+fn zero_and_giant_requests() {
+    let client = SortService::start(cfg()).unwrap();
+    // Zero-key request completes without touching the engine.
+    let out = client.sort(SortJob::new(vec![])).unwrap();
+    assert!(out.keys.is_empty());
+    // A request larger than max_batch_keys forms its own batch.
+    let giant = Distribution::Uniform.generate(3 << 20, 9);
+    let out = client.sort(SortJob::new(giant.clone())).unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&giant, &out.keys));
+    assert_eq!(out.batch_size, 1);
+    client.shutdown();
+}
+
+#[test]
+fn metrics_keys_accounting_balances() {
+    let client = SortService::start(cfg()).unwrap();
+    let sizes = [100usize, 5000, 65_536];
+    for (i, &n) in sizes.iter().enumerate() {
+        let keys = Distribution::Uniform.generate(n, i as u64);
+        client.sort(SortJob::new(keys)).unwrap();
+    }
+    let snap = client.shutdown();
+    let total: usize = sizes.iter().sum();
+    assert_eq!(snap.counters["keys_received"], total as u64);
+    assert_eq!(snap.counters["keys_sorted"], total as u64);
+}
