@@ -1,0 +1,68 @@
+//! Sharded engine scaling (beyond the paper): throughput vs device
+//! count. The analytic table shows the memory ceiling moving out as
+//! devices are added (one GTX 285 dies at 256M; pools of 2/4/8 reach
+//! 512M and beyond) and the makespan speedup at fixed n; the executed
+//! runs wall-clock the host engine and pin the executed ledger to the
+//! analytic one.
+
+mod common;
+
+use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
+use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::sim::{DevicePool, GpuModel};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::workload::Distribution;
+
+fn main() {
+    // (a) Paper-scale scaling table (1M – 512M × 1/2/4/8 GTX 285s).
+    common::emit_table(&exp::sharded_scaling(
+        &exp::paper_n_ladder(512 << 20),
+        &[1, 2, 4, 8],
+        GpuModel::Gtx285_2G,
+    ));
+
+    // (b) The heterogeneous default pool at 768M — past every single
+    // device of Table 1 (the Tesla tops out at 512M).
+    let sorter = ShardedSort::new(ShardedSortParams::default());
+    let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+    let report = sorter.sort_analytic(768 << 20, &mut pool).unwrap();
+    println!(
+        "heterogeneous 4-device pool, n=768M: estimated makespan {:.1} ms ({:.1} Mkeys/s), shards {:?}",
+        report.makespan_ms(&pool),
+        report.sort_rate_mkeys_s(&pool),
+        report.shard_sizes
+    );
+
+    // (c) Executed runs at a host-feasible size; executed and analytic
+    // ledgers must agree device by device.
+    let n = 1 << 21;
+    let keys = Distribution::Uniform.generate(n, 9);
+    let bencher = Bencher::from_env();
+    let mut results = Vec::new();
+    for count in [1usize, 2, 4] {
+        let models = vec![GpuModel::Gtx285_2G; count];
+        let mut makespan = 0.0;
+        let r = bencher.bench(format!("sharded/exec/devices={count}"), || {
+            let mut k = keys.clone();
+            let mut pool = DevicePool::new(&models).unwrap();
+            let report = sorter.sort(&mut k, &mut pool).unwrap();
+            makespan = report.makespan_ms(&pool);
+            k
+        });
+        let mut pool_e = DevicePool::new(&models).unwrap();
+        let mut k = keys.clone();
+        sorter.sort(&mut k, &mut pool_e).unwrap();
+        let mut pool_a = DevicePool::new(&models).unwrap();
+        sorter.sort_analytic(n, &mut pool_a).unwrap();
+        for (d, (se, sa)) in pool_e.sims().iter().zip(pool_a.sims()).enumerate() {
+            assert_eq!(
+                se.ledger(),
+                sa.ledger(),
+                "executed != analytic ledger on device {d} of {count}"
+            );
+        }
+        println!("    {count} device(s): simulated makespan {makespan:.2} ms");
+        results.push(r);
+    }
+    common::emit_measurements("sharded", &results);
+}

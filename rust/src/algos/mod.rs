@@ -15,6 +15,7 @@
 //! | [`prefix`] | Step 7 (column-major prefix sum, Figure 1) |
 //! | [`relocation`] | Step 8 (coalesced bucket move) |
 //! | [`bucket_sort`] | Algorithm 1 end-to-end |
+//! | [`sharded`] | Algorithm 1 sharded across a multi-GPU pool (beyond the paper) |
 //! | [`randomized`] | Leischner et al. randomized sample sort [9] |
 //! | [`thrust_merge`] | Satish et al. Thrust Merge [14] |
 //! | [`radix`] | Satish et al. integer radix sort [14] |
@@ -28,6 +29,7 @@ pub mod radix;
 pub mod randomized;
 pub mod relocation;
 pub mod sampling;
+pub mod sharded;
 pub mod thrust_merge;
 
 use crate::error::Result;
@@ -59,7 +61,9 @@ impl Algorithm {
     /// Parse a CLI name.
     pub fn parse(s: &str) -> Option<Algorithm> {
         match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
-            "bucketsort" | "bucket" | "gbs" | "deterministic" => Some(Algorithm::BucketSort),
+            "bucketsort" | "bucket" | "gbs" | "deterministic" | "dss" => {
+                Some(Algorithm::BucketSort)
+            }
             "randomized" | "samplesort" | "rss" => Some(Algorithm::Randomized),
             "thrustmerge" | "thrust" | "merge" => Some(Algorithm::ThrustMerge),
             "radix" => Some(Algorithm::Radix),
@@ -110,6 +114,7 @@ mod tests {
     #[test]
     fn parse_algorithms() {
         assert_eq!(Algorithm::parse("gbs"), Some(Algorithm::BucketSort));
+        assert_eq!(Algorithm::parse("dss"), Some(Algorithm::BucketSort));
         assert_eq!(Algorithm::parse("Bucket-Sort"), Some(Algorithm::BucketSort));
         assert_eq!(Algorithm::parse("rss"), Some(Algorithm::Randomized));
         assert_eq!(Algorithm::parse("thrust"), Some(Algorithm::ThrustMerge));

@@ -1,0 +1,745 @@
+//! Sharded (multi-device) deterministic sample sort — the first step
+//! past the paper's hardware.
+//!
+//! Figures 6 & 7 of the paper end where the device's global memory
+//! ends: 64M keys on the GTX 260, 256M on the GTX 285 (2 GB), 512M on
+//! the Tesla C1060. This module removes that ceiling by running the
+//! same splitter discipline **one level up**: partition the input
+//! across a [`DevicePool`], run [`BucketSort`] (Algorithm 1) per
+//! device, then combine the shards with a deterministic cross-device
+//! sample sort — regular sampling of every sorted shard, a global
+//! splitter sort, a partition/exchange, and a p-way merge per
+//! destination device (the multiway-merge structure of Casanova et
+//! al., arXiv:1702.07961).
+//!
+//! Determinism is preserved at both levels. Within a device, bucket
+//! sizes are guaranteed by the paper's regular sampling; across
+//! devices, the same regular-sampling argument (Shi & Schaeffer)
+//! bounds every destination shard, so — unlike a randomized
+//! splitter choice — no device becomes a data-dependent straggler or
+//! OOMs on a skewed input. The combine step's launch/traffic ledger is
+//! **input-independent** by construction: merge work is priced at the
+//! capacity-weighted balanced shard size, exactly as Step 9 of
+//! [`BucketSort`] prices buckets at their guaranteed capacity.
+//!
+//! Two entry points mirror the single-device API:
+//! * [`ShardedSort::sort`] — executes everything for real on the host
+//!   while each [`crate::sim::GpuSim`] in the pool records the traffic
+//!   its device would generate;
+//! * [`ShardedSort::sort_analytic`] — the identical per-device ledgers
+//!   from closed forms, enabling pool configurations beyond any single
+//!   device's memory (≥ 512M keys) without materializing data.
+
+use super::bucket_sort::{BucketSort, BucketSortParams, BucketSortReport};
+use super::{bitonic, indexing, prefix, sampling};
+use crate::error::Result;
+use crate::sim::ledger::{KernelClass, Ledger};
+use crate::sim::pool::DevicePool;
+use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::sim::CostModel;
+use crate::{Key, KEY_BYTES};
+
+/// Tunable parameters of the sharded sort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardedSortParams {
+    /// Algorithm-1 parameters used by every device's local sort.
+    pub sort: BucketSortParams,
+    /// Regular samples taken from each sorted shard for cross-device
+    /// splitter selection (the inter-device analogue of the paper's
+    /// `s`). More samples tighten the destination-shard balance bound.
+    pub merge_samples: usize,
+}
+
+impl Default for ShardedSortParams {
+    fn default() -> Self {
+        ShardedSortParams {
+            sort: BucketSortParams::default(),
+            merge_samples: 64,
+        }
+    }
+}
+
+impl ShardedSortParams {
+    /// Validate the combination.
+    pub fn validate(&self) -> Result<()> {
+        self.sort.validate()?;
+        if self.merge_samples == 0 {
+            return Err(crate::Error::InvalidParams(
+                "merge_samples must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Everything recorded about one sharded sort. Per-device vectors are
+/// indexed like the pool that produced them.
+#[derive(Debug, Clone)]
+pub struct ShardedSortReport {
+    /// Requested key count.
+    pub n: usize,
+    /// Capacity-weighted input shard per device (sums to `n`).
+    pub shard_sizes: Vec<usize>,
+    /// Per-device Algorithm-1 report for the local sort phase.
+    pub local: Vec<BucketSortReport>,
+    /// Coordinator-side combine traffic (sampling, splitter sort,
+    /// partition, prefix, exchange), recorded on device 0.
+    pub combine: Ledger,
+    /// Per-destination-device merge traffic.
+    pub merge: Vec<Ledger>,
+    /// Peak simulated memory per device over the whole run.
+    pub peak_device_bytes: Vec<usize>,
+    /// Largest destination shard observed (`0` for analytic runs); the
+    /// regular-sampling discipline keeps it near the balanced share.
+    pub max_out_shard: u64,
+}
+
+impl ShardedSortReport {
+    /// Number of devices the run was sharded over.
+    pub fn devices(&self) -> usize {
+        self.shard_sizes.len()
+    }
+
+    /// Estimated wall-clock milliseconds of the sharded run on `pool`
+    /// (which must be the pool that produced this report): devices run
+    /// each phase in parallel, so the makespan is the slowest device's
+    /// local sort, plus the coordinator's combine pass, plus the
+    /// slowest device's merge.
+    pub fn makespan_ms(&self, pool: &DevicePool) -> f64 {
+        let local = self
+            .local
+            .iter()
+            .enumerate()
+            .map(|(d, r)| CostModel::default_params(pool.spec(d)).ledger_ms(&r.ledger))
+            .fold(0.0, f64::max);
+        let combine = CostModel::default_params(pool.spec(0)).ledger_ms(&self.combine);
+        let merge = self
+            .merge
+            .iter()
+            .enumerate()
+            .map(|(d, l)| CostModel::default_params(pool.spec(d)).ledger_ms(l))
+            .fold(0.0, f64::max);
+        local + combine + merge
+    }
+
+    /// Pool-level sorting rate in Mkeys/s (the §5 metric, scaled out).
+    pub fn sort_rate_mkeys_s(&self, pool: &DevicePool) -> f64 {
+        CostModel::sort_rate_mkeys_s(self.n, self.makespan_ms(pool))
+    }
+}
+
+/// Shape-determined structure of the combine phase — computed once from
+/// the shard sizes and shared by the Execute and Analytic paths so
+/// their ledgers agree by construction.
+struct CombinePlan {
+    /// Samples contributed by each shard: `min(merge_samples, share)`.
+    sample_counts: Vec<usize>,
+    /// Σ sample_counts.
+    total_samples: usize,
+    /// Sample array padded to a power of two for the bitonic sort.
+    padded_samples: usize,
+    /// Binary-search probes of the partition step (fixed trip counts,
+    /// so shape-determined).
+    probes: u64,
+    /// Pairwise-merge rounds per destination: ⌈log2 p⌉.
+    merge_rounds: u32,
+}
+
+/// The multi-device deterministic sample sorter.
+#[derive(Debug, Clone)]
+pub struct ShardedSort {
+    params: ShardedSortParams,
+}
+
+impl ShardedSort {
+    /// Construct with the given parameters (panics on invalid ones; use
+    /// [`ShardedSort::try_new`] for fallible construction).
+    pub fn new(params: ShardedSortParams) -> Self {
+        params.validate().expect("invalid ShardedSortParams");
+        ShardedSort { params }
+    }
+
+    /// Fallible constructor.
+    pub fn try_new(params: ShardedSortParams) -> Result<Self> {
+        params.validate()?;
+        Ok(ShardedSort { params })
+    }
+
+    /// The parameters in use.
+    pub fn params(&self) -> &ShardedSortParams {
+        &self.params
+    }
+
+    /// Sort `keys` in place across the pool, recording per-device
+    /// traffic and enforcing every device's memory capacity.
+    ///
+    /// The output is the fully sorted permutation of the input —
+    /// byte-identical to what a single-device [`BucketSort`] with
+    /// enough memory would produce.
+    pub fn sort(&self, keys: &mut [Key], pool: &mut DevicePool) -> Result<ShardedSortReport> {
+        let n = keys.len();
+        let p = pool.len();
+        let shares = pool.shares(n);
+        // Inputs too small to give every device at least one tile are
+        // not worth sharding (the combine overhead dominates): route
+        // them to the highest-capacity device. The rule depends only on
+        // (n, pool), keeping Execute/Analytic agreement.
+        if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
+            return self.fallback(FallbackInput::Execute(keys), pool);
+        }
+        let sorter = BucketSort::try_new(self.params.sort)?;
+
+        // Phase 1: per-device Algorithm 1 over the capacity-weighted
+        // shards (devices run in parallel; ledgers are per-sim).
+        let mut local = Vec::with_capacity(p);
+        let mut shards: Vec<Vec<Key>> = Vec::with_capacity(p);
+        let mut off = 0usize;
+        for (d, &len) in shares.iter().enumerate() {
+            let mut shard = keys[off..off + len].to_vec();
+            off += len;
+            local.push(sorter.sort(&mut shard, pool.sim_mut(d))?);
+            shards.push(shard);
+        }
+
+        // Phase 2: deterministic cross-device splitter selection and
+        // exchange, coordinated on device 0.
+        let plan = self.combine_plan(&shares);
+        let mut combine = Ledger::default();
+        let combine_alloc = pool
+            .sim_mut(0)
+            .alloc((plan.padded_samples + 3 * p * p) * KEY_BYTES)?;
+
+        // Regular samples from every sorted shard (the PSRS step).
+        let mut samples: Vec<Key> = Vec::with_capacity(plan.padded_samples);
+        for (shard, &t) in shards.iter().zip(&plan.sample_counts) {
+            for k in 0..t {
+                samples.push(shard[(k + 1) * shard.len() / t - 1]);
+            }
+        }
+        debug_assert_eq!(samples.len(), plan.total_samples);
+        record_shard_samples(p, self.params.merge_samples, plan.total_samples, &mut combine);
+
+        // Sort all samples globally; p−1 equidistant picks become the
+        // cross-device splitters.
+        samples.resize(plan.padded_samples, Key::MAX);
+        bitonic::global_sort(&mut samples, self.params.sort.tile, &mut combine, 0);
+        let splitters =
+            sampling::select_splitters(&samples[..plan.total_samples], p, &mut combine);
+
+        // Partition every sorted shard by the splitters (fixed-trip
+        // binary searches, shape-determined probe counts).
+        let mut counts = vec![0u32; p * p];
+        let mut probes = 0u64;
+        for (i, shard) in shards.iter().enumerate() {
+            let mut prev = 0usize;
+            for (j, bound) in splitters
+                .iter()
+                .map(|&sp| {
+                    let (pos, pr) = indexing::fixed_lower_bound(shard, sp);
+                    probes += pr;
+                    pos
+                })
+                .chain(std::iter::once(shard.len()))
+                .enumerate()
+            {
+                counts[i * p + j] = (bound - prev) as u32;
+                prev = bound;
+            }
+        }
+        debug_assert_eq!(probes, plan.probes);
+        record_partition(p, plan.probes, &mut combine);
+
+        // Destination layout (column-major, exactly Step 7's machinery
+        // with m = s = p) and the all-to-all exchange.
+        let layout = prefix::column_prefix(&counts, p, p, &mut combine);
+        let mut out = vec![0 as Key; n];
+        for (i, shard) in shards.iter().enumerate() {
+            let mut seg_start = 0usize;
+            for j in 0..p {
+                let len = counts[i * p + j] as usize;
+                let dst = layout.loc[i * p + j] as usize;
+                out[dst..dst + len].copy_from_slice(&shard[seg_start..seg_start + len]);
+                seg_start += len;
+            }
+            debug_assert_eq!(seg_start, shard.len());
+        }
+        record_exchange(n, p, &mut combine);
+        pool.sim_mut(0).free(combine_alloc);
+        pool.sim_mut(0).ledger_mut().extend_from(&combine);
+
+        // Phase 3: every destination device p-way merges its sorted
+        // runs. Priced at the balanced (capacity-weighted) size so the
+        // ledger stays input-independent — the same discipline as
+        // Step 9's guaranteed-capacity pricing.
+        let mut merge = Vec::with_capacity(p);
+        let mut max_out_shard = 0u64;
+        for j in 0..p {
+            let start = layout.bucket_start[j] as usize;
+            let len = layout.bucket_size[j] as usize;
+            max_out_shard = max_out_shard.max(len as u64);
+            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * KEY_BYTES)?;
+            let mut bounds = Vec::with_capacity(p + 1);
+            bounds.push(0usize);
+            for i in 0..p {
+                bounds.push(bounds[i] + counts[i * p + j] as usize);
+            }
+            debug_assert_eq!(bounds[p], len);
+            let rounds = merge_runs(&mut out[start..start + len], &bounds);
+            debug_assert_eq!(rounds, plan.merge_rounds);
+            let mut ledger = Ledger::default();
+            record_merge(shares[j], self.params.sort.tile, plan.merge_rounds, &mut ledger);
+            pool.sim_mut(j).free(alloc);
+            pool.sim_mut(j).ledger_mut().extend_from(&ledger);
+            merge.push(ledger);
+        }
+
+        keys.copy_from_slice(&out);
+        Ok(ShardedSortReport {
+            n,
+            shard_sizes: shares,
+            local,
+            combine,
+            merge,
+            peak_device_bytes: pool.sims().iter().map(|s| s.peak_bytes()).collect(),
+            max_out_shard,
+        })
+    }
+
+    /// Produce the per-device ledgers and memory profile of sharding
+    /// `n` keys across `pool` without touching data — identical
+    /// launches and allocations to [`ShardedSort::sort`]. This is what
+    /// demonstrates sorts beyond any single device's ceiling (≥ 512M
+    /// keys) at negligible host cost.
+    pub fn sort_analytic(&self, n: usize, pool: &mut DevicePool) -> Result<ShardedSortReport> {
+        let p = pool.len();
+        let shares = pool.shares(n);
+        if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
+            return self.fallback(FallbackInput::Analytic(n), pool);
+        }
+        let sorter = BucketSort::try_new(self.params.sort)?;
+
+        let mut local = Vec::with_capacity(p);
+        for (d, &len) in shares.iter().enumerate() {
+            local.push(sorter.sort_analytic(len, pool.sim_mut(d))?);
+        }
+
+        let plan = self.combine_plan(&shares);
+        let mut combine = Ledger::default();
+        let combine_alloc = pool
+            .sim_mut(0)
+            .alloc((plan.padded_samples + 3 * p * p) * KEY_BYTES)?;
+        record_shard_samples(p, self.params.merge_samples, plan.total_samples, &mut combine);
+        bitonic::global_sort_analytic(plan.padded_samples, self.params.sort.tile, &mut combine, 0);
+        sampling::analytic_splitters(plan.total_samples, p, &mut combine);
+        record_partition(p, plan.probes, &mut combine);
+        prefix::analytic(p, p, &mut combine);
+        record_exchange(n, p, &mut combine);
+        pool.sim_mut(0).free(combine_alloc);
+        pool.sim_mut(0).ledger_mut().extend_from(&combine);
+
+        let mut merge = Vec::with_capacity(p);
+        for j in 0..p {
+            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * KEY_BYTES)?;
+            let mut ledger = Ledger::default();
+            record_merge(shares[j], self.params.sort.tile, plan.merge_rounds, &mut ledger);
+            pool.sim_mut(j).free(alloc);
+            pool.sim_mut(j).ledger_mut().extend_from(&ledger);
+            merge.push(ledger);
+        }
+
+        Ok(ShardedSortReport {
+            n,
+            shard_sizes: shares,
+            local,
+            combine,
+            merge,
+            peak_device_bytes: pool.sims().iter().map(|s| s.peak_bytes()).collect(),
+            max_out_shard: 0,
+        })
+    }
+
+    /// Single-device route for pools of one and inputs too small to
+    /// shard: the highest-capacity device sorts everything, the others
+    /// idle (empty reports, empty combine/merge ledgers).
+    fn fallback(
+        &self,
+        input: FallbackInput<'_>,
+        pool: &mut DevicePool,
+    ) -> Result<ShardedSortReport> {
+        let p = pool.len();
+        let n = input.len();
+        let target = (0..p)
+            .max_by_key(|&d| (pool.spec(d).max_sortable_keys(), std::cmp::Reverse(d)))
+            .expect("pool is never empty");
+        let sorter = BucketSort::try_new(self.params.sort)?;
+        let mut shard_sizes = vec![0usize; p];
+        shard_sizes[target] = n;
+        let mut local = Vec::with_capacity(p);
+        let mut max_out_shard = 0u64;
+        match input {
+            FallbackInput::Execute(keys) => {
+                for d in 0..p {
+                    local.push(if d == target {
+                        max_out_shard = n as u64;
+                        sorter.sort(&mut keys[..], pool.sim_mut(d))?
+                    } else {
+                        sorter.sort(&mut [], pool.sim_mut(d))?
+                    });
+                }
+            }
+            FallbackInput::Analytic(_) => {
+                for d in 0..p {
+                    let len = if d == target { n } else { 0 };
+                    local.push(sorter.sort_analytic(len, pool.sim_mut(d))?);
+                }
+            }
+        }
+        Ok(ShardedSortReport {
+            n,
+            shard_sizes,
+            local,
+            combine: Ledger::default(),
+            merge: vec![Ledger::default(); p],
+            peak_device_bytes: pool.sims().iter().map(|s| s.peak_bytes()).collect(),
+            max_out_shard,
+        })
+    }
+
+    /// Build the shape-determined combine plan for the given shards.
+    fn combine_plan(&self, shares: &[usize]) -> CombinePlan {
+        let p = shares.len();
+        let sample_counts: Vec<usize> = shares
+            .iter()
+            .map(|&len| self.params.merge_samples.min(len))
+            .collect();
+        let total_samples: usize = sample_counts.iter().sum();
+        let probes = shares
+            .iter()
+            .map(|&len| (p as u64 - 1) * probe_count(len))
+            .sum();
+        CombinePlan {
+            sample_counts,
+            total_samples,
+            padded_samples: bitonic::next_pow2(total_samples),
+            probes,
+            merge_rounds: merge_rounds(p),
+        }
+    }
+}
+
+/// Input carrier for the single-device fallback route.
+enum FallbackInput<'a> {
+    /// Execute path: the keys to sort in place.
+    Execute(&'a mut [Key]),
+    /// Analytic path: just the key count.
+    Analytic(usize),
+}
+
+impl FallbackInput<'_> {
+    fn len(&self) -> usize {
+        match self {
+            FallbackInput::Execute(keys) => keys.len(),
+            FallbackInput::Analytic(n) => *n,
+        }
+    }
+}
+
+/// Probe count of [`indexing::fixed_lower_bound`] over a slice of
+/// `len` elements — shape-determined (the search is fixed-trip), so the
+/// analytic ledger can reproduce it without data.
+fn probe_count(len: usize) -> u64 {
+    if len == 0 {
+        return 0;
+    }
+    let mut size = len;
+    let mut probes = 0u64;
+    while size > 1 {
+        size -= size / 2;
+        probes += 1;
+    }
+    probes + 1
+}
+
+/// ⌈log2 p⌉ pairwise-merge rounds to combine `p` sorted runs.
+fn merge_rounds(p: usize) -> u32 {
+    p.next_power_of_two().trailing_zeros()
+}
+
+/// Bottom-up pairwise merge of the sorted runs delimited by `bounds`
+/// (ascending positions; `bounds[0] == 0`,
+/// `bounds[last] == region.len()`; empty runs allowed). Returns the
+/// number of rounds executed — always [`merge_rounds`] of the run
+/// count, the shape the ledger prices.
+fn merge_runs(region: &mut [Key], bounds: &[usize]) -> u32 {
+    let mut a = region.to_vec();
+    let mut b = vec![0 as Key; region.len()];
+    let mut cur: Vec<usize> = bounds.to_vec();
+    let mut rounds = 0u32;
+    while cur.len() > 2 {
+        let mut next = Vec::with_capacity(cur.len() / 2 + 2);
+        next.push(0usize);
+        let mut i = 0usize;
+        while i + 2 < cur.len() {
+            merge_two(
+                &a[cur[i]..cur[i + 1]],
+                &a[cur[i + 1]..cur[i + 2]],
+                &mut b[cur[i]..cur[i + 2]],
+            );
+            next.push(cur[i + 2]);
+            i += 2;
+        }
+        if i + 1 < cur.len() {
+            // Odd run out: carried into the next round unchanged.
+            b[cur[i]..cur[i + 1]].copy_from_slice(&a[cur[i]..cur[i + 1]]);
+            next.push(cur[i + 1]);
+        }
+        std::mem::swap(&mut a, &mut b);
+        cur = next;
+        rounds += 1;
+    }
+    region.copy_from_slice(&a);
+    rounds
+}
+
+/// Stable two-way merge of sorted `x` and `y` into `out`
+/// (`out.len() == x.len() + y.len()`).
+fn merge_two(x: &[Key], y: &[Key], out: &mut [Key]) {
+    debug_assert_eq!(out.len(), x.len() + y.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in out.iter_mut() {
+        if i < x.len() && (j >= y.len() || x[i] <= y[j]) {
+            *slot = x[i];
+            i += 1;
+        } else {
+            *slot = y[j];
+            j += 1;
+        }
+    }
+}
+
+/// Regular-sample extraction from every shard: one block per shard,
+/// strided (scattered) reads plus a coalesced write of the sample
+/// array — the cross-device twin of Step 3.
+fn record_shard_samples(p: usize, samples_per_shard: usize, total: usize, ledger: &mut Ledger) {
+    ledger.begin_kernel(
+        KernelClass::Sample,
+        p as u64,
+        samples_per_shard.min(MAX_BLOCK_THREADS as usize) as u32,
+    );
+    ledger.add_scattered(total as u64);
+    ledger.add_coalesced((total * KEY_BYTES) as u64);
+    ledger.add_compute(total as u64);
+    ledger.end_kernel();
+}
+
+/// Splitter location in every sorted shard: `p−1` fixed-trip binary
+/// searches per shard (scattered probes into global memory) plus the
+/// p×p boundary-matrix write-back — the cross-device twin of Step 6.
+fn record_partition(p: usize, probes: u64, ledger: &mut Ledger) {
+    ledger.begin_kernel(
+        KernelClass::SampleIndex,
+        p as u64,
+        p.min(MAX_BLOCK_THREADS as usize) as u32,
+    );
+    ledger.add_scattered(probes);
+    ledger.add_compute(probes);
+    ledger.add_coalesced((p * p * KEY_BYTES) as u64);
+    ledger.end_kernel();
+}
+
+/// The all-to-all segment exchange: every key crosses the interconnect
+/// once (coalesced read + write), plus the small boundary/location
+/// matrices — the cross-device twin of Step 8.
+fn record_exchange(n: usize, p: usize, ledger: &mut Ledger) {
+    ledger.begin_kernel(KernelClass::Transfer, p as u64, MAX_BLOCK_THREADS);
+    ledger.add_coalesced((2 * n * KEY_BYTES + 2 * p * p * KEY_BYTES) as u64);
+    ledger.add_compute((p * p) as u64);
+    ledger.end_kernel();
+}
+
+/// One destination device's merge: `rounds` streaming passes over its
+/// balanced share (read + write + one compare per key per round).
+fn record_merge(balanced: usize, tile: usize, rounds: u32, ledger: &mut Ledger) {
+    let blocks = (balanced / tile).max(1) as u64;
+    for _ in 0..rounds {
+        ledger.begin_kernel(KernelClass::Merge, blocks, MAX_BLOCK_THREADS);
+        ledger.add_coalesced((2 * balanced * KEY_BYTES) as u64);
+        ledger.add_compute(balanced as u64);
+        ledger.end_kernel();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted_permutation;
+    use crate::sim::{GpuModel, GpuSpec};
+
+    fn small_params() -> ShardedSortParams {
+        ShardedSortParams {
+            sort: BucketSortParams { tile: 256, s: 16 },
+            merge_samples: 16,
+        }
+    }
+
+    fn scrambled(n: usize) -> Vec<Key> {
+        (0..n as u32).map(|x| x.wrapping_mul(2654435761) ^ 0x5BD1).collect()
+    }
+
+    #[test]
+    fn sorts_across_heterogeneous_pool() {
+        let sorter = ShardedSort::new(small_params());
+        for n in [0usize, 1, 100, 4096, 50_000, 200_000] {
+            let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+            let mut keys = scrambled(n);
+            let orig = keys.clone();
+            let report = sorter.sort(&mut keys, &mut pool).unwrap();
+            assert!(is_sorted_permutation(&orig, &keys), "n={n}");
+            assert_eq!(report.n, n);
+            assert_eq!(report.shard_sizes.iter().sum::<usize>(), n);
+            assert_eq!(report.devices(), 4);
+            for sim in pool.sims() {
+                assert_eq!(sim.allocated_bytes(), 0, "all allocations freed");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_single_device_bucket_sort() {
+        let sorter = ShardedSort::new(small_params());
+        let single = BucketSort::new(small_params().sort);
+        let n = 40_000;
+        let input = scrambled(n);
+
+        let mut sharded_out = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        sorter.sort(&mut sharded_out, &mut pool).unwrap();
+
+        let mut single_out = input.clone();
+        let mut sim = crate::sim::GpuSim::new(GpuModel::TeslaC1060.spec());
+        single.sort(&mut single_out, &mut sim).unwrap();
+
+        assert_eq!(sharded_out, single_out);
+    }
+
+    #[test]
+    fn analytic_matches_executed() {
+        let sorter = ShardedSort::new(small_params());
+        for n in [0usize, 100, 4096, 50_000, 131_072] {
+            let mut pool_e = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+            let mut keys = scrambled(n);
+            let exec = sorter.sort(&mut keys, &mut pool_e).unwrap();
+            let mut pool_a = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+            let ana = sorter.sort_analytic(n, &mut pool_a).unwrap();
+
+            assert_eq!(exec.shard_sizes, ana.shard_sizes, "n={n}");
+            assert_eq!(exec.combine, ana.combine, "n={n}");
+            assert_eq!(exec.merge, ana.merge, "n={n}");
+            for d in 0..exec.local.len() {
+                assert_eq!(exec.local[d].ledger, ana.local[d].ledger, "n={n} d={d}");
+            }
+            assert_eq!(exec.peak_device_bytes, ana.peak_device_bytes, "n={n}");
+            // The whole-sim ledgers agree too.
+            for (se, sa) in pool_e.sims().iter().zip(pool_a.sims()) {
+                assert_eq!(se.ledger(), sa.ledger(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn combine_ledger_is_input_independent() {
+        let sorter = ShardedSort::new(small_params());
+        let n = 30_000;
+        let inputs: Vec<Vec<Key>> = vec![
+            scrambled(n),
+            (0..n as u32).collect(),
+            (0..n as u32).rev().collect(),
+            (0..n as u32).map(|x| x % 7).collect(),
+        ];
+        let mut reports = Vec::new();
+        for mut keys in inputs {
+            let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+            reports.push(sorter.sort(&mut keys, &mut pool).unwrap());
+        }
+        for r in &reports[1..] {
+            assert_eq!(r.combine, reports[0].combine);
+            assert_eq!(r.merge, reports[0].merge);
+        }
+    }
+
+    #[test]
+    fn pool_exceeds_single_device_capacity() {
+        // Two tiny 4 MB devices: ~500K keys OOM a single device (needs
+        // 2·n·4 B = 4.8 MB) but fit the pool (2.4 MB per shard).
+        let tiny = GpuSpec {
+            name: "tiny".into(),
+            global_memory_bytes: 4 << 20,
+            ..GpuModel::Gtx260.spec()
+        };
+        let params = small_params();
+        let n = 600_000;
+
+        let single = BucketSort::new(params.sort);
+        let mut sim = crate::sim::GpuSim::new(tiny.clone());
+        assert!(single.sort_analytic(n, &mut sim).unwrap_err().is_oom());
+
+        let sorter = ShardedSort::new(params);
+        let mut pool = DevicePool::from_specs(vec![tiny.clone(), tiny]).unwrap();
+        let mut keys = scrambled(n);
+        let orig = keys.clone();
+        let report = sorter.sort(&mut keys, &mut pool).unwrap();
+        assert!(is_sorted_permutation(&orig, &keys));
+        assert!(report.makespan_ms(&pool) > 0.0);
+        assert!(report.sort_rate_mkeys_s(&pool) > 0.0);
+    }
+
+    #[test]
+    fn fallback_routes_small_inputs_to_best_device() {
+        let sorter = ShardedSort::new(small_params());
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let n = 100; // below p·tile ⇒ fallback
+        let mut keys = scrambled(n);
+        let report = sorter.sort(&mut keys, &mut pool).unwrap();
+        assert!(crate::is_sorted(&keys));
+        // Tesla (index 1) has the largest capacity in the default pool.
+        assert_eq!(report.shard_sizes, vec![0, n, 0, 0]);
+        assert_eq!(report.combine.kernel_count(), 0);
+    }
+
+    #[test]
+    fn merge_helpers() {
+        assert_eq!(merge_rounds(1), 0);
+        assert_eq!(merge_rounds(2), 1);
+        assert_eq!(merge_rounds(3), 2);
+        assert_eq!(merge_rounds(4), 2);
+        assert_eq!(merge_rounds(5), 3);
+
+        // probe_count mirrors fixed_lower_bound's trip count.
+        for len in [0usize, 1, 2, 3, 7, 8, 100, 4096] {
+            let t: Vec<Key> = (0..len as u32).collect();
+            let (_, probes) = indexing::fixed_lower_bound(&t, 1);
+            assert_eq!(probes, probe_count(len), "len={len}");
+        }
+
+        // merge_runs over mixed-length (and empty) runs.
+        let mut v: Vec<Key> = vec![5, 9, 42, 1, 3, 4, 8, 0, 2];
+        let bounds = [0usize, 3, 3, 7, 9];
+        let rounds = merge_runs(&mut v, &bounds);
+        assert_eq!(v, vec![0, 1, 2, 3, 4, 5, 8, 9, 42]);
+        assert_eq!(rounds, merge_rounds(4));
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(ShardedSort::try_new(ShardedSortParams {
+            merge_samples: 0,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(ShardedSort::try_new(ShardedSortParams {
+            sort: BucketSortParams { tile: 100, s: 10 },
+            merge_samples: 8,
+        })
+        .is_err());
+    }
+}

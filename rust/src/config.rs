@@ -7,7 +7,7 @@
 use crate::algos::bucket_sort::BucketSortParams;
 use crate::error::{Error, Result};
 use crate::exec::NativeParams;
-use crate::sim::GpuModel;
+use crate::sim::{DevicePool, GpuModel};
 use crate::util::Json;
 use std::path::Path;
 
@@ -23,6 +23,10 @@ pub enum EngineKind {
     /// PJRT engine: runs the AOT-compiled JAX/Pallas pipeline through
     /// the XLA CPU client (fixed shapes from the artifact manifest).
     Pjrt,
+    /// Sharded multi-device engine: Algorithm 1 per device across a
+    /// pool of simulated GPUs with a deterministic cross-device
+    /// combine — sorts beyond any single device's memory ceiling.
+    Sharded,
 }
 
 impl EngineKind {
@@ -32,6 +36,7 @@ impl EngineKind {
             "native" => Some(EngineKind::Native),
             "sim" | "simulated" => Some(EngineKind::Sim),
             "pjrt" | "xla" => Some(EngineKind::Pjrt),
+            "sharded" | "multigpu" | "pool" => Some(EngineKind::Sharded),
             _ => None,
         }
     }
@@ -42,6 +47,7 @@ impl EngineKind {
             EngineKind::Native => "native",
             EngineKind::Sim => "sim",
             EngineKind::Pjrt => "pjrt",
+            EngineKind::Sharded => "sharded",
         }
     }
 }
@@ -80,6 +86,9 @@ pub struct ServiceConfig {
     pub engine: EngineKind,
     /// Simulated device (for [`EngineKind::Sim`]).
     pub device: GpuModel,
+    /// Simulated device pool (for [`EngineKind::Sharded`]); must be
+    /// non-empty.
+    pub devices: Vec<GpuModel>,
     /// Algorithm-1 parameters (tile, s).
     pub sort: BucketSortParams,
     /// Native engine parameters.
@@ -98,6 +107,7 @@ impl Default for ServiceConfig {
         ServiceConfig {
             engine: EngineKind::Native,
             device: GpuModel::Gtx285_2G,
+            devices: DevicePool::DEFAULT_DEVICES.to_vec(),
             sort: BucketSortParams::default(),
             native: NativeParams::default(),
             batch: BatchConfig::default(),
@@ -134,6 +144,21 @@ impl ServiceConfig {
                     let s = str_field(val, "device")?;
                     cfg.device = GpuModel::parse(&s)
                         .ok_or_else(|| Error::Config(format!("unknown device {s:?}")))?;
+                }
+                "devices" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| Error::Config("devices must be an array".into()))?;
+                    cfg.devices = arr
+                        .iter()
+                        .map(|v| {
+                            let s = v
+                                .as_str()
+                                .ok_or_else(|| Error::Config("devices entries must be strings".into()))?;
+                            GpuModel::parse(s)
+                                .ok_or_else(|| Error::Config(format!("unknown device {s:?}")))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
                 }
                 "sort" => {
                     cfg.sort = BucketSortParams {
@@ -187,6 +212,9 @@ impl ServiceConfig {
     /// Sanity-check the combination.
     pub fn validate(&self) -> Result<()> {
         self.sort.validate()?;
+        if self.devices.is_empty() {
+            return Err(Error::Config("devices must not be empty".into()));
+        }
         if self.batch.max_batch_keys == 0 || self.batch.queue_capacity == 0 {
             return Err(Error::Config(
                 "batch.max_batch_keys and batch.queue_capacity must be positive".into(),
@@ -204,14 +232,10 @@ impl ServiceConfig {
     pub fn to_json(&self) -> String {
         Json::obj(vec![
             ("engine", Json::str(self.engine.id())),
+            ("device", Json::str(self.device.id())),
             (
-                "device",
-                Json::str(match self.device {
-                    GpuModel::TeslaC1060 => "tesla",
-                    GpuModel::Gtx285_2G => "gtx285",
-                    GpuModel::Gtx285_1G => "gtx285-1g",
-                    GpuModel::Gtx260 => "gtx260",
-                }),
+                "devices",
+                Json::Arr(self.devices.iter().map(|d| Json::str(d.id())).collect()),
             ),
             (
                 "sort",
@@ -282,6 +306,7 @@ mod tests {
         let cfg = ServiceConfig {
             engine: EngineKind::Sim,
             device: GpuModel::Gtx260,
+            devices: vec![GpuModel::TeslaC1060, GpuModel::Gtx260],
             verify: true,
             ..Default::default()
         };
@@ -333,6 +358,10 @@ mod tests {
         // Unknown engine/device.
         assert!(ServiceConfig::from_json(r#"{"engine":"gpu"}"#).is_err());
         assert!(ServiceConfig::from_json(r#"{"device":"fermi"}"#).is_err());
+        // Bad device pools.
+        assert!(ServiceConfig::from_json(r#"{"devices":[]}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"devices":["fermi"]}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"devices":"tesla"}"#).is_err());
         // Not an object.
         assert!(ServiceConfig::from_json("[1,2]").is_err());
     }
@@ -342,9 +371,28 @@ mod tests {
         assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
         assert_eq!(EngineKind::parse("SIM"), Some(EngineKind::Sim));
         assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("sharded"), Some(EngineKind::Sharded));
+        assert_eq!(EngineKind::parse("multigpu"), Some(EngineKind::Sharded));
         assert_eq!(EngineKind::parse("gpu"), None);
-        for k in [EngineKind::Native, EngineKind::Sim, EngineKind::Pjrt] {
+        for k in [
+            EngineKind::Native,
+            EngineKind::Sim,
+            EngineKind::Pjrt,
+            EngineKind::Sharded,
+        ] {
             assert_eq!(EngineKind::parse(k.id()), Some(k));
         }
+    }
+
+    #[test]
+    fn device_pool_parsing() {
+        let cfg =
+            ServiceConfig::from_json(r#"{"engine":"sharded","devices":["tesla","gtx260"]}"#)
+                .unwrap();
+        assert_eq!(cfg.engine, EngineKind::Sharded);
+        assert_eq!(cfg.devices, vec![GpuModel::TeslaC1060, GpuModel::Gtx260]);
+        // Default pool is the four heterogeneous Table 1 devices.
+        let d = ServiceConfig::default();
+        assert_eq!(d.devices.len(), 4);
     }
 }

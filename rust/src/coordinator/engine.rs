@@ -1,4 +1,4 @@
-//! Engine abstraction: the three backends a batch can be dispatched to.
+//! Engine abstraction: the four backends a batch can be dispatched to.
 //!
 //! * [`NativeEngine`]-backed — the real multicore path (production).
 //! * Sim-backed — Algorithm 1 over a simulated Table-1 GPU (capacity
@@ -6,13 +6,17 @@
 //!   failure-injection tests via tiny simulated devices).
 //! * PJRT-backed — the AOT JAX/Pallas pipeline via the XLA CPU client
 //!   (fixed shapes from `artifacts/manifest.json`).
+//! * Sharded — Algorithm 1 per device across a [`DevicePool`] with a
+//!   deterministic cross-device combine; accepts jobs beyond any single
+//!   device's memory ceiling.
 
 use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
+use crate::algos::sharded::{ShardedSort, ShardedSortParams};
 use crate::config::{EngineKind, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::exec::NativeEngine;
 use crate::runtime::PjrtRuntime;
-use crate::sim::{GpuSim, GpuSpec};
+use crate::sim::{DevicePool, GpuModel, GpuSim, GpuSpec};
 use crate::util::pool;
 use crate::Key;
 
@@ -119,6 +123,71 @@ impl SortEngine for SimSortEngine {
     }
 }
 
+/// Sharded multi-device backend: Algorithm 1 per simulated device over
+/// a capacity-weighted partition, plus the deterministic cross-device
+/// combine of [`crate::algos::sharded`].
+pub struct ShardedSortEngine {
+    models: Vec<GpuModel>,
+    sorter: ShardedSort,
+}
+
+impl ShardedSortEngine {
+    /// Build from config (`cfg.devices` + `cfg.sort`).
+    pub fn new(cfg: &ServiceConfig) -> Result<Self> {
+        Self::from_parts(
+            cfg.devices.clone(),
+            ShardedSortParams {
+                sort: cfg.sort,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Build directly from a device list and parameters (tests,
+    /// experiments).
+    pub fn from_parts(models: Vec<GpuModel>, params: ShardedSortParams) -> Result<Self> {
+        if models.is_empty() {
+            return Err(Error::Config(
+                "sharded engine needs at least one device".into(),
+            ));
+        }
+        Ok(ShardedSortEngine {
+            models,
+            sorter: ShardedSort::try_new(params)?,
+        })
+    }
+
+    /// The device models backing each job's pool.
+    pub fn models(&self) -> &[GpuModel] {
+        &self.models
+    }
+}
+
+impl SortEngine for ShardedSortEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sharded
+    }
+
+    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+        jobs.into_iter()
+            .map(|mut keys| {
+                let mut pool = DevicePool::new(&self.models)?;
+                self.sorter.sort(&mut keys, &mut pool)?;
+                Ok(keys)
+            })
+            .collect()
+    }
+
+    fn max_job_keys(&self) -> Option<usize> {
+        Some(
+            self.models
+                .iter()
+                .map(|m| m.spec().max_sortable_keys())
+                .sum(),
+        )
+    }
+}
+
 /// PJRT backend: the AOT-compiled fixed-shape pipeline.
 pub struct PjrtSortEngine {
     runtime: PjrtRuntime,
@@ -160,6 +229,7 @@ pub fn build_engine(cfg: &ServiceConfig) -> Result<Box<dyn SortEngine>> {
         EngineKind::Native => Ok(Box::new(NativeSortEngine::new(cfg)?)),
         EngineKind::Sim => Ok(Box::new(SimSortEngine::new(cfg)?)),
         EngineKind::Pjrt => Ok(Box::new(PjrtSortEngine::new(cfg)?)),
+        EngineKind::Sharded => Ok(Box::new(ShardedSortEngine::new(cfg)?)),
     }
 }
 
@@ -246,6 +316,31 @@ mod tests {
     }
 
     #[test]
+    fn sharded_engine_sorts_and_advertises_pool_capacity() {
+        let cfg = ServiceConfig {
+            engine: EngineKind::Sharded,
+            sort: BucketSortParams { tile: 256, s: 16 },
+            ..Default::default()
+        };
+        let mut e = ShardedSortEngine::new(&cfg).unwrap();
+        assert_eq!(e.kind(), EngineKind::Sharded);
+        assert_eq!(e.models().len(), 4);
+        // Pool capacity exceeds every single device's ceiling.
+        assert!(e.max_job_keys().unwrap() > 512 << 20);
+        let jobs: Vec<Vec<Key>> = vec![
+            (0..50_000u32).rev().collect(),
+            vec![],
+            (0..10_000u32).map(|x| x.wrapping_mul(2654435761)).collect(),
+        ];
+        let results = e.sort_batch(jobs.clone());
+        for (inp, res) in jobs.iter().zip(&results) {
+            assert!(crate::is_sorted_permutation(inp, res.as_ref().unwrap()));
+        }
+        // Empty device lists are rejected up front.
+        assert!(ShardedSortEngine::from_parts(vec![], ShardedSortParams::default()).is_err());
+    }
+
+    #[test]
     fn build_engine_dispatches() {
         let native = build_engine(&ServiceConfig::default()).unwrap();
         assert_eq!(native.kind(), EngineKind::Native);
@@ -255,6 +350,12 @@ mod tests {
         })
         .unwrap();
         assert_eq!(sim.kind(), EngineKind::Sim);
+        let sharded = build_engine(&ServiceConfig {
+            engine: EngineKind::Sharded,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(sharded.kind(), EngineKind::Sharded);
         // PJRT without artifacts → manifest error.
         let pjrt = build_engine(&ServiceConfig {
             engine: EngineKind::Pjrt,

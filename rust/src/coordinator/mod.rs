@@ -21,7 +21,9 @@ pub mod request;
 pub mod service;
 
 pub use batcher::Batcher;
-pub use engine::{build_engine, NativeSortEngine, PjrtSortEngine, SimSortEngine, SortEngine};
+pub use engine::{
+    build_engine, NativeSortEngine, PjrtSortEngine, ShardedSortEngine, SimSortEngine, SortEngine,
+};
 pub use request::{Batch, PendingRequest, RequestId, SortJob, SortOutcome};
 pub use service::{SortClient, SortService};
 

@@ -21,8 +21,9 @@
 
 use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
 use crate::algos::randomized::{RandomizedParams, RandomizedSampleSort};
+use crate::algos::sharded::{ShardedSort, ShardedSortParams};
 use crate::algos::thrust_merge::{ThrustMergeParams, ThrustMergeSort};
-use crate::sim::{CostModel, GpuModel, GpuSim};
+use crate::sim::{CostModel, DevicePool, GpuModel, GpuSim};
 use crate::workload::Distribution;
 
 /// A simple labelled table: one row label + one optional value per
@@ -392,6 +393,44 @@ pub fn robustness(n: usize, seed: u64) -> (ExpTable, f64, f64) {
     (table, spread(&gbs_all), spread(&rss_all))
 }
 
+/// Sharded-engine makespan for `n` keys over `count` replicas of
+/// `model` (analytic path; None on OOM — the pool's aggregate ceiling).
+pub fn sharded_ms(n: usize, count: usize, model: GpuModel) -> Option<f64> {
+    let models = vec![model; count];
+    let mut pool = DevicePool::new(&models).ok()?;
+    let sorter = ShardedSort::try_new(ShardedSortParams::default()).ok()?;
+    let report = sorter.sort_analytic(n, &mut pool).ok()?;
+    Some(report.makespan_ms(&pool))
+}
+
+/// Sharded scaling study (beyond the paper): estimated makespan vs
+/// device count for homogeneous pools of `model`. Missing cells are
+/// pool-level OOMs — the table shows the single-device ceiling moving
+/// out as devices are added, and the speedup at fixed n.
+pub fn sharded_scaling(ns: &[usize], device_counts: &[usize], model: GpuModel) -> ExpTable {
+    let mut rows = Vec::new();
+    for &n in ns {
+        let vals = device_counts
+            .iter()
+            .map(|&c| sharded_ms(n, c, model))
+            .collect();
+        rows.push((fmt_n(n), vals));
+    }
+    ExpTable {
+        name: "sharded".into(),
+        caption: format!(
+            "Sharded sort makespan (ms) vs device count, {} pool (beyond the paper)",
+            model.spec().name
+        ),
+        row_header: "n".into(),
+        columns: device_counts
+            .iter()
+            .map(|&c| format!("{c} device{}", if c == 1 { "" } else { "s" }))
+            .collect(),
+        rows,
+    }
+}
+
 /// Sorting-rate series (Mkeys/s vs n) — the paper's "fixed sorting
 /// rate" observation in §5 (flat for GBS over the whole range).
 pub fn sort_rate_series(ns: &[usize], gpu: GpuModel) -> ExpTable {
@@ -554,6 +593,34 @@ mod tests {
         let max = rates.iter().copied().fold(0.0f64, f64::max);
         let min = rates.iter().copied().fold(f64::INFINITY, f64::min);
         assert!(max / min < 2.5, "rates {rates:?}");
+    }
+
+    #[test]
+    fn sharded_scaling_moves_the_ceiling_and_speeds_up() {
+        let t = sharded_scaling(
+            &[64 << 20, 512 << 20],
+            &[1, 2, 4],
+            GpuModel::Gtx285_2G,
+        );
+        let row = |l: &str| {
+            t.rows
+                .iter()
+                .find(|(label, _)| label == l)
+                .map(|(_, v)| v.clone())
+                .unwrap()
+        };
+        // 512M exceeds one GTX 285's 256M ceiling but fits pools of 2+.
+        let big = row("512M");
+        assert!(big[0].is_none());
+        assert!(big[1].is_some() && big[2].is_some());
+        // At a fixed feasible n, more devices = shorter makespan, and
+        // four devices beat one by a clear margin (combine overhead is
+        // small next to the local-sort speedup).
+        let mid = row("64M");
+        let (one, two, four) = (mid[0].unwrap(), mid[1].unwrap(), mid[2].unwrap());
+        assert!(two < one, "2 devices {two} vs 1 device {one}");
+        assert!(four < two, "4 devices {four} vs 2 devices {two}");
+        assert!(four < 0.5 * one, "4-device speedup too small: {four} vs {one}");
     }
 
     #[test]

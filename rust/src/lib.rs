@@ -19,6 +19,18 @@
 //! Python never runs on the request path: `make artifacts` emits
 //! `artifacts/*.hlo.txt` once; the rust binary is then self-contained.
 //!
+//! Beyond the paper, [`algos::sharded`] shards one sort across a
+//! [`sim::DevicePool`] of heterogeneous simulated GPUs — the same
+//! deterministic splitter discipline applied between devices — which
+//! removes the single-device memory ceilings of Figures 6 & 7 (≥ 512M
+//! keys over a 4-device pool). It serves requests as the coordinator's
+//! `sharded` engine.
+//!
+//! The full request path (client → batcher → engine → sim ledger → cost
+//! model), the Execute vs. Analytic accounting modes, and the
+//! sharded-sort design are documented in `docs/ARCHITECTURE.md`; the
+//! repository README covers the layer map and quickstart commands.
+//!
 //! ## Quick start
 //!
 //! ```no_run

@@ -12,13 +12,14 @@
 //! Argument parsing is hand-rolled (the build is offline — no clap);
 //! every flag is `--name value`.
 
+use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
 use gpu_bucket_sort::algos::Algorithm;
 use gpu_bucket_sort::config::{EngineKind, ServiceConfig};
 use gpu_bucket_sort::coordinator::{SortJob, SortService};
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
 use gpu_bucket_sort::experiments as exp;
 use gpu_bucket_sort::runtime::PjrtRuntime;
-use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::workload::Distribution;
 use gpu_bucket_sort::{is_sorted_permutation, Key};
 use std::collections::HashMap;
@@ -68,11 +69,14 @@ USAGE: gbs <command> [--flag value ...]
 
 COMMANDS
   sort        --n 32M [--dist uniform] [--algo gbs|rss|thrust|radix]
-              [--engine native|sim|pjrt] [--device gtx285] [--seed 1]
-              [--verify true]
+              [--engine native|sim|pjrt|sharded] [--device gtx285]
+              [--devices gtx285,tesla,gtx285-1g,gtx260] [--seed 1]
+              [--verify true] [--analytic true]
+              (sharded: shard across a multi-GPU pool; --analytic prices
+               paper-scale n, e.g. 768M over 4 devices, without data)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
-              [--engine native] [--config file.json]
-  experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|all>
+              [--engine native|sharded] [--config file.json]
+  experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all>
               [--out results] [--fast true]
   specs       print the paper's Table 1
   config      [--file cfg.json] — print the (default or loaded) config
@@ -126,6 +130,14 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
     let seed: u64 = flag(flags, "seed", "1").parse().map_err(|e| format!("{e}"))?;
     let engine = EngineKind::parse(flag(flags, "engine", "native")).ok_or("unknown engine")?;
     let verify = flag(flags, "verify", "true") == "true";
+    let analytic = flag(flags, "analytic", "false") == "true";
+
+    if engine == EngineKind::Sharded {
+        return cmd_sort_sharded(flags, n, dist, seed, verify, analytic);
+    }
+    if analytic {
+        return Err("--analytic is only supported with --engine sharded".into());
+    }
 
     println!("generating {n} keys ({dist}) …");
     let input = dist.generate(n, seed);
@@ -184,7 +196,67 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
             );
             check(&input, &sorted, verify)?;
         }
+        EngineKind::Sharded => unreachable!("handled by cmd_sort_sharded"),
     }
+    Ok(())
+}
+
+/// `gbs sort --engine sharded`: shard one input across a simulated
+/// device pool. With `--analytic true`, price a paper-scale run (no
+/// data generated — this is how the CLI demonstrates sorting beyond
+/// any single device's memory ceiling).
+fn cmd_sort_sharded(
+    flags: &HashMap<String, String>,
+    n: usize,
+    dist: Distribution,
+    seed: u64,
+    verify: bool,
+    analytic: bool,
+) -> Result<(), String> {
+    let default_devices = DevicePool::DEFAULT_DEVICES.map(|m| m.id()).join(",");
+    let models = DevicePool::parse_list(flag(flags, "devices", &default_devices))
+        .ok_or("unknown device in --devices list")?;
+    let mut pool = DevicePool::new(&models).map_err(|e| e.to_string())?;
+    let sorter = ShardedSort::try_new(ShardedSortParams::default()).map_err(|e| e.to_string())?;
+    println!(
+        "device pool: {} devices, aggregate capacity {} keys",
+        pool.len(),
+        pool.max_sortable_keys()
+    );
+
+    let report = if analytic {
+        println!("analytic mode: pricing {n} keys without generating data");
+        sorter.sort_analytic(n, &mut pool).map_err(|e| e.to_string())?
+    } else {
+        println!("generating {n} keys ({dist}) …");
+        let input = dist.generate(n, seed);
+        let mut keys = input.clone();
+        let t0 = Instant::now();
+        let report = sorter.sort(&mut keys, &mut pool).map_err(|e| e.to_string())?;
+        println!(
+            "host execution {:.0} ms, largest destination shard {} keys",
+            t0.elapsed().as_secs_f64() * 1e3,
+            report.max_out_shard
+        );
+        check(&input, &keys, verify)?;
+        report
+    };
+
+    for (d, sim) in pool.sims().iter().enumerate() {
+        println!(
+            "  device {d} ({}): shard {} keys, {} launches, est {:.2} ms, peak mem {:.1} MB",
+            sim.spec().name,
+            report.shard_sizes[d],
+            sim.ledger().kernel_count(),
+            sim.estimated_ms(),
+            sim.peak_bytes() as f64 / 1e6
+        );
+    }
+    println!(
+        "sharded sort of {n} keys: estimated makespan {:.2} ms ({:.1} Mkeys/s across the pool)",
+        report.makespan_ms(&pool),
+        report.sort_rate_mkeys_s(&pool)
+    );
     Ok(())
 }
 
@@ -255,7 +327,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<(), String> {
     let which = flags
         .get("_arg")
         .map(String::as_str)
-        .ok_or("which experiment? (table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|all)")?;
+        .ok_or("which experiment? (table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all)")?;
     let out_dir = std::path::PathBuf::from(flag(flags, "out", "results"));
     let fast = flag(flags, "fast", "false") == "true";
 
@@ -278,6 +350,11 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<(), String> {
         "fig6" => tables.push(exp::fig6_gtx285(&ladder_256)),
         "fig7" => tables.push(exp::fig7_tesla(&ladder)),
         "rates" => tables.push(exp::sort_rate_series(&ladder, GpuModel::TeslaC1060)),
+        "sharded" => tables.push(exp::sharded_scaling(
+            &ladder,
+            &[1, 2, 4, 8],
+            GpuModel::Gtx285_2G,
+        )),
         "robustness" => {
             let (t, g, r) = exp::robustness(robustness_n, 7);
             println!("spread (max/min − 1): deterministic {g:.4}, randomized {r:.4}");
@@ -291,6 +368,11 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<(), String> {
             tables.push(exp::fig6_gtx285(&ladder_256));
             tables.push(exp::fig7_tesla(&ladder));
             tables.push(exp::sort_rate_series(&ladder, GpuModel::TeslaC1060));
+            tables.push(exp::sharded_scaling(
+                &ladder,
+                &[1, 2, 4, 8],
+                GpuModel::Gtx285_2G,
+            ));
             let (t, g, r) = exp::robustness(robustness_n, 7);
             println!("robustness spread: deterministic {g:.4}, randomized {r:.4}");
             tables.push(t);

@@ -1,0 +1,98 @@
+//! Stub PJRT client — compiled when the `xla` feature is **off** (the
+//! default, matching the offline build environment, which carries no
+//! vendored `xla` bindings crate).
+//!
+//! The stub keeps the full public surface of the real client
+//! (`client.rs`) so every caller — the coordinator's PJRT engine, the
+//! CLI's `artifacts` command, the examples — compiles unchanged. It
+//! still loads and validates the artifact manifest (so manifest errors
+//! are reported exactly as the real runtime would), then fails
+//! construction with a [`Error::Runtime`] explaining how to enable real
+//! execution. Callers already treat PJRT construction failure as "skip
+//! / fall back" (see `rust/tests/pjrt_roundtrip.rs`), so behaviour
+//! degrades gracefully.
+
+use super::manifest::Manifest;
+use crate::error::{Error, Result};
+use crate::Key;
+use std::path::PathBuf;
+
+/// Stub runtime: holds the validated manifest but cannot execute.
+///
+/// [`PjrtRuntime::new`] always returns an error after manifest
+/// validation, so instances of this type are never observed by callers;
+/// the inherent methods exist to keep the API surface identical to the
+/// `xla`-featured build.
+#[derive(Debug)]
+pub struct PjrtRuntime {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from `dir`, then fail: this build carries no
+    /// PJRT bindings. Missing/invalid artifact directories still report
+    /// [`Error::Manifest`], as with the real client.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let _ = PjrtRuntime { dir, manifest };
+        Err(Error::Runtime(
+            "built without the `xla` feature: PJRT execution is unavailable \
+             (vendor the xla bindings crate and rebuild with `--features xla`)"
+                .into(),
+        ))
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string; the stub reports "unavailable".
+    pub fn platform(&self) -> String {
+        let _ = &self.dir;
+        "unavailable".to_string()
+    }
+
+    /// Warm-up is unavailable without the `xla` feature.
+    pub fn warm_up(&mut self) -> Result<usize> {
+        Err(Error::Runtime(
+            "built without the `xla` feature: cannot compile artifacts".into(),
+        ))
+    }
+
+    /// Sorting through artifacts is unavailable without the `xla`
+    /// feature.
+    pub fn sort(&mut self, _keys: &[Key]) -> Result<(Vec<Key>, usize)> {
+        Err(Error::Runtime(
+            "built without the `xla` feature: cannot execute artifacts".into(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_is_manifest_error() {
+        let err = PjrtRuntime::new("/nonexistent/artifacts").unwrap_err();
+        assert!(matches!(err, Error::Manifest(_)), "{err}");
+    }
+
+    #[test]
+    fn present_manifest_reports_missing_feature() {
+        let dir = std::env::temp_dir().join(format!("gbs_stub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"key_dtype":"u32","entries":[]}"#,
+        )
+        .unwrap();
+        let err = PjrtRuntime::new(&dir).unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)), "{err}");
+        assert!(err.to_string().contains("xla"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,6 +4,10 @@
 //! * [`manifest`] — the `artifacts/manifest.json` schema and lookup.
 //! * [`client`] — PJRT CPU client, executable cache, u32 marshalling.
 
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod manifest;
 

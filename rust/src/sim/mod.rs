@@ -26,10 +26,12 @@
 
 pub mod cost;
 pub mod ledger;
+pub mod pool;
 pub mod spec;
 
 pub use cost::{CostModel, CostParams};
 pub use ledger::{KernelClass, KernelStats, Ledger, StepLedger};
+pub use pool::DevicePool;
 pub use spec::{GpuModel, GpuSpec};
 
 use crate::error::{Error, Result};

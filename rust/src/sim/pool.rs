@@ -1,0 +1,223 @@
+//! A pool of simulated GPUs — the substrate of the sharded sort engine.
+//!
+//! The paper's system is a single device, and its Figures 6 & 7 show
+//! exactly where that ends: the sort dies at the device's global-memory
+//! ceiling (64M keys on the GTX 260, 256M on the GTX 285 2 GB, 512M on
+//! the Tesla C1060). A [`DevicePool`] groups several (possibly
+//! heterogeneous) [`GpuSim`]s so [`crate::algos::sharded`] can partition
+//! one input across them, which removes the single-device ceiling: the
+//! pool's capacity is the *sum* of its members'.
+//!
+//! Shards are **capacity-weighted**: each device receives a slice of the
+//! input proportional to its [`GpuSpec::max_sortable_keys`], so a mixed
+//! Tesla/GTX pool fills every card to the same fraction of its memory
+//! and no card becomes the OOM bottleneck before the pool as a whole is
+//! full. The partition is deterministic in `(n, pool)` — a requirement
+//! for the sharded sort's Execute/Analytic ledger equality.
+
+use super::spec::{GpuModel, GpuSpec};
+use super::GpuSim;
+use crate::error::{Error, Result};
+
+/// A fixed set of simulated devices, each with its own traffic ledger
+/// and memory-capacity tracking.
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    sims: Vec<GpuSim>,
+}
+
+impl DevicePool {
+    /// The default heterogeneous pool: one of each Table 1 device,
+    /// coordinator (device 0) first. Total capacity 1008M keys —
+    /// roughly twice the best single card.
+    pub const DEFAULT_DEVICES: [GpuModel; 4] = [
+        GpuModel::Gtx285_2G,
+        GpuModel::TeslaC1060,
+        GpuModel::Gtx285_1G,
+        GpuModel::Gtx260,
+    ];
+
+    /// Build a pool from Table 1 models. Errors on an empty list.
+    pub fn new(models: &[GpuModel]) -> Result<Self> {
+        Self::from_specs(models.iter().map(|m| m.spec()).collect())
+    }
+
+    /// Build a pool from explicit hardware specs (tests use tiny
+    /// synthetic devices). Errors on an empty list.
+    pub fn from_specs(specs: Vec<GpuSpec>) -> Result<Self> {
+        if specs.is_empty() {
+            return Err(Error::InvalidParams(
+                "a device pool needs at least one device".into(),
+            ));
+        }
+        Ok(DevicePool {
+            sims: specs.into_iter().map(GpuSim::new).collect(),
+        })
+    }
+
+    /// Parse a comma-separated device list, e.g. `"gtx285,tesla,gtx260"`.
+    /// Returns `None` if any name is unknown or the list is empty.
+    pub fn parse_list(s: &str) -> Option<Vec<GpuModel>> {
+        let models: Option<Vec<GpuModel>> = s
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(GpuModel::parse)
+            .collect();
+        models.filter(|m| !m.is_empty())
+    }
+
+    /// Number of devices in the pool.
+    pub fn len(&self) -> usize {
+        self.sims.len()
+    }
+
+    /// True when the pool holds no devices (never, post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.sims.is_empty()
+    }
+
+    /// The member simulators (ledgers, peak memory).
+    pub fn sims(&self) -> &[GpuSim] {
+        &self.sims
+    }
+
+    /// Mutable access to one device's simulator.
+    pub fn sim_mut(&mut self, device: usize) -> &mut GpuSim {
+        &mut self.sims[device]
+    }
+
+    /// One device's hardware spec.
+    pub fn spec(&self, device: usize) -> &GpuSpec {
+        self.sims[device].spec()
+    }
+
+    /// Pool capacity in keys: the sum of every member's single-device
+    /// ceiling. This is the number the sharded engine advertises to the
+    /// coordinator's admission control.
+    pub fn max_sortable_keys(&self) -> usize {
+        self.sims
+            .iter()
+            .map(|s| s.spec().max_sortable_keys())
+            .sum()
+    }
+
+    /// Capacity-weighted partition of `n` keys: `shares[d]` is
+    /// proportional to device `d`'s [`GpuSpec::max_sortable_keys`],
+    /// rounded by the largest-remainder method (remainders go to the
+    /// highest-capacity devices, index order breaking ties), and the
+    /// shares always sum to exactly `n`. Deterministic in `(n, pool)`.
+    pub fn shares(&self, n: usize) -> Vec<usize> {
+        let weights: Vec<u128> = self
+            .sims
+            .iter()
+            .map(|s| s.spec().max_sortable_keys() as u128)
+            .collect();
+        let total: u128 = weights.iter().sum();
+        debug_assert!(total > 0, "devices always have positive capacity");
+        let mut shares: Vec<usize> = weights
+            .iter()
+            .map(|w| (n as u128 * w / total) as usize)
+            .collect();
+        let mut rest = n - shares.iter().sum::<usize>();
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+        let mut i = 0;
+        while rest > 0 {
+            shares[order[i % order.len()]] += 1;
+            rest -= 1;
+            i += 1;
+        }
+        shares
+    }
+
+    /// Reset every member's ledger and allocation state.
+    pub fn reset(&mut self) {
+        for sim in &mut self.sims {
+            sim.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_pool_rejected() {
+        assert!(DevicePool::new(&[]).is_err());
+        assert!(DevicePool::from_specs(vec![]).is_err());
+    }
+
+    #[test]
+    fn default_pool_capacity_sums() {
+        let pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        assert_eq!(pool.len(), 4);
+        assert!(!pool.is_empty());
+        let sum: usize = DevicePool::DEFAULT_DEVICES
+            .iter()
+            .map(|m| m.spec().max_sortable_keys())
+            .sum();
+        assert_eq!(pool.max_sortable_keys(), sum);
+        // The pool breaks every single-device ceiling: > 512M keys.
+        assert!(pool.max_sortable_keys() > 512 << 20);
+    }
+
+    #[test]
+    fn shares_sum_and_weighting() {
+        let pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        for n in [0usize, 1, 5, 1000, 1 << 20, (1 << 20) + 17] {
+            let shares = pool.shares(n);
+            assert_eq!(shares.len(), 4);
+            assert_eq!(shares.iter().sum::<usize>(), n, "n={n}");
+        }
+        // Tesla (4 GB) holds twice the GTX 285 2 GB's share, pro rata.
+        let shares = pool.shares(1 << 20);
+        let tesla = shares[1] as f64;
+        let gtx285 = shares[0] as f64;
+        assert!((tesla / gtx285 - 2.0).abs() < 0.01, "{shares:?}");
+    }
+
+    #[test]
+    fn shares_are_deterministic_and_monotone_in_capacity() {
+        let pool = DevicePool::new(&[GpuModel::TeslaC1060, GpuModel::Gtx260]).unwrap();
+        let a = pool.shares(12345);
+        let b = pool.shares(12345);
+        assert_eq!(a, b);
+        assert!(a[0] > a[1], "bigger device gets the bigger shard: {a:?}");
+    }
+
+    #[test]
+    fn equal_devices_split_evenly() {
+        let pool =
+            DevicePool::new(&[GpuModel::Gtx285_2G, GpuModel::Gtx285_2G]).unwrap();
+        let shares = pool.shares(1001);
+        assert_eq!(shares.iter().sum::<usize>(), 1001);
+        assert!(shares[0].abs_diff(shares[1]) <= 1, "{shares:?}");
+    }
+
+    #[test]
+    fn parse_device_lists() {
+        assert_eq!(
+            DevicePool::parse_list("gtx285,tesla"),
+            Some(vec![GpuModel::Gtx285_2G, GpuModel::TeslaC1060])
+        );
+        assert_eq!(
+            DevicePool::parse_list(" gtx260 , gtx285-1g "),
+            Some(vec![GpuModel::Gtx260, GpuModel::Gtx285_1G])
+        );
+        assert_eq!(DevicePool::parse_list("gtx285,fermi"), None);
+        assert_eq!(DevicePool::parse_list(""), None);
+    }
+
+    #[test]
+    fn reset_clears_all_members() {
+        let mut pool = DevicePool::new(&[GpuModel::Gtx260, GpuModel::Gtx260]).unwrap();
+        let a = pool.sim_mut(0).alloc(64).unwrap();
+        pool.sim_mut(0).free(a);
+        assert_eq!(pool.sims()[0].peak_bytes(), 64);
+        pool.reset();
+        assert_eq!(pool.sims()[0].peak_bytes(), 0);
+        assert_eq!(pool.spec(1).name, "GTX 260");
+    }
+}

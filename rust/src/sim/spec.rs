@@ -184,6 +184,17 @@ impl GpuModel {
         }
     }
 
+    /// Stable user-facing identifier (CLI, config files, CSV) — the
+    /// inverse of [`GpuModel::parse`].
+    pub fn id(&self) -> &'static str {
+        match self {
+            GpuModel::TeslaC1060 => "tesla",
+            GpuModel::Gtx285_2G => "gtx285",
+            GpuModel::Gtx285_1G => "gtx285-1g",
+            GpuModel::Gtx260 => "gtx260",
+        }
+    }
+
     /// Parse a user-facing device name (CLI, config files).
     pub fn parse(s: &str) -> Option<GpuModel> {
         match s.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
@@ -277,6 +288,13 @@ mod tests {
         assert_eq!(GpuModel::parse("GTX-285-1G"), Some(GpuModel::Gtx285_1G));
         assert_eq!(GpuModel::parse("gtx260"), Some(GpuModel::Gtx260));
         assert_eq!(GpuModel::parse("fermi"), None);
+    }
+
+    #[test]
+    fn id_roundtrips_through_parse() {
+        for m in GpuModel::ALL {
+            assert_eq!(GpuModel::parse(m.id()), Some(m), "{m}");
+        }
     }
 
     #[test]

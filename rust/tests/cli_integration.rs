@@ -43,6 +43,42 @@ fn sort_native_and_sim() {
 }
 
 #[test]
+fn sort_sharded_executes_and_prices_paper_scale() {
+    // Executed sharded sort over an explicit heterogeneous pool.
+    let (ok, text) = gbs(&[
+        "sort", "--n", "200K", "--engine", "sharded", "--devices", "gtx285,tesla",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("device pool: 2 devices"), "{text}");
+    assert!(text.contains("verified: sorted permutation"), "{text}");
+    assert!(text.contains("makespan"), "{text}");
+
+    // Analytic mode: 768M keys — beyond every Table 1 device — priced
+    // across the default 4-device pool without generating data.
+    let (ok, text) = gbs(&[
+        "sort", "--n", "768M", "--engine", "sharded", "--analytic", "true",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("analytic mode"), "{text}");
+    assert!(text.contains("device 3"), "{text}");
+    assert!(text.contains("Mkeys/s across the pool"), "{text}");
+
+    // An unknown device list is rejected.
+    let (ok, _) = gbs(&[
+        "sort", "--n", "1K", "--engine", "sharded", "--devices", "fermi",
+    ]);
+    assert!(!ok);
+}
+
+#[test]
+fn help_mentions_sharded_engine() {
+    let (ok, text) = gbs(&["help"]);
+    assert!(ok);
+    assert!(text.contains("sharded"), "{text}");
+    assert!(text.contains("--devices"), "{text}");
+}
+
+#[test]
 fn sort_rejects_bad_flags() {
     let (ok, text) = gbs(&["sort", "--n", "bogus"]);
     assert!(!ok);

@@ -17,6 +17,7 @@ fn all_tables_generate_and_persist() {
         exp::fig6_gtx285(&ladder),
         exp::fig7_tesla(&ladder),
         exp::sort_rate_series(&ladder, GpuModel::TeslaC1060),
+        exp::sharded_scaling(&ladder, &[1, 2, 4], GpuModel::Gtx285_2G),
     ];
     for t in &tables {
         assert!(!t.rows.is_empty(), "{}", t.name);

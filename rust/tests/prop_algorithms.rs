@@ -6,10 +6,11 @@
 use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
 use gpu_bucket_sort::algos::radix::{RadixParams, RadixSort};
 use gpu_bucket_sort::algos::randomized::{RandomizedParams, RandomizedSampleSort};
+use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
 use gpu_bucket_sort::algos::thrust_merge::{ThrustMergeParams, ThrustMergeSort};
 use gpu_bucket_sort::algos::{bitonic, Algorithm};
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
-use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::util::propcheck::forall;
 use gpu_bucket_sort::{is_sorted_permutation, Key};
 
@@ -84,6 +85,33 @@ fn thrust_analytic_equals_executed() {
         let mut sim_a = sim();
         let ana = sorter.sort_analytic(n, &mut sim_a).unwrap();
         assert_eq!(exec.ledger, ana.ledger, "n={n}");
+    });
+}
+
+#[test]
+fn sharded_output_matches_single_device() {
+    forall(30, "sharded == single-device bucket sort", |g| {
+        let keys = g.vec_u32(0..30_000);
+        let params = gen_params(g);
+        let sharded = ShardedSort::new(ShardedSortParams {
+            sort: params,
+            merge_samples: *g.choose(&[1usize, 8, 64]),
+        });
+        let device_count = g.usize_in(1..5);
+        let models: Vec<GpuModel> = (0..device_count)
+            .map(|i| DevicePool::DEFAULT_DEVICES[i % 4])
+            .collect();
+        let mut pool = DevicePool::new(&models).unwrap();
+        let mut sharded_out = keys.clone();
+        sharded.sort(&mut sharded_out, &mut pool).unwrap();
+
+        let mut single_out = keys.clone();
+        BucketSort::new(params)
+            .sort(&mut single_out, &mut GpuSim::new(GpuModel::TeslaC1060.spec()))
+            .unwrap();
+
+        assert!(is_sorted_permutation(&keys, &sharded_out), "params {params:?}");
+        assert_eq!(sharded_out, single_out, "params {params:?}");
     });
 }
 

@@ -1,0 +1,174 @@
+//! Sharded-engine integration: output identity against single-device
+//! GPU Bucket Sort across the workload suite, Execute↔Analytic ledger
+//! equality (the sharded mirror of the single-device property), the
+//! beyond-any-single-device capacity demonstration, and the engine
+//! behind the batched service.
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
+use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
+use gpu_bucket_sort::coordinator::{ShardedSortEngine, SortEngine, SortJob, SortService};
+use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
+use gpu_bucket_sort::util::propcheck::forall;
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{is_sorted_permutation, Key};
+
+fn small_params() -> ShardedSortParams {
+    ShardedSortParams {
+        sort: BucketSortParams { tile: 256, s: 16 },
+        merge_samples: 32,
+    }
+}
+
+/// The sharded engine's output is byte-identical to single-device
+/// GPU Bucket Sort on the same input, for every distribution of the
+/// robustness suite (the six-workload family of Leischner et al.).
+#[test]
+fn output_identical_to_single_device_across_distributions() {
+    let sharded = ShardedSort::new(small_params());
+    let single = BucketSort::new(small_params().sort);
+    let n = 1 << 16;
+    for dist in Distribution::ROBUSTNESS_SUITE {
+        let input = dist.generate(n, 11);
+
+        let mut sharded_out = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let report = sharded.sort(&mut sharded_out, &mut pool).unwrap();
+        assert_eq!(report.shard_sizes.iter().sum::<usize>(), n, "{dist}");
+
+        let mut single_out = input.clone();
+        let mut sim = GpuSim::new(GpuModel::TeslaC1060.spec());
+        single.sort(&mut single_out, &mut sim).unwrap();
+
+        assert!(is_sorted_permutation(&input, &sharded_out), "{dist}");
+        assert_eq!(sharded_out, single_out, "{dist}");
+    }
+}
+
+/// Execute and Analytic produce identical per-device ledgers, shard
+/// sizes and memory profiles — the sharded mirror of the single-device
+/// `analytic_ledger_equals_executed` property.
+#[test]
+fn sharded_analytic_ledger_equals_executed() {
+    forall(25, "sharded analytic == executed ledger", |g| {
+        let pools: [&[GpuModel]; 4] = [
+            &[GpuModel::Gtx285_2G, GpuModel::Gtx285_2G],
+            &[GpuModel::TeslaC1060, GpuModel::Gtx260],
+            &DevicePool::DEFAULT_DEVICES,
+            &[GpuModel::Gtx285_1G],
+        ];
+        let models: &[GpuModel] = *g.choose(&pools);
+        let n = g.usize_in(0..60_000);
+        let mut keys = g.vec_u32(n..n + 1);
+        let sorter = ShardedSort::new(small_params());
+
+        let mut pool_e = DevicePool::new(models).unwrap();
+        let exec = sorter.sort(&mut keys, &mut pool_e).unwrap();
+        let mut pool_a = DevicePool::new(models).unwrap();
+        let ana = sorter.sort_analytic(n, &mut pool_a).unwrap();
+
+        assert_eq!(exec.shard_sizes, ana.shard_sizes, "n={n}");
+        assert_eq!(exec.combine, ana.combine, "n={n}");
+        assert_eq!(exec.merge, ana.merge, "n={n}");
+        assert_eq!(exec.peak_device_bytes, ana.peak_device_bytes, "n={n}");
+        for ((se, sa), d) in pool_e.sims().iter().zip(pool_a.sims()).zip(0..) {
+            assert_eq!(se.ledger(), sa.ledger(), "n={n} device={d}");
+            assert_eq!(se.peak_bytes(), sa.peak_bytes(), "n={n} device={d}");
+        }
+    });
+}
+
+/// The acceptance demonstration: 768M keys — more than any single
+/// Table 1 device can hold (the 4 GB Tesla tops out at 512M) — sorts
+/// in Analytic mode across the four heterogeneous devices, with every
+/// shard inside its device's ceiling.
+#[test]
+fn analytic_sorts_beyond_any_single_device() {
+    let n = 768 << 20;
+    let sorter = ShardedSort::new(ShardedSortParams::default());
+
+    // Every single device OOMs at this size.
+    let single = BucketSort::new(BucketSortParams::default());
+    for gpu in GpuModel::ALL {
+        let mut sim = GpuSim::new(gpu.spec());
+        let err = single.sort_analytic(n, &mut sim).unwrap_err();
+        assert!(err.is_oom(), "{gpu} should OOM at 768M: {err}");
+    }
+
+    // The heterogeneous 4-device pool absorbs it.
+    let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+    let report = sorter.sort_analytic(n, &mut pool).unwrap();
+    assert_eq!(report.n, n);
+    assert_eq!(report.devices(), 4);
+    assert_eq!(report.shard_sizes.iter().sum::<usize>(), n);
+    for (d, &share) in report.shard_sizes.iter().enumerate() {
+        assert!(
+            share <= pool.spec(d).max_sortable_keys(),
+            "device {d} shard {share} over its ceiling"
+        );
+        assert!(share > 0, "device {d} idle");
+    }
+    let ms = report.makespan_ms(&pool);
+    assert!(ms > 0.0);
+    // Sanity: the pool sorts 768M faster than a (hypothetical) serial
+    // concatenation of its members' workloads.
+    let serial: f64 = report
+        .local
+        .iter()
+        .enumerate()
+        .map(|(d, r)| r.total_estimated_ms(pool.spec(d)))
+        .sum();
+    assert!(ms < serial, "makespan {ms} vs serial {serial}");
+}
+
+/// Capacity admission: the pool advertises the summed ceiling, and a
+/// job past it fails with a device OOM while batch-mates succeed.
+#[test]
+fn sharded_engine_oom_past_pool_capacity() {
+    use gpu_bucket_sort::sim::GpuSpec;
+    let tiny = GpuSpec {
+        name: "tiny".into(),
+        global_memory_bytes: 1 << 20,
+        ..GpuModel::Gtx260.spec()
+    };
+    let params = small_params();
+    let sorter = ShardedSort::new(params);
+    let mut pool = DevicePool::from_specs(vec![tiny.clone(), tiny]).unwrap();
+    // Two 1 MB devices hold 2 × 128K keys; 400K cannot fit.
+    let mut keys: Vec<Key> = (0..400_000u32).rev().collect();
+    let err = sorter.sort(&mut keys, &mut pool).unwrap_err();
+    assert!(err.is_oom(), "{err}");
+}
+
+/// The sharded engine behind the batched service: responses verify,
+/// and the engine reports its kind.
+#[test]
+fn service_runs_on_sharded_engine() {
+    let cfg = ServiceConfig {
+        engine: EngineKind::Sharded,
+        sort: BucketSortParams { tile: 256, s: 16 },
+        verify: true,
+        batch: BatchConfig {
+            max_batch_keys: 1 << 20,
+            max_batch_requests: 8,
+            max_wait_ms: 1,
+            queue_capacity: 64,
+            max_queued_keys: 1 << 24,
+        },
+        ..Default::default()
+    };
+    let engine = ShardedSortEngine::new(&cfg).unwrap();
+    assert_eq!(engine.kind(), EngineKind::Sharded);
+    let client = SortService::start_with_engine(cfg, engine).unwrap();
+    for (i, dist) in [Distribution::Uniform, Distribution::Zipf, Distribution::Sorted]
+        .into_iter()
+        .enumerate()
+    {
+        let keys = dist.generate(120_000, i as u64);
+        let out = client.sort(SortJob::new(keys.clone())).unwrap();
+        assert!(is_sorted_permutation(&keys, &out.keys));
+        assert_eq!(out.engine, EngineKind::Sharded);
+    }
+    let snap = client.shutdown();
+    assert_eq!(snap.counters["requests_completed"], 3);
+}
