@@ -1,0 +1,266 @@
+//! Service throughput vs scheduler worker count — the perf artifact
+//! behind the multi-worker scheduler.
+//!
+//! Drives the full request path (client → intake → batcher → scheduler
+//! → worker pool) with M concurrent submitters over the six-distribution
+//! robustness suite, at 1/2/4 workers. Each worker runs a
+//! [`PacedSimEngine`]: output computed on the host, *occupancy* priced
+//! by the analytic cost model of one simulated GTX 285 — so a worker
+//! stands in for one device and aggregate throughput scales with
+//! simulated devices, not host cores. The deterministic cost model is
+//! what makes the numbers stable run to run (the paper's
+//! data-independence claim, applied to benchmarking).
+//!
+//! Emits a machine-readable JSON report to
+//! `results/service_throughput.json` (validated by CI's `bench-smoke`
+//! job) and **fails** unless 4 workers deliver ≥ 2× the 1-worker
+//! throughput on the uniform distribution — the benchmark gate.
+//!
+//! `GBS_BENCH_FAST=1` selects the smoke profile (smaller n, fewer
+//! requests) used by CI.
+
+use gpu_bucket_sort::config::{BatchConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{PacedSimEngine, SortEngine, SortJob, SortService};
+use gpu_bucket_sort::sim::GpuModel;
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::Key;
+use std::time::Instant;
+
+/// Pacing multiplier over the Table 1 device estimate: keeps the priced
+/// device time comfortably above per-request host work (even on a
+/// 2-core CI box), so worker scaling — not host core count — dominates
+/// the measurement.
+const TIME_SCALE: f64 = 4.0;
+
+/// The simulated device each worker stands in for.
+const DEVICE: GpuModel = GpuModel::Gtx285_2G;
+
+struct Profile {
+    mode: &'static str,
+    keys_per_request: usize,
+    submitters: usize,
+    requests_per_submitter: usize,
+}
+
+impl Profile {
+    fn from_env() -> Profile {
+        if std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1") {
+            Profile {
+                mode: "smoke",
+                keys_per_request: 1 << 18,
+                submitters: 6,
+                requests_per_submitter: 3,
+            }
+        } else {
+            Profile {
+                mode: "full",
+                keys_per_request: 1 << 20,
+                submitters: 8,
+                requests_per_submitter: 8,
+            }
+        }
+    }
+}
+
+struct RunResult {
+    distribution: Distribution,
+    workers: usize,
+    requests: usize,
+    total_keys: usize,
+    wall_ms: f64,
+    throughput_mkeys_s: f64,
+    throughput_req_s: f64,
+    p50_request_ms: f64,
+    p99_request_ms: f64,
+    queue_depth_peak: u64,
+}
+
+fn run_one(profile: &Profile, dist: Distribution, workers: usize) -> RunResult {
+    let cfg = ServiceConfig {
+        workers,
+        verify: false,
+        batch: BatchConfig {
+            // One request per batch: every dispatch is one device pass,
+            // so the worker pool — not batch packing — is what varies
+            // between runs.
+            max_batch_requests: 1,
+            max_wait_ms: 0,
+            ..BatchConfig::default()
+        },
+        ..ServiceConfig::default()
+    };
+    let client =
+        SortService::start_with_worker_factory(cfg, |cfg: &ServiceConfig, _worker: usize| {
+            let engine = PacedSimEngine::new(DEVICE, cfg.sort, TIME_SCALE)?;
+            Ok(Box::new(engine) as Box<dyn SortEngine>)
+        })
+        .expect("service starts");
+
+    // Pre-generate every input so generation cost never shadows the
+    // service under test.
+    let inputs: Vec<Vec<Vec<Key>>> = (0..profile.submitters)
+        .map(|s| {
+            (0..profile.requests_per_submitter)
+                .map(|r| {
+                    dist.generate(
+                        profile.keys_per_request,
+                        (s * 1000 + r) as u64 + 1,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let requests = profile.submitters * profile.requests_per_submitter;
+    let total_keys = requests * profile.keys_per_request;
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for submitter_inputs in inputs {
+            let client = client.clone();
+            scope.spawn(move || {
+                for keys in submitter_inputs {
+                    let out = client.sort(SortJob::new(keys)).expect("request succeeds");
+                    assert!(gpu_bucket_sort::is_sorted(&out.keys));
+                }
+            });
+        }
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let snap = client.shutdown();
+
+    let latency = snap
+        .timers
+        .get("request_latency")
+        .expect("request_latency recorded");
+    assert_eq!(
+        snap.counters["requests_completed"], requests as u64,
+        "every request completed"
+    );
+    RunResult {
+        distribution: dist,
+        workers,
+        requests,
+        total_keys,
+        wall_ms,
+        throughput_mkeys_s: total_keys as f64 / wall_ms * 1e3 / 1e6,
+        throughput_req_s: requests as f64 / wall_ms * 1e3,
+        p50_request_ms: latency.quantile_ms(0.5),
+        p99_request_ms: latency.quantile_ms(0.99),
+        queue_depth_peak: snap
+            .counters
+            .get("scheduler_queue_depth_peak")
+            .copied()
+            .unwrap_or(0),
+    }
+}
+
+fn result_json(r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("distribution", Json::str(r.distribution.to_string())),
+        ("workers", Json::num(r.workers as f64)),
+        ("requests", Json::num(r.requests as f64)),
+        ("total_keys", Json::num(r.total_keys as f64)),
+        ("wall_ms", Json::num(r.wall_ms)),
+        ("throughput_mkeys_s", Json::num(r.throughput_mkeys_s)),
+        ("throughput_req_s", Json::num(r.throughput_req_s)),
+        ("p50_request_ms", Json::num(r.p50_request_ms)),
+        ("p99_request_ms", Json::num(r.p99_request_ms)),
+        ("queue_depth_peak", Json::num(r.queue_depth_peak as f64)),
+    ])
+}
+
+fn main() {
+    let profile = Profile::from_env();
+    println!(
+        "service_throughput [{}]: {} submitters × {} requests × {} keys, paced {DEVICE} ×{TIME_SCALE}",
+        profile.mode,
+        profile.submitters,
+        profile.requests_per_submitter,
+        profile.keys_per_request
+    );
+
+    let mut results: Vec<RunResult> = Vec::new();
+    for dist in Distribution::ROBUSTNESS_SUITE {
+        // The uniform headline gets the full 1→2→4 ladder; the rest
+        // pin the endpoints.
+        let ladder: &[usize] = if dist == Distribution::Uniform {
+            &[1, 2, 4]
+        } else {
+            &[1, 4]
+        };
+        for &workers in ladder {
+            let r = run_one(&profile, dist, workers);
+            println!(
+                "  {:<14} workers={}  {:>8.1} ms  {:>7.1} Mkeys/s  p50 {:>7.1} ms  p99 {:>7.1} ms",
+                r.distribution.to_string(),
+                r.workers,
+                r.wall_ms,
+                r.throughput_mkeys_s,
+                r.p50_request_ms,
+                r.p99_request_ms
+            );
+            results.push(r);
+        }
+    }
+
+    // Scaling: 4-worker vs 1-worker throughput per distribution.
+    let mut scaling = Vec::new();
+    let mut uniform_speedup = 0.0;
+    for dist in Distribution::ROBUSTNESS_SUITE {
+        let thr = |workers: usize| {
+            results
+                .iter()
+                .find(|r| r.distribution == dist && r.workers == workers)
+                .map(|r| r.throughput_mkeys_s)
+        };
+        let (Some(base), Some(top)) = (thr(1), thr(4)) else {
+            continue;
+        };
+        let speedup = top / base;
+        if dist == Distribution::Uniform {
+            uniform_speedup = speedup;
+        }
+        println!("  {:<14} 4-worker speedup: {speedup:.2}×", dist.to_string());
+        scaling.push(Json::obj(vec![
+            ("distribution", Json::str(dist.to_string())),
+            ("workers", Json::num(4.0)),
+            ("baseline_workers", Json::num(1.0)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("service_throughput")),
+        ("schema_version", Json::num(1.0)),
+        ("mode", Json::str(profile.mode)),
+        ("engine", Json::str("sim-paced")),
+        ("device", Json::str(DEVICE.id())),
+        ("time_scale", Json::num(TIME_SCALE)),
+        ("submitters", Json::num(profile.submitters as f64)),
+        (
+            "requests_per_submitter",
+            Json::num(profile.requests_per_submitter as f64),
+        ),
+        (
+            "keys_per_request",
+            Json::num(profile.keys_per_request as f64),
+        ),
+        ("results", Json::Arr(results.iter().map(result_json).collect())),
+        ("scaling", Json::Arr(scaling)),
+    ]);
+
+    let out_dir = std::path::Path::new("results");
+    std::fs::create_dir_all(out_dir).expect("create results/");
+    let path = out_dir.join("service_throughput.json");
+    std::fs::write(&path, report.to_string_pretty()).expect("write JSON report");
+    println!("→ {}", path.display());
+
+    // The benchmark gate: the scheduler must actually scale.
+    assert!(
+        uniform_speedup >= 2.0,
+        "4 workers delivered only {uniform_speedup:.2}× the 1-worker throughput \
+         on uniform (gate: ≥ 2×)"
+    );
+    println!("gate OK: uniform 4-worker speedup {uniform_speedup:.2}× ≥ 2×");
+}

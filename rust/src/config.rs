@@ -84,6 +84,11 @@ impl Default for BatchConfig {
 pub struct ServiceConfig {
     /// Engine selection.
     pub engine: EngineKind,
+    /// Scheduler worker count: how many engine instances execute batches
+    /// concurrently. Each worker owns its own engine (for
+    /// [`EngineKind::Sharded`], its own disjoint device lease — so
+    /// `workers` must not exceed `devices.len()` there).
+    pub workers: usize,
     /// Simulated device (for [`EngineKind::Sim`]).
     pub device: GpuModel,
     /// Simulated device pool (for [`EngineKind::Sharded`]); must be
@@ -106,6 +111,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             engine: EngineKind::Native,
+            workers: 1,
             device: GpuModel::Gtx285_2G,
             devices: DevicePool::DEFAULT_DEVICES.to_vec(),
             sort: BucketSortParams::default(),
@@ -139,6 +145,11 @@ impl ServiceConfig {
                     let s = str_field(val, "engine")?;
                     cfg.engine = EngineKind::parse(&s)
                         .ok_or_else(|| Error::Config(format!("unknown engine {s:?}")))?;
+                }
+                "workers" => {
+                    cfg.workers = val
+                        .as_usize()
+                        .ok_or_else(|| Error::Config("workers must be an integer".into()))?;
                 }
                 "device" => {
                     let s = str_field(val, "device")?;
@@ -212,8 +223,20 @@ impl ServiceConfig {
     /// Sanity-check the combination.
     pub fn validate(&self) -> Result<()> {
         self.sort.validate()?;
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be at least 1".into()));
+        }
         if self.devices.is_empty() {
             return Err(Error::Config("devices must not be empty".into()));
+        }
+        if self.engine == EngineKind::Sharded && self.workers > self.devices.len() {
+            return Err(Error::Config(format!(
+                "sharded engine: {} workers need {} devices but only {} are configured \
+                 (each worker leases a disjoint device subset)",
+                self.workers,
+                self.workers,
+                self.devices.len()
+            )));
         }
         if self.batch.max_batch_keys == 0 || self.batch.queue_capacity == 0 {
             return Err(Error::Config(
@@ -232,6 +255,7 @@ impl ServiceConfig {
     pub fn to_json(&self) -> String {
         Json::obj(vec![
             ("engine", Json::str(self.engine.id())),
+            ("workers", Json::num(self.workers as f64)),
             ("device", Json::str(self.device.id())),
             (
                 "devices",
@@ -327,8 +351,29 @@ mod tests {
     fn partial_json_uses_defaults() {
         let cfg = ServiceConfig::from_json(r#"{"engine":"sim"}"#).unwrap();
         assert_eq!(cfg.engine, EngineKind::Sim);
+        assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.sort, BucketSortParams::default());
         assert_eq!(cfg.batch, BatchConfig::default());
+    }
+
+    #[test]
+    fn workers_field_roundtrips_and_validates() {
+        let cfg = ServiceConfig::from_json(r#"{"workers":4}"#).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // Zero workers is invalid.
+        assert!(ServiceConfig::from_json(r#"{"workers":0}"#).is_err());
+        // Sharded: workers are capped by the device count (disjoint
+        // per-worker leases).
+        assert!(ServiceConfig::from_json(r#"{"engine":"sharded","workers":4}"#).is_ok());
+        let err = ServiceConfig::from_json(r#"{"engine":"sharded","workers":5}"#).unwrap_err();
+        assert!(err.to_string().contains("devices"), "{err}");
+        assert!(ServiceConfig::from_json(
+            r#"{"engine":"sharded","workers":2,"devices":["tesla","gtx260"]}"#
+        )
+        .is_ok());
+        // Native engines have no such cap.
+        assert!(ServiceConfig::from_json(r#"{"workers":32}"#).is_ok());
     }
 
     #[test]

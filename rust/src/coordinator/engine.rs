@@ -16,13 +16,13 @@ use crate::config::{EngineKind, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::exec::NativeEngine;
 use crate::runtime::PjrtRuntime;
-use crate::sim::{DevicePool, GpuModel, GpuSim, GpuSpec};
+use crate::sim::{DeviceLease, DevicePool, GpuModel, GpuSim, GpuSpec};
 use crate::util::pool;
 use crate::Key;
 
 /// A sort backend able to process a batch of independent jobs.
 ///
-/// One engine instance is owned by the service's single engine thread —
+/// One engine instance is owned by exactly one scheduler worker thread —
 /// it is *constructed on that thread* (see `SortService::start`) — so
 /// implementations may hold non-`Send`/non-`Sync` state (the PJRT
 /// client's `Rc` internals in particular).
@@ -129,6 +129,10 @@ impl SortEngine for SimSortEngine {
 pub struct ShardedSortEngine {
     models: Vec<GpuModel>,
     sorter: ShardedSort,
+    /// Held when the devices were checked out of a shared
+    /// [`crate::sim::DeviceRegistry`] (multi-worker schedulers); the
+    /// devices return to the registry when the engine drops.
+    _lease: Option<DeviceLease>,
 }
 
 impl ShardedSortEngine {
@@ -154,7 +158,17 @@ impl ShardedSortEngine {
         Ok(ShardedSortEngine {
             models,
             sorter: ShardedSort::try_new(params)?,
+            _lease: None,
         })
+    }
+
+    /// Build over devices leased from a shared registry — the
+    /// multi-worker path, where each scheduler worker holds a disjoint
+    /// subset of the configured pool.
+    pub fn with_lease(lease: DeviceLease, params: ShardedSortParams) -> Result<Self> {
+        let mut engine = Self::from_parts(lease.models().to_vec(), params)?;
+        engine._lease = Some(lease);
+        Ok(engine)
     }
 
     /// The device models backing each job's pool.
@@ -223,6 +237,79 @@ impl SortEngine for PjrtSortEngine {
     }
 }
 
+/// Device-paced simulated engine: output computed on the host with a
+/// fast comparison sort, *occupancy* priced by the analytic cost model
+/// of the simulated device — the worker stays busy for the device's
+/// estimated wall time, like a real accelerator-attached engine waiting
+/// on its stream. This is what makes multi-worker throughput studies
+/// honest on a small host: each worker stands in for one GPU, and
+/// aggregate throughput scales with simulated devices, not host cores.
+///
+/// Jobs beyond the device's memory ceiling fail with the same OOM as
+/// [`SimSortEngine`] (the pricing pass performs the capacity
+/// accounting).
+pub struct PacedSimEngine {
+    spec: GpuSpec,
+    sorter: BucketSort,
+    time_scale: f64,
+}
+
+impl PacedSimEngine {
+    /// Build over one simulated device. `time_scale` stretches or
+    /// shrinks the priced device time (1.0 = Table 1 calibration; 0
+    /// disables pacing entirely — pure correctness tests).
+    pub fn new(model: GpuModel, params: BucketSortParams, time_scale: f64) -> Result<Self> {
+        if !time_scale.is_finite() || time_scale < 0.0 {
+            return Err(Error::InvalidParams(
+                "time_scale must be finite and non-negative".into(),
+            ));
+        }
+        Ok(PacedSimEngine {
+            spec: model.spec(),
+            sorter: BucketSort::try_new(params)?,
+            time_scale,
+        })
+    }
+}
+
+impl SortEngine for PacedSimEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sim
+    }
+
+    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+        let started = std::time::Instant::now();
+        let mut device_ms = 0.0;
+        let results: Vec<Result<Vec<Key>>> = jobs
+            .into_iter()
+            .map(|mut keys| {
+                let mut sim = GpuSim::new(self.spec.clone());
+                // Analytic pricing enforces the memory ceiling and
+                // yields the deterministic device estimate; the data
+                // work itself is a plain host sort.
+                self.sorter.sort_analytic(keys.len(), &mut sim)?;
+                device_ms += sim.estimated_ms();
+                keys.sort_unstable();
+                Ok(keys)
+            })
+            .collect();
+        // Hold the worker for the rest of the simulated device time —
+        // a batch is one stream, so job estimates add up.
+        let budget_ms = device_ms * self.time_scale;
+        let host_ms = started.elapsed().as_secs_f64() * 1e3;
+        if budget_ms > host_ms {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                (budget_ms - host_ms) / 1e3,
+            ));
+        }
+        results
+    }
+
+    fn max_job_keys(&self) -> Option<usize> {
+        Some(self.spec.max_sortable_keys())
+    }
+}
+
 /// Build the engine selected by `cfg.engine`.
 pub fn build_engine(cfg: &ServiceConfig) -> Result<Box<dyn SortEngine>> {
     match cfg.engine {
@@ -230,6 +317,34 @@ pub fn build_engine(cfg: &ServiceConfig) -> Result<Box<dyn SortEngine>> {
         EngineKind::Sim => Ok(Box::new(SimSortEngine::new(cfg)?)),
         EngineKind::Pjrt => Ok(Box::new(PjrtSortEngine::new(cfg)?)),
         EngineKind::Sharded => Ok(Box::new(ShardedSortEngine::new(cfg)?)),
+    }
+}
+
+/// Build the engine for scheduler worker `worker` of `cfg.workers`.
+///
+/// Identical to [`build_engine`] except for the sharded engine in a
+/// multi-worker scheduler: there each worker checks its share of
+/// `cfg.devices` out of the shared `registry`, so concurrent workers
+/// hold disjoint device subsets (no oversubscription).
+pub fn build_worker_engine(
+    cfg: &ServiceConfig,
+    worker: usize,
+    registry: Option<&crate::sim::DeviceRegistry>,
+) -> Result<Box<dyn SortEngine>> {
+    match (cfg.engine, registry) {
+        (EngineKind::Sharded, Some(registry)) => {
+            let share =
+                crate::sim::DeviceRegistry::share_for(worker, cfg.workers, registry.total());
+            let lease = registry.checkout(share)?;
+            Ok(Box::new(ShardedSortEngine::with_lease(
+                lease,
+                ShardedSortParams {
+                    sort: cfg.sort,
+                    ..Default::default()
+                },
+            )?))
+        }
+        _ => build_engine(cfg),
     }
 }
 
@@ -338,6 +453,75 @@ mod tests {
         }
         // Empty device lists are rejected up front.
         assert!(ShardedSortEngine::from_parts(vec![], ShardedSortParams::default()).is_err());
+    }
+
+    #[test]
+    fn paced_sim_engine_sorts_and_respects_capacity() {
+        // time_scale 0: no pacing sleep, pure correctness check.
+        let mut e =
+            PacedSimEngine::new(GpuModel::Gtx285_2G, BucketSortParams { tile: 256, s: 16 }, 0.0)
+                .unwrap();
+        assert_eq!(e.kind(), EngineKind::Sim);
+        assert_eq!(
+            e.max_job_keys(),
+            Some(GpuModel::Gtx285_2G.spec().max_sortable_keys())
+        );
+        let jobs: Vec<Vec<Key>> = vec![
+            (0..10_000u32).rev().collect(),
+            vec![],
+            vec![7, 7, 3, 3, 1],
+        ];
+        let results = e.sort_batch(jobs.clone());
+        for (inp, res) in jobs.iter().zip(&results) {
+            assert!(crate::is_sorted_permutation(inp, res.as_ref().unwrap()));
+        }
+        // Over-ceiling jobs OOM exactly like the executing sim engine.
+        let tiny = GpuSpec {
+            name: "tiny".into(),
+            global_memory_bytes: 1 << 20,
+            ..GpuModel::Gtx260.spec()
+        };
+        let mut paced_tiny = PacedSimEngine {
+            spec: tiny,
+            sorter: BucketSort::try_new(BucketSortParams { tile: 256, s: 16 }).unwrap(),
+            time_scale: 0.0,
+        };
+        let results = paced_tiny.sort_batch(vec![vec![0u32; 300_000], vec![2, 1]]);
+        assert!(results[0].as_ref().unwrap_err().is_oom());
+        assert_eq!(results[1].as_ref().unwrap(), &vec![1, 2]);
+        // Bad scales rejected.
+        assert!(PacedSimEngine::new(GpuModel::Gtx260, BucketSortParams::default(), -1.0).is_err());
+        assert!(
+            PacedSimEngine::new(GpuModel::Gtx260, BucketSortParams::default(), f64::NAN).is_err()
+        );
+    }
+
+    #[test]
+    fn worker_engines_lease_disjoint_device_shares() {
+        use crate::sim::DeviceRegistry;
+        let cfg = ServiceConfig {
+            engine: EngineKind::Sharded,
+            workers: 2,
+            sort: BucketSortParams { tile: 256, s: 16 },
+            ..Default::default()
+        };
+        let registry = DeviceRegistry::new(cfg.devices.clone());
+        let e0 = build_worker_engine(&cfg, 0, Some(&registry)).unwrap();
+        let e1 = build_worker_engine(&cfg, 1, Some(&registry)).unwrap();
+        assert_eq!(e0.kind(), EngineKind::Sharded);
+        assert_eq!(e1.kind(), EngineKind::Sharded);
+        // 4 devices over 2 workers: both leases hold 2, none left over.
+        assert_eq!(registry.available(), 0);
+        // A third worker would oversubscribe and is refused.
+        assert!(build_worker_engine(&cfg, 2, Some(&registry)).is_err());
+        // Dropping an engine returns its devices.
+        drop(e0);
+        assert_eq!(registry.available(), 2);
+        drop(e1);
+        assert_eq!(registry.available(), 4);
+        // Without a registry the plain config path is used.
+        let plain = build_worker_engine(&cfg, 0, None).unwrap();
+        assert_eq!(plain.kind(), EngineKind::Sharded);
     }
 
     #[test]

@@ -3,28 +3,37 @@
 //!
 //! * [`request`] — job/outcome types and the pending-request envelope.
 //! * [`batcher`] — FIFO dynamic batching with backpressure.
-//! * [`engine`] — the three backends (native multicore, simulated GPU,
-//!   PJRT/AOT) behind one [`engine::SortEngine`] trait.
-//! * [`service`] — the intake thread + dedicated engine thread.
+//! * [`engine`] — the backends (native multicore, simulated GPU,
+//!   device-paced sim, PJRT/AOT, sharded multi-device) behind one
+//!   [`engine::SortEngine`] trait.
+//! * [`scheduler`] — the multi-worker pool: N engine workers behind a
+//!   condvar-signalled bounded queue, out-of-order completion with
+//!   byte-deterministic per-request results.
+//! * [`service`] — the intake thread wiring client channels, the
+//!   batcher and the scheduler together.
 //!
 //! Invariants (enforced by unit tests here and property tests in
 //! `rust/tests/prop_coordinator.rs`):
 //! * responses carry the same request id and tag as the submission;
 //! * each response is the sorted permutation of its own request's keys
-//!   (never a batch-mate's);
-//! * FIFO dispatch order;
+//!   (never a batch-mate's), byte-identical for any worker count;
+//! * FIFO dispatch order (batches may *complete* out of order across
+//!   workers);
 //! * admission never exceeds the queue/key budgets.
 
 pub mod batcher;
 pub mod engine;
 pub mod request;
+pub mod scheduler;
 pub mod service;
 
 pub use batcher::Batcher;
 pub use engine::{
-    build_engine, NativeSortEngine, PjrtSortEngine, ShardedSortEngine, SimSortEngine, SortEngine,
+    build_engine, build_worker_engine, NativeSortEngine, PacedSimEngine, PjrtSortEngine,
+    ShardedSortEngine, SimSortEngine, SortEngine,
 };
 pub use request::{Batch, PendingRequest, RequestId, SortJob, SortOutcome};
+pub use scheduler::{DispatchError, Scheduler};
 pub use service::{SortClient, SortService};
 
 #[cfg(test)]
@@ -86,6 +95,52 @@ mod tests {
         }
         assert!(any_batched, "dynamic batching never engaged");
         client.shutdown();
+    }
+
+    #[test]
+    fn multi_worker_end_to_end() {
+        let cfg = ServiceConfig {
+            workers: 4,
+            ..test_config()
+        };
+        let client = SortService::start(cfg).unwrap();
+        let mut rxs = Vec::new();
+        let mut inputs = Vec::new();
+        for i in 0..24u64 {
+            let keys = Distribution::Uniform.generate(5_000 + (i as usize) * 131, i);
+            rxs.push(client.submit(SortJob::new(keys.clone())).unwrap());
+            inputs.push(keys);
+        }
+        for (i, (rx, input)) in rxs.into_iter().zip(inputs).enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert!(crate::is_sorted_permutation(&input, &out.keys), "req {i}");
+            assert!(out.worker < 4, "worker id {} out of range", out.worker);
+        }
+        let snap = client.shutdown();
+        assert_eq!(snap.counters["requests_completed"], 24);
+        assert_eq!(snap.counters["requests_received"], 24);
+    }
+
+    #[test]
+    fn single_engine_injection_requires_one_worker() {
+        struct Noop;
+        impl SortEngine for Noop {
+            fn kind(&self) -> crate::config::EngineKind {
+                crate::config::EngineKind::Native
+            }
+            fn sort_batch(
+                &mut self,
+                jobs: Vec<Vec<crate::Key>>,
+            ) -> Vec<crate::error::Result<Vec<crate::Key>>> {
+                jobs.into_iter().map(Ok).collect()
+            }
+        }
+        let cfg = ServiceConfig {
+            workers: 2,
+            ..test_config()
+        };
+        let err = SortService::start_with_engine(cfg, Noop).unwrap_err();
+        assert!(err.to_string().contains("1 worker"), "{err}");
     }
 
     #[test]
@@ -151,17 +206,24 @@ mod tests {
             }
         }
         assert_eq!(done, 8);
-        let completed = snap.counters.get("requests_completed").copied().unwrap_or(0);
-        // Snapshot races the engine thread; completion is proven by the
-        // channel receipts above.
-        assert!(completed <= 8);
+        // The shutdown ack is signalled only after the scheduler joins
+        // its workers, so the final snapshot is complete — no race.
+        assert_eq!(snap.counters["requests_completed"], 8);
     }
 
     #[test]
     fn backpressure_rejects_when_saturated() {
+        use std::sync::{Arc, Condvar, Mutex};
         use std::time::Duration;
-        // An engine that blocks until released, so the queue can fill.
-        struct SlowEngine(std::sync::Arc<std::sync::atomic::AtomicBool>);
+        // An engine that blocks until released — condvar-gated, no
+        // sleep-polling — so the queue can fill.
+        struct SlowEngine(Arc<(Mutex<bool>, Condvar)>);
+        impl SlowEngine {
+            fn release(gate: &(Mutex<bool>, Condvar)) {
+                *gate.0.lock().unwrap() = true;
+                gate.1.notify_all();
+            }
+        }
         impl SortEngine for SlowEngine {
             fn kind(&self) -> crate::config::EngineKind {
                 crate::config::EngineKind::Native
@@ -170,8 +232,10 @@ mod tests {
                 &mut self,
                 jobs: Vec<Vec<crate::Key>>,
             ) -> Vec<crate::error::Result<Vec<crate::Key>>> {
-                while !self.0.load(std::sync::atomic::Ordering::SeqCst) {
-                    std::thread::sleep(Duration::from_millis(1));
+                let (lock, cv) = &*self.0;
+                let mut released = lock.lock().unwrap();
+                while !*released {
+                    released = cv.wait(released).unwrap();
                 }
                 jobs.into_iter()
                     .map(|mut k| {
@@ -182,7 +246,7 @@ mod tests {
             }
         }
 
-        let release = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let release = Arc::new((Mutex::new(false), Condvar::new()));
         let cfg = ServiceConfig {
             verify: false,
             batch: BatchConfig {
@@ -197,14 +261,15 @@ mod tests {
         let client =
             SortService::start_with_engine(cfg, SlowEngine(release.clone())).unwrap();
 
-        // Saturate: 2 batches in flight + 2 queued; further submissions
-        // must be rejected with backpressure.
+        // Saturate: 1 executing + 2 in the scheduler queue + 2 in the
+        // batcher; further submissions must be rejected with
+        // backpressure.
         let mut rxs = Vec::new();
         for _ in 0..12 {
             rxs.push(client.submit(SortJob::new(vec![2, 1])).unwrap());
             std::thread::sleep(Duration::from_millis(2));
         }
-        release.store(true, std::sync::atomic::Ordering::SeqCst);
+        SlowEngine::release(&release);
         let mut rejected = 0;
         let mut completed = 0;
         for rx in rxs {

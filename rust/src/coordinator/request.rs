@@ -43,6 +43,9 @@ pub struct SortOutcome {
     pub tag: Option<String>,
     /// Which engine served it.
     pub engine: EngineKind,
+    /// Index of the scheduler worker that executed the batch (0 for
+    /// zero-key jobs, which never reach a worker).
+    pub worker: usize,
     /// Requests that shared the engine dispatch with this one.
     pub batch_size: usize,
     /// Time spent queued before dispatch (ms).

@@ -1,0 +1,613 @@
+//! The multi-worker scheduler: a pool of N engine workers behind one
+//! condvar-signalled admission queue.
+//!
+//! The paper's determinism claim is what makes this safe to build: a
+//! batch's outcome depends only on each job's own keys (every engine
+//! sorts jobs independently, and a sorted `u32` sequence is the unique
+//! ordering of its multiset), so batches may complete **out of order
+//! across workers** while every response stays byte-identical to the
+//! single-worker service. Per-request oneshot channels deliver results,
+//! so completion order never matters to callers.
+//!
+//! Design:
+//! * one `Mutex<State>` guards the dispatch queue and the per-worker
+//!   in-flight table; two condvars signal it (`work`: a batch arrived or
+//!   drain started, towards workers; `slots`: a batch finished or left
+//!   the queue, towards dispatchers);
+//! * each worker owns its engine, built **on the worker thread** by the
+//!   factory (PJRT state is not `Send`; a sharded engine leases its own
+//!   disjoint device subset);
+//! * the queue is bounded at `2 × workers` batches so queue-delay
+//!   accounting stays honest (a depth-2 stream per worker, like the
+//!   single-engine service's depth-2 channel);
+//! * `shutdown` drains: workers finish the queue, then exit; no batch
+//!   admitted to the scheduler is ever dropped.
+//!
+//! After finishing a batch a worker first clears its in-flight slot and
+//! *then* delivers the outcomes and fires the `on_slot_free` hook — a
+//! caller woken by its response often submits immediately, and must see
+//! spare capacity (else it eats a full batching wait).
+
+use super::engine::{self, SortEngine};
+use super::request::{Batch, SortOutcome};
+use crate::config::ServiceConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Builds one worker's engine, on that worker's thread. Called once per
+/// worker with the worker index.
+pub type WorkerEngineFactory =
+    dyn Fn(&ServiceConfig, usize) -> Result<Box<dyn SortEngine>> + Send + Sync;
+
+/// Queue + in-flight bookkeeping, under the scheduler mutex.
+#[derive(Debug)]
+struct State {
+    queue: VecDeque<Batch>,
+    /// `active[w]` = worker `w` is executing a batch.
+    active: Vec<bool>,
+    active_count: usize,
+    /// Workers able to serve batches. Decremented when a worker exits —
+    /// including by panic (a drop guard) — so dispatchers never wait on
+    /// a dead pool.
+    live_workers: usize,
+    /// Set by [`Scheduler::shutdown`]: workers drain the queue and exit.
+    draining: bool,
+}
+
+/// Why a dispatch did not go through. The batch is handed back intact
+/// either way.
+#[derive(Debug)]
+pub enum DispatchError {
+    /// The bounded queue is at capacity — re-dispatch after a slot-free
+    /// wake-up.
+    Full(Batch),
+    /// Every worker has died (engine panic); the pool can never serve
+    /// this batch.
+    Dead(Batch),
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for queued batches (or the drain signal).
+    work: Condvar,
+    /// Dispatchers wait here for queue/worker capacity.
+    slots: Condvar,
+    /// Queue bound in batches.
+    capacity: usize,
+    metrics: Arc<Metrics>,
+    verify: bool,
+    /// Fired after every finished batch — the service's intake loop
+    /// turns it into a wake-up message so it never has to poll.
+    on_slot_free: Box<dyn Fn() + Send + Sync>,
+}
+
+/// A running worker pool. Owned by the service's intake thread;
+/// [`Scheduler::shutdown`] drains and joins it.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler")
+            .field("workers", &self.workers.len())
+            .field("capacity", &self.shared.capacity)
+            .finish()
+    }
+}
+
+impl Scheduler {
+    /// Spawn `cfg.workers` workers, each constructing its engine via
+    /// `factory` on its own thread. Any construction failure tears the
+    /// pool down and is returned synchronously.
+    pub fn start(
+        cfg: &ServiceConfig,
+        factory: Arc<WorkerEngineFactory>,
+        metrics: Arc<Metrics>,
+        on_slot_free: Box<dyn Fn() + Send + Sync>,
+    ) -> Result<Scheduler> {
+        let workers = cfg.workers;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                active: vec![false; workers],
+                active_count: 0,
+                live_workers: workers,
+                draining: false,
+            }),
+            work: Condvar::new(),
+            slots: Condvar::new(),
+            capacity: 2 * workers,
+            metrics,
+            verify: cfg.verify,
+            on_slot_free,
+        });
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = shared.clone();
+            let factory = factory.clone();
+            let cfg = cfg.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("gbs-worker-{w}"))
+                .spawn(move || match factory(&cfg, w) {
+                    Ok(engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        // Release the readiness channel before serving:
+                        // if a *sibling* factory panics (drops its
+                        // sender without sending), `start` must see the
+                        // disconnect rather than block on workers that
+                        // are already in their serve loop.
+                        drop(ready_tx);
+                        worker_loop(w, engine, &shared);
+                    }
+                    Err(e) => {
+                        shared.state.lock().unwrap().live_workers -= 1;
+                        shared.slots.notify_all();
+                        let _ = ready_tx.send(Err(e));
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn worker {w}: {e}")))?;
+            handles.push(handle);
+        }
+        drop(ready_tx);
+
+        let mut first_err = None;
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err = first_err.or_else(|| {
+                        Some(Error::Coordinator(
+                            "worker thread died during engine construction".into(),
+                        ))
+                    });
+                    break;
+                }
+            }
+        }
+        let scheduler = Scheduler {
+            shared,
+            workers: handles,
+        };
+        match first_err {
+            None => Ok(scheduler),
+            Some(e) => {
+                // Tear down the workers that did come up.
+                scheduler.shutdown();
+                Err(e)
+            }
+        }
+    }
+
+    /// Number of workers in the pool.
+    pub fn worker_count(&self) -> usize {
+        self.shared.state.lock().unwrap().active.len()
+    }
+
+    /// True when a batch dispatched right now could start immediately:
+    /// some worker is neither executing nor already promised a queued
+    /// batch. The intake loop uses this to skip the batching window on
+    /// an unloaded service.
+    pub fn has_spare_capacity(&self) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        st.active_count + st.queue.len() < st.active.len()
+    }
+
+    /// Dispatch without blocking; hands the batch back when the queue is
+    /// at capacity (the caller re-queues it and waits for a slot-free
+    /// wake-up) or the pool is dead.
+    pub fn try_dispatch(&self, batch: Batch) -> std::result::Result<(), DispatchError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.live_workers == 0 {
+            return Err(DispatchError::Dead(batch));
+        }
+        if st.queue.len() >= self.shared.capacity {
+            return Err(DispatchError::Full(batch));
+        }
+        self.push(&mut st, batch);
+        Ok(())
+    }
+
+    /// Dispatch, waiting for queue capacity (shutdown drain — admitted
+    /// work must reach a worker even under a full queue). Hands the
+    /// batch back only if every worker has died.
+    pub fn dispatch_blocking(&self, batch: Batch) -> std::result::Result<(), Batch> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.live_workers == 0 {
+                return Err(batch);
+            }
+            if st.queue.len() < self.shared.capacity {
+                break;
+            }
+            st = self.shared.slots.wait(st).unwrap();
+        }
+        self.push(&mut st, batch);
+        Ok(())
+    }
+
+    fn push(&self, st: &mut State, batch: Batch) {
+        st.queue.push_back(batch);
+        let depth = st.queue.len() as u64;
+        self.shared.metrics.record_max("scheduler_queue_depth_peak", depth);
+        self.shared.metrics.incr("scheduler_queue_depth_sum", depth);
+        self.shared.metrics.incr("scheduler_queue_depth_samples", 1);
+        self.shared.work.notify_one();
+    }
+
+    /// Drain and stop: workers finish every queued batch, then exit;
+    /// returns once all worker threads have been joined.
+    pub fn shutdown(self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.draining = true;
+            self.shared.work.notify_all();
+        }
+        for handle in self.workers {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) {
+    // Runs on every exit path, *including an engine panic*: clears the
+    // worker's in-flight slot, retires it from the live count and wakes
+    // anyone waiting, so a dead pool can never strand a dispatcher on
+    // the slots condvar. (The panicked batch's response channels drop
+    // with the unwound stack — its callers see a disconnect, exactly
+    // like the old single-engine-thread service.)
+    struct Retire<'a> {
+        shared: &'a Shared,
+        worker: usize,
+    }
+    impl Drop for Retire<'_> {
+        fn drop(&mut self) {
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.active[self.worker] {
+                    st.active[self.worker] = false;
+                    st.active_count -= 1;
+                }
+                st.live_workers -= 1;
+            }
+            self.shared.slots.notify_all();
+            (self.shared.on_slot_free)();
+        }
+    }
+    let _retire = Retire { shared, worker };
+
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(batch) = st.queue.pop_front() {
+                    st.active[worker] = true;
+                    st.active_count += 1;
+                    break Some(batch);
+                }
+                if st.draining {
+                    break None;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let Some(batch) = batch else { return };
+        // The queue shrank: a dispatcher blocked on capacity can move.
+        shared.slots.notify_all();
+
+        let outcomes = execute_batch(worker, engine.as_mut(), batch, shared);
+
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.active[worker] = false;
+            st.active_count -= 1;
+        }
+        shared.slots.notify_all();
+        (shared.on_slot_free)();
+
+        // Deliver only after freeing the slot (see module docs).
+        for (respond_to, admitted_at, outcome) in outcomes {
+            shared.metrics.observe(
+                "request_latency",
+                Instant::now().saturating_duration_since(admitted_at),
+            );
+            let _ = respond_to.send(outcome);
+        }
+    }
+}
+
+type Delivery = (
+    mpsc::Sender<Result<SortOutcome>>,
+    Instant,
+    Result<SortOutcome>,
+);
+
+/// Run one batch on this worker's engine and prepare the responses
+/// (identical per-request semantics to the old single-engine loop: jobs
+/// fail individually, verify mode checks each output against its own
+/// input).
+fn execute_batch(
+    worker: usize,
+    engine: &mut dyn SortEngine,
+    batch: Batch,
+    shared: &Shared,
+) -> Vec<Delivery> {
+    let dispatched = Instant::now();
+    let batch_size = batch.len();
+    let mut reqs = batch.requests;
+    let jobs: Vec<Vec<crate::Key>> = reqs
+        .iter_mut()
+        .map(|r| std::mem::take(&mut r.job.keys))
+        .collect();
+    let inputs: Option<Vec<Vec<crate::Key>>> = shared.verify.then(|| jobs.clone());
+    let results = engine.sort_batch(jobs);
+    debug_assert_eq!(results.len(), batch_size, "engine must answer every job");
+    let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
+    let metrics = &shared.metrics;
+    metrics.observe_ms("engine_batch", service_ms);
+    metrics.observe_ms(&format!("worker_{worker}_busy"), service_ms);
+    metrics.incr(&format!("worker_{worker}_batches"), 1);
+
+    reqs.into_iter()
+        .zip(results)
+        .enumerate()
+        .map(|(i, (req, result))| {
+            let queue_ms = dispatched
+                .saturating_duration_since(req.admitted_at)
+                .as_secs_f64()
+                * 1e3;
+            metrics.observe_ms("queue_delay", queue_ms);
+            let outcome = result.and_then(|keys| {
+                if let Some(inputs) = &inputs {
+                    engine::verify_outcome(&inputs[i], &keys)?;
+                }
+                metrics.incr("requests_completed", 1);
+                metrics.incr("keys_sorted", keys.len() as u64);
+                Ok(SortOutcome {
+                    id: req.id,
+                    keys,
+                    tag: req.job.tag,
+                    engine: engine.kind(),
+                    worker,
+                    batch_size,
+                    queue_ms,
+                    service_ms,
+                })
+            });
+            if outcome.is_err() {
+                metrics.incr("requests_failed", 1);
+            }
+            (req.respond_to, req.admitted_at, outcome)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::coordinator::request::{PendingRequest, SortJob};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct CountingEngine;
+    impl SortEngine for CountingEngine {
+        fn kind(&self) -> EngineKind {
+            EngineKind::Native
+        }
+        fn sort_batch(&mut self, jobs: Vec<Vec<crate::Key>>) -> Vec<Result<Vec<crate::Key>>> {
+            jobs.into_iter()
+                .map(|mut k| {
+                    k.sort_unstable();
+                    Ok(k)
+                })
+                .collect()
+        }
+    }
+
+    fn batch_of(keys: Vec<crate::Key>) -> (Batch, mpsc::Receiver<Result<SortOutcome>>) {
+        let (tx, rx) = mpsc::channel();
+        let n = keys.len();
+        let batch = Batch {
+            requests: vec![PendingRequest {
+                id: 1,
+                job: SortJob::new(keys),
+                admitted_at: Instant::now(),
+                respond_to: tx,
+            }],
+            total_keys: n,
+        };
+        (batch, rx)
+    }
+
+    fn test_cfg(workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pool_executes_and_drains() {
+        let metrics = Arc::new(Metrics::new());
+        let freed = Arc::new(AtomicUsize::new(0));
+        let freed_hook = freed.clone();
+        let scheduler = Scheduler::start(
+            &test_cfg(3),
+            Arc::new(|_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(CountingEngine) as Box<dyn SortEngine>)
+            }),
+            metrics.clone(),
+            Box::new(move || {
+                freed_hook.fetch_add(1, Ordering::SeqCst);
+            }),
+        )
+        .unwrap();
+        assert_eq!(scheduler.worker_count(), 3);
+        assert!(scheduler.has_spare_capacity());
+
+        let mut rxs = Vec::new();
+        for i in 0..10u32 {
+            let (batch, rx) = batch_of(vec![3 + i, 1, 2]);
+            scheduler.dispatch_blocking(batch).unwrap();
+            rxs.push((i, rx));
+        }
+        scheduler.shutdown();
+        for (i, rx) in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.keys, vec![1, 2, 3 + i]);
+            assert!(out.worker < 3);
+            assert_eq!(out.batch_size, 1);
+        }
+        // 10 batch completions + one retirement notification per worker.
+        assert_eq!(freed.load(Ordering::SeqCst), 13);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counters["requests_completed"], 10);
+        assert!(snap.counters["scheduler_queue_depth_peak"] >= 1);
+        assert_eq!(snap.timers["request_latency"].count, 10);
+        // Every participating worker recorded busy time.
+        let busy: u64 = (0..3)
+            .filter_map(|w| snap.timers.get(&format!("worker_{w}_busy")))
+            .map(|h| h.count)
+            .sum();
+        assert_eq!(busy, 10);
+    }
+
+    #[test]
+    fn try_dispatch_reports_full() {
+        // One worker that blocks forever until drain: capacity 2 fills.
+        struct Stuck(Arc<(Mutex<bool>, Condvar)>);
+        impl SortEngine for Stuck {
+            fn kind(&self) -> EngineKind {
+                EngineKind::Native
+            }
+            fn sort_batch(
+                &mut self,
+                jobs: Vec<Vec<crate::Key>>,
+            ) -> Vec<Result<Vec<crate::Key>>> {
+                let (lock, cv) = &*self.0;
+                let mut released = lock.lock().unwrap();
+                while !*released {
+                    released = cv.wait(released).unwrap();
+                }
+                jobs.into_iter().map(Ok).collect()
+            }
+        }
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let gate_engine = gate.clone();
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            &test_cfg(1),
+            Arc::new(move |_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(Stuck(gate_engine.clone())) as Box<dyn SortEngine>)
+            }),
+            metrics,
+            Box::new(|| {}),
+        )
+        .unwrap();
+
+        let mut rxs = Vec::new();
+        // First batch starts executing…
+        let (first, rx) = batch_of(vec![2, 1]);
+        scheduler.try_dispatch(first).unwrap();
+        rxs.push(rx);
+        while scheduler.shared.state.lock().unwrap().active_count == 0 {
+            std::thread::yield_now();
+        }
+        // …two more fill the bounded queue; the fourth is refused and
+        // handed back intact.
+        for _ in 0..2 {
+            let (batch, rx) = batch_of(vec![2, 1]);
+            scheduler.try_dispatch(batch).unwrap();
+            rxs.push(rx);
+        }
+        let (overflow, _overflow_rx) = batch_of(vec![2, 1]);
+        match scheduler.try_dispatch(overflow).unwrap_err() {
+            DispatchError::Full(batch) => assert_eq!(batch.len(), 1),
+            DispatchError::Dead(_) => panic!("pool is alive"),
+        }
+        assert!(!scheduler.has_spare_capacity());
+
+        // Release the engine; drain completes all accepted batches.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        scheduler.shutdown();
+        let done = rxs
+            .iter()
+            .filter(|rx| matches!(rx.try_recv(), Ok(Ok(_))))
+            .count();
+        assert_eq!(done, 3);
+    }
+
+    #[test]
+    fn panicked_workers_retire_and_dispatch_fails_dead() {
+        struct PanicEngine;
+        impl SortEngine for PanicEngine {
+            fn kind(&self) -> EngineKind {
+                EngineKind::Native
+            }
+            fn sort_batch(&mut self, _jobs: Vec<Vec<crate::Key>>) -> Vec<Result<Vec<crate::Key>>> {
+                panic!("engine crashed");
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            &test_cfg(1),
+            Arc::new(|_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(PanicEngine) as Box<dyn SortEngine>)
+            }),
+            metrics,
+            Box::new(|| {}),
+        )
+        .unwrap();
+        let (batch, rx) = batch_of(vec![2, 1]);
+        scheduler.try_dispatch(batch).unwrap();
+        // The caller sees a disconnect, not a hang.
+        assert!(rx.recv().is_err());
+        // The response channels drop mid-unwind, before the retire
+        // guard runs — wait for the bookkeeping to settle.
+        while scheduler.shared.state.lock().unwrap().live_workers > 0 {
+            std::thread::yield_now();
+        }
+        // The pool is now dead: both dispatch paths hand the batch back
+        // instead of stranding it (or the dispatcher).
+        let (batch, _rx2) = batch_of(vec![2, 1]);
+        let batch = match scheduler.try_dispatch(batch) {
+            Err(DispatchError::Dead(b)) => b,
+            other => panic!("expected dead pool, got {other:?}"),
+        };
+        assert!(scheduler.dispatch_blocking(batch).is_err());
+        scheduler.shutdown();
+    }
+
+    #[test]
+    fn construction_failure_is_synchronous_and_joins() {
+        let metrics = Arc::new(Metrics::new());
+        let err = Scheduler::start(
+            &test_cfg(4),
+            Arc::new(|_cfg: &ServiceConfig, w: usize| {
+                if w == 2 {
+                    Err(Error::Coordinator("worker 2 exploded".into()))
+                } else {
+                    Ok(Box::new(CountingEngine) as Box<dyn SortEngine>)
+                }
+            }),
+            metrics,
+            Box::new(|| {}),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("exploded"), "{err}");
+    }
+}

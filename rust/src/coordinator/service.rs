@@ -1,49 +1,76 @@
-//! The sort service: intake thread + dynamic batching + a dedicated
-//! engine thread, on std channels (the build is offline — no async
-//! runtime; a synchronous leader is also truer to the paper's
-//! single-device execution model).
+//! The sort service: intake thread + dynamic batching + a pool of
+//! engine workers, on std channels and condvars (the build is offline —
+//! no async runtime).
 //!
-//! Topology (one leader, one engine — the paper's system is a single
-//! GPU; scale-out is per-process):
+//! Topology (one intake, N workers — one worker per engine instance;
+//! the paper's system is a single GPU, so a worker is the software twin
+//! of one device):
 //!
 //! ```text
-//!  SortClient ──mpsc──▶ intake thread ──(Batch)──▶ engine thread
-//!      ▲                   │ Batcher                  │ SortEngine
-//!      └──── per-request oneshot ◀── outcomes ────────┘
+//!  SortClient ──mpsc──▶ intake thread ──(Batch)──▶ Scheduler queue
+//!      ▲                   │ Batcher                 │ condvar
+//!      │                   ◀─ SlotFreed ──┐   ┌──────┴──────┐
+//!      │                                  │   ▼             ▼
+//!      │                                  │ worker 0 …  worker N−1
+//!      └────── per-request oneshot ◀──────┴── outcomes ─────┘
 //! ```
 //!
 //! * The **intake thread** owns the [`Batcher`]: admits requests (or
 //!   rejects with backpressure) and fires a batch when a budget fills or
 //!   the oldest request's wait expires (`recv_timeout` against the
 //!   batcher's deadline).
-//! * The **engine thread** owns the (possibly non-`Sync`) engine — the
-//!   PJRT client in particular — and executes batches serially, like a
-//!   GPU stream. Python is never involved: the PJRT engine runs
-//!   AOT-compiled artifacts.
+//! * The **scheduler** ([`super::scheduler`]) fans batches out to N
+//!   worker threads, each owning its own (possibly non-`Sync`) engine.
+//!   Batches complete out of order across workers; every response is
+//!   still byte-identical to the single-worker service (see the
+//!   scheduler docs for the determinism argument).
 //! * Responses travel back through per-request channels, so callers
 //!   blocked on different requests never contend.
+//! * There is **no sleep-polling anywhere in the path**: a full
+//!   scheduler parks the intake on its message channel, and workers
+//!   wake it with a `SlotFreed` message when capacity frees.
 
 use super::batcher::Batcher;
 use super::engine::{self, SortEngine};
 use super::request::{Batch, PendingRequest, SortJob, SortOutcome};
+use super::scheduler::{DispatchError, Scheduler, WorkerEngineFactory};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::sim::DeviceRegistry;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 enum ClientMsg {
     Submit(PendingRequest),
+    /// A worker finished a batch: scheduler capacity freed, re-poll.
+    SlotFreed,
+    /// Every `SortClient` clone dropped: drain and stop.
+    ClientsGone,
     Shutdown(mpsc::Sender<()>),
+}
+
+/// Owns the intake sender; the last clone's drop tells the intake loop
+/// every client is gone (workers also hold senders for `SlotFreed`, so
+/// channel disconnection can no longer signal it).
+#[derive(Debug)]
+struct ClientCore {
+    tx: mpsc::Sender<ClientMsg>,
+}
+
+impl Drop for ClientCore {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ClientMsg::ClientsGone);
+    }
 }
 
 /// Handle to a running sort service. Cloneable; [`SortClient::shutdown`]
 /// (or dropping every clone) stops the service after draining.
 #[derive(Clone, Debug)]
 pub struct SortClient {
-    tx: mpsc::Sender<ClientMsg>,
+    core: Arc<ClientCore>,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
 }
@@ -66,7 +93,8 @@ impl SortClient {
             admitted_at: Instant::now(),
             respond_to: tx,
         };
-        self.tx
+        self.core
+            .tx
             .send(ClientMsg::Submit(req))
             .map_err(|_| Error::Coordinator("service stopped".into()))?;
         Ok(rx)
@@ -82,11 +110,13 @@ impl SortClient {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: drain queued work, stop both threads, return
-    /// the final metrics.
+    /// Graceful shutdown: drain queued work, stop the intake and every
+    /// worker, return the final metrics. Signalled end to end — the
+    /// intake acks only after the scheduler has joined its workers, so
+    /// the returned snapshot is complete (no polling quantization).
     pub fn shutdown(self) -> MetricsSnapshot {
         let (ack_tx, ack_rx) = mpsc::channel();
-        if self.tx.send(ClientMsg::Shutdown(ack_tx)).is_ok() {
+        if self.core.tx.send(ClientMsg::Shutdown(ack_tx)).is_ok() {
             let _ = ack_rx.recv();
         }
         self.metrics.snapshot()
@@ -97,16 +127,24 @@ impl SortClient {
 pub struct SortService;
 
 impl SortService {
-    /// Start a service with the engine selected by `cfg`.
+    /// Start a service with `cfg.workers` engines selected by `cfg`.
     ///
-    /// The engine is constructed **on the engine thread** — PJRT state
+    /// Engines are constructed **on their worker threads** — PJRT state
     /// is not `Send`, and a GPU context likewise belongs to the thread
-    /// that drives it. Construction failures are reported back here.
+    /// that drives it. Construction failures are reported back here. A
+    /// multi-worker sharded service checks each worker's devices out of
+    /// one shared [`DeviceRegistry`], so concurrent workers hold
+    /// disjoint slices of `cfg.devices`.
     pub fn start(cfg: ServiceConfig) -> Result<SortClient> {
-        Self::start_with_factory(cfg, engine::build_engine)
+        let registry = (cfg.engine == crate::config::EngineKind::Sharded && cfg.workers > 1)
+            .then(|| DeviceRegistry::new(cfg.devices.clone()));
+        Self::start_with_worker_factory(cfg, move |cfg: &ServiceConfig, worker: usize| {
+            engine::build_worker_engine(cfg, worker, registry.as_ref())
+        })
     }
 
     /// Start with an explicit engine (tests inject mocks/tiny devices).
+    /// Single-engine by construction, so it requires `cfg.workers == 1`.
     pub fn start_with_engine<E: SortEngine + Send + 'static>(
         cfg: ServiceConfig,
         engine: E,
@@ -114,49 +152,60 @@ impl SortService {
         Self::start_with_factory(cfg, move |_| Ok(Box::new(engine) as Box<dyn SortEngine>))
     }
 
-    /// Start with an engine factory that runs on the engine thread.
+    /// Start with a one-shot engine factory that runs on the worker
+    /// thread. Single-engine by construction (`FnOnce`), so it requires
+    /// `cfg.workers == 1`; use
+    /// [`SortService::start_with_worker_factory`] for a pool.
     pub fn start_with_factory(
         cfg: ServiceConfig,
         factory: impl FnOnce(&ServiceConfig) -> Result<Box<dyn SortEngine>> + Send + 'static,
     ) -> Result<SortClient> {
+        if cfg.workers != 1 {
+            return Err(Error::Config(format!(
+                "a single injected engine serves exactly 1 worker (workers = {})",
+                cfg.workers
+            )));
+        }
+        let factory = Mutex::new(Some(factory));
+        Self::start_with_worker_factory(cfg, move |cfg: &ServiceConfig, _worker: usize| {
+            let f = factory
+                .lock()
+                .unwrap()
+                .take()
+                .expect("single-worker factory called once");
+            f(cfg)
+        })
+    }
+
+    /// Start with a per-worker engine factory: called once per worker,
+    /// on that worker's thread, with the worker index.
+    pub fn start_with_worker_factory<F>(cfg: ServiceConfig, factory: F) -> Result<SortClient>
+    where
+        F: Fn(&ServiceConfig, usize) -> Result<Box<dyn SortEngine>> + Send + Sync + 'static,
+    {
         cfg.validate()?;
         let metrics = Arc::new(Metrics::new());
         let (client_tx, client_rx) = mpsc::channel::<ClientMsg>();
-        // Bounded: at most 2 batches in flight keeps queue-delay
-        // accounting honest (like a depth-2 GPU stream).
-        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(2);
 
-        let engine_metrics = metrics.clone();
-        let verify = cfg.verify;
-        let engine_cfg = cfg.clone();
-        let in_flight = Arc::new(AtomicU64::new(0));
-        let engine_in_flight = in_flight.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        std::thread::Builder::new()
-            .name("gbs-engine".into())
-            .spawn(move || match factory(&engine_cfg) {
-                Ok(engine) => {
-                    let _ = ready_tx.send(Ok(()));
-                    engine_loop(engine, batch_rx, engine_metrics, verify, engine_in_flight);
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                }
-            })
-            .map_err(|e| Error::Coordinator(format!("spawn engine thread: {e}")))?;
-        ready_rx
-            .recv()
-            .map_err(|_| Error::Coordinator("engine thread died during construction".into()))??;
+        let slot_tx = client_tx.clone();
+        let scheduler = Scheduler::start(
+            &cfg,
+            Arc::new(factory) as Arc<WorkerEngineFactory>,
+            metrics.clone(),
+            Box::new(move || {
+                let _ = slot_tx.send(ClientMsg::SlotFreed);
+            }),
+        )?;
 
         let intake_metrics = metrics.clone();
         let batcher = Batcher::new(cfg.batch);
         std::thread::Builder::new()
             .name("gbs-intake".into())
-            .spawn(move || intake_loop(client_rx, batch_tx, batcher, intake_metrics, in_flight))
+            .spawn(move || intake_loop(client_rx, scheduler, batcher, intake_metrics))
             .map_err(|e| Error::Coordinator(format!("spawn intake thread: {e}")))?;
 
         Ok(SortClient {
-            tx: client_tx,
+            core: Arc::new(ClientCore { tx: client_tx }),
             metrics,
             next_id: Arc::new(AtomicU64::new(1)),
         })
@@ -165,70 +214,68 @@ impl SortService {
 
 fn intake_loop(
     client_rx: Receiver<ClientMsg>,
-    batch_tx: SyncSender<Batch>,
+    scheduler: Scheduler,
     mut batcher: Batcher,
     metrics: Arc<Metrics>,
-    in_flight: Arc<AtomicU64>,
 ) {
     let mut shutdown_ack: Option<mpsc::Sender<()>> = None;
-    'main: loop {
-        // Fire ready batches, without blocking on a full engine channel:
-        // a blocked intake could not run admission control, and queued
+    loop {
+        // Fire ready batches, without blocking on a full scheduler: a
+        // blocked intake could not run admission control, and queued
         // requests would silently bypass backpressure.
         //
-        // §Perf: when the engine is idle there is nothing to gain from
-        // waiting out the batching window — company can only arrive
-        // while the engine is busy anyway — so drain immediately. This
-        // removes the full max_wait_ms from unloaded-path latency.
-        let mut engine_full = false;
+        // §Perf: while the pool has spare capacity there is nothing to
+        // gain from waiting out the batching window — company can only
+        // arrive while every worker is busy anyway — so drain
+        // immediately. This removes the full max_wait_ms from
+        // unloaded-path latency.
+        let mut scheduler_full = false;
+        let mut pool_dead = false;
         loop {
-            let engine_idle = in_flight.load(Ordering::SeqCst) == 0;
-            let batch = if engine_idle {
+            let batch = if scheduler.has_spare_capacity() {
                 batcher.drain()
             } else {
                 batcher.poll(Instant::now())
             };
             let Some(batch) = batch else { break };
-            in_flight.fetch_add(1, Ordering::SeqCst);
-            match batch_tx.try_send(batch) {
-                Ok(()) => {
-                    metrics.incr("batches_dispatched", 1);
-                }
-                Err(TrySendError::Full(batch)) => {
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
+            match scheduler.try_dispatch(batch) {
+                Ok(()) => metrics.incr("batches_dispatched", 1),
+                Err(DispatchError::Full(batch)) => {
                     batcher.restore_front(batch);
-                    engine_full = true;
+                    scheduler_full = true;
                     break;
                 }
-                Err(TrySendError::Disconnected(_)) => {
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
-                    fail_all(&mut batcher, "engine stopped");
-                    break 'main;
+                Err(DispatchError::Dead(batch)) => {
+                    fail_batch(batch, "engine workers stopped");
+                    pool_dead = true;
+                    break;
                 }
             }
         }
+        if pool_dead {
+            break;
+        }
 
-        let deadline = if engine_full {
-            // Engine busy: check back shortly (it has no way to signal
-            // a freed slot through the channel).
-            Some(Instant::now() + std::time::Duration::from_millis(1))
+        let msg = if scheduler_full {
+            // Every dispatch slot is taken, so the batcher deadline
+            // cannot matter: nothing changes until a worker frees a
+            // slot (SlotFreed) or a client speaks — both arrive here.
+            client_rx.recv().ok()
         } else {
-            batcher.next_deadline()
-        };
-        let msg = match deadline {
-            Some(deadline) => {
-                let now = Instant::now();
-                if deadline <= now && !engine_full {
-                    continue; // poll again immediately
+            match batcher.next_deadline() {
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if deadline <= now {
+                        continue; // a batch is ready right now: re-poll
+                    }
+                    match client_rx.recv_timeout(deadline - now) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => None,
+                    }
                 }
-                let wait = deadline.saturating_duration_since(now).max(std::time::Duration::from_micros(100));
-                match client_rx.recv_timeout(wait) {
-                    Ok(m) => Some(m),
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => None,
-                }
+                None => client_rx.recv().ok(),
             }
-            None => client_rx.recv().ok(),
         };
 
         match msg {
@@ -242,6 +289,7 @@ fn intake_loop(
                         keys: Vec::new(),
                         tag: req.job.tag,
                         engine: crate::config::EngineKind::Native,
+                        worker: 0,
                         batch_size: 0,
                         queue_ms: 0.0,
                         service_ms: 0.0,
@@ -256,91 +304,41 @@ fn intake_loop(
                     batcher.admit(req).expect("can_admit checked");
                 }
             }
+            Some(ClientMsg::SlotFreed) => continue,
             Some(ClientMsg::Shutdown(ack)) => {
                 shutdown_ack = Some(ack);
                 break;
             }
-            None => break, // all clients dropped
+            Some(ClientMsg::ClientsGone) | None => break,
         }
     }
-    // Drain whatever is still queued.
+    // Drain whatever is still queued — blocking dispatch is safe now
+    // (admission is closed) and guarantees every admitted request
+    // reaches a worker, unless the pool died (then the requests are
+    // failed rather than stranded).
     while let Some(batch) = batcher.drain() {
-        metrics.incr("batches_dispatched", 1);
-        metrics.incr("batched_requests", batch.len() as u64);
-        if batch_tx.send(batch).is_err() {
-            fail_all(&mut batcher, "engine stopped");
-            break;
+        let batch_len = batch.len() as u64;
+        match scheduler.dispatch_blocking(batch) {
+            Ok(()) => {
+                metrics.incr("batches_dispatched", 1);
+                metrics.incr("batched_requests", batch_len);
+            }
+            Err(batch) => fail_batch(batch, "engine workers stopped"),
         }
     }
-    // Closing batch_tx stops the engine thread once it finishes queued
-    // batches; outcomes are still delivered through per-request channels.
-    drop(batch_tx);
+    // Stops the workers once the queue is empty and joins them;
+    // outcomes are still delivered through per-request channels.
+    scheduler.shutdown();
     if let Some(ack) = shutdown_ack {
         let _ = ack.send(());
     }
 }
 
-fn fail_all(batcher: &mut Batcher, why: &str) {
-    while let Some(batch) = batcher.drain() {
-        for req in batch.requests {
-            let _ = req
-                .respond_to
-                .send(Err(Error::Coordinator(why.to_string())));
-        }
-    }
-}
-
-fn engine_loop(
-    mut engine: Box<dyn SortEngine>,
-    batch_rx: Receiver<Batch>,
-    metrics: Arc<Metrics>,
-    verify: bool,
-    in_flight: Arc<AtomicU64>,
-) {
-    while let Ok(batch) = batch_rx.recv() {
-        let dispatched = Instant::now();
-        let batch_size = batch.len();
-        let mut reqs = batch.requests;
-        let jobs: Vec<Vec<crate::Key>> = reqs
-            .iter_mut()
-            .map(|r| std::mem::take(&mut r.job.keys))
-            .collect();
-        let inputs: Option<Vec<Vec<crate::Key>>> = verify.then(|| jobs.clone());
-        let results = engine.sort_batch(jobs);
-        debug_assert_eq!(results.len(), batch_size, "engine must answer every job");
-        // Mark the engine free *before* delivering outcomes: a caller
-        // woken by its response often submits immediately, and must see
-        // an idle engine (else it eats a full batching wait — §Perf).
-        in_flight.fetch_sub(1, Ordering::SeqCst);
-        let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
-        metrics.observe_ms("engine_batch", service_ms);
-
-        for (i, (req, result)) in reqs.into_iter().zip(results).enumerate() {
-            let queue_ms = dispatched
-                .saturating_duration_since(req.admitted_at)
-                .as_secs_f64()
-                * 1e3;
-            metrics.observe_ms("queue_delay", queue_ms);
-            let outcome = result.and_then(|keys| {
-                if let Some(inputs) = &inputs {
-                    engine::verify_outcome(&inputs[i], &keys)?;
-                }
-                metrics.incr("requests_completed", 1);
-                metrics.incr("keys_sorted", keys.len() as u64);
-                Ok(SortOutcome {
-                    id: req.id,
-                    keys,
-                    tag: req.job.tag,
-                    engine: engine.kind(),
-                    batch_size,
-                    queue_ms,
-                    service_ms,
-                })
-            });
-            if outcome.is_err() {
-                metrics.incr("requests_failed", 1);
-            }
-            let _ = req.respond_to.send(outcome);
-        }
+/// Reject every request of a batch that can no longer be served.
+fn fail_batch(batch: Batch, why: &str) {
+    for req in batch.requests {
+        let _ = req
+            .respond_to
+            .send(Err(Error::Coordinator(why.to_string())));
     }
 }

@@ -26,10 +26,11 @@
 //! keys over a 4-device pool). It serves requests as the coordinator's
 //! `sharded` engine.
 //!
-//! The full request path (client → batcher → engine → sim ledger → cost
-//! model), the Execute vs. Analytic accounting modes, and the
-//! sharded-sort design are documented in `docs/ARCHITECTURE.md`; the
-//! repository README covers the layer map and quickstart commands.
+//! The full request path (client → batcher → multi-worker scheduler →
+//! engines → sim ledger → cost model), the Execute vs. Analytic
+//! accounting modes, and the sharded-sort design are documented in
+//! `docs/ARCHITECTURE.md`; the repository README covers the layer map
+//! and quickstart commands.
 //!
 //! ## Quick start
 //!

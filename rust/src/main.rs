@@ -75,7 +75,9 @@ COMMANDS
               (sharded: shard across a multi-GPU pool; --analytic prices
                paper-scale n, e.g. 768M over 4 devices, without data)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
-              [--engine native|sharded] [--config file.json]
+              [--engine native|sharded] [--workers 4] [--config file.json]
+              (--workers runs N engine instances concurrently; sharded
+               engines lease disjoint device subsets per worker)
   experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all>
               [--out results] [--fast true]
   specs       print the paper's Table 1
@@ -274,7 +276,7 @@ fn check(input: &[Key], output: &[Key], verify: bool) -> Result<(), String> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
-    let cfg = match flags.get("config") {
+    let mut cfg = match flags.get("config") {
         Some(path) => ServiceConfig::from_file(path).map_err(|e| e.to_string())?,
         None => {
             let mut cfg = ServiceConfig::default();
@@ -284,14 +286,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
             cfg
         }
     };
+    if let Some(w) = flags.get("workers") {
+        cfg.workers = w.parse().map_err(|e| format!("bad --workers: {e}"))?;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
     let requests: usize = flag(flags, "requests", "64").parse().map_err(|e| format!("{e}"))?;
     let concurrency: usize = flag(flags, "concurrency", "8").parse().map_err(|e| format!("{e}"))?;
     let n = parse_size(flag(flags, "n", "1M"))?;
     let dist = Distribution::parse(flag(flags, "dist", "uniform")).ok_or("unknown distribution")?;
 
     println!(
-        "service: engine={:?}, {requests} requests × {n} keys ({dist}), {concurrency} client threads",
-        cfg.engine
+        "service: engine={:?}, {} worker(s), {requests} requests × {n} keys ({dist}), {concurrency} client threads",
+        cfg.engine, cfg.workers
     );
     let client = SortService::start(cfg).map_err(|e| e.to_string())?;
     let t0 = Instant::now();

@@ -122,6 +122,14 @@ impl Metrics {
         *g.counters.entry(name.to_string()).or_insert(0) += delta;
     }
 
+    /// Raise counter `name` to `value` if it is below it (high-water
+    /// marks: peak queue depth, peak in-flight batches).
+    pub fn record_max(&self, name: &str, value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.counters.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(value);
+    }
+
     /// Record a duration under timer `name`.
     pub fn observe(&self, name: &str, duration: std::time::Duration) {
         let mut g = self.inner.lock().unwrap();
@@ -156,6 +164,15 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.counters["requests"], 3);
         assert_eq!(s.counters["errors"], 1);
+    }
+
+    #[test]
+    fn record_max_keeps_high_water_mark() {
+        let m = Metrics::new();
+        m.record_max("depth_peak", 3);
+        m.record_max("depth_peak", 7);
+        m.record_max("depth_peak", 5);
+        assert_eq!(m.snapshot().counters["depth_peak"], 7);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod spec;
 
 pub use cost::{CostModel, CostParams};
 pub use ledger::{KernelClass, KernelStats, Ledger, StepLedger};
-pub use pool::DevicePool;
+pub use pool::{DeviceLease, DevicePool, DeviceRegistry};
 pub use spec::{GpuModel, GpuSpec};
 
 use crate::error::{Error, Result};

@@ -18,6 +18,7 @@
 use super::spec::{GpuModel, GpuSpec};
 use super::GpuSim;
 use crate::error::{Error, Result};
+use std::sync::{Arc, Mutex};
 
 /// A fixed set of simulated devices, each with its own traffic ledger
 /// and memory-capacity tracking.
@@ -139,6 +140,111 @@ impl DevicePool {
     }
 }
 
+/// A checkout ledger over a fixed set of devices, shared between the
+/// scheduler's workers: each worker-held sharded engine *leases* a
+/// disjoint subset of the configured devices, so N concurrent engines
+/// can never oversubscribe a device the way N independent
+/// [`DevicePool`]s over the same model list would.
+///
+/// The registry hands out devices in configuration order and returns
+/// them when the [`DeviceLease`] drops, so worker restarts (or a failed
+/// engine construction) release their devices automatically. The handle
+/// is cheap to clone; clones share one checkout ledger.
+#[derive(Debug, Clone)]
+pub struct DeviceRegistry {
+    /// `Some(model)` = free, `None` = checked out.
+    slots: Arc<Mutex<Vec<Option<GpuModel>>>>,
+}
+
+impl DeviceRegistry {
+    /// New registry over a device list.
+    pub fn new(models: Vec<GpuModel>) -> Self {
+        DeviceRegistry {
+            slots: Arc::new(Mutex::new(models.into_iter().map(Some).collect())),
+        }
+    }
+
+    /// Total number of devices (free or leased).
+    pub fn total(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Number of devices currently free.
+    pub fn available(&self) -> usize {
+        self.slots.lock().unwrap().iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Lease `count` devices (the first free ones, configuration order).
+    /// Fails — rather than oversubscribing — when fewer are free.
+    pub fn checkout(&self, count: usize) -> Result<DeviceLease> {
+        if count == 0 {
+            return Err(Error::InvalidParams(
+                "a device lease needs at least one device".into(),
+            ));
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let free: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_some().then_some(i))
+            .take(count)
+            .collect();
+        if free.len() < count {
+            return Err(Error::InvalidParams(format!(
+                "device registry oversubscribed: {count} requested, {} free of {}",
+                free.len(),
+                slots.len()
+            )));
+        }
+        let models: Vec<GpuModel> = free
+            .iter()
+            .map(|&i| slots[i].take().expect("slot was free"))
+            .collect();
+        Ok(DeviceLease {
+            registry: self.clone(),
+            indices: free,
+            models,
+        })
+    }
+
+    /// The per-worker device share that partitions `total` devices over
+    /// `workers` workers: worker `i` gets `total/workers`, with the
+    /// remainder spread over the lowest-indexed workers. Zero when there
+    /// are more workers than devices — the caller must reject that.
+    pub fn share_for(worker: usize, workers: usize, total: usize) -> usize {
+        if workers == 0 {
+            return 0;
+        }
+        total / workers + usize::from(worker < total % workers)
+    }
+}
+
+/// An exclusive lease on a subset of a [`DeviceRegistry`]'s devices.
+/// Devices return to the registry on drop.
+#[derive(Debug)]
+pub struct DeviceLease {
+    registry: DeviceRegistry,
+    indices: Vec<usize>,
+    models: Vec<GpuModel>,
+}
+
+impl DeviceLease {
+    /// The leased device models.
+    pub fn models(&self) -> &[GpuModel] {
+        &self.models
+    }
+}
+
+impl Drop for DeviceLease {
+    fn drop(&mut self) {
+        let mut slots = self.registry.slots.lock().unwrap();
+        debug_assert!(self.indices.len() == self.models.len());
+        for (&i, &model) in self.indices.iter().zip(&self.models) {
+            slots[i] = Some(model);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +314,46 @@ mod tests {
         );
         assert_eq!(DevicePool::parse_list("gtx285,fermi"), None);
         assert_eq!(DevicePool::parse_list(""), None);
+    }
+
+    #[test]
+    fn registry_checkout_is_exclusive_and_returns_on_drop() {
+        let reg = DeviceRegistry::new(DevicePool::DEFAULT_DEVICES.to_vec());
+        assert_eq!(reg.total(), 4);
+        let a = reg.checkout(2).unwrap();
+        assert_eq!(
+            a.models(),
+            &[GpuModel::Gtx285_2G, GpuModel::TeslaC1060],
+            "leases follow configuration order"
+        );
+        let b = reg.checkout(2).unwrap();
+        assert_eq!(b.models(), &[GpuModel::Gtx285_1G, GpuModel::Gtx260]);
+        assert_eq!(reg.available(), 0);
+        // A fifth device does not exist: no oversubscription.
+        let err = reg.checkout(1).unwrap_err();
+        assert!(err.to_string().contains("oversubscribed"), "{err}");
+        drop(a);
+        assert_eq!(reg.available(), 2);
+        let c = reg.checkout(2).unwrap();
+        assert_eq!(c.models(), &[GpuModel::Gtx285_2G, GpuModel::TeslaC1060]);
+        // Zero-device leases are rejected.
+        assert!(reg.checkout(0).is_err());
+    }
+
+    #[test]
+    fn worker_shares_partition_exactly() {
+        for (workers, total) in [(1usize, 4usize), (2, 4), (3, 4), (4, 4), (2, 5), (3, 8)] {
+            let sum: usize = (0..workers)
+                .map(|w| DeviceRegistry::share_for(w, workers, total))
+                .sum();
+            assert_eq!(sum, total, "workers={workers} total={total}");
+            for w in 0..workers {
+                assert!(DeviceRegistry::share_for(w, workers, total) >= total / workers);
+            }
+        }
+        assert_eq!(DeviceRegistry::share_for(0, 0, 4), 0);
+        // More workers than devices: some worker's share is zero.
+        assert_eq!(DeviceRegistry::share_for(4, 5, 4), 0);
     }
 
     #[test]

@@ -117,3 +117,18 @@ fn serve_small_load() {
     assert!(ok, "{text}");
     assert!(text.contains("requests_completed: 8"), "{text}");
 }
+
+#[test]
+fn serve_multi_worker() {
+    let (ok, text) = gbs(&[
+        "serve", "--requests", "8", "--concurrency", "4", "--n", "50K", "--workers", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("2 worker(s)"), "{text}");
+    assert!(text.contains("requests_completed: 8"), "{text}");
+
+    // Invalid worker counts are rejected up front.
+    let (ok, text) = gbs(&["serve", "--workers", "0"]);
+    assert!(!ok);
+    assert!(text.contains("workers"), "{text}");
+}

@@ -109,11 +109,13 @@ fn batcher_restore_front_preserves_order() {
 
 #[test]
 fn service_returns_each_requests_own_keys() {
-    // Random mixes of sizes and distributions, submitted in a burst:
-    // every response is the sorted permutation of its own input, with
-    // matching tags.
+    // Random mixes of sizes and distributions, submitted in a burst
+    // against a 3-worker pool: every response is the sorted permutation
+    // of its own input, with matching tags, regardless of which worker
+    // ran it or in what order batches completed.
     let cfg = ServiceConfig {
         verify: false,
+        workers: 3,
         batch: BatchConfig {
             max_batch_keys: 1 << 18,
             max_batch_requests: 6,

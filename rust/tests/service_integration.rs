@@ -1,11 +1,12 @@
 //! Service integration: engine fallback behaviour, verify-mode fault
-//! detection, mixed success/failure batches, metrics consistency, and
-//! sustained concurrent load.
+//! detection, mixed success/failure batches, metrics consistency,
+//! sustained concurrent load, and multi-worker scheduling (byte-level
+//! determinism and counter balance under concurrency).
 
-use gpu_bucket_sort::algos::bucket_sort::BucketSortParams;
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
 use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
 use gpu_bucket_sort::coordinator::{SimSortEngine, SortEngine, SortJob, SortService};
-use gpu_bucket_sort::sim::{GpuModel, GpuSpec};
+use gpu_bucket_sort::sim::{GpuModel, GpuSim, GpuSpec};
 use gpu_bucket_sort::workload::Distribution;
 
 fn cfg() -> ServiceConfig {
@@ -131,6 +132,165 @@ fn zero_and_giant_requests() {
     assert!(gpu_bucket_sort::is_sorted_permutation(&giant, &out.keys));
     assert_eq!(out.batch_size, 1);
     client.shutdown();
+}
+
+/// The multi-worker determinism contract: N concurrent submitters,
+/// mixed job sizes and distributions, responses possibly completing out
+/// of order across 4 workers — yet every response is **byte-identical**
+/// to a direct single-device `BucketSort` of the same input, and the
+/// metrics balance exactly after the signalled shutdown.
+#[test]
+fn multi_worker_responses_byte_identical_to_bucket_sort() {
+    let config = ServiceConfig {
+        workers: 4,
+        // One single-threaded native engine per worker: concurrency
+        // comes from the scheduler, not from inside an engine.
+        native: gpu_bucket_sort::exec::NativeParams {
+            workers: 1,
+            ..Default::default()
+        },
+        ..cfg()
+    };
+    let client = SortService::start(config).unwrap();
+
+    let submitters = 6u64;
+    let per_submitter = 8usize;
+    std::thread::scope(|scope| {
+        for s in 0..submitters {
+            let client = client.clone();
+            scope.spawn(move || {
+                let sorter =
+                    BucketSort::try_new(BucketSortParams { tile: 256, s: 16 }).unwrap();
+                for r in 0..per_submitter {
+                    let dist = Distribution::ALL[(s as usize + r) % Distribution::ALL.len()];
+                    let n = 2_000 + 3_137 * ((s as usize + r) % 5);
+                    let keys = dist.generate(n, s * 100 + r as u64);
+
+                    // The reference: the paper's Algorithm 1, directly.
+                    let mut expected = keys.clone();
+                    let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+                    sorter.sort(&mut expected, &mut sim).unwrap();
+
+                    let out = client.sort(SortJob::new(keys)).unwrap();
+                    assert_eq!(
+                        out.keys, expected,
+                        "submitter {s} request {r} ({dist}, n={n}) diverged"
+                    );
+                    assert!(out.worker < 4);
+                }
+            });
+        }
+    });
+
+    let snap = client.shutdown();
+    let total = submitters * per_submitter as u64;
+    assert_eq!(snap.counters["requests_received"], total);
+    assert_eq!(snap.counters["requests_completed"], total);
+    assert!(!snap.counters.contains_key("requests_failed"));
+    assert!(!snap.counters.contains_key("requests_rejected"));
+    assert_eq!(
+        snap.counters["keys_received"], snap.counters["keys_sorted"],
+        "every received key was sorted exactly once"
+    );
+    assert_eq!(snap.timers["request_latency"].count, total);
+    // All four workers carry per-worker accounting; under this much
+    // load at least two of them actually ran batches.
+    let active_workers = (0..4)
+        .filter(|w| snap.counters.contains_key(&format!("worker_{w}_batches")))
+        .count();
+    assert!(active_workers >= 2, "only {active_workers} workers ran");
+    let batches: u64 = (0..4)
+        .filter_map(|w| snap.counters.get(&format!("worker_{w}_batches")))
+        .sum();
+    assert_eq!(batches, snap.counters["batches_dispatched"]);
+}
+
+/// Counter balance when jobs fail mid-batch: per-worker sim engines on
+/// a tiny device OOM the oversized jobs; after shutdown
+/// `received == completed + failed` and key accounting covers exactly
+/// the successes.
+#[test]
+fn multi_worker_counters_balance_with_failures() {
+    let mut config = cfg();
+    config.workers = 2;
+    config.sort = BucketSortParams { tile: 256, s: 16 };
+    let client =
+        SortService::start_with_worker_factory(config, |cfg: &ServiceConfig, _worker: usize| {
+            let tiny = GpuSpec {
+                name: "tiny-2MB".into(),
+                global_memory_bytes: 2 << 20,
+                ..GpuModel::Gtx260.spec()
+            };
+            Ok(Box::new(SimSortEngine::from_parts(tiny, cfg.sort)?) as Box<dyn SortEngine>)
+        })
+        .unwrap();
+
+    let mut rxs = Vec::new();
+    let mut expect_ok = 0u64;
+    let mut ok_keys = 0u64;
+    for i in 0..12u64 {
+        let oversized = i % 3 == 2;
+        let n = if oversized { 600_000 } else { 10_000 };
+        if !oversized {
+            expect_ok += 1;
+            ok_keys += n as u64;
+        }
+        let keys = Distribution::Uniform.generate(n, i);
+        rxs.push((oversized, client.submit(SortJob::new(keys)).unwrap()));
+    }
+    for (oversized, rx) in rxs {
+        match rx.recv().unwrap() {
+            Ok(out) => {
+                assert!(!oversized);
+                assert!(gpu_bucket_sort::is_sorted(&out.keys));
+            }
+            Err(e) => {
+                assert!(oversized, "small job failed: {e}");
+                assert!(e.is_oom(), "{e}");
+            }
+        }
+    }
+    let snap = client.shutdown();
+    assert_eq!(snap.counters["requests_received"], 12);
+    assert_eq!(snap.counters["requests_completed"], expect_ok);
+    assert_eq!(snap.counters["requests_failed"], 12 - expect_ok);
+    assert_eq!(snap.counters["keys_sorted"], ok_keys);
+}
+
+/// A sharded service with 2 workers: each worker leases a disjoint half
+/// of the 4-device pool and serves jobs independently.
+#[test]
+fn sharded_multi_worker_service() {
+    let config = ServiceConfig {
+        engine: EngineKind::Sharded,
+        workers: 2,
+        sort: BucketSortParams { tile: 256, s: 16 },
+        ..cfg()
+    };
+    let client = SortService::start(config).unwrap();
+    let mut rxs = Vec::new();
+    let mut inputs = Vec::new();
+    for i in 0..8u64 {
+        let keys = Distribution::Staggered.generate(30_000 + (i as usize) * 1_111, i);
+        rxs.push(client.submit(SortJob::new(keys.clone())).unwrap());
+        inputs.push(keys);
+    }
+    for (rx, input) in rxs.into_iter().zip(inputs) {
+        let out = rx.recv().unwrap().unwrap();
+        assert!(gpu_bucket_sort::is_sorted_permutation(&input, &out.keys));
+        assert_eq!(out.engine, EngineKind::Sharded);
+        assert!(out.worker < 2);
+    }
+    let snap = client.shutdown();
+    assert_eq!(snap.counters["requests_completed"], 8);
+
+    // Over-provisioned worker counts are rejected at validation time.
+    let bad = ServiceConfig {
+        engine: EngineKind::Sharded,
+        workers: 9,
+        ..ServiceConfig::default()
+    };
+    assert!(SortService::start(bad).is_err());
 }
 
 #[test]
