@@ -20,7 +20,7 @@
 //! requests) used by CI.
 
 use gpu_bucket_sort::config::{BatchConfig, ServiceConfig};
-use gpu_bucket_sort::coordinator::{PacedSimEngine, SortEngine, SortJob, SortService};
+use gpu_bucket_sort::coordinator::{PacedSimEngine, SortEngine, SortRequest, SortService};
 use gpu_bucket_sort::sim::GpuModel;
 use gpu_bucket_sort::util::Json;
 use gpu_bucket_sort::workload::Distribution;
@@ -120,8 +120,10 @@ fn run_one(profile: &Profile, dist: Distribution, workers: usize) -> RunResult {
             let client = client.clone();
             scope.spawn(move || {
                 for keys in submitter_inputs {
-                    let out = client.sort(SortJob::new(keys)).expect("request succeeds");
-                    assert!(gpu_bucket_sort::is_sorted(&out.keys));
+                    let out = client
+                        .sort(SortRequest::new(keys))
+                        .expect("request succeeds");
+                    assert!(gpu_bucket_sort::is_sorted(out.keys_u32()));
                 }
             });
         }

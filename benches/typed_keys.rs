@@ -1,0 +1,187 @@
+//! Typed-key throughput — the perf artifact behind the `SortKey`
+//! redesign.
+//!
+//! Measures the native engine (the production path) across the typed
+//! surface: `u32` vs `u64` vs `f32` keys, key-only vs key–value, on the
+//! uniform distribution, plus the simulated device's *estimated* time
+//! at each width (the ledger's key-width scaling made visible).
+//!
+//! Emits a machine-readable JSON report to `results/typed_keys.json`
+//! (validated by CI's `bench-smoke` job) and **fails** unless
+//! * the u32 key-only path stays within 1.5× of plain
+//!   `slice::sort_unstable` (the generic bit-comparison surface must
+//!   not tax the classic path), and
+//! * every typed variant actually sorted (self-checked).
+//!
+//! `GBS_BENCH_FAST=1` selects the smoke profile (smaller n) used by CI.
+
+mod common;
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::{BenchResult, Bencher};
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{is_sorted_permutation, SortKey};
+
+struct Row {
+    key_type: &'static str,
+    variant: &'static str,
+    n: usize,
+    median_ms: f64,
+    throughput_mkeys_s: f64,
+    sim_estimated_ms: f64,
+}
+
+fn bench_type<K: SortKey>(
+    key_type: &'static str,
+    n: usize,
+    bencher: &Bencher,
+    engine: &NativeEngine,
+    results: &mut Vec<BenchResult>,
+    rows: &mut Vec<Row>,
+) {
+    let keys: Vec<K> = Distribution::Uniform.generate_typed(n, 1);
+
+    // Simulated-device estimate at this key width (analytic, instant):
+    // the ledger accounting scales with SortKey::WIDTH_BYTES.
+    let sim_ms = |elem_bytes: usize| {
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        BucketSort::new(BucketSortParams::default())
+            .sort_analytic_bytes(n, elem_bytes, &mut sim)
+            .expect("fits the device");
+        sim.estimated_ms()
+    };
+
+    // Key-only.
+    let r = bencher.bench(format!("typed/{key_type}/key_only/n={n}"), || {
+        let mut k = keys.clone();
+        engine.sort(&mut k);
+        k
+    });
+    {
+        let mut k = keys.clone();
+        engine.sort(&mut k);
+        assert!(is_sorted_permutation(&keys, &k), "{key_type} key-only");
+    }
+    rows.push(Row {
+        key_type,
+        variant: "key_only",
+        n,
+        median_ms: r.median_ms(),
+        throughput_mkeys_s: n as f64 / r.median_ms() / 1e3,
+        sim_estimated_ms: sim_ms(K::WIDTH_BYTES),
+    });
+    results.push(r);
+
+    // Key–value (u64 payload permuted via the Record path).
+    let payload: Vec<u64> = (0..n as u64).collect();
+    let r = bencher.bench(format!("typed/{key_type}/key_value/n={n}"), || {
+        let mut k = keys.clone();
+        let mut p = payload.clone();
+        engine.sort_pairs(&mut k, &mut p).expect("pairs sort");
+        (k, p)
+    });
+    {
+        let mut k = keys.clone();
+        let mut p = payload.clone();
+        engine.sort_pairs(&mut k, &mut p).unwrap();
+        assert!(is_sorted_permutation(&keys, &k), "{key_type} key-value");
+        for (key, idx) in k.iter().zip(&p) {
+            assert!(
+                key.key_cmp(&keys[*idx as usize]).is_eq(),
+                "{key_type}: payload divorced from key"
+            );
+        }
+    }
+    rows.push(Row {
+        key_type,
+        variant: "key_value",
+        n,
+        median_ms: r.median_ms(),
+        throughput_mkeys_s: n as f64 / r.median_ms() / 1e3,
+        sim_estimated_ms: sim_ms(K::WIDTH_BYTES + 4),
+    });
+    results.push(r);
+}
+
+fn main() {
+    let fast = std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 1 << 18 } else { 1 << 22 };
+    let bencher = Bencher::from_env();
+    let engine = NativeEngine::new(NativeParams::default()).unwrap();
+    println!(
+        "typed_keys [{}]: n={n}, native engine with {} workers",
+        if fast { "smoke" } else { "full" },
+        engine.workers()
+    );
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Baseline: plain std sort of the classic u32 keys.
+    let base_keys: Vec<u32> = Distribution::Uniform.generate_typed(n, 1);
+    let std_r = bencher.bench(format!("typed/u32/std_sort/n={n}"), || {
+        let mut k = base_keys.clone();
+        k.sort_unstable();
+        k
+    });
+    let std_median = std_r.median_ms();
+    results.push(std_r);
+
+    bench_type::<u32>("u32", n, &bencher, &engine, &mut results, &mut rows);
+    bench_type::<u64>("u64", n, &bencher, &engine, &mut results, &mut rows);
+    bench_type::<f32>("f32", n, &bencher, &engine, &mut results, &mut rows);
+
+    for r in &rows {
+        println!(
+            "  {:<4} {:<9} {:>8.2} ms  {:>7.1} Mkeys/s  (sim est {:>8.2} ms)",
+            r.key_type, r.variant, r.median_ms, r.throughput_mkeys_s, r.sim_estimated_ms
+        );
+    }
+
+    // The gate: the typed surface must not tax the classic u32 path.
+    // The native engine beats std sort at full size on multicore hosts;
+    // allow 1.5× headroom so 2-core CI boxes and smoke sizes pass while
+    // a genuine generic-dispatch regression still fails.
+    let u32_key_only = rows
+        .iter()
+        .find(|r| r.key_type == "u32" && r.variant == "key_only")
+        .expect("u32 row exists");
+    let ratio = u32_key_only.median_ms / std_median;
+    println!("  u32 key-only vs std sort: {ratio:.2}×");
+
+    let row_json = |r: &Row| {
+        Json::obj(vec![
+            ("key_type", Json::str(r.key_type)),
+            ("variant", Json::str(r.variant)),
+            ("n", Json::num(r.n as f64)),
+            ("median_ms", Json::num(r.median_ms)),
+            ("throughput_mkeys_s", Json::num(r.throughput_mkeys_s)),
+            ("sim_estimated_ms", Json::num(r.sim_estimated_ms)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::str("typed_keys")),
+        ("schema_version", Json::num(1.0)),
+        ("mode", Json::str(if fast { "smoke" } else { "full" })),
+        ("engine", Json::str("native")),
+        ("n", Json::num(n as f64)),
+        ("std_sort_median_ms", Json::num(std_median)),
+        ("u32_vs_std_ratio", Json::num(ratio)),
+        ("results", Json::Arr(rows.iter().map(row_json).collect())),
+    ]);
+    let out_dir = std::path::Path::new("results");
+    std::fs::create_dir_all(out_dir).expect("create results/");
+    let path = out_dir.join("typed_keys.json");
+    std::fs::write(&path, report.to_string_pretty()).expect("write JSON report");
+    println!("→ {}", path.display());
+
+    common::emit_measurements("typed_keys", &results);
+
+    assert!(
+        ratio <= 1.5,
+        "typed u32 key-only path regressed to {ratio:.2}× of std sort"
+    );
+}

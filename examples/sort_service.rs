@@ -14,8 +14,9 @@
 //! ```
 
 use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
-use gpu_bucket_sort::coordinator::{SortJob, SortService};
+use gpu_bucket_sort::coordinator::{SortJob, SortRequest, SortService};
 use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::KeyType;
 use std::time::Instant;
 
 fn main() {
@@ -28,7 +29,45 @@ fn main() {
         ..ServiceConfig::default()
     };
     println!("=== native engine under mixed load ===");
-    run_load(cfg, 96, 8, &[16 << 10, 128 << 10, 1 << 20]);
+    run_load(cfg.clone(), 96, 8, &[16 << 10, 128 << 10, 1 << 20]);
+
+    // The typed surface: one request per key type, plus a key–value
+    // job whose payloads must come back married to their keys.
+    println!("\n=== typed requests (SortKey surface) ===");
+    let client = SortService::start(cfg).expect("service starts");
+    for kt in KeyType::ALL {
+        let keys = Distribution::Uniform.generate_data(kt, 64 << 10, 7);
+        let t = Instant::now();
+        let resp = client
+            .sort(SortRequest::builder(keys).self_check(true).build().unwrap())
+            .expect("typed request succeeds");
+        println!(
+            "  {kt}: {} keys sorted + self-checked in {:.1} ms",
+            resp.keys.len(),
+            t.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    let keys: Vec<u32> = Distribution::Zipf.generate(64 << 10, 9);
+    let payload: Vec<u64> = (0..keys.len() as u64).collect();
+    let resp = client
+        .sort(
+            SortRequest::builder(keys.clone())
+                .payload(payload)
+                .descending(true)
+                .self_check(true)
+                .build()
+                .unwrap(),
+        )
+        .expect("key–value request succeeds");
+    let sorted = resp.keys_u32();
+    for (k, p) in sorted.iter().zip(resp.payload.as_ref().unwrap()) {
+        assert_eq!(keys[*p as usize], *k, "payload stayed with its key");
+    }
+    println!(
+        "  u32 key–value, descending: {} records, payload pairing verified",
+        sorted.len()
+    );
+    client.shutdown();
 
     // PJRT replay (sizes capped by the compiled artifact ladder).
     let pjrt_cfg = ServiceConfig {

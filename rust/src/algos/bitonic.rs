@@ -26,7 +26,7 @@
 
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 
 /// log2 of a power of two.
 #[inline]
@@ -55,13 +55,13 @@ pub fn pass_count(n: usize) -> u64 {
     ln * (ln + 1) / 2
 }
 
-/// In-place bitonic sort of a power-of-two slice. Returns the number of
-/// compare-exchanges performed (always [`ce_count`]`(len)` — the network
-/// is oblivious).
+/// In-place bitonic sort of a power-of-two slice, ordering by
+/// [`SortKey::to_bits`]. Returns the number of compare-exchanges
+/// performed (always [`ce_count`]`(len)` — the network is oblivious).
 ///
 /// This is the host-side "real work" of the simulated Step 2; it mirrors
 /// exactly the compare-exchange sequence a 512-thread block would run.
-pub fn sort_slice(a: &mut [Key]) -> u64 {
+pub fn sort_slice<K: SortKey>(a: &mut [K]) -> u64 {
     let n = a.len();
     if n <= 1 {
         return 0;
@@ -83,11 +83,11 @@ pub fn sort_slice(a: &mut [Key]) -> u64 {
 /// One substage (fixed `k`, `j`): compare-exchange all pairs `(i, i^j)`
 /// with direction given by bit `k` of `i`. Branch-free on the GPU; here
 /// a blocked loop that visits each pair exactly once — pairs with span
-/// `j` sit in 2j-aligned blocks, lower half vs upper half — with
-/// branch-free min/max in the inner loop (§Perf: ~2.4× over the naive
-/// full-index scan with its data-dependent swap branch).
+/// `j` sit in 2j-aligned blocks, lower half vs upper half — with a
+/// select-style min/max on the key bits in the inner loop (§Perf: ~2.4×
+/// over the naive full-index scan with its data-dependent swap branch).
 #[inline]
-fn half_cleaner(a: &mut [Key], k: usize, j: usize) -> u64 {
+fn half_cleaner<K: SortKey>(a: &mut [K], k: usize, j: usize) -> u64 {
     let n = a.len();
     let mut ces = 0u64;
     let mut base = 0usize;
@@ -100,13 +100,13 @@ fn half_cleaner(a: &mut [Key], k: usize, j: usize) -> u64 {
         let (lo, hi) = a[base..base + 2 * j].split_at_mut(j);
         if ascending {
             for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                let (mn, mx) = ((*x).min(*y), (*x).max(*y));
+                let (mn, mx) = if x.key_le(y) { (*x, *y) } else { (*y, *x) };
                 *x = mn;
                 *y = mx;
             }
         } else {
             for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                let (mn, mx) = ((*x).min(*y), (*x).max(*y));
+                let (mn, mx) = if x.key_le(y) { (*x, *y) } else { (*y, *x) };
                 *x = mx;
                 *y = mn;
             }
@@ -119,7 +119,7 @@ fn half_cleaner(a: &mut [Key], k: usize, j: usize) -> u64 {
 
 /// Merge an already-bitonic sequence (ascending result). Used by the
 /// Thrust Merge baseline's odd-even stages. Returns compare-exchanges.
-pub fn bitonic_merge(a: &mut [Key]) -> u64 {
+pub fn bitonic_merge<K: SortKey>(a: &mut [K]) -> u64 {
     let n = a.len();
     if n <= 1 {
         return 0;
@@ -208,13 +208,21 @@ impl GlobalSortPlan {
     /// Record this plan's traffic scaled by `num/den` — the virtual-
     /// padding model: a bitonic network padded from `num` real keys up
     /// to the power-of-two `den` executes the full pass structure, but
-    /// predicated compare-exchanges against virtual MAX elements touch
+    /// predicated compare-exchanges against virtual `PAD` elements touch
     /// no memory and retire immediately, so traffic and useful compute
-    /// scale with the real fraction.
-    pub fn record_scaled(&self, ledger: &mut Ledger, step: u8, num: usize, den: usize) {
+    /// scale with the real fraction. `elem_bytes` is the device width
+    /// of one element (key, or key + payload index).
+    pub fn record_scaled(
+        &self,
+        ledger: &mut Ledger,
+        step: u8,
+        num: usize,
+        den: usize,
+        elem_bytes: usize,
+    ) {
         assert!(num <= den && den > 0);
         let mut scaled = Ledger::default();
-        self.record(&mut scaled, step);
+        self.record(&mut scaled, step, elem_bytes);
         for k in scaled.kernels() {
             let mut k = k.clone();
             k.coalesced_bytes = k.coalesced_bytes * num as u64 / den as u64;
@@ -228,7 +236,9 @@ impl GlobalSortPlan {
     }
 
     /// Record this plan's traffic into `ledger` tagged as Algorithm-1
-    /// step `step`.
+    /// step `step`, with `elem_bytes` bytes moved per element (the key
+    /// width from [`SortKey::WIDTH_BYTES`], plus the payload index for
+    /// record sorts).
     ///
     /// Per launch:
     /// * global pass — coalesced read+write of the whole array, n/2
@@ -237,8 +247,8 @@ impl GlobalSortPlan {
     ///   array once (tiles stream through shared memory), 4 shared-memory
     ///   accesses per compare-exchange (2 loads + 2 stores), and the
     ///   compare ops.
-    pub fn record(&self, ledger: &mut Ledger, step: u8) {
-        let bytes = (self.n * KEY_BYTES) as u64;
+    pub fn record(&self, ledger: &mut Ledger, step: u8, elem_bytes: usize) {
+        let bytes = (self.n * elem_bytes) as u64;
         let blocks = (self.n / self.tile).max(1) as u64;
         let threads = MAX_BLOCK_THREADS.min(self.tile as u32 / 2).max(1);
 
@@ -288,8 +298,9 @@ impl GlobalSortPlan {
 /// Sort `a` (power-of-two length) with the hybrid global bitonic network,
 /// recording its traffic into `ledger` tagged as step `step`. The data
 /// work is performed for real; the recorded ledger is identical to
-/// [`global_sort_analytic`] with the same `(n, tile)`.
-pub fn global_sort(a: &mut [Key], tile: usize, ledger: &mut Ledger, step: u8) -> u64 {
+/// [`global_sort_analytic_bytes`] with the same `(n, tile)` and the
+/// key type's width.
+pub fn global_sort<K: SortKey>(a: &mut [K], tile: usize, ledger: &mut Ledger, step: u8) -> u64 {
     let plan = GlobalSortPlan::new(a.len().max(1), tile);
     let ces = sort_slice(a);
     debug_assert_eq!(
@@ -298,30 +309,55 @@ pub fn global_sort(a: &mut [Key], tile: usize, ledger: &mut Ledger, step: u8) ->
         "executed CE count diverged from the analytic plan"
     );
     if !a.is_empty() {
-        plan.record(ledger, step);
+        plan.record(ledger, step, K::WIDTH_BYTES);
     }
     ces
 }
 
-/// Ledger-only twin of [`global_sort`] for paper-scale configurations.
+/// Ledger-only twin of [`global_sort`] at the classic `u32` width.
 pub fn global_sort_analytic(n: usize, tile: usize, ledger: &mut Ledger, step: u8) {
+    global_sort_analytic_bytes(n, tile, KEY_BYTES, ledger, step);
+}
+
+/// Ledger-only twin of [`global_sort`] for paper-scale configurations,
+/// at an explicit per-element width.
+pub fn global_sort_analytic_bytes(
+    n: usize,
+    tile: usize,
+    elem_bytes: usize,
+    ledger: &mut Ledger,
+    step: u8,
+) {
     if n == 0 {
         return;
     }
-    GlobalSortPlan::new(n, tile).record(ledger, step);
+    GlobalSortPlan::new(n, tile).record(ledger, step, elem_bytes);
 }
 
 /// Record the cost of bitonic-sorting `n_effective` real keys under
-/// virtual padding to the next power of two (see
-/// [`GlobalSortPlan::record_scaled`]). This is how Step 9 prices each
-/// sublist B_j: the network shape comes from the padded size, the
-/// traffic from the real keys.
+/// virtual padding to the next power of two, at the classic `u32`
+/// width.
 pub fn global_sort_virtual(n_effective: usize, tile: usize, ledger: &mut Ledger, step: u8) {
+    global_sort_virtual_bytes(n_effective, tile, KEY_BYTES, ledger, step);
+}
+
+/// Record the cost of bitonic-sorting `n_effective` real elements of
+/// `elem_bytes` each under virtual padding to the next power of two
+/// (see [`GlobalSortPlan::record_scaled`]). This is how Step 9 prices
+/// each sublist B_j: the network shape comes from the padded size, the
+/// traffic from the real elements.
+pub fn global_sort_virtual_bytes(
+    n_effective: usize,
+    tile: usize,
+    elem_bytes: usize,
+    ledger: &mut Ledger,
+    step: u8,
+) {
     if n_effective == 0 {
         return;
     }
     let padded = next_pow2(n_effective);
-    GlobalSortPlan::new(padded, tile).record_scaled(ledger, step, n_effective, padded);
+    GlobalSortPlan::new(padded, tile).record_scaled(ledger, step, n_effective, padded, elem_bytes);
 }
 
 /// Round up to the next power of two (min 1).
@@ -332,7 +368,7 @@ pub fn next_pow2(n: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::is_sorted;
+    use crate::{is_sorted, Key};
 
     #[test]
     fn ce_count_closed_form() {

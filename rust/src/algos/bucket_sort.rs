@@ -17,18 +17,25 @@
 //!   (up to 512M keys) configurations of Figures 3–7.
 //!
 //! Buckets are sorted at their *guaranteed capacity* (next power of two
-//! of 2n/s, padded with the `u32::MAX` sentinel) rather than their
-//! data-dependent actual size — this is precisely what makes the
-//! deterministic variant's runtime input-independent (§5: "<1 ms
-//! observed variance"), and is also the shape the fixed-shape XLA/PJRT
-//! pipeline compiles AOT.
+//! of 2n/s, padded with the key type's [`crate::SortKey::PAD`]
+//! sentinel) rather than their data-dependent actual size — this is
+//! precisely what makes the deterministic variant's runtime
+//! input-independent (§5: "<1 ms observed variance"), and is also the
+//! shape the fixed-shape XLA/PJRT pipeline compiles AOT.
+//!
+//! Both entry points are generic over [`crate::SortKey`] (`u32`, `u64`,
+//! `i32`, `i64`, `f32` under IEEE-754 total order), and
+//! [`BucketSort::sort_pairs`] runs the same pipeline over
+//! [`crate::Record`]s for key–value jobs. The `u32` path is
+//! byte-identical to the historical `Key = u32` implementation.
 
 use super::{bitonic, indexing, local_sort, prefix, relocation, sampling};
 use crate::error::Result;
+use crate::key::{tag_records, untag_records, Record};
 use crate::sim::ledger::Ledger;
 use crate::sim::spec::GpuSpec;
 use crate::sim::{CostModel, GpuSim};
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 use std::collections::BTreeMap;
 
 /// Tunable parameters of Algorithm 1.
@@ -141,15 +148,19 @@ impl BucketSort {
     }
 
     /// Sort `keys` in place on the simulated device, recording traffic
-    /// and enforcing the device's memory capacity.
-    pub fn sort(&self, keys: &mut [Key], sim: &mut GpuSim) -> Result<BucketSortReport> {
+    /// and enforcing the device's memory capacity. Generic over
+    /// [`SortKey`]: the comparison network orders by key bits, padding
+    /// uses the type's own sentinel, and the ledger's traffic/memory
+    /// accounting scales with [`SortKey::WIDTH_BYTES`].
+    pub fn sort<K: SortKey>(&self, keys: &mut [K], sim: &mut GpuSim) -> Result<BucketSortReport> {
         let n = keys.len();
         let (tile, s) = (self.params.tile, self.params.s);
         if n == 0 {
             return Ok(self.empty_report());
         }
+        let elem_bytes = K::WIDTH_BYTES;
 
-        // Step 1: split into m tile-sized sublists (pad with MAX).
+        // Step 1: split into m tile-sized sublists (pad with PAD).
         //
         // Device memory: exactly two n-key buffers (input + relocation
         // target), allocated up front. The paper's ceilings (256M keys
@@ -160,17 +171,18 @@ impl BucketSort {
         // assertion below checks that overlay always fits.
         let padded_n = n.div_ceil(tile) * tile;
         let m = padded_n / tile;
-        let input_alloc = sim.alloc(padded_n * KEY_BYTES)?;
-        let out_alloc = sim.alloc(padded_n * KEY_BYTES)?;
+        let input_alloc = sim.alloc(padded_n * elem_bytes)?;
+        let out_alloc = sim.alloc(padded_n * elem_bytes)?;
         let cap = self.params.bucket_capacity(padded_n);
         // At paper scale the aux overlay vanishes inside a dead buffer;
         // for toy inputs (n within a few tiles) it can exceed one, and
         // the excess is charged as a real allocation.
-        let aux_alloc =
-            sim.alloc(aux_overlay_bytes(m, s, cap).saturating_sub(padded_n * KEY_BYTES))?;
-        let mut work: Vec<Key> = Vec::with_capacity(padded_n);
+        let aux_alloc = sim.alloc(
+            aux_overlay_bytes(m, s, cap, elem_bytes).saturating_sub(padded_n * elem_bytes),
+        )?;
+        let mut work: Vec<K> = Vec::with_capacity(padded_n);
         work.extend_from_slice(keys);
-        work.resize(padded_n, Key::MAX);
+        work.resize(padded_n, K::PAD);
 
         let mut ledger = Ledger::default();
 
@@ -184,7 +196,7 @@ impl BucketSort {
         // Step 4: sort all s·m samples globally (bitonic, padded to a
         // power of two).
         let padded_samples = bitonic::next_pow2(samples.len());
-        samples.resize(padded_samples, Key::MAX);
+        samples.resize(padded_samples, K::PAD);
         bitonic::global_sort(&mut samples, tile, &mut ledger, 4);
 
         // Step 5: s equidistant global samples → s−1 splitters.
@@ -202,7 +214,7 @@ impl BucketSort {
         let layout = prefix::column_prefix(&counts, m, s, &mut ledger);
 
         // Step 8: relocate all buckets (coalesced read + write).
-        let mut relocated = vec![0 as Key; padded_n];
+        let mut relocated = vec![K::PAD; padded_n];
         relocation::relocate(&work, tile, &bounds, &layout, &mut relocated, &mut ledger);
 
         // Step 9: sort every sublist B_j with the same bitonic engine
@@ -210,7 +222,7 @@ impl BucketSort {
         //
         // Cost model: each sort is priced at the *balanced* sublist
         // size padded_n/s under virtual padding (predicated
-        // compare-exchanges against virtual MAX keys touch no memory) —
+        // compare-exchanges against virtual PAD keys touch no memory) —
         // the uniform-data cost, which the deterministic bound keeps
         // within 2× for any input. This keeps the ledger
         // input-independent, the paper's determinism claim. Physically
@@ -218,7 +230,7 @@ impl BucketSort {
         // for tie-degenerate inputs) stays correct.
         let max_bucket = layout.max_bucket();
         let balanced = padded_n / s;
-        let mut scratch: Vec<Key> = vec![Key::MAX; cap];
+        let mut scratch: Vec<K> = vec![K::PAD; cap];
         for j in 0..s {
             let st = layout.bucket_start[j] as usize;
             let len = layout.bucket_size[j] as usize;
@@ -226,13 +238,13 @@ impl BucketSort {
             // network just grows to the next power of two.
             let bcap = cap.max(bitonic::next_pow2(len));
             if bcap > cap {
-                scratch.resize(bcap, Key::MAX);
+                scratch.resize(bcap, K::PAD);
             }
             scratch[..len].copy_from_slice(&relocated[st..st + len]);
-            scratch[len..bcap].fill(Key::MAX);
+            scratch[len..bcap].fill(K::PAD);
             let ces = bitonic::sort_slice(&mut scratch[..bcap]);
             debug_assert_eq!(ces, bitonic::ce_count(bcap));
-            bitonic::global_sort_virtual(balanced, tile, &mut ledger, 9);
+            bitonic::global_sort_virtual_bytes(balanced, tile, elem_bytes, &mut ledger, 9);
             relocated[st..st + len].copy_from_slice(&scratch[..len]);
             scratch.truncate(cap);
         }
@@ -256,11 +268,44 @@ impl BucketSort {
         })
     }
 
+    /// Sort a key–value job: `keys` in place, `payload` permuted so
+    /// `payload[i]` still belongs to `keys[i]` afterwards. Runs the
+    /// full Algorithm 1 over [`Record`]s — Steps 6–8 carry the payload
+    /// index alongside the key, ties break by original position (so the
+    /// result is stable and byte-deterministic), and the ledger prices
+    /// the widened `key + 4 B` elements.
+    pub fn sort_pairs<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        payload: &mut Vec<u64>,
+        sim: &mut GpuSim,
+    ) -> Result<BucketSortReport> {
+        crate::key::validate_key_value(keys.len(), payload.len())?;
+        let mut recs: Vec<Record<K>> = tag_records(keys)?;
+        let report = self.sort(&mut recs, sim)?;
+        untag_records(&recs, keys, payload);
+        Ok(report)
+    }
+
     /// Produce the ledger and memory profile of sorting `n` keys without
-    /// touching data — identical launches to [`BucketSort::sort`] under
-    /// the balanced-bucket assumption (every B_j at its guaranteed
-    /// capacity, which is exactly how the executing path sorts them).
+    /// touching data — identical launches to [`BucketSort::sort`] at the
+    /// classic `u32` width.
     pub fn sort_analytic(&self, n: usize, sim: &mut GpuSim) -> Result<BucketSortReport> {
+        self.sort_analytic_bytes(n, KEY_BYTES, sim)
+    }
+
+    /// Ledger-only twin of [`BucketSort::sort`] at an explicit
+    /// per-element width (`<K as SortKey>::WIDTH_BYTES`, plus 4 for the
+    /// payload index of a key–value job) — identical launches to the
+    /// executing path under the balanced-bucket assumption (every B_j
+    /// at its guaranteed capacity, which is exactly how the executing
+    /// path sorts them).
+    pub fn sort_analytic_bytes(
+        &self,
+        n: usize,
+        elem_bytes: usize,
+        sim: &mut GpuSim,
+    ) -> Result<BucketSortReport> {
         let (tile, s) = (self.params.tile, self.params.s);
         if n == 0 {
             return Ok(self.empty_report());
@@ -270,26 +315,27 @@ impl BucketSort {
         let mut ledger = Ledger::default();
 
         // Same two-buffer memory model as `sort` (aux overlaid).
-        let input_alloc = sim.alloc(padded_n * KEY_BYTES)?;
-        let out_alloc = sim.alloc(padded_n * KEY_BYTES)?;
+        let input_alloc = sim.alloc(padded_n * elem_bytes)?;
+        let out_alloc = sim.alloc(padded_n * elem_bytes)?;
         let cap = self.params.bucket_capacity(padded_n);
-        let aux_alloc =
-            sim.alloc(aux_overlay_bytes(m, s, cap).saturating_sub(padded_n * KEY_BYTES))?;
+        let aux_alloc = sim.alloc(
+            aux_overlay_bytes(m, s, cap, elem_bytes).saturating_sub(padded_n * elem_bytes),
+        )?;
 
-        local_sort::analytic(padded_n, tile, &mut ledger);
+        local_sort::analytic_bytes(padded_n, tile, elem_bytes, &mut ledger);
 
         let padded_samples = bitonic::next_pow2(m * s);
-        sampling::analytic_local(padded_n, tile, s, &mut ledger);
-        bitonic::global_sort_analytic(padded_samples, tile, &mut ledger, 4);
-        sampling::analytic_splitters(padded_samples, s, &mut ledger);
+        sampling::analytic_local_bytes(padded_n, tile, s, elem_bytes, &mut ledger);
+        bitonic::global_sort_analytic_bytes(padded_samples, tile, elem_bytes, &mut ledger, 4);
+        sampling::analytic_splitters_bytes(padded_samples, s, elem_bytes, &mut ledger);
 
-        indexing::analytic(padded_n, tile, s, &mut ledger);
+        indexing::analytic_bytes(padded_n, tile, s, elem_bytes, &mut ledger);
         prefix::analytic(m, s, &mut ledger);
-        relocation::analytic(padded_n, tile, s, &mut ledger);
+        relocation::analytic_bytes(padded_n, tile, s, elem_bytes, &mut ledger);
 
         let balanced = padded_n / s;
         for _ in 0..s {
-            bitonic::global_sort_virtual(balanced, tile, &mut ledger, 9);
+            bitonic::global_sort_virtual_bytes(balanced, tile, elem_bytes, &mut ledger, 9);
         }
 
         let peak = sim.peak_bytes();
@@ -323,17 +369,18 @@ impl BucketSort {
 }
 
 /// Bytes of auxiliary state that must fit inside a dead n-key buffer:
-/// the padded sample array, the boundary and location matrices, and the
-/// Step-9 scratch bucket.
-fn aux_overlay_bytes(m: usize, s: usize, cap: usize) -> usize {
-    (bitonic::next_pow2(m * s) + 2 * m * s + cap) * KEY_BYTES
+/// the padded sample array and Step-9 scratch bucket (key-width
+/// elements) plus the boundary and location matrices (u32 counts
+/// regardless of key type).
+fn aux_overlay_bytes(m: usize, s: usize, cap: usize, elem_bytes: usize) -> usize {
+    (bitonic::next_pow2(m * s) + cap) * elem_bytes + 2 * m * s * KEY_BYTES
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::GpuModel;
-    use crate::is_sorted_permutation;
+    use crate::{is_sorted_permutation, Key};
 
     fn scrambled(n: usize) -> Vec<Key> {
         (0..n as u32).map(|x| x.wrapping_mul(2654435761) ^ 0x9E37) .collect()
@@ -491,6 +538,100 @@ mod tests {
         assert!(heavy / total > 0.6, "Steps 2+9 = {:.1}%", 100.0 * heavy / total);
         assert!(overhead / total < 0.25, "Steps 3–7 = {:.1}%", 100.0 * overhead / total);
         assert!(steps[&8] / total < 0.1, "Step 8 = {:.1}%", 100.0 * steps[&8] / total);
+    }
+
+    #[test]
+    fn sorts_typed_keys() {
+        let sorter = BucketSort::new(small_params());
+        // u64 beyond the 32-bit range.
+        let input: Vec<u64> = (0..5000u64)
+            .map(|x| x.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        let mut keys = input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort(&mut keys, &mut sim).unwrap();
+        assert!(is_sorted_permutation(&input, &keys));
+
+        // i64 with negatives.
+        let input: Vec<i64> = (0..5000i64).map(|x| (x * 2654435761) * if x % 2 == 0 { -1 } else { 1 }).collect();
+        let mut keys = input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort(&mut keys, &mut sim).unwrap();
+        assert!(is_sorted_permutation(&input, &keys));
+
+        // f32 with NaNs, infinities and signed zeros: total order.
+        let mut input: Vec<f32> = (0..5000u32)
+            .map(|x| (x.wrapping_mul(2654435761) as f32) - (u32::MAX / 2) as f32)
+            .collect();
+        input[7] = f32::NAN;
+        input[19] = f32::NEG_INFINITY;
+        input[23] = -0.0;
+        input[29] = 0.0;
+        let mut keys = input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort(&mut keys, &mut sim).unwrap();
+        assert!(is_sorted_permutation(&input, &keys));
+    }
+
+    #[test]
+    fn wider_keys_widen_the_ledger_and_memory() {
+        // The accounting flows from SortKey::WIDTH_BYTES: a u64 sort of
+        // the same n moves twice the coalesced bytes and peaks at twice
+        // the device memory of the u32 sort.
+        let sorter = BucketSort::new(small_params());
+        let n = 4096;
+        let mut sim32 = GpuSim::new(GpuModel::TeslaC1060.spec());
+        let mut k32: Vec<u32> = (0..n as u32).rev().collect();
+        let r32 = sorter.sort(&mut k32, &mut sim32).unwrap();
+        let mut sim64 = GpuSim::new(GpuModel::TeslaC1060.spec());
+        let mut k64: Vec<u64> = (0..n as u64).rev().collect();
+        let r64 = sorter.sort(&mut k64, &mut sim64).unwrap();
+        // Key traffic doubles; Step 7's count-matrix passes are
+        // width-independent, so the total ratio sits just under 2.
+        let ratio = r64.ledger.total().coalesced_bytes as f64
+            / r32.ledger.total().coalesced_bytes as f64;
+        assert!((1.8..=2.0).contains(&ratio), "ratio {ratio}");
+        assert_eq!(r64.peak_device_bytes, 2 * r32.peak_device_bytes);
+        // And the analytic twin agrees at the widened width.
+        let mut sim_a = GpuSim::new(GpuModel::TeslaC1060.spec());
+        let ana = sorter.sort_analytic_bytes(n, 8, &mut sim_a).unwrap();
+        assert_eq!(ana.ledger, r64.ledger);
+        assert_eq!(ana.peak_device_bytes, r64.peak_device_bytes);
+    }
+
+    #[test]
+    fn sort_pairs_keeps_payloads_with_keys() {
+        let sorter = BucketSort::new(small_params());
+        let keys_in: Vec<u32> = (0..4000u32).map(|x| x.wrapping_mul(2654435761) % 512).collect();
+        // Payload encodes (original position, key) so both pairing and
+        // stability are checkable after the sort.
+        let payload_in: Vec<u64> = keys_in
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| ((i as u64) << 32) | k as u64)
+            .collect();
+        let mut keys = keys_in.clone();
+        let mut payload = payload_in.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let report = sorter.sort_pairs(&mut keys, &mut payload, &mut sim).unwrap();
+        assert!(is_sorted_permutation(&keys_in, &keys));
+        for (k, p) in keys.iter().zip(&payload) {
+            assert_eq!(*p & 0xFFFF_FFFF, *k as u64, "payload divorced from key");
+        }
+        // Stability: equal keys keep their original (position) order.
+        for (w, pw) in keys.windows(2).zip(payload.windows(2)) {
+            if w[0] == w[1] {
+                assert!(pw[0] >> 32 < pw[1] >> 32, "unstable at key {}", w[0]);
+            }
+        }
+        // Records are key+index wide on the device.
+        let mut sim_a = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let ana = sorter.sort_analytic_bytes(keys.len(), 8, &mut sim_a).unwrap();
+        assert_eq!(ana.ledger, report.ledger);
+        // Length mismatch is rejected.
+        let mut short = vec![1u64];
+        let mut sim_b = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        assert!(sorter.sort_pairs(&mut keys, &mut short, &mut sim_b).is_err());
     }
 
     #[test]

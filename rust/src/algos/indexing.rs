@@ -18,21 +18,21 @@
 
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 
 /// Branch-free lower bound: number of elements of sorted `t` strictly
-/// less than `key`, in exactly `log2(len)+1` probe steps for
-/// power-of-two `len` — the fixed trip count a SIMT warp would execute.
-/// Returns `(position, probes)`.
+/// less than `key` (under the [`SortKey`] total order), in exactly
+/// `log2(len)+1` probe steps for power-of-two `len` — the fixed trip
+/// count a SIMT warp would execute. Returns `(position, probes)`.
 #[inline]
-pub fn fixed_lower_bound(t: &[Key], key: Key) -> (usize, u64) {
+pub fn fixed_lower_bound<K: SortKey>(t: &[K], key: K) -> (usize, u64) {
     let mut base = 0usize;
     let mut size = t.len();
     let mut probes = 0u64;
     while size > 1 {
         let half = size / 2;
         // Branch-free select on the GPU (predicated); a plain compare here.
-        if t[base + half - 1] < key {
+        if t[base + half - 1].key_lt(&key) {
             base += half;
         }
         size -= half;
@@ -40,7 +40,7 @@ pub fn fixed_lower_bound(t: &[Key], key: Key) -> (usize, u64) {
     }
     if !t.is_empty() {
         probes += 1;
-        if t[base] < key {
+        if t[base].key_lt(&key) {
             base += 1;
         }
     }
@@ -51,10 +51,10 @@ pub fn fixed_lower_bound(t: &[Key], key: Key) -> (usize, u64) {
 /// and each tile sorted; `splitters` has length s−1 (sorted). Output is
 /// row-major m×s: `out[i·s + j] = |{x ∈ A_i : x < splitter_j}|` for
 /// j < s−1 and `out[i·s + s−1] = tile`.
-pub fn boundaries(
-    keys: &[Key],
+pub fn boundaries<K: SortKey>(
+    keys: &[K],
     tile: usize,
-    splitters: &[Key],
+    splitters: &[K],
     ledger: &mut Ledger,
 ) -> Vec<u32> {
     assert!(tile.is_power_of_two());
@@ -64,7 +64,7 @@ pub fn boundaries(
     let mut out = vec![0u32; m * s];
     let mut probes = 0u64;
     for (i, t) in keys.chunks_exact(tile).enumerate() {
-        debug_assert!(t.windows(2).all(|w| w[0] <= w[1]), "tile {i} not sorted");
+        debug_assert!(t.windows(2).all(|w| w[0].key_le(&w[1])), "tile {i} not sorted");
         for (j, &sp) in splitters.iter().enumerate() {
             let (pos, p) = fixed_lower_bound(t, sp);
             out[i * s + j] = pos as u32;
@@ -73,15 +73,21 @@ pub fn boundaries(
         out[i * s + (s - 1)] = tile as u32;
     }
     if m > 0 {
-        record(m, tile, s, probes, ledger);
+        record(m, tile, s, probes, K::WIDTH_BYTES, ledger);
     }
     out
 }
 
-/// Ledger-only twin of [`boundaries`]: the probe count of the fixed-trip
-/// search is shape-determined (`(s−1)·(log2 tile + 1)` per sublist), so
-/// the analytic ledger is exact.
+/// Ledger-only twin of [`boundaries`] at the classic `u32` width: the
+/// probe count of the fixed-trip search is shape-determined
+/// (`(s−1)·(log2 tile + 1)` per sublist), so the analytic ledger is
+/// exact.
 pub fn analytic(n: usize, tile: usize, s: usize, ledger: &mut Ledger) {
+    analytic_bytes(n, tile, s, KEY_BYTES, ledger);
+}
+
+/// Ledger-only twin of [`boundaries`] at an explicit element width.
+pub fn analytic_bytes(n: usize, tile: usize, s: usize, elem_bytes: usize, ledger: &mut Ledger) {
     assert!(tile.is_power_of_two());
     assert_eq!(n % tile, 0);
     let m = n / tile;
@@ -89,10 +95,10 @@ pub fn analytic(n: usize, tile: usize, s: usize, ledger: &mut Ledger) {
         return;
     }
     let probes = m as u64 * (s as u64 - 1) * (tile.trailing_zeros() as u64 + 1);
-    record(m, tile, s, probes, ledger);
+    record(m, tile, s, probes, elem_bytes, ledger);
 }
 
-fn record(m: usize, tile: usize, s: usize, probes: u64, ledger: &mut Ledger) {
+fn record(m: usize, tile: usize, s: usize, probes: u64, elem_bytes: usize, ledger: &mut Ledger) {
     ledger.begin_kernel(
         KernelClass::SampleIndex,
         m as u64,
@@ -101,11 +107,12 @@ fn record(m: usize, tile: usize, s: usize, probes: u64, ledger: &mut Ledger) {
     ledger.tag_step(6);
     // Each block re-reads its tile through shared memory once (coalesced)
     // and reads the splitters already resident in shared memory.
-    ledger.add_coalesced((m * tile * KEY_BYTES) as u64);
+    ledger.add_coalesced((m * tile * elem_bytes) as u64);
     // Every probe is one shared-memory read + one compare.
     ledger.add_smem(probes);
     ledger.add_compute(probes);
-    // Boundary matrix write-back.
+    // Boundary matrix write-back — u32 counts regardless of key type,
+    // so this term does not widen with `elem_bytes`.
     ledger.add_coalesced((m * s * KEY_BYTES) as u64);
     ledger.end_kernel();
 }
@@ -126,6 +133,7 @@ pub fn row_bucket_sizes(boundary_row: &[u32]) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::Key;
 
     #[test]
     fn lower_bound_matches_std() {

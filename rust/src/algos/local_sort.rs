@@ -13,12 +13,13 @@
 use super::bitonic;
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 
 /// Sort every `tile`-sized sublist of `keys` in place and record the
-/// launch. `keys.len()` must be a multiple of `tile`; `tile` a power of
-/// two. Returns the number of tiles (m).
-pub fn run(keys: &mut [Key], tile: usize, ledger: &mut Ledger) -> usize {
+/// launch (traffic scales with [`SortKey::WIDTH_BYTES`]). `keys.len()`
+/// must be a multiple of `tile`; `tile` a power of two. Returns the
+/// number of tiles (m).
+pub fn run<K: SortKey>(keys: &mut [K], tile: usize, ledger: &mut Ledger) -> usize {
     assert!(tile.is_power_of_two(), "tile must be a power of two");
     assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
     let m = keys.len() / tile;
@@ -30,17 +31,23 @@ pub fn run(keys: &mut [Key], tile: usize, ledger: &mut Ledger) -> usize {
         total_ces += bitonic::sort_slice(t);
     }
     debug_assert_eq!(total_ces, m as u64 * bitonic::ce_count(tile));
-    record(m, tile, ledger);
+    record(m, tile, K::WIDTH_BYTES, ledger);
     m
 }
 
-/// Ledger-only twin of [`run`] for paper-scale n.
+/// Ledger-only twin of [`run`] at the classic `u32` width.
 pub fn analytic(n: usize, tile: usize, ledger: &mut Ledger) -> usize {
+    analytic_bytes(n, tile, KEY_BYTES, ledger)
+}
+
+/// Ledger-only twin of [`run`] for paper-scale n, at an explicit
+/// per-element width.
+pub fn analytic_bytes(n: usize, tile: usize, elem_bytes: usize, ledger: &mut Ledger) -> usize {
     assert!(tile.is_power_of_two());
     assert_eq!(n % tile, 0);
     let m = n / tile;
     if m > 0 {
-        record(m, tile, ledger);
+        record(m, tile, elem_bytes, ledger);
     }
     m
 }
@@ -48,7 +55,7 @@ pub fn analytic(n: usize, tile: usize, ledger: &mut Ledger) -> usize {
 /// One launch, m blocks: coalesced read+write of the whole array plus
 /// the in-shared-memory network (4 shared accesses per compare-exchange:
 /// two loads, two stores).
-fn record(m: usize, tile: usize, ledger: &mut Ledger) {
+fn record(m: usize, tile: usize, elem_bytes: usize, ledger: &mut Ledger) {
     let n = m * tile;
     let ces = m as u64 * bitonic::ce_count(tile);
     ledger.begin_kernel(
@@ -57,7 +64,7 @@ fn record(m: usize, tile: usize, ledger: &mut Ledger) {
         MAX_BLOCK_THREADS.min((tile / 2).max(1) as u32),
     );
     ledger.tag_step(2);
-    ledger.add_coalesced(2 * (n * KEY_BYTES) as u64);
+    ledger.add_coalesced(2 * (n * elem_bytes) as u64);
     ledger.add_smem(4 * ces);
     ledger.add_compute(ces);
     ledger.end_kernel();
@@ -66,7 +73,7 @@ fn record(m: usize, tile: usize, ledger: &mut Ledger) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::is_sorted;
+    use crate::{is_sorted, Key};
 
     fn scrambled(n: usize) -> Vec<Key> {
         (0..n as u32).map(|x| x.wrapping_mul(2654435761) ^ 0xABCD).collect()

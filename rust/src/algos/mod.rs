@@ -33,6 +33,7 @@ pub mod sharded;
 pub mod thrust_merge;
 
 use crate::error::Result;
+use crate::sim::spec::GpuSpec;
 use crate::sim::GpuSim;
 use crate::Key;
 
@@ -49,6 +50,38 @@ pub enum Algorithm {
     Radix,
 }
 
+/// Object-safe adapter every baseline sorter implements: sort `keys`
+/// on `sim` with default parameters and report the estimated
+/// milliseconds on `spec`. One `dyn` dispatch replaces the four
+/// copy-pasted match arms [`Algorithm::run`] used to carry.
+trait AlgorithmRunner {
+    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64>;
+}
+
+impl AlgorithmRunner for bucket_sort::BucketSort {
+    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+        Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
+    }
+}
+
+impl AlgorithmRunner for randomized::RandomizedSampleSort {
+    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+        Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
+    }
+}
+
+impl AlgorithmRunner for thrust_merge::ThrustMergeSort {
+    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+        Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
+    }
+}
+
+impl AlgorithmRunner for radix::RadixSort {
+    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+        Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
+    }
+}
+
 impl Algorithm {
     /// All algorithms, bucket sort first.
     pub const ALL: [Algorithm; 4] = [
@@ -58,7 +91,20 @@ impl Algorithm {
         Algorithm::Radix,
     ];
 
-    /// Parse a CLI name.
+    /// The canonical CLI/config name: what `--algo` help prints, what
+    /// CSV output uses, and a guaranteed [`Algorithm::parse`] round
+    /// trip — so help text and parse aliases cannot drift apart again.
+    pub fn canonical_name(self) -> &'static str {
+        match self {
+            Algorithm::BucketSort => "bucket-sort",
+            Algorithm::Randomized => "randomized",
+            Algorithm::ThrustMerge => "thrust-merge",
+            Algorithm::Radix => "radix",
+        }
+    }
+
+    /// Parse a CLI name ([`Algorithm::canonical_name`]s always parse;
+    /// historical aliases are kept).
     pub fn parse(s: &str) -> Option<Algorithm> {
         match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
             "bucketsort" | "bucket" | "gbs" | "deterministic" | "dss" => {
@@ -71,25 +117,26 @@ impl Algorithm {
         }
     }
 
+    /// The default-parameter sorter behind this algorithm, as a
+    /// dyn-dispatch runner.
+    fn runner(self) -> Box<dyn AlgorithmRunner> {
+        match self {
+            Algorithm::BucketSort => Box::new(bucket_sort::BucketSort::new(Default::default())),
+            Algorithm::Randomized => {
+                Box::new(randomized::RandomizedSampleSort::new(Default::default()))
+            }
+            Algorithm::ThrustMerge => {
+                Box::new(thrust_merge::ThrustMergeSort::new(Default::default()))
+            }
+            Algorithm::Radix => Box::new(radix::RadixSort::new(Default::default())),
+        }
+    }
+
     /// Run this algorithm on `keys` over `sim` with default parameters,
     /// returning the estimated milliseconds on the sim's own spec.
     pub fn run(self, keys: &mut [Key], sim: &mut GpuSim) -> Result<f64> {
         let spec = sim.spec().clone();
-        let ms = match self {
-            Algorithm::BucketSort => bucket_sort::BucketSort::new(Default::default())
-                .sort(keys, sim)?
-                .total_estimated_ms(&spec),
-            Algorithm::Randomized => randomized::RandomizedSampleSort::new(Default::default())
-                .sort(keys, sim)?
-                .total_estimated_ms(&spec),
-            Algorithm::ThrustMerge => thrust_merge::ThrustMergeSort::new(Default::default())
-                .sort(keys, sim)?
-                .total_estimated_ms(&spec),
-            Algorithm::Radix => radix::RadixSort::new(Default::default())
-                .sort(keys, sim)?
-                .total_estimated_ms(&spec),
-        };
-        Ok(ms)
+        self.runner().sort_ms(keys, sim, &spec)
     }
 }
 
@@ -120,6 +167,20 @@ mod tests {
         assert_eq!(Algorithm::parse("thrust"), Some(Algorithm::ThrustMerge));
         assert_eq!(Algorithm::parse("radix"), Some(Algorithm::Radix));
         assert_eq!(Algorithm::parse("bogo"), None);
+    }
+
+    #[test]
+    fn canonical_names_round_trip_through_parse() {
+        // The anti-drift guarantee: help text built from
+        // canonical_name() always names something parse() accepts.
+        for alg in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(alg.canonical_name()), Some(alg), "{alg}");
+        }
+        let names: Vec<&str> = Algorithm::ALL.map(Algorithm::canonical_name).to_vec();
+        assert_eq!(
+            names,
+            vec!["bucket-sort", "randomized", "thrust-merge", "radix"]
+        );
     }
 
     #[test]

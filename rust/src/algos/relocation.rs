@@ -13,18 +13,19 @@ use super::indexing;
 use super::prefix::BucketLayout;
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 
 /// Relocate all buckets. `keys` is the tile-aligned, per-tile-sorted
 /// array; `boundaries` the m×s boundary matrix of Step 6; `layout` the
 /// Step-7 result. `out` must have `keys.len()` capacity and is fully
-/// overwritten.
-pub fn relocate(
-    keys: &[Key],
+/// overwritten. For [`crate::Record`] elements the payload index moves
+/// with its key — this is the key–value half of Step 8.
+pub fn relocate<K: SortKey>(
+    keys: &[K],
     tile: usize,
     boundaries_mat: &[u32],
     layout: &BucketLayout,
-    out: &mut [Key],
+    out: &mut [K],
     ledger: &mut Ledger,
 ) {
     assert_eq!(keys.len(), out.len(), "out must match input length");
@@ -49,19 +50,24 @@ pub fn relocate(
         }
         debug_assert_eq!(seg_start, tile);
     }
-    record(m, tile, s, ledger);
+    record(m, tile, s, K::WIDTH_BYTES, ledger);
 }
 
-/// Ledger-only twin of [`relocate`].
+/// Ledger-only twin of [`relocate`] at the classic `u32` width.
 pub fn analytic(n: usize, tile: usize, s: usize, ledger: &mut Ledger) {
+    analytic_bytes(n, tile, s, KEY_BYTES, ledger);
+}
+
+/// Ledger-only twin of [`relocate`] at an explicit element width.
+pub fn analytic_bytes(n: usize, tile: usize, s: usize, elem_bytes: usize, ledger: &mut Ledger) {
     assert_eq!(n % tile, 0);
     let m = n / tile;
     if m > 0 {
-        record(m, tile, s, ledger);
+        record(m, tile, s, elem_bytes, ledger);
     }
 }
 
-fn record(m: usize, tile: usize, s: usize, ledger: &mut Ledger) {
+fn record(m: usize, tile: usize, s: usize, elem_bytes: usize, ledger: &mut Ledger) {
     let n = m * tile;
     ledger.begin_kernel(KernelClass::Relocation, m as u64, MAX_BLOCK_THREADS);
     ledger.tag_step(8);
@@ -70,11 +76,15 @@ fn record(m: usize, tile: usize, s: usize, ledger: &mut Ledger) {
     // bucket. Segments at least one memory transaction long coalesce
     // fully; shorter ones each burn a whole transaction — this is the
     // high-s coalescing degradation behind Figure 3's right edge.
-    ledger.add_coalesced((n * KEY_BYTES) as u64);
+    // Wider elements (u64 keys, key–value records) reach the coalescing
+    // threshold at proportionally higher s. The boundary/location
+    // matrices hold u32 counts regardless of key type, so their reads
+    // do not widen.
+    ledger.add_coalesced((n * elem_bytes) as u64);
     ledger.add_coalesced(2 * (m * s * KEY_BYTES) as u64);
-    let seg_bytes = (tile / s).max(1) * KEY_BYTES;
+    let seg_bytes = (tile / s).max(1) * elem_bytes;
     if seg_bytes >= crate::sim::spec::MEM_TRANSACTION_BYTES {
-        ledger.add_coalesced((n * KEY_BYTES) as u64);
+        ledger.add_coalesced((n * elem_bytes) as u64);
     } else {
         ledger.add_scattered((m * s) as u64);
     }
@@ -87,7 +97,7 @@ mod tests {
     use super::*;
     use crate::algos::prefix::column_prefix;
     use crate::algos::{indexing::boundaries, sampling};
-    use crate::is_sorted_permutation;
+    use crate::{is_sorted_permutation, Key};
 
     /// End-to-end Steps 6–8 on a small instance: after relocation, every
     /// key of bucket j is ≤ every key of bucket j+1, and the array is a

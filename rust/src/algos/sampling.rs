@@ -12,13 +12,13 @@
 
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 
 /// Step 3: `s` equidistant samples from each sorted `tile`-sized sublist
 /// of `keys` (positions `(p+1)·tile/s − 1` within each sublist).
 /// Requires `s` dividing `tile`. Returns the s·m samples in sublist
 /// order.
-pub fn local_samples(keys: &[Key], tile: usize, s: usize, ledger: &mut Ledger) -> Vec<Key> {
+pub fn local_samples<K: SortKey>(keys: &[K], tile: usize, s: usize, ledger: &mut Ledger) -> Vec<K> {
     validate(tile, s);
     assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
     let m = keys.len() / tile;
@@ -30,29 +30,40 @@ pub fn local_samples(keys: &[Key], tile: usize, s: usize, ledger: &mut Ledger) -
         }
     }
     if m > 0 {
-        record_local(m, s, ledger);
+        record_local(m, s, K::WIDTH_BYTES, ledger);
     }
     out
 }
 
-/// Ledger-only twin of [`local_samples`].
+/// Ledger-only twin of [`local_samples`] at the classic `u32` width.
 pub fn analytic_local(n: usize, tile: usize, s: usize, ledger: &mut Ledger) -> usize {
+    analytic_local_bytes(n, tile, s, KEY_BYTES, ledger)
+}
+
+/// Ledger-only twin of [`local_samples`] at an explicit element width.
+pub fn analytic_local_bytes(
+    n: usize,
+    tile: usize,
+    s: usize,
+    elem_bytes: usize,
+    ledger: &mut Ledger,
+) -> usize {
     validate(tile, s);
     assert_eq!(n % tile, 0);
     let m = n / tile;
     if m > 0 {
-        record_local(m, s, ledger);
+        record_local(m, s, elem_bytes, ledger);
     }
     m * s
 }
 
-fn record_local(m: usize, s: usize, ledger: &mut Ledger) {
+fn record_local(m: usize, s: usize, elem_bytes: usize, ledger: &mut Ledger) {
     ledger.begin_kernel(KernelClass::Sample, m as u64, s.min(MAX_BLOCK_THREADS as usize) as u32);
     ledger.tag_step(3);
     // Strided reads from the sorted tiles (one transaction each), plus a
     // coalesced write of the sample array.
     ledger.add_scattered((m * s) as u64);
-    ledger.add_coalesced((m * s * KEY_BYTES) as u64);
+    ledger.add_coalesced((m * s * elem_bytes) as u64);
     ledger.add_compute((m * s) as u64);
     ledger.end_kernel();
 }
@@ -61,30 +72,36 @@ fn record_local(m: usize, s: usize, ledger: &mut Ledger) {
 /// the globally sorted sample array (positions `(j+1)·len/s − 1`,
 /// `j = 0..s-1`; the s-th sample is the array maximum and bounds no
 /// bucket, so it is not materialized).
-pub fn select_splitters(sorted_samples: &[Key], s: usize, ledger: &mut Ledger) -> Vec<Key> {
+pub fn select_splitters<K: SortKey>(sorted_samples: &[K], s: usize, ledger: &mut Ledger) -> Vec<K> {
     assert!(s >= 1);
     let len = sorted_samples.len();
     assert!(len >= s, "need at least s samples to select from");
     let stride = len / s;
-    let splitters: Vec<Key> = (0..s - 1)
+    let splitters: Vec<K> = (0..s - 1)
         .map(|j| sorted_samples[(j + 1) * stride - 1])
         .collect();
-    debug_assert!(splitters.windows(2).all(|w| w[0] <= w[1]));
-    record_splitters(s, ledger);
+    debug_assert!(splitters.windows(2).all(|w| w[0].key_le(&w[1])));
+    record_splitters(s, K::WIDTH_BYTES, ledger);
     splitters
 }
 
-/// Ledger-only twin of [`select_splitters`].
+/// Ledger-only twin of [`select_splitters`] at the classic `u32` width.
 pub fn analytic_splitters(len: usize, s: usize, ledger: &mut Ledger) {
-    assert!(len >= s && s >= 1);
-    record_splitters(s, ledger);
+    analytic_splitters_bytes(len, s, KEY_BYTES, ledger);
 }
 
-fn record_splitters(s: usize, ledger: &mut Ledger) {
+/// Ledger-only twin of [`select_splitters`] at an explicit element
+/// width.
+pub fn analytic_splitters_bytes(len: usize, s: usize, elem_bytes: usize, ledger: &mut Ledger) {
+    assert!(len >= s && s >= 1);
+    record_splitters(s, elem_bytes, ledger);
+}
+
+fn record_splitters(s: usize, elem_bytes: usize, ledger: &mut Ledger) {
     ledger.begin_kernel(KernelClass::Sample, 1, s.min(MAX_BLOCK_THREADS as usize) as u32);
     ledger.tag_step(5);
     ledger.add_scattered(s as u64);
-    ledger.add_coalesced((s * KEY_BYTES) as u64);
+    ledger.add_coalesced((s * elem_bytes) as u64);
     ledger.add_compute(s as u64);
     ledger.end_kernel();
 }
@@ -97,6 +114,7 @@ fn validate(tile: usize, s: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::Key;
 
     #[test]
     fn samples_are_equidistant_maxima() {

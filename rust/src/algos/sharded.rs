@@ -33,11 +33,12 @@
 use super::bucket_sort::{BucketSort, BucketSortParams, BucketSortReport};
 use super::{bitonic, indexing, prefix, sampling};
 use crate::error::Result;
+use crate::key::{tag_records, untag_records, Record};
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::pool::DevicePool;
 use crate::sim::spec::MAX_BLOCK_THREADS;
 use crate::sim::CostModel;
-use crate::{Key, KEY_BYTES};
+use crate::{SortKey, KEY_BYTES};
 
 /// Tunable parameters of the sharded sort.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -171,13 +172,19 @@ impl ShardedSort {
     }
 
     /// Sort `keys` in place across the pool, recording per-device
-    /// traffic and enforcing every device's memory capacity.
+    /// traffic and enforcing every device's memory capacity. Generic
+    /// over [`SortKey`]; the ledgers scale with the key width.
     ///
     /// The output is the fully sorted permutation of the input —
     /// byte-identical to what a single-device [`BucketSort`] with
     /// enough memory would produce.
-    pub fn sort(&self, keys: &mut [Key], pool: &mut DevicePool) -> Result<ShardedSortReport> {
+    pub fn sort<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        pool: &mut DevicePool,
+    ) -> Result<ShardedSortReport> {
         let n = keys.len();
+        let elem_bytes = K::WIDTH_BYTES;
         let p = pool.len();
         let shares = pool.shares(n);
         // Inputs too small to give every device at least one tile are
@@ -192,7 +199,7 @@ impl ShardedSort {
         // Phase 1: per-device Algorithm 1 over the capacity-weighted
         // shards (devices run in parallel; ledgers are per-sim).
         let mut local = Vec::with_capacity(p);
-        let mut shards: Vec<Vec<Key>> = Vec::with_capacity(p);
+        let mut shards: Vec<Vec<K>> = Vec::with_capacity(p);
         let mut off = 0usize;
         for (d, &len) in shares.iter().enumerate() {
             let mut shard = keys[off..off + len].to_vec();
@@ -207,21 +214,27 @@ impl ShardedSort {
         let mut combine = Ledger::default();
         let combine_alloc = pool
             .sim_mut(0)
-            .alloc((plan.padded_samples + 3 * p * p) * KEY_BYTES)?;
+            .alloc(plan.padded_samples * elem_bytes + 3 * p * p * KEY_BYTES)?;
 
         // Regular samples from every sorted shard (the PSRS step).
-        let mut samples: Vec<Key> = Vec::with_capacity(plan.padded_samples);
+        let mut samples: Vec<K> = Vec::with_capacity(plan.padded_samples);
         for (shard, &t) in shards.iter().zip(&plan.sample_counts) {
             for k in 0..t {
                 samples.push(shard[(k + 1) * shard.len() / t - 1]);
             }
         }
         debug_assert_eq!(samples.len(), plan.total_samples);
-        record_shard_samples(p, self.params.merge_samples, plan.total_samples, &mut combine);
+        record_shard_samples(
+            p,
+            self.params.merge_samples,
+            plan.total_samples,
+            elem_bytes,
+            &mut combine,
+        );
 
         // Sort all samples globally; p−1 equidistant picks become the
         // cross-device splitters.
-        samples.resize(plan.padded_samples, Key::MAX);
+        samples.resize(plan.padded_samples, K::PAD);
         bitonic::global_sort(&mut samples, self.params.sort.tile, &mut combine, 0);
         let splitters =
             sampling::select_splitters(&samples[..plan.total_samples], p, &mut combine);
@@ -252,7 +265,7 @@ impl ShardedSort {
         // Destination layout (column-major, exactly Step 7's machinery
         // with m = s = p) and the all-to-all exchange.
         let layout = prefix::column_prefix(&counts, p, p, &mut combine);
-        let mut out = vec![0 as Key; n];
+        let mut out = vec![K::PAD; n];
         for (i, shard) in shards.iter().enumerate() {
             let mut seg_start = 0usize;
             for j in 0..p {
@@ -263,7 +276,7 @@ impl ShardedSort {
             }
             debug_assert_eq!(seg_start, shard.len());
         }
-        record_exchange(n, p, &mut combine);
+        record_exchange(n, p, elem_bytes, &mut combine);
         pool.sim_mut(0).free(combine_alloc);
         pool.sim_mut(0).ledger_mut().extend_from(&combine);
 
@@ -277,7 +290,7 @@ impl ShardedSort {
             let start = layout.bucket_start[j] as usize;
             let len = layout.bucket_size[j] as usize;
             max_out_shard = max_out_shard.max(len as u64);
-            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * KEY_BYTES)?;
+            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * elem_bytes)?;
             let mut bounds = Vec::with_capacity(p + 1);
             bounds.push(0usize);
             for i in 0..p {
@@ -287,7 +300,13 @@ impl ShardedSort {
             let rounds = merge_runs(&mut out[start..start + len], &bounds);
             debug_assert_eq!(rounds, plan.merge_rounds);
             let mut ledger = Ledger::default();
-            record_merge(shares[j], self.params.sort.tile, plan.merge_rounds, &mut ledger);
+            record_merge(
+                shares[j],
+                self.params.sort.tile,
+                plan.merge_rounds,
+                elem_bytes,
+                &mut ledger,
+            );
             pool.sim_mut(j).free(alloc);
             pool.sim_mut(j).ledger_mut().extend_from(&ledger);
             merge.push(ledger);
@@ -305,43 +324,89 @@ impl ShardedSort {
         })
     }
 
+    /// Sort a key–value job across the pool: `keys` in place, `payload`
+    /// permuted so `payload[i]` still belongs to `keys[i]` afterwards.
+    /// Runs both levels of the splitter discipline over [`Record`]s
+    /// (stable, byte-deterministic; widened ledger accounting).
+    pub fn sort_pairs<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        payload: &mut Vec<u64>,
+        pool: &mut DevicePool,
+    ) -> Result<ShardedSortReport> {
+        crate::key::validate_key_value(keys.len(), payload.len())?;
+        let mut recs: Vec<Record<K>> = tag_records(keys)?;
+        let report = self.sort(&mut recs, pool)?;
+        untag_records(&recs, keys, payload);
+        Ok(report)
+    }
+
     /// Produce the per-device ledgers and memory profile of sharding
-    /// `n` keys across `pool` without touching data — identical
-    /// launches and allocations to [`ShardedSort::sort`]. This is what
-    /// demonstrates sorts beyond any single device's ceiling (≥ 512M
-    /// keys) at negligible host cost.
+    /// `n` keys across `pool` without touching data, at the classic
+    /// `u32` width.
     pub fn sort_analytic(&self, n: usize, pool: &mut DevicePool) -> Result<ShardedSortReport> {
+        self.sort_analytic_bytes(n, KEY_BYTES, pool)
+    }
+
+    /// Ledger-only twin of [`ShardedSort::sort`] at an explicit
+    /// per-element width — identical launches and allocations. This is
+    /// what demonstrates sorts beyond any single device's ceiling
+    /// (≥ 512M keys) at negligible host cost.
+    pub fn sort_analytic_bytes(
+        &self,
+        n: usize,
+        elem_bytes: usize,
+        pool: &mut DevicePool,
+    ) -> Result<ShardedSortReport> {
         let p = pool.len();
         let shares = pool.shares(n);
         if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
-            return self.fallback(FallbackInput::Analytic(n), pool);
+            return self.fallback(FallbackInput::<u32>::Analytic(n, elem_bytes), pool);
         }
         let sorter = BucketSort::try_new(self.params.sort)?;
 
         let mut local = Vec::with_capacity(p);
         for (d, &len) in shares.iter().enumerate() {
-            local.push(sorter.sort_analytic(len, pool.sim_mut(d))?);
+            local.push(sorter.sort_analytic_bytes(len, elem_bytes, pool.sim_mut(d))?);
         }
 
         let plan = self.combine_plan(&shares);
         let mut combine = Ledger::default();
         let combine_alloc = pool
             .sim_mut(0)
-            .alloc((plan.padded_samples + 3 * p * p) * KEY_BYTES)?;
-        record_shard_samples(p, self.params.merge_samples, plan.total_samples, &mut combine);
-        bitonic::global_sort_analytic(plan.padded_samples, self.params.sort.tile, &mut combine, 0);
-        sampling::analytic_splitters(plan.total_samples, p, &mut combine);
+            .alloc(plan.padded_samples * elem_bytes + 3 * p * p * KEY_BYTES)?;
+        record_shard_samples(
+            p,
+            self.params.merge_samples,
+            plan.total_samples,
+            elem_bytes,
+            &mut combine,
+        );
+        bitonic::global_sort_analytic_bytes(
+            plan.padded_samples,
+            self.params.sort.tile,
+            elem_bytes,
+            &mut combine,
+            0,
+        );
+        sampling::analytic_splitters_bytes(plan.total_samples, p, elem_bytes, &mut combine);
         record_partition(p, plan.probes, &mut combine);
         prefix::analytic(p, p, &mut combine);
-        record_exchange(n, p, &mut combine);
+        record_exchange(n, p, elem_bytes, &mut combine);
         pool.sim_mut(0).free(combine_alloc);
         pool.sim_mut(0).ledger_mut().extend_from(&combine);
 
         let mut merge = Vec::with_capacity(p);
         for j in 0..p {
-            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * KEY_BYTES)?;
+            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * elem_bytes)?;
             let mut ledger = Ledger::default();
-            record_merge(shares[j], self.params.sort.tile, plan.merge_rounds, &mut ledger);
+            record_merge(
+                shares[j],
+                self.params.sort.tile,
+                plan.merge_rounds,
+                elem_bytes,
+                &mut ledger,
+            );
             pool.sim_mut(j).free(alloc);
             pool.sim_mut(j).ledger_mut().extend_from(&ledger);
             merge.push(ledger);
@@ -361,9 +426,9 @@ impl ShardedSort {
     /// Single-device route for pools of one and inputs too small to
     /// shard: the highest-capacity device sorts everything, the others
     /// idle (empty reports, empty combine/merge ledgers).
-    fn fallback(
+    fn fallback<K: SortKey>(
         &self,
-        input: FallbackInput<'_>,
+        input: FallbackInput<'_, K>,
         pool: &mut DevicePool,
     ) -> Result<ShardedSortReport> {
         let p = pool.len();
@@ -383,14 +448,14 @@ impl ShardedSort {
                         max_out_shard = n as u64;
                         sorter.sort(&mut keys[..], pool.sim_mut(d))?
                     } else {
-                        sorter.sort(&mut [], pool.sim_mut(d))?
+                        sorter.sort(&mut [] as &mut [K], pool.sim_mut(d))?
                     });
                 }
             }
-            FallbackInput::Analytic(_) => {
+            FallbackInput::Analytic(_, elem_bytes) => {
                 for d in 0..p {
                     let len = if d == target { n } else { 0 };
-                    local.push(sorter.sort_analytic(len, pool.sim_mut(d))?);
+                    local.push(sorter.sort_analytic_bytes(len, elem_bytes, pool.sim_mut(d))?);
                 }
             }
         }
@@ -428,18 +493,18 @@ impl ShardedSort {
 }
 
 /// Input carrier for the single-device fallback route.
-enum FallbackInput<'a> {
+enum FallbackInput<'a, K> {
     /// Execute path: the keys to sort in place.
-    Execute(&'a mut [Key]),
-    /// Analytic path: just the key count.
-    Analytic(usize),
+    Execute(&'a mut [K]),
+    /// Analytic path: key count and per-element width.
+    Analytic(usize, usize),
 }
 
-impl FallbackInput<'_> {
+impl<K> FallbackInput<'_, K> {
     fn len(&self) -> usize {
         match self {
             FallbackInput::Execute(keys) => keys.len(),
-            FallbackInput::Analytic(n) => *n,
+            FallbackInput::Analytic(n, _) => *n,
         }
     }
 }
@@ -470,9 +535,9 @@ fn merge_rounds(p: usize) -> u32 {
 /// `bounds[last] == region.len()`; empty runs allowed). Returns the
 /// number of rounds executed — always [`merge_rounds`] of the run
 /// count, the shape the ledger prices.
-fn merge_runs(region: &mut [Key], bounds: &[usize]) -> u32 {
+fn merge_runs<K: SortKey>(region: &mut [K], bounds: &[usize]) -> u32 {
     let mut a = region.to_vec();
-    let mut b = vec![0 as Key; region.len()];
+    let mut b = vec![K::PAD; region.len()];
     let mut cur: Vec<usize> = bounds.to_vec();
     let mut rounds = 0u32;
     while cur.len() > 2 {
@@ -503,11 +568,11 @@ fn merge_runs(region: &mut [Key], bounds: &[usize]) -> u32 {
 
 /// Stable two-way merge of sorted `x` and `y` into `out`
 /// (`out.len() == x.len() + y.len()`).
-fn merge_two(x: &[Key], y: &[Key], out: &mut [Key]) {
+fn merge_two<K: SortKey>(x: &[K], y: &[K], out: &mut [K]) {
     debug_assert_eq!(out.len(), x.len() + y.len());
     let (mut i, mut j) = (0usize, 0usize);
     for slot in out.iter_mut() {
-        if i < x.len() && (j >= y.len() || x[i] <= y[j]) {
+        if i < x.len() && (j >= y.len() || x[i].key_le(&y[j])) {
             *slot = x[i];
             i += 1;
         } else {
@@ -520,14 +585,20 @@ fn merge_two(x: &[Key], y: &[Key], out: &mut [Key]) {
 /// Regular-sample extraction from every shard: one block per shard,
 /// strided (scattered) reads plus a coalesced write of the sample
 /// array — the cross-device twin of Step 3.
-fn record_shard_samples(p: usize, samples_per_shard: usize, total: usize, ledger: &mut Ledger) {
+fn record_shard_samples(
+    p: usize,
+    samples_per_shard: usize,
+    total: usize,
+    elem_bytes: usize,
+    ledger: &mut Ledger,
+) {
     ledger.begin_kernel(
         KernelClass::Sample,
         p as u64,
         samples_per_shard.min(MAX_BLOCK_THREADS as usize) as u32,
     );
     ledger.add_scattered(total as u64);
-    ledger.add_coalesced((total * KEY_BYTES) as u64);
+    ledger.add_coalesced((total * elem_bytes) as u64);
     ledger.add_compute(total as u64);
     ledger.end_kernel();
 }
@@ -543,6 +614,7 @@ fn record_partition(p: usize, probes: u64, ledger: &mut Ledger) {
     );
     ledger.add_scattered(probes);
     ledger.add_compute(probes);
+    // Boundary matrix: u32 counts regardless of key type.
     ledger.add_coalesced((p * p * KEY_BYTES) as u64);
     ledger.end_kernel();
 }
@@ -550,20 +622,22 @@ fn record_partition(p: usize, probes: u64, ledger: &mut Ledger) {
 /// The all-to-all segment exchange: every key crosses the interconnect
 /// once (coalesced read + write), plus the small boundary/location
 /// matrices — the cross-device twin of Step 8.
-fn record_exchange(n: usize, p: usize, ledger: &mut Ledger) {
+fn record_exchange(n: usize, p: usize, elem_bytes: usize, ledger: &mut Ledger) {
     ledger.begin_kernel(KernelClass::Transfer, p as u64, MAX_BLOCK_THREADS);
-    ledger.add_coalesced((2 * n * KEY_BYTES + 2 * p * p * KEY_BYTES) as u64);
+    // Keys widen with the element type; the count/location matrices
+    // stay u32.
+    ledger.add_coalesced((2 * n * elem_bytes + 2 * p * p * KEY_BYTES) as u64);
     ledger.add_compute((p * p) as u64);
     ledger.end_kernel();
 }
 
 /// One destination device's merge: `rounds` streaming passes over its
 /// balanced share (read + write + one compare per key per round).
-fn record_merge(balanced: usize, tile: usize, rounds: u32, ledger: &mut Ledger) {
+fn record_merge(balanced: usize, tile: usize, rounds: u32, elem_bytes: usize, ledger: &mut Ledger) {
     let blocks = (balanced / tile).max(1) as u64;
     for _ in 0..rounds {
         ledger.begin_kernel(KernelClass::Merge, blocks, MAX_BLOCK_THREADS);
-        ledger.add_coalesced((2 * balanced * KEY_BYTES) as u64);
+        ledger.add_coalesced((2 * balanced * elem_bytes) as u64);
         ledger.add_compute(balanced as u64);
         ledger.end_kernel();
     }
@@ -572,8 +646,8 @@ fn record_merge(balanced: usize, tile: usize, rounds: u32, ledger: &mut Ledger) 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::is_sorted_permutation;
     use crate::sim::{GpuModel, GpuSpec};
+    use crate::{is_sorted_permutation, Key};
 
     fn small_params() -> ShardedSortParams {
         ShardedSortParams {
@@ -727,6 +801,44 @@ mod tests {
         let rounds = merge_runs(&mut v, &bounds);
         assert_eq!(v, vec![0, 1, 2, 3, 4, 5, 8, 9, 42]);
         assert_eq!(rounds, merge_rounds(4));
+    }
+
+    #[test]
+    fn typed_and_key_value_sharding() {
+        let sorter = ShardedSort::new(small_params());
+        // u64 keys across the heterogeneous pool.
+        let input: Vec<u64> = (0..60_000u64)
+            .map(|x| x.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        let mut keys = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        sorter.sort(&mut keys, &mut pool).unwrap();
+        assert!(is_sorted_permutation(&input, &keys));
+
+        // Key–value over f32 keys with NaNs: payloads stay married to
+        // their keys through both levels of the splitter discipline.
+        let mut fkeys: Vec<f32> = (0..50_000u32)
+            .map(|x| x.wrapping_mul(2654435761) as f32 - 2e9)
+            .collect();
+        fkeys[11] = f32::NAN;
+        fkeys[17] = f32::NEG_INFINITY;
+        let payload: Vec<u64> = (0..fkeys.len() as u64).collect();
+        let orig = fkeys.clone();
+        let mut out_keys = fkeys.clone();
+        let mut out_payload = payload.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        sorter
+            .sort_pairs(&mut out_keys, &mut out_payload, &mut pool)
+            .unwrap();
+        assert!(is_sorted_permutation(&orig, &out_keys));
+        for (k, p) in out_keys.iter().zip(&out_payload) {
+            let original = orig[*p as usize];
+            assert_eq!(
+                f32::to_bits(original),
+                f32::to_bits(*k),
+                "payload {p} no longer points at its key"
+            );
+        }
     }
 
     #[test]

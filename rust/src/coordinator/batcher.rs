@@ -158,7 +158,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::SortJob;
+    use crate::coordinator::request::SortRequest;
 
     fn cfg() -> BatchConfig {
         BatchConfig {
@@ -171,14 +171,14 @@ mod tests {
     }
 
     type OutcomeRx =
-        std::sync::mpsc::Receiver<crate::error::Result<crate::coordinator::request::SortOutcome>>;
+        std::sync::mpsc::Receiver<crate::error::Result<crate::coordinator::request::SortResponse>>;
 
     fn req(id: u64, n: usize, at: Instant) -> (PendingRequest, OutcomeRx) {
         let (tx, rx) = std::sync::mpsc::channel();
         (
             PendingRequest {
                 id,
-                job: SortJob::new(vec![0; n]),
+                request: SortRequest::new(vec![0u32; n]),
                 admitted_at: at,
                 respond_to: tx,
             },

@@ -5,20 +5,27 @@
 //!   limits and the traffic ledger apply; used by experiments and for
 //!   failure-injection tests via tiny simulated devices).
 //! * PJRT-backed — the AOT JAX/Pallas pipeline via the XLA CPU client
-//!   (fixed shapes from `artifacts/manifest.json`).
+//!   (fixed shapes from `artifacts/manifest.json`; serves the classic
+//!   `u32`, key-only jobs only — see [`crate::SortKey`] on the
+//!   fixed-shape sentinel restriction).
 //! * Sharded — Algorithm 1 per device across a [`DevicePool`] with a
 //!   deterministic cross-device combine; accepts jobs beyond any single
 //!   device's memory ceiling.
+//!
+//! Every engine consumes typed [`JobData`] (any [`crate::KeyType`],
+//! optional key–value payload) and sorts **ascending by key bits**; the
+//! scheduler applies the requested direction afterwards, uniformly.
 
 use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
 use crate::algos::sharded::{ShardedSort, ShardedSortParams};
 use crate::config::{EngineKind, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::exec::NativeEngine;
+use crate::key::for_each_key_vec_mut;
 use crate::runtime::PjrtRuntime;
 use crate::sim::{DeviceLease, DevicePool, GpuModel, GpuSim, GpuSpec};
 use crate::util::pool;
-use crate::Key;
+use crate::{KeyData, SortKey};
 
 /// A sort backend able to process a batch of independent jobs.
 ///
@@ -30,16 +37,22 @@ pub trait SortEngine {
     /// Which configuration enum this engine realizes.
     fn kind(&self) -> EngineKind;
 
-    /// Sort every job of the batch; one result per job, order preserved.
-    /// Jobs fail individually (e.g. a simulated OOM) without failing the
-    /// batch.
-    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>>;
+    /// Sort every job of the batch ascending by key bits, keeping each
+    /// job's payload paired with its keys; one result per job, order
+    /// preserved. Jobs fail individually (e.g. a simulated OOM, or an
+    /// unsupported key type on a fixed-shape engine) without failing
+    /// the batch.
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>>;
 
-    /// Largest single job this engine accepts, if bounded.
+    /// Largest single job this engine accepts, if bounded (in keys, at
+    /// the classic `u32` width — wider jobs may OOM earlier and fail
+    /// individually).
     fn max_job_keys(&self) -> Option<usize> {
         None
     }
 }
+
+pub use super::request::JobData;
 
 /// Native multicore backend: jobs in a batch run concurrently on the
 /// virtual-SM pool, each internally parallel.
@@ -61,25 +74,42 @@ impl NativeSortEngine {
     }
 }
 
+fn native_job<K: SortKey>(
+    engine: &NativeEngine,
+    keys: &mut [K],
+    payload: &mut Option<Vec<u64>>,
+) -> Result<()> {
+    match payload {
+        None => {
+            engine.sort(keys);
+        }
+        Some(vals) => {
+            engine.sort_pairs(keys, vals)?;
+        }
+    }
+    Ok(())
+}
+
 impl SortEngine for NativeSortEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Native
     }
 
-    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
         // Small jobs run in parallel with each other (dynamic queue —
         // job sizes vary); the engine parallelizes internally for large
         // ones, which land in their own batches.
         let engine = &self.engine;
-        pool::parallel_map(jobs, engine.workers(), |mut keys| {
-            engine.sort(&mut keys);
-            Ok(keys)
+        pool::parallel_map(jobs, engine.workers(), |mut job| {
+            for_each_key_vec_mut!(job.keys, v => native_job(engine, v, &mut job.payload))?;
+            Ok(job)
         })
     }
 }
 
 /// Simulated-GPU backend: Algorithm 1 with full traffic accounting and
-/// the device's memory ceiling.
+/// the device's memory ceiling (which key–value and wide-key jobs reach
+/// proportionally sooner).
 pub struct SimSortEngine {
     spec: GpuSpec,
     sorter: BucketSort,
@@ -103,17 +133,37 @@ impl SimSortEngine {
     }
 }
 
+fn sim_job<K: SortKey>(
+    sorter: &BucketSort,
+    spec: &GpuSpec,
+    keys: &mut [K],
+    payload: &mut Option<Vec<u64>>,
+) -> Result<()> {
+    let mut sim = GpuSim::new(spec.clone());
+    match payload {
+        None => {
+            sorter.sort(keys, &mut sim)?;
+        }
+        Some(vals) => {
+            sorter.sort_pairs(keys, vals, &mut sim)?;
+        }
+    }
+    Ok(())
+}
+
 impl SortEngine for SimSortEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Sim
     }
 
-    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
         jobs.into_iter()
-            .map(|mut keys| {
-                let mut sim = GpuSim::new(self.spec.clone());
-                self.sorter.sort(&mut keys, &mut sim)?;
-                Ok(keys)
+            .map(|mut job| {
+                for_each_key_vec_mut!(
+                    job.keys,
+                    v => sim_job(&self.sorter, &self.spec, v, &mut job.payload)
+                )?;
+                Ok(job)
             })
             .collect()
     }
@@ -177,17 +227,37 @@ impl ShardedSortEngine {
     }
 }
 
+fn sharded_job<K: SortKey>(
+    sorter: &ShardedSort,
+    models: &[GpuModel],
+    keys: &mut [K],
+    payload: &mut Option<Vec<u64>>,
+) -> Result<()> {
+    let mut pool = DevicePool::new(models)?;
+    match payload {
+        None => {
+            sorter.sort(keys, &mut pool)?;
+        }
+        Some(vals) => {
+            sorter.sort_pairs(keys, vals, &mut pool)?;
+        }
+    }
+    Ok(())
+}
+
 impl SortEngine for ShardedSortEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Sharded
     }
 
-    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
         jobs.into_iter()
-            .map(|mut keys| {
-                let mut pool = DevicePool::new(&self.models)?;
-                self.sorter.sort(&mut keys, &mut pool)?;
-                Ok(keys)
+            .map(|mut job| {
+                for_each_key_vec_mut!(
+                    job.keys,
+                    v => sharded_job(&self.sorter, &self.models, v, &mut job.payload)
+                )?;
+                Ok(job)
             })
             .collect()
     }
@@ -202,7 +272,10 @@ impl SortEngine for ShardedSortEngine {
     }
 }
 
-/// PJRT backend: the AOT-compiled fixed-shape pipeline.
+/// PJRT backend: the AOT-compiled fixed-shape pipeline. The artifact
+/// set is compiled for `u32` keys, key-only, ascending — typed or
+/// key–value jobs fail individually with a descriptive error (route
+/// them to the native/sim/sharded engines instead).
 pub struct PjrtSortEngine {
     runtime: PjrtRuntime,
 }
@@ -226,9 +299,25 @@ impl SortEngine for PjrtSortEngine {
         EngineKind::Pjrt
     }
 
-    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
         jobs.into_iter()
-            .map(|keys| self.runtime.sort(&keys).map(|(sorted, _cap)| sorted))
+            .map(|mut job| {
+                if job.payload.is_some() {
+                    return Err(Error::InvalidInput(
+                        "the fixed-shape PJRT engine does not support key–value payloads"
+                            .into(),
+                    ));
+                }
+                let KeyData::U32(ref keys) = job.keys else {
+                    return Err(Error::InvalidInput(format!(
+                        "the fixed-shape PJRT engine serves u32 keys only (got {})",
+                        job.keys.key_type()
+                    )));
+                };
+                let (sorted, _cap) = self.runtime.sort(keys)?;
+                job.keys = KeyData::U32(sorted);
+                Ok(job)
+            })
             .collect()
     }
 
@@ -247,7 +336,8 @@ impl SortEngine for PjrtSortEngine {
 ///
 /// Jobs beyond the device's memory ceiling fail with the same OOM as
 /// [`SimSortEngine`] (the pricing pass performs the capacity
-/// accounting).
+/// accounting, at the job's actual element width — key bytes plus 4 for
+/// a key–value payload index).
 pub struct PacedSimEngine {
     spec: GpuSpec,
     sorter: BucketSort,
@@ -272,25 +362,46 @@ impl PacedSimEngine {
     }
 }
 
+fn paced_host_sort<K: SortKey>(keys: &mut [K], payload: &mut Option<Vec<u64>>) -> Result<()> {
+    match payload {
+        None => keys.sort_unstable_by(K::key_cmp),
+        Some(vals) => {
+            // Same per-job shape contract as the other engines'
+            // sort_pairs: fail the job, never panic the worker.
+            crate::key::validate_key_value(keys.len(), vals.len())?;
+            // Record sort: ties break by original position, so the
+            // payload pairing is stable and byte-deterministic.
+            let mut recs = crate::key::tag_records(keys)?;
+            recs.sort_unstable_by(<crate::Record<K>>::key_cmp);
+            crate::key::untag_records(&recs, keys, vals);
+        }
+    }
+    Ok(())
+}
+
 impl SortEngine for PacedSimEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Sim
     }
 
-    fn sort_batch(&mut self, jobs: Vec<Vec<Key>>) -> Vec<Result<Vec<Key>>> {
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
         let started = std::time::Instant::now();
         let mut device_ms = 0.0;
-        let results: Vec<Result<Vec<Key>>> = jobs
+        let results: Vec<Result<JobData>> = jobs
             .into_iter()
-            .map(|mut keys| {
+            .map(|mut job| {
                 let mut sim = GpuSim::new(self.spec.clone());
                 // Analytic pricing enforces the memory ceiling and
-                // yields the deterministic device estimate; the data
-                // work itself is a plain host sort.
-                self.sorter.sort_analytic(keys.len(), &mut sim)?;
+                // yields the deterministic device estimate at the job's
+                // element width; the data work itself is a plain host
+                // sort.
+                let elem_bytes =
+                    job.keys.width_bytes() + if job.payload.is_some() { 4 } else { 0 };
+                self.sorter
+                    .sort_analytic_bytes(job.keys.len(), elem_bytes, &mut sim)?;
                 device_ms += sim.estimated_ms();
-                keys.sort_unstable();
-                Ok(keys)
+                for_each_key_vec_mut!(job.keys, v => paced_host_sort(v, &mut job.payload))?;
+                Ok(job)
             })
             .collect();
         // Hold the worker for the rest of the simulated device time —
@@ -348,14 +459,64 @@ pub fn build_worker_engine(
     }
 }
 
-/// Shared post-condition check used by the service's verify mode.
-pub fn verify_outcome(input: &[Key], output: &[Key]) -> Result<()> {
-    if !crate::is_sorted_permutation(input, output) {
-        return Err(Error::Coordinator(
-            "verification failed: output is not a sorted permutation of the input".into(),
-        ));
+/// Shared post-condition check used by the service's verify/self-check
+/// modes: `output` must hold the same key type as `input`, be sorted in
+/// the requested direction, and be a permutation of the input's keys —
+/// with every payload value still attached to its original key.
+pub fn verify_outcome(input: &JobData, output: &JobData, descending: bool) -> Result<()> {
+    fn check<K: SortKey>(
+        inp: &[K],
+        out: &[K],
+        in_p: Option<&Vec<u64>>,
+        out_p: Option<&Vec<u64>>,
+    ) -> bool {
+        if inp.len() != out.len() {
+            return false;
+        }
+        match (in_p, out_p) {
+            (None, None) => {
+                let mut a: Vec<K::Bits> = inp.iter().map(|k| k.to_bits()).collect();
+                let mut b: Vec<K::Bits> = out.iter().map(|k| k.to_bits()).collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                a == b
+            }
+            (Some(ip), Some(op)) => {
+                if ip.len() != inp.len() || op.len() != out.len() {
+                    return false;
+                }
+                // (key, payload) pair multiset equality — catches both
+                // key corruption and payload divorce.
+                let mut a: Vec<(K::Bits, u64)> =
+                    inp.iter().zip(ip).map(|(k, &v)| (k.to_bits(), v)).collect();
+                let mut b: Vec<(K::Bits, u64)> =
+                    out.iter().zip(op).map(|(k, &v)| (k.to_bits(), v)).collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                a == b
+            }
+            _ => false,
+        }
     }
-    Ok(())
+    let in_p = input.payload.as_ref();
+    let out_p = output.payload.as_ref();
+    // Direction-aware sortedness has one definition: KeyData::is_sorted.
+    let ok = output.keys.is_sorted(descending)
+        && match (&input.keys, &output.keys) {
+            (KeyData::U32(a), KeyData::U32(b)) => check(a, b, in_p, out_p),
+            (KeyData::U64(a), KeyData::U64(b)) => check(a, b, in_p, out_p),
+            (KeyData::I32(a), KeyData::I32(b)) => check(a, b, in_p, out_p),
+            (KeyData::I64(a), KeyData::I64(b)) => check(a, b, in_p, out_p),
+            (KeyData::F32(a), KeyData::F32(b)) => check(a, b, in_p, out_p),
+            _ => false,
+        };
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::Coordinator(
+            "verification failed: output is not a sorted permutation of the input".into(),
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -363,22 +524,78 @@ mod tests {
     use super::*;
     use crate::sim::GpuModel;
 
+    fn kv_u32(keys: Vec<u32>, payload: Option<Vec<u64>>) -> JobData {
+        JobData {
+            keys: KeyData::U32(keys),
+            payload,
+        }
+    }
+
     #[test]
     fn native_engine_sorts_batches() {
         let cfg = ServiceConfig::default();
         let mut e = NativeSortEngine::new(&cfg).unwrap();
         let jobs = vec![
-            vec![3u32, 1, 2],
-            vec![],
-            (0..10_000u32).rev().collect::<Vec<_>>(),
+            kv_u32(vec![3, 1, 2], None),
+            kv_u32(vec![], None),
+            kv_u32((0..10_000u32).rev().collect(), None),
         ];
         let results = e.sort_batch(jobs.clone());
         assert_eq!(results.len(), 3);
         for (inp, res) in jobs.iter().zip(&results) {
             let out = res.as_ref().unwrap();
-            assert!(crate::is_sorted_permutation(inp, out));
+            assert!(crate::is_sorted_permutation(
+                inp.keys.as_u32().unwrap(),
+                out.keys.as_u32().unwrap()
+            ));
         }
         assert_eq!(e.kind(), EngineKind::Native);
+    }
+
+    #[test]
+    fn engines_serve_typed_and_key_value_jobs() {
+        // Every general-purpose engine takes a u64 job and a u32
+        // key–value job through the same sort_batch surface.
+        let keys64: Vec<u64> = (0..20_000u64)
+            .map(|x| x.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        let kv_keys: Vec<u32> = (0..10_000u32).map(|x| x.wrapping_mul(2654435761) % 64).collect();
+        let kv_payload: Vec<u64> = (0..kv_keys.len() as u64).collect();
+
+        let cfg = ServiceConfig {
+            sort: BucketSortParams { tile: 256, s: 16 },
+            ..Default::default()
+        };
+        let mut engines: Vec<Box<dyn SortEngine>> = vec![
+            Box::new(NativeSortEngine::new(&cfg).unwrap()),
+            Box::new(SimSortEngine::new(&cfg).unwrap()),
+            Box::new(
+                ShardedSortEngine::from_parts(
+                    cfg.devices.clone(),
+                    ShardedSortParams {
+                        sort: cfg.sort,
+                        ..Default::default()
+                    },
+                )
+                .unwrap(),
+            ),
+            Box::new(PacedSimEngine::new(GpuModel::Gtx285_2G, cfg.sort, 0.0).unwrap()),
+        ];
+        for e in engines.iter_mut() {
+            let jobs = vec![
+                JobData::new(keys64.clone()),
+                JobData {
+                    keys: KeyData::U32(kv_keys.clone()),
+                    payload: Some(kv_payload.clone()),
+                },
+            ];
+            let inputs: Vec<JobData> = jobs.clone();
+            let results = e.sort_batch(jobs);
+            for (input, res) in inputs.iter().zip(&results) {
+                let out = res.as_ref().unwrap();
+                verify_outcome(input, out, false).unwrap();
+            }
+        }
     }
 
     #[test]
@@ -391,23 +608,18 @@ mod tests {
         };
         let mut e = SimSortEngine::new(&cfg).unwrap();
         assert!(e.max_job_keys().unwrap() > 64 << 20);
-        let results = e.sort_batch(vec![vec![5u32, 4, 3, 2, 1]]);
-        assert_eq!(results[0].as_ref().unwrap(), &vec![1, 2, 3, 4, 5]);
+        let results = e.sort_batch(vec![kv_u32(vec![5, 4, 3, 2, 1], None)]);
+        assert_eq!(
+            results[0].as_ref().unwrap().keys.as_u32().unwrap(),
+            &[1, 2, 3, 4, 5]
+        );
     }
 
     #[test]
     fn sim_engine_oom_fails_job_not_batch() {
-        // A too-large job fails with OOM while its batch-mates succeed.
-        let mut e = SimSortEngine::from_parts(
-            GpuModel::Gtx260.spec(),
-            BucketSortParams { tile: 256, s: 16 },
-        )
-        .unwrap();
-        let big = vec![1u32; 130 << 20 >> 2]; // ~130M keys? keep it analytic-light: use capacity check instead
-        drop(big);
-        // Use the analytic capacity: a job over max_sortable_keys OOMs.
-        // (Executing a >64M-key sort for real is too slow for a unit
-        // test, so fabricate with a tiny device instead.)
+        // A job over the tiny device's ceiling OOMs while its
+        // batch-mates succeed (executing a >64M-key sort for real is
+        // too slow for a unit test, so fabricate with a tiny device).
         let tiny = GpuSpec {
             name: "tiny".into(),
             global_memory_bytes: 1 << 20, // 1 MB
@@ -415,19 +627,59 @@ mod tests {
         };
         let mut e_tiny =
             SimSortEngine::from_parts(tiny, BucketSortParams { tile: 256, s: 16 }).unwrap();
-        let jobs = vec![vec![2u32, 1], vec![0u32; 200_000]];
+        let jobs = vec![kv_u32(vec![2, 1], None), kv_u32(vec![0; 200_000], None)];
         let results = e_tiny.sort_batch(jobs);
         assert!(results[0].is_ok());
         let err = results[1].as_ref().unwrap_err();
         assert!(err.is_oom(), "{err}");
-        let _ = e.sort_batch(vec![]);
+    }
+
+    #[test]
+    fn key_value_jobs_hit_the_ceiling_sooner() {
+        // The widened record (key + payload index) halves the capacity
+        // headroom: a job that fits key-only OOMs as key–value on a
+        // device sized in between.
+        let tiny = GpuSpec {
+            name: "tiny-3MB".into(),
+            global_memory_bytes: 3 << 20,
+            ..GpuModel::Gtx260.spec()
+        };
+        let mut e = SimSortEngine::from_parts(tiny, BucketSortParams { tile: 256, s: 16 })
+            .unwrap();
+        let n = 300_000;
+        let keys: Vec<u32> = (0..n as u32).rev().collect();
+        let results = e.sort_batch(vec![
+            kv_u32(keys.clone(), None),
+            kv_u32(keys, Some((0..n as u64).collect())),
+        ]);
+        assert!(results[0].is_ok(), "key-only fits");
+        assert!(
+            results[1].as_ref().unwrap_err().is_oom(),
+            "key–value must OOM"
+        );
     }
 
     #[test]
     fn verify_catches_corruption() {
-        assert!(verify_outcome(&[2, 1], &[1, 2]).is_ok());
-        assert!(verify_outcome(&[2, 1], &[1, 3]).is_err());
-        assert!(verify_outcome(&[2, 1], &[2, 1]).is_err());
+        let input = kv_u32(vec![2, 1], None);
+        assert!(verify_outcome(&input, &kv_u32(vec![1, 2], None), false).is_ok());
+        assert!(verify_outcome(&input, &kv_u32(vec![2, 1], None), true).is_ok());
+        assert!(verify_outcome(&input, &kv_u32(vec![1, 3], None), false).is_err());
+        assert!(verify_outcome(&input, &kv_u32(vec![2, 1], None), false).is_err());
+        // Direction matters.
+        assert!(verify_outcome(&input, &kv_u32(vec![1, 2], None), true).is_err());
+        // Key-type mismatch is corruption.
+        assert!(
+            verify_outcome(&input, &JobData::new(vec![1u64, 2]), false).is_err()
+        );
+        // Payload divorce is corruption even when the keys are right.
+        let kv_in = kv_u32(vec![2, 1], Some(vec![20, 10]));
+        assert!(verify_outcome(&kv_in, &kv_u32(vec![1, 2], Some(vec![10, 20])), false).is_ok());
+        assert!(
+            verify_outcome(&kv_in, &kv_u32(vec![1, 2], Some(vec![20, 10])), false).is_err()
+        );
+        // Dropping the payload is corruption too.
+        assert!(verify_outcome(&kv_in, &kv_u32(vec![1, 2], None), false).is_err());
     }
 
     #[test]
@@ -442,14 +694,20 @@ mod tests {
         assert_eq!(e.models().len(), 4);
         // Pool capacity exceeds every single device's ceiling.
         assert!(e.max_job_keys().unwrap() > 512 << 20);
-        let jobs: Vec<Vec<Key>> = vec![
-            (0..50_000u32).rev().collect(),
-            vec![],
-            (0..10_000u32).map(|x| x.wrapping_mul(2654435761)).collect(),
+        let jobs = vec![
+            kv_u32((0..50_000u32).rev().collect(), None),
+            kv_u32(vec![], None),
+            kv_u32(
+                (0..10_000u32).map(|x| x.wrapping_mul(2654435761)).collect(),
+                None,
+            ),
         ];
         let results = e.sort_batch(jobs.clone());
         for (inp, res) in jobs.iter().zip(&results) {
-            assert!(crate::is_sorted_permutation(inp, res.as_ref().unwrap()));
+            assert!(crate::is_sorted_permutation(
+                inp.keys.as_u32().unwrap(),
+                res.as_ref().unwrap().keys.as_u32().unwrap()
+            ));
         }
         // Empty device lists are rejected up front.
         assert!(ShardedSortEngine::from_parts(vec![], ShardedSortParams::default()).is_err());
@@ -466,15 +724,21 @@ mod tests {
             e.max_job_keys(),
             Some(GpuModel::Gtx285_2G.spec().max_sortable_keys())
         );
-        let jobs: Vec<Vec<Key>> = vec![
-            (0..10_000u32).rev().collect(),
-            vec![],
-            vec![7, 7, 3, 3, 1],
+        let jobs = vec![
+            kv_u32((0..10_000u32).rev().collect(), None),
+            kv_u32(vec![], None),
+            kv_u32(vec![7, 7, 3, 3, 1], Some(vec![70, 71, 30, 31, 10])),
         ];
-        let results = e.sort_batch(jobs.clone());
-        for (inp, res) in jobs.iter().zip(&results) {
-            assert!(crate::is_sorted_permutation(inp, res.as_ref().unwrap()));
+        let inputs = jobs.clone();
+        let results = e.sort_batch(jobs);
+        for (inp, res) in inputs.iter().zip(&results) {
+            verify_outcome(inp, res.as_ref().unwrap(), false).unwrap();
         }
+        // The key–value job is stable: equal keys keep payload order.
+        assert_eq!(
+            results[2].as_ref().unwrap().payload.as_deref(),
+            Some(&[10u64, 30, 31, 70, 71][..])
+        );
         // Over-ceiling jobs OOM exactly like the executing sim engine.
         let tiny = GpuSpec {
             name: "tiny".into(),
@@ -486,9 +750,15 @@ mod tests {
             sorter: BucketSort::try_new(BucketSortParams { tile: 256, s: 16 }).unwrap(),
             time_scale: 0.0,
         };
-        let results = paced_tiny.sort_batch(vec![vec![0u32; 300_000], vec![2, 1]]);
+        let results = paced_tiny.sort_batch(vec![
+            kv_u32(vec![0; 300_000], None),
+            kv_u32(vec![2, 1], None),
+        ]);
         assert!(results[0].as_ref().unwrap_err().is_oom());
-        assert_eq!(results[1].as_ref().unwrap(), &vec![1, 2]);
+        assert_eq!(
+            results[1].as_ref().unwrap().keys.as_u32().unwrap(),
+            &[1, 2]
+        );
         // Bad scales rejected.
         assert!(PacedSimEngine::new(GpuModel::Gtx260, BucketSortParams::default(), -1.0).is_err());
         assert!(

@@ -1,7 +1,10 @@
 //! The L3 coordinator: a batched sort *service* around the paper's
 //! algorithm.
 //!
-//! * [`request`] — job/outcome types and the pending-request envelope.
+//! * [`request`] — the typed job API ([`SortRequest`] builder with any
+//!   [`crate::KeyType`], key–value payloads, sort direction, per-request
+//!   self-check; typed [`SortResponse`]) and the pending-request
+//!   envelope.
 //! * [`batcher`] — FIFO dynamic batching with backpressure.
 //! * [`engine`] — the backends (native multicore, simulated GPU,
 //!   device-paced sim, PJRT/AOT, sharded multi-device) behind one
@@ -29,10 +32,13 @@ pub mod service;
 
 pub use batcher::Batcher;
 pub use engine::{
-    build_engine, build_worker_engine, NativeSortEngine, PacedSimEngine, PjrtSortEngine,
-    ShardedSortEngine, SimSortEngine, SortEngine,
+    build_engine, build_worker_engine, verify_outcome, NativeSortEngine, PacedSimEngine,
+    PjrtSortEngine, ShardedSortEngine, SimSortEngine, SortEngine,
 };
-pub use request::{Batch, PendingRequest, RequestId, SortJob, SortOutcome};
+pub use request::{
+    Batch, JobData, PendingRequest, RequestId, SortJob, SortOutcome, SortRequest,
+    SortRequestBuilder, SortResponse,
+};
 pub use scheduler::{DispatchError, Scheduler};
 pub use service::{SortClient, SortService};
 
@@ -60,12 +66,88 @@ mod tests {
     fn end_to_end_sort() {
         let client = SortService::start(test_config()).unwrap();
         let keys = Distribution::Uniform.generate(100_000, 1);
-        let outcome = client.sort(SortJob::tagged(keys.clone(), "e2e")).unwrap();
-        assert!(crate::is_sorted_permutation(&keys, &outcome.keys));
+        let outcome = client
+            .sort(SortRequest::tagged(keys.clone(), "e2e"))
+            .unwrap();
+        assert!(crate::is_sorted_permutation(&keys, outcome.keys_u32()));
         assert_eq!(outcome.tag.as_deref(), Some("e2e"));
         assert!(outcome.batch_size >= 1);
         let snap = client.shutdown();
         assert_eq!(snap.counters["requests_completed"], 1);
+    }
+
+    #[test]
+    fn typed_requests_end_to_end() {
+        // u64, i64 and NaN-containing f32 requests — with payloads,
+        // descending order and per-request self-check — through the
+        // default native service.
+        let client = SortService::start(test_config()).unwrap();
+
+        let keys64: Vec<u64> = (0..50_000u64)
+            .map(|x| x.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        let out = client.sort(SortRequest::new(keys64.clone())).unwrap();
+        match &out.keys {
+            crate::KeyData::U64(v) => {
+                assert!(crate::is_sorted_permutation(&keys64, v))
+            }
+            other => panic!("wrong key type back: {:?}", other.key_type()),
+        }
+
+        let keys_i64: Vec<i64> = (0..30_000i64).map(|x| 1 - x * 2654435761).collect();
+        let out = client
+            .sort(
+                SortRequest::builder(keys_i64.clone())
+                    .descending(true)
+                    .self_check(true)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        assert!(out.keys.is_sorted(true));
+        assert_eq!(out.keys.len(), keys_i64.len());
+
+        let mut fkeys: Vec<f32> = (0..20_000u32)
+            .map(|x| x.wrapping_mul(2654435761) as f32 - 2e9)
+            .collect();
+        fkeys[5] = f32::NAN;
+        fkeys[6] = -0.0;
+        let payload: Vec<u64> = (0..fkeys.len() as u64).collect();
+        let out = client
+            .sort(
+                SortRequest::builder(fkeys.clone())
+                    .payload(payload)
+                    .self_check(true)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let sorted = match &out.keys {
+            crate::KeyData::F32(v) => v,
+            other => panic!("wrong key type back: {:?}", other.key_type()),
+        };
+        assert!(crate::is_sorted_permutation(&fkeys, sorted));
+        for (k, p) in sorted.iter().zip(out.payload.as_ref().unwrap()) {
+            assert_eq!(
+                f32::to_bits(fkeys[*p as usize]),
+                f32::to_bits(*k),
+                "payload no longer points at its key"
+            );
+        }
+
+        // A mismatched payload is rejected with a clear error even
+        // without the builder's validation.
+        let bad = SortRequest {
+            keys: crate::KeyData::U32(vec![1, 2, 3]),
+            payload: Some(vec![1]),
+            ..Default::default()
+        };
+        let err = client.sort(bad).unwrap_err();
+        assert!(err.to_string().contains("payload length"), "{err}");
+
+        let snap = client.shutdown();
+        assert_eq!(snap.counters["requests_completed"], 3);
+        assert_eq!(snap.counters["requests_rejected"], 1);
     }
 
     #[test]
@@ -84,13 +166,16 @@ mod tests {
         let mut inputs = Vec::new();
         for i in 0..16u64 {
             let keys = Distribution::Uniform.generate(10_000 + i as usize, i);
-            rxs.push(client.submit(SortJob::new(keys.clone())).unwrap());
+            rxs.push(client.submit(SortRequest::new(keys.clone())).unwrap());
             inputs.push(keys);
         }
         let mut any_batched = false;
         for (i, (rx, input)) in rxs.into_iter().zip(inputs).enumerate() {
             let out = rx.recv().unwrap().unwrap();
-            assert!(crate::is_sorted_permutation(&input, &out.keys), "req {i}");
+            assert!(
+                crate::is_sorted_permutation(&input, out.keys_u32()),
+                "req {i}"
+            );
             any_batched |= out.batch_size > 1;
         }
         assert!(any_batched, "dynamic batching never engaged");
@@ -108,12 +193,15 @@ mod tests {
         let mut inputs = Vec::new();
         for i in 0..24u64 {
             let keys = Distribution::Uniform.generate(5_000 + (i as usize) * 131, i);
-            rxs.push(client.submit(SortJob::new(keys.clone())).unwrap());
+            rxs.push(client.submit(SortRequest::new(keys.clone())).unwrap());
             inputs.push(keys);
         }
         for (i, (rx, input)) in rxs.into_iter().zip(inputs).enumerate() {
             let out = rx.recv().unwrap().unwrap();
-            assert!(crate::is_sorted_permutation(&input, &out.keys), "req {i}");
+            assert!(
+                crate::is_sorted_permutation(&input, out.keys_u32()),
+                "req {i}"
+            );
             assert!(out.worker < 4, "worker id {} out of range", out.worker);
         }
         let snap = client.shutdown();
@@ -128,10 +216,7 @@ mod tests {
             fn kind(&self) -> crate::config::EngineKind {
                 crate::config::EngineKind::Native
             }
-            fn sort_batch(
-                &mut self,
-                jobs: Vec<Vec<crate::Key>>,
-            ) -> Vec<crate::error::Result<Vec<crate::Key>>> {
+            fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<crate::error::Result<JobData>> {
                 jobs.into_iter().map(Ok).collect()
             }
         }
@@ -146,8 +231,11 @@ mod tests {
     #[test]
     fn empty_job_completes_without_engine() {
         let client = SortService::start(test_config()).unwrap();
-        let out = client.sort(SortJob::new(vec![])).unwrap();
+        let out = client.sort(SortRequest::new(Vec::<u32>::new())).unwrap();
         assert!(out.keys.is_empty());
+        // The key type is echoed even for empty typed jobs.
+        let out = client.sort(SortRequest::new(Vec::<f32>::new())).unwrap();
+        assert_eq!(out.keys.key_type(), crate::KeyType::F32);
         let snap = client.shutdown();
         assert!(!snap.counters.contains_key("requests_completed"));
     }
@@ -170,11 +258,11 @@ mod tests {
         let client = SortService::start_with_engine(cfg, engine).unwrap();
 
         let small = Distribution::Uniform.generate(10_000, 3);
-        let out = client.sort(SortJob::new(small.clone())).unwrap();
-        assert!(crate::is_sorted_permutation(&small, &out.keys));
+        let out = client.sort(SortRequest::new(small.clone())).unwrap();
+        assert!(crate::is_sorted_permutation(&small, out.keys_u32()));
 
         let big = Distribution::Uniform.generate(300_000, 4);
-        let err = client.sort(SortJob::new(big)).unwrap_err();
+        let err = client.sort(SortRequest::new(big)).unwrap_err();
         assert!(err.is_oom(), "{err}");
 
         let snap = client.shutdown();
@@ -190,7 +278,7 @@ mod tests {
         let mut inputs = Vec::new();
         for i in 0..8u64 {
             let keys = Distribution::Uniform.generate(50_000, i);
-            rxs.push(client.submit(SortJob::new(keys.clone())).unwrap());
+            rxs.push(client.submit(SortRequest::new(keys.clone())).unwrap());
             inputs.push(keys);
         }
         let snap = client.shutdown();
@@ -198,7 +286,7 @@ mod tests {
         for (rx, input) in rxs.into_iter().zip(inputs) {
             match rx.recv() {
                 Ok(Ok(out)) => {
-                    assert!(crate::is_sorted_permutation(&input, &out.keys));
+                    assert!(crate::is_sorted_permutation(&input, out.keys_u32()));
                     done += 1;
                 }
                 Ok(Err(e)) => panic!("admitted request failed: {e}"),
@@ -228,19 +316,18 @@ mod tests {
             fn kind(&self) -> crate::config::EngineKind {
                 crate::config::EngineKind::Native
             }
-            fn sort_batch(
-                &mut self,
-                jobs: Vec<Vec<crate::Key>>,
-            ) -> Vec<crate::error::Result<Vec<crate::Key>>> {
+            fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<crate::error::Result<JobData>> {
                 let (lock, cv) = &*self.0;
                 let mut released = lock.lock().unwrap();
                 while !*released {
                     released = cv.wait(released).unwrap();
                 }
                 jobs.into_iter()
-                    .map(|mut k| {
-                        k.sort_unstable();
-                        Ok(k)
+                    .map(|mut j| {
+                        if let crate::KeyData::U32(v) = &mut j.keys {
+                            v.sort_unstable();
+                        }
+                        Ok(j)
                     })
                     .collect()
             }
@@ -266,7 +353,7 @@ mod tests {
         // backpressure.
         let mut rxs = Vec::new();
         for _ in 0..12 {
-            rxs.push(client.submit(SortJob::new(vec![2, 1])).unwrap());
+            rxs.push(client.submit(SortRequest::new(vec![2u32, 1])).unwrap());
             std::thread::sleep(Duration::from_millis(2));
         }
         SlowEngine::release(&release);
@@ -275,7 +362,7 @@ mod tests {
         for rx in rxs {
             match rx.recv() {
                 Ok(Ok(out)) => {
-                    assert_eq!(out.keys, vec![1, 2]);
+                    assert_eq!(out.keys_u32(), &[1, 2]);
                     completed += 1;
                 }
                 Ok(Err(e)) => {

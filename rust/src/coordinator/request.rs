@@ -1,45 +1,186 @@
-//! Request/response types of the sort service.
+//! Request/response types of the sort service — the typed job API.
+//!
+//! A client submits a [`SortRequest`]: a [`KeyData`] vector of any
+//! supported [`crate::KeyType`], an optional `u64` payload (key–value
+//! sorting — `payload[i]` belongs to `keys[i]` and again after the
+//! sort), a sort direction, and an optional per-request self-check.
+//! The service answers with a [`SortResponse`] carrying the sorted
+//! keys, the permuted payload and the usual service metadata.
+//!
+//! The classic API (`Vec<u32>` keys in, ascending, no payload) is the
+//! `SortRequest::new(vec)` special case and returns byte-identical
+//! results to the pre-typed service. `SortJob`/`SortOutcome` remain as
+//! aliases for that migration path.
 
 use crate::config::EngineKind;
-use crate::Key;
+use crate::error::Result;
+use crate::KeyData;
 use std::time::Instant;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
 /// A sort job as submitted by a client.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct SortJob {
-    /// The keys to sort.
-    pub keys: Vec<Key>,
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SortRequest {
+    /// The keys to sort (any supported key type).
+    pub keys: KeyData,
+    /// Optional per-key payload values; `payload[i]` belongs to
+    /// `keys[i]` on submission and on return. Ascending key–value sorts
+    /// are stable (ties keep submission order); a descending response
+    /// is the exact reverse of the ascending one, so equal keys come
+    /// back in *reverse* submission order. Both are byte-deterministic.
+    pub payload: Option<Vec<u64>>,
+    /// Sort direction (`false` = ascending, the default).
+    pub descending: bool,
+    /// Verify this response is a sorted permutation of this request
+    /// (with payload pairing) even when the service-wide `verify`
+    /// config is off.
+    pub self_check: bool,
     /// Optional client-side tag echoed back in the response (workload
     /// name, tenant, …).
     pub tag: Option<String>,
 }
 
-impl SortJob {
-    /// A job with no tag.
-    pub fn new(keys: Vec<Key>) -> Self {
-        SortJob { keys, tag: None }
+/// Legacy name of [`SortRequest`] (pre-typed API).
+pub type SortJob = SortRequest;
+
+impl SortRequest {
+    /// An ascending, key-only, untagged request — the classic path.
+    pub fn new(keys: impl Into<KeyData>) -> Self {
+        SortRequest {
+            keys: keys.into(),
+            ..Default::default()
+        }
     }
 
-    /// A tagged job.
-    pub fn tagged(keys: Vec<Key>, tag: impl Into<String>) -> Self {
-        SortJob {
-            keys,
+    /// A tagged key-only request.
+    pub fn tagged(keys: impl Into<KeyData>, tag: impl Into<String>) -> Self {
+        SortRequest {
+            keys: keys.into(),
             tag: Some(tag.into()),
+            ..Default::default()
+        }
+    }
+
+    /// Start building a request with payload/direction/self-check
+    /// options.
+    pub fn builder(keys: impl Into<KeyData>) -> SortRequestBuilder {
+        SortRequestBuilder {
+            req: SortRequest::new(keys),
+        }
+    }
+
+    /// Key count.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when the request carries no keys.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Structural validation: the payload (when present) must pair
+    /// one-to-one with the keys and fit the record index space
+    /// (the shared [`crate::key::validate_key_value`] rule).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(p) = &self.payload {
+            crate::key::validate_key_value(self.keys.len(), p.len())?;
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`SortRequest`] — the typed request surface
+/// (`payload`, `descending`, `self_check`, `tag`).
+#[derive(Debug, Clone)]
+pub struct SortRequestBuilder {
+    req: SortRequest,
+}
+
+impl SortRequestBuilder {
+    /// Attach a per-key payload (`payload[i]` belongs to `keys[i]`).
+    pub fn payload(mut self, payload: Vec<u64>) -> Self {
+        self.req.payload = Some(payload);
+        self
+    }
+
+    /// Sort descending instead of ascending.
+    pub fn descending(mut self, yes: bool) -> Self {
+        self.req.descending = yes;
+        self
+    }
+
+    /// Force per-request verification of the response.
+    pub fn self_check(mut self, yes: bool) -> Self {
+        self.req.self_check = yes;
+        self
+    }
+
+    /// Echo `tag` back in the response.
+    pub fn tag(mut self, tag: impl Into<String>) -> Self {
+        self.req.tag = Some(tag.into());
+        self
+    }
+
+    /// Validate and finish.
+    pub fn build(self) -> Result<SortRequest> {
+        self.req.validate()?;
+        Ok(self.req)
+    }
+}
+
+/// The engine-facing slice of one request: keys plus optional payload.
+/// Engines sort **ascending by key bits** and keep `payload[i]` married
+/// to `keys[i]`; direction is applied by the scheduler after the engine
+/// returns (a reversal, identical for every engine).
+#[derive(Debug, Clone, Default)]
+pub struct JobData {
+    /// The keys to sort.
+    pub keys: KeyData,
+    /// Optional payload, permuted with the keys.
+    pub payload: Option<Vec<u64>>,
+}
+
+impl JobData {
+    /// A key-only job.
+    pub fn new(keys: impl Into<KeyData>) -> Self {
+        JobData {
+            keys: keys.into(),
+            payload: None,
+        }
+    }
+
+    /// Key count.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when the job carries no keys.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Reverse keys (and payload) in place — ascending ↔ descending.
+    pub fn reverse(&mut self) {
+        self.keys.reverse();
+        if let Some(p) = &mut self.payload {
+            p.reverse();
         }
     }
 }
 
 /// A completed sort.
 #[derive(Debug, Clone, PartialEq)]
-pub struct SortOutcome {
+pub struct SortResponse {
     /// Request id assigned by the service.
     pub id: RequestId,
-    /// The sorted keys.
-    pub keys: Vec<Key>,
-    /// Echoed job tag.
+    /// The sorted keys (same [`crate::KeyType`] as the request).
+    pub keys: KeyData,
+    /// The payload, permuted with the keys (present iff submitted).
+    pub payload: Option<Vec<u64>>,
+    /// Echoed request tag.
     pub tag: Option<String>,
     /// Which engine served it.
     pub engine: EngineKind,
@@ -54,29 +195,40 @@ pub struct SortOutcome {
     pub service_ms: f64,
 }
 
+/// Legacy name of [`SortResponse`] (pre-typed API).
+pub type SortOutcome = SortResponse;
+
+impl SortResponse {
+    /// The sorted keys as the classic `u32` vector. Panics for other
+    /// key types — a convenience for the u32 tests/benches migration.
+    pub fn keys_u32(&self) -> &[u32] {
+        self.keys.as_u32().expect("response does not hold u32 keys")
+    }
+}
+
 /// Internal: a job admitted to the queue, waiting for batch assembly.
 #[derive(Debug)]
 pub struct PendingRequest {
     /// Assigned id.
     pub id: RequestId,
-    /// The job.
-    pub job: SortJob,
+    /// The request.
+    pub request: SortRequest,
     /// Admission timestamp (queue-delay accounting).
     pub admitted_at: Instant,
     /// Completion channel back to the caller (a one-shot: the service
     /// sends exactly one outcome).
-    pub respond_to: std::sync::mpsc::Sender<crate::error::Result<SortOutcome>>,
+    pub respond_to: std::sync::mpsc::Sender<crate::error::Result<SortResponse>>,
 }
 
 impl PendingRequest {
-    /// Key count of the job.
+    /// Key count of the request.
     pub fn len(&self) -> usize {
-        self.job.keys.len()
+        self.request.len()
     }
 
-    /// True when the job carries no keys.
+    /// True when the request carries no keys.
     pub fn is_empty(&self) -> bool {
-        self.job.keys.is_empty()
+        self.request.is_empty()
     }
 }
 
@@ -104,13 +256,56 @@ impl Batch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::KeyType;
 
     #[test]
-    fn job_constructors() {
-        let j = SortJob::new(vec![3, 1, 2]);
+    fn request_constructors() {
+        let j = SortRequest::new(vec![3u32, 1, 2]);
         assert!(j.tag.is_none());
-        let t = SortJob::tagged(vec![1], "bench");
+        assert!(!j.descending && !j.self_check && j.payload.is_none());
+        assert_eq!(j.keys.key_type(), KeyType::U32);
+        let t = SortRequest::tagged(vec![1u32], "bench");
         assert_eq!(t.tag.as_deref(), Some("bench"));
+        // Typed constructors infer the key type from the vector.
+        assert_eq!(SortRequest::new(vec![1u64]).keys.key_type(), KeyType::U64);
+        assert_eq!(SortRequest::new(vec![-1i64]).keys.key_type(), KeyType::I64);
+        assert_eq!(
+            SortRequest::new(vec![0.5f32]).keys.key_type(),
+            KeyType::F32
+        );
+    }
+
+    #[test]
+    fn builder_options_and_validation() {
+        let req = SortRequest::builder(vec![5u32, 2, 9])
+            .payload(vec![50, 20, 90])
+            .descending(true)
+            .self_check(true)
+            .tag("kv")
+            .build()
+            .unwrap();
+        assert!(req.descending && req.self_check);
+        assert_eq!(req.payload.as_deref(), Some(&[50u64, 20, 90][..]));
+        assert_eq!(req.tag.as_deref(), Some("kv"));
+        // Mismatched payload is rejected at build time.
+        let err = SortRequest::builder(vec![1u32, 2])
+            .payload(vec![1])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("payload length"), "{err}");
+    }
+
+    #[test]
+    fn job_data_reverse() {
+        let mut job = JobData {
+            keys: KeyData::from(vec![1u32, 2, 3]),
+            payload: Some(vec![10, 20, 30]),
+        };
+        assert_eq!(job.len(), 3);
+        assert!(!job.is_empty());
+        job.reverse();
+        assert_eq!(job.keys.as_u32().unwrap(), &[3, 2, 1]);
+        assert_eq!(job.payload.as_deref(), Some(&[30u64, 20, 10][..]));
     }
 
     #[test]
@@ -119,7 +314,7 @@ mod tests {
         let b = Batch {
             requests: vec![PendingRequest {
                 id: 1,
-                job: SortJob::new(vec![3, 2, 1]),
+                request: SortRequest::new(vec![3u32, 2, 1]),
                 admitted_at: Instant::now(),
                 respond_to: tx,
             }],

@@ -3,11 +3,13 @@
 //!
 //! The paper's determinism claim is what makes this safe to build: a
 //! batch's outcome depends only on each job's own keys (every engine
-//! sorts jobs independently, and a sorted `u32` sequence is the unique
-//! ordering of its multiset), so batches may complete **out of order
-//! across workers** while every response stays byte-identical to the
-//! single-worker service. Per-request oneshot channels deliver results,
-//! so completion order never matters to callers.
+//! sorts jobs independently; a sorted key sequence is the unique
+//! ordering of its bit-pattern multiset, and key–value jobs sort
+//! `Record`s whose tie-breaking index makes the order total), so
+//! batches may complete **out of order across workers** while every
+//! response stays byte-identical to the single-worker service.
+//! Per-request oneshot channels deliver results, so completion order
+//! never matters to callers.
 //!
 //! Design:
 //! * one `Mutex<State>` guards the dispatch queue and the per-worker
@@ -29,7 +31,7 @@
 //! spare capacity (else it eats a full batching wait).
 
 use super::engine::{self, SortEngine};
-use super::request::{Batch, SortOutcome};
+use super::request::{Batch, JobData, SortResponse};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
@@ -327,15 +329,16 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
 }
 
 type Delivery = (
-    mpsc::Sender<Result<SortOutcome>>,
+    mpsc::Sender<Result<SortResponse>>,
     Instant,
-    Result<SortOutcome>,
+    Result<SortResponse>,
 );
 
 /// Run one batch on this worker's engine and prepare the responses
 /// (identical per-request semantics to the old single-engine loop: jobs
-/// fail individually, verify mode checks each output against its own
-/// input).
+/// fail individually, verify/self-check modes check each output against
+/// its own input). Engines sort ascending; the requested direction is
+/// applied here, uniformly, before verification.
 fn execute_batch(
     worker: usize,
     engine: &mut dyn SortEngine,
@@ -345,13 +348,28 @@ fn execute_batch(
     let dispatched = Instant::now();
     let batch_size = batch.len();
     let mut reqs = batch.requests;
-    let jobs: Vec<Vec<crate::Key>> = reqs
+    let jobs: Vec<JobData> = reqs
         .iter_mut()
-        .map(|r| std::mem::take(&mut r.job.keys))
+        .map(|r| JobData {
+            keys: std::mem::take(&mut r.request.keys),
+            payload: r.request.payload.take(),
+        })
         .collect();
-    let inputs: Option<Vec<Vec<crate::Key>>> = shared.verify.then(|| jobs.clone());
-    let results = engine.sort_batch(jobs);
+    // Clone inputs only for requests that will be verified.
+    let inputs: Vec<Option<JobData>> = reqs
+        .iter()
+        .zip(&jobs)
+        .map(|(r, job)| (shared.verify || r.request.self_check).then(|| job.clone()))
+        .collect();
+    let mut results = engine.sort_batch(jobs);
     debug_assert_eq!(results.len(), batch_size, "engine must answer every job");
+    for (req, result) in reqs.iter().zip(results.iter_mut()) {
+        if req.request.descending {
+            if let Ok(job) = result {
+                job.reverse();
+            }
+        }
+    }
     let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
     let metrics = &shared.metrics;
     metrics.observe_ms("engine_batch", service_ms);
@@ -367,16 +385,17 @@ fn execute_batch(
                 .as_secs_f64()
                 * 1e3;
             metrics.observe_ms("queue_delay", queue_ms);
-            let outcome = result.and_then(|keys| {
-                if let Some(inputs) = &inputs {
-                    engine::verify_outcome(&inputs[i], &keys)?;
+            let outcome = result.and_then(|job| {
+                if let Some(input) = &inputs[i] {
+                    engine::verify_outcome(input, &job, req.request.descending)?;
                 }
                 metrics.incr("requests_completed", 1);
-                metrics.incr("keys_sorted", keys.len() as u64);
-                Ok(SortOutcome {
+                metrics.incr("keys_sorted", job.keys.len() as u64);
+                Ok(SortResponse {
                     id: req.id,
-                    keys,
-                    tag: req.job.tag,
+                    keys: job.keys,
+                    payload: job.payload,
+                    tag: req.request.tag,
                     engine: engine.kind(),
                     worker,
                     batch_size,
@@ -396,7 +415,8 @@ fn execute_batch(
 mod tests {
     use super::*;
     use crate::config::EngineKind;
-    use crate::coordinator::request::{PendingRequest, SortJob};
+    use crate::coordinator::request::{PendingRequest, SortRequest};
+    use crate::KeyData;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     struct CountingEngine;
@@ -404,23 +424,25 @@ mod tests {
         fn kind(&self) -> EngineKind {
             EngineKind::Native
         }
-        fn sort_batch(&mut self, jobs: Vec<Vec<crate::Key>>) -> Vec<Result<Vec<crate::Key>>> {
+        fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
             jobs.into_iter()
-                .map(|mut k| {
-                    k.sort_unstable();
-                    Ok(k)
+                .map(|mut j| {
+                    if let KeyData::U32(v) = &mut j.keys {
+                        v.sort_unstable();
+                    }
+                    Ok(j)
                 })
                 .collect()
         }
     }
 
-    fn batch_of(keys: Vec<crate::Key>) -> (Batch, mpsc::Receiver<Result<SortOutcome>>) {
+    fn batch_of(keys: Vec<u32>) -> (Batch, mpsc::Receiver<Result<SortResponse>>) {
         let (tx, rx) = mpsc::channel();
         let n = keys.len();
         let batch = Batch {
             requests: vec![PendingRequest {
                 id: 1,
-                job: SortJob::new(keys),
+                request: SortRequest::new(keys),
                 admitted_at: Instant::now(),
                 respond_to: tx,
             }],
@@ -464,7 +486,7 @@ mod tests {
         scheduler.shutdown();
         for (i, rx) in rxs {
             let out = rx.recv().unwrap().unwrap();
-            assert_eq!(out.keys, vec![1, 2, 3 + i]);
+            assert_eq!(out.keys_u32(), &[1, 2, 3 + i]);
             assert!(out.worker < 3);
             assert_eq!(out.batch_size, 1);
         }
@@ -490,10 +512,7 @@ mod tests {
             fn kind(&self) -> EngineKind {
                 EngineKind::Native
             }
-            fn sort_batch(
-                &mut self,
-                jobs: Vec<Vec<crate::Key>>,
-            ) -> Vec<Result<Vec<crate::Key>>> {
+            fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
                 let (lock, cv) = &*self.0;
                 let mut released = lock.lock().unwrap();
                 while !*released {
@@ -558,7 +577,7 @@ mod tests {
             fn kind(&self) -> EngineKind {
                 EngineKind::Native
             }
-            fn sort_batch(&mut self, _jobs: Vec<Vec<crate::Key>>) -> Vec<Result<Vec<crate::Key>>> {
+            fn sort_batch(&mut self, _jobs: Vec<JobData>) -> Vec<Result<JobData>> {
                 panic!("engine crashed");
             }
         }

@@ -32,7 +32,7 @@
 
 use super::batcher::Batcher;
 use super::engine::{self, SortEngine};
-use super::request::{Batch, PendingRequest, SortJob, SortOutcome};
+use super::request::{Batch, PendingRequest, SortRequest, SortResponse};
 use super::scheduler::{DispatchError, Scheduler, WorkerEngineFactory};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
@@ -76,20 +76,20 @@ pub struct SortClient {
 }
 
 impl SortClient {
-    /// Submit a job and block until its outcome arrives.
-    pub fn sort(&self, job: SortJob) -> Result<SortOutcome> {
-        let rx = self.submit(job)?;
+    /// Submit a request and block until its response arrives.
+    pub fn sort(&self, request: SortRequest) -> Result<SortResponse> {
+        let rx = self.submit(request)?;
         rx.recv()
             .map_err(|_| Error::Coordinator("request dropped during shutdown".into()))?
     }
 
     /// Submit without blocking; returns the response channel.
-    pub fn submit(&self, job: SortJob) -> Result<Receiver<Result<SortOutcome>>> {
+    pub fn submit(&self, request: SortRequest) -> Result<Receiver<Result<SortResponse>>> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = PendingRequest {
             id,
-            job,
+            request,
             admitted_at: Instant::now(),
             respond_to: tx,
         };
@@ -100,9 +100,13 @@ impl SortClient {
         Ok(rx)
     }
 
-    /// Convenience: sort a plain key vector.
+    /// Convenience: sort a plain `u32` key vector (the classic path).
     pub fn sort_keys(&self, keys: Vec<crate::Key>) -> Result<Vec<crate::Key>> {
-        Ok(self.sort(SortJob::new(keys))?.keys)
+        Ok(self
+            .sort(SortRequest::new(keys))?
+            .keys
+            .into_u32()
+            .expect("u32 request returns u32 keys"))
     }
 
     /// Snapshot of the service metrics.
@@ -282,12 +286,22 @@ fn intake_loop(
             Some(ClientMsg::Submit(req)) => {
                 metrics.incr("requests_received", 1);
                 metrics.incr("keys_received", req.len() as u64);
+                if let Err(e) = req.request.validate() {
+                    // Malformed requests (payload/key length mismatch)
+                    // are rejected before admission.
+                    metrics.incr("requests_rejected", 1);
+                    let _ = req.respond_to.send(Err(e));
+                    continue;
+                }
                 if req.is_empty() {
-                    // Zero-key jobs complete immediately (no engine trip).
-                    let outcome = SortOutcome {
+                    // Zero-key jobs complete immediately (no engine
+                    // trip), echoing the request's key type and
+                    // (empty) payload.
+                    let outcome = SortResponse {
                         id: req.id,
-                        keys: Vec::new(),
-                        tag: req.job.tag,
+                        keys: req.request.keys,
+                        payload: req.request.payload,
+                        tag: req.request.tag,
                         engine: crate::config::EngineKind::Native,
                         worker: 0,
                         batch_size: 0,

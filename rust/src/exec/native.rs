@@ -18,8 +18,9 @@
 //! work stealing.
 
 use crate::error::Result;
+use crate::key::{tag_records, untag_records, Record};
 use crate::util::pool;
-use crate::Key;
+use crate::SortKey;
 use std::time::Instant;
 
 /// Parameters of the native engine.
@@ -131,8 +132,8 @@ impl NativeEngine {
         self.workers
     }
 
-    /// Sort `keys` in place.
-    pub fn sort(&self, keys: &mut [Key]) -> NativeReport {
+    /// Sort `keys` in place (any [`SortKey`]; ordering by key bits).
+    pub fn sort<K: SortKey>(&self, keys: &mut [K]) -> NativeReport {
         let n = keys.len();
         let start = Instant::now();
         // With one worker the PSRS machinery is pure overhead (an extra
@@ -140,7 +141,7 @@ impl NativeEngine {
         // sort (§Perf).
         if n <= self.params.sequential_cutoff || self.workers <= 1 {
             let t0 = Instant::now();
-            keys.sort_unstable();
+            keys.sort_unstable_by(K::key_cmp);
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             return NativeReport {
                 n,
@@ -161,7 +162,23 @@ impl NativeEngine {
         }
     }
 
-    fn sort_parallel(&self, keys: &mut [Key]) -> NativeReport {
+    /// Sort a key–value job: `keys` in place, `payload` permuted so
+    /// `payload[i]` still belongs to `keys[i]`. Runs the PSRS engine
+    /// over [`Record`]s — stable (ties break by original position) and
+    /// byte-deterministic for any worker count.
+    pub fn sort_pairs<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        payload: &mut Vec<u64>,
+    ) -> Result<NativeReport> {
+        crate::key::validate_key_value(keys.len(), payload.len())?;
+        let mut recs: Vec<Record<K>> = tag_records(keys)?;
+        let report = self.sort(&mut recs);
+        untag_records(&recs, keys, payload);
+        Ok(report)
+    }
+
+    fn sort_parallel<K: SortKey>(&self, keys: &mut [K]) -> NativeReport {
         let n = keys.len();
         let workers = self.workers;
         let chunks = workers;
@@ -172,34 +189,36 @@ impl NativeEngine {
 
         // Steps 1–2: parallel chunk sorts.
         let t0 = Instant::now();
-        pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| c.sort_unstable());
+        pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| {
+            c.sort_unstable_by(K::key_cmp)
+        });
         phases.local_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         // Steps 3–5: s regular samples per chunk → buckets−1 splitters.
         // (Sampling touches only s·m keys — sequential is cheapest.)
         let t0 = Instant::now();
-        let mut samples: Vec<Key> = keys
+        let mut samples: Vec<K> = keys
             .chunks(chunk_len)
             .flat_map(|c| {
                 let stride = (c.len() / s).max(1);
                 (0..s).filter_map(move |p| c.get(((p + 1) * stride).saturating_sub(1)).copied())
             })
             .collect();
-        samples.sort_unstable();
-        let splitters: Vec<Key> = (1..buckets)
+        samples.sort_unstable_by(K::key_cmp);
+        let splitters: Vec<K> = (1..buckets)
             .map(|j| samples[(j * samples.len() / buckets).min(samples.len() - 1)])
             .collect();
         phases.sampling_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         // Steps 6–7: per-chunk boundaries, then the column-major prefix.
         let t0 = Instant::now();
-        let read_keys: &[Key] = keys;
-        let chunk_refs: Vec<&[Key]> = read_keys.chunks(chunk_len).collect();
+        let read_keys: &[K] = keys;
+        let chunk_refs: Vec<&[K]> = read_keys.chunks(chunk_len).collect();
         let chunk_bounds: Vec<Vec<usize>> = pool::parallel_map(chunk_refs, workers, |c| {
             let mut b = Vec::with_capacity(buckets + 1);
             b.push(0);
-            for &sp in &splitters {
-                b.push(c.partition_point(|&x| x < sp));
+            for sp in &splitters {
+                b.push(c.partition_point(|x| x.key_lt(sp)));
             }
             b.push(c.len());
             b
@@ -228,17 +247,17 @@ impl NativeEngine {
         // gathering its segments from every chunk into a disjoint
         // output slice.
         let t0 = Instant::now();
-        let mut out = vec![0 as Key; n];
+        let mut out = vec![K::PAD; n];
         {
-            let mut slices: Vec<&mut [Key]> = Vec::with_capacity(buckets);
-            let mut rest: &mut [Key] = &mut out;
+            let mut slices: Vec<&mut [K]> = Vec::with_capacity(buckets);
+            let mut rest: &mut [K] = &mut out;
             for j in 0..buckets {
                 let len = bucket_start[j + 1] - bucket_start[j];
                 let (head, tail) = rest.split_at_mut(len);
                 slices.push(head);
                 rest = tail;
             }
-            let src: &[Key] = keys;
+            let src: &[K] = keys;
             pool::parallel_slices_mut(slices, workers, |j, dst| {
                 let mut off = 0usize;
                 for (i, cb) in chunk_bounds.iter().enumerate() {
@@ -257,15 +276,15 @@ impl NativeEngine {
         // Step 9: parallel bucket sorts over disjoint output slices.
         let t0 = Instant::now();
         {
-            let mut slices: Vec<&mut [Key]> = Vec::with_capacity(buckets);
-            let mut rest: &mut [Key] = &mut out;
+            let mut slices: Vec<&mut [K]> = Vec::with_capacity(buckets);
+            let mut rest: &mut [K] = &mut out;
             for j in 0..buckets {
                 let len = bucket_start[j + 1] - bucket_start[j];
                 let (head, tail) = rest.split_at_mut(len);
                 slices.push(head);
                 rest = tail;
             }
-            pool::parallel_slices_mut(slices, workers, |_, b| b.sort_unstable());
+            pool::parallel_slices_mut(slices, workers, |_, b| b.sort_unstable_by(K::key_cmp));
         }
         phases.bucket_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -289,7 +308,7 @@ impl NativeEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::{is_sorted, is_sorted_permutation};
+    use crate::{is_sorted, is_sorted_permutation, Key};
 
     fn engine() -> NativeEngine {
         NativeEngine::new(NativeParams {
@@ -346,6 +365,46 @@ mod tests {
         assert!(r.wall_ms >= r.phases.total_ms() * 0.5);
         assert!(r.rate_mkeys_s() > 0.0);
         assert!(r.buckets >= 2);
+    }
+
+    #[test]
+    fn sorts_typed_keys_and_pairs() {
+        let e = engine();
+        // i64 negatives through the parallel PSRS path.
+        let input: Vec<i64> = (0..300_000i64).map(|x| (x * 2654435761) - (1i64 << 40)).collect();
+        let mut keys = input.clone();
+        e.sort(&mut keys);
+        assert!(is_sorted_permutation(&input, &keys));
+
+        // f32 with NaNs: total order, NaNs sort last.
+        let mut finput: Vec<f32> = (0..200_000u32)
+            .map(|x| x.wrapping_mul(2654435761) as f32 - 2e9)
+            .collect();
+        finput[3] = f32::NAN;
+        finput[100_001] = f32::NAN;
+        let mut fkeys = finput.clone();
+        e.sort(&mut fkeys);
+        assert!(is_sorted_permutation(&finput, &fkeys));
+
+        // Key–value: payload tracks its key, stably, through the
+        // parallel path.
+        let kin: Vec<u32> = (0..150_000u32).map(|x| x.wrapping_mul(2654435761) % 1024).collect();
+        let pin: Vec<u64> = (0..kin.len() as u64).collect();
+        let mut kout = kin.clone();
+        let mut pout = pin.clone();
+        e.sort_pairs(&mut kout, &mut pout).unwrap();
+        assert!(is_sorted_permutation(&kin, &kout));
+        for (k, p) in kout.iter().zip(&pout) {
+            assert_eq!(kin[*p as usize], *k, "payload divorced from key");
+        }
+        for (w, pw) in kout.windows(2).zip(pout.windows(2)) {
+            if w[0] == w[1] {
+                assert!(pw[0] < pw[1], "unstable at key {}", w[0]);
+            }
+        }
+        // Mismatched payload length is rejected.
+        let mut bad = vec![0u64; 3];
+        assert!(e.sort_pairs(&mut kout, &mut bad).is_err());
     }
 
     #[test]

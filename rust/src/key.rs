@@ -1,0 +1,680 @@
+//! Typed sort keys — the comparison-based surface of the paper, made
+//! explicit.
+//!
+//! Deterministic sample sort is *comparison-based*: unlike the radix
+//! baseline, nothing in Algorithm 1 depends on keys being 32-bit
+//! unsigned integers. This module carries that property into the API:
+//!
+//! * [`SortKey`] — an order-preserving bijection between a key type and
+//!   its unsigned bit pattern, with per-type width and padding sentinel.
+//!   Implemented for `u32`, `u64`, `i32`, `i64` and `f32` (IEEE-754
+//!   total order, NaN-safe).
+//! * [`Record`] — a key plus a 32-bit payload slot index. `Record<K>`
+//!   itself implements [`SortKey`], which is how the key–value path
+//!   works: Steps 2–9 of Algorithm 1 run unchanged over records, the
+//!   rank/relocation machinery (Steps 6–8) carries the payload index
+//!   alongside the key, and the caller permutes the payload array by
+//!   the surviving indices afterwards.
+//! * [`KeyType`] / [`KeyData`] — the runtime (request-level) twins of
+//!   the compile-time trait, used by the service request path and the
+//!   CLI where the key type is chosen by the client, not the program.
+//!
+//! Every sorting routine in this crate orders keys by
+//! [`SortKey::to_bits`]. Because the bijection is order-preserving,
+//! sorting bit patterns *is* sorting keys — and the bit domain gives a
+//! total order even where the source type has none (`f32`: `-NaN <
+//! -inf < … < -0.0 < +0.0 < … < +inf < +NaN`).
+
+use std::cmp::Ordering;
+
+/// An order-preserving bijection between a key type and unsigned bits.
+///
+/// Laws (checked by `rust/tests/prop_sortkey.rs`):
+/// * **round-trip**: `from_bits(to_bits(k))` is bit-identical to `k`
+///   (for `f32`, NaN payloads and `-0.0` survive);
+/// * **order preservation**: `a` sorts before `b` iff
+///   `a.to_bits() < b.to_bits()`;
+/// * **sentinel maximality**: `PAD.to_bits()` is the maximum of the bit
+///   domain, so padding always sorts last.
+///
+/// # The padding sentinel and the fixed-shape (XLA) pipeline
+///
+/// [`SortKey::PAD`] is the key whose bit pattern is the domain maximum.
+/// The native and simulated pipelines use it only for *internal*
+/// padding (tile alignment, power-of-two bitonic networks), where real
+/// keys equal to `PAD` are harmless — padding is sliced off by position,
+/// not by value.
+///
+/// The **fixed-shape AOT (XLA/PJRT) pipeline is stricter**: it pads
+/// inputs up to a compiled capacity with `PAD` and truncates after the
+/// sort, so an *input* containing `PAD` is indistinguishable from
+/// padding and is rejected up front (`u32::MAX` for the classic `u32`
+/// artifacts). This restriction is a property of the fixed-shape
+/// execution model, not of the algorithm; it lives here, at the trait,
+/// so every key type documents its own reserved value
+/// (`<K as SortKey>::PAD`).
+pub trait SortKey: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    /// The unsigned bit-pattern type the key maps onto. Only `Ord` is
+    /// required — tuples work, which is what lets [`Record`] reuse the
+    /// whole machinery.
+    type Bits: Copy + Ord + Send + Sync + std::fmt::Debug;
+
+    /// Bytes one key occupies on the (simulated) device. The ledger's
+    /// traffic and memory accounting scales with this — a `u64` sort
+    /// moves twice the bytes of a `u32` sort of the same length.
+    const WIDTH_BYTES: usize;
+
+    /// The padding sentinel: the key whose bits are the domain maximum
+    /// (sorts after every other key). See the trait docs for the
+    /// fixed-shape pipeline's reservation of this value.
+    const PAD: Self;
+
+    /// The order-preserving map to bits.
+    fn to_bits(self) -> Self::Bits;
+
+    /// Inverse of [`SortKey::to_bits`].
+    fn from_bits(bits: Self::Bits) -> Self;
+
+    /// Build a key from a raw `u64` draw: the low `WIDTH_BYTES · 8`
+    /// bits are taken as a position in the total order (workload
+    /// generators use this so one distribution definition covers every
+    /// key type).
+    fn from_raw_bits(raw: u64) -> Self;
+
+    /// Total-order comparison (by bits).
+    #[inline]
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        self.to_bits().cmp(&other.to_bits())
+    }
+
+    /// `self <= other` under the total order.
+    #[inline]
+    fn key_le(&self, other: &Self) -> bool {
+        self.to_bits() <= other.to_bits()
+    }
+
+    /// `self < other` under the total order.
+    #[inline]
+    fn key_lt(&self, other: &Self) -> bool {
+        self.to_bits() < other.to_bits()
+    }
+}
+
+impl SortKey for u32 {
+    type Bits = u32;
+    const WIDTH_BYTES: usize = 4;
+    const PAD: Self = u32::MAX;
+
+    #[inline]
+    fn to_bits(self) -> u32 {
+        self
+    }
+
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        bits
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        raw as u32
+    }
+}
+
+impl SortKey for u64 {
+    type Bits = u64;
+    const WIDTH_BYTES: usize = 8;
+    const PAD: Self = u64::MAX;
+
+    #[inline]
+    fn to_bits(self) -> u64 {
+        self
+    }
+
+    #[inline]
+    fn from_bits(bits: u64) -> Self {
+        bits
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        raw
+    }
+}
+
+impl SortKey for i32 {
+    type Bits = u32;
+    const WIDTH_BYTES: usize = 4;
+    const PAD: Self = i32::MAX;
+
+    // Flipping the sign bit shifts the two's-complement number line so
+    // i32::MIN ↦ 0 and i32::MAX ↦ u32::MAX.
+    #[inline]
+    fn to_bits(self) -> u32 {
+        (self as u32) ^ 0x8000_0000
+    }
+
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        (bits ^ 0x8000_0000) as i32
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        Self::from_bits(raw as u32)
+    }
+}
+
+impl SortKey for i64 {
+    type Bits = u64;
+    const WIDTH_BYTES: usize = 8;
+    const PAD: Self = i64::MAX;
+
+    #[inline]
+    fn to_bits(self) -> u64 {
+        (self as u64) ^ (1u64 << 63)
+    }
+
+    #[inline]
+    fn from_bits(bits: u64) -> Self {
+        (bits ^ (1u64 << 63)) as i64
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        Self::from_bits(raw)
+    }
+}
+
+impl SortKey for f32 {
+    type Bits = u32;
+    const WIDTH_BYTES: usize = 4;
+    // from_bits(u32::MAX): the NaN with all-ones payload — the maximum
+    // of the IEEE-754 total order. (`f32::from_bits` is not a const fn
+    // on the MSRV, hence the transmute; the two are defined to agree.)
+    #[allow(clippy::transmute_int_to_float)]
+    const PAD: Self = unsafe { std::mem::transmute::<u32, f32>(0x7FFF_FFFF) };
+
+    // The classic IEEE-754 total-order trick: non-negative floats get
+    // the sign bit set (shifting them above all negatives), negative
+    // floats are bitwise complemented (reversing their magnitude
+    // order). NaNs land at both extremes by sign, beyond the
+    // infinities.
+    #[inline]
+    fn to_bits(self) -> u32 {
+        let b = f32::to_bits(self);
+        if b & 0x8000_0000 != 0 {
+            !b
+        } else {
+            b | 0x8000_0000
+        }
+    }
+
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        f32::from_bits(if bits & 0x8000_0000 != 0 {
+            bits ^ 0x8000_0000
+        } else {
+            !bits
+        })
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        // NB: must name the trait — a bare `Self::from_bits` would
+        // resolve to the *inherent* `f32::from_bits` (raw IEEE
+        // reinterpret), which is not the order-preserving decode.
+        <Self as SortKey>::from_bits(raw as u32)
+    }
+}
+
+/// A key paired with a 32-bit payload slot index — the key–value record
+/// of the rank/relocation path.
+///
+/// `Record<K>` implements [`SortKey`] with bits `(key bits, index)`, so
+/// the full Algorithm-1 pipeline (and the native PSRS engine) runs over
+/// records unchanged: every comparison, splitter search and relocation
+/// carries the index along, and ties between equal keys break by
+/// original position. Two consequences:
+///
+/// * the record order is **total** (no ties at all), so key–value sorts
+///   are effectively *stable* and byte-deterministic for any worker
+///   count and any engine;
+/// * the index acts as the tie-breaking discipline that keeps the
+///   deterministic bucket-size bound meaningful even for
+///   duplicate-heavy inputs.
+///
+/// The 32-bit index bounds one key–value job at `u32::MAX` records —
+/// far above any simulated device's ceiling (512M keys).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Record<K> {
+    /// The sort key.
+    pub key: K,
+    /// Index of this record's payload slot in the caller's value array.
+    pub idx: u32,
+}
+
+impl<K: SortKey> SortKey for Record<K> {
+    type Bits = (K::Bits, u32);
+    const WIDTH_BYTES: usize = K::WIDTH_BYTES + 4;
+    const PAD: Self = Record {
+        key: K::PAD,
+        idx: u32::MAX,
+    };
+
+    #[inline]
+    fn to_bits(self) -> Self::Bits {
+        (self.key.to_bits(), self.idx)
+    }
+
+    #[inline]
+    fn from_bits(bits: Self::Bits) -> Self {
+        Record {
+            key: K::from_bits(bits.0),
+            idx: bits.1,
+        }
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        Record {
+            key: K::from_raw_bits(raw),
+            idx: 0,
+        }
+    }
+}
+
+/// The 32-bit record-index cap shared by every key–value entry point.
+fn check_record_cap(keys_len: usize) -> crate::error::Result<()> {
+    if keys_len as u64 > u32::MAX as u64 {
+        return Err(crate::error::Error::InvalidInput(format!(
+            "key–value jobs are limited to {} records, got {keys_len}",
+            u32::MAX,
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a key–value job's shape — the single definition every
+/// entry point (request validation and the engines' `sort_pairs`)
+/// shares: the payload pairs one-to-one with the keys, and the job
+/// fits the 32-bit record index space (see [`Record`]).
+pub fn validate_key_value(keys_len: usize, payload_len: usize) -> crate::error::Result<()> {
+    if payload_len != keys_len {
+        return Err(crate::error::Error::InvalidInput(format!(
+            "payload length {payload_len} does not match key count {keys_len}"
+        )));
+    }
+    check_record_cap(keys_len)
+}
+
+/// Attach payload slot indices `0..keys.len()` to a key slice.
+///
+/// Errors if the job exceeds the 32-bit index space (see [`Record`]).
+pub fn tag_records<K: SortKey>(keys: &[K]) -> crate::error::Result<Vec<Record<K>>> {
+    check_record_cap(keys.len())?;
+    Ok(keys
+        .iter()
+        .zip(0u32..)
+        .map(|(&key, idx)| Record { key, idx })
+        .collect())
+}
+
+/// Write sorted records back: keys in record order, payload permuted by
+/// the surviving indices.
+pub fn untag_records<K: SortKey>(recs: &[Record<K>], keys: &mut [K], payload: &mut Vec<u64>) {
+    debug_assert_eq!(recs.len(), keys.len());
+    debug_assert_eq!(recs.len(), payload.len());
+    let permuted: Vec<u64> = recs.iter().map(|r| payload[r.idx as usize]).collect();
+    for (k, r) in keys.iter_mut().zip(recs) {
+        *k = r.key;
+    }
+    *payload = permuted;
+}
+
+/// The key types a client can request — the runtime twin of the
+/// [`SortKey`] impl set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KeyType {
+    /// 32-bit unsigned — the paper's key type and the classic path.
+    U32,
+    /// 64-bit unsigned.
+    U64,
+    /// 32-bit signed.
+    I32,
+    /// 64-bit signed.
+    I64,
+    /// IEEE-754 single precision, sorted by total order (NaN-safe).
+    F32,
+}
+
+impl KeyType {
+    /// Every supported key type, classic `u32` first.
+    pub const ALL: [KeyType; 5] = [
+        KeyType::U32,
+        KeyType::U64,
+        KeyType::I32,
+        KeyType::I64,
+        KeyType::F32,
+    ];
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<KeyType> {
+        match s.to_ascii_lowercase().as_str() {
+            "u32" | "uint32" => Some(KeyType::U32),
+            "u64" | "uint64" => Some(KeyType::U64),
+            "i32" | "int32" => Some(KeyType::I32),
+            "i64" | "int64" => Some(KeyType::I64),
+            "f32" | "float32" | "float" => Some(KeyType::F32),
+            _ => None,
+        }
+    }
+
+    /// Stable identifier (CLI/CSV/JSON).
+    pub fn id(&self) -> &'static str {
+        match self {
+            KeyType::U32 => "u32",
+            KeyType::U64 => "u64",
+            KeyType::I32 => "i32",
+            KeyType::I64 => "i64",
+            KeyType::F32 => "f32",
+        }
+    }
+
+    /// Bytes per key of this type.
+    pub fn width_bytes(&self) -> usize {
+        match self {
+            KeyType::U32 => <u32 as SortKey>::WIDTH_BYTES,
+            KeyType::U64 => <u64 as SortKey>::WIDTH_BYTES,
+            KeyType::I32 => <i32 as SortKey>::WIDTH_BYTES,
+            KeyType::I64 => <i64 as SortKey>::WIDTH_BYTES,
+            KeyType::F32 => <f32 as SortKey>::WIDTH_BYTES,
+        }
+    }
+}
+
+impl std::fmt::Display for KeyType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// A typed key vector — the request-level carrier that erases the
+/// [`SortKey`] type parameter at the service boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KeyData {
+    /// `u32` keys (the classic path; byte-identical to the pre-typed
+    /// API).
+    U32(Vec<u32>),
+    /// `u64` keys.
+    U64(Vec<u64>),
+    /// `i32` keys.
+    I32(Vec<i32>),
+    /// `i64` keys.
+    I64(Vec<i64>),
+    /// `f32` keys (total order; may contain NaNs).
+    F32(Vec<f32>),
+}
+
+impl Default for KeyData {
+    fn default() -> Self {
+        KeyData::U32(Vec::new())
+    }
+}
+
+/// Dispatch a generic expression over the concrete vector inside a
+/// [`KeyData`] (mutable borrow). Each arm monomorphizes `$body` at the
+/// arm's key type, so `$body` may call functions generic over
+/// [`SortKey`].
+macro_rules! for_each_key_vec_mut {
+    ($data:expr, $v:ident => $body:expr) => {
+        match $data {
+            $crate::key::KeyData::U32(ref mut $v) => $body,
+            $crate::key::KeyData::U64(ref mut $v) => $body,
+            $crate::key::KeyData::I32(ref mut $v) => $body,
+            $crate::key::KeyData::I64(ref mut $v) => $body,
+            $crate::key::KeyData::F32(ref mut $v) => $body,
+        }
+    };
+}
+pub(crate) use for_each_key_vec_mut;
+
+/// Immutable twin of [`for_each_key_vec_mut`].
+macro_rules! for_each_key_vec {
+    ($data:expr, $v:ident => $body:expr) => {
+        match $data {
+            $crate::key::KeyData::U32(ref $v) => $body,
+            $crate::key::KeyData::U64(ref $v) => $body,
+            $crate::key::KeyData::I32(ref $v) => $body,
+            $crate::key::KeyData::I64(ref $v) => $body,
+            $crate::key::KeyData::F32(ref $v) => $body,
+        }
+    };
+}
+pub(crate) use for_each_key_vec;
+
+impl KeyData {
+    /// The runtime key type tag.
+    pub fn key_type(&self) -> KeyType {
+        match self {
+            KeyData::U32(_) => KeyType::U32,
+            KeyData::U64(_) => KeyType::U64,
+            KeyData::I32(_) => KeyType::I32,
+            KeyData::I64(_) => KeyType::I64,
+            KeyData::F32(_) => KeyType::F32,
+        }
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        for_each_key_vec!(self, v => v.len())
+    }
+
+    /// True when there are no keys.
+    pub fn is_empty(&self) -> bool {
+        for_each_key_vec!(self, v => v.is_empty())
+    }
+
+    /// Bytes per key.
+    pub fn width_bytes(&self) -> usize {
+        self.key_type().width_bytes()
+    }
+
+    /// Total key bytes (`len · width`).
+    pub fn total_bytes(&self) -> usize {
+        self.len() * self.width_bytes()
+    }
+
+    /// Reverse the keys in place (ascending ↔ descending).
+    pub fn reverse(&mut self) {
+        for_each_key_vec_mut!(self, v => v.reverse());
+    }
+
+    /// True when the keys are sorted under the total order, in the
+    /// given direction.
+    pub fn is_sorted(&self, descending: bool) -> bool {
+        fn check<K: SortKey>(v: &[K], descending: bool) -> bool {
+            if descending {
+                v.windows(2).all(|w| w[1].key_le(&w[0]))
+            } else {
+                v.windows(2).all(|w| w[0].key_le(&w[1]))
+            }
+        }
+        for_each_key_vec!(self, v => check(v, descending))
+    }
+
+    /// Borrow the classic `u32` key vector, if that is the type held.
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        match self {
+            KeyData::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Take ownership of the classic `u32` key vector, if held.
+    pub fn into_u32(self) -> Option<Vec<u32>> {
+        match self {
+            KeyData::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl From<Vec<u32>> for KeyData {
+    fn from(v: Vec<u32>) -> Self {
+        KeyData::U32(v)
+    }
+}
+
+impl From<Vec<u64>> for KeyData {
+    fn from(v: Vec<u64>) -> Self {
+        KeyData::U64(v)
+    }
+}
+
+impl From<Vec<i32>> for KeyData {
+    fn from(v: Vec<i32>) -> Self {
+        KeyData::I32(v)
+    }
+}
+
+impl From<Vec<i64>> for KeyData {
+    fn from(v: Vec<i64>) -> Self {
+        KeyData::I64(v)
+    }
+}
+
+impl From<Vec<f32>> for KeyData {
+    fn from(v: Vec<f32>) -> Self {
+        KeyData::F32(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u32_bits_are_identity() {
+        for x in [0u32, 1, 0xDEAD_BEEF, u32::MAX] {
+            assert_eq!(x.to_bits(), x);
+            assert_eq!(u32::from_bits(x), x);
+        }
+        assert_eq!(<u32 as SortKey>::PAD, u32::MAX);
+    }
+
+    #[test]
+    fn signed_bits_preserve_order() {
+        let seq = [i32::MIN, -7, -1, 0, 1, 42, i32::MAX];
+        for w in seq.windows(2) {
+            assert!(w[0].to_bits() < w[1].to_bits(), "{w:?}");
+            assert_eq!(i32::from_bits(w[0].to_bits()), w[0]);
+        }
+        let seq64 = [i64::MIN, -(1i64 << 40), -1, 0, 1i64 << 40, i64::MAX];
+        for w in seq64.windows(2) {
+            assert!(w[0].to_bits() < w[1].to_bits(), "{w:?}");
+            assert_eq!(i64::from_bits(w[0].to_bits()), w[0]);
+        }
+    }
+
+    #[test]
+    fn f32_total_order() {
+        // NB: `f32` has *inherent* `to_bits`/`from_bits` (raw IEEE
+        // bits) that shadow the trait methods on the concrete type —
+        // qualify the trait explicitly here. Generic `K: SortKey` code
+        // has no such ambiguity.
+        let seq = [
+            f32::NEG_INFINITY,
+            -1.0e30f32,
+            -1.0,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            1.0,
+            f32::INFINITY,
+            f32::NAN,
+        ];
+        for w in seq.windows(2) {
+            assert!(
+                SortKey::to_bits(w[0]) < SortKey::to_bits(w[1]),
+                "{w:?}"
+            );
+            assert!(w[0].key_lt(&w[1]), "{w:?}");
+        }
+        // PAD is the domain maximum and round-trips bit-identically.
+        assert_eq!(SortKey::to_bits(<f32 as SortKey>::PAD), u32::MAX);
+        let nan = f32::NAN;
+        let roundtrip = <f32 as SortKey>::from_bits(SortKey::to_bits(nan));
+        assert_eq!(f32::to_bits(roundtrip), f32::to_bits(nan));
+    }
+
+    #[test]
+    fn record_orders_by_key_then_index() {
+        let a = Record { key: 5u32, idx: 0 };
+        let b = Record { key: 5u32, idx: 1 };
+        let c = Record { key: 6u32, idx: 0 };
+        assert!(a.key_lt(&b) && b.key_lt(&c));
+        assert_eq!(<Record<u32> as SortKey>::WIDTH_BYTES, 8);
+        let pad = <Record<u32> as SortKey>::PAD;
+        assert!(b.key_lt(&pad));
+    }
+
+    #[test]
+    fn tag_untag_roundtrip() {
+        let keys = vec![30u32, 10, 20];
+        let mut recs = tag_records(&keys).unwrap();
+        recs.sort_unstable_by(<Record<u32>>::key_cmp);
+        let mut out = keys.clone();
+        let mut payload = vec![300u64, 100, 200];
+        untag_records(&recs, &mut out, &mut payload);
+        assert_eq!(out, vec![10, 20, 30]);
+        assert_eq!(payload, vec![100, 200, 300]);
+    }
+
+    #[test]
+    fn key_type_parse_roundtrip() {
+        for kt in KeyType::ALL {
+            assert_eq!(KeyType::parse(kt.id()), Some(kt));
+        }
+        assert_eq!(KeyType::parse("float"), Some(KeyType::F32));
+        assert_eq!(KeyType::parse("u8"), None);
+    }
+
+    #[test]
+    fn key_data_accessors() {
+        let mut d = KeyData::from(vec![3u32, 1, 2]);
+        assert_eq!(d.key_type(), KeyType::U32);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.width_bytes(), 4);
+        assert_eq!(d.total_bytes(), 12);
+        assert!(!d.is_sorted(false));
+        d = KeyData::from(vec![1u32, 2, 3]);
+        assert!(d.is_sorted(false));
+        d.reverse();
+        assert!(d.is_sorted(true));
+        assert_eq!(d.as_u32(), Some(&[3u32, 2, 1][..]));
+        assert_eq!(d.into_u32(), Some(vec![3, 2, 1]));
+        let wide = KeyData::from(vec![1u64, 2]);
+        assert_eq!(wide.width_bytes(), 8);
+        assert!(wide.as_u32().is_none());
+        assert!(KeyData::default().is_empty());
+    }
+
+    #[test]
+    fn from_raw_bits_is_order_preserving() {
+        // Raw draws in increasing order map to keys in increasing
+        // total order, for every type (low 32 bits for 4-byte keys).
+        let raws = [0u64, 1, 0x7FFF_FFFF, 0x8000_0000, 0xFFFF_FFFE];
+        fn check<K: SortKey>(raws: &[u64]) {
+            for w in raws.windows(2) {
+                let (a, b) = (K::from_raw_bits(w[0]), K::from_raw_bits(w[1]));
+                assert!(a.key_lt(&b), "{a:?} !< {b:?}");
+            }
+        }
+        check::<u32>(&raws);
+        check::<u64>(&raws);
+        check::<i32>(&raws);
+        check::<i64>(&raws);
+        check::<f32>(&raws);
+    }
+}

@@ -1,7 +1,7 @@
 //! # GPU Bucket Sort — Deterministic Sample Sort For GPUs
 //!
-//! A full reproduction of *Dehne & Zaboli, "Deterministic Sample Sort For
-//! GPUs" (2010)* as a three-layer Rust + JAX + Pallas stack:
+//! A full reproduction of *Dehne & Zaboli, "Deterministic Sample Sort
+//! For GPUs" (2010)* as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the sort *service*: request router, dynamic
 //!   batcher, phase scheduler over a pool of "virtual SMs", a PJRT runtime
@@ -25,6 +25,14 @@
 //! removes the single-device memory ceilings of Figures 6 & 7 (≥ 512M
 //! keys over a 4-device pool). It serves requests as the coordinator's
 //! `sharded` engine.
+//!
+//! Sorting is **typed**: the comparison-based algorithms are generic
+//! over [`SortKey`] (`u32`, `u64`, `i32`, `i64`, `f32` under IEEE-754
+//! total order) and carry optional key–value payloads through the
+//! rank/relocation machinery via [`Record`]; see [`key`] and the
+//! coordinator's `SortRequest` builder. The classic `u32`, key-only
+//! path is the `SortKey` special case with identity bit mapping and is
+//! byte-identical to the pre-typed API.
 //!
 //! The full request path (client → batcher → multi-worker scheduler →
 //! engines → sim ledger → cost model), the Execute vs. Analytic
@@ -52,6 +60,7 @@ pub mod coordinator;
 pub mod error;
 pub mod exec;
 pub mod experiments;
+pub mod key;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;
@@ -59,30 +68,39 @@ pub mod util;
 pub mod workload;
 
 pub use error::{Error, Result};
+pub use key::{KeyData, KeyType, Record, SortKey};
 
-/// The key type the paper sorts: 32-bit keys (the paper's experiments use
-/// 4-byte data items). `u32::MAX` is reserved as a padding sentinel by the
-/// fixed-shape (XLA) pipeline; the native pipelines have no such
-/// restriction.
+/// The paper's key type (32-bit keys, 4-byte data items) — kept as the
+/// classic alias of the typed [`SortKey`] surface. New code should be
+/// generic over [`SortKey`] or carry a [`KeyData`]; `Key` remains for
+/// the u32-only baselines (radix, Thrust Merge) and the fixed-shape
+/// artifact path. The padding-sentinel reservation formerly documented
+/// here lives at [`SortKey::PAD`].
 pub type Key = u32;
 
-/// Bytes per key, used throughout the memory/traffic accounting.
+/// Bytes per `u32` key — the classic width. Width-sensitive accounting
+/// now flows from [`SortKey::WIDTH_BYTES`] (`KEY_BYTES` equals
+/// `<Key as SortKey>::WIDTH_BYTES` and remains for the u32-only paths).
 pub const KEY_BYTES: usize = std::mem::size_of::<Key>();
 
-/// Check that a slice is sorted in non-decreasing order.
-pub fn is_sorted(keys: &[Key]) -> bool {
-    keys.windows(2).all(|w| w[0] <= w[1])
+/// Check that a slice is sorted in non-decreasing order under the
+/// key's total order.
+pub fn is_sorted<K: SortKey>(keys: &[K]) -> bool {
+    keys.windows(2).all(|w| w[0].key_le(&w[1]))
 }
 
 /// Verify `out` is a sorted permutation of `inp` (O(n log n), for tests
-/// and the service's optional self-check mode).
-pub fn is_sorted_permutation(inp: &[Key], out: &[Key]) -> bool {
+/// and the service's optional self-check mode). Permutation equality is
+/// checked on bit patterns, so `f32` NaN payloads must survive too.
+pub fn is_sorted_permutation<K: SortKey>(inp: &[K], out: &[K]) -> bool {
     if inp.len() != out.len() || !is_sorted(out) {
         return false;
     }
-    let mut a = inp.to_vec();
+    let mut a: Vec<K::Bits> = inp.iter().map(|k| k.to_bits()).collect();
+    let mut b: Vec<K::Bits> = out.iter().map(|k| k.to_bits()).collect();
     a.sort_unstable();
-    a == out
+    b.sort_unstable();
+    a == b
 }
 
 #[cfg(test)]
@@ -91,17 +109,30 @@ mod tests {
 
     #[test]
     fn sorted_detection() {
-        assert!(is_sorted(&[]));
-        assert!(is_sorted(&[1]));
-        assert!(is_sorted(&[1, 1, 2, 3]));
-        assert!(!is_sorted(&[2, 1]));
+        assert!(is_sorted::<u32>(&[]));
+        assert!(is_sorted::<u32>(&[1]));
+        assert!(is_sorted::<u32>(&[1, 1, 2, 3]));
+        assert!(!is_sorted::<u32>(&[2, 1]));
     }
 
     #[test]
     fn sorted_permutation_detection() {
-        assert!(is_sorted_permutation(&[3, 1, 2], &[1, 2, 3]));
-        assert!(!is_sorted_permutation(&[3, 1, 2], &[1, 2, 4]));
-        assert!(!is_sorted_permutation(&[3, 1], &[1, 2, 3]));
-        assert!(!is_sorted_permutation(&[3, 1, 2], &[3, 1, 2]));
+        assert!(is_sorted_permutation::<u32>(&[3, 1, 2], &[1, 2, 3]));
+        assert!(!is_sorted_permutation::<u32>(&[3, 1, 2], &[1, 2, 4]));
+        assert!(!is_sorted_permutation::<u32>(&[3, 1], &[1, 2, 3]));
+        assert!(!is_sorted_permutation::<u32>(&[3, 1, 2], &[3, 1, 2]));
+    }
+
+    #[test]
+    fn typed_sorted_detection() {
+        assert!(is_sorted(&[-3i64, -1, 0, 5]));
+        assert!(!is_sorted(&[0i32, -1]));
+        // f32 total order: -0.0 < +0.0 < NaN, and NaN sorts last.
+        assert!(is_sorted(&[-1.0f32, -0.0, 0.0, 1.0, f32::NAN]));
+        assert!(!is_sorted(&[f32::NAN, 0.0f32]));
+        assert!(is_sorted_permutation(
+            &[0.5f32, f32::NAN, -2.0],
+            &[-2.0f32, 0.5, f32::NAN]
+        ));
     }
 }

@@ -15,13 +15,13 @@
 use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
 use gpu_bucket_sort::algos::Algorithm;
 use gpu_bucket_sort::config::{EngineKind, ServiceConfig};
-use gpu_bucket_sort::coordinator::{SortJob, SortService};
+use gpu_bucket_sort::coordinator::{build_engine, verify_outcome, JobData, SortRequest, SortService};
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
 use gpu_bucket_sort::experiments as exp;
 use gpu_bucket_sort::runtime::PjrtRuntime;
 use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::workload::Distribution;
-use gpu_bucket_sort::{is_sorted_permutation, Key};
+use gpu_bucket_sort::{is_sorted_permutation, Key, KeyType};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -62,20 +62,26 @@ fn run(args: &[String]) -> Result<(), String> {
 }
 
 fn print_usage() {
+    // Built from canonical_name() so help and parse() cannot drift.
+    let algos = Algorithm::ALL.map(Algorithm::canonical_name).join("|");
     println!(
         "gbs — Deterministic Sample Sort for GPUs (Dehne & Zaboli 2010) reproduction
 
 USAGE: gbs <command> [--flag value ...]
 
 COMMANDS
-  sort        --n 32M [--dist uniform] [--algo gbs|rss|thrust|radix]
+  sort        --n 32M [--dist uniform] [--algo {algos}]
               [--engine native|sim|pjrt|sharded] [--device gtx285]
               [--devices gtx285,tesla,gtx285-1g,gtx260] [--seed 1]
-              [--verify true] [--analytic true]
+              [--key-type u32|u64|i32|i64|f32] [--payload true]
+              [--descending true] [--verify true] [--analytic true]
               (sharded: shard across a multi-GPU pool; --analytic prices
-               paper-scale n, e.g. 768M over 4 devices, without data)
+               paper-scale n, e.g. 768M over 4 devices, without data;
+               --key-type/--payload/--descending route through the typed
+               engine path — f32 sorts by IEEE-754 total order, NaN-safe)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
               [--engine native|sharded] [--workers 4] [--config file.json]
+              [--key-type u32] [--payload true] [--descending true]
               (--workers runs N engine instances concurrently; sharded
                engines lease disjoint device subsets per worker)
   experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all>
@@ -133,6 +139,18 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
     let engine = EngineKind::parse(flag(flags, "engine", "native")).ok_or("unknown engine")?;
     let verify = flag(flags, "verify", "true") == "true";
     let analytic = flag(flags, "analytic", "false") == "true";
+    let key_type = KeyType::parse(flag(flags, "key-type", "u32")).ok_or("unknown key type")?;
+    let payload = flag(flags, "payload", "false") == "true";
+    let descending = flag(flags, "descending", "false") == "true";
+
+    if key_type != KeyType::U32 || payload || descending {
+        if analytic {
+            return Err("--analytic supports the classic u32 key-only path only".into());
+        }
+        return cmd_sort_typed(
+            flags, n, dist, seed, engine, verify, key_type, payload, descending,
+        );
+    }
 
     if engine == EngineKind::Sharded {
         return cmd_sort_sharded(flags, n, dist, seed, verify, analytic);
@@ -262,6 +280,87 @@ fn cmd_sort_sharded(
     Ok(())
 }
 
+/// `gbs sort` with `--key-type`/`--payload`/`--descending`: the typed
+/// job path, served by whichever engine `--engine` selects through the
+/// same `SortEngine` surface the service uses.
+#[allow(clippy::too_many_arguments)]
+fn cmd_sort_typed(
+    flags: &HashMap<String, String>,
+    n: usize,
+    dist: Distribution,
+    seed: u64,
+    engine: EngineKind,
+    verify: bool,
+    key_type: KeyType,
+    payload: bool,
+    descending: bool,
+) -> Result<(), String> {
+    // The typed path serves the deterministic sample sort; the
+    // baselines (radix in particular) are u32-only, so an explicit
+    // --algo other than bucket-sort is an error, not silently ignored.
+    if let Some(a) = flags.get("algo") {
+        let algo = Algorithm::parse(a).ok_or("unknown algorithm")?;
+        if algo != Algorithm::BucketSort {
+            return Err(format!(
+                "--key-type/--payload/--descending serve {} only (the baselines are u32, key-only)",
+                Algorithm::BucketSort.canonical_name()
+            ));
+        }
+    }
+    let mut cfg = ServiceConfig {
+        engine,
+        ..ServiceConfig::default()
+    };
+    if let Some(d) = flags.get("device") {
+        cfg.device = GpuModel::parse(d).ok_or("unknown device")?;
+    }
+    if let Some(ds) = flags.get("devices") {
+        cfg.devices = DevicePool::parse_list(ds).ok_or("unknown device in --devices list")?;
+    }
+    if let Some(dir) = flags.get("artifacts-dir") {
+        cfg.artifacts_dir = dir.clone();
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+
+    println!(
+        "generating {n} {key_type} keys ({dist}){} …",
+        if payload { " with u64 payloads" } else { "" }
+    );
+    let keys = dist.generate_data(key_type, n, seed);
+    let job = JobData {
+        keys,
+        payload: payload.then(|| (0..n as u64).collect()),
+    };
+    let reference = job.clone();
+
+    let mut eng = build_engine(&cfg).map_err(|e| e.to_string())?;
+    let t0 = Instant::now();
+    let result = eng
+        .sort_batch(vec![job])
+        .pop()
+        .expect("engine answers every job");
+    let mut out = result.map_err(|e| e.to_string())?;
+    if descending {
+        out.reverse();
+    }
+    println!(
+        "typed sort ({key_type}, {}, {}): {:.2} ms host on the {} engine",
+        if payload { "key–value" } else { "key-only" },
+        if descending { "descending" } else { "ascending" },
+        t0.elapsed().as_secs_f64() * 1e3,
+        cfg.engine.id(),
+    );
+    if verify {
+        verify_outcome(&reference, &out, descending)
+            .map_err(|e| format!("verification FAILED: {e}"))?;
+        println!(
+            "  verified: sorted permutation{} ✓",
+            if payload { " + payload pairing" } else { "" }
+        );
+    }
+    Ok(())
+}
+
 fn check(input: &[Key], output: &[Key], verify: bool) -> Result<(), String> {
     if verify {
         if is_sorted_permutation(input, output) {
@@ -294,10 +393,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     let concurrency: usize = flag(flags, "concurrency", "8").parse().map_err(|e| format!("{e}"))?;
     let n = parse_size(flag(flags, "n", "1M"))?;
     let dist = Distribution::parse(flag(flags, "dist", "uniform")).ok_or("unknown distribution")?;
+    let key_type = KeyType::parse(flag(flags, "key-type", "u32")).ok_or("unknown key type")?;
+    let payload = flag(flags, "payload", "false") == "true";
+    let descending = flag(flags, "descending", "false") == "true";
 
     println!(
-        "service: engine={:?}, {} worker(s), {requests} requests × {n} keys ({dist}), {concurrency} client threads",
-        cfg.engine, cfg.workers
+        "service: engine={:?}, {} worker(s), {requests} requests × {n} {key_type} keys ({dist}{}{}), {concurrency} client threads",
+        cfg.engine,
+        cfg.workers,
+        if payload { ", key–value" } else { "" },
+        if descending { ", descending" } else { "" },
     );
     let client = SortService::start(cfg).map_err(|e| e.to_string())?;
     let t0 = Instant::now();
@@ -307,10 +412,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
             scope.spawn(move || {
                 for r in 0..requests / concurrency.max(1) {
                     let seed = (w * 1000 + r) as u64;
-                    let keys = dist.generate(n, seed);
-                    match client.sort(SortJob::new(keys)) {
+                    let keys = dist.generate_data(key_type, n, seed);
+                    let mut builder = SortRequest::builder(keys).descending(descending);
+                    if payload {
+                        builder = builder.payload((0..n as u64).collect());
+                    }
+                    let request = builder.build().expect("request is structurally valid");
+                    match client.sort(request) {
                         Ok(out) => {
-                            assert!(gpu_bucket_sort::is_sorted(&out.keys));
+                            assert!(out.keys.is_sorted(descending));
                         }
                         Err(e) => eprintln!("request failed: {e}"),
                     }

@@ -18,9 +18,14 @@
 
 use super::manifest::{ArtifactEntry, Manifest};
 use crate::error::{Error, Result};
-use crate::Key;
+use crate::{Key, SortKey};
 use std::collections::HashMap;
 use std::path::PathBuf;
+
+/// The fixed-shape pipeline's padding sentinel — the key type's own
+/// [`SortKey::PAD`] (`u32::MAX` for the classic artifacts); see the
+/// trait docs for why fixed-shape execution must reserve it.
+const PAD: Key = <Key as SortKey>::PAD;
 
 /// A PJRT CPU runtime holding compiled executables for the artifact set.
 ///
@@ -104,15 +109,18 @@ impl PjrtRuntime {
     }
 
     /// Sort `keys` with the AOT pipeline: pick the smallest compiled
-    /// capacity ≥ n, pad with the `u32::MAX` sentinel, execute, unpad.
+    /// capacity ≥ n, pad with the key type's [`SortKey::PAD`] sentinel,
+    /// execute, unpad.
     ///
     /// Returns the sorted keys and the capacity used. Fails if the input
     /// contains the sentinel (the fixed-shape pipeline cannot represent
     /// it) or exceeds every compiled capacity.
     pub fn sort(&mut self, keys: &[Key]) -> Result<(Vec<Key>, usize)> {
-        if keys.contains(&Key::MAX) {
+        if keys.contains(&PAD) {
             return Err(Error::InvalidInput(
-                "u32::MAX is reserved as the padding sentinel of the AOT pipeline".into(),
+                "the key type's SortKey::PAD sentinel (u32::MAX) is reserved by the \
+                 fixed-shape AOT pipeline"
+                    .into(),
             ));
         }
         let entry = self
@@ -131,7 +139,7 @@ impl PjrtRuntime {
 
         let mut padded: Vec<Key> = Vec::with_capacity(cap);
         padded.extend_from_slice(keys);
-        padded.resize(cap, Key::MAX);
+        padded.resize(cap, PAD);
 
         let input = literal_from_u32(&padded)?;
         let exe = self.executable(&entry)?;

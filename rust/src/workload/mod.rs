@@ -9,7 +9,7 @@
 //! Helman et al. plus degenerate patterns, all deterministically seeded.
 
 use crate::util::Rng;
-use crate::Key;
+use crate::{Key, KeyData, KeyType, SortKey};
 
 /// The input distributions of the evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -92,23 +92,63 @@ impl Distribution {
         }
     }
 
-    /// Generate `n` keys with this distribution, deterministically from
-    /// `seed`.
+    /// Generate `n` classic `u32` keys with this distribution,
+    /// deterministically from `seed` — byte-identical to the historical
+    /// (pre-typed) generator: [`Distribution::generate_typed`] at
+    /// `K = u32` reproduces its exact arithmetic and RNG draw sequence.
     pub fn generate(&self, n: usize, seed: u64) -> Vec<Key> {
+        self.generate_typed::<u32>(n, seed)
+    }
+
+    /// Generate `n` keys of any [`SortKey`] type.
+    ///
+    /// One definition covers every type by working in *bit space*: a
+    /// draw is a position in the key's total order, mapped through
+    /// [`SortKey::from_raw_bits`]. 4-byte keys consume one `next_u32`
+    /// per draw (the historical stream), 8-byte keys one `next_u64`.
+    /// Consequences worth knowing:
+    /// * for `i32`/`i64`, Uniform covers the full signed range and
+    ///   Gaussian centres at 0;
+    /// * for `f32`, Uniform is uniform over the *total order* — it
+    ///   contains negatives, infinities and NaNs, which is exactly the
+    ///   robustness stress the suite wants; Zipf/TwoValues/AllEqual map
+    ///   their small raw values to the bottom of the total order (the
+    ///   negative-NaN region), keeping their duplicate structure while
+    ///   doubling as a NaN-handling stress.
+    pub fn generate_typed<K: SortKey>(&self, n: usize, seed: u64) -> Vec<K> {
         let mut rng = Rng::new(seed ^ 0xD15C0_u64.wrapping_mul(self.salt()));
+        let wide = K::WIDTH_BYTES > 4;
+        fn draw(rng: &mut Rng, wide: bool) -> u64 {
+            if wide {
+                rng.next_u64()
+            } else {
+                rng.next_u32() as u64
+            }
+        }
+        let domain_max: u64 = if wide { u64::MAX } else { u32::MAX as u64 };
         match self {
-            Distribution::Uniform => (0..n).map(|_| rng.next_u32()).collect(),
+            Distribution::Uniform => (0..n)
+                .map(|_| K::from_raw_bits(draw(&mut rng, wide)))
+                .collect(),
             Distribution::Gaussian => {
-                let mean = u32::MAX as f64 / 2.0;
-                let sigma = u32::MAX as f64 / 8.0;
+                let mean = domain_max as f64 / 2.0;
+                let sigma = domain_max as f64 / 8.0;
                 (0..n)
                     .map(|_| {
-                        (mean + sigma * rng.next_gaussian()).clamp(0.0, u32::MAX as f64 - 1.0)
-                            as u32
+                        let x = (mean + sigma * rng.next_gaussian())
+                            .clamp(0.0, domain_max as f64 - 1.0);
+                        // The f64 clamp is exact at 32-bit width (the
+                        // historical arithmetic) but at 64-bit width
+                        // `domain_max - 1.0` rounds to 2^64, so cap in
+                        // integer space too: the generator never emits
+                        // the domain maximum (the PAD sentinel).
+                        K::from_raw_bits((x as u64).min(domain_max - 1))
                     })
                     .collect()
             }
-            Distribution::Zipf => (0..n).map(|_| rng.next_zipf(1u64 << 20) as u32).collect(),
+            Distribution::Zipf => (0..n)
+                .map(|_| K::from_raw_bits(rng.next_zipf(1u64 << 20)))
+                .collect(),
             Distribution::Staggered => {
                 // Helman-style staggered: split into 2^b blocks; block i
                 // contributes the ramp starting at a bit-reversed offset,
@@ -118,24 +158,32 @@ impl Distribution {
                 let mut out = Vec::with_capacity(n);
                 for b in 0..blocks {
                     let rev = (b as u32).reverse_bits() >> (32 - 6);
-                    let base = (rev as u64 * (u32::MAX as u64) / blocks as u64) as u32;
+                    let base = (rev as u128 * domain_max as u128 / blocks as u128) as u64;
                     for i in 0..block_len {
                         if out.len() == n {
                             break;
                         }
-                        out.push(base.wrapping_add((i as u32).wrapping_mul(2654435761) % 65536));
+                        let off = ((i as u32).wrapping_mul(2654435761) % 65536) as u64;
+                        // from_raw_bits truncates to the key width, so
+                        // the add wraps exactly like the historical u32
+                        // arithmetic.
+                        out.push(K::from_raw_bits(base.wrapping_add(off)));
                     }
                 }
                 out
             }
             Distribution::Sorted => {
-                let mut v: Vec<Key> = (0..n).map(|_| rng.next_u32()).collect();
-                v.sort_unstable();
+                let mut v: Vec<K> = (0..n)
+                    .map(|_| K::from_raw_bits(draw(&mut rng, wide)))
+                    .collect();
+                v.sort_unstable_by(K::key_cmp);
                 v
             }
             Distribution::NearlySorted => {
-                let mut v: Vec<Key> = (0..n).map(|_| rng.next_u32()).collect();
-                v.sort_unstable();
+                let mut v: Vec<K> = (0..n)
+                    .map(|_| K::from_raw_bits(draw(&mut rng, wide)))
+                    .collect();
+                v.sort_unstable_by(K::key_cmp);
                 let swaps = n / 100;
                 for _ in 0..swaps {
                     let i = rng.gen_range(n);
@@ -145,13 +193,30 @@ impl Distribution {
                 v
             }
             Distribution::ReverseSorted => {
-                let mut v: Vec<Key> = (0..n).map(|_| rng.next_u32()).collect();
-                v.sort_unstable();
+                let mut v: Vec<K> = (0..n)
+                    .map(|_| K::from_raw_bits(draw(&mut rng, wide)))
+                    .collect();
+                v.sort_unstable_by(K::key_cmp);
                 v.reverse();
                 v
             }
-            Distribution::AllEqual => vec![0xCAFE_F00D; n],
-            Distribution::TwoValues => (0..n).map(|i| if i % 2 == 0 { 10 } else { 20 }).collect(),
+            Distribution::AllEqual => vec![K::from_raw_bits(0xCAFE_F00D); n],
+            Distribution::TwoValues => (0..n)
+                .map(|i| K::from_raw_bits(if i % 2 == 0 { 10 } else { 20 }))
+                .collect(),
+        }
+    }
+
+    /// Generate `n` keys of the runtime-selected `key_type` as a
+    /// request-ready [`KeyData`] (the CLI/service entry to
+    /// [`Distribution::generate_typed`]).
+    pub fn generate_data(&self, key_type: KeyType, n: usize, seed: u64) -> KeyData {
+        match key_type {
+            KeyType::U32 => KeyData::U32(self.generate_typed(n, seed)),
+            KeyType::U64 => KeyData::U64(self.generate_typed(n, seed)),
+            KeyType::I32 => KeyData::I32(self.generate_typed(n, seed)),
+            KeyType::I64 => KeyData::I64(self.generate_typed(n, seed)),
+            KeyType::F32 => KeyData::F32(self.generate_typed(n, seed)),
         }
     }
 
@@ -253,5 +318,55 @@ mod tests {
             assert_eq!(Distribution::parse(d.id()), Some(d), "{d}");
         }
         assert_eq!(Distribution::parse("bogus"), None);
+    }
+
+    #[test]
+    fn typed_generation_is_deterministic_for_every_key_type() {
+        for d in Distribution::ALL {
+            for kt in KeyType::ALL {
+                let a = d.generate_data(kt, 500, 7);
+                let b = d.generate_data(kt, 500, 7);
+                assert_eq!(a.key_type(), kt);
+                assert_eq!(a.len(), 500);
+                // f32 streams can contain NaN (NaN != NaN), so compare
+                // deterministically at the byte level.
+                match (&a, &b) {
+                    (KeyData::F32(x), KeyData::F32(y)) => {
+                        let xb: Vec<u32> = x.iter().map(|v| f32::to_bits(*v)).collect();
+                        let yb: Vec<u32> = y.iter().map(|v| f32::to_bits(*v)).collect();
+                        assert_eq!(xb, yb, "{d} {kt}");
+                    }
+                    _ => assert_eq!(a, b, "{d} {kt}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_generation_covers_each_domain() {
+        // u64 uniform actually uses the 64-bit domain.
+        let v: Vec<u64> = Distribution::Uniform.generate_typed(1000, 3);
+        assert!(v.iter().any(|&x| x > u32::MAX as u64));
+        // i32 uniform covers both signs; gaussian centres near zero.
+        let v: Vec<i32> = Distribution::Uniform.generate_typed(1000, 3);
+        assert!(v.iter().any(|&x| x < 0) && v.iter().any(|&x| x > 0));
+        let g: Vec<i64> = Distribution::Gaussian.generate_typed(10_000, 3);
+        let near_zero = g
+            .iter()
+            .filter(|&&x| x.unsigned_abs() < u64::MAX / 2)
+            .count();
+        assert!(near_zero > 9_000, "i64 gaussian not centred: {near_zero}");
+        // f32 uniform (total-order domain) exercises the NaN stress.
+        let f: Vec<f32> = Distribution::Uniform.generate_typed(100_000, 3);
+        assert!(f.iter().any(|x| x.is_nan()), "no NaNs in the f32 stress");
+        assert!(f.iter().any(|x| *x < 0.0) && f.iter().any(|x| *x > 0.0));
+        // Sorted is sorted under the total order for every type.
+        let s: Vec<f32> = Distribution::Sorted.generate_typed(5000, 3);
+        assert!(crate::is_sorted(&s));
+        let s: Vec<i64> = Distribution::Sorted.generate_typed(5000, 3);
+        assert!(crate::is_sorted(&s));
+        // Duplicate structure survives the typed mapping.
+        let t: Vec<u64> = Distribution::TwoValues.generate_typed(100, 0);
+        assert!(t.iter().all(|&x| x == 10 || x == 20));
     }
 }

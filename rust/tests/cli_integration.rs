@@ -43,6 +43,41 @@ fn sort_native_and_sim() {
 }
 
 #[test]
+fn sort_typed_key_types_and_payloads() {
+    // f32 (NaN-containing uniform stream), key–value, descending, on
+    // the native engine — the typed path, fully verified.
+    let (ok, text) = gbs(&[
+        "sort", "--n", "100K", "--key-type", "f32", "--payload", "true", "--descending", "true",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("typed sort (f32, key–value, descending)"), "{text}");
+    assert!(text.contains("payload pairing"), "{text}");
+
+    // u64 keys through the simulated device.
+    let (ok, text) = gbs(&[
+        "sort", "--n", "100K", "--key-type", "u64", "--engine", "sim", "--device", "tesla",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified: sorted permutation"), "{text}");
+
+    // i64 keys across the sharded pool.
+    let (ok, text) = gbs(&[
+        "sort", "--n", "200K", "--key-type", "i64", "--engine", "sharded",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sharded engine"), "{text}");
+
+    // Unknown key type is a clean error, and --analytic stays u32-only.
+    let (ok, _) = gbs(&["sort", "--n", "1K", "--key-type", "u8"]);
+    assert!(!ok);
+    let (ok, text) = gbs(&[
+        "sort", "--n", "1K", "--key-type", "u64", "--analytic", "true",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("u32"), "{text}");
+}
+
+#[test]
 fn sort_sharded_executes_and_prices_paper_scale() {
     // Executed sharded sort over an explicit heterogeneous pool.
     let (ok, text) = gbs(&[

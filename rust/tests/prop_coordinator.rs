@@ -3,19 +3,19 @@
 //! identity/permutation guarantees under random job mixes.
 
 use gpu_bucket_sort::config::{BatchConfig, ServiceConfig};
-use gpu_bucket_sort::coordinator::{Batcher, PendingRequest, SortJob, SortService};
+use gpu_bucket_sort::coordinator::{Batcher, PendingRequest, SortRequest, SortService};
 use gpu_bucket_sort::util::propcheck::forall;
 use std::time::{Duration, Instant};
 
 type OutcomeRx =
-    std::sync::mpsc::Receiver<gpu_bucket_sort::Result<gpu_bucket_sort::coordinator::SortOutcome>>;
+    std::sync::mpsc::Receiver<gpu_bucket_sort::Result<gpu_bucket_sort::coordinator::SortResponse>>;
 
 fn req(id: u64, n: usize, at: Instant) -> (PendingRequest, OutcomeRx) {
     let (tx, rx) = std::sync::mpsc::channel();
     (
         PendingRequest {
             id,
-            job: SortJob::new(vec![0; n]),
+            request: SortRequest::new(vec![0u32; n]),
             admitted_at: at,
             respond_to: tx,
         },
@@ -133,7 +133,7 @@ fn service_returns_each_requests_own_keys() {
             .enumerate()
             .map(|(i, keys)| {
                 client
-                    .submit(SortJob::tagged(keys.clone(), format!("job-{i}")))
+                    .submit(SortRequest::tagged(keys.clone(), format!("job-{i}")))
                     .unwrap()
             })
             .collect();
@@ -141,7 +141,7 @@ fn service_returns_each_requests_own_keys() {
             let out = rx.recv().unwrap().unwrap();
             assert_eq!(out.tag.as_deref(), Some(format!("job-{i}").as_str()));
             assert!(
-                gpu_bucket_sort::is_sorted_permutation(input, &out.keys),
+                gpu_bucket_sort::is_sorted_permutation(input, out.keys_u32()),
                 "job {i}"
             );
         }

@@ -1,0 +1,181 @@
+//! Property tests for the [`SortKey`] laws — the foundation the typed
+//! sort surface stands on:
+//!
+//! * `to_bits`/`from_bits` is a bit-exact round trip (including `f32`
+//!   NaN payloads, `-0.0`, infinities, and negative `i32`/`i64`);
+//! * the bijection is order-preserving: comparing bits agrees with the
+//!   type's semantic order wherever one exists (integers everywhere,
+//!   floats outside NaN);
+//! * sorting by bits through the real engines therefore sorts the keys,
+//!   for every key type and every engine.
+//!
+//! NB: `f32` has inherent `to_bits`/`from_bits` (raw IEEE bits) that
+//! shadow the trait methods on the concrete type — the helpers below
+//! are generic, which sidesteps the ambiguity.
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::propcheck::forall;
+use gpu_bucket_sort::util::Rng;
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{is_sorted_permutation, Record, SortKey};
+
+fn roundtrip<K: SortKey>(k: K) -> K {
+    K::from_bits(K::to_bits(k))
+}
+
+/// Bit-exact equality (f32 NaN-safe: compares raw IEEE bytes).
+fn bit_eq<K: SortKey>(a: K, b: K) -> bool {
+    K::to_bits(a) == K::to_bits(b)
+}
+
+#[test]
+fn bits_round_trip_for_every_type() {
+    forall(300, "SortKey round trip", |g| {
+        let raw = g.rng().next_u64();
+        fn check<K: SortKey>(raw: u64) {
+            let k = K::from_raw_bits(raw);
+            assert!(bit_eq(roundtrip(k), k), "{k:?} did not round-trip");
+            // from_raw_bits truncates to the key width, so the
+            // key ↦ bits ↦ key ↦ bits chain is stable too.
+            let b = K::to_bits(k);
+            assert_eq!(K::to_bits(K::from_bits(b)), b);
+        }
+        check::<u32>(raw);
+        check::<u64>(raw);
+        check::<i32>(raw);
+        check::<i64>(raw);
+        check::<f32>(raw);
+        check::<Record<u32>>(raw);
+        check::<Record<i64>>(raw);
+    });
+}
+
+#[test]
+fn special_values_round_trip_bit_exactly() {
+    // The adversarial corners the laws call out by name.
+    let f32_specials = [
+        f32::NAN,
+        -f32::NAN,
+        f32::from_bits(0x7FC0_0001), // NaN with payload
+        f32::from_bits(0xFFFF_FFFF), // negative NaN, all-ones payload
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        f32::MAX,
+        f32::MIN,
+    ];
+    for &x in &f32_specials {
+        assert_eq!(
+            f32::to_bits(roundtrip(x)),
+            f32::to_bits(x),
+            "f32 {x:?} lost bits"
+        );
+    }
+    // -0.0 and +0.0 are distinct keys, ordered -0.0 < +0.0.
+    assert!((-0.0f32).key_lt(&0.0f32));
+    for &x in &[i64::MIN, i64::MIN + 1, -1, 0, 1, i64::MAX] {
+        assert_eq!(roundtrip(x), x, "i64 {x} lost bits");
+    }
+    for &x in &[i32::MIN, -1, 0, i32::MAX] {
+        assert_eq!(roundtrip(x), x, "i32 {x} lost bits");
+    }
+}
+
+#[test]
+fn bit_order_agrees_with_semantic_order() {
+    forall(500, "order preservation", |g| {
+        // Integers: bits order == integer order, everywhere.
+        let (a, b) = (g.rng().next_u64() as i64, g.rng().next_u64() as i64);
+        assert_eq!(a.cmp(&b), a.key_cmp(&b), "i64 {a} vs {b}");
+        let (a, b) = (g.u32() as i32, g.u32() as i32);
+        assert_eq!(a.cmp(&b), a.key_cmp(&b), "i32 {a} vs {b}");
+        let (a, b) = (g.rng().next_u64(), g.rng().next_u64());
+        assert_eq!(a.cmp(&b), a.key_cmp(&b));
+
+        // f32: outside NaN, bits order == partial_cmp (with the single
+        // refinement -0.0 < +0.0, excluded below by bit inequality).
+        let (x, y) = (
+            f32::from_raw_bits(g.rng().next_u64()),
+            f32::from_raw_bits(g.rng().next_u64()),
+        );
+        if !x.is_nan() && !y.is_nan() && f32::to_bits(x) != f32::to_bits(y) && x != y {
+            assert_eq!(
+                x.partial_cmp(&y).unwrap(),
+                x.key_cmp(&y),
+                "f32 {x} vs {y}"
+            );
+        }
+        // NaNs always sort after every non-NaN of the same sign side's
+        // top: positive NaN is the global maximum region.
+        if x.is_nan() && f32::to_bits(x) & 0x8000_0000 == 0 && !y.is_nan() {
+            assert!(y.key_lt(&x), "positive NaN must sort last ({y})");
+        }
+
+        // Records: key order first, index breaks ties.
+        let k = g.u32();
+        let r1 = Record { key: k, idx: 1 };
+        let r2 = Record { key: k, idx: 2 };
+        assert!(r1.key_lt(&r2));
+    });
+}
+
+#[test]
+fn pad_is_the_maximum_for_every_type() {
+    fn check<K: SortKey>(samples: usize) {
+        let mut rng = Rng::new(42);
+        for _ in 0..samples {
+            let k = K::from_raw_bits(rng.next_u64());
+            assert!(
+                k.key_le(&K::PAD),
+                "{k:?} sorts after PAD {:?}",
+                K::PAD
+            );
+        }
+    }
+    check::<u32>(2000);
+    check::<u64>(2000);
+    check::<i32>(2000);
+    check::<i64>(2000);
+    check::<f32>(2000);
+    check::<Record<f32>>(2000);
+}
+
+#[test]
+fn every_engine_sorts_every_key_type() {
+    // BucketSort (sim) and the native engine over small random typed
+    // inputs, all distributions' bit-space mapping included.
+    let sorter = BucketSort::new(BucketSortParams { tile: 256, s: 16 });
+    let native = NativeEngine::new(NativeParams {
+        workers: 4,
+        sequential_cutoff: 1 << 10,
+        ..Default::default()
+    })
+    .unwrap();
+    fn run_case<K: SortKey>(sorter: &BucketSort, native: &NativeEngine, input: Vec<K>) {
+        let mut a = input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort(&mut a, &mut sim).unwrap();
+        assert!(is_sorted_permutation(&input, &a));
+        let mut b = input.clone();
+        native.sort(&mut b);
+        assert!(is_sorted_permutation(&input, &b));
+        // Both engines agree bit-for-bit (the unique sorted ordering).
+        assert!(a.iter().zip(&b).all(|(x, y)| x.key_cmp(y).is_eq()));
+    }
+    for dist in [
+        Distribution::Uniform,
+        Distribution::Zipf,
+        Distribution::NearlySorted,
+    ] {
+        run_case::<u32>(&sorter, &native, dist.generate_typed(5_000, 3));
+        run_case::<u64>(&sorter, &native, dist.generate_typed(5_000, 3));
+        run_case::<i32>(&sorter, &native, dist.generate_typed(5_000, 3));
+        run_case::<i64>(&sorter, &native, dist.generate_typed(5_000, 3));
+        run_case::<f32>(&sorter, &native, dist.generate_typed(5_000, 3));
+    }
+}

@@ -5,9 +5,12 @@
 
 use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
 use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
-use gpu_bucket_sort::coordinator::{SimSortEngine, SortEngine, SortJob, SortService};
+use gpu_bucket_sort::coordinator::{
+    JobData, SimSortEngine, SortEngine, SortRequest, SortService,
+};
 use gpu_bucket_sort::sim::{GpuModel, GpuSim, GpuSpec};
 use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{KeyData, KeyType};
 
 fn cfg() -> ServiceConfig {
     ServiceConfig {
@@ -34,8 +37,11 @@ fn sustained_concurrent_load() {
                 for r in 0..total / 8 {
                     let dist = Distribution::ALL[(w as usize + r) % Distribution::ALL.len()];
                     let keys = dist.generate(5_000 + r * 997, w * 100 + r as u64);
-                    let out = client.sort(SortJob::new(keys.clone())).unwrap();
-                    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, &out.keys));
+                    let out = client.sort(SortRequest::new(keys.clone())).unwrap();
+                    assert!(gpu_bucket_sort::is_sorted_permutation(
+                        &keys,
+                        out.keys_u32()
+                    ));
                 }
             });
         }
@@ -57,24 +63,23 @@ fn verify_mode_catches_a_corrupting_engine() {
         fn kind(&self) -> EngineKind {
             EngineKind::Native
         }
-        fn sort_batch(
-            &mut self,
-            jobs: Vec<Vec<u32>>,
-        ) -> Vec<gpu_bucket_sort::Result<Vec<u32>>> {
+        fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<gpu_bucket_sort::Result<JobData>> {
             jobs.into_iter()
-                .map(|mut k| {
-                    k.sort_unstable();
-                    if !k.is_empty() {
-                        k[0] = k[0].wrapping_add(1); // corrupt
+                .map(|mut j| {
+                    if let KeyData::U32(k) = &mut j.keys {
+                        k.sort_unstable();
+                        if !k.is_empty() {
+                            k[0] = k[0].wrapping_add(1); // corrupt
+                        }
                     }
-                    Ok(k)
+                    Ok(j)
                 })
                 .collect()
         }
     }
     let client = SortService::start_with_engine(cfg(), EvilEngine).unwrap();
     let err = client
-        .sort(SortJob::new(vec![5, 3, 8, 1]))
+        .sort(SortRequest::new(vec![5u32, 3, 8, 1]))
         .expect_err("verification must catch the corruption");
     assert!(err.to_string().contains("verification failed"), "{err}");
     let snap = client.shutdown();
@@ -99,11 +104,11 @@ fn mixed_batch_partial_failure() {
 
     let small = Distribution::Uniform.generate(20_000, 1);
     let big = Distribution::Uniform.generate(600_000, 2);
-    let rx_small = client.submit(SortJob::new(small.clone())).unwrap();
-    let rx_big = client.submit(SortJob::new(big)).unwrap();
+    let rx_small = client.submit(SortRequest::new(small.clone())).unwrap();
+    let rx_big = client.submit(SortRequest::new(big)).unwrap();
 
     let ok = rx_small.recv().unwrap().unwrap();
-    assert!(gpu_bucket_sort::is_sorted_permutation(&small, &ok.keys));
+    assert!(gpu_bucket_sort::is_sorted_permutation(&small, ok.keys_u32()));
     let err = rx_big.recv().unwrap().unwrap_err();
     assert!(err.is_oom(), "{err}");
     client.shutdown();
@@ -124,12 +129,12 @@ fn engine_construction_failure_reported_synchronously() {
 fn zero_and_giant_requests() {
     let client = SortService::start(cfg()).unwrap();
     // Zero-key request completes without touching the engine.
-    let out = client.sort(SortJob::new(vec![])).unwrap();
+    let out = client.sort(SortRequest::new(Vec::<u32>::new())).unwrap();
     assert!(out.keys.is_empty());
     // A request larger than max_batch_keys forms its own batch.
     let giant = Distribution::Uniform.generate(3 << 20, 9);
-    let out = client.sort(SortJob::new(giant.clone())).unwrap();
-    assert!(gpu_bucket_sort::is_sorted_permutation(&giant, &out.keys));
+    let out = client.sort(SortRequest::new(giant.clone())).unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&giant, out.keys_u32()));
     assert_eq!(out.batch_size, 1);
     client.shutdown();
 }
@@ -171,9 +176,10 @@ fn multi_worker_responses_byte_identical_to_bucket_sort() {
                     let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
                     sorter.sort(&mut expected, &mut sim).unwrap();
 
-                    let out = client.sort(SortJob::new(keys)).unwrap();
+                    let out = client.sort(SortRequest::new(keys)).unwrap();
                     assert_eq!(
-                        out.keys, expected,
+                        out.keys_u32(),
+                        expected,
                         "submitter {s} request {r} ({dist}, n={n}) diverged"
                     );
                     assert!(out.worker < 4);
@@ -236,13 +242,13 @@ fn multi_worker_counters_balance_with_failures() {
             ok_keys += n as u64;
         }
         let keys = Distribution::Uniform.generate(n, i);
-        rxs.push((oversized, client.submit(SortJob::new(keys)).unwrap()));
+        rxs.push((oversized, client.submit(SortRequest::new(keys)).unwrap()));
     }
     for (oversized, rx) in rxs {
         match rx.recv().unwrap() {
             Ok(out) => {
                 assert!(!oversized);
-                assert!(gpu_bucket_sort::is_sorted(&out.keys));
+                assert!(gpu_bucket_sort::is_sorted(out.keys_u32()));
             }
             Err(e) => {
                 assert!(oversized, "small job failed: {e}");
@@ -272,12 +278,15 @@ fn sharded_multi_worker_service() {
     let mut inputs = Vec::new();
     for i in 0..8u64 {
         let keys = Distribution::Staggered.generate(30_000 + (i as usize) * 1_111, i);
-        rxs.push(client.submit(SortJob::new(keys.clone())).unwrap());
+        rxs.push(client.submit(SortRequest::new(keys.clone())).unwrap());
         inputs.push(keys);
     }
     for (rx, input) in rxs.into_iter().zip(inputs) {
         let out = rx.recv().unwrap().unwrap();
-        assert!(gpu_bucket_sort::is_sorted_permutation(&input, &out.keys));
+        assert!(gpu_bucket_sort::is_sorted_permutation(
+            &input,
+            out.keys_u32()
+        ));
         assert_eq!(out.engine, EngineKind::Sharded);
         assert!(out.worker < 2);
     }
@@ -299,10 +308,174 @@ fn metrics_keys_accounting_balances() {
     let sizes = [100usize, 5000, 65_536];
     for (i, &n) in sizes.iter().enumerate() {
         let keys = Distribution::Uniform.generate(n, i as u64);
-        client.sort(SortJob::new(keys)).unwrap();
+        client.sort(SortRequest::new(keys)).unwrap();
     }
     let snap = client.shutdown();
     let total: usize = sizes.iter().sum();
     assert_eq!(snap.counters["keys_received"], total as u64);
     assert_eq!(snap.counters["keys_sorted"], total as u64);
+}
+
+/// The typed-API compatibility contract: u32 key-only requests return
+/// **byte-identical** results to the pre-redesign path — which, for a
+/// key-only sort, is the unique sorted ordering of the input multiset —
+/// across the six robustness distributions and at every worker count.
+#[test]
+fn u32_key_only_path_byte_identical_across_distributions_and_workers() {
+    for workers in [1usize, 4] {
+        let config = ServiceConfig {
+            workers,
+            ..cfg()
+        };
+        let client = SortService::start(config).unwrap();
+        for (i, dist) in Distribution::ROBUSTNESS_SUITE.iter().enumerate() {
+            let keys = dist.generate(20_000 + i * 1_001, i as u64);
+            let mut expected = keys.clone();
+            expected.sort_unstable();
+            let out = client.sort(SortRequest::new(keys)).unwrap();
+            assert_eq!(
+                out.keys,
+                KeyData::U32(expected),
+                "{dist} diverged at {workers} workers"
+            );
+            assert!(out.payload.is_none(), "key-only jobs carry no payload");
+        }
+        client.shutdown();
+    }
+}
+
+/// Key–value requests through the full multi-worker service: payloads
+/// land with their keys, stably, and descending requests come back
+/// reversed — byte-identically for any worker count.
+#[test]
+fn key_value_and_descending_requests_through_the_service() {
+    let mut reference: Option<Vec<(u32, u64)>> = None;
+    for workers in [1usize, 3] {
+        let config = ServiceConfig {
+            workers,
+            ..cfg()
+        };
+        let client = SortService::start(config).unwrap();
+
+        // Duplicate-heavy keys so stability is actually exercised.
+        let keys: Vec<u32> = (0..30_000u32)
+            .map(|x| x.wrapping_mul(2654435761) % 128)
+            .collect();
+        let payload: Vec<u64> = (0..keys.len() as u64).collect();
+        let out = client
+            .sort(
+                SortRequest::builder(keys.clone())
+                    .payload(payload.clone())
+                    .self_check(true)
+                    .tag("kv")
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let sorted = out.keys_u32();
+        let out_payload = out.payload.as_ref().expect("payload echoed");
+        assert!(gpu_bucket_sort::is_sorted_permutation(&keys, sorted));
+        for (k, p) in sorted.iter().zip(out_payload) {
+            assert_eq!(keys[*p as usize], *k, "payload divorced from key");
+        }
+        for (w, pw) in sorted.windows(2).zip(out_payload.windows(2)) {
+            if w[0] == w[1] {
+                assert!(pw[0] < pw[1], "unstable at key {}", w[0]);
+            }
+        }
+        // Identical bytes at every worker count.
+        let pairs: Vec<(u32, u64)> = sorted
+            .iter()
+            .copied()
+            .zip(out_payload.iter().copied())
+            .collect();
+        match &reference {
+            None => reference = Some(pairs),
+            Some(r) => assert_eq!(r, &pairs, "worker count changed the bytes"),
+        }
+
+        // Descending: the exact reverse of the ascending result.
+        let desc = client
+            .sort(
+                SortRequest::builder(keys.clone())
+                    .payload(payload.clone())
+                    .descending(true)
+                    .self_check(true)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let mut re_reversed = desc.keys_u32().to_vec();
+        re_reversed.reverse();
+        assert_eq!(re_reversed, sorted, "descending is not the exact reverse");
+        let mut rev_payload = desc.payload.clone().unwrap();
+        rev_payload.reverse();
+        assert_eq!(&rev_payload, out_payload);
+
+        client.shutdown();
+    }
+}
+
+/// Typed requests served by the sim and sharded engines end to end,
+/// including the OOM ceiling arriving sooner for wider records.
+#[test]
+fn typed_requests_on_sim_and_sharded_engines() {
+    // Sim engine: u64 keys cost 2× the memory, so a job that fits as
+    // u32 OOMs as u64 on a device sized in between.
+    let mut config = cfg();
+    config.sort = BucketSortParams { tile: 256, s: 16 };
+    let spec = GpuSpec {
+        name: "tiny-3MB".into(),
+        global_memory_bytes: 3 << 20,
+        ..GpuModel::Gtx260.spec()
+    };
+    let engine = SimSortEngine::from_parts(spec, config.sort).unwrap();
+    let client = SortService::start_with_engine(config, engine).unwrap();
+    let n = 300_000;
+    let keys32: Vec<u32> = (0..n as u32).rev().collect();
+    let out = client.sort(SortRequest::new(keys32.clone())).unwrap();
+    assert!(gpu_bucket_sort::is_sorted(out.keys_u32()));
+    let keys64: Vec<u64> = (0..n as u64).rev().collect();
+    let err = client.sort(SortRequest::new(keys64)).unwrap_err();
+    assert!(err.is_oom(), "u64 job must hit the ceiling sooner: {err}");
+    client.shutdown();
+
+    // Sharded engine: NaN-containing f32 key–value across the pool.
+    let config = ServiceConfig {
+        engine: EngineKind::Sharded,
+        sort: BucketSortParams { tile: 256, s: 16 },
+        ..cfg()
+    };
+    let client = SortService::start(config).unwrap();
+    let mut fkeys: Vec<f32> = (0..40_000u32)
+        .map(|x| x.wrapping_mul(2654435761) as f32 - 2e9)
+        .collect();
+    fkeys[9] = f32::NAN;
+    fkeys[10] = f32::INFINITY;
+    let payload: Vec<u64> = (0..fkeys.len() as u64).collect();
+    let out = client
+        .sort(
+            SortRequest::builder(fkeys.clone())
+                .payload(payload)
+                .self_check(true)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(out.keys.key_type(), KeyType::F32);
+    assert!(out.keys.is_sorted(false));
+    match &out.keys {
+        KeyData::F32(sorted) => {
+            assert!(gpu_bucket_sort::is_sorted_permutation(&fkeys, sorted));
+            for (k, p) in sorted.iter().zip(out.payload.as_ref().unwrap()) {
+                assert_eq!(
+                    f32::to_bits(fkeys[*p as usize]),
+                    f32::to_bits(*k),
+                    "payload divorced from key"
+                );
+            }
+        }
+        other => panic!("wrong key type back: {:?}", other.key_type()),
+    }
+    client.shutdown();
 }

@@ -7,7 +7,7 @@
 use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
 use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
 use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
-use gpu_bucket_sort::coordinator::{ShardedSortEngine, SortEngine, SortJob, SortService};
+use gpu_bucket_sort::coordinator::{ShardedSortEngine, SortEngine, SortRequest, SortService};
 use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::util::propcheck::forall;
 use gpu_bucket_sort::workload::Distribution;
@@ -165,8 +165,8 @@ fn service_runs_on_sharded_engine() {
         .enumerate()
     {
         let keys = dist.generate(120_000, i as u64);
-        let out = client.sort(SortJob::new(keys.clone())).unwrap();
-        assert!(is_sorted_permutation(&keys, &out.keys));
+        let out = client.sort(SortRequest::new(keys.clone())).unwrap();
+        assert!(is_sorted_permutation(&keys, out.keys_u32()));
         assert_eq!(out.engine, EngineKind::Sharded);
     }
     let snap = client.shutdown();
