@@ -1,62 +1,221 @@
-//! Hot-path wall-clock benchmarks — the §Perf working set: the native
-//! engine against `slice::sort_unstable`, its phases, the bitonic tile
-//! kernel, and the end-to-end service (batching overhead).
+//! Hot-path wall-clock benchmarks — the §Perf working set, now a CI
+//! perf gate:
+//!
+//! * native engine vs `slice::sort_unstable` at 16M uniform keys, with
+//!   a clone-only baseline so throughput can be reported **de-biased**
+//!   (the input clone inside the timed closure is subtracted out);
+//! * the pre-PR native configuration (comparison kernel, cold arena
+//!   every call) vs the arena'd radix default;
+//! * radix vs bitonic tile kernel (Step 2's inner loop) plus an
+//!   output-equality smoke across kernels;
+//! * arena-on vs arena-off through the executed Algorithm 1;
+//! * service round trip (batching + scheduler overhead).
+//!
+//! Emits `BENCH_hot_paths.json` at the repo root — the perf-trajectory
+//! record the CI bench-smoke job validates and gates on — plus the
+//! usual `results/hot_paths_wallclock.csv`.
 
 mod common;
 
-use gpu_bucket_sort::algos::bitonic;
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::algos::{bitonic, radix};
 use gpu_bucket_sort::config::ServiceConfig;
 use gpu_bucket_sort::coordinator::SortService;
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
-use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::bench::{BenchResult, Bencher};
+use gpu_bucket_sort::util::Json;
 use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{ExecContext, KernelKind, SortKey};
+
+/// The CI gate size: 16M uniform u32 keys.
+const GATE_N: usize = 1 << 24;
+
+/// Median milliseconds with the clone baseline subtracted (floored at a
+/// microsecond so a ratio never divides by zero).
+fn debiased_ms(r: &BenchResult, clone_ms: f64) -> f64 {
+    (r.median_ms() - clone_ms).max(1e-3)
+}
+
+fn mkeys_s(n: usize, ms: f64) -> f64 {
+    n as f64 / ms / 1e3
+}
+
+/// Output-equality smoke: both kernels must produce byte-identical
+/// results through the executed Algorithm 1 and the native engine, for
+/// u32 and for f32 with NaNs/−0.0 (compared on bits).
+fn kernels_agree() -> bool {
+    let sorter = BucketSort::new(BucketSortParams { tile: 256, s: 16 });
+    let u32_input = Distribution::Uniform.generate(40_000, 7);
+    let mut f32_input: Vec<f32> = u32_input
+        .iter()
+        .map(|&b| <f32 as SortKey>::from_raw_bits(b as u64))
+        .collect();
+    f32_input[11] = f32::NAN;
+    f32_input[12] = -0.0;
+    f32_input[13] = 0.0;
+
+    let run_u32 = |kernel: KernelKind| {
+        let mut keys = u32_input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter
+            .sort_in(&mut keys, &mut sim, &ExecContext::new(kernel, 0))
+            .expect("bucket sort");
+        keys
+    };
+    let run_f32 = |kernel: KernelKind| {
+        let mut keys = f32_input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter
+            .sort_in(&mut keys, &mut sim, &ExecContext::new(kernel, 0))
+            .expect("bucket sort");
+        keys.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+    };
+    let run_native = |kernel: KernelKind| {
+        let e = NativeEngine::with_context(
+            NativeParams {
+                sequential_cutoff: 1 << 10,
+                ..Default::default()
+            },
+            ExecContext::new(kernel, 0),
+        )
+        .expect("native engine");
+        let mut keys = u32_input.clone();
+        let mut payload: Vec<u64> = (0..keys.len() as u64).collect();
+        e.sort_pairs(&mut keys, &mut payload).expect("sort_pairs");
+        (keys, payload)
+    };
+
+    run_u32(KernelKind::Radix) == run_u32(KernelKind::Bitonic)
+        && run_f32(KernelKind::Radix) == run_f32(KernelKind::Bitonic)
+        && run_native(KernelKind::Radix) == run_native(KernelKind::Bitonic)
+}
 
 fn main() {
     let bencher = Bencher::from_env();
+    let fast = std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1");
     let mut results = Vec::new();
 
-    // --- native engine vs std sort across sizes --------------------
+    // --- 16M-key gate: clone baseline, std sort, native old/new ------
+    let keys16 = Distribution::Uniform.generate(GATE_N, 1);
+    let clone_r = bencher.bench("hot/clone_only/n=16M", || keys16.clone());
+    let clone_ms = clone_r.median_ms();
+
+    let std_r = bencher.bench("hot/std_sort/n=16M", || {
+        let mut k = keys16.clone();
+        k.sort_unstable();
+        k
+    });
+
+    // The default hot path: radix kernel, resident pool, arena warmed
+    // by one untimed run.
     let engine = NativeEngine::new(NativeParams::default()).unwrap();
     println!("native engine: {} workers", engine.workers());
-    for n in [1usize << 20, 1 << 22, 1 << 24] {
-        let keys = Distribution::Uniform.generate(n, 1);
-
-        let std_r = bencher.bench(format!("hot/std_sort/n={n}"), || {
-            let mut k = keys.clone();
-            k.sort_unstable();
-            k
-        });
-        let nat_r = bencher.bench(format!("hot/native/n={n}"), || {
-            let mut k = keys.clone();
-            engine.sort(&mut k);
-            k
-        });
-        let speedup = std_r.median_ms() / nat_r.median_ms();
-        println!("    n={n}: native speedup over std {speedup:.2}x");
-        results.push(std_r);
-        results.push(nat_r);
-    }
-
-    // --- clone baseline (so sort numbers can be de-biased) ---------
     {
-        let keys = Distribution::Uniform.generate(1 << 24, 1);
-        results.push(bencher.bench("hot/clone_only/n=16M", || keys.clone()));
+        let mut warm = keys16.clone();
+        engine.sort(&mut warm);
     }
+    let native_r = bencher.bench("hot/native_radix_arena/n=16M", || {
+        let mut k = keys16.clone();
+        engine.sort(&mut k);
+        k
+    });
 
-    // --- bitonic tile kernel (Step 2's inner loop) -----------------
-    for tile in [512usize, 2048] {
-        let keys = Distribution::Uniform.generate(tile, 2);
-        results.push(bencher.bench(format!("hot/bitonic_tile/t={tile}"), || {
-            let mut k = keys.clone();
-            bitonic::sort_slice(&mut k);
-            k
-        }));
+    // The pre-PR configuration: comparison kernel, and a fresh engine
+    // (cold arena) every call — what every request used to pay.
+    let legacy_r = bencher.bench("hot/native_bitonic_coldarena/n=16M", || {
+        let e = NativeEngine::with_context(
+            NativeParams::default(),
+            ExecContext::new(KernelKind::Bitonic, 0),
+        )
+        .unwrap();
+        let mut k = keys16.clone();
+        e.sort(&mut k);
+        k
+    });
+
+    let std_median_ms = std_r.median_ms();
+    let std_ms = debiased_ms(&std_r, clone_ms);
+    let native_ms = debiased_ms(&native_r, clone_ms);
+    let legacy_ms = debiased_ms(&legacy_r, clone_ms);
+    let native_vs_std = std_ms / native_ms;
+    let native_vs_legacy = legacy_ms / native_ms;
+    println!(
+        "    16M uniform (clone-debiased): std {:.1} Mkeys/s | native {:.1} Mkeys/s \
+         ({native_vs_std:.2}x std, {native_vs_legacy:.2}x pre-PR config)",
+        mkeys_s(GATE_N, std_ms),
+        mkeys_s(GATE_N, native_ms),
+    );
+    results.push(clone_r);
+    results.push(std_r);
+    results.push(native_r);
+    results.push(legacy_r);
+
+    // --- radix vs bitonic tile kernel (Step 2's inner loop) ----------
+    let tile = 2048usize;
+    let tile_n = if fast { 1 << 19 } else { 1 << 21 };
+    let tile_keys = Distribution::Uniform.generate(tile_n, 2);
+    let tile_clone_r = bencher.bench(format!("hot/tile_clone/n={tile_n}"), || tile_keys.clone());
+    let tile_clone_ms = tile_clone_r.median_ms();
+    let bitonic_tile_r = bencher.bench(format!("hot/bitonic_tiles/t={tile}"), || {
+        let mut k = tile_keys.clone();
+        for t in k.chunks_exact_mut(tile) {
+            bitonic::sort_slice(t);
+        }
+        k
+    });
+    let mut scratch: Vec<u32> = Vec::new();
+    let radix_tile_r = bencher.bench(format!("hot/radix_tiles/t={tile}"), || {
+        let mut k = tile_keys.clone();
+        for t in k.chunks_exact_mut(tile) {
+            radix::radix_tile_sort(t, &mut scratch);
+        }
+        k
+    });
+    let tile_speedup =
+        debiased_ms(&bitonic_tile_r, tile_clone_ms) / debiased_ms(&radix_tile_r, tile_clone_ms);
+    println!("    tile kernel (t={tile}): radix {tile_speedup:.2}x over bitonic");
+    let bitonic_tile_ms = bitonic_tile_r.median_ms();
+    let radix_tile_ms = radix_tile_r.median_ms();
+    results.push(tile_clone_r);
+    results.push(bitonic_tile_r);
+    results.push(radix_tile_r);
+
+    // --- arena on/off through the executed Algorithm 1 ---------------
+    let arena_n = 1 << 20;
+    let arena_keys = Distribution::Uniform.generate(arena_n, 3);
+    let sorter = BucketSort::new(BucketSortParams::default());
+    let warm_ctx = ExecContext::default();
+    {
+        let mut k = arena_keys.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort_in(&mut k, &mut sim, &warm_ctx).unwrap();
     }
+    let arena_warm_r = bencher.bench("hot/bucket_sort_arena_warm/n=1M", || {
+        let mut k = arena_keys.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort_in(&mut k, &mut sim, &warm_ctx).unwrap();
+        k
+    });
+    let arena_cold_r = bencher.bench("hot/bucket_sort_arena_cold/n=1M", || {
+        let mut k = arena_keys.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        // A fresh context per sort = the pre-PR allocation behaviour.
+        sorter
+            .sort_in(&mut k, &mut sim, &ExecContext::default())
+            .unwrap();
+        k
+    });
+    let arena_speedup = arena_cold_r.median_ms() / arena_warm_r.median_ms().max(1e-3);
+    println!("    arena reuse at 1M keys: warm {arena_speedup:.2}x over cold");
+    let (arena_warm_ms, arena_cold_ms) = (arena_warm_r.median_ms(), arena_cold_r.median_ms());
+    results.push(arena_warm_r);
+    results.push(arena_cold_r);
 
-    // --- service end-to-end: batching overhead vs direct engine ----
+    // --- service end-to-end: batching overhead vs direct engine ------
     {
         let n = 1 << 18;
-        let keys = Distribution::Uniform.generate(n, 3);
+        let keys = Distribution::Uniform.generate(n, 4);
         let direct = bencher.bench("hot/engine_direct/n=256K", || {
             let mut k = keys.clone();
             engine.sort(&mut k);
@@ -67,12 +226,73 @@ fn main() {
             client.sort_keys(keys.clone()).unwrap()
         });
         let overhead =
-            (service.median_ms() - direct.median_ms()) / direct.median_ms() * 100.0;
+            (service.median_ms() - direct.median_ms()) / direct.median_ms().max(1e-3) * 100.0;
         println!("    service overhead over direct engine: {overhead:.1}%");
         client.shutdown();
         results.push(direct);
         results.push(service);
     }
 
+    // --- output-equality smoke + JSON report -------------------------
+    let agree = kernels_agree();
+    println!("    kernels agree byte-for-byte: {agree}");
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("median_ms", Json::num(r.median_ms())),
+                ("mean_ms", Json::num(r.mean_ms())),
+                ("min_ms", Json::num(r.min_ms())),
+                ("samples", Json::num(r.samples_ms.len() as f64)),
+            ])
+        })
+        .collect();
+    let report = Json::obj(vec![
+        ("bench", Json::str("hot_paths")),
+        ("mode", Json::str(if fast { "smoke" } else { "full" })),
+        ("engine", Json::str("native")),
+        ("gate_n", Json::num(GATE_N as f64)),
+        ("clone_median_ms", Json::num(clone_ms)),
+        ("std_median_ms", Json::num(std_median_ms)),
+        ("std_debiased_mkeys_s", Json::num(mkeys_s(GATE_N, std_ms))),
+        (
+            "native_debiased_mkeys_s",
+            Json::num(mkeys_s(GATE_N, native_ms)),
+        ),
+        ("native_vs_std_speedup", Json::num(native_vs_std)),
+        ("native_vs_legacy_speedup", Json::num(native_vs_legacy)),
+        (
+            "tile",
+            Json::obj(vec![
+                ("tile", Json::num(tile as f64)),
+                ("n", Json::num(tile_n as f64)),
+                ("bitonic_median_ms", Json::num(bitonic_tile_ms)),
+                ("radix_median_ms", Json::num(radix_tile_ms)),
+                ("radix_speedup", Json::num(tile_speedup)),
+            ]),
+        ),
+        (
+            "arena",
+            Json::obj(vec![
+                ("n", Json::num(arena_n as f64)),
+                ("warm_median_ms", Json::num(arena_warm_ms)),
+                ("cold_median_ms", Json::num(arena_cold_ms)),
+                ("warm_speedup", Json::num(arena_speedup)),
+            ]),
+        ),
+        ("kernels_agree", Json::Bool(agree)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_hot_paths.json", report.to_string_pretty())
+        .expect("write BENCH_hot_paths.json");
+    println!("→ BENCH_hot_paths.json");
+
     common::emit_measurements("hot_paths", &results);
+
+    if !agree {
+        eprintln!("FAIL: radix and bitonic kernels disagree");
+        std::process::exit(1);
+    }
 }

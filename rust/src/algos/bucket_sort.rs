@@ -29,12 +29,14 @@
 //! [`crate::Record`]s for key–value jobs. The `u32` path is
 //! byte-identical to the historical `Key = u32` implementation.
 
-use super::{bitonic, indexing, local_sort, prefix, relocation, sampling};
+use super::{bitonic, indexing, local_sort, prefix, radix, relocation, sampling};
+use super::{ExecContext, KernelKind};
 use crate::error::Result;
-use crate::key::{tag_records, untag_records, Record};
+use crate::key::Record;
 use crate::sim::ledger::Ledger;
 use crate::sim::spec::GpuSpec;
 use crate::sim::{CostModel, GpuSim};
+use crate::util::{pool, ScratchArena};
 use crate::{SortKey, KEY_BYTES};
 use std::collections::BTreeMap;
 
@@ -149,10 +151,30 @@ impl BucketSort {
 
     /// Sort `keys` in place on the simulated device, recording traffic
     /// and enforcing the device's memory capacity. Generic over
-    /// [`SortKey`]: the comparison network orders by key bits, padding
-    /// uses the type's own sentinel, and the ledger's traffic/memory
-    /// accounting scales with [`SortKey::WIDTH_BYTES`].
+    /// [`SortKey`]: ordering is by key bits, padding uses the type's own
+    /// sentinel, and the ledger's traffic/memory accounting scales with
+    /// [`SortKey::WIDTH_BYTES`]. Uses a transient default
+    /// [`ExecContext`]; the service engines pass a persistent one
+    /// through [`BucketSort::sort_in`] so their steady state allocates
+    /// nothing.
     pub fn sort<K: SortKey>(&self, keys: &mut [K], sim: &mut GpuSim) -> Result<BucketSortReport> {
+        self.sort_in(keys, sim, &ExecContext::default())
+    }
+
+    /// [`BucketSort::sort`] with explicit execution resources: every
+    /// working buffer (tile-aligned work array, sample array, boundary
+    /// and count matrices, relocation target, Step-9 scratch) is checked
+    /// out of `ctx.arena`, Steps 2 and 9 run on the resident worker pool
+    /// over disjoint regions (byte-identical output at any worker
+    /// count), and `ctx.kernel` selects the executed tile/bucket kernel.
+    /// The recorded ledger is independent of both the kernel and the
+    /// worker count — it stays the paper's bitonic analytics.
+    pub fn sort_in<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        sim: &mut GpuSim,
+        ctx: &ExecContext,
+    ) -> Result<BucketSortReport> {
         let n = keys.len();
         let (tile, s) = (self.params.tile, self.params.s);
         if n == 0 {
@@ -180,45 +202,61 @@ impl BucketSort {
         let aux_alloc = sim.alloc(
             aux_overlay_bytes(m, s, cap, elem_bytes).saturating_sub(padded_n * elem_bytes),
         )?;
-        let mut work: Vec<K> = Vec::with_capacity(padded_n);
-        work.extend_from_slice(keys);
+        let mut work = ctx.arena.take_from(keys);
         work.resize(padded_n, K::PAD);
 
         let mut ledger = Ledger::default();
 
-        // Step 2: local sort of each sublist on one SM.
-        local_sort::run(&mut work, tile, &mut ledger);
+        // Step 2: local sort of each sublist on one SM (tiles in
+        // parallel on the worker pool; kernel from the context).
+        local_sort::run_in(work.as_mut_slice(), tile, ctx, &mut ledger);
 
         // Step 3: s equidistant samples per sublist (overlaid on the
         // not-yet-used relocation buffer).
-        let mut samples = sampling::local_samples(&work, tile, s, &mut ledger);
+        let mut samples = ctx.arena.take_empty::<K>();
+        sampling::local_samples_into(work.as_slice(), tile, s, &mut samples, &mut ledger);
 
         // Step 4: sort all s·m samples globally (bitonic, padded to a
         // power of two).
         let padded_samples = bitonic::next_pow2(samples.len());
         samples.resize(padded_samples, K::PAD);
-        bitonic::global_sort(&mut samples, tile, &mut ledger, 4);
+        bitonic::global_sort(samples.as_mut_slice(), tile, &mut ledger, 4);
 
         // Step 5: s equidistant global samples → s−1 splitters.
-        let splitters = sampling::select_splitters(&samples, s, &mut ledger);
+        let splitters = sampling::select_splitters(samples.as_slice(), s, &mut ledger);
 
         // Step 6: locate every splitter in every sublist.
-        let bounds = indexing::boundaries(&work, tile, &splitters, &mut ledger);
-        drop(samples); // dead after Step 6
+        let mut bounds = ctx.arena.take_empty::<u32>();
+        indexing::boundaries_into(work.as_slice(), tile, &splitters, &mut bounds, &mut ledger);
+        drop(samples); // dead after Step 6 (returns to the arena)
 
         // Step 7: column-major prefix sum → bucket locations.
-        let counts: Vec<u32> = bounds
-            .chunks_exact(s)
-            .flat_map(indexing::row_bucket_sizes)
-            .collect();
-        let layout = prefix::column_prefix(&counts, m, s, &mut ledger);
+        let mut counts = ctx.arena.take_empty::<u32>();
+        counts.reserve(m * s);
+        for row in bounds.chunks_exact(s) {
+            let mut prev = 0u32;
+            for &b in row {
+                counts.push(b - prev);
+                prev = b;
+            }
+        }
+        let layout = prefix::column_prefix(counts.as_slice(), m, s, &mut ledger);
 
         // Step 8: relocate all buckets (coalesced read + write).
-        let mut relocated = vec![K::PAD; padded_n];
-        relocation::relocate(&work, tile, &bounds, &layout, &mut relocated, &mut ledger);
+        let mut relocated = ctx.arena.take(padded_n, K::PAD);
+        relocation::relocate(
+            work.as_slice(),
+            tile,
+            bounds.as_slice(),
+            &layout,
+            relocated.as_mut_slice(),
+            &mut ledger,
+        );
 
-        // Step 9: sort every sublist B_j with the same bitonic engine
-        // as Step 4 (scratch overlaid on the now-dead input buffer).
+        // Step 9: sort every sublist B_j (buckets in parallel over
+        // disjoint regions of the relocated array, scratch per worker
+        // from the arena — overlaid on the now-dead input buffer in the
+        // device model).
         //
         // Cost model: each sort is priced at the *balanced* sublist
         // size padded_n/s under virtual padding (predicated
@@ -226,27 +264,31 @@ impl BucketSort {
         // the uniform-data cost, which the deterministic bound keeps
         // within 2× for any input. This keeps the ledger
         // input-independent, the paper's determinism claim. Physically
-        // we sort the full capacity so any actual size ≤ cap (or beyond,
-        // for tie-degenerate inputs) stays correct.
+        // the bitonic kernel sorts the full capacity so any actual size
+        // ≤ cap (or beyond, for tie-degenerate inputs) stays correct;
+        // the radix kernel sorts each bucket's actual length, which
+        // yields the same (unique) sorted output.
         let max_bucket = layout.max_bucket();
         let balanced = padded_n / s;
-        let mut scratch: Vec<K> = vec![K::PAD; cap];
-        for j in 0..s {
-            let st = layout.bucket_start[j] as usize;
-            let len = layout.bucket_size[j] as usize;
-            // Ties can push a bucket past 2n/s in degenerate inputs; the
-            // network just grows to the next power of two.
-            let bcap = cap.max(bitonic::next_pow2(len));
-            if bcap > cap {
-                scratch.resize(bcap, K::PAD);
+        {
+            let arena = &ctx.arena;
+            let kernel = ctx.kernel;
+            let mut slices: Vec<&mut [K]> = Vec::with_capacity(s);
+            let mut rest: &mut [K] = relocated.as_mut_slice();
+            for j in 0..s {
+                let len = layout.bucket_size[j] as usize;
+                debug_assert_eq!(layout.bucket_start[j] as usize, padded_n - rest.len());
+                let (head, tail) = rest.split_at_mut(len);
+                slices.push(head);
+                rest = tail;
             }
-            scratch[..len].copy_from_slice(&relocated[st..st + len]);
-            scratch[len..bcap].fill(K::PAD);
-            let ces = bitonic::sort_slice(&mut scratch[..bcap]);
-            debug_assert_eq!(ces, bitonic::ce_count(bcap));
+            debug_assert!(rest.is_empty(), "buckets must tile the padded array");
+            pool::parallel_slices_mut(slices, ctx.effective_workers(), |_, b| {
+                sort_bucket(b, cap, kernel, arena);
+            });
+        }
+        for _ in 0..s {
             bitonic::global_sort_virtual_bytes(balanced, tile, elem_bytes, &mut ledger, 9);
-            relocated[st..st + len].copy_from_slice(&scratch[..len]);
-            scratch.truncate(cap);
         }
 
         keys.copy_from_slice(&relocated[..n]);
@@ -280,10 +322,24 @@ impl BucketSort {
         payload: &mut Vec<u64>,
         sim: &mut GpuSim,
     ) -> Result<BucketSortReport> {
+        self.sort_pairs_in(keys, payload, sim, &ExecContext::default())
+    }
+
+    /// [`BucketSort::sort_pairs`] with explicit execution resources:
+    /// the record vector and the payload permutation staging both come
+    /// from the context's arena.
+    pub fn sort_pairs_in<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        payload: &mut Vec<u64>,
+        sim: &mut GpuSim,
+        ctx: &ExecContext,
+    ) -> Result<BucketSortReport> {
         crate::key::validate_key_value(keys.len(), payload.len())?;
-        let mut recs: Vec<Record<K>> = tag_records(keys)?;
-        let report = self.sort(&mut recs, sim)?;
-        untag_records(&recs, keys, payload);
+        let mut recs = ctx.arena.take_empty::<Record<K>>();
+        crate::key::tag_records_into(keys, &mut recs)?;
+        let report = self.sort_in(recs.as_mut_slice(), sim, ctx)?;
+        crate::key::untag_records_in(recs.as_slice(), keys, payload, &ctx.arena);
         Ok(report)
     }
 
@@ -368,6 +424,35 @@ impl BucketSort {
     }
 }
 
+/// Step-9 sort of one relocated bucket with the selected kernel.
+///
+/// The bitonic path reproduces the paper's fixed shape: sort at the
+/// guaranteed capacity (`cap`, grown to the next power of two for
+/// tie-degenerate over-full buckets), PAD-padded, through arena
+/// scratch. The radix path sorts the bucket's actual length directly —
+/// no padding needed — and produces the identical (unique) sorted
+/// output.
+fn sort_bucket<K: SortKey>(b: &mut [K], cap: usize, kernel: KernelKind, arena: &ScratchArena) {
+    let len = b.len();
+    if len <= 1 {
+        return;
+    }
+    match kernel {
+        KernelKind::Radix => {
+            let mut scratch = arena.take_empty::<K>();
+            radix::radix_tile_sort(b, &mut scratch);
+        }
+        KernelKind::Bitonic => {
+            let bcap = cap.max(bitonic::next_pow2(len));
+            let mut scratch = arena.take(bcap, K::PAD);
+            scratch[..len].copy_from_slice(b);
+            let ces = bitonic::sort_slice(&mut scratch[..bcap]);
+            debug_assert_eq!(ces, bitonic::ce_count(bcap));
+            b.copy_from_slice(&scratch[..len]);
+        }
+    }
+}
+
 /// Bytes of auxiliary state that must fit inside a dead n-key buffer:
 /// the padded sample array and Step-9 scratch bucket (key-width
 /// elements) plus the boundary and location matrices (u32 counts
@@ -447,6 +532,34 @@ mod tests {
         }
         for l in &ledgers[1..] {
             assert_eq!(l, &ledgers[0], "ledger must be input-independent");
+        }
+    }
+
+    #[test]
+    fn kernel_and_worker_count_never_change_the_bytes() {
+        // The tentpole invariant: outputs and ledgers are identical for
+        // either executed kernel at any worker count, and a reused
+        // arena recycles rather than reallocates.
+        let sorter = BucketSort::new(small_params());
+        let input = scrambled(10_000);
+        let mut reference = input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let ref_report = sorter.sort(&mut reference, &mut sim).unwrap();
+        for kernel in [crate::KernelKind::Bitonic, crate::KernelKind::Radix] {
+            for workers in [1usize, 2, 4] {
+                let ctx = crate::ExecContext::new(kernel, workers);
+                for round in 0..2 {
+                    let mut keys = input.clone();
+                    let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+                    let r = sorter.sort_in(&mut keys, &mut sim, &ctx).unwrap();
+                    assert_eq!(keys, reference, "{kernel} × {workers} workers");
+                    assert_eq!(r.ledger, ref_report.ledger);
+                    if round == 1 {
+                        let stats = ctx.arena.stats();
+                        assert!(stats.hits > 0, "second round must reuse buffers: {stats:?}");
+                    }
+                }
+            }
         }
     }
 

@@ -57,11 +57,26 @@ pub fn boundaries<K: SortKey>(
     splitters: &[K],
     ledger: &mut Ledger,
 ) -> Vec<u32> {
+    let mut out = Vec::new();
+    boundaries_into(keys, tile, splitters, &mut out, ledger);
+    out
+}
+
+/// [`boundaries`] into a caller-provided (typically arena-recycled)
+/// buffer — the allocation-free form the engines use.
+pub fn boundaries_into<K: SortKey>(
+    keys: &[K],
+    tile: usize,
+    splitters: &[K],
+    out: &mut Vec<u32>,
+    ledger: &mut Ledger,
+) {
     assert!(tile.is_power_of_two());
     assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
     let m = keys.len() / tile;
     let s = splitters.len() + 1;
-    let mut out = vec![0u32; m * s];
+    out.clear();
+    out.resize(m * s, 0);
     let mut probes = 0u64;
     for (i, t) in keys.chunks_exact(tile).enumerate() {
         debug_assert!(t.windows(2).all(|w| w[0].key_le(&w[1])), "tile {i} not sorted");
@@ -75,7 +90,6 @@ pub fn boundaries<K: SortKey>(
     if m > 0 {
         record(m, tile, s, probes, K::WIDTH_BYTES, ledger);
     }
-    out
 }
 
 /// Ledger-only twin of [`boundaries`] at the classic `u32` width: the

@@ -10,27 +10,55 @@
 //! adaptive bitonic sort, because tiles are always 2K items regardless
 //! of n.
 
-use super::bitonic;
+use super::{bitonic, radix, ExecContext, KernelKind};
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
+use crate::util::pool;
 use crate::{SortKey, KEY_BYTES};
 
 /// Sort every `tile`-sized sublist of `keys` in place and record the
 /// launch (traffic scales with [`SortKey::WIDTH_BYTES`]). `keys.len()`
 /// must be a multiple of `tile`; `tile` a power of two. Returns the
-/// number of tiles (m).
+/// number of tiles (m). Uses a transient default [`ExecContext`]; the
+/// engines pass a persistent one through [`run_in`].
 pub fn run<K: SortKey>(keys: &mut [K], tile: usize, ledger: &mut Ledger) -> usize {
+    run_in(keys, tile, &ExecContext::default(), ledger)
+}
+
+/// [`run`] with explicit execution resources: tiles are sorted in
+/// parallel on the resident worker pool (disjoint tiles, so the output
+/// is byte-identical at any worker count) with the context's selected
+/// kernel, per-worker scratch coming from the context's arena. The
+/// recorded launch is identical for either kernel — the ledger keeps
+/// the paper's Step-2 bitonic analytics.
+pub fn run_in<K: SortKey>(
+    keys: &mut [K],
+    tile: usize,
+    ctx: &ExecContext,
+    ledger: &mut Ledger,
+) -> usize {
     assert!(tile.is_power_of_two(), "tile must be a power of two");
     assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
     let m = keys.len() / tile;
     if m == 0 {
         return 0;
     }
-    let mut total_ces = 0u64;
-    for t in keys.chunks_exact_mut(tile) {
-        total_ces += bitonic::sort_slice(t);
+    let workers = ctx.effective_workers();
+    match ctx.kernel {
+        KernelKind::Bitonic => {
+            pool::parallel_chunks_mut(keys, tile, workers, |_, t| {
+                let ces = bitonic::sort_slice(t);
+                debug_assert_eq!(ces, bitonic::ce_count(t.len()));
+            });
+        }
+        KernelKind::Radix => {
+            let arena = &ctx.arena;
+            pool::parallel_chunks_mut(keys, tile, workers, |_, t| {
+                let mut scratch = arena.take_empty::<K>();
+                radix::radix_tile_sort(t, &mut scratch);
+            });
+        }
     }
-    debug_assert_eq!(total_ces, m as u64 * bitonic::ce_count(tile));
     record(m, tile, K::WIDTH_BYTES, ledger);
     m
 }
@@ -114,6 +142,33 @@ mod tests {
         assert_eq!(k.blocks, 16);
         assert_eq!(k.threads_per_block, 512);
         assert_eq!(k.coalesced_bytes, 2 * 16 * 2048 * 4);
+    }
+
+    #[test]
+    fn kernels_agree_and_record_identically() {
+        let tile = 256;
+        let input = scrambled(16 * tile);
+        let mut by_bitonic = input.clone();
+        let mut led_b = Ledger::default();
+        run_in(
+            &mut by_bitonic,
+            tile,
+            &crate::ExecContext::new(crate::KernelKind::Bitonic, 2),
+            &mut led_b,
+        );
+        let mut by_radix = input.clone();
+        let mut led_r = Ledger::default();
+        run_in(
+            &mut by_radix,
+            tile,
+            &crate::ExecContext::new(crate::KernelKind::Radix, 4),
+            &mut led_r,
+        );
+        assert_eq!(by_bitonic, by_radix);
+        assert_eq!(led_b, led_r, "ledger must not depend on the executed kernel");
+        for t in by_radix.chunks_exact(tile) {
+            assert!(is_sorted(t));
+        }
     }
 
     #[test]

@@ -35,7 +35,95 @@ pub mod thrust_merge;
 use crate::error::Result;
 use crate::sim::spec::GpuSpec;
 use crate::sim::GpuSim;
+use crate::util::ScratchArena;
 use crate::Key;
+
+/// Which executed kernel sorts the shared-memory tiles (Step 2) and the
+/// guaranteed-capacity buckets (Step 9) across the bucket-sort, sharded
+/// and native engines.
+///
+/// Kernel choice affects **host execution only**: outputs are
+/// byte-identical either way (a sorted key sequence is the unique
+/// ordering of its bit-pattern multiset, and key–value records carry a
+/// tie-breaking index that makes their order total), and the recorded
+/// ledger keeps the paper's bitonic CE/traffic analytics regardless, so
+/// Figures 3–7 and every analytic twin are unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelKind {
+    /// The paper's comparison path: the bitonic network on the
+    /// simulated engines (§4's choice), `slice::sort_unstable` — its
+    /// host-optimal comparison equivalent — on the native engine.
+    Bitonic,
+    /// LSD counting sort over [`crate::SortKey::radix_byte`] digits
+    /// ([`radix::radix_tile_sort`]): O(n·W) instead of O(n log² n), the
+    /// executed default since PR 4.
+    #[default]
+    Radix,
+}
+
+impl KernelKind {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bitonic" | "comparison" => Some(KernelKind::Bitonic),
+            "radix" | "lsd" => Some(KernelKind::Radix),
+            _ => None,
+        }
+    }
+
+    /// Stable CLI/config name.
+    pub fn id(&self) -> &'static str {
+        match self {
+            KernelKind::Bitonic => "bitonic",
+            KernelKind::Radix => "radix",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// Execution resources for the host-executed hot path: the scratch
+/// arena (warm buffer reuse), the parallelism budget for the resident
+/// worker pool, and the tile/bucket kernel selection.
+///
+/// Engines hold one `ExecContext` for their lifetime, which is what
+/// makes their steady state allocation-free; the one-shot library entry
+/// points ([`bucket_sort::BucketSort::sort`] etc.) build a transient
+/// default context, preserving their historical behaviour. Cloning
+/// shares the arena (it is a handle).
+#[derive(Debug, Clone, Default)]
+pub struct ExecContext {
+    /// Recyclable scratch buffers for every executed phase.
+    pub arena: ScratchArena,
+    /// Worker-pool parallelism budget (0 = logical cores).
+    pub workers: usize,
+    /// Executed tile/bucket kernel.
+    pub kernel: KernelKind,
+}
+
+impl ExecContext {
+    /// Context with a fresh arena, the given kernel and worker budget.
+    pub fn new(kernel: KernelKind, workers: usize) -> Self {
+        ExecContext {
+            arena: ScratchArena::new(),
+            workers,
+            kernel,
+        }
+    }
+
+    /// The resolved parallelism budget.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::pool::default_workers()
+        } else {
+            self.workers
+        }
+    }
+}
 
 /// The algorithms the benchmark harness can run, as a CLI-friendly enum.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -53,31 +141,64 @@ pub enum Algorithm {
 /// Object-safe adapter every baseline sorter implements: sort `keys`
 /// on `sim` with default parameters and report the estimated
 /// milliseconds on `spec`. One `dyn` dispatch replaces the four
-/// copy-pasted match arms [`Algorithm::run`] used to carry.
+/// copy-pasted match arms [`Algorithm::run`] used to carry. The
+/// execution context reaches the bucket-sort arm (kernel selection,
+/// arena); the baselines execute their own fixed kernels and ignore
+/// it.
 trait AlgorithmRunner {
-    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64>;
+    fn sort_ms(
+        &self,
+        keys: &mut [Key],
+        sim: &mut GpuSim,
+        spec: &GpuSpec,
+        ctx: &ExecContext,
+    ) -> Result<f64>;
 }
 
 impl AlgorithmRunner for bucket_sort::BucketSort {
-    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
-        Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
+    fn sort_ms(
+        &self,
+        keys: &mut [Key],
+        sim: &mut GpuSim,
+        spec: &GpuSpec,
+        ctx: &ExecContext,
+    ) -> Result<f64> {
+        Ok(self.sort_in(keys, sim, ctx)?.total_estimated_ms(spec))
     }
 }
 
 impl AlgorithmRunner for randomized::RandomizedSampleSort {
-    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+    fn sort_ms(
+        &self,
+        keys: &mut [Key],
+        sim: &mut GpuSim,
+        spec: &GpuSpec,
+        _ctx: &ExecContext,
+    ) -> Result<f64> {
         Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
     }
 }
 
 impl AlgorithmRunner for thrust_merge::ThrustMergeSort {
-    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+    fn sort_ms(
+        &self,
+        keys: &mut [Key],
+        sim: &mut GpuSim,
+        spec: &GpuSpec,
+        _ctx: &ExecContext,
+    ) -> Result<f64> {
         Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
     }
 }
 
 impl AlgorithmRunner for radix::RadixSort {
-    fn sort_ms(&self, keys: &mut [Key], sim: &mut GpuSim, spec: &GpuSpec) -> Result<f64> {
+    fn sort_ms(
+        &self,
+        keys: &mut [Key],
+        sim: &mut GpuSim,
+        spec: &GpuSpec,
+        _ctx: &ExecContext,
+    ) -> Result<f64> {
         Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
     }
 }
@@ -135,8 +256,15 @@ impl Algorithm {
     /// Run this algorithm on `keys` over `sim` with default parameters,
     /// returning the estimated milliseconds on the sim's own spec.
     pub fn run(self, keys: &mut [Key], sim: &mut GpuSim) -> Result<f64> {
+        self.run_in(keys, sim, &ExecContext::default())
+    }
+
+    /// [`Algorithm::run`] with explicit execution resources — the
+    /// bucket-sort arm honours the context's kernel and arena; the
+    /// baselines execute their own fixed kernels regardless.
+    pub fn run_in(self, keys: &mut [Key], sim: &mut GpuSim, ctx: &ExecContext) -> Result<f64> {
         let spec = sim.spec().clone();
-        self.runner().sort_ms(keys, sim, &spec)
+        self.runner().sort_ms(keys, sim, &spec, ctx)
     }
 }
 
@@ -157,6 +285,26 @@ mod tests {
     use super::*;
     use crate::sim::GpuModel;
     use crate::is_sorted_permutation;
+
+    #[test]
+    fn kernel_kind_parse_round_trips() {
+        for k in [KernelKind::Bitonic, KernelKind::Radix] {
+            assert_eq!(KernelKind::parse(k.id()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("LSD"), Some(KernelKind::Radix));
+        assert_eq!(KernelKind::parse("comparison"), Some(KernelKind::Bitonic));
+        assert_eq!(KernelKind::parse("quick"), None);
+        assert_eq!(KernelKind::default(), KernelKind::Radix);
+    }
+
+    #[test]
+    fn exec_context_resolves_workers() {
+        let ctx = ExecContext::default();
+        assert!(ctx.effective_workers() >= 1);
+        let fixed = ExecContext::new(KernelKind::Bitonic, 3);
+        assert_eq!(fixed.effective_workers(), 3);
+        assert_eq!(fixed.kernel, KernelKind::Bitonic);
+    }
 
     #[test]
     fn parse_algorithms() {
@@ -180,6 +328,26 @@ mod tests {
         assert_eq!(
             names,
             vec!["bucket-sort", "randomized", "thrust-merge", "radix"]
+        );
+    }
+
+    #[test]
+    fn run_in_is_kernel_invariant() {
+        let input: Vec<Key> = (0..20_000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        let mut a = input.clone();
+        let mut sim_a = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let ms_a = Algorithm::BucketSort
+            .run_in(&mut a, &mut sim_a, &ExecContext::new(KernelKind::Bitonic, 2))
+            .unwrap();
+        let mut b = input.clone();
+        let mut sim_b = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let ms_b = Algorithm::BucketSort
+            .run_in(&mut b, &mut sim_b, &ExecContext::new(KernelKind::Radix, 4))
+            .unwrap();
+        assert_eq!(a, b, "kernel choice must not change the bytes");
+        assert!(
+            (ms_a - ms_b).abs() < 1e-9,
+            "estimate must not depend on kernel: {ms_a} vs {ms_b}"
         );
     }
 

@@ -1,30 +1,45 @@
-//! Baseline: **GPU radix sort** — Satish, Harris & Garland's integer-
-//! specialized method [14], which the paper acknowledges as faster than
-//! any comparison sort "for the special case of integer sorting" (§3).
+//! Radix sorting, in two roles:
 //!
-//! LSD radix over 32-bit keys with `DIGIT_BITS`-bit digits: each pass
-//! (1) builds per-block digit histograms (coalesced read), (2) scans
-//! them, and (3) scatters keys to their digit's partition — the scatter
-//! is staged through shared memory so writes leave each block in digit-
-//! contiguous chunks (mostly coalesced, with one transaction per
-//! block-digit stream, like the sample-sort scatter).
+//! 1. **Analytic baseline** ([`RadixSort`]) — Satish, Harris &
+//!    Garland's integer-specialized GPU method [14], which the paper
+//!    acknowledges as faster than any comparison sort "for the special
+//!    case of integer sorting" (§3). LSD radix over 32-bit keys with
+//!    `DIGIT_BITS`-bit digits: each pass (1) builds per-block digit
+//!    histograms (coalesced read), (2) scans them, and (3) scatters keys
+//!    to their digit's partition — the scatter is staged through shared
+//!    memory so writes leave each block in digit-contiguous chunks.
+//!    Included because a credible reproduction of the paper's evaluation
+//!    context needs the integer-sort reference point.
 //!
-//! Included because a credible reproduction of the paper's evaluation
-//! context needs the integer-sort reference point: it bounds from below
-//! what any comparison-based method (including GPU BUCKET SORT) can
-//! achieve on u32 keys.
+//! 2. **Executed tile kernel** ([`radix_tile_sort`]) — the host kernel
+//!    behind [`crate::KernelKind::Radix`]: a byte-wise (8-bit digit)
+//!    LSD counting sort over [`crate::SortKey::radix_byte`] digits,
+//!    used for the executed Step-2 tile sorts and Step-9 bucket sorts
+//!    of Algorithm 1 and the native engine's chunk/bucket phases. It
+//!    does O(n·WIDTH_BYTES) work where the bitonic network does
+//!    O(n log² n) — ~10× fewer operations on a 2K-key tile — while
+//!    producing bit-identical output (stable LSD over the ordered bit
+//!    pattern *is* the [`crate::SortKey::to_bits`] total order, with
+//!    the record path's tie-breaking index in the low digits). The
+//!    traffic **ledger is unaffected by kernel choice**: it keeps
+//!    recording the paper's bitonic CE/traffic analytics, so Figures
+//!    3–7 and every analytic twin stay byte-identical.
 
 use crate::error::Result;
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
 use crate::sim::{CostModel, GpuSim};
-use crate::{Key, KEY_BYTES};
+use crate::{Key, SortKey, KEY_BYTES};
 
 /// Bits per radix digit (4 → 16 counting bins, 8 passes over u32).
 pub const DIGIT_BITS: u32 = 4;
 
 /// Counting bins per pass.
 pub const RADIX: usize = 1 << DIGIT_BITS;
+
+/// Minimum run length for the executed byte-wise counting kernel; runs
+/// below it take the comparison path inside [`radix_tile_sort`].
+const RADIX_MIN_N: usize = 64;
 
 /// Parameters of the radix baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -114,6 +129,85 @@ impl RadixSort {
     }
 }
 
+/// Executed LSD counting-sort kernel over [`SortKey`] radix bytes — the
+/// [`crate::KernelKind::Radix`] tile/bucket kernel.
+///
+/// Sorts `data` in place by [`SortKey::to_bits`] order using `scratch`
+/// as the ping-pong buffer (resized to `data.len()`; checked out of a
+/// [`crate::util::ScratchArena`] on the hot path so steady-state calls
+/// allocate nothing). One counting + scatter pass per
+/// [`SortKey::WIDTH_BYTES`] byte; a pass whose byte is constant across
+/// the input (common in the high bytes of small-ranged keys) is skipped
+/// — the skip changes wall time only, never the output.
+pub fn radix_tile_sort<K: SortKey>(data: &mut [K], scratch: &mut Vec<K>) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    // Below this the fixed per-pass cost (256-bin clear + prefix, ×
+    // WIDTH_BYTES passes) dominates: the comparison sort is cheaper and
+    // produces the identical output (the sorted sequence of a bit
+    // multiset is unique; records have no ties at all).
+    if n < RADIX_MIN_N {
+        data.sort_unstable_by(K::key_cmp);
+        return;
+    }
+    scratch.clear();
+    scratch.resize(n, data[0]);
+    let mut counts = [0usize; 256];
+    let mut flipped = false;
+    for byte in 0..K::WIDTH_BYTES {
+        let single_bin = if flipped {
+            count_pass(scratch, byte, &mut counts)
+        } else {
+            count_pass(data, byte, &mut counts)
+        };
+        if single_bin {
+            continue;
+        }
+        exclusive_prefix(&mut counts);
+        if flipped {
+            scatter_pass(scratch, data, byte, &mut counts);
+        } else {
+            scatter_pass(data, scratch, byte, &mut counts);
+        }
+        flipped = !flipped;
+    }
+    if flipped {
+        data.copy_from_slice(scratch);
+    }
+}
+
+/// Histogram one digit position; true when a single bin holds every
+/// element (the pass would be an order-preserving no-op).
+fn count_pass<K: SortKey>(src: &[K], byte: usize, counts: &mut [usize; 256]) -> bool {
+    counts.fill(0);
+    for x in src {
+        counts[x.radix_byte(byte) as usize] += 1;
+    }
+    counts.iter().any(|&c| c == src.len())
+}
+
+/// In-place exclusive prefix sum over the 256 digit counts.
+fn exclusive_prefix(counts: &mut [usize; 256]) {
+    let mut acc = 0usize;
+    for c in counts.iter_mut() {
+        let t = *c;
+        *c = acc;
+        acc += t;
+    }
+}
+
+/// Stable scatter of `src` into `dst` by the digit at `byte`, advancing
+/// the per-digit cursors in `starts`.
+fn scatter_pass<K: SortKey>(src: &[K], dst: &mut [K], byte: usize, starts: &mut [usize; 256]) {
+    for &x in src {
+        let d = x.radix_byte(byte) as usize;
+        dst[starts[d]] = x;
+        starts[d] += 1;
+    }
+}
+
 fn record_pass(n: usize, tile: usize, scatter: bool, ledger: &mut Ledger) {
     let blocks = n.div_ceil(tile).max(1) as u64;
     ledger.begin_kernel(KernelClass::RadixPass, blocks, MAX_BLOCK_THREADS);
@@ -169,6 +263,76 @@ mod tests {
             .sort(&mut keys.clone(), &mut sim2)
             .unwrap();
         assert!(radix.total_estimated_ms(&spec) < bs.total_estimated_ms(&spec));
+    }
+
+    #[test]
+    fn tile_kernel_matches_comparison_sort() {
+        let mut scratch = Vec::new();
+        // u32 full range, reverse, constant, tiny range (skip-pass path).
+        for input in [
+            (0..5000u32).map(|x| x.wrapping_mul(2654435761)).collect::<Vec<_>>(),
+            (0..5000u32).rev().collect(),
+            vec![42u32; 5000],
+            (0..5000u32).map(|x| x % 7).collect(),
+            vec![],
+            vec![3u32],
+        ] {
+            let mut a = input.clone();
+            radix_tile_sort(&mut a, &mut scratch);
+            let mut expect = input.clone();
+            expect.sort_unstable();
+            assert_eq!(a, expect);
+        }
+        // i64 negatives.
+        let input: Vec<i64> = (0..3000i64).map(|x| (x - 1500) * 2654435761).collect();
+        let mut a = input.clone();
+        let mut scratch64 = Vec::new();
+        radix_tile_sort(&mut a, &mut scratch64);
+        let mut expect = input;
+        expect.sort_unstable();
+        assert_eq!(a, expect);
+        // f32 under total order, NaN and signed zeros included.
+        let mut input: Vec<f32> = (0..2000u32)
+            .map(|x| x.wrapping_mul(2654435761) as f32 - 2e9)
+            .collect();
+        input[3] = f32::NAN;
+        input[5] = -0.0;
+        input[7] = 0.0;
+        input[11] = f32::NEG_INFINITY;
+        let mut a = input.clone();
+        let mut fscratch = Vec::new();
+        radix_tile_sort(&mut a, &mut fscratch);
+        let mut expect = input;
+        expect.sort_unstable_by(<f32 as SortKey>::key_cmp);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn tile_kernel_is_stable_on_records() {
+        use crate::Record;
+        // Duplicate keys: the (key, idx) order is total, so the kernel
+        // must keep equal keys in index order — the stability the
+        // key–value path depends on.
+        let recs: Vec<Record<u32>> = (0..4000u32)
+            .map(|i| Record {
+                key: i.wrapping_mul(2654435761) % 16,
+                idx: i,
+            })
+            .collect();
+        let mut a = recs.clone();
+        let mut scratch = Vec::new();
+        radix_tile_sort(&mut a, &mut scratch);
+        let mut expect = recs;
+        expect.sort_unstable_by(<Record<u32>>::key_cmp);
+        assert_eq!(a, expect);
+        for w in a.windows(2) {
+            if w[0].key == w[1].key {
+                assert!(w[0].idx < w[1].idx);
+            }
+        }
     }
 
     #[test]

@@ -19,11 +19,26 @@ use crate::{SortKey, KEY_BYTES};
 /// Requires `s` dividing `tile`. Returns the s·m samples in sublist
 /// order.
 pub fn local_samples<K: SortKey>(keys: &[K], tile: usize, s: usize, ledger: &mut Ledger) -> Vec<K> {
+    let mut out = Vec::new();
+    local_samples_into(keys, tile, s, &mut out, ledger);
+    out
+}
+
+/// [`local_samples`] into a caller-provided (typically arena-recycled)
+/// buffer — the allocation-free form the engines use.
+pub fn local_samples_into<K: SortKey>(
+    keys: &[K],
+    tile: usize,
+    s: usize,
+    out: &mut Vec<K>,
+    ledger: &mut Ledger,
+) {
     validate(tile, s);
     assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
     let m = keys.len() / tile;
     let stride = tile / s;
-    let mut out = Vec::with_capacity(m * s);
+    out.clear();
+    out.reserve(m * s);
     for t in keys.chunks_exact(tile) {
         for p in 0..s {
             out.push(t[(p + 1) * stride - 1]);
@@ -32,7 +47,6 @@ pub fn local_samples<K: SortKey>(keys: &[K], tile: usize, s: usize, ledger: &mut
     if m > 0 {
         record_local(m, s, K::WIDTH_BYTES, ledger);
     }
-    out
 }
 
 /// Ledger-only twin of [`local_samples`] at the classic `u32` width.

@@ -31,13 +31,14 @@
 //!   device's memory (≥ 512M keys) without materializing data.
 
 use super::bucket_sort::{BucketSort, BucketSortParams, BucketSortReport};
-use super::{bitonic, indexing, prefix, sampling};
+use super::{bitonic, indexing, prefix, sampling, ExecContext};
 use crate::error::Result;
-use crate::key::{tag_records, untag_records, Record};
+use crate::key::Record;
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::pool::DevicePool;
 use crate::sim::spec::MAX_BLOCK_THREADS;
 use crate::sim::CostModel;
+use crate::util::ScratchArena;
 use crate::{SortKey, KEY_BYTES};
 
 /// Tunable parameters of the sharded sort.
@@ -183,6 +184,19 @@ impl ShardedSort {
         keys: &mut [K],
         pool: &mut DevicePool,
     ) -> Result<ShardedSortReport> {
+        self.sort_in(keys, pool, &ExecContext::default())
+    }
+
+    /// [`ShardedSort::sort`] with explicit execution resources: shard
+    /// copies, the exchange target and the merge ping-pong buffers come
+    /// from `ctx.arena`, and the per-device [`BucketSort`] phase runs
+    /// with the context's kernel and worker budget.
+    pub fn sort_in<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        pool: &mut DevicePool,
+        ctx: &ExecContext,
+    ) -> Result<ShardedSortReport> {
         let n = keys.len();
         let elem_bytes = K::WIDTH_BYTES;
         let p = pool.len();
@@ -192,19 +206,19 @@ impl ShardedSort {
         // them to the highest-capacity device. The rule depends only on
         // (n, pool), keeping Execute/Analytic agreement.
         if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
-            return self.fallback(FallbackInput::Execute(keys), pool);
+            return self.fallback(FallbackInput::Execute(keys), pool, ctx);
         }
         let sorter = BucketSort::try_new(self.params.sort)?;
 
         // Phase 1: per-device Algorithm 1 over the capacity-weighted
         // shards (devices run in parallel; ledgers are per-sim).
         let mut local = Vec::with_capacity(p);
-        let mut shards: Vec<Vec<K>> = Vec::with_capacity(p);
+        let mut shards: Vec<crate::util::ScratchBuf<K>> = Vec::with_capacity(p);
         let mut off = 0usize;
         for (d, &len) in shares.iter().enumerate() {
-            let mut shard = keys[off..off + len].to_vec();
+            let mut shard = ctx.arena.take_from(&keys[off..off + len]);
             off += len;
-            local.push(sorter.sort(&mut shard, pool.sim_mut(d))?);
+            local.push(sorter.sort_in(shard.as_mut_slice(), pool.sim_mut(d), ctx)?);
             shards.push(shard);
         }
 
@@ -217,7 +231,8 @@ impl ShardedSort {
             .alloc(plan.padded_samples * elem_bytes + 3 * p * p * KEY_BYTES)?;
 
         // Regular samples from every sorted shard (the PSRS step).
-        let mut samples: Vec<K> = Vec::with_capacity(plan.padded_samples);
+        let mut samples = ctx.arena.take_empty::<K>();
+        samples.reserve(plan.padded_samples);
         for (shard, &t) in shards.iter().zip(&plan.sample_counts) {
             for k in 0..t {
                 samples.push(shard[(k + 1) * shard.len() / t - 1]);
@@ -235,7 +250,7 @@ impl ShardedSort {
         // Sort all samples globally; p−1 equidistant picks become the
         // cross-device splitters.
         samples.resize(plan.padded_samples, K::PAD);
-        bitonic::global_sort(&mut samples, self.params.sort.tile, &mut combine, 0);
+        bitonic::global_sort(samples.as_mut_slice(), self.params.sort.tile, &mut combine, 0);
         let splitters =
             sampling::select_splitters(&samples[..plan.total_samples], p, &mut combine);
 
@@ -248,7 +263,7 @@ impl ShardedSort {
             for (j, bound) in splitters
                 .iter()
                 .map(|&sp| {
-                    let (pos, pr) = indexing::fixed_lower_bound(shard, sp);
+                    let (pos, pr) = indexing::fixed_lower_bound(shard.as_slice(), sp);
                     probes += pr;
                     pos
                 })
@@ -265,7 +280,7 @@ impl ShardedSort {
         // Destination layout (column-major, exactly Step 7's machinery
         // with m = s = p) and the all-to-all exchange.
         let layout = prefix::column_prefix(&counts, p, p, &mut combine);
-        let mut out = vec![K::PAD; n];
+        let mut out = ctx.arena.take(n, K::PAD);
         for (i, shard) in shards.iter().enumerate() {
             let mut seg_start = 0usize;
             for j in 0..p {
@@ -297,7 +312,7 @@ impl ShardedSort {
                 bounds.push(bounds[i] + counts[i * p + j] as usize);
             }
             debug_assert_eq!(bounds[p], len);
-            let rounds = merge_runs(&mut out[start..start + len], &bounds);
+            let rounds = merge_runs(&mut out[start..start + len], &bounds, &ctx.arena);
             debug_assert_eq!(rounds, plan.merge_rounds);
             let mut ledger = Ledger::default();
             record_merge(
@@ -312,7 +327,7 @@ impl ShardedSort {
             merge.push(ledger);
         }
 
-        keys.copy_from_slice(&out);
+        keys.copy_from_slice(out.as_slice());
         Ok(ShardedSortReport {
             n,
             shard_sizes: shares,
@@ -334,10 +349,22 @@ impl ShardedSort {
         payload: &mut Vec<u64>,
         pool: &mut DevicePool,
     ) -> Result<ShardedSortReport> {
+        self.sort_pairs_in(keys, payload, pool, &ExecContext::default())
+    }
+
+    /// [`ShardedSort::sort_pairs`] with explicit execution resources.
+    pub fn sort_pairs_in<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        payload: &mut Vec<u64>,
+        pool: &mut DevicePool,
+        ctx: &ExecContext,
+    ) -> Result<ShardedSortReport> {
         crate::key::validate_key_value(keys.len(), payload.len())?;
-        let mut recs: Vec<Record<K>> = tag_records(keys)?;
-        let report = self.sort(&mut recs, pool)?;
-        untag_records(&recs, keys, payload);
+        let mut recs = ctx.arena.take_empty::<Record<K>>();
+        crate::key::tag_records_into(keys, &mut recs)?;
+        let report = self.sort_in(recs.as_mut_slice(), pool, ctx)?;
+        crate::key::untag_records_in(recs.as_slice(), keys, payload, &ctx.arena);
         Ok(report)
     }
 
@@ -361,7 +388,11 @@ impl ShardedSort {
         let p = pool.len();
         let shares = pool.shares(n);
         if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
-            return self.fallback(FallbackInput::<u32>::Analytic(n, elem_bytes), pool);
+            return self.fallback(
+                FallbackInput::<u32>::Analytic(n, elem_bytes),
+                pool,
+                &ExecContext::default(),
+            );
         }
         let sorter = BucketSort::try_new(self.params.sort)?;
 
@@ -430,6 +461,7 @@ impl ShardedSort {
         &self,
         input: FallbackInput<'_, K>,
         pool: &mut DevicePool,
+        ctx: &ExecContext,
     ) -> Result<ShardedSortReport> {
         let p = pool.len();
         let n = input.len();
@@ -446,9 +478,9 @@ impl ShardedSort {
                 for d in 0..p {
                     local.push(if d == target {
                         max_out_shard = n as u64;
-                        sorter.sort(&mut keys[..], pool.sim_mut(d))?
+                        sorter.sort_in(&mut keys[..], pool.sim_mut(d), ctx)?
                     } else {
-                        sorter.sort(&mut [] as &mut [K], pool.sim_mut(d))?
+                        sorter.sort_in(&mut [] as &mut [K], pool.sim_mut(d), ctx)?
                     });
                 }
             }
@@ -534,10 +566,11 @@ fn merge_rounds(p: usize) -> u32 {
 /// (ascending positions; `bounds[0] == 0`,
 /// `bounds[last] == region.len()`; empty runs allowed). Returns the
 /// number of rounds executed — always [`merge_rounds`] of the run
-/// count, the shape the ledger prices.
-fn merge_runs<K: SortKey>(region: &mut [K], bounds: &[usize]) -> u32 {
-    let mut a = region.to_vec();
-    let mut b = vec![K::PAD; region.len()];
+/// count, the shape the ledger prices. Ping-pong buffers come from the
+/// arena.
+fn merge_runs<K: SortKey>(region: &mut [K], bounds: &[usize], arena: &ScratchArena) -> u32 {
+    let mut a = arena.take_from(region);
+    let mut b = arena.take(region.len(), K::PAD);
     let mut cur: Vec<usize> = bounds.to_vec();
     let mut rounds = 0u32;
     while cur.len() > 2 {
@@ -798,7 +831,7 @@ mod tests {
         // merge_runs over mixed-length (and empty) runs.
         let mut v: Vec<Key> = vec![5, 9, 42, 1, 3, 4, 8, 0, 2];
         let bounds = [0usize, 3, 3, 7, 9];
-        let rounds = merge_runs(&mut v, &bounds);
+        let rounds = merge_runs(&mut v, &bounds, &ScratchArena::new());
         assert_eq!(v, vec![0, 1, 2, 3, 4, 5, 8, 9, 42]);
         assert_eq!(rounds, merge_rounds(4));
     }

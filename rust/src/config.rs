@@ -5,6 +5,7 @@
 //! partial configs stay forward-compatible.
 
 use crate::algos::bucket_sort::BucketSortParams;
+use crate::algos::KernelKind;
 use crate::error::{Error, Result};
 use crate::exec::NativeParams;
 use crate::sim::{DevicePool, GpuModel};
@@ -96,6 +97,11 @@ pub struct ServiceConfig {
     pub devices: Vec<GpuModel>,
     /// Algorithm-1 parameters (tile, s).
     pub sort: BucketSortParams,
+    /// Executed tile/bucket kernel for every engine's hot path
+    /// (`radix` by default; `bitonic` restores the paper's comparison
+    /// path — outputs are byte-identical either way, see
+    /// [`KernelKind`]).
+    pub kernel: KernelKind,
     /// Native engine parameters.
     pub native: NativeParams,
     /// Batcher parameters.
@@ -115,6 +121,7 @@ impl Default for ServiceConfig {
             device: GpuModel::Gtx285_2G,
             devices: DevicePool::DEFAULT_DEVICES.to_vec(),
             sort: BucketSortParams::default(),
+            kernel: KernelKind::default(),
             native: NativeParams::default(),
             batch: BatchConfig::default(),
             verify: false,
@@ -176,6 +183,11 @@ impl ServiceConfig {
                         tile: usize_field(val, "tile").unwrap_or(cfg.sort.tile),
                         s: usize_field(val, "s").unwrap_or(cfg.sort.s),
                     };
+                }
+                "kernel" => {
+                    let s = str_field(val, "kernel")?;
+                    cfg.kernel = KernelKind::parse(&s)
+                        .ok_or_else(|| Error::Config(format!("unknown kernel {s:?}")))?;
                 }
                 "native" => {
                     cfg.native = NativeParams {
@@ -268,6 +280,7 @@ impl ServiceConfig {
                     ("s", Json::num(self.sort.s as f64)),
                 ]),
             ),
+            ("kernel", Json::str(self.kernel.id())),
             (
                 "native",
                 Json::obj(vec![
@@ -354,6 +367,16 @@ mod tests {
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.sort, BucketSortParams::default());
         assert_eq!(cfg.batch, BatchConfig::default());
+        assert_eq!(cfg.kernel, KernelKind::Radix);
+    }
+
+    #[test]
+    fn kernel_field_roundtrips_and_validates() {
+        let cfg = ServiceConfig::from_json(r#"{"kernel":"bitonic"}"#).unwrap();
+        assert_eq!(cfg.kernel, KernelKind::Bitonic);
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        assert!(ServiceConfig::from_json(r#"{"kernel":"quick"}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"kernel":3}"#).is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
 use crate::algos::sharded::{ShardedSort, ShardedSortParams};
+use crate::algos::ExecContext;
 use crate::config::{EngineKind, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::exec::NativeEngine;
@@ -61,10 +62,13 @@ pub struct NativeSortEngine {
 }
 
 impl NativeSortEngine {
-    /// Build from config.
+    /// Build from config: the inner engine holds a persistent
+    /// [`ExecContext`] (kernel from `cfg.kernel`, arena warm across
+    /// batches), so repeated batches of similar shapes allocate
+    /// nothing.
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
         Ok(NativeSortEngine {
-            engine: NativeEngine::new(cfg.native)?,
+            engine: NativeEngine::with_context(cfg.native, ExecContext::new(cfg.kernel, 0))?,
         })
     }
 
@@ -109,43 +113,50 @@ impl SortEngine for NativeSortEngine {
 
 /// Simulated-GPU backend: Algorithm 1 with full traffic accounting and
 /// the device's memory ceiling (which key–value and wide-key jobs reach
-/// proportionally sooner).
+/// proportionally sooner). The simulator and the execution context are
+/// engine-resident: each job resets the sim's ledger/allocation state
+/// instead of constructing a fresh one, and all host working buffers
+/// come from the warm arena.
 pub struct SimSortEngine {
     spec: GpuSpec,
     sorter: BucketSort,
+    sim: GpuSim,
+    ctx: ExecContext,
 }
 
 impl SimSortEngine {
     /// Build from config.
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
-        Ok(SimSortEngine {
-            spec: cfg.device.spec(),
-            sorter: BucketSort::try_new(cfg.sort)?,
-        })
+        let mut engine = Self::from_parts(cfg.device.spec(), cfg.sort)?;
+        engine.ctx.kernel = cfg.kernel;
+        Ok(engine)
     }
 
     /// Build directly from a spec and params (tests, experiments).
     pub fn from_parts(spec: GpuSpec, params: BucketSortParams) -> Result<Self> {
         Ok(SimSortEngine {
+            sim: GpuSim::new(spec.clone()),
             spec,
             sorter: BucketSort::try_new(params)?,
+            ctx: ExecContext::default(),
         })
     }
 }
 
 fn sim_job<K: SortKey>(
     sorter: &BucketSort,
-    spec: &GpuSpec,
+    sim: &mut GpuSim,
+    ctx: &ExecContext,
     keys: &mut [K],
     payload: &mut Option<Vec<u64>>,
 ) -> Result<()> {
-    let mut sim = GpuSim::new(spec.clone());
+    sim.reset();
     match payload {
         None => {
-            sorter.sort(keys, &mut sim)?;
+            sorter.sort_in(keys, sim, ctx)?;
         }
         Some(vals) => {
-            sorter.sort_pairs(keys, vals, &mut sim)?;
+            sorter.sort_pairs_in(keys, vals, sim, ctx)?;
         }
     }
     Ok(())
@@ -161,7 +172,7 @@ impl SortEngine for SimSortEngine {
             .map(|mut job| {
                 for_each_key_vec_mut!(
                     job.keys,
-                    v => sim_job(&self.sorter, &self.spec, v, &mut job.payload)
+                    v => sim_job(&self.sorter, &mut self.sim, &self.ctx, v, &mut job.payload)
                 )?;
                 Ok(job)
             })
@@ -175,10 +186,15 @@ impl SortEngine for SimSortEngine {
 
 /// Sharded multi-device backend: Algorithm 1 per simulated device over
 /// a capacity-weighted partition, plus the deterministic cross-device
-/// combine of [`crate::algos::sharded`].
+/// combine of [`crate::algos::sharded`]. The device pool and execution
+/// context are engine-resident: each job resets the pool's sims instead
+/// of rebuilding it, and shard/exchange/merge buffers come from the
+/// warm arena.
 pub struct ShardedSortEngine {
     models: Vec<GpuModel>,
     sorter: ShardedSort,
+    pool: DevicePool,
+    ctx: ExecContext,
     /// Held when the devices were checked out of a shared
     /// [`crate::sim::DeviceRegistry`] (multi-worker schedulers); the
     /// devices return to the registry when the engine drops.
@@ -186,15 +202,17 @@ pub struct ShardedSortEngine {
 }
 
 impl ShardedSortEngine {
-    /// Build from config (`cfg.devices` + `cfg.sort`).
+    /// Build from config (`cfg.devices` + `cfg.sort` + `cfg.kernel`).
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
-        Self::from_parts(
+        let mut engine = Self::from_parts(
             cfg.devices.clone(),
             ShardedSortParams {
                 sort: cfg.sort,
                 ..Default::default()
             },
-        )
+        )?;
+        engine.ctx.kernel = cfg.kernel;
+        Ok(engine)
     }
 
     /// Build directly from a device list and parameters (tests,
@@ -206,17 +224,26 @@ impl ShardedSortEngine {
             ));
         }
         Ok(ShardedSortEngine {
+            pool: DevicePool::new(&models)?,
             models,
             sorter: ShardedSort::try_new(params)?,
+            ctx: ExecContext::default(),
             _lease: None,
         })
     }
 
     /// Build over devices leased from a shared registry — the
     /// multi-worker path, where each scheduler worker holds a disjoint
-    /// subset of the configured pool.
-    pub fn with_lease(lease: DeviceLease, params: ShardedSortParams) -> Result<Self> {
+    /// subset of the configured pool. `kernel` is the executed
+    /// tile/bucket kernel (`cfg.kernel`), passed explicitly so the
+    /// lease path cannot silently diverge from [`ShardedSortEngine::new`].
+    pub fn with_lease(
+        lease: DeviceLease,
+        params: ShardedSortParams,
+        kernel: crate::KernelKind,
+    ) -> Result<Self> {
         let mut engine = Self::from_parts(lease.models().to_vec(), params)?;
+        engine.ctx.kernel = kernel;
         engine._lease = Some(lease);
         Ok(engine)
     }
@@ -229,17 +256,18 @@ impl ShardedSortEngine {
 
 fn sharded_job<K: SortKey>(
     sorter: &ShardedSort,
-    models: &[GpuModel],
+    pool: &mut DevicePool,
+    ctx: &ExecContext,
     keys: &mut [K],
     payload: &mut Option<Vec<u64>>,
 ) -> Result<()> {
-    let mut pool = DevicePool::new(models)?;
+    pool.reset();
     match payload {
         None => {
-            sorter.sort(keys, &mut pool)?;
+            sorter.sort_in(keys, pool, ctx)?;
         }
         Some(vals) => {
-            sorter.sort_pairs(keys, vals, &mut pool)?;
+            sorter.sort_pairs_in(keys, vals, pool, ctx)?;
         }
     }
     Ok(())
@@ -255,7 +283,7 @@ impl SortEngine for ShardedSortEngine {
             .map(|mut job| {
                 for_each_key_vec_mut!(
                     job.keys,
-                    v => sharded_job(&self.sorter, &self.models, v, &mut job.payload)
+                    v => sharded_job(&self.sorter, &mut self.pool, &self.ctx, v, &mut job.payload)
                 )?;
                 Ok(job)
             })
@@ -341,6 +369,7 @@ impl SortEngine for PjrtSortEngine {
 pub struct PacedSimEngine {
     spec: GpuSpec,
     sorter: BucketSort,
+    sim: GpuSim,
     time_scale: f64,
 }
 
@@ -354,8 +383,10 @@ impl PacedSimEngine {
                 "time_scale must be finite and non-negative".into(),
             ));
         }
+        let spec = model.spec();
         Ok(PacedSimEngine {
-            spec: model.spec(),
+            sim: GpuSim::new(spec.clone()),
+            spec,
             sorter: BucketSort::try_new(params)?,
             time_scale,
         })
@@ -390,16 +421,17 @@ impl SortEngine for PacedSimEngine {
         let results: Vec<Result<JobData>> = jobs
             .into_iter()
             .map(|mut job| {
-                let mut sim = GpuSim::new(self.spec.clone());
                 // Analytic pricing enforces the memory ceiling and
                 // yields the deterministic device estimate at the job's
                 // element width; the data work itself is a plain host
-                // sort.
+                // sort. The engine-resident sim is reset per job — no
+                // per-job construction.
+                self.sim.reset();
                 let elem_bytes =
                     job.keys.width_bytes() + if job.payload.is_some() { 4 } else { 0 };
                 self.sorter
-                    .sort_analytic_bytes(job.keys.len(), elem_bytes, &mut sim)?;
-                device_ms += sim.estimated_ms();
+                    .sort_analytic_bytes(job.keys.len(), elem_bytes, &mut self.sim)?;
+                device_ms += self.sim.estimated_ms();
                 for_each_key_vec_mut!(job.keys, v => paced_host_sort(v, &mut job.payload))?;
                 Ok(job)
             })
@@ -453,6 +485,7 @@ pub fn build_worker_engine(
                     sort: cfg.sort,
                     ..Default::default()
                 },
+                cfg.kernel,
             )?))
         }
         _ => build_engine(cfg),
@@ -746,6 +779,7 @@ mod tests {
             ..GpuModel::Gtx260.spec()
         };
         let mut paced_tiny = PacedSimEngine {
+            sim: GpuSim::new(tiny.clone()),
             spec: tiny,
             sorter: BucketSort::try_new(BucketSortParams { tile: 256, s: 16 }).unwrap(),
             time_scale: 0.0,
@@ -780,6 +814,17 @@ mod tests {
         let e1 = build_worker_engine(&cfg, 1, Some(&registry)).unwrap();
         assert_eq!(e0.kind(), EngineKind::Sharded);
         assert_eq!(e1.kind(), EngineKind::Sharded);
+        // cfg.kernel must survive the lease path (regression: it used
+        // to be dropped, leaving the worker engines on the default).
+        let leased = ShardedSortEngine::with_lease(
+            DeviceRegistry::new(cfg.devices.clone())
+                .checkout(1)
+                .unwrap(),
+            ShardedSortParams::default(),
+            crate::KernelKind::Bitonic,
+        )
+        .unwrap();
+        assert_eq!(leased.ctx.kernel, crate::KernelKind::Bitonic);
         // 4 devices over 2 workers: both leases hold 2, none left over.
         assert_eq!(registry.available(), 0);
         // A third worker would oversubscribe and is refused.

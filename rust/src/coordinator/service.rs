@@ -54,15 +54,27 @@ enum ClientMsg {
 
 /// Owns the intake sender; the last clone's drop tells the intake loop
 /// every client is gone (workers also hold senders for `SlotFreed`, so
-/// channel disconnection can no longer signal it).
+/// channel disconnection can no longer signal it) and then **joins the
+/// intake thread** — it used to be spawned detached and leaked past
+/// shutdown, leaving a background thread (and its scheduler, batcher
+/// and metrics references) alive after the service was gone.
 #[derive(Debug)]
 struct ClientCore {
     tx: mpsc::Sender<ClientMsg>,
+    intake: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Drop for ClientCore {
     fn drop(&mut self) {
         let _ = self.tx.send(ClientMsg::ClientsGone);
+        // The intake loop exits on ClientsGone (or has already exited
+        // after an explicit shutdown); joining here guarantees no
+        // service thread outlives the last client handle. Drop has
+        // exclusive access (the Arc's last-owner drop runs once), so a
+        // plain Option suffices.
+        if let Some(handle) = self.intake.take() {
+            let _ = handle.join();
+        }
     }
 }
 
@@ -203,13 +215,16 @@ impl SortService {
 
         let intake_metrics = metrics.clone();
         let batcher = Batcher::new(cfg.batch);
-        std::thread::Builder::new()
+        let intake = std::thread::Builder::new()
             .name("gbs-intake".into())
             .spawn(move || intake_loop(client_rx, scheduler, batcher, intake_metrics))
             .map_err(|e| Error::Coordinator(format!("spawn intake thread: {e}")))?;
 
         Ok(SortClient {
-            core: Arc::new(ClientCore { tx: client_tx }),
+            core: Arc::new(ClientCore {
+                tx: client_tx,
+                intake: Some(intake),
+            }),
             metrics,
             next_id: Arc::new(AtomicU64::new(1)),
         })

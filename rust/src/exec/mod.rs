@@ -2,10 +2,13 @@
 //!
 //! While [`crate::sim`] reproduces the paper's *GPU* performance
 //! figures, this module is the *real* high-performance path of the
-//! library: Algorithm 1 executed on host cores, one rayon worker
-//! standing in for one SM with a scratchpad-sized chunk. This is what
-//! the coordinator's `native` engine serves requests with, and the
-//! subject of the §Perf optimization pass.
+//! library: Algorithm 1 executed on host cores, one resident pool
+//! worker ([`crate::util::pool`]) standing in for one SM with a
+//! scratchpad-sized chunk, scratch buffers recycled through the
+//! engine's [`crate::ExecContext`] arena, and the tile/bucket kernel
+//! selected by [`crate::KernelKind`]. This is what the coordinator's
+//! `native` engine serves requests with, and the subject of the §Perf
+//! optimization pass.
 
 pub mod native;
 

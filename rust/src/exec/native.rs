@@ -17,9 +17,10 @@
 //! (≤ 2n/s + chunking slack), so the critical path is balanced without
 //! work stealing.
 
+use crate::algos::{radix, ExecContext, KernelKind};
 use crate::error::Result;
-use crate::key::{tag_records, untag_records, Record};
-use crate::util::pool;
+use crate::key::Record;
+use crate::util::{pool, ScratchArena};
 use crate::SortKey;
 use std::time::Instant;
 
@@ -109,22 +110,44 @@ impl NativeReport {
 pub struct NativeEngine {
     params: NativeParams,
     workers: usize,
+    /// Persistent execution resources: the scratch arena (Step-8 output
+    /// buffer, record vectors, radix scratch) and the kernel selection.
+    /// Held for the engine's lifetime, so repeated sorts of similar
+    /// shapes allocate nothing.
+    ctx: ExecContext,
 }
 
 impl NativeEngine {
-    /// Build an engine.
+    /// Build an engine with a default [`ExecContext`] (radix kernel,
+    /// fresh arena).
     pub fn new(params: NativeParams) -> Result<Self> {
+        Self::with_context(params, ExecContext::default())
+    }
+
+    /// Build an engine around explicit execution resources (kernel
+    /// selection, shared arena).
+    pub fn with_context(params: NativeParams, mut ctx: ExecContext) -> Result<Self> {
         let workers = if params.workers == 0 {
             pool::default_workers()
         } else {
             params.workers
         };
-        Ok(NativeEngine { params, workers })
+        ctx.workers = workers;
+        Ok(NativeEngine {
+            params,
+            workers,
+            ctx,
+        })
     }
 
     /// The parameters in use.
     pub fn params(&self) -> &NativeParams {
         &self.params
+    }
+
+    /// The execution context (kernel, arena) in use.
+    pub fn context(&self) -> &ExecContext {
+        &self.ctx
     }
 
     /// Worker (virtual SM) count.
@@ -138,10 +161,10 @@ impl NativeEngine {
         let start = Instant::now();
         // With one worker the PSRS machinery is pure overhead (an extra
         // full copy + partition passes) — go straight to the sequential
-        // sort (§Perf).
+        // kernel (§Perf).
         if n <= self.params.sequential_cutoff || self.workers <= 1 {
             let t0 = Instant::now();
-            keys.sort_unstable_by(K::key_cmp);
+            sort_run(keys, self.ctx.kernel, &self.ctx.arena);
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             return NativeReport {
                 n,
@@ -172,9 +195,10 @@ impl NativeEngine {
         payload: &mut Vec<u64>,
     ) -> Result<NativeReport> {
         crate::key::validate_key_value(keys.len(), payload.len())?;
-        let mut recs: Vec<Record<K>> = tag_records(keys)?;
-        let report = self.sort(&mut recs);
-        untag_records(&recs, keys, payload);
+        let mut recs = self.ctx.arena.take_empty::<Record<K>>();
+        crate::key::tag_records_into(keys, &mut recs)?;
+        let report = self.sort(recs.as_mut_slice());
+        crate::key::untag_records_in(recs.as_slice(), keys, payload, &self.ctx.arena);
         Ok(report)
     }
 
@@ -187,10 +211,13 @@ impl NativeEngine {
         let buckets = (workers * self.params.bucket_factor).max(2);
         let mut phases = PhaseTimes::default();
 
-        // Steps 1–2: parallel chunk sorts.
+        // Steps 1–2: parallel chunk sorts with the selected kernel
+        // (scratch per worker from the arena).
         let t0 = Instant::now();
+        let kernel = self.ctx.kernel;
+        let arena = &self.ctx.arena;
         pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| {
-            c.sort_unstable_by(K::key_cmp)
+            sort_run(c, kernel, arena)
         });
         phases.local_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -245,12 +272,13 @@ impl NativeEngine {
 
         // Step 8: relocation — parallel per *bucket*, each bucket
         // gathering its segments from every chunk into a disjoint
-        // output slice.
+        // output slice (the output buffer is arena-recycled, so the
+        // steady state performs no allocation here).
         let t0 = Instant::now();
-        let mut out = vec![K::PAD; n];
+        let mut out = self.ctx.arena.take(n, K::PAD);
         {
             let mut slices: Vec<&mut [K]> = Vec::with_capacity(buckets);
-            let mut rest: &mut [K] = &mut out;
+            let mut rest: &mut [K] = out.as_mut_slice();
             for j in 0..buckets {
                 let len = bucket_start[j + 1] - bucket_start[j];
                 let (head, tail) = rest.split_at_mut(len);
@@ -273,18 +301,19 @@ impl NativeEngine {
         }
         phases.relocation_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        // Step 9: parallel bucket sorts over disjoint output slices.
+        // Step 9: parallel bucket sorts over disjoint output slices,
+        // same kernel as Step 2.
         let t0 = Instant::now();
         {
             let mut slices: Vec<&mut [K]> = Vec::with_capacity(buckets);
-            let mut rest: &mut [K] = &mut out;
+            let mut rest: &mut [K] = out.as_mut_slice();
             for j in 0..buckets {
                 let len = bucket_start[j + 1] - bucket_start[j];
                 let (head, tail) = rest.split_at_mut(len);
                 slices.push(head);
                 rest = tail;
             }
-            pool::parallel_slices_mut(slices, workers, |_, b| b.sort_unstable_by(K::key_cmp));
+            pool::parallel_slices_mut(slices, workers, |_, b| sort_run(b, kernel, arena));
         }
         phases.bucket_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -292,7 +321,7 @@ impl NativeEngine {
             .map(|j| bucket_start[j + 1] - bucket_start[j])
             .max()
             .unwrap_or(0);
-        keys.copy_from_slice(&out);
+        keys.copy_from_slice(out.as_slice());
 
         NativeReport {
             n,
@@ -302,6 +331,21 @@ impl NativeEngine {
             wall_ms: 0.0, // filled by caller
             max_bucket,
         }
+    }
+}
+
+/// Sort one contiguous run with the selected kernel: the LSD counting
+/// kernel over radix bytes, or the comparison path —
+/// `slice::sort_unstable_by` on key bits, the host-optimal equivalent
+/// of the GPU engines' bitonic network (the network itself would waste
+/// the CPU's branch predictor on O(n log² n) work).
+fn sort_run<K: SortKey>(keys: &mut [K], kernel: KernelKind, arena: &ScratchArena) {
+    match kernel {
+        KernelKind::Radix => {
+            let mut scratch = arena.take_empty::<K>();
+            radix::radix_tile_sort(keys, &mut scratch);
+        }
+        KernelKind::Bitonic => keys.sort_unstable_by(K::key_cmp),
     }
 }
 
@@ -405,6 +449,41 @@ mod tests {
         // Mismatched payload length is rejected.
         let mut bad = vec![0u64; 3];
         assert!(e.sort_pairs(&mut kout, &mut bad).is_err());
+    }
+
+    #[test]
+    fn kernels_and_worker_counts_agree_byte_for_byte() {
+        let input: Vec<Key> = (0..300_000u32).map(|x| x.wrapping_mul(2654435761) % 4096).collect();
+        let payload: Vec<u64> = (0..input.len() as u64).collect();
+        let mut reference: Option<(Vec<Key>, Vec<u64>)> = None;
+        for kernel in [KernelKind::Bitonic, KernelKind::Radix] {
+            for workers in [1usize, 2, 4] {
+                let e = NativeEngine::with_context(
+                    NativeParams {
+                        workers,
+                        sequential_cutoff: 1 << 10,
+                        ..Default::default()
+                    },
+                    ExecContext::new(kernel, 0),
+                )
+                .unwrap();
+                // Two rounds through the same engine: the second must be
+                // served from the warm arena and still be identical.
+                for _ in 0..2 {
+                    let mut k = input.clone();
+                    let mut p = payload.clone();
+                    e.sort_pairs(&mut k, &mut p).unwrap();
+                    match &reference {
+                        None => reference = Some((k, p)),
+                        Some((rk, rp)) => {
+                            assert_eq!(&k, rk, "{kernel} × {workers} workers");
+                            assert_eq!(&p, rp, "{kernel} × {workers} workers");
+                        }
+                    }
+                }
+                assert!(e.context().arena.stats().hits > 0, "arena never reused");
+            }
+        }
     }
 
     #[test]

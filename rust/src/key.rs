@@ -81,6 +81,17 @@ pub trait SortKey: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
     /// key type).
     fn from_raw_bits(raw: u64) -> Self;
 
+    /// The `i`-th least-significant byte of the element's ordered bit
+    /// pattern (`0 ≤ i < WIDTH_BYTES`) — the digit stream of the
+    /// executed LSD counting kernel
+    /// ([`crate::algos::radix::radix_tile_sort`]). Stable LSD passes
+    /// over these bytes reproduce exactly the [`SortKey::to_bits`]
+    /// total order: byte `WIDTH_BYTES - 1` is the most significant
+    /// comparison position (for [`Record`], the payload index occupies
+    /// the low four bytes, so records order by key first, index
+    /// second).
+    fn radix_byte(self, i: usize) -> u8;
+
     /// Total-order comparison (by bits).
     #[inline]
     fn key_cmp(&self, other: &Self) -> Ordering {
@@ -119,6 +130,11 @@ impl SortKey for u32 {
     fn from_raw_bits(raw: u64) -> Self {
         raw as u32
     }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        (self >> (8 * i)) as u8
+    }
 }
 
 impl SortKey for u64 {
@@ -139,6 +155,11 @@ impl SortKey for u64 {
     #[inline]
     fn from_raw_bits(raw: u64) -> Self {
         raw
+    }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        (self >> (8 * i)) as u8
     }
 }
 
@@ -163,6 +184,11 @@ impl SortKey for i32 {
     fn from_raw_bits(raw: u64) -> Self {
         Self::from_bits(raw as u32)
     }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        (SortKey::to_bits(self) >> (8 * i)) as u8
+    }
 }
 
 impl SortKey for i64 {
@@ -183,6 +209,11 @@ impl SortKey for i64 {
     #[inline]
     fn from_raw_bits(raw: u64) -> Self {
         Self::from_bits(raw)
+    }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        (SortKey::to_bits(self) >> (8 * i)) as u8
     }
 }
 
@@ -225,6 +256,13 @@ impl SortKey for f32 {
         // resolve to the *inherent* `f32::from_bits` (raw IEEE
         // reinterpret), which is not the order-preserving decode.
         <Self as SortKey>::from_bits(raw as u32)
+    }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        // Same trait-vs-inherent shadowing as above: the digits must
+        // come from the order-preserving bits.
+        (SortKey::to_bits(self) >> (8 * i)) as u8
     }
 }
 
@@ -282,6 +320,17 @@ impl<K: SortKey> SortKey for Record<K> {
             idx: 0,
         }
     }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        // Low four bytes: the tie-breaking payload index; above them,
+        // the key's own digits — so LSD passes order by key first.
+        if i < 4 {
+            (self.idx >> (8 * i)) as u8
+        } else {
+            self.key.radix_byte(i - 4)
+        }
+    }
 }
 
 /// The 32-bit record-index cap shared by every key–value entry point.
@@ -312,24 +361,46 @@ pub fn validate_key_value(keys_len: usize, payload_len: usize) -> crate::error::
 ///
 /// Errors if the job exceeds the 32-bit index space (see [`Record`]).
 pub fn tag_records<K: SortKey>(keys: &[K]) -> crate::error::Result<Vec<Record<K>>> {
+    let mut out = Vec::new();
+    tag_records_into(keys, &mut out)?;
+    Ok(out)
+}
+
+/// [`tag_records`] into a caller-provided (typically arena-recycled)
+/// buffer, so steady-state key–value jobs allocate nothing.
+pub fn tag_records_into<K: SortKey>(
+    keys: &[K],
+    out: &mut Vec<Record<K>>,
+) -> crate::error::Result<()> {
     check_record_cap(keys.len())?;
-    Ok(keys
-        .iter()
-        .zip(0u32..)
-        .map(|(&key, idx)| Record { key, idx })
-        .collect())
+    out.clear();
+    out.reserve(keys.len());
+    out.extend(keys.iter().zip(0u32..).map(|(&key, idx)| Record { key, idx }));
+    Ok(())
 }
 
 /// Write sorted records back: keys in record order, payload permuted by
 /// the surviving indices.
 pub fn untag_records<K: SortKey>(recs: &[Record<K>], keys: &mut [K], payload: &mut Vec<u64>) {
+    untag_records_in(recs, keys, payload, &crate::util::ScratchArena::new());
+}
+
+/// [`untag_records`] with the permutation staged through an arena
+/// buffer instead of a fresh allocation.
+pub fn untag_records_in<K: SortKey>(
+    recs: &[Record<K>],
+    keys: &mut [K],
+    payload: &mut Vec<u64>,
+    arena: &crate::util::ScratchArena,
+) {
     debug_assert_eq!(recs.len(), keys.len());
     debug_assert_eq!(recs.len(), payload.len());
-    let permuted: Vec<u64> = recs.iter().map(|r| payload[r.idx as usize]).collect();
+    let mut permuted = arena.take_empty::<u64>();
+    permuted.extend(recs.iter().map(|r| payload[r.idx as usize]));
     for (k, r) in keys.iter_mut().zip(recs) {
         *k = r.key;
     }
-    *payload = permuted;
+    payload.copy_from_slice(&permuted);
 }
 
 /// The key types a client can request — the runtime twin of the

@@ -67,6 +67,7 @@ pub mod sim;
 pub mod util;
 pub mod workload;
 
+pub use algos::{ExecContext, KernelKind};
 pub use error::{Error, Result};
 pub use key::{KeyData, KeyType, Record, SortKey};
 

@@ -21,7 +21,7 @@ use gpu_bucket_sort::experiments as exp;
 use gpu_bucket_sort::runtime::PjrtRuntime;
 use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::workload::Distribution;
-use gpu_bucket_sort::{is_sorted_permutation, Key, KeyType};
+use gpu_bucket_sort::{is_sorted_permutation, ExecContext, Key, KernelKind, KeyType};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -73,14 +73,19 @@ COMMANDS
   sort        --n 32M [--dist uniform] [--algo {algos}]
               [--engine native|sim|pjrt|sharded] [--device gtx285]
               [--devices gtx285,tesla,gtx285-1g,gtx260] [--seed 1]
+              [--kernel radix|bitonic]
               [--key-type u32|u64|i32|i64|f32] [--payload true]
               [--descending true] [--verify true] [--analytic true]
               (sharded: shard across a multi-GPU pool; --analytic prices
                paper-scale n, e.g. 768M over 4 devices, without data;
+               --kernel picks the executed tile/bucket kernel — radix is
+               the fast default, bitonic the paper's comparison path,
+               outputs byte-identical either way;
                --key-type/--payload/--descending route through the typed
                engine path — f32 sorts by IEEE-754 total order, NaN-safe)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
               [--engine native|sharded] [--workers 4] [--config file.json]
+              [--kernel radix|bitonic]
               [--key-type u32] [--payload true] [--descending true]
               (--workers runs N engine instances concurrently; sharded
                engines lease disjoint device subsets per worker)
@@ -142,18 +147,20 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
     let key_type = KeyType::parse(flag(flags, "key-type", "u32")).ok_or("unknown key type")?;
     let payload = flag(flags, "payload", "false") == "true";
     let descending = flag(flags, "descending", "false") == "true";
+    let kernel = KernelKind::parse(flag(flags, "kernel", KernelKind::default().id()))
+        .ok_or("unknown kernel")?;
 
     if key_type != KeyType::U32 || payload || descending {
         if analytic {
             return Err("--analytic supports the classic u32 key-only path only".into());
         }
         return cmd_sort_typed(
-            flags, n, dist, seed, engine, verify, key_type, payload, descending,
+            flags, n, dist, seed, engine, verify, key_type, payload, descending, kernel,
         );
     }
 
     if engine == EngineKind::Sharded {
-        return cmd_sort_sharded(flags, n, dist, seed, verify, analytic);
+        return cmd_sort_sharded(flags, n, dist, seed, verify, analytic, kernel);
     }
     if analytic {
         return Err("--analytic is only supported with --engine sharded".into());
@@ -164,7 +171,8 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
 
     match engine {
         EngineKind::Native => {
-            let e = NativeEngine::new(NativeParams::default()).map_err(|e| e.to_string())?;
+            let e = NativeEngine::with_context(NativeParams::default(), ExecContext::new(kernel, 0))
+                .map_err(|e| e.to_string())?;
             let mut keys = input.clone();
             let report = e.sort(&mut keys);
             println!(
@@ -187,10 +195,21 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
         EngineKind::Sim => {
             let device = GpuModel::parse(flag(flags, "device", "gtx285")).ok_or("unknown device")?;
             let algo = Algorithm::parse(flag(flags, "algo", "gbs")).ok_or("unknown algorithm")?;
+            if flags.contains_key("kernel") && algo != Algorithm::BucketSort {
+                return Err(format!(
+                    "--kernel applies to {} only (the baselines execute their own kernels)",
+                    Algorithm::BucketSort.canonical_name()
+                ));
+            }
             let mut keys = input.clone();
             let mut sim = GpuSim::new(device.spec());
             let t0 = Instant::now();
-            let est_ms = algo.run(&mut keys, &mut sim).map_err(|e| e.to_string())?;
+            // The bucket-sort arm honours the kernel selection (and its
+            // arena); the ledger and estimate are identical for either
+            // kernel. Baselines execute their own fixed kernels.
+            let est_ms = algo
+                .run_in(&mut keys, &mut sim, &ExecContext::new(kernel, 0))
+                .map_err(|e| e.to_string())?;
             println!(
                 "{algo} on simulated {device}: estimated {est_ms:.2} ms on-device \
                  ({:.1} Mkeys/s), host execution {:.0} ms",
@@ -232,6 +251,7 @@ fn cmd_sort_sharded(
     seed: u64,
     verify: bool,
     analytic: bool,
+    kernel: KernelKind,
 ) -> Result<(), String> {
     let default_devices = DevicePool::DEFAULT_DEVICES.map(|m| m.id()).join(",");
     let models = DevicePool::parse_list(flag(flags, "devices", &default_devices))
@@ -252,7 +272,9 @@ fn cmd_sort_sharded(
         let input = dist.generate(n, seed);
         let mut keys = input.clone();
         let t0 = Instant::now();
-        let report = sorter.sort(&mut keys, &mut pool).map_err(|e| e.to_string())?;
+        let report = sorter
+            .sort_in(&mut keys, &mut pool, &ExecContext::new(kernel, 0))
+            .map_err(|e| e.to_string())?;
         println!(
             "host execution {:.0} ms, largest destination shard {} keys",
             t0.elapsed().as_secs_f64() * 1e3,
@@ -294,6 +316,7 @@ fn cmd_sort_typed(
     key_type: KeyType,
     payload: bool,
     descending: bool,
+    kernel: KernelKind,
 ) -> Result<(), String> {
     // The typed path serves the deterministic sample sort; the
     // baselines (radix in particular) are u32-only, so an explicit
@@ -309,6 +332,7 @@ fn cmd_sort_typed(
     }
     let mut cfg = ServiceConfig {
         engine,
+        kernel,
         ..ServiceConfig::default()
     };
     if let Some(d) = flags.get("device") {
@@ -387,6 +411,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     };
     if let Some(w) = flags.get("workers") {
         cfg.workers = w.parse().map_err(|e| format!("bad --workers: {e}"))?;
+    }
+    if let Some(k) = flags.get("kernel") {
+        cfg.kernel = KernelKind::parse(k).ok_or("unknown kernel")?;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     let requests: usize = flag(flags, "requests", "64").parse().map_err(|e| format!("{e}"))?;

@@ -1,0 +1,308 @@
+//! Scratch-buffer arena — warm buffer reuse for the executed hot path.
+//!
+//! Every sort used to allocate its working set from scratch: the
+//! tile-aligned work buffer, the relocation target, the Step-9 bucket
+//! scratch, the record vector of a key–value job. At service rates that
+//! is page-faulting allocator traffic on every request. A
+//! [`ScratchArena`] keeps those buffers warm instead: [`checkout`]
+//! hands out a zero-capacity-or-recycled `Vec<T>` wrapped in a
+//! [`ScratchBuf`] guard, and dropping the guard returns the (cleared)
+//! buffer to the arena. After one warm-up run per shape, the
+//! steady-state path performs **no heap allocation**.
+//!
+//! Buffers are shelved by element type (one shelf per `Vec<T>` type,
+//! which groups exactly by element width class: all 4-byte keys share
+//! the `u32`-shaped capacity curve, 8-byte keys the `u64` one, and so
+//! on — the stats report per-shelf retained bytes). Checkouts are
+//! per caller: concurrent workers each pop a distinct buffer, so a
+//! shelf naturally grows to the engine's worker count and no further
+//! (a cap bounds pathological growth).
+//!
+//! The arena is `Clone` (shared handle) and `Send + Sync`; a lock is
+//! taken only at checkout/return, never while caller code runs.
+//!
+//! [`checkout`]: ScratchArena::take
+//!
+//! Determinism: the arena only recycles *capacity*. Every checkout is
+//! cleared and refilled by the caller, so outputs are byte-identical to
+//! the allocate-fresh behaviour (property-tested in
+//! `rust/tests/prop_kernels.rs`).
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+/// Free buffers retained per shelf — enough for every worker of a
+/// large engine to hold one plus spares, small enough that a
+/// pathological caller cannot pin unbounded memory.
+const MAX_FREE_PER_SHELF: usize = 64;
+
+/// Capacity bytes retained per shelf. Buffers whose return would push
+/// the shelf past this are freed instead of parked, so one burst of
+/// huge jobs cannot pin peak-sized memory for the engine's lifetime
+/// (steady-state large-job traffic still reuses: the cap holds several
+/// paper-scale 16M-key working buffers).
+const MAX_RETAINED_BYTES_PER_SHELF: usize = 512 << 20;
+
+struct Shelf {
+    free: Vec<Box<dyn Any + Send>>,
+    /// Bytes per element of this shelf's `Vec<T>` (the width class).
+    elem_bytes: usize,
+    /// Σ capacity·elem_bytes over the free buffers.
+    retained_bytes: usize,
+}
+
+#[derive(Default)]
+struct ArenaInner {
+    shelves: HashMap<TypeId, Shelf>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Counters describing an arena's reuse behaviour (see
+/// [`ScratchArena::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArenaStats {
+    /// Checkouts served from a recycled buffer.
+    pub hits: u64,
+    /// Checkouts that had to start from an empty `Vec`.
+    pub misses: u64,
+    /// Bytes of capacity currently parked in the arena.
+    pub retained_bytes: usize,
+    /// Free buffers currently parked in the arena.
+    pub buffers: usize,
+}
+
+/// A shared pool of recyclable scratch buffers. See the module docs.
+#[derive(Clone, Default)]
+pub struct ScratchArena {
+    inner: Arc<Mutex<ArenaInner>>,
+}
+
+impl fmt::Debug for ScratchArena {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("ScratchArena")
+            .field("hits", &stats.hits)
+            .field("misses", &stats.misses)
+            .field("retained_bytes", &stats.retained_bytes)
+            .field("buffers", &stats.buffers)
+            .finish()
+    }
+}
+
+impl ScratchArena {
+    /// New, empty arena.
+    pub fn new() -> Self {
+        ScratchArena::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ArenaInner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn pop_vec<T: Send + 'static>(&self) -> Option<Vec<T>> {
+        let mut g = self.lock();
+        let shelf = g.shelves.get_mut(&TypeId::of::<Vec<T>>())?;
+        let boxed = shelf.free.pop()?;
+        let vec = *boxed.downcast::<Vec<T>>().unwrap_or_default();
+        let bytes = vec.capacity() * std::mem::size_of::<T>();
+        shelf.retained_bytes = shelf.retained_bytes.saturating_sub(bytes);
+        g.hits += 1;
+        Some(vec)
+    }
+
+    /// Check out an empty buffer (recycled capacity when available).
+    pub fn take_empty<T: Send + 'static>(&self) -> ScratchBuf<T> {
+        let vec = match self.pop_vec::<T>() {
+            Some(v) => v,
+            None => {
+                self.lock().misses += 1;
+                Vec::new()
+            }
+        };
+        ScratchBuf {
+            vec,
+            home: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Check out a buffer of `len` elements, every element `fill`.
+    pub fn take<T: Send + Clone + 'static>(&self, len: usize, fill: T) -> ScratchBuf<T> {
+        let mut buf = self.take_empty::<T>();
+        buf.vec.resize(len, fill);
+        buf
+    }
+
+    /// Check out a buffer holding a copy of `src`.
+    pub fn take_from<T: Send + Clone + 'static>(&self, src: &[T]) -> ScratchBuf<T> {
+        let mut buf = self.take_empty::<T>();
+        buf.vec.extend_from_slice(src);
+        buf
+    }
+
+    /// Point-in-time reuse counters.
+    pub fn stats(&self) -> ArenaStats {
+        let g = self.lock();
+        ArenaStats {
+            hits: g.hits,
+            misses: g.misses,
+            retained_bytes: g.shelves.values().map(|s| s.retained_bytes).sum(),
+            buffers: g.shelves.values().map(|s| s.free.len()).sum(),
+        }
+    }
+}
+
+/// A checked-out scratch buffer; derefs to its `Vec<T>` and returns the
+/// (cleared) buffer to its arena on drop.
+pub struct ScratchBuf<T: Send + 'static> {
+    vec: Vec<T>,
+    home: Arc<Mutex<ArenaInner>>,
+}
+
+impl<T: Send + 'static> Deref for ScratchBuf<T> {
+    type Target = Vec<T>;
+
+    fn deref(&self) -> &Vec<T> {
+        &self.vec
+    }
+}
+
+impl<T: Send + 'static> DerefMut for ScratchBuf<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.vec
+    }
+}
+
+impl<T: Send + 'static> Drop for ScratchBuf<T> {
+    fn drop(&mut self) {
+        let mut vec = std::mem::take(&mut self.vec);
+        if vec.capacity() == 0 {
+            return;
+        }
+        vec.clear();
+        let bytes = vec.capacity() * std::mem::size_of::<T>();
+        let mut g = match self.home.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let shelf = g
+            .shelves
+            .entry(TypeId::of::<Vec<T>>())
+            .or_insert_with(|| Shelf {
+                free: Vec::new(),
+                elem_bytes: std::mem::size_of::<T>(),
+                retained_bytes: 0,
+            });
+        debug_assert_eq!(shelf.elem_bytes, std::mem::size_of::<T>());
+        if shelf.free.len() < MAX_FREE_PER_SHELF
+            && shelf.retained_bytes + bytes <= MAX_RETAINED_BYTES_PER_SHELF
+        {
+            shelf.retained_bytes += bytes;
+            shelf.free.push(Box::new(vec));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_return_reuses_capacity() {
+        let arena = ScratchArena::new();
+        let ptr = {
+            let mut buf = arena.take::<u32>(1000, 7);
+            assert_eq!(buf.len(), 1000);
+            assert!(buf.iter().all(|&x| x == 7));
+            buf.push(9);
+            buf.as_ptr() as usize
+        };
+        // Same allocation comes back (capacity ≥ 1001 retained).
+        let buf2 = arena.take::<u32>(500, 1);
+        assert_eq!(buf2.as_ptr() as usize, ptr);
+        assert_eq!(buf2.len(), 500);
+        assert!(buf2.iter().all(|&x| x == 1));
+        let stats = arena.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn shelves_are_typed() {
+        let arena = ScratchArena::new();
+        drop(arena.take::<u32>(10, 0));
+        drop(arena.take::<u64>(10, 0));
+        // A u64 checkout never receives the u32 buffer.
+        let b64 = arena.take::<u64>(4, 1);
+        let b32 = arena.take::<u32>(4, 1);
+        assert_eq!(b64.len(), 4);
+        assert_eq!(b32.len(), 4);
+        assert_eq!(arena.stats().hits, 2);
+    }
+
+    #[test]
+    fn take_from_copies() {
+        let arena = ScratchArena::new();
+        let src = vec![3u32, 1, 2];
+        let buf = arena.take_from(&src);
+        assert_eq!(&buf[..], &[3, 1, 2]);
+    }
+
+    #[test]
+    fn stats_track_retained_bytes() {
+        let arena = ScratchArena::new();
+        drop(arena.take::<u32>(1024, 0));
+        let stats = arena.stats();
+        assert!(stats.retained_bytes >= 1024 * 4, "{stats:?}");
+        assert_eq!(stats.buffers, 1);
+        // Checking the buffer out again empties the shelf.
+        let _held = arena.take_empty::<u32>();
+        assert_eq!(arena.stats().buffers, 0);
+        assert_eq!(arena.stats().retained_bytes, 0);
+    }
+
+    #[test]
+    fn concurrent_checkouts_are_distinct() {
+        let arena = ScratchArena::new();
+        // Warm two buffers.
+        {
+            let a = arena.take::<u32>(8, 0);
+            let b = arena.take::<u32>(8, 0);
+            assert_ne!(a.as_ptr(), b.as_ptr());
+        }
+        let a = arena.take::<u32>(8, 1);
+        let b = arena.take::<u32>(8, 2);
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        assert!(a.iter().all(|&x| x == 1));
+        assert!(b.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn oversized_buffers_are_freed_not_parked() {
+        // A buffer beyond the per-shelf byte cap is dropped on return
+        // rather than pinned for the arena's lifetime. (The reserve is
+        // virtual address space only — the pages are never touched.)
+        let arena = ScratchArena::new();
+        let mut buf = arena.take_empty::<u8>();
+        buf.reserve(MAX_RETAINED_BYTES_PER_SHELF + 1);
+        drop(buf);
+        assert_eq!(arena.stats().buffers, 0);
+        assert_eq!(arena.stats().retained_bytes, 0);
+    }
+
+    #[test]
+    fn shared_handle_shares_shelves() {
+        let arena = ScratchArena::new();
+        let clone = arena.clone();
+        drop(arena.take::<u32>(64, 0));
+        assert_eq!(clone.stats().buffers, 1);
+        let _buf = clone.take_empty::<u32>();
+        assert_eq!(arena.stats().hits, 1);
+    }
+}

@@ -3,15 +3,22 @@
 //!
 //! * [`rng`] — xoshiro256++ PRNG + normal/zipf samplers (⇒ rand).
 //! * [`json`] — full JSON parse/serialize (⇒ serde_json).
-//! * [`pool`] — structured std-thread parallelism (⇒ rayon).
+//! * [`pool`] — a **resident worker pool** with structured, borrow-
+//!   friendly dispatch (⇒ rayon). Threads are spawned once and parked
+//!   on a condvar; steady-state dispatch costs a queue push + signal,
+//!   not a thread spawn.
+//! * [`arena`] — recyclable scratch buffers keyed by element type, so
+//!   the executed sort pipeline allocates nothing after warm-up.
 //! * [`bench`] — warmup/sampling benchmark harness (⇒ criterion).
 //! * [`propcheck`] — seeded property-test driver (⇒ proptest).
 
+pub mod arena;
 pub mod bench;
 pub mod json;
 pub mod pool;
 pub mod propcheck;
 pub mod rng;
 
+pub use arena::{ArenaStats, ScratchArena, ScratchBuf};
 pub use json::Json;
 pub use rng::Rng;

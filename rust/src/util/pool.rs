@@ -1,19 +1,41 @@
-//! Structured parallelism on std threads — the in-tree stand-in for a
-//! data-parallel runtime (the build is offline; no rayon).
+//! Structured parallelism on a **resident worker pool** — the in-tree
+//! stand-in for a data-parallel runtime (the build is offline; no
+//! rayon).
 //!
-//! Built on `std::thread::scope`, so closures may borrow stack data.
-//! Two scheduling modes:
-//! * [`parallel_chunks_mut`] / [`parallel_slices_mut`] — static
-//!   round-robin assignment (right for uniform work like tile sorts);
-//! * [`parallel_map`] — dynamic queue (right for skewed work like
-//!   variable-size service batches or bucket sorts).
+//! Historically every call here spawned fresh OS threads through
+//! `std::thread::scope` (~10 µs per spawn on Linux, paid again for every
+//! phase of every request). The pool is now *resident*: worker threads
+//! are spawned once, parked on a condvar, and dispatched jobs for the
+//! lifetime of the process — steady-state dispatch is one mutex push +
+//! one condvar signal, with no thread creation on the hot path. The
+//! borrow-friendly call surface is unchanged:
 //!
-//! Thread spawn costs ~10 µs on Linux; callers gate on input size (the
-//! native engine's `sequential_cutoff`) so the overhead stays ≪ 1% of
-//! useful work.
+//! * [`parallel_chunks_mut`] / [`parallel_slices_mut`] — disjoint
+//!   mutable regions (tile sorts, per-bucket output slices);
+//! * [`parallel_map`] / [`parallel_for`] — owned items through a dynamic
+//!   queue (skewed work like variable-size service batches).
+//!
+//! Closures may still borrow stack data: a dispatch blocks until every
+//! task of its job has finished, so borrows captured by the job provably
+//! outlive all worker access (the same guarantee `thread::scope` gave,
+//! enforced by the completion wait instead of the scope).
+//!
+//! The dispatching thread *participates* in its own job — it claims
+//! tasks like any worker until the job is drained, then waits for
+//! stragglers. That keeps the caller's core busy, makes a
+//! one-worker dispatch run entirely inline, and makes nested dispatch
+//! (a pool task that itself calls into the pool) deadlock-free: the
+//! inner job always has at least its own dispatcher driving it.
+//!
+//! Work distribution is dynamic (tasks are claimed with an atomic
+//! cursor), but every API assigns task *index* `i` to input region `i`,
+//! so outputs never depend on which thread ran what — byte-determinism
+//! at any worker count.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Default worker count: logical cores.
 pub fn default_workers() -> usize {
@@ -22,59 +44,289 @@ pub fn default_workers() -> usize {
         .unwrap_or(4)
 }
 
-/// Run `f(index, chunk)` over `chunk_len`-sized chunks of `data` on
-/// `workers` threads (static round-robin assignment).
+/// Growth ceiling for resident threads — callers asking for more
+/// parallelism than this share the existing residents.
+const MAX_RESIDENT_THREADS: usize = 256;
+
+/// Type-erased pointer to the job's task closure. Only dereferenced
+/// while the dispatching [`WorkerPool::run`] call is blocked on the
+/// job's completion, which is what keeps the erased lifetime honest.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// Safety: the pointee is `Sync` (shared calls from many threads are
+// fine) and is only dereferenced during the dispatcher's `run` call,
+// which outlives every worker access by construction.
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// Completion state of one job, under the job's mutex.
+struct JobDone {
+    /// Tasks not yet finished (claimed-but-running tasks count).
+    pending: usize,
+    /// First panic payload observed in a task, re-raised by the
+    /// dispatcher (the behaviour `thread::scope` join gave).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// One dispatched job: `num_tasks` indexed calls of `task`.
+struct Job {
+    task: TaskPtr,
+    /// Claim cursor; a fetch-add ≥ `num_tasks` means the job is drained.
+    next: AtomicUsize,
+    num_tasks: usize,
+    done: Mutex<JobDone>,
+    finished: Condvar,
+}
+
+/// Claim and run one task of `job`, recording completion (and any
+/// panic) in the job's done state.
+fn run_task(job: &Job, index: usize) {
+    // Safety: see `TaskPtr` — the dispatcher is blocked in `run` until
+    // `pending` reaches zero, so the closure is alive here.
+    let task = unsafe { &*job.task.0 };
+    let result = panic::catch_unwind(AssertUnwindSafe(|| task(index)));
+    let mut done = match job.done.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Err(payload) = result {
+        if done.panic.is_none() {
+            done.panic = Some(payload);
+        }
+    }
+    done.pending -= 1;
+    if done.pending == 0 {
+        job.finished.notify_all();
+    }
+}
+
+struct PoolShared {
+    /// FIFO of live jobs; a job is popped once fully claimed.
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    /// Signals residents that a job arrived.
+    work: Condvar,
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let (job, index) = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                let mut claimed = None;
+                while let Some(job) = queue.front() {
+                    let i = job.next.fetch_add(1, Ordering::Relaxed);
+                    if i < job.num_tasks {
+                        claimed = Some((Arc::clone(job), i));
+                        break;
+                    }
+                    // Fully claimed: retire it and look at the next job.
+                    queue.pop_front();
+                }
+                match claimed {
+                    Some(c) => break c,
+                    None => queue = shared.work.wait(queue).unwrap(),
+                }
+            }
+        };
+        run_task(&job, index);
+    }
+}
+
+/// The resident worker pool. One process-wide instance
+/// ([`WorkerPool::global`]) serves every caller: the native PSRS
+/// engine, the executed Algorithm 1 (Steps 2 and 9), and the
+/// coordinator's engine workers all dispatch into the same resident
+/// threads.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Resident thread count (grow-only, capped).
+    resident: Mutex<usize>,
+}
+
+impl WorkerPool {
+    fn new() -> Self {
+        WorkerPool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(VecDeque::new()),
+                work: Condvar::new(),
+            }),
+            resident: Mutex::new(0),
+        }
+    }
+
+    /// The process-wide pool. Threads are spawned lazily on first use
+    /// and live for the rest of the process (they are parked on the
+    /// condvar whenever idle).
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(WorkerPool::new)
+    }
+
+    /// Number of resident worker threads currently alive.
+    pub fn resident_threads(&self) -> usize {
+        *self.resident.lock().unwrap()
+    }
+
+    /// Grow the resident set so at least `want` workers exist (the
+    /// dispatcher itself is the +1 that completes the requested
+    /// parallelism). Steady-state calls find the count already
+    /// satisfied and spawn nothing.
+    fn ensure_residents(&self, want: usize) {
+        let want = want.min(MAX_RESIDENT_THREADS);
+        let mut count = self.resident.lock().unwrap();
+        while *count < want {
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("gbs-pool-{}", *count))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn resident pool worker");
+            *count += 1;
+        }
+    }
+
+    /// Run `task(i)` for every `i < num_tasks` with up to `parallelism`
+    /// concurrent executors (residents plus the calling thread), and
+    /// return once all tasks finished. Task panics are re-raised here
+    /// after the job drains.
+    pub fn run(&self, num_tasks: usize, parallelism: usize, task: &(dyn Fn(usize) + Sync)) {
+        if num_tasks == 0 {
+            return;
+        }
+        let parallelism = parallelism.max(1).min(num_tasks);
+        if parallelism <= 1 || num_tasks == 1 {
+            for i in 0..num_tasks {
+                task(i);
+            }
+            return;
+        }
+        self.ensure_residents(parallelism - 1);
+        let job = Arc::new(Job {
+            task: TaskPtr(task as *const (dyn Fn(usize) + Sync)),
+            next: AtomicUsize::new(0),
+            num_tasks,
+            done: Mutex::new(JobDone {
+                pending: num_tasks,
+                panic: None,
+            }),
+            finished: Condvar::new(),
+        });
+        self.shared.queue.lock().unwrap().push_back(Arc::clone(&job));
+        self.shared.work.notify_all();
+
+        // Participate in our own job until its tasks are all claimed.
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.num_tasks {
+                break;
+            }
+            run_task(&job, i);
+        }
+        // Wait for tasks claimed by residents to finish.
+        let mut done = match job.done.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        while done.pending > 0 {
+            done = match job.finished.wait(done) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        let panicked = done.panic.take();
+        drop(done);
+        if let Some(payload) = panicked {
+            panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Raw pointer that may cross threads; every use in this module hands
+/// each task a disjoint region (chunk `i`, slice `i`, or slot `i`), so
+/// no two threads ever alias the same elements.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+// Safety: see the type docs — regions are disjoint by construction and
+// the pointee outlives the dispatch (the dispatcher blocks in `run`).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Run `f(index, chunk)` over `chunk_len`-sized chunks of `data` on up
+/// to `workers` executors of the resident pool. Chunk `index` is always
+/// the chunk's position in `data`, so results are independent of thread
+/// assignment.
 pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, workers: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(chunk_len > 0);
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
-    parallel_indexed_slices(chunks, workers, &f);
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let chunks = n.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    WorkerPool::global().run(chunks, workers, &move |i| {
+        let start = i * chunk_len;
+        let len = chunk_len.min(n - start);
+        // Safety: chunk regions [start, start+len) are disjoint per
+        // task index, within bounds, and `data` outlives the dispatch.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        f(i, chunk);
+    });
 }
 
 /// Run `f(index, slice)` over an explicit list of disjoint mutable
 /// slices (e.g. per-bucket output regions).
-pub fn parallel_slices_mut<T, F>(slices: Vec<&mut [T]>, workers: usize, f: F)
+pub fn parallel_slices_mut<T, F>(mut slices: Vec<&mut [T]>, workers: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let indexed: Vec<(usize, &mut [T])> = slices.into_iter().enumerate().collect();
-    parallel_indexed_slices(indexed, workers, &f);
-}
-
-fn parallel_indexed_slices<T, F>(chunks: Vec<(usize, &mut [T])>, workers: usize, f: &F)
-where
-    T: Send,
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    let workers = workers.max(1).min(chunks.len().max(1));
-    if workers <= 1 || chunks.len() <= 1 {
-        for (i, c) in chunks {
-            f(i, c);
-        }
+    let n = slices.len();
+    if n == 0 {
         return;
     }
-    let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
-        (0..workers).map(|_| Vec::new()).collect();
-    for (pos, item) in chunks.into_iter().enumerate() {
-        per_worker[pos % workers].push(item);
-    }
-    std::thread::scope(|s| {
-        for list in per_worker {
-            s.spawn(move || {
-                for (i, c) in list {
-                    f(i, c);
-                }
-            });
-        }
+    let base = SendPtr(slices.as_mut_ptr());
+    WorkerPool::global().run(n, workers, &move |i| {
+        // Safety: each task reborrows only element `i` of the slice
+        // list; the list itself outlives the dispatch.
+        let slice: &mut [T] = unsafe { &mut **base.0.add(i) };
+        f(i, slice);
     });
 }
 
-/// Map owned items to outputs on `workers` threads with a dynamic work
-/// queue; output order matches input order.
+/// Frees an input buffer whose elements have all been moved out —
+/// including on the unwind path. `WorkerPool::run` drains every task
+/// (even after one panics) before returning or re-raising, so by the
+/// time this guard drops, every element was consumed by exactly one
+/// task (a task that panicked dropped its item during its own unwind).
+struct ConsumedBuf<I> {
+    vec: std::mem::ManuallyDrop<Vec<I>>,
+}
+
+impl<I> Drop for ConsumedBuf<I> {
+    fn drop(&mut self) {
+        // Safety: all elements moved out (see type docs); free the
+        // allocation without running element destructors.
+        unsafe {
+            self.vec.set_len(0);
+            std::mem::ManuallyDrop::drop(&mut self.vec);
+        }
+    }
+}
+
+/// Map owned items to outputs on up to `workers` executors; output
+/// order matches input order. Panic-safe: a panicking task propagates
+/// after the job drains, with every consumed input and produced output
+/// dropped normally (outputs live in `Option` slots until collection).
 pub fn parallel_map<I, O, F>(items: Vec<I>, workers: usize, f: F) -> Vec<O>
 where
     I: Send,
@@ -86,28 +338,26 @@ where
     if workers <= 1 || n <= 1 {
         return items.into_iter().map(f).collect();
     }
-    let queue: Mutex<VecDeque<(usize, I)>> =
-        Mutex::new(items.into_iter().enumerate().collect());
-    let results: Mutex<Vec<Option<O>>> = Mutex::new((0..n).map(|_| None).collect());
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let next = queue.lock().unwrap().pop_front();
-                match next {
-                    Some((i, item)) => {
-                        let out = f(item);
-                        results.lock().unwrap()[i] = Some(out);
-                    }
-                    None => break,
-                }
-            });
-        }
+    let mut slots: Vec<Option<O>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let items = ConsumedBuf {
+        vec: std::mem::ManuallyDrop::new(items),
+    };
+    let src = SendPtr(items.vec.as_ptr() as *mut I);
+    let dst = SendPtr(slots.as_mut_ptr());
+    WorkerPool::global().run(n, workers, &move |i| {
+        // Safety: task indices are unique, so each input is moved out
+        // exactly once and each `None` slot overwritten at most once
+        // (plain assignment — dropping a `None` is free, and a panic
+        // before the write leaves a droppable `None` behind).
+        let item = unsafe { std::ptr::read(src.0.add(i)) };
+        let value = f(item);
+        unsafe { *dst.0.add(i) = Some(value) };
     });
-    results
-        .into_inner()
-        .unwrap()
+    drop(items); // frees the consumed input buffer
+    slots
         .into_iter()
-        .map(|o| o.expect("every item processed"))
+        .map(|o| o.expect("every task writes its slot"))
         .collect()
 }
 
@@ -118,7 +368,22 @@ where
     O: Send,
     F: Fn(usize) -> O + Sync,
 {
-    parallel_map((0..n_tasks).collect(), workers, f)
+    let workers = workers.max(1).min(n_tasks.max(1));
+    if workers <= 1 || n_tasks <= 1 {
+        return (0..n_tasks).map(f).collect();
+    }
+    let mut slots: Vec<Option<O>> = Vec::with_capacity(n_tasks);
+    slots.resize_with(n_tasks, || None);
+    let dst = SendPtr(slots.as_mut_ptr());
+    WorkerPool::global().run(n_tasks, workers, &move |i| {
+        let value = f(i);
+        // Safety: unique slot per task index; see `parallel_map`.
+        unsafe { *dst.0.add(i) = Some(value) };
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("every task writes its slot"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -188,5 +453,66 @@ mod tests {
         let out: Vec<u8> = parallel_map(Vec::<u8>::new(), 4, |x| x);
         assert!(out.is_empty());
         parallel_slices_mut(Vec::<&mut [u8]>::new(), 4, |_, _| panic!("no slices"));
+    }
+
+    #[test]
+    fn pool_threads_are_resident() {
+        // Two dispatches at the same parallelism reuse the same
+        // residents — the count does not grow with call count.
+        let counter = AtomicUsize::new(0);
+        parallel_for(8, 3, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        let after_first = WorkerPool::global().resident_threads();
+        for _ in 0..32 {
+            parallel_for(8, 3, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 8 * 33);
+        // Parallelism 3 needs 2 residents (the dispatcher is the third
+        // executor). Other tests sharing the global pool may have grown
+        // it further, but repeated dispatches never grow it themselves.
+        assert!(after_first >= 2);
+        assert!(WorkerPool::global().resident_threads() < MAX_RESIDENT_THREADS);
+    }
+
+    #[test]
+    fn nested_dispatch_does_not_deadlock() {
+        // A pool task that itself dispatches into the pool (the native
+        // engine inside a parallel_map batch) must always make
+        // progress: the inner dispatcher participates in its own job.
+        let total = AtomicUsize::new(0);
+        let out = parallel_for(4, 4, |_| {
+            let inner: usize = parallel_for(8, 4, |j| j).into_iter().sum();
+            total.fetch_add(inner, Ordering::Relaxed);
+            inner
+        });
+        assert_eq!(out, vec![28usize; 4]);
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 28);
+    }
+
+    #[test]
+    fn task_panics_propagate_to_dispatcher() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_for(8, 4, |i| {
+                if i == 5 {
+                    panic!("task 5 exploded");
+                }
+                i
+            })
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("exploded"), "unexpected payload {msg:?}");
+    }
+
+    #[test]
+    fn borrowed_stack_data_survives() {
+        // The scope-style guarantee: tasks may borrow the caller's
+        // stack because dispatch blocks until the job drains.
+        let local: Vec<u64> = (0..100).collect();
+        let sums = parallel_for(10, 4, |i| local[i * 10..(i + 1) * 10].iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), 4950);
     }
 }

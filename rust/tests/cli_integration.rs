@@ -106,6 +106,33 @@ fn sort_sharded_executes_and_prices_paper_scale() {
 }
 
 #[test]
+fn sort_kernel_flag() {
+    // Both kernels sort and verify on the native and sim engines.
+    let (ok, text) = gbs(&["sort", "--n", "100K", "--kernel", "bitonic"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified: sorted permutation"), "{text}");
+    let (ok, text) = gbs(&[
+        "sort", "--n", "100K", "--engine", "sim", "--kernel", "radix",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified"), "{text}");
+
+    // Unknown kernels and kernel selection on a baseline are rejected.
+    let (ok, _) = gbs(&["sort", "--n", "1K", "--kernel", "quick"]);
+    assert!(!ok);
+    let (ok, text) = gbs(&[
+        "sort", "--n", "100K", "--engine", "sim", "--algo", "rss", "--kernel", "radix",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("bucket-sort"), "{text}");
+
+    // Help advertises the flag.
+    let (ok, text) = gbs(&["help"]);
+    assert!(ok);
+    assert!(text.contains("--kernel"), "{text}");
+}
+
+#[test]
 fn help_mentions_sharded_engine() {
     let (ok, text) = gbs(&["help"]);
     assert!(ok);
@@ -142,6 +169,7 @@ fn config_prints_valid_json() {
     assert!(ok, "{text}");
     let parsed = gpu_bucket_sort::util::Json::parse(&text).expect("valid json");
     assert_eq!(parsed.get("engine").and_then(|v| v.as_str()), Some("native"));
+    assert_eq!(parsed.get("kernel").and_then(|v| v.as_str()), Some("radix"));
 }
 
 #[test]

@@ -1,0 +1,207 @@
+//! Property tests for the executed tile kernels and the scratch arena:
+//!
+//! * the radix kernel agrees with the comparison (bitonic-equivalent)
+//!   order for every [`SortKey`] type, including `f32` NaNs, signed
+//!   zeros and infinities, and is stable on key–value records;
+//! * repeated sorts through a reused [`ScratchArena`] are byte-
+//!   identical across 1/2/4 workers, for both kernels, through both the
+//!   executed Algorithm 1 and the native PSRS engine.
+
+use gpu_bucket_sort::algos::bucket_sort::{BucketSort, BucketSortParams};
+use gpu_bucket_sort::algos::radix;
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::sim::{GpuModel, GpuSim};
+use gpu_bucket_sort::util::propcheck::{forall, Gen};
+use gpu_bucket_sort::{ExecContext, KernelKind, Record, SortKey};
+
+/// A typed vector drawn through the order-preserving raw-bits decoder,
+/// mixing full-range and tie-heavy regimes (and, for f32, covering NaN
+/// bit patterns by construction).
+fn typed_vec<K: SortKey>(g: &mut Gen, len: usize) -> Vec<K> {
+    let regime = g.rng().gen_range(4);
+    (0..len)
+        .map(|_| {
+            let raw = match regime {
+                0 => g.rng().next_u64(),
+                1 => g.rng().next_u64() % 16,
+                2 => g.rng().next_u64() % (1 << 10),
+                // High raw values: for 4-byte keys this lands in the
+                // top of the bit domain — NaN territory for f32.
+                _ => u64::MAX - (g.rng().next_u64() % (1 << 12)),
+            };
+            K::from_raw_bits(raw)
+        })
+        .collect()
+}
+
+/// Sort by the comparison path — the ground truth every kernel must
+/// reproduce bit-for-bit.
+fn comparison_sorted<K: SortKey>(input: &[K]) -> Vec<K::Bits> {
+    let mut v = input.to_vec();
+    v.sort_unstable_by(K::key_cmp);
+    v.into_iter().map(|k| k.to_bits()).collect()
+}
+
+fn radix_matches_comparison<K: SortKey>(g: &mut Gen) {
+    let len = g.usize_in(0..3000);
+    let input: Vec<K> = typed_vec(g, len);
+    let mut sorted = input.clone();
+    let mut scratch = Vec::new();
+    radix::radix_tile_sort(&mut sorted, &mut scratch);
+    let got: Vec<K::Bits> = sorted.iter().map(|k| k.to_bits()).collect();
+    assert_eq!(got, comparison_sorted(&input));
+}
+
+#[test]
+fn radix_kernel_agrees_with_comparison_for_every_key_type() {
+    forall(60, "radix == comparison (u32)", radix_matches_comparison::<u32>);
+    forall(60, "radix == comparison (u64)", radix_matches_comparison::<u64>);
+    forall(60, "radix == comparison (i32)", radix_matches_comparison::<i32>);
+    forall(60, "radix == comparison (i64)", radix_matches_comparison::<i64>);
+    forall(60, "radix == comparison (f32)", radix_matches_comparison::<f32>);
+}
+
+#[test]
+fn radix_kernel_handles_f32_specials() {
+    // Deterministic coverage of the values property draws might miss.
+    let specials = [
+        f32::NAN,
+        -f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        0.0f32,
+        -0.0f32,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1.0,
+        -1.0,
+    ];
+    let mut input = Vec::new();
+    for (i, &s) in specials.iter().enumerate() {
+        for j in 0..50 {
+            input.push(s);
+            input.push((i * 53 + j) as f32 - 250.0);
+        }
+    }
+    let mut sorted = input.clone();
+    let mut scratch = Vec::new();
+    radix::radix_tile_sort(&mut sorted, &mut scratch);
+    // NB: the *trait* bits (order-preserving), not the inherent raw
+    // `f32::to_bits` — `comparison_sorted` is in trait-bit space.
+    let got: Vec<u32> = sorted.iter().map(|&x| SortKey::to_bits(x)).collect();
+    assert_eq!(got, comparison_sorted(&input));
+    // NaN payload bits survive (round-trip through the kernel's moves).
+    assert!(sorted.iter().filter(|x| x.is_nan()).count() >= 100);
+}
+
+#[test]
+fn radix_kernel_is_stable_on_records_of_every_key_type() {
+    fn check<K: SortKey>(g: &mut Gen) {
+        let len = g.usize_in(1..2000);
+        // Small alphabet forces heavy key ties; the index must break
+        // them in original order.
+        let keys: Vec<K> = (0..len)
+            .map(|_| K::from_raw_bits(g.rng().next_u64() % 8))
+            .collect();
+        let mut recs: Vec<Record<K>> = keys
+            .iter()
+            .zip(0u32..)
+            .map(|(&key, idx)| Record { key, idx })
+            .collect();
+        let mut scratch = Vec::new();
+        radix::radix_tile_sort(&mut recs, &mut scratch);
+        for w in recs.windows(2) {
+            let (a, b) = (w[0].to_bits(), w[1].to_bits());
+            assert!(a < b, "records must be strictly increasing (key, idx)");
+        }
+    }
+    forall(40, "record stability (u32)", check::<u32>);
+    forall(40, "record stability (u64)", check::<u64>);
+    forall(40, "record stability (f32)", check::<f32>);
+}
+
+#[test]
+fn arena_reuse_is_byte_identical_across_workers_and_kernels() {
+    let sorter = BucketSort::new(BucketSortParams { tile: 256, s: 16 });
+    forall(12, "bucket sort invariant to arena reuse/workers/kernel", |g| {
+        let len = g.usize_in(0..20_000);
+        let input: Vec<u32> = typed_vec(g, len);
+        let mut reference: Option<Vec<u32>> = None;
+        for kernel in [KernelKind::Bitonic, KernelKind::Radix] {
+            for workers in [1usize, 2, 4] {
+                let ctx = ExecContext::new(kernel, workers);
+                // Two rounds through the same context: the second is
+                // served from the warm arena.
+                for _ in 0..2 {
+                    let mut keys = input.clone();
+                    let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+                    sorter.sort_in(&mut keys, &mut sim, &ctx).unwrap();
+                    match &reference {
+                        None => reference = Some(keys),
+                        Some(r) => assert_eq!(&keys, r, "{kernel} × {workers}w"),
+                    }
+                }
+                if len > 0 {
+                    assert!(
+                        ctx.arena.stats().hits > 0,
+                        "warm round must reuse arena buffers"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn native_engine_invariant_to_workers_kernel_and_arena_reuse() {
+    forall(8, "native engine invariant", |g| {
+        let len = g.usize_in(1..60_000);
+        let input: Vec<u32> = typed_vec(g, len);
+        let payload: Vec<u64> = (0..len as u64).collect();
+        let mut reference: Option<(Vec<u32>, Vec<u64>)> = None;
+        for kernel in [KernelKind::Bitonic, KernelKind::Radix] {
+            for workers in [1usize, 2, 4] {
+                let e = NativeEngine::with_context(
+                    NativeParams {
+                        workers,
+                        sequential_cutoff: 1 << 9,
+                        ..Default::default()
+                    },
+                    ExecContext::new(kernel, 0),
+                )
+                .unwrap();
+                for _ in 0..2 {
+                    let mut k = input.clone();
+                    let mut p = payload.clone();
+                    e.sort_pairs(&mut k, &mut p).unwrap();
+                    match &reference {
+                        None => reference = Some((k, p)),
+                        Some((rk, rp)) => {
+                            assert_eq!(&k, rk, "{kernel} × {workers}w keys");
+                            assert_eq!(&p, rp, "{kernel} × {workers}w payload");
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn scratch_arena_only_recycles_capacity_never_contents() {
+    // A buffer returned dirty must come back cleared-and-refilled: sort
+    // wildly different inputs through one context and verify each
+    // against an arena-free reference.
+    let sorter = BucketSort::new(BucketSortParams { tile: 256, s: 16 });
+    let ctx = ExecContext::default();
+    forall(20, "arena recycling is content-clean", |g| {
+        let len = g.usize_in(0..8000);
+        let input: Vec<u32> = typed_vec(g, len);
+        let mut via_arena = input.clone();
+        let mut sim = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        sorter.sort_in(&mut via_arena, &mut sim, &ctx).unwrap();
+        let mut expect = input;
+        expect.sort_unstable();
+        assert_eq!(via_arena, expect);
+    });
+}

@@ -56,6 +56,30 @@ fn sustained_concurrent_load() {
 }
 
 #[test]
+fn dropping_every_client_joins_the_service_threads() {
+    // Regression for the detached-intake-thread leak: the last client
+    // handle's drop must drain and *join* the intake (and, through it,
+    // every worker) rather than leaving background threads running. A
+    // deadlock on this path hangs the test; repeated cycles confirm the
+    // teardown is complete each time.
+    for round in 0..5u32 {
+        let client = SortService::start(cfg()).unwrap();
+        let sorted = client.sort_keys(vec![3 + round, 1, 2]).unwrap();
+        assert_eq!(sorted, vec![1, 2, 3 + round]);
+        let clone = client.clone();
+        drop(client);
+        // The service survives as long as any clone is alive.
+        assert_eq!(clone.sort_keys(vec![2, 1]).unwrap(), vec![1, 2]);
+        drop(clone); // last handle: sends ClientsGone, joins the intake
+    }
+    // Explicit shutdown followed by drop must also terminate cleanly.
+    let client = SortService::start(cfg()).unwrap();
+    let clone = client.clone();
+    client.shutdown();
+    drop(clone);
+}
+
+#[test]
 fn verify_mode_catches_a_corrupting_engine() {
     /// An engine that returns sorted output for the wrong keys.
     struct EvilEngine;
