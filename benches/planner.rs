@@ -1,0 +1,282 @@
+//! Execution-planner benchmarks — the PR-5 perf gates:
+//!
+//! * **fused vs unfused kernel**: the planner-scheduled wide-digit
+//!   ping-pong LSD sort (`plan::planned_sort`, default 11-bit digits →
+//!   3 passes over u32) against the PR-4 byte-wise kernel
+//!   (`radix::radix_tile_sort`, 4 passes) on 16M uniform u32 keys —
+//!   the CI gate requires ≥ 1.1×;
+//! * **skip-pass planning**: the same comparison on low-entropy keys,
+//!   where the occupancy sketch elides constant digits;
+//! * **coalesced vs per-request dispatch**: one native engine with
+//!   segment-tagged coalescing against one without, on a batch of
+//!   256 × 64K-key requests (the many-small-users serving shape) — the
+//!   CI gate requires ≥ 1.5×;
+//! * byte-equality smokes for both comparisons.
+//!
+//! Emits `BENCH_planner.json` at the repo root — the perf-trajectory
+//! record the CI bench-smoke job validates, gates on and uploads —
+//! plus the usual `results/planner_wallclock.csv`.
+
+mod common;
+
+use gpu_bucket_sort::algos::{plan, radix};
+use gpu_bucket_sort::config::{BatchConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{JobData, NativeSortEngine, SortEngine};
+use gpu_bucket_sort::util::bench::{BenchResult, Bencher};
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+
+/// The kernel-gate size: 16M uniform u32 keys.
+const GATE_N: usize = 1 << 24;
+
+/// The dispatch-gate shape: 256 requests × 64K keys.
+const BATCH_REQUESTS: usize = 256;
+const BATCH_REQUEST_KEYS: usize = 64 << 10;
+
+fn debiased_ms(r: &BenchResult, baseline_ms: f64) -> f64 {
+    (r.median_ms() - baseline_ms).max(1e-3)
+}
+
+fn mkeys_s(n: usize, ms: f64) -> f64 {
+    n as f64 / ms / 1e3
+}
+
+/// Byte-equality smoke: planned (several digit widths) and byte-wise
+/// kernels must agree with the comparison sort on mixed-entropy u32
+/// and on f32 with NaNs (compared on bits).
+fn kernels_agree() -> bool {
+    let mut u32_input = Distribution::Uniform.generate(100_000, 11);
+    for (i, k) in u32_input.iter_mut().enumerate().take(30_000) {
+        *k = (i % 127) as u32; // low-entropy stretch → skip-pass path
+    }
+    let mut expect = u32_input.clone();
+    expect.sort_unstable();
+    for bits in [8u32, 11, 13] {
+        let mut keys = u32_input.clone();
+        let (mut scratch, mut counts) = (Vec::new(), Vec::new());
+        plan::planned_sort(&mut keys, &mut scratch, &mut counts, bits, None);
+        if keys != expect {
+            return false;
+        }
+    }
+    let mut bytewise = u32_input.clone();
+    let mut scratch = Vec::new();
+    radix::radix_tile_sort(&mut bytewise, &mut scratch);
+    if bytewise != expect {
+        return false;
+    }
+
+    let mut f32_input: Vec<f32> = u32_input
+        .iter()
+        .map(|&b| <f32 as gpu_bucket_sort::SortKey>::from_raw_bits(b as u64))
+        .collect();
+    f32_input[3] = f32::NAN;
+    f32_input[5] = -0.0;
+    f32_input[7] = 0.0;
+    let mut expect = f32_input.clone();
+    expect.sort_unstable_by(gpu_bucket_sort::SortKey::key_cmp);
+    let mut keys = f32_input;
+    let (mut fscratch, mut counts) = (Vec::new(), Vec::new());
+    plan::planned_sort(&mut keys, &mut fscratch, &mut counts, 11, None);
+    keys.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+        == expect.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+}
+
+/// The serving batch: `BATCH_REQUESTS` independent small requests.
+fn small_request_batch() -> Vec<JobData> {
+    (0..BATCH_REQUESTS as u64)
+        .map(|i| JobData::new(Distribution::Uniform.generate(BATCH_REQUEST_KEYS, i)))
+        .collect()
+}
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let fast = std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1");
+    let digit_bits = plan::DEFAULT_DIGIT_BITS;
+    let mut results = Vec::new();
+
+    // --- fused (planned wide-digit) vs unfused (byte-wise) kernel ----
+    let keys16 = Distribution::Uniform.generate(GATE_N, 1);
+    let clone_r = bencher.bench("planner/clone_only/n=16M", || keys16.clone());
+    let clone_ms = clone_r.median_ms();
+
+    let (mut scratch, mut counts) = (Vec::new(), Vec::new());
+    let planned_r = bencher.bench(format!("planner/planned_d{digit_bits}/n=16M"), || {
+        let mut k = keys16.clone();
+        plan::planned_sort(&mut k, &mut scratch, &mut counts, digit_bits, None);
+        k
+    });
+    let mut byte_scratch = Vec::new();
+    let bytewise_r = bencher.bench("planner/bytewise_d8/n=16M", || {
+        let mut k = keys16.clone();
+        radix::radix_tile_sort(&mut k, &mut byte_scratch);
+        k
+    });
+    let planned_ms = debiased_ms(&planned_r, clone_ms);
+    let bytewise_ms = debiased_ms(&bytewise_r, clone_ms);
+    let kernel_speedup = bytewise_ms / planned_ms;
+    let plan16 = plan::plan_for(&keys16, digit_bits);
+    println!(
+        "    16M uniform u32 (clone-debiased): planned {:.1} Mkeys/s ({} passes) | \
+         byte-wise {:.1} Mkeys/s (4 passes) | {kernel_speedup:.2}x",
+        mkeys_s(GATE_N, planned_ms),
+        plan16.passes.len(),
+        mkeys_s(GATE_N, bytewise_ms),
+    );
+    results.push(clone_r);
+    results.push(planned_r);
+    results.push(bytewise_r);
+
+    // --- skip-pass planning on low-entropy keys ----------------------
+    let low_n = if fast { 1 << 22 } else { GATE_N };
+    let low_keys: Vec<u32> = Distribution::Uniform
+        .generate(low_n, 2)
+        .into_iter()
+        .map(|x| x & 0xFFFF)
+        .collect();
+    let low_clone_r = bencher.bench("planner/low_clone/n=low", || low_keys.clone());
+    let low_clone_ms = low_clone_r.median_ms();
+    let low_planned_r = bencher.bench(format!("planner/planned_low_d{digit_bits}"), || {
+        let mut k = low_keys.clone();
+        plan::planned_sort(&mut k, &mut scratch, &mut counts, digit_bits, None);
+        k
+    });
+    let low_bytewise_r = bencher.bench("planner/bytewise_low_d8", || {
+        let mut k = low_keys.clone();
+        radix::radix_tile_sort(&mut k, &mut byte_scratch);
+        k
+    });
+    let low_plan = plan::plan_for(&low_keys, digit_bits);
+    let low_speedup = debiased_ms(&low_bytewise_r, low_clone_ms)
+        / debiased_ms(&low_planned_r, low_clone_ms);
+    println!(
+        "    16-bit-entropy keys: planner schedules {} of {} passes ({} skipped) — \
+         {low_speedup:.2}x over byte-wise",
+        low_plan.passes.len(),
+        low_plan.nominal_passes,
+        low_plan.skipped(),
+    );
+    results.push(low_clone_r);
+    results.push(low_planned_r);
+    results.push(low_bytewise_r);
+
+    // --- coalesced vs per-request dispatch ---------------------------
+    let batch = small_request_batch();
+    let batch_keys = BATCH_REQUESTS * BATCH_REQUEST_KEYS;
+    let batch_clone_r = bencher.bench("planner/batch_clone/256x64K", || batch.clone());
+    let batch_clone_ms = batch_clone_r.median_ms();
+
+    let coalesced_cfg = ServiceConfig::default();
+    assert!(
+        coalesced_cfg.batch.coalesce_max_keys >= BATCH_REQUEST_KEYS,
+        "default coalesce cap must admit the gate's request size"
+    );
+    let per_request_cfg = ServiceConfig {
+        batch: BatchConfig {
+            coalesce_max_keys: 0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let mut coalesced_engine = NativeSortEngine::new(&coalesced_cfg).unwrap();
+    let mut per_request_engine = NativeSortEngine::new(&per_request_cfg).unwrap();
+    // Warm both arenas once, untimed.
+    coalesced_engine.sort_batch(batch.clone());
+    per_request_engine.sort_batch(batch.clone());
+
+    let coalesced_r = bencher.bench("planner/dispatch_coalesced/256x64K", || {
+        coalesced_engine.sort_batch(batch.clone())
+    });
+    let per_request_r = bencher.bench("planner/dispatch_per_request/256x64K", || {
+        per_request_engine.sort_batch(batch.clone())
+    });
+    let coalesced_ms = debiased_ms(&coalesced_r, batch_clone_ms);
+    let per_request_ms = debiased_ms(&per_request_r, batch_clone_ms);
+    let dispatch_speedup = per_request_ms / coalesced_ms;
+    println!(
+        "    {BATCH_REQUESTS}×{BATCH_REQUEST_KEYS} keys (clone-debiased): coalesced \
+         {:.1} Mkeys/s | per-request {:.1} Mkeys/s | {dispatch_speedup:.2}x",
+        mkeys_s(batch_keys, coalesced_ms),
+        mkeys_s(batch_keys, per_request_ms),
+    );
+    results.push(batch_clone_r);
+    results.push(coalesced_r);
+    results.push(per_request_r);
+
+    // Dispatch byte-equality: the coalesced responses must match the
+    // per-request responses exactly, request by request.
+    let coalesced_out = coalesced_engine.sort_batch(batch.clone());
+    let per_request_out = per_request_engine.sort_batch(batch);
+    let dispatch_agree = coalesced_out
+        .iter()
+        .zip(&per_request_out)
+        .all(|(a, b)| match (a, b) {
+            (Ok(a), Ok(b)) => a.keys == b.keys && a.payload == b.payload,
+            _ => false,
+        });
+    println!("    coalesced responses byte-identical to per-request: {dispatch_agree}");
+
+    let agree = kernels_agree();
+    println!("    kernels agree byte-for-byte: {agree}");
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("median_ms", Json::num(r.median_ms())),
+                ("mean_ms", Json::num(r.mean_ms())),
+                ("min_ms", Json::num(r.min_ms())),
+                ("samples", Json::num(r.samples_ms.len() as f64)),
+            ])
+        })
+        .collect();
+    let report = Json::obj(vec![
+        ("bench", Json::str("planner")),
+        ("mode", Json::str(if fast { "smoke" } else { "full" })),
+        ("digit_bits", Json::num(digit_bits as f64)),
+        ("gate_n", Json::num(GATE_N as f64)),
+        ("clone_median_ms", Json::num(clone_ms)),
+        ("planned_passes", Json::num(plan16.passes.len() as f64)),
+        ("planned_mkeys_s", Json::num(mkeys_s(GATE_N, planned_ms))),
+        ("bytewise_mkeys_s", Json::num(mkeys_s(GATE_N, bytewise_ms))),
+        ("planned_vs_bytewise", Json::num(kernel_speedup)),
+        (
+            "low_entropy",
+            Json::obj(vec![
+                ("n", Json::num(low_n as f64)),
+                ("planned_passes", Json::num(low_plan.passes.len() as f64)),
+                ("nominal_passes", Json::num(low_plan.nominal_passes as f64)),
+                ("skipped", Json::num(low_plan.skipped() as f64)),
+                ("planned_vs_bytewise", Json::num(low_speedup)),
+            ]),
+        ),
+        (
+            "dispatch",
+            Json::obj(vec![
+                ("requests", Json::num(BATCH_REQUESTS as f64)),
+                ("request_keys", Json::num(BATCH_REQUEST_KEYS as f64)),
+                ("coalesced_mkeys_s", Json::num(mkeys_s(batch_keys, coalesced_ms))),
+                (
+                    "per_request_mkeys_s",
+                    Json::num(mkeys_s(batch_keys, per_request_ms)),
+                ),
+                ("coalesced_vs_per_request", Json::num(dispatch_speedup)),
+                ("responses_agree", Json::Bool(dispatch_agree)),
+            ]),
+        ),
+        ("kernels_agree", Json::Bool(agree)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_planner.json", report.to_string_pretty())
+        .expect("write BENCH_planner.json");
+    println!("→ BENCH_planner.json");
+
+    common::emit_measurements("planner", &results);
+
+    if !agree || !dispatch_agree {
+        eprintln!("FAIL: planner or coalescing outputs diverged");
+        std::process::exit(1);
+    }
+}

@@ -29,14 +29,14 @@
 //! [`crate::Record`]s for key–value jobs. The `u32` path is
 //! byte-identical to the historical `Key = u32` implementation.
 
-use super::{bitonic, indexing, local_sort, prefix, radix, relocation, sampling};
+use super::{bitonic, indexing, local_sort, plan, prefix, relocation, sampling};
 use super::{ExecContext, KernelKind};
 use crate::error::Result;
 use crate::key::Record;
 use crate::sim::ledger::Ledger;
 use crate::sim::spec::GpuSpec;
 use crate::sim::{CostModel, GpuSim};
-use crate::util::{pool, ScratchArena};
+use crate::util::pool;
 use crate::{SortKey, KEY_BYTES};
 use std::collections::BTreeMap;
 
@@ -207,14 +207,15 @@ impl BucketSort {
 
         let mut ledger = Ledger::default();
 
-        // Step 2: local sort of each sublist on one SM (tiles in
-        // parallel on the worker pool; kernel from the context).
-        local_sort::run_in(work.as_mut_slice(), tile, ctx, &mut ledger);
-
-        // Step 3: s equidistant samples per sublist (overlaid on the
-        // not-yet-used relocation buffer).
+        // Steps 2+3, fused: each worker sorts a sublist on one SM and
+        // extracts its s equidistant samples while the tile is still
+        // hot — the separate sampling traversal of the unfused path
+        // disappears. The ledger still records the paper's two launches
+        // (Step 2 local sort, Step 3 sampling), byte-identical to the
+        // analytic twin. (Samples overlay the not-yet-used relocation
+        // buffer in the device model.)
         let mut samples = ctx.arena.take_empty::<K>();
-        sampling::local_samples_into(work.as_slice(), tile, s, &mut samples, &mut ledger);
+        local_sort::run_sampled(work.as_mut_slice(), tile, s, ctx, &mut samples, &mut ledger);
 
         // Step 4: sort all s·m samples globally (bitonic, padded to a
         // power of two).
@@ -242,16 +243,37 @@ impl BucketSort {
         }
         let layout = prefix::column_prefix(counts.as_slice(), m, s, &mut ledger);
 
-        // Step 8: relocate all buckets (coalesced read + write).
+        // Step 8: relocate all buckets (coalesced read + write). On the
+        // radix path the scatter simultaneously accumulates each
+        // bucket's first-pass digit histogram, so the Step-9 sorts
+        // start with pass 1 prebuilt (one fewer traversal per bucket).
         let mut relocated = ctx.arena.take(padded_n, K::PAD);
-        relocation::relocate(
-            work.as_slice(),
-            tile,
-            bounds.as_slice(),
-            &layout,
-            relocated.as_mut_slice(),
-            &mut ledger,
-        );
+        let digit_bits = ctx.digit_bits.clamp(plan::MIN_DIGIT_BITS, plan::MAX_DIGIT_BITS);
+        let prep_radix = 1usize << digit_bits;
+        let mut prep_counts = match ctx.kernel {
+            KernelKind::Radix => Some(ctx.arena.take_empty::<usize>()),
+            KernelKind::Bitonic => None,
+        };
+        match prep_counts.as_mut() {
+            Some(counts) => relocation::relocate_with_prep(
+                work.as_slice(),
+                tile,
+                bounds.as_slice(),
+                &layout,
+                relocated.as_mut_slice(),
+                &mut ledger,
+                digit_bits,
+                counts,
+            ),
+            None => relocation::relocate(
+                work.as_slice(),
+                tile,
+                bounds.as_slice(),
+                &layout,
+                relocated.as_mut_slice(),
+                &mut ledger,
+            ),
+        }
 
         // Step 9: sort every sublist B_j (buckets in parallel over
         // disjoint regions of the relocated array, scratch per worker
@@ -271,8 +293,7 @@ impl BucketSort {
         let max_bucket = layout.max_bucket();
         let balanced = padded_n / s;
         {
-            let arena = &ctx.arena;
-            let kernel = ctx.kernel;
+            let prep = prep_counts.as_deref();
             let mut slices: Vec<&mut [K]> = Vec::with_capacity(s);
             let mut rest: &mut [K] = relocated.as_mut_slice();
             for j in 0..s {
@@ -283,8 +304,9 @@ impl BucketSort {
                 rest = tail;
             }
             debug_assert!(rest.is_empty(), "buckets must tile the padded array");
-            pool::parallel_slices_mut(slices, ctx.effective_workers(), |_, b| {
-                sort_bucket(b, cap, kernel, arena);
+            pool::parallel_slices_mut(slices, ctx.effective_workers(), |j, b| {
+                let prebuilt = prep.map(|c| &c[j * prep_radix..(j + 1) * prep_radix]);
+                sort_bucket(b, cap, ctx, prebuilt);
             });
         }
         for _ in 0..s {
@@ -429,22 +451,24 @@ impl BucketSort {
 /// The bitonic path reproduces the paper's fixed shape: sort at the
 /// guaranteed capacity (`cap`, grown to the next power of two for
 /// tie-degenerate over-full buckets), PAD-padded, through arena
-/// scratch. The radix path sorts the bucket's actual length directly —
-/// no padding needed — and produces the identical (unique) sorted
-/// output.
-fn sort_bucket<K: SortKey>(b: &mut [K], cap: usize, kernel: KernelKind, arena: &ScratchArena) {
+/// scratch. The planned radix path sorts the bucket's actual length
+/// directly — no padding needed — starting from the `prebuilt`
+/// first-pass histogram the fused Step-8 scatter accumulated; both
+/// produce the identical (unique) sorted output.
+fn sort_bucket<K: SortKey>(b: &mut [K], cap: usize, ctx: &ExecContext, prebuilt: Option<&[usize]>) {
     let len = b.len();
     if len <= 1 {
         return;
     }
-    match kernel {
+    match ctx.kernel {
         KernelKind::Radix => {
-            let mut scratch = arena.take_empty::<K>();
-            radix::radix_tile_sort(b, &mut scratch);
+            let mut scratch = ctx.arena.take_empty::<K>();
+            let mut counts = ctx.arena.take_empty::<usize>();
+            plan::planned_sort(b, &mut scratch, &mut counts, ctx.digit_bits, prebuilt);
         }
         KernelKind::Bitonic => {
             let bcap = cap.max(bitonic::next_pow2(len));
-            let mut scratch = arena.take(bcap, K::PAD);
+            let mut scratch = ctx.arena.take(bcap, K::PAD);
             scratch[..len].copy_from_slice(b);
             let ces = bitonic::sort_slice(&mut scratch[..bcap]);
             debug_assert_eq!(ces, bitonic::ce_count(bcap));

@@ -10,7 +10,7 @@
 //! adaptive bitonic sort, because tiles are always 2K items regardless
 //! of n.
 
-use super::{bitonic, radix, ExecContext, KernelKind};
+use super::{bitonic, plan, sampling, ExecContext, KernelKind};
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
 use crate::util::pool;
@@ -44,23 +44,70 @@ pub fn run_in<K: SortKey>(
         return 0;
     }
     let workers = ctx.effective_workers();
-    match ctx.kernel {
-        KernelKind::Bitonic => {
-            pool::parallel_chunks_mut(keys, tile, workers, |_, t| {
-                let ces = bitonic::sort_slice(t);
-                debug_assert_eq!(ces, bitonic::ce_count(t.len()));
-            });
-        }
-        KernelKind::Radix => {
-            let arena = &ctx.arena;
-            pool::parallel_chunks_mut(keys, tile, workers, |_, t| {
-                let mut scratch = arena.take_empty::<K>();
-                radix::radix_tile_sort(t, &mut scratch);
-            });
-        }
-    }
+    pool::parallel_chunks_mut(keys, tile, workers, |_, t| sort_tile(t, ctx));
     record(m, tile, K::WIDTH_BYTES, ledger);
     m
+}
+
+/// Fused Steps 2+3: sort every tile **and** extract its `s` equidistant
+/// samples in the same traversal — the worker that just sorted a tile
+/// reads the sample positions while the tile is still cache-hot, so
+/// [`sampling::local_samples_into`]'s separate pass over the sorted
+/// array disappears. `samples` is resized to `m·s` and filled in tile
+/// order (disjoint rows, so the parallel write is race-free and
+/// byte-identical at any worker count).
+///
+/// The ledger records the *same two launches* as the unfused pair
+/// (Step 2 local sort, then Step 3 sampling) — fusion is a host
+/// execution detail; the paper's analytic figures are unchanged.
+pub fn run_sampled<K: SortKey>(
+    keys: &mut [K],
+    tile: usize,
+    s: usize,
+    ctx: &ExecContext,
+    samples: &mut Vec<K>,
+    ledger: &mut Ledger,
+) -> usize {
+    assert!(tile.is_power_of_two(), "tile must be a power of two");
+    assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
+    assert!(s >= 1 && s <= tile, "need 1 <= s <= tile");
+    assert_eq!(tile % s, 0, "s must divide the tile size");
+    let m = keys.len() / tile;
+    samples.clear();
+    if m == 0 {
+        return 0;
+    }
+    samples.resize(m * s, keys[0]);
+    let stride = tile / s;
+    let pairs: Vec<(&mut [K], &mut [K])> = keys
+        .chunks_mut(tile)
+        .zip(samples.chunks_mut(s))
+        .collect();
+    pool::parallel_map(pairs, ctx.effective_workers(), |(t, row)| {
+        sort_tile(t, ctx);
+        for (p, slot) in row.iter_mut().enumerate() {
+            *slot = t[(p + 1) * stride - 1];
+        }
+    });
+    record(m, tile, K::WIDTH_BYTES, ledger);
+    sampling::analytic_local_bytes(m * tile, tile, s, K::WIDTH_BYTES, ledger);
+    m
+}
+
+/// Sort one tile with the context's kernel (planned wide-digit LSD, or
+/// the bitonic network), scratch from the arena.
+fn sort_tile<K: SortKey>(t: &mut [K], ctx: &ExecContext) {
+    match ctx.kernel {
+        KernelKind::Bitonic => {
+            let ces = bitonic::sort_slice(t);
+            debug_assert_eq!(ces, bitonic::ce_count(t.len()));
+        }
+        KernelKind::Radix => {
+            let mut scratch = ctx.arena.take_empty::<K>();
+            let mut counts = ctx.arena.take_empty::<usize>();
+            plan::planned_sort(t, &mut scratch, &mut counts, ctx.digit_bits, None);
+        }
+    }
 }
 
 /// Ledger-only twin of [`run`] at the classic `u32` width.
@@ -169,6 +216,45 @@ mod tests {
         for t in by_radix.chunks_exact(tile) {
             assert!(is_sorted(t));
         }
+    }
+
+    #[test]
+    fn fused_sampling_matches_unfused_pair() {
+        // run_sampled must equal run_in + local_samples_into exactly:
+        // same sorted tiles, same samples, same two-launch ledger — at
+        // any worker count and for either kernel.
+        let (tile, s) = (256usize, 16usize);
+        let input = scrambled(8 * tile);
+        let mut unfused = input.clone();
+        let mut led_u = Ledger::default();
+        let base_ctx = crate::ExecContext::default();
+        run_in(&mut unfused, tile, &base_ctx, &mut led_u);
+        let mut ref_samples: Vec<Key> = Vec::new();
+        sampling::local_samples_into(&unfused, tile, s, &mut ref_samples, &mut led_u);
+        for kernel in [crate::KernelKind::Bitonic, crate::KernelKind::Radix] {
+            for workers in [1usize, 2, 4] {
+                let ctx = crate::ExecContext::new(kernel, workers);
+                let mut fused = input.clone();
+                let mut samples = Vec::new();
+                let mut led_f = Ledger::default();
+                let m = run_sampled(&mut fused, tile, s, &ctx, &mut samples, &mut led_f);
+                assert_eq!(m, 8);
+                assert_eq!(fused, unfused, "{kernel} × {workers}w");
+                assert_eq!(samples, ref_samples, "{kernel} × {workers}w");
+                assert_eq!(led_f, led_u, "fusion must not change the ledger");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sampling_handles_empty_input() {
+        let mut keys: Vec<Key> = vec![];
+        let mut samples = vec![1u32; 3]; // stale content must be cleared
+        let mut led = Ledger::default();
+        let ctx = crate::ExecContext::default();
+        assert_eq!(run_sampled(&mut keys, 64, 16, &ctx, &mut samples, &mut led), 0);
+        assert!(samples.is_empty());
+        assert_eq!(led.kernel_count(), 0);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! | [`prefix`] | Step 7 (column-major prefix sum, Figure 1) |
 //! | [`relocation`] | Step 8 (coalesced bucket move) |
 //! | [`bucket_sort`] | Algorithm 1 end-to-end |
+//! | [`plan`] | execution planner: wide-digit pass schedules for the executed kernels (beyond the paper) |
 //! | [`sharded`] | Algorithm 1 sharded across a multi-GPU pool (beyond the paper) |
 //! | [`randomized`] | Leischner et al. randomized sample sort [9] |
 //! | [`thrust_merge`] | Satish et al. Thrust Merge [14] |
@@ -24,6 +25,7 @@ pub mod bitonic;
 pub mod bucket_sort;
 pub mod indexing;
 pub mod local_sort;
+pub mod plan;
 pub mod prefix;
 pub mod radix;
 pub mod randomized;
@@ -54,9 +56,10 @@ pub enum KernelKind {
     /// simulated engines (§4's choice), `slice::sort_unstable` — its
     /// host-optimal comparison equivalent — on the native engine.
     Bitonic,
-    /// LSD counting sort over [`crate::SortKey::radix_byte`] digits
-    /// ([`radix::radix_tile_sort`]): O(n·W) instead of O(n log² n), the
-    /// executed default since PR 4.
+    /// Planner-scheduled wide-digit LSD counting sort over
+    /// [`crate::SortKey::radix_digit`] digits ([`plan::planned_sort`]):
+    /// O(n·⌈W·8/digit_bits⌉) passes with constant digits elided, the
+    /// executed default since PR 4 (byte-wise) / PR 5 (planned).
     #[default]
     Radix,
 }
@@ -88,14 +91,15 @@ impl std::fmt::Display for KernelKind {
 
 /// Execution resources for the host-executed hot path: the scratch
 /// arena (warm buffer reuse), the parallelism budget for the resident
-/// worker pool, and the tile/bucket kernel selection.
+/// worker pool, the tile/bucket kernel selection, and the planner's
+/// digit width.
 ///
 /// Engines hold one `ExecContext` for their lifetime, which is what
 /// makes their steady state allocation-free; the one-shot library entry
 /// points ([`bucket_sort::BucketSort::sort`] etc.) build a transient
 /// default context, preserving their historical behaviour. Cloning
 /// shares the arena (it is a handle).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ExecContext {
     /// Recyclable scratch buffers for every executed phase.
     pub arena: ScratchArena,
@@ -103,16 +107,36 @@ pub struct ExecContext {
     pub workers: usize,
     /// Executed tile/bucket kernel.
     pub kernel: KernelKind,
+    /// Digit width of the planned radix kernel
+    /// ([`plan::DEFAULT_DIGIT_BITS`] unless overridden via
+    /// `config.digit_bits` / `--digit-bits`). Ignored by the bitonic
+    /// kernel. Affects wall time only — outputs and ledgers are
+    /// digit-width-invariant.
+    pub digit_bits: u32,
+}
+
+impl Default for ExecContext {
+    fn default() -> Self {
+        ExecContext::new(KernelKind::default(), 0)
+    }
 }
 
 impl ExecContext {
-    /// Context with a fresh arena, the given kernel and worker budget.
+    /// Context with a fresh arena, the given kernel and worker budget,
+    /// at the default planner digit width.
     pub fn new(kernel: KernelKind, workers: usize) -> Self {
         ExecContext {
             arena: ScratchArena::new(),
             workers,
             kernel,
+            digit_bits: plan::DEFAULT_DIGIT_BITS,
         }
+    }
+
+    /// Override the planner digit width (builder style).
+    pub fn with_digit_bits(mut self, digit_bits: u32) -> Self {
+        self.digit_bits = digit_bits;
+        self
     }
 
     /// The resolved parallelism budget.
@@ -197,9 +221,11 @@ impl AlgorithmRunner for radix::RadixSort {
         keys: &mut [Key],
         sim: &mut GpuSim,
         spec: &GpuSpec,
-        _ctx: &ExecContext,
+        ctx: &ExecContext,
     ) -> Result<f64> {
-        Ok(self.sort(keys, sim)?.total_estimated_ms(spec))
+        // The baseline takes its ping-pong scratch from the context's
+        // arena like the executed kernels (no per-run temp vectors).
+        Ok(self.sort_in(keys, sim, ctx)?.total_estimated_ms(spec))
     }
 }
 
@@ -301,9 +327,11 @@ mod tests {
     fn exec_context_resolves_workers() {
         let ctx = ExecContext::default();
         assert!(ctx.effective_workers() >= 1);
-        let fixed = ExecContext::new(KernelKind::Bitonic, 3);
+        assert_eq!(ctx.digit_bits, plan::DEFAULT_DIGIT_BITS);
+        let fixed = ExecContext::new(KernelKind::Bitonic, 3).with_digit_bits(8);
         assert_eq!(fixed.effective_workers(), 3);
         assert_eq!(fixed.kernel, KernelKind::Bitonic);
+        assert_eq!(fixed.digit_bits, 8);
     }
 
     #[test]

@@ -1,0 +1,433 @@
+//! The execution planner: pass schedules for the wide-digit LSD
+//! kernel.
+//!
+//! The paper's bound is a *fixed number of regular passes* over the
+//! data; the planner makes the executed host path honour that shape as
+//! tightly as the key width allows. Given the element's bit width, the
+//! run length and a cheap **digit-occupancy sketch** of the data, it
+//! emits a [`SortPlan`]: the list of LSD counting passes the kernel
+//! actually executes.
+//!
+//! Three mechanisms shrink the pass count below the byte-wise kernel's
+//! `WIDTH_BYTES` passes:
+//!
+//! * **Wide digits** — `digit_bits` (default [`DEFAULT_DIGIT_BITS`] =
+//!   11) bits per pass instead of 8: ⌈32/11⌉ = 3 passes for `u32`
+//!   instead of 4, ⌈64/11⌉ = 6 for `u64` instead of 8. 2^11 = 2048
+//!   counting bins still fit comfortably in an L1/shared-memory-sized
+//!   table — the same tradeoff Satish et al.'s GPU radix [14] makes
+//!   with its multi-bit digits.
+//! * **Constant-digit skipping** — a digit position whose bits are
+//!   identical across the whole input contributes nothing to the order;
+//!   its pass is elided. This generalizes the byte-wise kernel's
+//!   constant-*byte* skip to arbitrary digit boundaries. Skips are
+//!   decided from an exact bit-occupancy mask (`OR` and `AND` of every
+//!   element's bits): a bit varies iff `OR ^ AND` has it set.
+//! * **Sampled sketch first** — a small equidistant sample is scanned
+//!   before the full input. Two sampled elements differing inside a
+//!   digit *prove* the digit varies, so when the sketch already proves
+//!   every digit varies (the common case for uniform-ish data) the full
+//!   occupancy scan is skipped entirely and planning costs O(sample).
+//!   Only low-entropy inputs pay the one confirming read pass — and
+//!   they earn it back multiple times in skipped passes.
+//!
+//! [`execute`] runs a plan by **ping-ponging** between the input and
+//! one arena scratch buffer: each pass scatters `src → dst` and the
+//! roles swap, with a single final copy-back only when the executed
+//! pass count is odd. A prebuilt first-pass histogram (from the fused
+//! Step-8 relocation scatter, see
+//! [`crate::algos::relocation::relocate_with_prep`]) lets the first
+//! pass skip its counting traversal.
+//!
+//! The plan affects wall time only, never bytes: every pass is a stable
+//! scatter over the ordered bit pattern, so any schedule produces the
+//! unique sorted sequence — property-tested against the comparison
+//! order in `rust/tests/prop_kernels.rs`. The traffic ledger never sees
+//! the planner (it keeps recording the paper's analytic figures).
+
+use crate::SortKey;
+
+/// Default digit width in bits (2^11 = 2048 counting bins; 3 passes
+/// over `u32`).
+pub const DEFAULT_DIGIT_BITS: u32 = 11;
+
+/// Narrowest supported digit.
+pub const MIN_DIGIT_BITS: u32 = 1;
+
+/// Widest supported digit (65 536 bins — beyond this the counting
+/// table stops fitting in cache and wider stops paying).
+pub const MAX_DIGIT_BITS: u32 = 16;
+
+/// Elements sampled by the occupancy sketch.
+const SKETCH_SAMPLES: usize = 128;
+
+/// Widest element the occupancy mask covers ([`crate::Record`] over
+/// `Segmented<u64>` is 16 bytes).
+const MAX_WIDTH_BYTES: usize = 16;
+
+/// Validate a digit width from config/CLI.
+pub fn validate_digit_bits(bits: u32) -> crate::error::Result<()> {
+    if !(MIN_DIGIT_BITS..=MAX_DIGIT_BITS).contains(&bits) {
+        return Err(crate::Error::InvalidParams(format!(
+            "digit_bits must be in {MIN_DIGIT_BITS}..={MAX_DIGIT_BITS}, got {bits}"
+        )));
+    }
+    Ok(())
+}
+
+/// Per-bit occupancy of a key set: which bit positions actually vary.
+///
+/// `or[i]` and `and[i]` accumulate byte `i` of every element's ordered
+/// bit pattern; bit `b` of byte `i` is **constant** across the set iff
+/// the two agree there. Accumulated over a sample, a differing bit is a
+/// *proof* of variation (two witnesses exist) while an agreeing bit is
+/// merely unproven.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Occupancy {
+    or: [u8; MAX_WIDTH_BYTES],
+    and: [u8; MAX_WIDTH_BYTES],
+}
+
+impl Occupancy {
+    fn empty() -> Occupancy {
+        Occupancy {
+            or: [0; MAX_WIDTH_BYTES],
+            and: [0xFF; MAX_WIDTH_BYTES],
+        }
+    }
+
+    /// Exact occupancy: one read pass over the whole input.
+    pub fn scan<K: SortKey>(data: &[K]) -> Occupancy {
+        debug_assert!(K::WIDTH_BYTES <= MAX_WIDTH_BYTES);
+        let mut occ = Occupancy::empty();
+        for x in data {
+            occ.accumulate(*x);
+        }
+        occ
+    }
+
+    /// Sampled occupancy: up to [`SKETCH_SAMPLES`] equidistant
+    /// elements. O(1) in the input size.
+    pub fn sketch<K: SortKey>(data: &[K]) -> Occupancy {
+        let mut occ = Occupancy::empty();
+        if data.is_empty() {
+            return occ;
+        }
+        let stride = (data.len() / SKETCH_SAMPLES).max(1);
+        for x in data.iter().step_by(stride) {
+            occ.accumulate(*x);
+        }
+        occ
+    }
+
+    #[inline]
+    fn accumulate<K: SortKey>(&mut self, x: K) {
+        for i in 0..K::WIDTH_BYTES {
+            let b = x.radix_byte(i);
+            self.or[i] |= b;
+            self.and[i] &= b;
+        }
+    }
+
+    /// True when some bit in `[bit_offset, bit_offset + bits)` differs
+    /// across the accumulated elements.
+    pub fn varies(&self, bit_offset: u32, bits: u32) -> bool {
+        (bit_offset..bit_offset + bits).any(|b| {
+            let (byte, bit) = (b as usize / 8, b % 8);
+            byte < MAX_WIDTH_BYTES && (self.or[byte] ^ self.and[byte]) >> bit & 1 == 1
+        })
+    }
+}
+
+/// One executed LSD pass: the digit at `bit_offset`, `bits` wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DigitPass {
+    /// Least-significant bit of the digit within the ordered pattern.
+    pub bit_offset: u32,
+    /// Digit width (≤ `digit_bits`; the top pass may be narrower).
+    pub bits: u32,
+}
+
+/// A pass schedule for one run: the executed passes in LSD order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SortPlan {
+    /// Digit width the schedule was planned at.
+    pub digit_bits: u32,
+    /// Executed passes (constant digits already elided).
+    pub passes: Vec<DigitPass>,
+    /// Digit positions the element width implies before skipping.
+    pub nominal_passes: usize,
+}
+
+impl SortPlan {
+    /// Passes elided by the occupancy analysis.
+    pub fn skipped(&self) -> usize {
+        self.nominal_passes - self.passes.len()
+    }
+}
+
+/// Build the schedule for width-`K` elements from an **exact**
+/// occupancy: one pass per `digit_bits`-wide digit, constant digits
+/// elided.
+pub fn plan_from_occupancy<K: SortKey>(occ: &Occupancy, digit_bits: u32) -> SortPlan {
+    let digit_bits = digit_bits.clamp(MIN_DIGIT_BITS, MAX_DIGIT_BITS);
+    let width_bits = 8 * K::WIDTH_BYTES as u32;
+    let nominal = width_bits.div_ceil(digit_bits) as usize;
+    let passes = (0..nominal as u32)
+        .map(|p| {
+            let bit_offset = p * digit_bits;
+            DigitPass {
+                bit_offset,
+                bits: digit_bits.min(width_bits - bit_offset),
+            }
+        })
+        .filter(|pass| occ.varies(pass.bit_offset, pass.bits))
+        .collect();
+    SortPlan {
+        digit_bits,
+        passes,
+        nominal_passes: nominal,
+    }
+}
+
+/// Plan a run: sketch first, full scan only when the sketch leaves some
+/// digit unproven. Either way the resulting plan is exact — a pass is
+/// elided only when its digit is constant across the *whole* input.
+pub fn plan_for<K: SortKey>(data: &[K], digit_bits: u32) -> SortPlan {
+    let digit_bits = digit_bits.clamp(MIN_DIGIT_BITS, MAX_DIGIT_BITS);
+    let sketch = Occupancy::sketch(data);
+    let sketch_plan = plan_from_occupancy::<K>(&sketch, digit_bits);
+    if sketch_plan.skipped() == 0 {
+        // The sample already proved every digit varies — the full scan
+        // could not add a skip.
+        return sketch_plan;
+    }
+    plan_from_occupancy::<K>(&Occupancy::scan(data), digit_bits)
+}
+
+/// Execute a plan over `data`, ping-ponging with `scratch` (resized to
+/// `data.len()`). `counts` is the recycled histogram table
+/// (`2^digit_bits` bins). `prebuilt` optionally carries the first
+/// pass's already-accumulated histogram — it is consumed only when the
+/// plan's first pass is the bit-0 digit of matching width (a fused
+/// producer cannot know in advance whether that digit survives
+/// planning).
+pub fn execute<K: SortKey>(
+    data: &mut [K],
+    scratch: &mut Vec<K>,
+    counts: &mut Vec<usize>,
+    plan: &SortPlan,
+    prebuilt: Option<&[usize]>,
+) {
+    let n = data.len();
+    if n <= 1 || plan.passes.is_empty() {
+        return;
+    }
+    scratch.clear();
+    scratch.resize(n, data[0]);
+    let mut flipped = false;
+    for (i, pass) in plan.passes.iter().enumerate() {
+        let radix = 1usize << pass.bits;
+        counts.clear();
+        counts.resize(radix, 0);
+        let prebuilt_ok = i == 0
+            && pass.bit_offset == 0
+            && matches!(prebuilt, Some(p) if p.len() == radix);
+        if prebuilt_ok {
+            counts.copy_from_slice(prebuilt.expect("checked above"));
+        } else {
+            let src: &[K] = if flipped { scratch } else { data };
+            for x in src {
+                counts[x.radix_digit(pass.bit_offset, pass.bits)] += 1;
+            }
+        }
+        // Exclusive prefix sum → per-digit cursors.
+        let mut acc = 0usize;
+        for c in counts.iter_mut() {
+            let t = *c;
+            *c = acc;
+            acc += t;
+        }
+        // Stable scatter src → dst.
+        if flipped {
+            scatter(scratch, data, pass, counts);
+        } else {
+            scatter(data, scratch, pass, counts);
+        }
+        flipped = !flipped;
+    }
+    if flipped {
+        data.copy_from_slice(scratch);
+    }
+}
+
+#[inline]
+fn scatter<K: SortKey>(src: &[K], dst: &mut [K], pass: &DigitPass, starts: &mut [usize]) {
+    for &x in src {
+        let d = x.radix_digit(pass.bit_offset, pass.bits);
+        dst[starts[d]] = x;
+        starts[d] += 1;
+    }
+}
+
+/// The planned wide-digit sort — the [`crate::KernelKind::Radix`]
+/// kernel behind every executed tile, bucket and chunk sort. `scratch`
+/// and `counts` are recycled buffers (arena checkouts on the hot path);
+/// `prebuilt` is the optional fused first-pass histogram.
+///
+/// Runs below [`crate::algos::radix::RADIX_MIN_N`] take the comparison
+/// path — identical output, and the per-pass fixed costs (bin clear +
+/// prefix) would dominate there.
+pub fn planned_sort<K: SortKey>(
+    data: &mut [K],
+    scratch: &mut Vec<K>,
+    counts: &mut Vec<usize>,
+    digit_bits: u32,
+    prebuilt: Option<&[usize]>,
+) {
+    if data.len() <= 1 {
+        return;
+    }
+    if data.len() < super::radix::RADIX_MIN_N {
+        data.sort_unstable_by(K::key_cmp);
+        return;
+    }
+    let plan = plan_for(data, digit_bits);
+    execute(data, scratch, counts, &plan, prebuilt);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Record;
+
+    fn scrambled(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect()
+    }
+
+    #[test]
+    fn u32_default_plan_is_three_passes() {
+        let keys = scrambled(10_000);
+        let plan = plan_for(&keys, DEFAULT_DIGIT_BITS);
+        assert_eq!(plan.nominal_passes, 3);
+        assert_eq!(plan.passes.len(), 3);
+        assert_eq!(plan.skipped(), 0);
+        // Digit boundaries tile the 32 bits: 11 + 11 + 10.
+        assert_eq!(
+            plan.passes,
+            vec![
+                DigitPass { bit_offset: 0, bits: 11 },
+                DigitPass { bit_offset: 11, bits: 11 },
+                DigitPass { bit_offset: 22, bits: 10 },
+            ]
+        );
+    }
+
+    #[test]
+    fn constant_digits_are_skipped_exactly() {
+        // Keys in [0, 128): everything above bit 7 is constant.
+        let keys: Vec<u32> = (0..5000u32).map(|x| x % 128).collect();
+        let plan = plan_for(&keys, 8);
+        assert_eq!(plan.nominal_passes, 4);
+        assert_eq!(plan.passes.len(), 1);
+        assert_eq!(plan.passes[0], DigitPass { bit_offset: 0, bits: 8 });
+
+        // A single constant key needs no pass at all.
+        let plan = plan_for(&vec![42u32; 1000], 11);
+        assert!(plan.passes.is_empty());
+        assert_eq!(plan.skipped(), 3);
+    }
+
+    #[test]
+    fn sketch_proof_skips_the_full_scan_safely() {
+        // A value varying only outside the sketch's sample positions
+        // must still be caught: the plan is exact, not probabilistic.
+        let mut keys = vec![7u32; 100_000];
+        keys[1] = 0xFFFF_FFFF; // off the equidistant sample grid
+        let plan = plan_for(&keys, 11);
+        assert_eq!(plan.passes.len(), 3, "high bits vary in one element");
+        let mut sorted = keys.clone();
+        let (mut scratch, mut counts) = (Vec::new(), Vec::new());
+        planned_sort(&mut sorted, &mut scratch, &mut counts, 11, None);
+        let mut expect = keys;
+        expect.sort_unstable();
+        assert_eq!(sorted, expect);
+    }
+
+    #[test]
+    fn planned_sort_matches_comparison_across_digit_widths() {
+        let input = scrambled(20_000);
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        for bits in [1u32, 4, 8, 11, 13, 16] {
+            let mut keys = input.clone();
+            let (mut scratch, mut counts) = (Vec::new(), Vec::new());
+            planned_sort(&mut keys, &mut scratch, &mut counts, bits, None);
+            assert_eq!(keys, expect, "digit_bits={bits}");
+        }
+    }
+
+    #[test]
+    fn records_sort_by_key_then_index_under_any_digit_width() {
+        let recs: Vec<Record<u32>> = (0..4000u32)
+            .map(|i| Record {
+                key: i.wrapping_mul(2654435761) % 16,
+                idx: i,
+            })
+            .collect();
+        let mut expect = recs.clone();
+        expect.sort_unstable_by(<Record<u32>>::key_cmp);
+        for bits in [8u32, 11] {
+            let mut a = recs.clone();
+            let (mut scratch, mut counts) = (Vec::new(), Vec::new());
+            planned_sort(&mut a, &mut scratch, &mut counts, bits, None);
+            assert_eq!(a, expect, "digit_bits={bits}");
+        }
+    }
+
+    #[test]
+    fn prebuilt_first_pass_histogram_is_honoured() {
+        let keys = scrambled(8192);
+        let plan = plan_for(&keys, DEFAULT_DIGIT_BITS);
+        // Accumulate the digit-0 histogram the way the fused relocation
+        // scatter does.
+        let mut hist = vec![0usize; 1 << DEFAULT_DIGIT_BITS];
+        for &x in &keys {
+            hist[SortKey::radix_digit(x, 0, DEFAULT_DIGIT_BITS)] += 1;
+        }
+        let mut with = keys.clone();
+        let (mut s1, mut c1) = (Vec::new(), Vec::new());
+        execute(&mut with, &mut s1, &mut c1, &plan, Some(&hist));
+        let mut without = keys.clone();
+        let (mut s2, mut c2) = (Vec::new(), Vec::new());
+        execute(&mut without, &mut s2, &mut c2, &plan, None);
+        assert_eq!(with, without);
+        let mut expect = keys;
+        expect.sort_unstable();
+        assert_eq!(with, expect);
+    }
+
+    #[test]
+    fn mismatched_prebuilt_is_ignored_not_trusted() {
+        // A histogram of the wrong arity (planned at different digit
+        // bits) must be rejected by the length check.
+        let keys = scrambled(4096);
+        let plan = plan_for(&keys, 11);
+        let bogus = vec![1usize; 256]; // 8-bit arity
+        let mut sorted = keys.clone();
+        let (mut scratch, mut counts) = (Vec::new(), Vec::new());
+        execute(&mut sorted, &mut scratch, &mut counts, &plan, Some(&bogus));
+        let mut expect = keys;
+        expect.sort_unstable();
+        assert_eq!(sorted, expect);
+    }
+
+    #[test]
+    fn digit_bits_validation() {
+        assert!(validate_digit_bits(0).is_err());
+        assert!(validate_digit_bits(1).is_ok());
+        assert!(validate_digit_bits(11).is_ok());
+        assert!(validate_digit_bits(16).is_ok());
+        assert!(validate_digit_bits(17).is_err());
+    }
+}

@@ -11,20 +11,24 @@
 //!    Included because a credible reproduction of the paper's evaluation
 //!    context needs the integer-sort reference point.
 //!
-//! 2. **Executed tile kernel** ([`radix_tile_sort`]) — the host kernel
-//!    behind [`crate::KernelKind::Radix`]: a byte-wise (8-bit digit)
-//!    LSD counting sort over [`crate::SortKey::radix_byte`] digits,
-//!    used for the executed Step-2 tile sorts and Step-9 bucket sorts
-//!    of Algorithm 1 and the native engine's chunk/bucket phases. It
-//!    does O(n·WIDTH_BYTES) work where the bitonic network does
-//!    O(n log² n) — ~10× fewer operations on a 2K-key tile — while
-//!    producing bit-identical output (stable LSD over the ordered bit
-//!    pattern *is* the [`crate::SortKey::to_bits`] total order, with
-//!    the record path's tie-breaking index in the low digits). The
-//!    traffic **ledger is unaffected by kernel choice**: it keeps
-//!    recording the paper's bitonic CE/traffic analytics, so Figures
-//!    3–7 and every analytic twin stay byte-identical.
+//! 2. **Byte-wise tile kernel** ([`radix_tile_sort`]) — the original
+//!    (PR 4) host kernel: an 8-bit-digit LSD counting sort over
+//!    [`crate::SortKey::radix_byte`] digits. It does O(n·WIDTH_BYTES)
+//!    work where the bitonic network does O(n log² n) — while producing
+//!    bit-identical output (stable LSD over the ordered bit pattern
+//!    *is* the [`crate::SortKey::to_bits`] total order, with the record
+//!    path's tie-breaking index in the low digits). Since PR 5 the
+//!    executed [`crate::KernelKind::Radix`] hot path runs the
+//!    **planner-scheduled wide-digit kernel**
+//!    ([`crate::algos::plan::planned_sort`]) instead — fewer, wider
+//!    passes with constant digits elided; this byte-wise kernel remains
+//!    as its fixed-schedule special case and the benchmarked baseline
+//!    (`benches/planner.rs` gates the planner against it). The traffic
+//!    **ledger is unaffected by kernel choice**: it keeps recording the
+//!    paper's bitonic CE/traffic analytics, so Figures 3–7 and every
+//!    analytic twin stay byte-identical.
 
+use super::ExecContext;
 use crate::error::Result;
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::spec::MAX_BLOCK_THREADS;
@@ -37,9 +41,10 @@ pub const DIGIT_BITS: u32 = 4;
 /// Counting bins per pass.
 pub const RADIX: usize = 1 << DIGIT_BITS;
 
-/// Minimum run length for the executed byte-wise counting kernel; runs
-/// below it take the comparison path inside [`radix_tile_sort`].
-const RADIX_MIN_N: usize = 64;
+/// Minimum run length for the executed counting kernels; runs below it
+/// take the comparison path inside [`radix_tile_sort`] and
+/// [`crate::algos::plan::planned_sort`].
+pub(crate) const RADIX_MIN_N: usize = 64;
 
 /// Parameters of the radix baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,20 +93,35 @@ impl RadixSort {
         RadixSort { params }
     }
 
-    /// Sort `keys` on the simulated device.
+    /// Sort `keys` on the simulated device (transient default
+    /// [`ExecContext`]; the harness passes a persistent one through
+    /// [`RadixSort::sort_in`]).
     pub fn sort(&self, keys: &mut [Key], sim: &mut GpuSim) -> Result<RadixReport> {
+        self.sort_in(keys, sim, &ExecContext::default())
+    }
+
+    /// [`RadixSort::sort`] with explicit execution resources: both
+    /// ping-pong buffers are checked out of `ctx.arena` instead of
+    /// being freshly allocated per run, so repeated baseline runs (the
+    /// Figure 6/7 sweeps) allocate nothing after warm-up.
+    pub fn sort_in(
+        &self,
+        keys: &mut [Key],
+        sim: &mut GpuSim,
+        ctx: &ExecContext,
+    ) -> Result<RadixReport> {
         let n = keys.len();
         let alloc = sim.alloc(n * Self::BYTES_PER_KEY)?;
         let mut ledger = Ledger::default();
         let passes = (Key::BITS / DIGIT_BITS) as usize;
 
-        let mut src = keys.to_vec();
-        let mut dst = vec![0 as Key; n];
+        let mut src = ctx.arena.take_from(keys);
+        let mut dst = ctx.arena.take(n, 0 as Key);
         for p in 0..passes {
             let shift = p as u32 * DIGIT_BITS;
             // Counting pass.
             let mut counts = [0usize; RADIX];
-            for &x in &src {
+            for &x in src.iter() {
                 counts[((x >> shift) as usize) & (RADIX - 1)] += 1;
             }
             record_pass(n, self.params.tile, false, &mut ledger);
@@ -113,7 +133,7 @@ impl RadixSort {
                 acc += counts[d];
             }
             // Scatter pass (stable).
-            for &x in &src {
+            for &x in src.iter() {
                 let d = ((x >> shift) as usize) & (RADIX - 1);
                 dst[starts[d]] = x;
                 starts[d] += 1;

@@ -28,6 +28,54 @@ pub fn relocate<K: SortKey>(
     out: &mut [K],
     ledger: &mut Ledger,
 ) {
+    relocate_inner(keys, tile, boundaries_mat, layout, out, ledger, None);
+}
+
+/// [`relocate`] fused with the Step-9 radix kernel's first counting
+/// pass: while each bucket segment streams through the scatter, the
+/// per-bucket histogram of the **bit-0 digit** (`digit_bits` wide) is
+/// accumulated into `bucket_counts` (a typically arena-recycled
+/// buffer, sized to `s × 2^digit_bits` and zeroed here in one pass).
+/// The Step-9 planned sorts then start with pass 1 prebuilt — their
+/// first counting traversal disappears (see
+/// [`crate::algos::plan::execute`]; the histogram is ignored when
+/// planning elides the bit-0 digit, where it would be single-bin
+/// anyway).
+///
+/// Byte-identical to the unfused [`relocate`] (the histogram is
+/// write-only here), and the recorded launch is the same Step-8 record
+/// — the paper's analytic figures never see the fusion.
+#[allow(clippy::too_many_arguments)]
+pub fn relocate_with_prep<K: SortKey>(
+    keys: &[K],
+    tile: usize,
+    boundaries_mat: &[u32],
+    layout: &BucketLayout,
+    out: &mut [K],
+    ledger: &mut Ledger,
+    digit_bits: u32,
+    bucket_counts: &mut Vec<usize>,
+) {
+    relocate_inner(
+        keys,
+        tile,
+        boundaries_mat,
+        layout,
+        out,
+        ledger,
+        Some((digit_bits, bucket_counts)),
+    );
+}
+
+fn relocate_inner<K: SortKey>(
+    keys: &[K],
+    tile: usize,
+    boundaries_mat: &[u32],
+    layout: &BucketLayout,
+    out: &mut [K],
+    ledger: &mut Ledger,
+    prep: Option<(u32, &mut Vec<usize>)>,
+) {
     assert_eq!(keys.len(), out.len(), "out must match input length");
     assert_eq!(keys.len() % tile, 0, "input must be tile-aligned");
     let m = keys.len() / tile;
@@ -37,6 +85,15 @@ pub fn relocate<K: SortKey>(
     let s = boundaries_mat.len() / m;
     assert_eq!(boundaries_mat.len(), m * s);
     assert_eq!(layout.loc.len(), m * s);
+    let mut prep = prep.map(|(digit_bits, counts)| {
+        let radix = 1usize << digit_bits;
+        // One zeroing pass: clear is O(1) for plain counts, resize
+        // writes the zeros (recycled capacity makes this the only
+        // touch of the buffer before accumulation).
+        counts.clear();
+        counts.resize(s * radix, 0);
+        (digit_bits, radix, counts)
+    });
 
     for (i, t) in keys.chunks_exact(tile).enumerate() {
         let row = &boundaries_mat[i * s..(i + 1) * s];
@@ -45,7 +102,14 @@ pub fn relocate<K: SortKey>(
         for j in 0..s {
             let len = sizes[j] as usize;
             let dst = layout.loc[i * s + j] as usize;
-            out[dst..dst + len].copy_from_slice(&t[seg_start..seg_start + len]);
+            let seg = &t[seg_start..seg_start + len];
+            out[dst..dst + len].copy_from_slice(seg);
+            if let Some((digit_bits, radix, ref mut counts)) = prep {
+                let row = &mut counts[j * radix..(j + 1) * radix];
+                for &x in seg {
+                    row[x.radix_digit(0, digit_bits)] += 1;
+                }
+            }
             seg_start += len;
         }
         debug_assert_eq!(seg_start, tile);
@@ -148,6 +212,67 @@ mod tests {
             full[st..en].sort_unstable();
         }
         assert!(is_sorted_permutation(&orig, &full));
+    }
+
+    #[test]
+    fn fused_prep_matches_unfused_relocation_and_recount() {
+        use crate::SortKey;
+        // Same Steps 6–8 harness as above, with the fused variant: the
+        // output and ledger must match plain relocate exactly, and the
+        // accumulated per-bucket histograms must equal a recount over
+        // the relocated buckets.
+        let tile = 16usize;
+        let m = 8usize;
+        let n = tile * m;
+        let mut keys: Vec<Key> = (0..n as u32).map(|x| x.wrapping_mul(2654435761) % 1000).collect();
+        for t in keys.chunks_exact_mut(tile) {
+            t.sort_unstable();
+        }
+        let s = 4usize;
+        let mut led = Ledger::default();
+        let samples = sampling::local_samples(&keys, tile, s, &mut led);
+        let mut sorted_samples = samples.clone();
+        sorted_samples.sort_unstable();
+        let splitters = sampling::select_splitters(&sorted_samples, s, &mut led);
+        let b = boundaries(&keys, tile, &splitters, &mut led);
+        let counts_mat: Vec<u32> = b
+            .chunks_exact(s)
+            .flat_map(|row| indexing::row_bucket_sizes(row))
+            .collect();
+        let layout = column_prefix(&counts_mat, m, s, &mut led);
+
+        let mut plain_out = vec![0u32; n];
+        let mut led_plain = Ledger::default();
+        relocate(&keys, tile, &b, &layout, &mut plain_out, &mut led_plain);
+
+        let digit_bits = 5u32;
+        let radix = 1usize << digit_bits;
+        let mut hist = vec![7usize; s * radix]; // dirty: must be zeroed inside
+        let mut fused_out = vec![0u32; n];
+        let mut led_fused = Ledger::default();
+        relocate_with_prep(
+            &keys,
+            tile,
+            &b,
+            &layout,
+            &mut fused_out,
+            &mut led_fused,
+            digit_bits,
+            &mut hist,
+        );
+        assert_eq!(fused_out, plain_out, "fusion must not move bytes differently");
+        assert_eq!(led_fused, led_plain, "fusion must not change the ledger");
+
+        // Histogram check: recount each relocated bucket's first digit.
+        for j in 0..s {
+            let st = layout.bucket_start[j] as usize;
+            let en = st + layout.bucket_size[j] as usize;
+            let mut expect = vec![0usize; radix];
+            for &x in &fused_out[st..en] {
+                expect[SortKey::radix_digit(x, 0, digit_bits)] += 1;
+            }
+            assert_eq!(&hist[j * radix..(j + 1) * radix], &expect[..], "bucket {j}");
+        }
     }
 
     #[test]

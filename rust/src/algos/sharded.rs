@@ -190,7 +190,11 @@ impl ShardedSort {
     /// [`ShardedSort::sort`] with explicit execution resources: shard
     /// copies, the exchange target and the merge ping-pong buffers come
     /// from `ctx.arena`, and the per-device [`BucketSort`] phase runs
-    /// with the context's kernel and worker budget.
+    /// with the context's kernel, planner digit width and worker
+    /// budget — each shard's Algorithm 1 inherits the fused
+    /// Step 2+3 / Step 8+9 traversals and the wide-digit pass schedule
+    /// (see [`crate::algos::plan`]) exactly like the single-device
+    /// path.
     pub fn sort_in<K: SortKey>(
         &self,
         keys: &mut [K],

@@ -66,6 +66,12 @@ pub struct BatchConfig {
     pub queue_capacity: usize,
     /// Total queued keys before backpressure (memory budget proxy).
     pub max_queued_keys: usize,
+    /// Coalesced dispatch: requests of at most this many keys that
+    /// share a batch, key type and payload shape are composed into ONE
+    /// segment-tagged kernel invocation (split back into byte-identical
+    /// per-request responses). `0` disables coalescing. See
+    /// [`crate::coordinator::coalesce`].
+    pub coalesce_max_keys: usize,
 }
 
 impl Default for BatchConfig {
@@ -76,6 +82,7 @@ impl Default for BatchConfig {
             max_wait_ms: 2,
             queue_capacity: 1024,
             max_queued_keys: 1 << 27,
+            coalesce_max_keys: 1 << 17,
         }
     }
 }
@@ -102,6 +109,10 @@ pub struct ServiceConfig {
     /// path — outputs are byte-identical either way, see
     /// [`KernelKind`]).
     pub kernel: KernelKind,
+    /// Digit width of the planned radix kernel, in bits (1–16; default
+    /// 11 → 2048 counting bins, ⌈32/11⌉ = 3 passes over u32 keys).
+    /// Exposed as `--digit-bits`; wall time only, never bytes.
+    pub digit_bits: u32,
     /// Native engine parameters.
     pub native: NativeParams,
     /// Batcher parameters.
@@ -122,6 +133,7 @@ impl Default for ServiceConfig {
             devices: DevicePool::DEFAULT_DEVICES.to_vec(),
             sort: BucketSortParams::default(),
             kernel: KernelKind::default(),
+            digit_bits: crate::algos::plan::DEFAULT_DIGIT_BITS,
             native: NativeParams::default(),
             batch: BatchConfig::default(),
             verify: false,
@@ -189,6 +201,13 @@ impl ServiceConfig {
                     cfg.kernel = KernelKind::parse(&s)
                         .ok_or_else(|| Error::Config(format!("unknown kernel {s:?}")))?;
                 }
+                "digit_bits" => {
+                    let v = val
+                        .as_usize()
+                        .ok_or_else(|| Error::Config("digit_bits must be an integer".into()))?;
+                    cfg.digit_bits = u32::try_from(v)
+                        .map_err(|_| Error::Config(format!("digit_bits out of range: {v}")))?;
+                }
                 "native" => {
                     cfg.native = NativeParams {
                         workers: usize_field(val, "workers").unwrap_or(cfg.native.workers),
@@ -213,6 +232,8 @@ impl ServiceConfig {
                             .unwrap_or(cfg.batch.queue_capacity),
                         max_queued_keys: usize_field(val, "max_queued_keys")
                             .unwrap_or(cfg.batch.max_queued_keys),
+                        coalesce_max_keys: usize_field(val, "coalesce_max_keys")
+                            .unwrap_or(cfg.batch.coalesce_max_keys),
                     };
                 }
                 "verify" => {
@@ -235,6 +256,7 @@ impl ServiceConfig {
     /// Sanity-check the combination.
     pub fn validate(&self) -> Result<()> {
         self.sort.validate()?;
+        crate::algos::plan::validate_digit_bits(self.digit_bits)?;
         if self.workers == 0 {
             return Err(Error::Config("workers must be at least 1".into()));
         }
@@ -281,6 +303,7 @@ impl ServiceConfig {
                 ]),
             ),
             ("kernel", Json::str(self.kernel.id())),
+            ("digit_bits", Json::num(self.digit_bits as f64)),
             (
                 "native",
                 Json::obj(vec![
@@ -309,6 +332,10 @@ impl ServiceConfig {
                     (
                         "max_queued_keys",
                         Json::num(self.batch.max_queued_keys as f64),
+                    ),
+                    (
+                        "coalesce_max_keys",
+                        Json::num(self.batch.coalesce_max_keys as f64),
                     ),
                 ]),
             ),
@@ -377,6 +404,31 @@ mod tests {
         assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
         assert!(ServiceConfig::from_json(r#"{"kernel":"quick"}"#).is_err());
         assert!(ServiceConfig::from_json(r#"{"kernel":3}"#).is_err());
+    }
+
+    #[test]
+    fn digit_bits_field_roundtrips_and_validates() {
+        let cfg = ServiceConfig::from_json(r#"{"digit_bits":13}"#).unwrap();
+        assert_eq!(cfg.digit_bits, 13);
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // Default is the planner's 11-bit digit.
+        assert_eq!(
+            ServiceConfig::default().digit_bits,
+            crate::algos::plan::DEFAULT_DIGIT_BITS
+        );
+        // Out-of-range widths and non-integers are rejected.
+        assert!(ServiceConfig::from_json(r#"{"digit_bits":0}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"digit_bits":17}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"digit_bits":"wide"}"#).is_err());
+    }
+
+    #[test]
+    fn coalesce_field_roundtrips() {
+        let cfg =
+            ServiceConfig::from_json(r#"{"batch":{"coalesce_max_keys":0}}"#).unwrap();
+        assert_eq!(cfg.batch.coalesce_max_keys, 0, "0 disables coalescing");
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        assert_eq!(BatchConfig::default().coalesce_max_keys, 1 << 17);
     }
 
     #[test]

@@ -167,6 +167,7 @@ mod tests {
             max_wait_ms: 10,
             queue_capacity: 8,
             max_queued_keys: 1000,
+            ..Default::default()
         }
     }
 

@@ -1,0 +1,379 @@
+//! Coalesced dispatch: many small same-shaped requests, ONE kernel
+//! invocation.
+//!
+//! The batcher already groups requests into engine dispatches, but the
+//! engines historically sorted each job separately — for the
+//! many-small-users serving scenario that means paying the per-job
+//! costs (pool wake-ups, PSRS setup, planner sketch, arena checkouts)
+//! once per request. The coalescer composes a group of small requests
+//! that share a key type and payload shape into a single
+//! [`Segmented`]-keyed job:
+//!
+//! ```text
+//! requests  [r0: k…] [r1: k…] [r2: k…]
+//! composed  [(seg=0,k)… (seg=1,k)… (seg=2,k)…]   — one sort
+//! sorted    [seg 0 sorted | seg 1 sorted | seg 2 sorted]
+//! split     [r0 sorted] [r1 sorted] [r2 sorted]
+//! ```
+//!
+//! Because the segment id is the most significant comparison position,
+//! each request's keys come back sorted and contiguous, and splitting
+//! by the known lengths yields responses **byte-identical** to sorting
+//! each request alone (the sorted sequence of a key multiset is
+//! unique; key–value groups sort `Record<Segmented<K>>`, whose global
+//! tie-breaking index restricted to one segment is the request's own
+//! submission order — so per-request stability is preserved too).
+//! Property-tested in `rust/tests/prop_kernels.rs` and
+//! `rust/tests/service_integration.rs`.
+//!
+//! Grouping policy: a request joins a group iff its key count is at
+//! most `max_request_keys` (`config.batch.coalesce_max_keys`, 0 =
+//! disabled) and at least one other eligible request of the same
+//! `(key type, has-payload)` shape is in the batch. Oversized or
+//! lone-shaped requests dispatch as before. Units (groups and singles)
+//! run in parallel on the worker pool; result order is the submission
+//! order either way.
+
+use super::request::JobData;
+use crate::error::{Error, Result};
+use crate::key::{Segmented, TypedKeys};
+use crate::util::pool;
+use crate::{KeyType, SortKey};
+
+/// The per-engine sort primitive the coalescer drives: sort one typed
+/// key vector (with an optional payload) ascending by key bits.
+/// `&self` because units are dispatched concurrently — engines expose
+/// their internally-synchronized fast path here (the native engine's
+/// `sort`/`sort_pairs`).
+pub trait JobSorter: Sync {
+    /// Sort `keys` in place (and permute `payload` with them).
+    fn sort_vec<K: SortKey>(&self, keys: &mut [K], payload: Option<&mut Vec<u64>>) -> Result<()>;
+}
+
+/// What one `sort_batch` pass coalesced.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Composed kernel invocations executed.
+    pub groups: u64,
+    /// Requests that rode inside a composed invocation.
+    pub requests: u64,
+}
+
+/// One dispatch unit: the original job indices it covers plus their
+/// jobs (singleton, or a coalesced group of ≥ 2).
+struct Unit {
+    indices: Vec<usize>,
+    jobs: Vec<JobData>,
+}
+
+/// Sort a batch with coalescing: group, compose, dispatch units in
+/// parallel, split, and hand back per-job results in submission order.
+pub fn sort_batch<S: JobSorter>(
+    sorter: &S,
+    jobs: Vec<JobData>,
+    max_request_keys: usize,
+    workers: usize,
+) -> (Vec<Result<JobData>>, CoalesceStats) {
+    let n = jobs.len();
+    let units = plan_units(jobs, max_request_keys);
+    let mut stats = CoalesceStats::default();
+    for u in &units {
+        if u.indices.len() > 1 {
+            stats.groups += 1;
+            stats.requests += u.indices.len() as u64;
+        }
+    }
+    let done: Vec<(Vec<usize>, Vec<Result<JobData>>)> =
+        pool::parallel_map(units, workers, |unit| {
+            let Unit { indices, jobs } = unit;
+            let results = if indices.len() > 1 {
+                sort_group(sorter, jobs)
+            } else {
+                jobs.into_iter().map(|j| sort_single(sorter, j)).collect()
+            };
+            (indices, results)
+        });
+    let mut slots: Vec<Option<Result<JobData>>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for (indices, results) in done {
+        for (i, r) in indices.into_iter().zip(results) {
+            slots[i] = Some(r);
+        }
+    }
+    let results = slots
+        .into_iter()
+        .map(|s| s.expect("every unit answers its jobs"))
+        .collect();
+    (results, stats)
+}
+
+/// Partition a batch into dispatch units, preserving submission order
+/// within each group.
+fn plan_units(jobs: Vec<JobData>, max_request_keys: usize) -> Vec<Unit> {
+    // Shape → group position in `units`, for eligible jobs.
+    let mut shape_unit: Vec<((KeyType, bool), usize)> = Vec::new();
+    let mut units: Vec<Unit> = Vec::new();
+    for (i, job) in jobs.into_iter().enumerate() {
+        let eligible = max_request_keys > 0 && job.len() <= max_request_keys && !job.is_empty();
+        if !eligible {
+            units.push(Unit {
+                indices: vec![i],
+                jobs: vec![job],
+            });
+            continue;
+        }
+        let shape = (job.keys.key_type(), job.payload.is_some());
+        match shape_unit.iter().find(|(s, _)| *s == shape) {
+            Some(&(_, u)) => {
+                units[u].indices.push(i);
+                units[u].jobs.push(job);
+            }
+            None => {
+                shape_unit.push((shape, units.len()));
+                units.push(Unit {
+                    indices: vec![i],
+                    jobs: vec![job],
+                });
+            }
+        }
+    }
+    units
+}
+
+fn sort_single<S: JobSorter>(sorter: &S, mut job: JobData) -> Result<JobData> {
+    crate::key::for_each_key_vec_mut!(job.keys, v => sorter.sort_vec(v, job.payload.as_mut()))?;
+    Ok(job)
+}
+
+/// Sort one coalesced group as a single segment-tagged invocation.
+fn sort_group<S: JobSorter>(sorter: &S, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
+    match jobs[0].keys.key_type() {
+        KeyType::U32 => sort_group_typed::<u32, S>(sorter, jobs),
+        KeyType::U64 => sort_group_typed::<u64, S>(sorter, jobs),
+        KeyType::I32 => sort_group_typed::<i32, S>(sorter, jobs),
+        KeyType::I64 => sort_group_typed::<i64, S>(sorter, jobs),
+        KeyType::F32 => sort_group_typed::<f32, S>(sorter, jobs),
+    }
+}
+
+fn sort_group_typed<K: TypedKeys, S: JobSorter>(
+    sorter: &S,
+    jobs: Vec<JobData>,
+) -> Vec<Result<JobData>> {
+    let count = jobs.len();
+    let has_payload = jobs[0].payload.is_some();
+    let total: usize = jobs.iter().map(JobData::len).sum();
+
+    // Compose: tag every key with its request's segment id. Submission
+    // order is the segment order, so the split below is a linear walk.
+    let mut composed: Vec<Segmented<K>> = Vec::with_capacity(total);
+    let mut payload: Vec<u64> = Vec::with_capacity(if has_payload { total } else { 0 });
+    let mut lens: Vec<usize> = Vec::with_capacity(count);
+    for (seg, job) in jobs.into_iter().enumerate() {
+        lens.push(job.len());
+        debug_assert_eq!(job.payload.is_some(), has_payload, "mixed group shape");
+        if let Some(p) = job.payload {
+            payload.extend_from_slice(&p);
+        }
+        let keys = K::from_key_data(job.keys).expect("group shares one key type");
+        composed.extend(keys.into_iter().map(|key| Segmented {
+            seg: seg as u32,
+            key,
+        }));
+    }
+
+    let sorted = sorter.sort_vec(&mut composed, has_payload.then_some(&mut payload));
+    if let Err(e) = sorted {
+        // The composed invocation failed as a whole (e.g. the record
+        // index space overflowed); every member reports it.
+        let msg = format!("coalesced dispatch failed: {e}");
+        return (0..count)
+            .map(|_| Err(Error::Coordinator(msg.clone())))
+            .collect();
+    }
+
+    // Split: segment-major order means request seg's keys are exactly
+    // the next lens[seg] elements.
+    let mut results = Vec::with_capacity(count);
+    let mut offset = 0usize;
+    for (seg, len) in lens.into_iter().enumerate() {
+        let range = offset..offset + len;
+        let keys: Vec<K> = composed[range.clone()]
+            .iter()
+            .map(|sk| {
+                debug_assert_eq!(sk.seg as usize, seg, "segments must come back contiguous");
+                sk.key
+            })
+            .collect();
+        results.push(Ok(JobData {
+            keys: K::into_key_data(keys),
+            payload: has_payload.then(|| payload[range].to_vec()),
+        }));
+        offset += len;
+    }
+    debug_assert_eq!(offset, total);
+    results
+}
+
+/// Blanket adapter: the native engine is the production coalescing
+/// target (its `sort`/`sort_pairs` take `&self` and parallelize
+/// internally).
+impl JobSorter for crate::exec::NativeEngine {
+    fn sort_vec<K: SortKey>(&self, keys: &mut [K], payload: Option<&mut Vec<u64>>) -> Result<()> {
+        match payload {
+            None => {
+                self.sort(keys);
+                Ok(())
+            }
+            Some(vals) => {
+                self.sort_pairs(keys, vals)?;
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{NativeEngine, NativeParams};
+    use crate::workload::Distribution;
+    use crate::KeyData;
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new(NativeParams {
+            workers: 4,
+            sequential_cutoff: 1 << 10,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn solo(e: &NativeEngine, job: &JobData) -> JobData {
+        let mut j = job.clone();
+        crate::key::for_each_key_vec_mut!(j.keys, v => e.sort_vec(v, j.payload.as_mut()))
+            .unwrap();
+        j
+    }
+
+    #[test]
+    fn coalesced_results_match_solo_sorts() {
+        let e = engine();
+        let jobs: Vec<JobData> = (0..12u64)
+            .map(|i| JobData::new(Distribution::Uniform.generate(500 + 137 * i as usize, i)))
+            .collect();
+        let expect: Vec<JobData> = jobs.iter().map(|j| solo(&e, j)).collect();
+        let (results, stats) = sort_batch(&e, jobs, 1 << 16, 4);
+        assert_eq!(stats.groups, 1);
+        assert_eq!(stats.requests, 12);
+        for (got, want) in results.iter().zip(&expect) {
+            let got = got.as_ref().unwrap();
+            assert_eq!(got.keys, want.keys);
+            assert_eq!(got.payload, want.payload);
+        }
+    }
+
+    #[test]
+    fn mixed_shapes_group_separately() {
+        let e = engine();
+        let u32_job = |seed: u64| JobData::new(Distribution::Uniform.generate(400, seed));
+        let u64_job = |seed: u64| {
+            JobData::new(
+                Distribution::Uniform
+                    .generate(300, seed)
+                    .into_iter()
+                    .map(|x| (x as u64) << 13 | 5)
+                    .collect::<Vec<u64>>(),
+            )
+        };
+        let kv_job = |seed: u64| {
+            let keys = Distribution::Uniform.generate(200, seed);
+            let payload = (0..keys.len() as u64).collect();
+            JobData {
+                keys: KeyData::U32(keys),
+                payload: Some(payload),
+            }
+        };
+        let big = JobData::new(Distribution::Uniform.generate(5_000, 99));
+        let jobs = vec![
+            u32_job(1),
+            u64_job(2),
+            kv_job(3),
+            big.clone(),
+            u32_job(4),
+            u64_job(5),
+            kv_job(6),
+        ];
+        let expect: Vec<JobData> = jobs.iter().map(|j| solo(&e, j)).collect();
+        // Cap below `big`: it must dispatch alone.
+        let (results, stats) = sort_batch(&e, jobs, 1_000, 4);
+        assert_eq!(stats.groups, 3, "u32, u64 and key–value groups");
+        assert_eq!(stats.requests, 6);
+        for (i, (got, want)) in results.iter().zip(&expect).enumerate() {
+            let got = got.as_ref().unwrap();
+            assert_eq!(got.keys, want.keys, "job {i}");
+            assert_eq!(got.payload, want.payload, "job {i}");
+        }
+    }
+
+    #[test]
+    fn zero_cap_disables_coalescing() {
+        let e = engine();
+        let jobs: Vec<JobData> = (0..4u64)
+            .map(|i| JobData::new(Distribution::Uniform.generate(100, i)))
+            .collect();
+        let (results, stats) = sort_batch(&e, jobs, 0, 4);
+        assert_eq!(stats, CoalesceStats::default());
+        for r in &results {
+            assert!(r.is_ok());
+        }
+    }
+
+    #[test]
+    fn key_value_coalescing_preserves_per_request_stability() {
+        // Heavy ties: within each request, equal keys must keep their
+        // submission (payload) order — the per-request stable contract.
+        let e = engine();
+        let jobs: Vec<JobData> = (0..6u64)
+            .map(|i| {
+                let keys: Vec<u32> = Distribution::Uniform
+                    .generate(800, i)
+                    .into_iter()
+                    .map(|x| x % 8)
+                    .collect();
+                let payload = (0..keys.len() as u64).collect();
+                JobData {
+                    keys: KeyData::U32(keys),
+                    payload: Some(payload),
+                }
+            })
+            .collect();
+        let expect: Vec<JobData> = jobs.iter().map(|j| solo(&e, j)).collect();
+        let (results, stats) = sort_batch(&e, jobs, 1 << 16, 2);
+        assert_eq!(stats.groups, 1);
+        for (got, want) in results.iter().zip(&expect) {
+            let got = got.as_ref().unwrap();
+            assert_eq!(got.keys, want.keys);
+            assert_eq!(got.payload, want.payload);
+        }
+    }
+
+    #[test]
+    fn empty_jobs_stay_single() {
+        let e = engine();
+        let jobs = vec![
+            JobData::new(Vec::<u32>::new()),
+            JobData::new(vec![3u32, 1, 2]),
+            JobData::new(vec![9u32, 7]),
+        ];
+        let (results, stats) = sort_batch(&e, jobs, 1 << 16, 2);
+        assert!(results[0].as_ref().unwrap().is_empty());
+        assert_eq!(
+            results[1].as_ref().unwrap().keys.as_u32().unwrap(),
+            &[1, 2, 3]
+        );
+        assert_eq!(results[2].as_ref().unwrap().keys.as_u32().unwrap(), &[7, 9]);
+        assert_eq!(stats.groups, 1, "the two non-empty u32 jobs coalesce");
+        assert_eq!(stats.requests, 2);
+    }
+}

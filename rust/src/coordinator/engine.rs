@@ -16,6 +16,7 @@
 //! optional key–value payload) and sorts **ascending by key bits**; the
 //! scheduler applies the requested direction afterwards, uniformly.
 
+use super::coalesce::{self, CoalesceStats};
 use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
 use crate::algos::sharded::{ShardedSort, ShardedSortParams};
 use crate::algos::ExecContext;
@@ -25,7 +26,6 @@ use crate::exec::NativeEngine;
 use crate::key::for_each_key_vec_mut;
 use crate::runtime::PjrtRuntime;
 use crate::sim::{DeviceLease, DevicePool, GpuModel, GpuSim, GpuSpec};
-use crate::util::pool;
 use crate::{KeyData, SortKey};
 
 /// A sort backend able to process a batch of independent jobs.
@@ -51,24 +51,39 @@ pub trait SortEngine {
     fn max_job_keys(&self) -> Option<usize> {
         None
     }
+
+    /// Lifetime totals of coalesced dispatch on this engine, if it
+    /// coalesces at all (see [`coalesce`]). The scheduler polls this
+    /// after each batch to export `coalesced_requests` /
+    /// `coalesced_groups` metrics.
+    fn coalesced_totals(&self) -> Option<CoalesceStats> {
+        None
+    }
 }
 
 pub use super::request::JobData;
 
-/// Native multicore backend: jobs in a batch run concurrently on the
-/// virtual-SM pool, each internally parallel.
+/// Native multicore backend: small same-shaped jobs are **coalesced**
+/// into one segment-tagged kernel invocation
+/// (`cfg.batch.coalesce_max_keys`, see [`coalesce`]); remaining units
+/// run concurrently on the virtual-SM pool, each internally parallel.
 pub struct NativeSortEngine {
     engine: NativeEngine,
+    coalesce_max_keys: usize,
+    coalesced: CoalesceStats,
 }
 
 impl NativeSortEngine {
     /// Build from config: the inner engine holds a persistent
-    /// [`ExecContext`] (kernel from `cfg.kernel`, arena warm across
-    /// batches), so repeated batches of similar shapes allocate
-    /// nothing.
+    /// [`ExecContext`] (kernel + planner digit width from the config,
+    /// arena warm across batches), so repeated batches of similar
+    /// shapes allocate nothing.
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
+        let ctx = ExecContext::new(cfg.kernel, 0).with_digit_bits(cfg.digit_bits);
         Ok(NativeSortEngine {
-            engine: NativeEngine::with_context(cfg.native, ExecContext::new(cfg.kernel, 0))?,
+            engine: NativeEngine::with_context(cfg.native, ctx)?,
+            coalesce_max_keys: cfg.batch.coalesce_max_keys,
+            coalesced: CoalesceStats::default(),
         })
     }
 
@@ -78,36 +93,29 @@ impl NativeSortEngine {
     }
 }
 
-fn native_job<K: SortKey>(
-    engine: &NativeEngine,
-    keys: &mut [K],
-    payload: &mut Option<Vec<u64>>,
-) -> Result<()> {
-    match payload {
-        None => {
-            engine.sort(keys);
-        }
-        Some(vals) => {
-            engine.sort_pairs(keys, vals)?;
-        }
-    }
-    Ok(())
-}
-
 impl SortEngine for NativeSortEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Native
     }
 
     fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
-        // Small jobs run in parallel with each other (dynamic queue —
-        // job sizes vary); the engine parallelizes internally for large
-        // ones, which land in their own batches.
-        let engine = &self.engine;
-        pool::parallel_map(jobs, engine.workers(), |mut job| {
-            for_each_key_vec_mut!(job.keys, v => native_job(engine, v, &mut job.payload))?;
-            Ok(job)
-        })
+        // Small same-shaped jobs coalesce into one composed invocation;
+        // everything else dispatches per job. Units run in parallel
+        // with each other (dynamic queue — sizes vary); the engine
+        // parallelizes internally for large ones.
+        let (results, stats) = coalesce::sort_batch(
+            &self.engine,
+            jobs,
+            self.coalesce_max_keys,
+            self.engine.workers(),
+        );
+        self.coalesced.groups += stats.groups;
+        self.coalesced.requests += stats.requests;
+        results
+    }
+
+    fn coalesced_totals(&self) -> Option<CoalesceStats> {
+        Some(self.coalesced)
     }
 }
 
@@ -129,6 +137,7 @@ impl SimSortEngine {
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
         let mut engine = Self::from_parts(cfg.device.spec(), cfg.sort)?;
         engine.ctx.kernel = cfg.kernel;
+        engine.ctx.digit_bits = cfg.digit_bits;
         Ok(engine)
     }
 
@@ -202,7 +211,8 @@ pub struct ShardedSortEngine {
 }
 
 impl ShardedSortEngine {
-    /// Build from config (`cfg.devices` + `cfg.sort` + `cfg.kernel`).
+    /// Build from config (`cfg.devices` + `cfg.sort` + `cfg.kernel` +
+    /// `cfg.digit_bits`).
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
         let mut engine = Self::from_parts(
             cfg.devices.clone(),
@@ -212,6 +222,7 @@ impl ShardedSortEngine {
             },
         )?;
         engine.ctx.kernel = cfg.kernel;
+        engine.ctx.digit_bits = cfg.digit_bits;
         Ok(engine)
     }
 
@@ -234,16 +245,19 @@ impl ShardedSortEngine {
 
     /// Build over devices leased from a shared registry — the
     /// multi-worker path, where each scheduler worker holds a disjoint
-    /// subset of the configured pool. `kernel` is the executed
-    /// tile/bucket kernel (`cfg.kernel`), passed explicitly so the
-    /// lease path cannot silently diverge from [`ShardedSortEngine::new`].
+    /// subset of the configured pool. `kernel` and `digit_bits` are the
+    /// executed tile/bucket kernel selection (`cfg.kernel` /
+    /// `cfg.digit_bits`), passed explicitly so the lease path cannot
+    /// silently diverge from [`ShardedSortEngine::new`].
     pub fn with_lease(
         lease: DeviceLease,
         params: ShardedSortParams,
         kernel: crate::KernelKind,
+        digit_bits: u32,
     ) -> Result<Self> {
         let mut engine = Self::from_parts(lease.models().to_vec(), params)?;
         engine.ctx.kernel = kernel;
+        engine.ctx.digit_bits = digit_bits;
         engine._lease = Some(lease);
         Ok(engine)
     }
@@ -486,6 +500,7 @@ pub fn build_worker_engine(
                     ..Default::default()
                 },
                 cfg.kernel,
+                cfg.digit_bits,
             )?))
         }
         _ => build_engine(cfg),
@@ -822,9 +837,11 @@ mod tests {
                 .unwrap(),
             ShardedSortParams::default(),
             crate::KernelKind::Bitonic,
+            13,
         )
         .unwrap();
         assert_eq!(leased.ctx.kernel, crate::KernelKind::Bitonic);
+        assert_eq!(leased.ctx.digit_bits, 13);
         // 4 devices over 2 workers: both leases hold 2, none left over.
         assert_eq!(registry.available(), 0);
         // A third worker would oversubscribe and is refused.

@@ -6,6 +6,9 @@
 //!   self-check; typed [`SortResponse`]) and the pending-request
 //!   envelope.
 //! * [`batcher`] — FIFO dynamic batching with backpressure.
+//! * [`coalesce`] — segment-tagged request coalescing: a batch of
+//!   small same-shaped requests becomes one composed kernel
+//!   invocation, split back into byte-identical per-request responses.
 //! * [`engine`] — the backends (native multicore, simulated GPU,
 //!   device-paced sim, PJRT/AOT, sharded multi-device) behind one
 //!   [`engine::SortEngine`] trait.
@@ -25,12 +28,14 @@
 //! * admission never exceeds the queue/key budgets.
 
 pub mod batcher;
+pub mod coalesce;
 pub mod engine;
 pub mod request;
 pub mod scheduler;
 pub mod service;
 
 pub use batcher::Batcher;
+pub use coalesce::CoalesceStats;
 pub use engine::{
     build_engine, build_worker_engine, verify_outcome, NativeSortEngine, PacedSimEngine,
     PjrtSortEngine, ShardedSortEngine, SimSortEngine, SortEngine,
@@ -57,6 +62,7 @@ mod tests {
                 max_wait_ms: 1,
                 queue_capacity: 64,
                 max_queued_keys: 1 << 24,
+                ..Default::default()
             },
             ..Default::default()
         }
@@ -342,6 +348,7 @@ mod tests {
                 max_wait_ms: 0,
                 queue_capacity: 2,
                 max_queued_keys: 1 << 20,
+                ..Default::default()
             },
             ..Default::default()
         };

@@ -288,6 +288,11 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
     }
     let _retire = Retire { shared, worker };
 
+    // Lifetime coalescing totals at the last poll — deltas flow into
+    // the shared metrics after every batch (the engine itself has no
+    // metrics handle).
+    let mut coalesced_seen = engine.coalesced_totals().unwrap_or_default();
+
     loop {
         let batch = {
             let mut st = shared.state.lock().unwrap();
@@ -308,6 +313,19 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
         shared.slots.notify_all();
 
         let outcomes = execute_batch(worker, engine.as_mut(), batch, shared);
+
+        if let Some(totals) = engine.coalesced_totals() {
+            if totals != coalesced_seen {
+                shared.metrics.incr(
+                    "coalesced_requests",
+                    totals.requests - coalesced_seen.requests,
+                );
+                shared
+                    .metrics
+                    .incr("coalesced_groups", totals.groups - coalesced_seen.groups);
+                coalesced_seen = totals;
+            }
+        }
 
         {
             let mut st = shared.state.lock().unwrap();

@@ -17,10 +17,10 @@
 //! (≤ 2n/s + chunking slack), so the critical path is balanced without
 //! work stealing.
 
-use crate::algos::{radix, ExecContext, KernelKind};
+use crate::algos::{plan, ExecContext, KernelKind};
 use crate::error::Result;
 use crate::key::Record;
-use crate::util::{pool, ScratchArena};
+use crate::util::pool;
 use crate::SortKey;
 use std::time::Instant;
 
@@ -164,7 +164,7 @@ impl NativeEngine {
         // kernel (§Perf).
         if n <= self.params.sequential_cutoff || self.workers <= 1 {
             let t0 = Instant::now();
-            sort_run(keys, self.ctx.kernel, &self.ctx.arena);
+            sort_run(keys, &self.ctx);
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             return NativeReport {
                 n,
@@ -214,11 +214,8 @@ impl NativeEngine {
         // Steps 1–2: parallel chunk sorts with the selected kernel
         // (scratch per worker from the arena).
         let t0 = Instant::now();
-        let kernel = self.ctx.kernel;
-        let arena = &self.ctx.arena;
-        pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| {
-            sort_run(c, kernel, arena)
-        });
+        let ctx = &self.ctx;
+        pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| sort_run(c, ctx));
         phases.local_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         // Steps 3–5: s regular samples per chunk → buckets−1 splitters.
@@ -313,7 +310,7 @@ impl NativeEngine {
                 slices.push(head);
                 rest = tail;
             }
-            pool::parallel_slices_mut(slices, workers, |_, b| sort_run(b, kernel, arena));
+            pool::parallel_slices_mut(slices, workers, |_, b| sort_run(b, ctx));
         }
         phases.bucket_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -334,16 +331,18 @@ impl NativeEngine {
     }
 }
 
-/// Sort one contiguous run with the selected kernel: the LSD counting
-/// kernel over radix bytes, or the comparison path —
-/// `slice::sort_unstable_by` on key bits, the host-optimal equivalent
-/// of the GPU engines' bitonic network (the network itself would waste
-/// the CPU's branch predictor on O(n log² n) work).
-fn sort_run<K: SortKey>(keys: &mut [K], kernel: KernelKind, arena: &ScratchArena) {
-    match kernel {
+/// Sort one contiguous run with the selected kernel: the
+/// planner-scheduled wide-digit LSD kernel (pass schedule from the
+/// context's digit width, constant digits elided), or the comparison
+/// path — `slice::sort_unstable_by` on key bits, the host-optimal
+/// equivalent of the GPU engines' bitonic network (the network itself
+/// would waste the CPU's branch predictor on O(n log² n) work).
+fn sort_run<K: SortKey>(keys: &mut [K], ctx: &ExecContext) {
+    match ctx.kernel {
         KernelKind::Radix => {
-            let mut scratch = arena.take_empty::<K>();
-            radix::radix_tile_sort(keys, &mut scratch);
+            let mut scratch = ctx.arena.take_empty::<K>();
+            let mut counts = ctx.arena.take_empty::<usize>();
+            plan::planned_sort(keys, &mut scratch, &mut counts, ctx.digit_bits, None);
         }
         KernelKind::Bitonic => keys.sort_unstable_by(K::key_cmp),
     }

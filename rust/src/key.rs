@@ -92,6 +92,28 @@ pub trait SortKey: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
     /// second).
     fn radix_byte(self, i: usize) -> u8;
 
+    /// The digit of `bits` width at `bit_offset` within the ordered bit
+    /// pattern — the wide-digit generalization of [`SortKey::radix_byte`]
+    /// used by the execution planner's LSD passes
+    /// ([`crate::algos::plan`]). `bit_offset + bits` may extend past the
+    /// key's width; the missing high bits read as zero. The default
+    /// assembles the digit from at most three `radix_byte` calls, which
+    /// is what lets composite keys ([`Record`], [`Segmented`]) join the
+    /// planned passes without their own bit plumbing; the primitive
+    /// impls override it with a single shift.
+    #[inline]
+    fn radix_digit(self, bit_offset: u32, bits: u32) -> usize {
+        debug_assert!(bits >= 1 && bits <= 16);
+        let first = bit_offset as usize / 8;
+        let mut v: u64 = 0;
+        let mut byte = first;
+        while byte < Self::WIDTH_BYTES && 8 * byte < (bit_offset + bits) as usize {
+            v |= (self.radix_byte(byte) as u64) << (8 * (byte - first));
+            byte += 1;
+        }
+        ((v >> (bit_offset % 8)) & ((1u64 << bits) - 1)) as usize
+    }
+
     /// Total-order comparison (by bits).
     #[inline]
     fn key_cmp(&self, other: &Self) -> Ordering {
@@ -135,6 +157,11 @@ impl SortKey for u32 {
     fn radix_byte(self, i: usize) -> u8 {
         (self >> (8 * i)) as u8
     }
+
+    #[inline]
+    fn radix_digit(self, bit_offset: u32, bits: u32) -> usize {
+        ((self as u64 >> bit_offset) & ((1u64 << bits) - 1)) as usize
+    }
 }
 
 impl SortKey for u64 {
@@ -160,6 +187,11 @@ impl SortKey for u64 {
     #[inline]
     fn radix_byte(self, i: usize) -> u8 {
         (self >> (8 * i)) as u8
+    }
+
+    #[inline]
+    fn radix_digit(self, bit_offset: u32, bits: u32) -> usize {
+        ((self >> bit_offset) & ((1u64 << bits) - 1)) as usize
     }
 }
 
@@ -189,6 +221,11 @@ impl SortKey for i32 {
     fn radix_byte(self, i: usize) -> u8 {
         (SortKey::to_bits(self) >> (8 * i)) as u8
     }
+
+    #[inline]
+    fn radix_digit(self, bit_offset: u32, bits: u32) -> usize {
+        ((SortKey::to_bits(self) as u64 >> bit_offset) & ((1u64 << bits) - 1)) as usize
+    }
 }
 
 impl SortKey for i64 {
@@ -214,6 +251,11 @@ impl SortKey for i64 {
     #[inline]
     fn radix_byte(self, i: usize) -> u8 {
         (SortKey::to_bits(self) >> (8 * i)) as u8
+    }
+
+    #[inline]
+    fn radix_digit(self, bit_offset: u32, bits: u32) -> usize {
+        ((SortKey::to_bits(self) >> bit_offset) & ((1u64 << bits) - 1)) as usize
     }
 }
 
@@ -263,6 +305,11 @@ impl SortKey for f32 {
         // Same trait-vs-inherent shadowing as above: the digits must
         // come from the order-preserving bits.
         (SortKey::to_bits(self) >> (8 * i)) as u8
+    }
+
+    #[inline]
+    fn radix_digit(self, bit_offset: u32, bits: u32) -> usize {
+        ((SortKey::to_bits(self) as u64 >> bit_offset) & ((1u64 << bits) - 1)) as usize
     }
 }
 
@@ -331,6 +378,113 @@ impl<K: SortKey> SortKey for Record<K> {
             self.key.radix_byte(i - 4)
         }
     }
+}
+
+/// A key tagged with the request segment it belongs to — the carrier of
+/// **coalesced dispatch** ([`crate::coordinator::coalesce`]).
+///
+/// `Segmented<K>` orders by `(segment, key bits)`: the segment id is the
+/// *most* significant comparison position, so sorting the concatenation
+/// of many small requests yields every request's keys sorted and
+/// contiguous, in submission order — one kernel invocation over the
+/// whole batch, split back into per-request responses that are
+/// byte-identical to sorting each request alone (the sorted sequence of
+/// a request's key multiset is unique).
+///
+/// It composes with [`Record`] the obvious way:
+/// `Record<Segmented<K>>` orders by `(segment, key, index)`, which is
+/// exactly the per-request stable key–value order, so coalesced
+/// key–value batches stay stable per request too.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segmented<K> {
+    /// Index of the request this key belongs to within its batch group.
+    pub seg: u32,
+    /// The request's own sort key.
+    pub key: K,
+}
+
+impl<K: SortKey> SortKey for Segmented<K> {
+    type Bits = (u32, K::Bits);
+    const WIDTH_BYTES: usize = K::WIDTH_BYTES + 4;
+    const PAD: Self = Segmented {
+        seg: u32::MAX,
+        key: K::PAD,
+    };
+
+    #[inline]
+    fn to_bits(self) -> Self::Bits {
+        (self.seg, self.key.to_bits())
+    }
+
+    #[inline]
+    fn from_bits(bits: Self::Bits) -> Self {
+        Segmented {
+            seg: bits.0,
+            key: K::from_bits(bits.1),
+        }
+    }
+
+    #[inline]
+    fn from_raw_bits(raw: u64) -> Self {
+        Segmented {
+            seg: 0,
+            key: K::from_raw_bits(raw),
+        }
+    }
+
+    #[inline]
+    fn radix_byte(self, i: usize) -> u8 {
+        // Low bytes: the key's own digits; above them, the segment id —
+        // so LSD passes order within segments first, then by segment.
+        if i < K::WIDTH_BYTES {
+            self.key.radix_byte(i)
+        } else {
+            (self.seg >> (8 * (i - K::WIDTH_BYTES))) as u8
+        }
+    }
+}
+
+/// Compile-time ↔ runtime bridge for the [`KeyData`] variants: lets
+/// generic code take a typed vector out of (and wrap one back into) the
+/// request-level carrier. Implemented exactly for the [`KeyType`] set;
+/// the coalescer uses it to run one generic composition over whichever
+/// key type a request group holds.
+pub trait TypedKeys: SortKey + Sized {
+    /// The runtime tag of this key type.
+    const KEY_TYPE: KeyType;
+
+    /// Take the typed vector out of `data`, if it holds this type.
+    fn from_key_data(data: KeyData) -> Option<Vec<Self>>;
+
+    /// Wrap a typed vector back into the runtime carrier.
+    fn into_key_data(v: Vec<Self>) -> KeyData;
+}
+
+macro_rules! impl_typed_keys {
+    ($($ty:ty => $variant:ident),* $(,)?) => {
+        $(impl TypedKeys for $ty {
+            const KEY_TYPE: KeyType = KeyType::$variant;
+
+            fn from_key_data(data: KeyData) -> Option<Vec<Self>> {
+                match data {
+                    KeyData::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+
+            fn into_key_data(v: Vec<Self>) -> KeyData {
+                KeyData::$variant(v)
+            }
+        })*
+    };
+}
+
+impl_typed_keys! {
+    u32 => U32,
+    u64 => U64,
+    i32 => I32,
+    i64 => I64,
+    f32 => F32,
 }
 
 /// The 32-bit record-index cap shared by every key–value entry point.
@@ -729,6 +883,80 @@ mod tests {
         assert_eq!(wide.width_bytes(), 8);
         assert!(wide.as_u32().is_none());
         assert!(KeyData::default().is_empty());
+    }
+
+    #[test]
+    fn radix_digit_agrees_with_radix_bytes() {
+        // The wide digit at any (offset, width) must equal the value
+        // assembled from the byte stream — for the primitive overrides
+        // and for the composite default impls alike.
+        fn check<K: SortKey>(k: K) {
+            for bits in [1u32, 5, 8, 11, 16] {
+                let width_bits = 8 * K::WIDTH_BYTES as u32;
+                let mut offset = 0;
+                while offset < width_bits {
+                    let b = bits.min(width_bits - offset);
+                    let got = k.radix_digit(offset, b);
+                    let mut expect: u64 = 0;
+                    for i in 0..b {
+                        let bit = offset + i;
+                        let byte = k.radix_byte(bit as usize / 8);
+                        expect |= (((byte >> (bit % 8)) & 1) as u64) << i;
+                    }
+                    assert_eq!(got, expect as usize, "offset={offset} bits={b}");
+                    offset += b;
+                }
+            }
+        }
+        check(0xDEAD_BEEFu32);
+        check(0x0123_4567_89AB_CDEFu64);
+        check(-123_456_789i32);
+        check(-(1i64 << 40) - 7);
+        check(-1.5e-20f32);
+        check(Record {
+            key: 0xCAFE_F00Du32,
+            idx: 0x1234_5678,
+        });
+        check(Segmented {
+            seg: 42,
+            key: 0xFFFF_0001u32,
+        });
+    }
+
+    #[test]
+    fn segmented_orders_by_segment_then_key() {
+        let a = Segmented { seg: 0, key: 9u32 };
+        let b = Segmented { seg: 1, key: 0u32 };
+        let c = Segmented { seg: 1, key: 5u32 };
+        assert!(a.key_lt(&b), "segment dominates the key");
+        assert!(b.key_lt(&c));
+        assert_eq!(<Segmented<u32> as SortKey>::WIDTH_BYTES, 8);
+        let pad = <Segmented<u32> as SortKey>::PAD;
+        assert!(c.key_lt(&pad));
+        // Round-trip through bits.
+        let back = Segmented::<u32>::from_bits(c.to_bits());
+        assert_eq!(back, c);
+        // The key occupies the low digits, the segment the high ones —
+        // the property that makes stable LSD passes segment-major.
+        assert_eq!(c.radix_byte(0), 5);
+        assert_eq!(c.radix_byte(4), 1);
+    }
+
+    #[test]
+    fn typed_keys_bridge_round_trips() {
+        fn check<K: TypedKeys>(v: Vec<K>) {
+            let data = K::into_key_data(v.clone());
+            assert_eq!(data.key_type(), K::KEY_TYPE);
+            let back = K::from_key_data(data).unwrap();
+            assert_eq!(back.len(), v.len());
+        }
+        check(vec![1u32, 2]);
+        check(vec![1u64, 2]);
+        check(vec![-1i32, 2]);
+        check(vec![-1i64, 2]);
+        check(vec![0.5f32, -2.0]);
+        // Wrong-type extraction refuses.
+        assert!(u32::from_key_data(KeyData::U64(vec![1])).is_none());
     }
 
     #[test]

@@ -69,7 +69,7 @@ pub mod workload;
 
 pub use algos::{ExecContext, KernelKind};
 pub use error::{Error, Result};
-pub use key::{KeyData, KeyType, Record, SortKey};
+pub use key::{KeyData, KeyType, Record, Segmented, SortKey, TypedKeys};
 
 /// The paper's key type (32-bit keys, 4-byte data items) — kept as the
 /// classic alias of the typed [`SortKey`] surface. New code should be

@@ -73,22 +73,27 @@ COMMANDS
   sort        --n 32M [--dist uniform] [--algo {algos}]
               [--engine native|sim|pjrt|sharded] [--device gtx285]
               [--devices gtx285,tesla,gtx285-1g,gtx260] [--seed 1]
-              [--kernel radix|bitonic]
+              [--kernel radix|bitonic] [--digit-bits 11]
               [--key-type u32|u64|i32|i64|f32] [--payload true]
               [--descending true] [--verify true] [--analytic true]
               (sharded: shard across a multi-GPU pool; --analytic prices
                paper-scale n, e.g. 768M over 4 devices, without data;
                --kernel picks the executed tile/bucket kernel — radix is
                the fast default, bitonic the paper's comparison path,
-               outputs byte-identical either way;
+               outputs byte-identical either way; --digit-bits sets the
+               planned radix kernel's digit width (1–16, default 11 →
+               3 passes over u32) — wall time only, never bytes;
                --key-type/--payload/--descending route through the typed
                engine path — f32 sorts by IEEE-754 total order, NaN-safe)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
               [--engine native|sharded] [--workers 4] [--config file.json]
-              [--kernel radix|bitonic]
+              [--kernel radix|bitonic] [--digit-bits 11]
+              [--coalesce-max-keys 128K]
               [--key-type u32] [--payload true] [--descending true]
               (--workers runs N engine instances concurrently; sharded
-               engines lease disjoint device subsets per worker)
+               engines lease disjoint device subsets per worker;
+               small same-shaped requests coalesce into one kernel
+               invocation up to --coalesce-max-keys each, 0 disables)
   experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all>
               [--out results] [--fast true]
   specs       print the paper's Table 1
@@ -149,6 +154,15 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
     let descending = flag(flags, "descending", "false") == "true";
     let kernel = KernelKind::parse(flag(flags, "kernel", KernelKind::default().id()))
         .ok_or("unknown kernel")?;
+    let digit_bits: u32 = flag(
+        flags,
+        "digit-bits",
+        &gpu_bucket_sort::algos::plan::DEFAULT_DIGIT_BITS.to_string(),
+    )
+    .parse()
+    .map_err(|e| format!("bad --digit-bits: {e}"))?;
+    gpu_bucket_sort::algos::plan::validate_digit_bits(digit_bits).map_err(|e| e.to_string())?;
+    let ctx = || ExecContext::new(kernel, 0).with_digit_bits(digit_bits);
 
     if key_type != KeyType::U32 || payload || descending {
         if analytic {
@@ -156,11 +170,12 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
         }
         return cmd_sort_typed(
             flags, n, dist, seed, engine, verify, key_type, payload, descending, kernel,
+            digit_bits,
         );
     }
 
     if engine == EngineKind::Sharded {
-        return cmd_sort_sharded(flags, n, dist, seed, verify, analytic, kernel);
+        return cmd_sort_sharded(flags, n, dist, seed, verify, analytic, ctx());
     }
     if analytic {
         return Err("--analytic is only supported with --engine sharded".into());
@@ -171,7 +186,7 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
 
     match engine {
         EngineKind::Native => {
-            let e = NativeEngine::with_context(NativeParams::default(), ExecContext::new(kernel, 0))
+            let e = NativeEngine::with_context(NativeParams::default(), ctx())
                 .map_err(|e| e.to_string())?;
             let mut keys = input.clone();
             let report = e.sort(&mut keys);
@@ -208,7 +223,7 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
             // arena); the ledger and estimate are identical for either
             // kernel. Baselines execute their own fixed kernels.
             let est_ms = algo
-                .run_in(&mut keys, &mut sim, &ExecContext::new(kernel, 0))
+                .run_in(&mut keys, &mut sim, &ctx())
                 .map_err(|e| e.to_string())?;
             println!(
                 "{algo} on simulated {device}: estimated {est_ms:.2} ms on-device \
@@ -251,7 +266,7 @@ fn cmd_sort_sharded(
     seed: u64,
     verify: bool,
     analytic: bool,
-    kernel: KernelKind,
+    ctx: ExecContext,
 ) -> Result<(), String> {
     let default_devices = DevicePool::DEFAULT_DEVICES.map(|m| m.id()).join(",");
     let models = DevicePool::parse_list(flag(flags, "devices", &default_devices))
@@ -273,7 +288,7 @@ fn cmd_sort_sharded(
         let mut keys = input.clone();
         let t0 = Instant::now();
         let report = sorter
-            .sort_in(&mut keys, &mut pool, &ExecContext::new(kernel, 0))
+            .sort_in(&mut keys, &mut pool, &ctx)
             .map_err(|e| e.to_string())?;
         println!(
             "host execution {:.0} ms, largest destination shard {} keys",
@@ -317,6 +332,7 @@ fn cmd_sort_typed(
     payload: bool,
     descending: bool,
     kernel: KernelKind,
+    digit_bits: u32,
 ) -> Result<(), String> {
     // The typed path serves the deterministic sample sort; the
     // baselines (radix in particular) are u32-only, so an explicit
@@ -333,6 +349,7 @@ fn cmd_sort_typed(
     let mut cfg = ServiceConfig {
         engine,
         kernel,
+        digit_bits,
         ..ServiceConfig::default()
     };
     if let Some(d) = flags.get("device") {
@@ -414,6 +431,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(k) = flags.get("kernel") {
         cfg.kernel = KernelKind::parse(k).ok_or("unknown kernel")?;
+    }
+    if let Some(d) = flags.get("digit-bits") {
+        cfg.digit_bits = d.parse().map_err(|e| format!("bad --digit-bits: {e}"))?;
+    }
+    if let Some(c) = flags.get("coalesce-max-keys") {
+        cfg.batch.coalesce_max_keys = parse_size(c)?;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     let requests: usize = flag(flags, "requests", "64").parse().map_err(|e| format!("{e}"))?;

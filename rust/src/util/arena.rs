@@ -106,26 +106,33 @@ impl ScratchArena {
         }
     }
 
-    fn pop_vec<T: Send + 'static>(&self) -> Option<Vec<T>> {
-        let mut g = self.lock();
-        let shelf = g.shelves.get_mut(&TypeId::of::<Vec<T>>())?;
-        let boxed = shelf.free.pop()?;
-        let vec = *boxed.downcast::<Vec<T>>().unwrap_or_default();
-        let bytes = vec.capacity() * std::mem::size_of::<T>();
-        shelf.retained_bytes = shelf.retained_bytes.saturating_sub(bytes);
-        g.hits += 1;
-        Some(vec)
-    }
-
     /// Check out an empty buffer (recycled capacity when available).
+    /// One lock acquisition per checkout, hit or miss — the planned
+    /// radix kernel checks out two buffers (ping-pong keys + counting
+    /// table) per tile, so the checkout path is itself hot.
     pub fn take_empty<T: Send + 'static>(&self) -> ScratchBuf<T> {
-        let vec = match self.pop_vec::<T>() {
-            Some(v) => v,
+        let mut g = self.lock();
+        let popped = g
+            .shelves
+            .get_mut(&TypeId::of::<Vec<T>>())
+            .and_then(|shelf| {
+                let boxed = shelf.free.pop()?;
+                let vec = *boxed.downcast::<Vec<T>>().unwrap_or_default();
+                let bytes = vec.capacity() * std::mem::size_of::<T>();
+                shelf.retained_bytes = shelf.retained_bytes.saturating_sub(bytes);
+                Some(vec)
+            });
+        let vec = match popped {
+            Some(v) => {
+                g.hits += 1;
+                v
+            }
             None => {
-                self.lock().misses += 1;
+                g.misses += 1;
                 Vec::new()
             }
         };
+        drop(g);
         ScratchBuf {
             vec,
             home: Arc::clone(&self.inner),

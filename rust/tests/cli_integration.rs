@@ -133,6 +133,25 @@ fn sort_kernel_flag() {
 }
 
 #[test]
+fn sort_digit_bits_flag() {
+    // The planner's digit width is tunable and validated; outputs
+    // verify at any width.
+    let (ok, text) = gbs(&["sort", "--n", "100K", "--digit-bits", "13"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified: sorted permutation"), "{text}");
+    let (ok, _) = gbs(&["sort", "--n", "1K", "--digit-bits", "0"]);
+    assert!(!ok);
+    let (ok, _) = gbs(&["sort", "--n", "1K", "--digit-bits", "17"]);
+    assert!(!ok);
+
+    // Help advertises the planner and coalescing knobs.
+    let (ok, text) = gbs(&["help"]);
+    assert!(ok);
+    assert!(text.contains("--digit-bits"), "{text}");
+    assert!(text.contains("--coalesce-max-keys"), "{text}");
+}
+
+#[test]
 fn help_mentions_sharded_engine() {
     let (ok, text) = gbs(&["help"]);
     assert!(ok);

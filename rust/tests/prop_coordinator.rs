@@ -32,6 +32,7 @@ fn batcher_conserves_and_orders_requests() {
             max_wait_ms: 5,
             queue_capacity: 64,
             max_queued_keys: 1 << 20,
+            ..Default::default()
         };
         let mut batcher = Batcher::new(cfg);
         let t0 = Instant::now();
@@ -84,6 +85,7 @@ fn batcher_restore_front_preserves_order() {
             max_wait_ms: 0,
             queue_capacity: 64,
             max_queued_keys: 1 << 20,
+            ..Default::default()
         };
         let mut batcher = Batcher::new(cfg);
         let t0 = Instant::now();
@@ -122,6 +124,7 @@ fn service_returns_each_requests_own_keys() {
             max_wait_ms: 1,
             queue_capacity: 256,
             max_queued_keys: 1 << 24,
+            ..Default::default()
         },
         ..Default::default()
     };

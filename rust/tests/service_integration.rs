@@ -21,6 +21,7 @@ fn cfg() -> ServiceConfig {
             max_wait_ms: 1,
             queue_capacity: 256,
             max_queued_keys: 1 << 26,
+            ..Default::default()
         },
         ..Default::default()
     }
@@ -500,6 +501,130 @@ fn typed_requests_on_sim_and_sharded_engines() {
             }
         }
         other => panic!("wrong key type back: {:?}", other.key_type()),
+    }
+    client.shutdown();
+}
+
+#[test]
+fn coalesced_batches_byte_identical_to_solo_requests_across_workers() {
+    // The coalescing determinism contract, end to end: a burst of small
+    // mixed-size, mixed-type requests (which the batcher groups and the
+    // native engine coalesces into composed invocations) must return
+    // responses byte-identical to sorting each request alone, at every
+    // worker count. The solo references are computed through a
+    // coalescing-disabled service so the two paths share nothing.
+    let mk_requests = || -> Vec<SortRequest> {
+        let mut reqs = Vec::new();
+        for i in 0..10u64 {
+            let n = 800 + 313 * i as usize;
+            reqs.push(SortRequest::new(Distribution::Uniform.generate(n, i)));
+            reqs.push(SortRequest::new(
+                Distribution::Uniform
+                    .generate(n / 2, 100 + i)
+                    .into_iter()
+                    .map(|x| (x as u64) << 11 | 3)
+                    .collect::<Vec<u64>>(),
+            ));
+            let fkeys: Vec<f32> = Distribution::Uniform
+                .generate(n / 4, 200 + i)
+                .into_iter()
+                .map(|x| x as f32 - 2e9)
+                .collect();
+            reqs.push(SortRequest::new(fkeys));
+        }
+        reqs
+    };
+
+    // Solo references: coalescing off, one worker.
+    let solo_cfg = ServiceConfig {
+        batch: BatchConfig {
+            coalesce_max_keys: 0,
+            ..cfg().batch
+        },
+        ..cfg()
+    };
+    let solo_client = SortService::start(solo_cfg).unwrap();
+    let references: Vec<(KeyData, Option<Vec<u64>>)> = mk_requests()
+        .into_iter()
+        .map(|r| {
+            let out = solo_client.sort(r).unwrap();
+            (out.keys, out.payload)
+        })
+        .collect();
+    solo_client.shutdown();
+
+    let mut coalesced_total = 0u64;
+    for workers in [1usize, 2, 4] {
+        // A generous batching window so the burst actually shares
+        // batches (and therefore coalesced groups).
+        let coalesce_cfg = ServiceConfig {
+            workers,
+            batch: BatchConfig {
+                max_wait_ms: 20,
+                max_batch_requests: 16,
+                ..cfg().batch
+            },
+            ..cfg()
+        };
+        assert!(coalesce_cfg.batch.coalesce_max_keys > 0);
+        let client = SortService::start(coalesce_cfg).unwrap();
+        let rxs: Vec<_> = mk_requests()
+            .into_iter()
+            .map(|r| client.submit(r).unwrap())
+            .collect();
+        for (i, (rx, (ref_keys, ref_payload))) in rxs.into_iter().zip(&references).enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(&out.keys, ref_keys, "request {i} at {workers} workers");
+            assert_eq!(&out.payload, ref_payload, "request {i} at {workers} workers");
+        }
+        let snap = client.shutdown();
+        assert_eq!(snap.counters["requests_completed"], 30);
+        coalesced_total += snap.counters.get("coalesced_requests").copied().unwrap_or(0);
+    }
+    // Dispatch timing decides how many requests share each batch, but
+    // over three 30-request bursts the mechanism must have engaged.
+    assert!(
+        coalesced_total > 0,
+        "coalesced dispatch never engaged across the bursts"
+    );
+}
+
+#[test]
+fn coalesced_key_value_requests_stay_stable_per_request() {
+    // Key-value requests with heavy ties coalesce too; each response
+    // must keep the per-request stable (submission-order) payload
+    // pairing the uncoalesced path guarantees.
+    let client = SortService::start(cfg()).unwrap();
+    let mut rxs = Vec::new();
+    let mut inputs = Vec::new();
+    for i in 0..8u64 {
+        let keys: Vec<u32> = Distribution::Uniform
+            .generate(600 + 97 * i as usize, i)
+            .into_iter()
+            .map(|x| x % 16)
+            .collect();
+        let payload: Vec<u64> = (0..keys.len() as u64).collect();
+        let req = SortRequest::builder(keys.clone())
+            .payload(payload.clone())
+            .self_check(true)
+            .build()
+            .unwrap();
+        rxs.push(client.submit(req).unwrap());
+        inputs.push((keys, payload));
+    }
+    for (rx, (keys_in, _)) in rxs.into_iter().zip(inputs) {
+        let out = rx.recv().unwrap().unwrap();
+        let sorted = out.keys.as_u32().unwrap();
+        let payload = out.payload.as_ref().unwrap();
+        assert!(gpu_bucket_sort::is_sorted_permutation(&keys_in, sorted));
+        for (w, pw) in sorted.windows(2).zip(payload.windows(2)) {
+            if w[0] == w[1] {
+                assert!(pw[0] < pw[1], "tie broke submission order at key {}", w[0]);
+            }
+        }
+        for (k, p) in sorted.iter().zip(payload) {
+            assert_eq!(keys_in[*p as usize], *k, "payload divorced from key");
+        }
     }
     client.shutdown();
 }

@@ -154,6 +154,7 @@ fn service_runs_on_sharded_engine() {
             max_wait_ms: 1,
             queue_capacity: 64,
             max_queued_keys: 1 << 24,
+            ..Default::default()
         },
         ..Default::default()
     };
