@@ -1,0 +1,298 @@
+//! Network tier throughput: a multi-process load harness for the TCP
+//! sort server.
+//!
+//! The parent process re-executes itself (`GBS_NET_ROLE`) as one
+//! **server** subprocess (2-worker native service behind
+//! [`NetServer`]) and M **client** subprocesses, so the measurement
+//! crosses real process and socket boundaries — kernel TCP, frame
+//! codec, chunked streaming and credit flow control all on the path,
+//! with no shared memory shortcuts.
+//!
+//! Each client performs sequential `sort` round trips over one
+//! connection, checks every response against a local `sort_unstable`
+//! of the same input (**byte identity** is a gate, not a metric), and
+//! reports per-request latencies as JSON on stdout. The parent
+//! aggregates p50/p99 latency and Mkeys/s per client count and emits
+//! `BENCH_net.json` at the repo root — the perf-trajectory artifact
+//! validated by CI's `bench-smoke` job.
+//!
+//! Gates: responses byte-identical in every client process, and this
+//! light sequential load must finish with **zero** `Busy` sheds.
+//!
+//! `GBS_BENCH_FAST=1` selects the smoke profile used by CI.
+
+use gpu_bucket_sort::config::{NetConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortRequest, SortService};
+use gpu_bucket_sort::net::{NetClient, NetServer};
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+use std::io::{BufRead, BufReader, Read as _};
+use std::process::{Command, Stdio};
+use std::time::Instant;
+
+/// Engine workers behind the server subprocess.
+const WORKERS: usize = 2;
+
+struct Profile {
+    mode: &'static str,
+    requests_per_client: usize,
+    keys_per_request: usize,
+    client_counts: &'static [usize],
+}
+
+impl Profile {
+    fn from_env() -> Profile {
+        if std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1") {
+            Profile {
+                mode: "smoke",
+                requests_per_client: 8,
+                keys_per_request: 50_000,
+                client_counts: &[1, 4],
+            }
+        } else {
+            Profile {
+                mode: "full",
+                requests_per_client: 32,
+                keys_per_request: 500_000,
+                client_counts: &[1, 4],
+            }
+        }
+    }
+}
+
+/// `GBS_NET_ROLE=server`: serve until a client sends `Drain`, then
+/// report the shed counters on stdout for the parent to scrape.
+fn run_server() {
+    use std::io::Write as _;
+    let cfg = ServiceConfig {
+        workers: WORKERS,
+        verify: false,
+        ..ServiceConfig::default()
+    };
+    let service = SortService::start(cfg).expect("service starts");
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).expect("bind");
+    println!("GBS_NET_ADDR {}", server.local_addr());
+    std::io::stdout().flush().expect("flush addr line");
+    server.wait_for_drain_request(None);
+    let snap = server.shutdown();
+    let shed = snap.counters.get("net_shed_busy").copied().unwrap_or(0);
+    let responses = snap.counters.get("net_responses").copied().unwrap_or(0);
+    println!("GBS_NET_DONE shed_busy={shed} responses={responses}");
+}
+
+/// `GBS_NET_ROLE=client`: sequential sort round trips, byte-identity
+/// checked against a local sort, latencies reported as one JSON line.
+fn run_client() {
+    let addr = std::env::var("GBS_NET_ADDR").expect("GBS_NET_ADDR set");
+    let env_usize = |key: &str| -> usize {
+        std::env::var(key).expect(key).parse().expect("numeric env")
+    };
+    let requests = env_usize("GBS_NET_REQUESTS");
+    let n = env_usize("GBS_NET_N");
+    let seed = env_usize("GBS_NET_SEED") as u64;
+
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).expect("connect");
+    let mut latencies = Vec::with_capacity(requests);
+    let mut ok = true;
+    for r in 0..requests {
+        let keys = Distribution::Uniform.generate(n, seed * 10_000 + r as u64 + 1);
+        let mut expected = keys.clone();
+        expected.sort_unstable();
+        let t0 = Instant::now();
+        let out = client.sort(SortRequest::new(keys)).expect("sort succeeds");
+        latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        ok &= out.keys_u32() == expected.as_slice();
+    }
+    let report = Json::obj(vec![
+        ("ok", Json::Bool(ok)),
+        ("keys", Json::num((requests * n) as f64)),
+        ("latencies_us", Json::Arr(latencies.iter().map(|&l| Json::num(l)).collect())),
+    ]);
+    println!("{}", report.to_string_compact());
+    assert!(ok, "remote results diverged from the local sort");
+}
+
+struct RunResult {
+    clients: usize,
+    requests: usize,
+    wall_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mkeys_s: f64,
+    shed_busy: u64,
+}
+
+/// Nearest-rank percentile over an ascending slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// One load point: a fresh server subprocess, `clients` concurrent
+/// client subprocesses, then a graceful drain.
+fn run_load(profile: &Profile, clients: usize) -> RunResult {
+    let exe = std::env::current_exe().expect("current_exe");
+    let mut server = Command::new(&exe)
+        .env("GBS_NET_ROLE", "server")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn server");
+    let mut server_out = BufReader::new(server.stdout.take().expect("server stdout"));
+    let mut line = String::new();
+    server_out.read_line(&mut line).expect("read addr line");
+    let addr = line
+        .strip_prefix("GBS_NET_ADDR ")
+        .expect("server announced its address")
+        .trim()
+        .to_string();
+    // Drain the rest of the server's stdout off-thread: the DONE line
+    // arrives only after our drain request, and an unread pipe would
+    // otherwise deadlock the child at exit.
+    let tail = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = server_out.read_to_string(&mut rest);
+        rest
+    });
+
+    let t0 = Instant::now();
+    let children: Vec<_> = (0..clients)
+        .map(|c| {
+            Command::new(&exe)
+                .env("GBS_NET_ROLE", "client")
+                .env("GBS_NET_ADDR", &addr)
+                .env("GBS_NET_REQUESTS", profile.requests_per_client.to_string())
+                .env("GBS_NET_N", profile.keys_per_request.to_string())
+                .env("GBS_NET_SEED", (c + 1).to_string())
+                .stdout(Stdio::piped())
+                .spawn()
+                .expect("spawn client")
+        })
+        .collect();
+    let outputs: Vec<_> = children
+        .into_iter()
+        .map(|child| child.wait_with_output().expect("client exits"))
+        .collect();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Stop the server *before* asserting on client results, so a
+    // failed gate never leaves an orphaned subprocess behind.
+    NetClient::connect(&addr, 1, NetConfig::default())
+        .expect("drain connection")
+        .drain_server()
+        .expect("drain acknowledged");
+    let status = server.wait().expect("server exits");
+    let rest = tail.join().expect("server output thread");
+    assert!(status.success(), "server process failed:\n{rest}");
+    let done = rest
+        .lines()
+        .find(|l| l.starts_with("GBS_NET_DONE"))
+        .expect("server DONE line");
+    let shed_busy: u64 = done
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("shed_busy="))
+        .expect("shed_busy field")
+        .parse()
+        .expect("shed_busy parses");
+
+    let mut latencies = Vec::new();
+    let mut total_keys = 0u64;
+    for out in outputs {
+        assert!(out.status.success(), "client process failed");
+        let text = String::from_utf8_lossy(&out.stdout);
+        let json_line = text
+            .lines()
+            .find(|l| l.starts_with('{'))
+            .expect("client JSON line");
+        let report = Json::parse(json_line).expect("client JSON parses");
+        assert_eq!(
+            report.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "byte identity violated over TCP"
+        );
+        total_keys += report.get("keys").and_then(Json::as_u64).expect("keys");
+        for l in report
+            .get("latencies_us")
+            .and_then(Json::as_arr)
+            .expect("latencies")
+        {
+            latencies.push(l.as_f64().expect("latency number"));
+        }
+    }
+    latencies.sort_by(f64::total_cmp);
+    RunResult {
+        clients,
+        requests: clients * profile.requests_per_client,
+        wall_ms,
+        p50_ms: percentile(&latencies, 0.50) / 1e3,
+        p99_ms: percentile(&latencies, 0.99) / 1e3,
+        mkeys_s: total_keys as f64 / wall_ms * 1e3 / 1e6,
+        shed_busy,
+    }
+}
+
+fn result_json(r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("clients", Json::num(r.clients as f64)),
+        ("requests", Json::num(r.requests as f64)),
+        ("wall_ms", Json::num(r.wall_ms)),
+        ("p50_ms", Json::num(r.p50_ms)),
+        ("p99_ms", Json::num(r.p99_ms)),
+        ("mkeys_s", Json::num(r.mkeys_s)),
+        ("shed_busy", Json::num(r.shed_busy as f64)),
+    ])
+}
+
+fn main() {
+    match std::env::var("GBS_NET_ROLE").as_deref() {
+        Ok("server") => return run_server(),
+        Ok("client") => return run_client(),
+        _ => {}
+    }
+    let profile = Profile::from_env();
+    println!(
+        "net_throughput [{}]: {} requests × {} u32 keys per client, {WORKERS} workers, \
+         clients ∈ {:?}",
+        profile.mode, profile.requests_per_client, profile.keys_per_request, profile.client_counts
+    );
+
+    let mut results = Vec::new();
+    let mut shed_total = 0u64;
+    for &clients in profile.client_counts {
+        let r = run_load(&profile, clients);
+        println!(
+            "  clients={}  {:>8.1} ms  {:>7.2} Mkeys/s  p50 {:>7.1} ms  p99 {:>7.1} ms  shed={}",
+            r.clients, r.wall_ms, r.mkeys_s, r.p50_ms, r.p99_ms, r.shed_busy
+        );
+        shed_total += r.shed_busy;
+        results.push(r);
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("net_throughput")),
+        ("schema_version", Json::num(1.0)),
+        ("mode", Json::str(profile.mode)),
+        ("engine", Json::str("native")),
+        ("workers", Json::num(WORKERS as f64)),
+        ("requests_per_client", Json::num(profile.requests_per_client as f64)),
+        ("keys_per_request", Json::num(profile.keys_per_request as f64)),
+        ("byte_identity", Json::Bool(true)),
+        ("shed_light_load", Json::num(shed_total as f64)),
+        ("results", Json::Arr(results.iter().map(result_json).collect())),
+    ]);
+    std::fs::write("BENCH_net.json", report.to_string_pretty()).expect("write BENCH_net.json");
+    println!("→ BENCH_net.json");
+
+    // The gates: byte identity held in every client process (asserted
+    // above), and light sequential load never tripped the shedder.
+    assert_eq!(
+        shed_total, 0,
+        "light sequential load must not shed Busy ({shed_total} sheds)"
+    );
+    println!(
+        "gate OK: byte identity across {} load points, zero Busy sheds under light load",
+        results.len()
+    );
+}

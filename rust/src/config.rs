@@ -87,6 +87,65 @@ impl Default for BatchConfig {
     }
 }
 
+/// Network-tier settings (the TCP server/client in [`crate::net`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    /// Hard ceiling on a single frame's payload, in bytes. Frames that
+    /// declare more are rejected *before* any allocation — the decoder's
+    /// defense against hostile length prefixes.
+    pub max_frame_len: usize,
+    /// Per-connection credit window: how many sort requests one
+    /// connection may have in flight (streaming or queued) at once.
+    /// Credits are granted in the handshake and replenished as
+    /// responses/sheds complete — equal windows give per-connection
+    /// fairness.
+    pub credits: usize,
+    /// Preferred chunk size (bytes of key/payload data per streaming
+    /// frame). Must fit `max_frame_len`.
+    pub chunk_bytes: usize,
+    /// Hard per-request key-count ceiling; larger submissions are shed
+    /// with a typed `TooLarge` error frame at `SortBegin`, before any
+    /// key bytes are buffered.
+    pub max_request_keys: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_frame_len: 1 << 20,
+            credits: 8,
+            chunk_bytes: 1 << 18,
+            max_request_keys: 1 << 26,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Sanity-check the combination.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_frame_len < 1024 {
+            return Err(Error::Config(
+                "net.max_frame_len must be at least 1024 bytes".into(),
+            ));
+        }
+        if self.credits == 0 {
+            return Err(Error::Config("net.credits must be at least 1".into()));
+        }
+        if self.chunk_bytes < 8 || self.chunk_bytes > self.max_frame_len {
+            return Err(Error::Config(format!(
+                "net.chunk_bytes must be in [8, max_frame_len = {}]",
+                self.max_frame_len
+            )));
+        }
+        if self.max_request_keys == 0 {
+            return Err(Error::Config(
+                "net.max_request_keys must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Top-level service configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceConfig {
@@ -117,6 +176,8 @@ pub struct ServiceConfig {
     pub native: NativeParams,
     /// Batcher parameters.
     pub batch: BatchConfig,
+    /// Network-tier parameters (`gbs serve --listen` / `--connect`).
+    pub net: NetConfig,
     /// Verify every response is a sorted permutation (costly; tests and
     /// debugging).
     pub verify: bool,
@@ -136,6 +197,7 @@ impl Default for ServiceConfig {
             digit_bits: crate::algos::plan::DEFAULT_DIGIT_BITS,
             native: NativeParams::default(),
             batch: BatchConfig::default(),
+            net: NetConfig::default(),
             verify: false,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -236,6 +298,17 @@ impl ServiceConfig {
                             .unwrap_or(cfg.batch.coalesce_max_keys),
                     };
                 }
+                "net" => {
+                    cfg.net = NetConfig {
+                        max_frame_len: usize_field(val, "max_frame_len")
+                            .unwrap_or(cfg.net.max_frame_len),
+                        credits: usize_field(val, "credits").unwrap_or(cfg.net.credits),
+                        chunk_bytes: usize_field(val, "chunk_bytes")
+                            .unwrap_or(cfg.net.chunk_bytes),
+                        max_request_keys: usize_field(val, "max_request_keys")
+                            .unwrap_or(cfg.net.max_request_keys),
+                    };
+                }
                 "verify" => {
                     cfg.verify = val
                         .as_bool()
@@ -256,6 +329,7 @@ impl ServiceConfig {
     /// Sanity-check the combination.
     pub fn validate(&self) -> Result<()> {
         self.sort.validate()?;
+        self.net.validate()?;
         crate::algos::plan::validate_digit_bits(self.digit_bits)?;
         if self.workers == 0 {
             return Err(Error::Config("workers must be at least 1".into()));
@@ -336,6 +410,18 @@ impl ServiceConfig {
                     (
                         "coalesce_max_keys",
                         Json::num(self.batch.coalesce_max_keys as f64),
+                    ),
+                ]),
+            ),
+            (
+                "net",
+                Json::obj(vec![
+                    ("max_frame_len", Json::num(self.net.max_frame_len as f64)),
+                    ("credits", Json::num(self.net.credits as f64)),
+                    ("chunk_bytes", Json::num(self.net.chunk_bytes as f64)),
+                    (
+                        "max_request_keys",
+                        Json::num(self.net.max_request_keys as f64),
                     ),
                 ]),
             ),
@@ -429,6 +515,32 @@ mod tests {
         assert_eq!(cfg.batch.coalesce_max_keys, 0, "0 disables coalescing");
         assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
         assert_eq!(BatchConfig::default().coalesce_max_keys, 1 << 17);
+    }
+
+    #[test]
+    fn net_field_roundtrips_and_validates() {
+        let cfg = ServiceConfig::from_json(
+            r#"{"net":{"max_frame_len":65536,"credits":4,"chunk_bytes":4096,"max_request_keys":1000000}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.net.max_frame_len, 65536);
+        assert_eq!(cfg.net.credits, 4);
+        assert_eq!(cfg.net.chunk_bytes, 4096);
+        assert_eq!(cfg.net.max_request_keys, 1_000_000);
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // Partial net objects keep defaults for the rest.
+        let partial = ServiceConfig::from_json(r#"{"net":{"credits":2}}"#).unwrap();
+        assert_eq!(partial.net.credits, 2);
+        assert_eq!(partial.net.max_frame_len, NetConfig::default().max_frame_len);
+        // Invalid combinations are rejected.
+        assert!(ServiceConfig::from_json(r#"{"net":{"credits":0}}"#).is_err());
+        assert!(ServiceConfig::from_json(r#"{"net":{"max_frame_len":16}}"#).is_err());
+        assert!(
+            ServiceConfig::from_json(r#"{"net":{"chunk_bytes":2097152}}"#).is_err(),
+            "chunk larger than max_frame_len must be rejected"
+        );
+        assert!(ServiceConfig::from_json(r#"{"net":{"max_request_keys":0}}"#).is_err());
+        NetConfig::default().validate().unwrap();
     }
 
     #[test]

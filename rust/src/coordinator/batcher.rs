@@ -52,13 +52,13 @@ impl Batcher {
     /// Check whether a request of `len` keys can be admitted right now.
     pub fn can_admit(&self, len: usize) -> Result<()> {
         if self.queue.len() >= self.cfg.queue_capacity {
-            return Err(Error::Coordinator(format!(
+            return Err(Error::Busy(format!(
                 "queue full ({} requests) — backpressure",
                 self.queue.len()
             )));
         }
         if self.queued_keys + len > self.cfg.max_queued_keys && !self.queue.is_empty() {
-            return Err(Error::Coordinator(format!(
+            return Err(Error::Busy(format!(
                 "queued key budget exceeded ({} + {} > {}) — backpressure",
                 self.queued_keys,
                 len,
@@ -273,7 +273,8 @@ mod tests {
         }
         let (r, _x) = req(99, 1, t0);
         let err = b.admit(r).unwrap_err();
-        assert!(matches!(err, Error::Coordinator(_)));
+        assert!(matches!(err, Error::Busy(_)));
+        assert!(err.is_busy());
         assert!(err.to_string().contains("backpressure"));
     }
 

@@ -126,16 +126,32 @@ impl SortClient {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: drain queued work, stop the intake and every
-    /// worker, return the final metrics. Signalled end to end — the
-    /// intake acks only after the scheduler has joined its workers, so
-    /// the returned snapshot is complete (no polling quantization).
-    pub fn shutdown(self) -> MetricsSnapshot {
+    /// Graceful drain through **any** handle: complete queued work, stop
+    /// the intake and every worker, return the final metrics. Signalled
+    /// end to end — the intake acks only after the scheduler has joined
+    /// its workers, so the returned snapshot is complete (no polling
+    /// quantization).
+    ///
+    /// Unlike [`SortClient::shutdown`] this does not consume the handle,
+    /// so a transport front end (e.g. the TCP server, which shares the
+    /// service with in-process callers) can drain while other clones
+    /// are still alive. It is idempotent: once the intake has exited,
+    /// further calls return the final snapshot immediately. Requests
+    /// submitted through surviving clones afterwards fail with the same
+    /// typed "service stopped" error a socket-backed client observes as
+    /// a `shutdown` error frame.
+    pub fn drain(&self) -> MetricsSnapshot {
         let (ack_tx, ack_rx) = mpsc::channel();
         if self.core.tx.send(ClientMsg::Shutdown(ack_tx)).is_ok() {
             let _ = ack_rx.recv();
         }
         self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: [`SortClient::drain`] plus consuming this
+    /// handle (the classic in-process call shape).
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.drain()
     }
 }
 

@@ -37,9 +37,25 @@ pub enum Error {
     /// Artifact manifest problems (missing file, shape mismatch, bad
     /// JSON).
     Manifest(String),
-    /// Coordinator-level failure (queue closed, request cancelled,
-    /// backpressure rejection).
+    /// Coordinator-level failure (queue closed, request cancelled).
     Coordinator(String),
+    /// Load-shed rejection: the bounded admission queue is full. Carried
+    /// over the wire as a typed `Busy` error frame so remote clients can
+    /// back off exactly like in-process ones (the message always names
+    /// the backpressure cause).
+    Busy(String),
+    /// The request exceeds a hard size limit (protocol `max_request_keys`
+    /// or a device memory ceiling surfaced at admission).
+    TooLarge(String),
+    /// A failure reported by a remote sort server over the wire, in a
+    /// class that has no richer local representation (`code` is the wire
+    /// error-code name).
+    Remote {
+        /// Stable wire error-code name (e.g. `"internal"`).
+        code: String,
+        /// Human-readable server-side message.
+        message: String,
+    },
     /// Configuration file problems.
     Config(String),
     /// Wrapped I/O error.
@@ -62,6 +78,9 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Busy(m) => write!(f, "service busy: {m}"),
+            Error::TooLarge(m) => write!(f, "request too large: {m}"),
+            Error::Remote { code, message } => write!(f, "remote error [{code}]: {message}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -89,6 +108,13 @@ impl Error {
     pub fn is_oom(&self) -> bool {
         matches!(self, Error::DeviceOom { .. })
     }
+
+    /// True when the failure is a backpressure load-shed — callers (and
+    /// remote clients) should back off and retry rather than treat the
+    /// request as permanently failed.
+    pub fn is_busy(&self) -> bool {
+        matches!(self, Error::Busy(_))
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +133,22 @@ mod tests {
         assert!(s.contains("100"));
         assert!(e.is_oom());
         assert!(!Error::InvalidParams("x".into()).is_oom());
+    }
+
+    #[test]
+    fn busy_and_remote_classes() {
+        let busy = Error::Busy("queue full (8 requests) — backpressure".into());
+        assert!(busy.is_busy());
+        assert!(busy.to_string().contains("backpressure"));
+        assert!(!Error::Coordinator("x".into()).is_busy());
+        let big = Error::TooLarge("10 > 5 keys".into());
+        assert!(big.to_string().contains("too large"));
+        let remote = Error::Remote {
+            code: "internal".into(),
+            message: "engine exploded".into(),
+        };
+        assert!(remote.to_string().contains("internal"));
+        assert!(remote.to_string().contains("engine exploded"));
     }
 
     #[test]

@@ -62,6 +62,7 @@ pub mod exec;
 pub mod experiments;
 pub mod key;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod util;

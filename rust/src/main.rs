@@ -14,10 +14,11 @@
 
 use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
 use gpu_bucket_sort::algos::Algorithm;
-use gpu_bucket_sort::config::{EngineKind, ServiceConfig};
+use gpu_bucket_sort::config::{EngineKind, NetConfig, ServiceConfig};
 use gpu_bucket_sort::coordinator::{build_engine, verify_outcome, JobData, SortRequest, SortService};
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
 use gpu_bucket_sort::experiments as exp;
+use gpu_bucket_sort::net::{NetClient, NetServer};
 use gpu_bucket_sort::runtime::PjrtRuntime;
 use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::workload::Distribution;
@@ -84,16 +85,24 @@ COMMANDS
                planned radix kernel's digit width (1–16, default 11 →
                3 passes over u32) — wall time only, never bytes;
                --key-type/--payload/--descending route through the typed
-               engine path — f32 sorts by IEEE-754 total order, NaN-safe)
+               engine path — f32 sorts by IEEE-754 total order, NaN-safe;
+               --connect HOST:PORT submits the sort to a remote
+               `gbs serve --listen` server over the framed TCP protocol,
+               with [--connections 1] pooled sockets — add --drain true
+               to ask that server to drain gracefully instead)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
               [--engine native|sharded] [--workers 4] [--config file.json]
               [--kernel radix|bitonic] [--digit-bits 11]
               [--coalesce-max-keys 128K]
               [--key-type u32] [--payload true] [--descending true]
+              [--listen 127.0.0.1:4750]
               (--workers runs N engine instances concurrently; sharded
                engines lease disjoint device subsets per worker;
                small same-shaped requests coalesce into one kernel
-               invocation up to --coalesce-max-keys each, 0 disables)
+               invocation up to --coalesce-max-keys each, 0 disables;
+               --listen serves sorts over TCP instead of running the
+               synthetic load — port 0 picks a free port — until a
+               client requests a drain)
   experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all>
               [--out results] [--fast true]
   specs       print the paper's Table 1
@@ -152,6 +161,14 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
     let key_type = KeyType::parse(flag(flags, "key-type", "u32")).ok_or("unknown key type")?;
     let payload = flag(flags, "payload", "false") == "true";
     let descending = flag(flags, "descending", "false") == "true";
+    if let Some(addr) = flags.get("connect") {
+        if analytic {
+            return Err("--analytic runs locally; it cannot combine with --connect".into());
+        }
+        return cmd_sort_remote(
+            flags, n, dist, seed, verify, key_type, payload, descending, addr,
+        );
+    }
     let kernel = KernelKind::parse(flag(flags, "kernel", KernelKind::default().id()))
         .ok_or("unknown kernel")?;
     let digit_bits: u32 = flag(
@@ -402,6 +419,74 @@ fn cmd_sort_typed(
     Ok(())
 }
 
+/// `gbs sort --connect HOST:PORT`: submit the sort to a remote
+/// `gbs serve --listen` server over the framed TCP protocol and verify
+/// the response locally (the remote result is byte-identical to an
+/// in-process run against the same service config).
+#[allow(clippy::too_many_arguments)]
+fn cmd_sort_remote(
+    flags: &HashMap<String, String>,
+    n: usize,
+    dist: Distribution,
+    seed: u64,
+    verify: bool,
+    key_type: KeyType,
+    payload: bool,
+    descending: bool,
+    addr: &str,
+) -> Result<(), String> {
+    let connections: usize = flag(flags, "connections", "1")
+        .parse()
+        .map_err(|e| format!("bad --connections: {e}"))?;
+    let client =
+        NetClient::connect(addr, connections, NetConfig::default()).map_err(|e| e.to_string())?;
+    if flag(flags, "drain", "false") == "true" {
+        client.drain_server().map_err(|e| e.to_string())?;
+        println!("drain acknowledged by {addr}");
+        return Ok(());
+    }
+    println!(
+        "generating {n} {key_type} keys ({dist}){} …",
+        if payload { " with u64 payloads" } else { "" }
+    );
+    let keys = dist.generate_data(key_type, n, seed);
+    let reference = JobData {
+        keys: keys.clone(),
+        payload: payload.then(|| (0..n as u64).collect()),
+    };
+    let mut builder = SortRequest::builder(keys).descending(descending);
+    if payload {
+        builder = builder.payload((0..n as u64).collect());
+    }
+    let request = builder.build().map_err(|e| e.to_string())?;
+    let t0 = Instant::now();
+    let resp = client.sort(request).map_err(|e| e.to_string())?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "remote sort via {addr}: {wall_ms:.2} ms round trip ({:.1} Mkeys/s) — \
+         engine {}, worker {}, batch {}, queue {:.2} ms, service {:.2} ms",
+        n as f64 / wall_ms / 1e3,
+        resp.engine.id(),
+        resp.worker,
+        resp.batch_size,
+        resp.queue_ms,
+        resp.service_ms,
+    );
+    if verify {
+        let out = JobData {
+            keys: resp.keys,
+            payload: resp.payload,
+        };
+        verify_outcome(&reference, &out, descending)
+            .map_err(|e| format!("verification FAILED: {e}"))?;
+        println!(
+            "  verified: sorted permutation{} ✓",
+            if payload { " + payload pairing" } else { "" }
+        );
+    }
+    Ok(())
+}
+
 fn check(input: &[Key], output: &[Key], verify: bool) -> Result<(), String> {
     if verify {
         if is_sorted_permutation(input, output) {
@@ -439,6 +524,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         cfg.batch.coalesce_max_keys = parse_size(c)?;
     }
     cfg.validate().map_err(|e| e.to_string())?;
+    if let Some(addr) = flags.get("listen") {
+        return cmd_serve_listen(cfg, addr);
+    }
     let requests: usize = flag(flags, "requests", "64").parse().map_err(|e| format!("{e}"))?;
     let concurrency: usize = flag(flags, "concurrency", "8").parse().map_err(|e| format!("{e}"))?;
     let n = parse_size(flag(flags, "n", "1M"))?;
@@ -486,6 +574,35 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         sorted as f64 / wall / 1e6,
         snap.summary()
     );
+    Ok(())
+}
+
+/// `gbs serve --listen ADDR`: serve sorts over TCP until some client
+/// sends a `Drain` frame, then drain gracefully (in-flight sorts
+/// complete and flush before the listener goes down).
+fn cmd_serve_listen(cfg: ServiceConfig, addr: &str) -> Result<(), String> {
+    let net = cfg.net;
+    let engine = cfg.engine;
+    let workers = cfg.workers;
+    let client = SortService::start(cfg).map_err(|e| e.to_string())?;
+    let server = NetServer::bind(addr, client, net).map_err(|e| e.to_string())?;
+    // The machine-scrapable address line comes first (port 0 resolves
+    // to the ephemeral port actually bound).
+    println!("GBS_NET_ADDR {}", server.local_addr());
+    println!(
+        "serving sorts over TCP: engine={engine:?}, {workers} worker(s), \
+         {} credits/connection — stop with `gbs sort --connect {} --drain true`",
+        net.credits,
+        server.local_addr()
+    );
+    {
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    }
+    server.wait_for_drain_request(None);
+    println!("drain requested — completing in-flight sorts …");
+    let snap = server.shutdown();
+    println!("{}", snap.summary());
     Ok(())
 }
 

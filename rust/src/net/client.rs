@@ -1,0 +1,457 @@
+//! TCP client for a remote sort server: a pool of pipelined
+//! connections behind the same `submit`/`sort` surface as the
+//! in-process [`SortClient`](crate::coordinator::SortClient).
+//!
+//! Each pooled connection runs one reader thread and keeps many
+//! requests in flight (pipelining) up to the credit window the server
+//! granted at handshake — `submit` blocks only when every credit of
+//! the chosen connection is spent, which mirrors the service's bounded
+//! admission queue ("the client cannot out-run the scheduler"). Remote
+//! failures come back as the *same* typed [`Error`] classes as
+//! in-process ones: a load-shed is [`Error::Busy`], an oversized
+//! request [`Error::TooLarge`], a drain-time rejection a
+//! "service stopped"-style [`Error::Coordinator`].
+
+use super::wire::{
+    chunk_frames, encode_frame, error_from_wire, key_data_from_bytes, key_data_to_bytes,
+    payload_from_bytes, payload_to_bytes, read_frame, write_frame, CreditMsg, ErrorMsg, Frame,
+    HelloAckMsg, HelloMsg, Opcode, SortBeginMsg, SortHeaderMsg,
+};
+use crate::config::NetConfig;
+use crate::coordinator::{SortRequest, SortResponse};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One request awaiting frames from the server.
+enum Pending {
+    /// An in-flight sort: response frames accumulate here until
+    /// `ResultEnd` (or an error frame) resolves the oneshot.
+    Sort {
+        tx: mpsc::Sender<Result<SortResponse>>,
+        header: Option<SortHeaderMsg>,
+        key_bytes: Vec<u8>,
+        payload_bytes: Vec<u8>,
+    },
+    /// A control round trip (`Ping`→`Pong`, `Drain`→`DrainAck`).
+    Control(mpsc::Sender<()>),
+}
+
+/// Mutable per-connection state behind one mutex: the credit window,
+/// the pending-request table and the liveness flag share it so that
+/// credit waiters always observe connection death.
+struct ConnState {
+    credits: u32,
+    dead: bool,
+    pending: HashMap<u64, Pending>,
+}
+
+struct Conn {
+    /// Kept for `Shutdown::Both` on close (unblocks the reader).
+    stream: TcpStream,
+    writer: Mutex<TcpStream>,
+    state: Mutex<ConnState>,
+    cv: Condvar,
+    next_id: AtomicU64,
+    /// Request chunk size: ours clamped to the server's frame ceiling.
+    chunk: usize,
+    max_frame_len: usize,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Conn {
+    fn open(addr: &str, net: &NetConfig) -> Result<Arc<Conn>> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let mut write_half = stream.try_clone()?;
+        // Synchronous handshake before the reader thread exists.
+        write_frame(
+            &mut write_half,
+            &Frame::message(
+                Opcode::Hello,
+                0,
+                HelloMsg {
+                    max_frame_len: net.max_frame_len as u32,
+                }
+                .encode(),
+            ),
+        )?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let frame = read_frame(&mut reader, net.max_frame_len)?
+            .ok_or_else(|| Error::Coordinator("server closed during handshake".into()))?;
+        let ack = match frame.opcode {
+            Opcode::HelloAck => HelloAckMsg::decode(&frame.payload)?,
+            Opcode::ErrorFrame => {
+                let msg = ErrorMsg::decode(&frame.payload)?;
+                return Err(error_from_wire(msg.code, msg.message));
+            }
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "unexpected handshake reply {other:?}"
+                )))
+            }
+        };
+        let conn = Arc::new(Conn {
+            stream,
+            writer: Mutex::new(write_half),
+            state: Mutex::new(ConnState {
+                credits: ack.credits,
+                dead: false,
+                pending: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            chunk: net
+                .chunk_bytes
+                .min((ack.max_frame_len as usize).max(64))
+                .max(1),
+            max_frame_len: net.max_frame_len,
+            reader: Mutex::new(None),
+        });
+        let rd_conn = conn.clone();
+        let handle = std::thread::Builder::new()
+            .name("gbs-net-client".into())
+            .spawn(move || reader_loop(rd_conn, reader))
+            .map_err(|e| Error::Coordinator(format!("spawn client reader: {e}")))?;
+        *conn.reader.lock().unwrap() = Some(handle);
+        Ok(conn)
+    }
+
+    fn is_dead(&self) -> bool {
+        self.state.lock().unwrap().dead
+    }
+
+    /// Block until an admission credit is free (or the connection dies).
+    fn acquire_credit(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.dead {
+                return Err(Error::Coordinator("connection closed".into()));
+            }
+            if st.credits > 0 {
+                st.credits -= 1;
+                return Ok(());
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Mark the connection dead and fail every pending request with a
+    /// fresh typed error from `mk`; wakes all credit waiters.
+    fn fail_all(&self, mk: &dyn Fn() -> Error) {
+        let mut st = self.state.lock().unwrap();
+        st.dead = true;
+        for (_, p) in st.pending.drain() {
+            if let Pending::Sort { tx, .. } = p {
+                let _ = tx.send(Err(mk()));
+            }
+            // Control entries resolve by sender drop (RecvError).
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn submit(&self, request: SortRequest) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        request.validate()?;
+        self.acquire_credit()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.dead {
+                return Err(Error::Coordinator("connection closed".into()));
+            }
+            st.pending.insert(
+                id,
+                Pending::Sort {
+                    tx,
+                    header: None,
+                    key_bytes: Vec::new(),
+                    payload_bytes: Vec::new(),
+                },
+            );
+        }
+        let begin = SortBeginMsg {
+            key_type: request.keys.key_type(),
+            descending: request.descending,
+            self_check: request.self_check,
+            has_payload: request.payload.is_some(),
+            total_keys: request.keys.len() as u64,
+            tag: request.tag.clone(),
+        };
+        // One buffered write for the whole submission: begin + chunks +
+        // commit never interleave with another thread's frames.
+        let mut buf = encode_frame(&Frame::message(Opcode::SortBegin, id, begin.encode()));
+        for f in chunk_frames(
+            Opcode::KeyChunk,
+            id,
+            &key_data_to_bytes(&request.keys),
+            self.chunk,
+        ) {
+            buf.extend_from_slice(&encode_frame(&f));
+        }
+        if let Some(p) = &request.payload {
+            for f in chunk_frames(Opcode::PayloadChunk, id, &payload_to_bytes(p), self.chunk) {
+                buf.extend_from_slice(&encode_frame(&f));
+            }
+        }
+        buf.extend_from_slice(&encode_frame(&Frame::control(Opcode::Commit, id)));
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            w.write_all(&buf)
+        };
+        if let Err(e) = wrote {
+            self.fail_all(&|| Error::Coordinator("connection closed".into()));
+            return Err(Error::Io(e));
+        }
+        Ok(rx)
+    }
+
+    /// A control round trip: send `opcode`, wait for its echo-id reply.
+    fn control(&self, opcode: Opcode) -> Result<()> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.dead {
+                return Err(Error::Coordinator("connection closed".into()));
+            }
+            st.pending.insert(id, Pending::Control(tx));
+        }
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            w.write_all(&encode_frame(&Frame::control(opcode, id)))
+        };
+        if let Err(e) = wrote {
+            self.fail_all(&|| Error::Coordinator("connection closed".into()));
+            return Err(Error::Io(e));
+        }
+        rx.recv()
+            .map_err(|_| Error::Coordinator("connection closed".into()))
+    }
+
+    fn close(&self) {
+        {
+            // Best-effort orderly goodbye; the socket shutdown below is
+            // what actually unblocks the reader.
+            let mut w = self.writer.lock().unwrap();
+            let _ = w.write_all(&encode_frame(&Frame::control(Opcode::Goodbye, 0)));
+        }
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(conn: Arc<Conn>, mut reader: BufReader<TcpStream>) {
+    let fatal: String = loop {
+        match read_frame(&mut reader, conn.max_frame_len) {
+            Ok(Some(frame)) => {
+                if let Err(e) = handle_frame(&conn, frame) {
+                    break e.to_string();
+                }
+            }
+            Ok(None) => break "connection closed".into(),
+            Err(e) => break format!("connection failed: {e}"),
+        }
+    };
+    conn.fail_all(&|| Error::Coordinator(fatal.clone()));
+}
+
+/// Dispatch one server frame; `Err` is fatal for the connection.
+fn handle_frame(conn: &Conn, frame: Frame) -> Result<()> {
+    match frame.opcode {
+        Opcode::SortHeader => {
+            let hdr = SortHeaderMsg::decode(&frame.payload)?;
+            let mut st = conn.state.lock().unwrap();
+            if let Some(Pending::Sort { header, .. }) = st.pending.get_mut(&frame.id) {
+                *header = Some(hdr);
+            }
+        }
+        Opcode::ResultKeyChunk | Opcode::ResultPayloadChunk => {
+            let mut st = conn.state.lock().unwrap();
+            if let Some(Pending::Sort {
+                key_bytes,
+                payload_bytes,
+                ..
+            }) = st.pending.get_mut(&frame.id)
+            {
+                if frame.opcode == Opcode::ResultKeyChunk {
+                    key_bytes.extend_from_slice(&frame.payload);
+                } else {
+                    payload_bytes.extend_from_slice(&frame.payload);
+                }
+            }
+        }
+        Opcode::ResultEnd => {
+            let entry = conn.state.lock().unwrap().pending.remove(&frame.id);
+            if let Some(Pending::Sort {
+                tx,
+                header,
+                key_bytes,
+                payload_bytes,
+            }) = entry
+            {
+                let _ = tx.send(assemble_response(frame.id, header, key_bytes, payload_bytes));
+            }
+        }
+        Opcode::ErrorFrame => {
+            let msg = ErrorMsg::decode(&frame.payload)?;
+            if frame.id == 0 {
+                // Connection-level error: the server is about to close
+                // this socket; surface the typed failure everywhere.
+                return Err(error_from_wire(msg.code, msg.message));
+            }
+            let entry = conn.state.lock().unwrap().pending.remove(&frame.id);
+            if let Some(Pending::Sort { tx, .. }) = entry {
+                let _ = tx.send(Err(error_from_wire(msg.code, msg.message)));
+            }
+        }
+        Opcode::Credit => {
+            let msg = CreditMsg::decode(&frame.payload)?;
+            let mut st = conn.state.lock().unwrap();
+            st.credits = st.credits.saturating_add(msg.credits);
+            drop(st);
+            conn.cv.notify_all();
+        }
+        Opcode::Pong | Opcode::DrainAck => {
+            let entry = conn.state.lock().unwrap().pending.remove(&frame.id);
+            if let Some(Pending::Control(tx)) = entry {
+                let _ = tx.send(());
+            }
+        }
+        // Unknown-but-authentic server frames are ignored for forward
+        // compatibility.
+        _ => {}
+    }
+    Ok(())
+}
+
+fn assemble_response(
+    id: u64,
+    header: Option<SortHeaderMsg>,
+    key_bytes: Vec<u8>,
+    payload_bytes: Vec<u8>,
+) -> Result<SortResponse> {
+    let header = header.ok_or_else(|| Error::Remote {
+        code: "internal".into(),
+        message: "result completed without a header".into(),
+    })?;
+    let keys = key_data_from_bytes(header.key_type, &key_bytes)?;
+    if keys.len() as u64 != header.total_keys {
+        return Err(Error::Remote {
+            code: "internal".into(),
+            message: format!(
+                "result carried {} keys, header declared {}",
+                keys.len(),
+                header.total_keys
+            ),
+        });
+    }
+    let payload = if header.has_payload {
+        Some(payload_from_bytes(&payload_bytes)?)
+    } else if payload_bytes.is_empty() {
+        None
+    } else {
+        return Err(Error::Remote {
+            code: "internal".into(),
+            message: "payload chunks without has_payload".into(),
+        });
+    };
+    Ok(SortResponse {
+        id,
+        keys,
+        payload,
+        tag: header.tag,
+        engine: header.engine,
+        worker: header.worker as usize,
+        batch_size: header.batch_size as usize,
+        queue_ms: header.queue_ms,
+        service_ms: header.service_ms,
+    })
+}
+
+/// A pooled, pipelined client for a remote sort server.
+///
+/// Requests round-robin across `connections` sockets; each socket
+/// pipelines up to its server-granted credit window. Dropping the
+/// client sends `Goodbye` on every connection and joins the readers.
+pub struct NetClient {
+    conns: Vec<Arc<Conn>>,
+    next: AtomicUsize,
+}
+
+impl NetClient {
+    /// Connect a pool of `connections` (≥ 1) sockets to `addr` (e.g.
+    /// `"127.0.0.1:4750"`). `net` carries the client-side frame ceiling
+    /// and preferred chunk size; the admission credit window comes from
+    /// the server's handshake reply.
+    pub fn connect(addr: &str, connections: usize, net: NetConfig) -> Result<NetClient> {
+        net.validate()?;
+        let mut conns = Vec::new();
+        for _ in 0..connections.max(1) {
+            conns.push(Conn::open(addr, &net)?);
+        }
+        Ok(NetClient {
+            conns,
+            next: AtomicUsize::new(0),
+        })
+    }
+
+    /// Number of pooled connections.
+    pub fn connections(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn pick(&self) -> Result<&Arc<Conn>> {
+        let n = self.conns.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for k in 0..n {
+            let c = &self.conns[(start + k) % n];
+            if !c.is_dead() {
+                return Ok(c);
+            }
+        }
+        Err(Error::Coordinator("every pooled connection closed".into()))
+    }
+
+    /// Submit without blocking on the response; returns the response
+    /// channel (same shape as the in-process
+    /// [`SortClient::submit`](crate::coordinator::SortClient::submit)).
+    /// Blocks only while the chosen connection is out of admission
+    /// credits.
+    pub fn submit(&self, request: SortRequest) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        self.pick()?.submit(request)
+    }
+
+    /// Submit a request and block until its response arrives.
+    pub fn sort(&self, request: SortRequest) -> Result<SortResponse> {
+        let rx = self.submit(request)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("connection closed".into()))?
+    }
+
+    /// Liveness probe: one `Ping`→`Pong` round trip.
+    pub fn ping(&self) -> Result<()> {
+        self.pick()?.control(Opcode::Ping)
+    }
+
+    /// Ask the server to drain gracefully; returns once the server has
+    /// acknowledged (the drain itself proceeds after the ack).
+    pub fn drain_server(&self) -> Result<()> {
+        self.pick()?.control(Opcode::Drain)
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        for c in &self.conns {
+            c.close();
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Sort-as-a-service over TCP.
+//!
+//! Three layers:
+//!
+//! * [`wire`] — the framed, CRC-checked, length-prefixed binary
+//!   protocol (versioned header, typed opcodes, chunked streaming of
+//!   large key arrays, typed error frames). Pure codec: no sockets.
+//! * [`server`] — [`NetServer`]: a listener in front of a running
+//!   [`crate::coordinator::SortClient`], with credit-based admission,
+//!   typed load-shedding (`busy` / `too_large` / `shutdown` error
+//!   frames), per-connection fairness and graceful drain.
+//! * [`client`] — [`NetClient`]: a pooled, pipelined client whose
+//!   failures come back as the same typed [`crate::error::Error`]
+//!   classes as in-process calls.
+//!
+//! `gbs serve --listen ADDR` and `gbs sort --connect ADDR` are the CLI
+//! entry points; `docs/ARCHITECTURE.md` (§ Network tier) has the frame
+//! layout and the flow-control state machine.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::NetClient;
+pub use server::NetServer;

@@ -1,0 +1,712 @@
+//! The TCP sort server: a framed-protocol front end over a running
+//! [`SortClient`].
+//!
+//! Topology (per process):
+//!
+//! ```text
+//!  accept thread ──▶ connection thread (reader)  ──┐ submit
+//!                     │ credit window, partials    ▼
+//!                     │                     coordinator::Service
+//!                     │ pump thread ◀── per-request oneshot ┘
+//!                     └─▶ shared write half (frame-granular mutex)
+//! ```
+//!
+//! Each connection runs **two** threads: the *reader* owns the socket's
+//! read half (handshake, frame decode, chunk reassembly, admission) and
+//! the *pump* delivers responses back **in submission order** (HTTP-
+//! pipelining style — the per-connection FIFO keeps responses matched
+//! to the client's pipelined requests even though batches complete out
+//! of order across workers). Both serialize writes through one mutex,
+//! so frames never interleave mid-frame.
+//!
+//! Flow control is credit-based: the handshake grants
+//! [`crate::config::NetConfig::credits`] admission slots; each
+//! completed (or shed) request returns one via a `Credit` frame. The
+//! scheduler's bounded queue surfaces as typed `Busy` error frames,
+//! oversized submissions as `TooLarge` — a malformed frame closes that
+//! connection with a typed error but never takes down the listener.
+//!
+//! [`NetServer::shutdown`] drains gracefully: stop accepting, reject
+//! new submissions with `shutdown` error frames, wait for in-flight
+//! sorts to complete and flush, then drain the inner service.
+
+use super::wire::{
+    chunk_frames, classify_error, encode_frame, error_frame, key_data_from_bytes,
+    key_data_to_bytes, payload_from_bytes, payload_to_bytes, read_frame, CreditMsg, ErrorCode,
+    Frame, HelloAckMsg, HelloMsg, Opcode, SortBeginMsg, SortHeaderMsg, WireError,
+};
+use crate::config::NetConfig;
+use crate::coordinator::{SortClient, SortRequest, SortResponse};
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long [`NetServer::shutdown`] waits for in-flight sorts before
+/// giving up and closing sockets anyway.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A zero-counting gauge: incremented per submitted request, waited on
+/// at drain time.
+#[derive(Default)]
+struct Gauge {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gauge {
+    fn incr(&self) {
+        *self.n.lock().unwrap() += 1;
+    }
+
+    fn decr(&self) {
+        let mut g = self.n.lock().unwrap();
+        *g = g.saturating_sub(1);
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait_zero(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.n.lock().unwrap();
+        while *g != 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        true
+    }
+}
+
+/// Latched "a client asked us to drain" signal.
+#[derive(Default)]
+struct DrainSignal {
+    requested: Mutex<bool>,
+    cv: Condvar,
+}
+
+struct Shared {
+    client: SortClient,
+    net: NetConfig,
+    metrics: Metrics,
+    draining: AtomicBool,
+    inflight: Gauge,
+    drain: DrainSignal,
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// A running TCP sort server. Dropping (or calling
+/// [`NetServer::shutdown`]) drains gracefully.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+    finished: bool,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve the given service handle. The server owns only its clone
+    /// of the handle — other clones stay usable, and shutdown drains
+    /// through the transport-agnostic [`SortClient::drain`].
+    pub fn bind(addr: &str, client: SortClient, net: NetConfig) -> Result<NetServer> {
+        net.validate()?;
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            client,
+            net,
+            metrics: Metrics::new(),
+            draining: AtomicBool::new(false),
+            inflight: Gauge::default(),
+            drain: DrainSignal::default(),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("gbs-net-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| Error::Coordinator(format!("spawn accept thread: {e}")))?;
+        Ok(NetServer {
+            local_addr,
+            shared,
+            accept: Some(accept),
+            finished: false,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Live snapshot of the network-tier counters (`net_*`). The full
+    /// merged picture (service + net) is returned by
+    /// [`NetServer::shutdown`].
+    pub fn net_metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// True once some client has sent a `Drain` frame.
+    pub fn drain_requested(&self) -> bool {
+        *self.shared.drain.requested.lock().unwrap()
+    }
+
+    /// Block until a client requests a drain (or the timeout passes);
+    /// returns whether a drain was requested. `gbs serve --listen` sits
+    /// here, then calls [`NetServer::shutdown`].
+    pub fn wait_for_drain_request(&self, timeout: Option<Duration>) -> bool {
+        let mut g = self.shared.drain.requested.lock().unwrap();
+        match timeout {
+            None => {
+                while !*g {
+                    g = self.shared.drain.cv.wait(g).unwrap();
+                }
+                true
+            }
+            Some(t) => {
+                let deadline = Instant::now() + t;
+                while !*g {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return false;
+                    }
+                    let (guard, _) = self
+                        .shared
+                        .drain
+                        .cv
+                        .wait_timeout(g, deadline - now)
+                        .unwrap();
+                    g = guard;
+                }
+                true
+            }
+        }
+    }
+
+    /// Graceful drain: stop accepting, complete in-flight sorts, flush
+    /// their responses, close connections, then drain the inner
+    /// service. Returns the merged service + network metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown_impl()
+    }
+
+    fn shutdown_impl(&mut self) -> MetricsSnapshot {
+        self.finished = true;
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Poke the accept loop out of its blocking accept; it sees the
+        // draining flag and exits, dropping the listener.
+        let _ = TcpStream::connect(self.local_addr);
+        let conn_handles = self
+            .accept
+            .take()
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default();
+        // Complete and flush in-flight sorts before touching sockets.
+        if !self.shared.inflight.wait_zero(DRAIN_TIMEOUT) {
+            self.shared.metrics.incr("net_drain_timeout", 1);
+        }
+        // Unblock idle readers; their threads exit on the closed socket.
+        for s in self.shared.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in conn_handles {
+            let _ = h.join();
+        }
+        // Transport-agnostic service drain: works while other clones of
+        // the handle (e.g. the CLI's) are still alive.
+        let mut snap = self.shared.client.drain();
+        let net = self.shared.metrics.snapshot();
+        for (k, v) in net.counters {
+            *snap.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, h) in net.timers {
+            snap.timers.entry(k).or_insert(h);
+        }
+        snap
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = self.shutdown_impl();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
+    let mut handles = Vec::new();
+    for stream in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        shared.metrics.incr("net_connections", 1);
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap().push(clone);
+        }
+        let conn_shared = shared.clone();
+        if let Ok(h) = std::thread::Builder::new()
+            .name("gbs-net-conn".into())
+            .spawn(move || handle_connection(stream, conn_shared))
+        {
+            handles.push(h);
+        }
+    }
+    handles
+}
+
+/// One queued response: the wire request id and its oneshot channel.
+type PumpItem = (u64, mpsc::Receiver<Result<SortResponse>>);
+
+/// Write one frame under the shared write mutex. Returns false when the
+/// peer is gone — callers just stop sending; cleanup happens when the
+/// reader notices.
+fn send(writer: &Mutex<TcpStream>, shared: &Shared, frame: &Frame) -> bool {
+    let bytes = encode_frame(frame);
+    let mut w = writer.lock().unwrap();
+    match w.write_all(&bytes) {
+        Ok(()) => {
+            shared.metrics.incr("net_frames_tx", 1);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let writer = Arc::new(Mutex::new(write_half));
+    let mut reader = BufReader::new(stream);
+
+    // Handshake: exactly one Hello, answered with the credit window.
+    let hello = match read_frame(&mut reader, shared.net.max_frame_len) {
+        Ok(Some(f)) if f.opcode == Opcode::Hello => match HelloMsg::decode(&f.payload) {
+            Ok(h) => h,
+            Err(e) => {
+                shared.metrics.incr("net_malformed", 1);
+                send(&writer, &shared, &error_frame(0, ErrorCode::Malformed, &e.to_string()));
+                return;
+            }
+        },
+        Ok(_) => {
+            shared.metrics.incr("net_malformed", 1);
+            send(
+                &writer,
+                &shared,
+                &error_frame(0, ErrorCode::Malformed, "expected Hello handshake"),
+            );
+            return;
+        }
+        Err(e) => {
+            shared.metrics.incr("net_malformed", 1);
+            send(&writer, &shared, &error_frame(0, ErrorCode::Malformed, &e.to_string()));
+            return;
+        }
+    };
+    let ack = HelloAckMsg {
+        credits: shared.net.credits as u32,
+        max_frame_len: shared.net.max_frame_len as u32,
+        max_request_keys: shared.net.max_request_keys as u64,
+    };
+    if !send(
+        &writer,
+        &shared,
+        &Frame::message(Opcode::HelloAck, 0, ack.encode()),
+    ) {
+        return;
+    }
+    // Response chunks must fit what the client will accept.
+    let chunk = shared
+        .net
+        .chunk_bytes
+        .min((hello.max_frame_len as usize).max(64));
+
+    // In-order completion pump; shares the connection's credit window.
+    let window = Arc::new(AtomicUsize::new(0));
+    let (pump_tx, pump_rx) = mpsc::channel::<PumpItem>();
+    let pump_writer = writer.clone();
+    let pump_shared = shared.clone();
+    let pump_window = window.clone();
+    let pump = std::thread::Builder::new()
+        .name("gbs-net-pump".into())
+        .spawn(move || pump_loop(pump_rx, pump_writer, pump_shared, pump_window, chunk));
+
+    read_loop(&mut reader, &writer, &shared, &window, pump_tx);
+
+    if let Ok(h) = pump {
+        let _ = h.join();
+    }
+}
+
+fn pump_loop(
+    rx: mpsc::Receiver<PumpItem>,
+    writer: Arc<Mutex<TcpStream>>,
+    shared: Arc<Shared>,
+    window: Arc<AtomicUsize>,
+    chunk: usize,
+) {
+    while let Ok((id, resp_rx)) = rx.recv() {
+        let outcome = resp_rx
+            .recv()
+            .unwrap_or_else(|_| Err(Error::Coordinator("request dropped during shutdown".into())));
+        match outcome {
+            Ok(resp) => send_response(&writer, &shared, id, &resp, chunk),
+            Err(e) => {
+                let code = classify_error(&e);
+                if code == ErrorCode::Busy {
+                    shared.metrics.incr("net_shed_busy", 1);
+                }
+                shared.metrics.incr("net_requests_failed", 1);
+                send(&writer, &shared, &error_frame(id, code, &e.to_string()));
+            }
+        }
+        // Free the window slot *before* returning the credit: once the
+        // client sees the Credit frame it may immediately spend it, and
+        // the next SortBegin must not trip the defensive window check.
+        window.fetch_sub(1, Ordering::SeqCst);
+        send(
+            &writer,
+            &shared,
+            &Frame::message(Opcode::Credit, id, CreditMsg { credits: 1 }.encode()),
+        );
+        shared.inflight.decr();
+    }
+}
+
+fn send_response(
+    writer: &Mutex<TcpStream>,
+    shared: &Shared,
+    id: u64,
+    resp: &SortResponse,
+    chunk: usize,
+) {
+    let header = SortHeaderMsg {
+        key_type: resp.keys.key_type(),
+        total_keys: resp.keys.len() as u64,
+        has_payload: resp.payload.is_some(),
+        engine: resp.engine,
+        worker: resp.worker as u32,
+        batch_size: resp.batch_size as u32,
+        queue_ms: resp.queue_ms,
+        service_ms: resp.service_ms,
+        tag: resp.tag.clone(),
+    };
+    if !send(
+        writer,
+        shared,
+        &Frame::message(Opcode::SortHeader, id, header.encode()),
+    ) {
+        return;
+    }
+    for f in chunk_frames(
+        Opcode::ResultKeyChunk,
+        id,
+        &key_data_to_bytes(&resp.keys),
+        chunk,
+    ) {
+        if !send(writer, shared, &f) {
+            return;
+        }
+    }
+    if let Some(p) = &resp.payload {
+        for f in chunk_frames(Opcode::ResultPayloadChunk, id, &payload_to_bytes(p), chunk) {
+            if !send(writer, shared, &f) {
+                return;
+            }
+        }
+    }
+    if send(writer, shared, &Frame::control(Opcode::ResultEnd, id)) {
+        shared.metrics.incr("net_responses", 1);
+    }
+}
+
+/// A request mid-stream: `SortBegin` seen, `Commit` pending.
+struct PartialRequest {
+    begin: SortBeginMsg,
+    key_bytes: Vec<u8>,
+    payload_bytes: Vec<u8>,
+}
+
+fn read_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &Arc<Mutex<TcpStream>>,
+    shared: &Arc<Shared>,
+    window: &Arc<AtomicUsize>,
+    pump_tx: mpsc::Sender<PumpItem>,
+) {
+    let mut partials: HashMap<u64, PartialRequest> = HashMap::new();
+    loop {
+        let frame = match read_frame(reader, shared.net.max_frame_len) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean close
+            Err(WireError::Truncated) | Err(WireError::Io(_)) => {
+                // Abrupt disconnect (possibly mid-frame): drop partials,
+                // keep the listener untouched.
+                shared.metrics.incr("net_disconnects", 1);
+                break;
+            }
+            Err(e) => {
+                // Corrupt or hostile frame: typed error, close this
+                // connection only.
+                shared.metrics.incr("net_malformed", 1);
+                send(writer, shared, &error_frame(0, ErrorCode::Malformed, &e.to_string()));
+                break;
+            }
+        };
+        shared.metrics.incr("net_frames_rx", 1);
+        match frame.opcode {
+            Opcode::SortBegin => {
+                let begin = match SortBeginMsg::decode(&frame.payload) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        shared.metrics.incr("net_malformed", 1);
+                        send(writer, shared, &error_frame(0, ErrorCode::Malformed, &e.to_string()));
+                        break;
+                    }
+                };
+                if frame.id == 0 || partials.contains_key(&frame.id) {
+                    shared.metrics.incr("net_malformed", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(0, ErrorCode::Malformed, "duplicate or zero request id"),
+                    );
+                    break;
+                }
+                // Defensive credit enforcement: a conforming client
+                // never trips this, so no credit is returned.
+                if window.load(Ordering::SeqCst) >= shared.net.credits {
+                    shared.metrics.incr("net_shed_busy", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(
+                            frame.id,
+                            ErrorCode::Busy,
+                            "credit window exhausted — backpressure",
+                        ),
+                    );
+                    continue;
+                }
+                if shared.draining.load(Ordering::SeqCst) {
+                    shared.metrics.incr("net_shed_shutdown", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(frame.id, ErrorCode::Shutdown, "server draining"),
+                    );
+                    send(
+                        writer,
+                        shared,
+                        &Frame::message(Opcode::Credit, frame.id, CreditMsg { credits: 1 }.encode()),
+                    );
+                    continue;
+                }
+                if begin.total_keys > shared.net.max_request_keys as u64 {
+                    shared.metrics.incr("net_shed_too_large", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(
+                            frame.id,
+                            ErrorCode::TooLarge,
+                            &format!(
+                                "{} keys exceed the per-request ceiling {}",
+                                begin.total_keys, shared.net.max_request_keys
+                            ),
+                        ),
+                    );
+                    send(
+                        writer,
+                        shared,
+                        &Frame::message(Opcode::Credit, frame.id, CreditMsg { credits: 1 }.encode()),
+                    );
+                    continue;
+                }
+                shared.metrics.incr("net_requests", 1);
+                window.fetch_add(1, Ordering::SeqCst);
+                partials.insert(
+                    frame.id,
+                    PartialRequest {
+                        begin,
+                        key_bytes: Vec::new(),
+                        payload_bytes: Vec::new(),
+                    },
+                );
+            }
+            Opcode::KeyChunk | Opcode::PayloadChunk => {
+                let Some(partial) = partials.get_mut(&frame.id) else {
+                    shared.metrics.incr("net_malformed", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(0, ErrorCode::Malformed, "chunk for unknown request id"),
+                    );
+                    break;
+                };
+                let width = partial.begin.key_type.width_bytes();
+                let (buf, cap) = if frame.opcode == Opcode::KeyChunk {
+                    (
+                        &mut partial.key_bytes,
+                        partial.begin.total_keys as usize * width,
+                    )
+                } else {
+                    (
+                        &mut partial.payload_bytes,
+                        partial.begin.total_keys as usize * 8,
+                    )
+                };
+                // Chunk accounting bound: a peer can never make us
+                // buffer more than it declared at SortBegin.
+                if buf.len() + frame.payload.len() > cap {
+                    shared.metrics.incr("net_malformed", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(0, ErrorCode::Malformed, "chunk bytes exceed declared total"),
+                    );
+                    window.fetch_sub(1, Ordering::SeqCst);
+                    partials.remove(&frame.id);
+                    break;
+                }
+                buf.extend_from_slice(&frame.payload);
+            }
+            Opcode::Commit => {
+                let Some(partial) = partials.remove(&frame.id) else {
+                    shared.metrics.incr("net_malformed", 1);
+                    send(
+                        writer,
+                        shared,
+                        &error_frame(0, ErrorCode::Malformed, "commit for unknown request id"),
+                    );
+                    break;
+                };
+                match assemble_request(&partial) {
+                    Ok(request) => match shared.client.submit(request) {
+                        Ok(rx) => {
+                            shared.inflight.incr();
+                            // The pump owns the credit/window release.
+                            if pump_tx.send((frame.id, rx)).is_err() {
+                                shared.inflight.decr();
+                                window.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                        Err(e) => {
+                            shared.metrics.incr("net_requests_failed", 1);
+                            window.fetch_sub(1, Ordering::SeqCst);
+                            send(
+                                writer,
+                                shared,
+                                &error_frame(frame.id, classify_error(&e), &e.to_string()),
+                            );
+                            send(
+                                writer,
+                                shared,
+                                &Frame::message(
+                                    Opcode::Credit,
+                                    frame.id,
+                                    CreditMsg { credits: 1 }.encode(),
+                                ),
+                            );
+                        }
+                    },
+                    Err(e) => {
+                        shared.metrics.incr("net_malformed", 1);
+                        window.fetch_sub(1, Ordering::SeqCst);
+                        send(
+                            writer,
+                            shared,
+                            &error_frame(frame.id, ErrorCode::Malformed, &e.to_string()),
+                        );
+                        send(
+                            writer,
+                            shared,
+                            &Frame::message(
+                                Opcode::Credit,
+                                frame.id,
+                                CreditMsg { credits: 1 }.encode(),
+                            ),
+                        );
+                    }
+                }
+            }
+            Opcode::Ping => {
+                shared.metrics.incr("net_pings", 1);
+                send(writer, shared, &Frame::control(Opcode::Pong, frame.id));
+            }
+            Opcode::Drain => {
+                send(writer, shared, &Frame::control(Opcode::DrainAck, frame.id));
+                let mut g = shared.drain.requested.lock().unwrap();
+                *g = true;
+                shared.drain.cv.notify_all();
+            }
+            Opcode::Goodbye => break,
+            // Anything else (including a second Hello or a
+            // server→client opcode) is a protocol violation.
+            _ => {
+                shared.metrics.incr("net_malformed", 1);
+                send(
+                    writer,
+                    shared,
+                    &error_frame(0, ErrorCode::Malformed, "unexpected opcode"),
+                );
+                break;
+            }
+        }
+    }
+    // Abandoned partials release their credit-window slots; they never
+    // reached the service, so there is nothing to leak there.
+    for _ in partials.drain() {
+        window.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn assemble_request(partial: &PartialRequest) -> std::result::Result<SortRequest, WireError> {
+    let begin = &partial.begin;
+    let width = begin.key_type.width_bytes();
+    let expected = begin.total_keys as usize * width;
+    if partial.key_bytes.len() != expected {
+        return Err(WireError::Malformed(format!(
+            "commit with {} of {expected} declared key bytes",
+            partial.key_bytes.len()
+        )));
+    }
+    let keys = key_data_from_bytes(begin.key_type, &partial.key_bytes)?;
+    let payload = if begin.has_payload {
+        let expected = begin.total_keys as usize * 8;
+        if partial.payload_bytes.len() != expected {
+            return Err(WireError::Malformed(format!(
+                "commit with {} of {expected} declared payload bytes",
+                partial.payload_bytes.len()
+            )));
+        }
+        Some(payload_from_bytes(&partial.payload_bytes)?)
+    } else if partial.payload_bytes.is_empty() {
+        None
+    } else {
+        return Err(WireError::Malformed(
+            "payload chunks without has_payload".into(),
+        ));
+    };
+    Ok(SortRequest {
+        keys,
+        payload,
+        descending: begin.descending,
+        self_check: begin.self_check,
+        tag: begin.tag.clone(),
+    })
+}

@@ -1,0 +1,1171 @@
+//! The framed wire protocol spoken between `gbs serve --listen` and
+//! `gbs sort --connect` (and by [`super::client`] / [`super::server`]).
+//!
+//! Every message is one **frame**:
+//!
+//! ```text
+//!  offset  size  field
+//!  ------  ----  -----------------------------------------------
+//!       0     4  magic  "GBSW"
+//!       4     1  protocol version (1)
+//!       5     1  opcode                       (see [`Opcode`])
+//!       6     2  flags, little-endian         (bit 0: last chunk)
+//!       8     8  request id, little-endian    (0 = connection-level)
+//!      16     4  payload length, little-endian
+//!      20     4  CRC32 (IEEE) over bytes [0, 20) ++ payload
+//!      24     …  payload
+//! ```
+//!
+//! Large key arrays stream as a `SortBegin` header followed by
+//! `KeyChunk`/`PayloadChunk` frames (arbitrary byte boundaries — chunks
+//! need not align to key width) and a `Commit`; responses stream back
+//! the same way. The decoder is hardened: the length prefix is checked
+//! against a hard ceiling **before any allocation**, truncation and
+//! corruption yield typed [`WireError`]s, and a CRC mismatch can never
+//! surface as a valid frame. No decode path panics on hostile input.
+
+use crate::error::Error;
+use crate::key::{KeyData, KeyType};
+
+/// Frame magic — first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"GBSW";
+/// Protocol version carried (and checked) on every frame.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 24;
+/// Flag bit 0: this is the final chunk of a streamed byte sequence.
+pub const FLAG_LAST: u16 = 1;
+
+/// Frame type. Client→server opcodes sit below `0x80`, server→client
+/// at or above it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// Client handshake: payload is a [`HelloMsg`].
+    Hello = 0x01,
+    /// Start a sort submission: payload is a [`SortBeginMsg`].
+    SortBegin = 0x02,
+    /// A slice of the request's key bytes.
+    KeyChunk = 0x03,
+    /// A slice of the request's `u64` payload bytes.
+    PayloadChunk = 0x04,
+    /// All chunks sent — admit the request.
+    Commit = 0x05,
+    /// Orderly client goodbye (the socket closes after).
+    Goodbye = 0x06,
+    /// Liveness probe; the server echoes the id in a [`Opcode::Pong`].
+    Ping = 0x07,
+    /// Ask the server to drain gracefully (finish in-flight sorts, then
+    /// stop). Acked with [`Opcode::DrainAck`] before the drain begins.
+    Drain = 0x0F,
+    /// Server handshake reply: payload is a [`HelloAckMsg`].
+    HelloAck = 0x81,
+    /// Response header: payload is a [`SortHeaderMsg`].
+    SortHeader = 0x82,
+    /// A slice of the response's key bytes.
+    ResultKeyChunk = 0x83,
+    /// A slice of the response's `u64` payload bytes.
+    ResultPayloadChunk = 0x84,
+    /// Response complete.
+    ResultEnd = 0x85,
+    /// Typed failure: payload is an [`ErrorMsg`]. With request id 0 the
+    /// error is connection-level and the server closes the connection.
+    ErrorFrame = 0x86,
+    /// Flow control: payload is a [`CreditMsg`] returning admission
+    /// credits to the client.
+    Credit = 0x87,
+    /// Acknowledges a [`Opcode::Drain`] request.
+    DrainAck = 0x88,
+    /// Liveness reply.
+    Pong = 0x89,
+}
+
+impl Opcode {
+    /// Every opcode (for exhaustive property tests).
+    pub const ALL: [Opcode; 17] = [
+        Opcode::Hello,
+        Opcode::SortBegin,
+        Opcode::KeyChunk,
+        Opcode::PayloadChunk,
+        Opcode::Commit,
+        Opcode::Goodbye,
+        Opcode::Ping,
+        Opcode::Drain,
+        Opcode::HelloAck,
+        Opcode::SortHeader,
+        Opcode::ResultKeyChunk,
+        Opcode::ResultPayloadChunk,
+        Opcode::ResultEnd,
+        Opcode::ErrorFrame,
+        Opcode::Credit,
+        Opcode::DrainAck,
+        Opcode::Pong,
+    ];
+
+    /// Parse a wire byte.
+    pub fn from_u8(b: u8) -> Option<Opcode> {
+        Opcode::ALL.into_iter().find(|op| *op as u8 == b)
+    }
+}
+
+/// Typed decode failure. Hostile input maps here — never to a panic.
+#[derive(Debug)]
+pub enum WireError {
+    /// The frame does not start with [`MAGIC`].
+    BadMagic,
+    /// Unsupported protocol version.
+    BadVersion(u8),
+    /// Authentic frame with an opcode this peer does not know.
+    UnknownOpcode(u8),
+    /// The length prefix exceeds the configured frame ceiling; detected
+    /// before any payload allocation.
+    Oversized {
+        /// Declared payload length.
+        len: usize,
+        /// Configured ceiling.
+        max: usize,
+    },
+    /// Frame checksum mismatch (corruption in header or payload).
+    BadCrc,
+    /// The stream or buffer ended mid-frame.
+    Truncated,
+    /// Structurally invalid frame payload (or chunk accounting).
+    Malformed(String),
+    /// Transport error while reading.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            WireError::UnknownOpcode(b) => write!(f, "unknown opcode {b:#04x}"),
+            WireError::Oversized { len, max } => {
+                write!(f, "frame payload {len} B exceeds ceiling {max} B")
+            }
+            WireError::BadCrc => write!(f, "frame CRC mismatch"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<WireError> for Error {
+    fn from(e: WireError) -> Self {
+        Error::InvalidInput(format!("wire: {e}"))
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// Frame type.
+    pub opcode: Opcode,
+    /// Flag bits (bit 0 = [`FLAG_LAST`]).
+    pub flags: u16,
+    /// Request id (client-assigned, connection-scoped; 0 for
+    /// connection-level frames).
+    pub id: u64,
+    /// Opcode-specific payload bytes.
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A payload-free frame (control opcodes).
+    pub fn control(opcode: Opcode, id: u64) -> Frame {
+        Frame {
+            opcode,
+            flags: 0,
+            id,
+            payload: Vec::new(),
+        }
+    }
+
+    /// A frame carrying an encoded message payload.
+    pub fn message(opcode: Opcode, id: u64, payload: Vec<u8>) -> Frame {
+        Frame {
+            opcode,
+            flags: 0,
+            id,
+            payload,
+        }
+    }
+}
+
+/// CRC32 (IEEE 802.3, reflected, poly `0xEDB88320`) over the
+/// concatenation of `parts`.
+pub fn crc32(parts: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for part in parts {
+        for &b in *part {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Serialize a frame to its wire bytes.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + frame.payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame.opcode as u8);
+    out.extend_from_slice(&frame.flags.to_le_bytes());
+    out.extend_from_slice(&frame.id.to_le_bytes());
+    out.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    let crc = crc32(&[&out[0..20], &frame.payload]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&frame.payload);
+    out
+}
+
+/// Decode one frame from the front of `buf`; returns the frame and the
+/// number of bytes consumed. `max_len` bounds the payload length
+/// *before* it is trusted.
+pub fn decode_frame(buf: &[u8], max_len: usize) -> Result<(Frame, usize), WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated);
+    }
+    if buf[0..4] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if buf[4] != VERSION {
+        return Err(WireError::BadVersion(buf[4]));
+    }
+    let len = u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]) as usize;
+    if len > max_len {
+        return Err(WireError::Oversized { len, max: max_len });
+    }
+    let total = HEADER_LEN + len;
+    if buf.len() < total {
+        return Err(WireError::Truncated);
+    }
+    let stored = u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]);
+    let payload = &buf[HEADER_LEN..total];
+    if crc32(&[&buf[0..20], payload]) != stored {
+        return Err(WireError::BadCrc);
+    }
+    let opcode = Opcode::from_u8(buf[5]).ok_or(WireError::UnknownOpcode(buf[5]))?;
+    let flags = u16::from_le_bytes([buf[6], buf[7]]);
+    let id = u64::from_le_bytes([
+        buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+    ]);
+    Ok((
+        Frame {
+            opcode,
+            flags,
+            id,
+            payload: payload.to_vec(),
+        },
+        total,
+    ))
+}
+
+/// Read one frame from a stream. `Ok(None)` means the stream closed
+/// cleanly *at a frame boundary*; closing mid-frame is
+/// [`WireError::Truncated`]. The payload buffer is allocated only after
+/// the declared length passes the `max_len` ceiling.
+pub fn read_frame(r: &mut impl std::io::Read, max_len: usize) -> Result<Option<Frame>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte separately: a clean EOF here is an orderly close.
+    let mut got = 0usize;
+    while got == 0 {
+        match r.read(&mut header[0..1]) {
+            Ok(0) => return Ok(None),
+            Ok(n) => got = n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    read_exact_or(r, &mut header[1..])?;
+    if header[0..4] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if header[4] != VERSION {
+        return Err(WireError::BadVersion(header[4]));
+    }
+    let len = u32::from_le_bytes([header[16], header[17], header[18], header[19]]) as usize;
+    if len > max_len {
+        return Err(WireError::Oversized { len, max: max_len });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload)?;
+    let stored = u32::from_le_bytes([header[20], header[21], header[22], header[23]]);
+    if crc32(&[&header[0..20], &payload]) != stored {
+        return Err(WireError::BadCrc);
+    }
+    let opcode = Opcode::from_u8(header[5]).ok_or(WireError::UnknownOpcode(header[5]))?;
+    let flags = u16::from_le_bytes([header[6], header[7]]);
+    let id = u64::from_le_bytes([
+        header[8], header[9], header[10], header[11], header[12], header[13], header[14],
+        header[15],
+    ]);
+    Ok(Some(Frame {
+        opcode,
+        flags,
+        id,
+        payload,
+    }))
+}
+
+fn read_exact_or(r: &mut impl std::io::Read, buf: &mut [u8]) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e)
+        }
+    })
+}
+
+/// Write one frame to a stream (single `write_all` of the encoding).
+pub fn write_frame(w: &mut impl std::io::Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode_frame(frame))
+}
+
+/// Split `bytes` into chunked frames of at most `chunk` payload bytes
+/// each; the final frame carries [`FLAG_LAST`]. Empty input yields no
+/// frames (a zero-key request is just `SortBegin` + `Commit`).
+pub fn chunk_frames(opcode: Opcode, id: u64, bytes: &[u8], chunk: usize) -> Vec<Frame> {
+    let chunk = chunk.max(1);
+    let mut frames: Vec<Frame> = bytes
+        .chunks(chunk)
+        .map(|c| Frame {
+            opcode,
+            flags: 0,
+            id,
+            payload: c.to_vec(),
+        })
+        .collect();
+    if let Some(last) = frames.last_mut() {
+        last.flags |= FLAG_LAST;
+    }
+    frames
+}
+
+// ---------------------------------------------------------------------------
+// Typed payload messages
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian payload reader; every overrun is a
+/// [`WireError::Malformed`].
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| WireError::Malformed("payload too short".into()))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str_u16(&mut self) -> Result<String, WireError> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("non-UTF-8 string".into()))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+fn push_str_u16(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&bytes[..len]);
+}
+
+/// Client handshake payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HelloMsg {
+    /// The largest frame payload the *client* is willing to receive;
+    /// the server clamps its response chunks to this.
+    pub max_frame_len: u32,
+}
+
+impl HelloMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        self.max_frame_len.to_le_bytes().to_vec()
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = HelloMsg {
+            max_frame_len: r.u32()?,
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// Server handshake payload: the connection's credit window and the
+/// server's frame ceiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HelloAckMsg {
+    /// Initial admission credits for this connection.
+    pub credits: u32,
+    /// The largest frame payload the *server* is willing to receive.
+    pub max_frame_len: u32,
+    /// Per-request key-count ceiling (larger requests are shed with a
+    /// `TooLarge` error frame).
+    pub max_request_keys: u64,
+}
+
+impl HelloAckMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.credits.to_le_bytes());
+        out.extend_from_slice(&self.max_frame_len.to_le_bytes());
+        out.extend_from_slice(&self.max_request_keys.to_le_bytes());
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = HelloAckMsg {
+            credits: r.u32()?,
+            max_frame_len: r.u32()?,
+            max_request_keys: r.u64()?,
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+const BEGIN_DESCENDING: u8 = 1;
+const BEGIN_SELF_CHECK: u8 = 2;
+const BEGIN_HAS_PAYLOAD: u8 = 4;
+const BEGIN_HAS_TAG: u8 = 8;
+
+/// `SortBegin` payload: everything about the request except the bulk
+/// key/payload bytes (those stream as chunks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SortBeginMsg {
+    /// Key type of the streamed key bytes.
+    pub key_type: KeyType,
+    /// Sort direction.
+    pub descending: bool,
+    /// Ask the service to verify the response before returning it.
+    pub self_check: bool,
+    /// Whether `PayloadChunk` frames follow (u64 per key).
+    pub has_payload: bool,
+    /// Declared key count — chunk accounting is validated against it.
+    pub total_keys: u64,
+    /// Optional diagnostic tag, echoed in the response.
+    pub tag: Option<String>,
+}
+
+impl SortBeginMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.push(key_type_to_u8(self.key_type));
+        let mut flags = 0u8;
+        if self.descending {
+            flags |= BEGIN_DESCENDING;
+        }
+        if self.self_check {
+            flags |= BEGIN_SELF_CHECK;
+        }
+        if self.has_payload {
+            flags |= BEGIN_HAS_PAYLOAD;
+        }
+        if self.tag.is_some() {
+            flags |= BEGIN_HAS_TAG;
+        }
+        out.push(flags);
+        out.extend_from_slice(&self.total_keys.to_le_bytes());
+        if let Some(tag) = &self.tag {
+            push_str_u16(&mut out, tag);
+        }
+        out
+    }
+
+    /// Deserialize. Unknown flag bits are rejected (strict decoding:
+    /// silently dropping them would make round-trips unfaithful and
+    /// future extensions ambiguous).
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let key_type = key_type_from_u8(r.u8()?)?;
+        let flags = r.u8()?;
+        let known = BEGIN_DESCENDING | BEGIN_SELF_CHECK | BEGIN_HAS_PAYLOAD | BEGIN_HAS_TAG;
+        if flags & !known != 0 {
+            return Err(WireError::Malformed(format!(
+                "unknown SortBegin flag bits {flags:#04x}"
+            )));
+        }
+        let total_keys = r.u64()?;
+        let tag = if flags & BEGIN_HAS_TAG != 0 {
+            Some(r.str_u16()?)
+        } else {
+            None
+        };
+        r.done()?;
+        Ok(SortBeginMsg {
+            key_type,
+            descending: flags & BEGIN_DESCENDING != 0,
+            self_check: flags & BEGIN_SELF_CHECK != 0,
+            has_payload: flags & BEGIN_HAS_PAYLOAD != 0,
+            total_keys,
+            tag,
+        })
+    }
+}
+
+/// `SortHeader` payload: response metadata ahead of the result chunks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SortHeaderMsg {
+    /// Key type of the streamed result bytes.
+    pub key_type: KeyType,
+    /// Result key count.
+    pub total_keys: u64,
+    /// Whether `ResultPayloadChunk` frames follow.
+    pub has_payload: bool,
+    /// Engine that served the request.
+    pub engine: crate::config::EngineKind,
+    /// Worker index that executed the batch.
+    pub worker: u32,
+    /// Number of requests in the executed batch.
+    pub batch_size: u32,
+    /// Milliseconds the request waited in the queue.
+    pub queue_ms: f64,
+    /// Milliseconds of engine service time.
+    pub service_ms: f64,
+    /// Tag echoed from the request.
+    pub tag: Option<String>,
+}
+
+impl SortHeaderMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(40);
+        out.push(key_type_to_u8(self.key_type));
+        let mut flags = 0u8;
+        if self.has_payload {
+            flags |= BEGIN_HAS_PAYLOAD;
+        }
+        if self.tag.is_some() {
+            flags |= BEGIN_HAS_TAG;
+        }
+        out.push(flags);
+        out.push(engine_to_u8(self.engine));
+        out.extend_from_slice(&self.total_keys.to_le_bytes());
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.batch_size.to_le_bytes());
+        out.extend_from_slice(&self.queue_ms.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.service_ms.to_bits().to_le_bytes());
+        if let Some(tag) = &self.tag {
+            push_str_u16(&mut out, tag);
+        }
+        out
+    }
+
+    /// Deserialize. Unknown flag bits are rejected (strict decoding).
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let key_type = key_type_from_u8(r.u8()?)?;
+        let flags = r.u8()?;
+        if flags & !(BEGIN_HAS_PAYLOAD | BEGIN_HAS_TAG) != 0 {
+            return Err(WireError::Malformed(format!(
+                "unknown SortHeader flag bits {flags:#04x}"
+            )));
+        }
+        let engine = engine_from_u8(r.u8()?)?;
+        let total_keys = r.u64()?;
+        let worker = r.u32()?;
+        let batch_size = r.u32()?;
+        let queue_ms = r.f64()?;
+        let service_ms = r.f64()?;
+        let tag = if flags & BEGIN_HAS_TAG != 0 {
+            Some(r.str_u16()?)
+        } else {
+            None
+        };
+        r.done()?;
+        Ok(SortHeaderMsg {
+            key_type,
+            total_keys,
+            has_payload: flags & BEGIN_HAS_PAYLOAD != 0,
+            engine,
+            worker,
+            batch_size,
+            queue_ms,
+            service_ms,
+            tag,
+        })
+    }
+}
+
+/// Error classes carried in [`Opcode::ErrorFrame`] payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Backpressure load-shed: admission queue (or credit window) full.
+    Busy,
+    /// Request exceeds a hard size limit.
+    TooLarge,
+    /// Request failed validation.
+    Invalid,
+    /// The peer sent a protocol-violating frame sequence.
+    Malformed,
+    /// The server is draining; no new work is admitted.
+    Shutdown,
+    /// Any other server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code (for exhaustive property tests).
+    pub const ALL: [ErrorCode; 6] = [
+        ErrorCode::Busy,
+        ErrorCode::TooLarge,
+        ErrorCode::Invalid,
+        ErrorCode::Malformed,
+        ErrorCode::Shutdown,
+        ErrorCode::Internal,
+    ];
+
+    /// Stable wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::Busy => "busy",
+            ErrorCode::TooLarge => "too_large",
+            ErrorCode::Invalid => "invalid",
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Shutdown => "shutdown",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::Busy => 0,
+            ErrorCode::TooLarge => 1,
+            ErrorCode::Invalid => 2,
+            ErrorCode::Malformed => 3,
+            ErrorCode::Shutdown => 4,
+            ErrorCode::Internal => 5,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<ErrorCode, WireError> {
+        ErrorCode::ALL
+            .into_iter()
+            .find(|c| c.to_u8() == b)
+            .ok_or_else(|| WireError::Malformed(format!("unknown error code {b}")))
+    }
+}
+
+/// `ErrorFrame` payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorMsg {
+    /// Failure class.
+    pub code: ErrorCode,
+    /// Human-readable server-side message.
+    pub message: String,
+}
+
+impl ErrorMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(3 + self.message.len());
+        out.push(self.code.to_u8());
+        push_str_u16(&mut out, &self.message);
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = ErrorMsg {
+            code: ErrorCode::from_u8(r.u8()?)?,
+            message: r.str_u16()?,
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// `Credit` payload: admission credits returned to the client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CreditMsg {
+    /// Number of credits granted.
+    pub credits: u32,
+}
+
+impl CreditMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        self.credits.to_le_bytes().to_vec()
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = CreditMsg {
+            credits: r.u32()?,
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// Build an [`Opcode::ErrorFrame`] for `id`.
+pub fn error_frame(id: u64, code: ErrorCode, message: &str) -> Frame {
+    Frame::message(
+        Opcode::ErrorFrame,
+        id,
+        ErrorMsg {
+            code,
+            message: message.to_string(),
+        }
+        .encode(),
+    )
+}
+
+/// Server-side classification of a service [`Error`] into a wire code.
+pub fn classify_error(e: &Error) -> ErrorCode {
+    match e {
+        Error::Busy(_) => ErrorCode::Busy,
+        Error::TooLarge(_) | Error::DeviceOom { .. } => ErrorCode::TooLarge,
+        Error::InvalidInput(_) | Error::InvalidParams(_) => ErrorCode::Invalid,
+        Error::Coordinator(m) if m.contains("stopped") || m.contains("shutdown") => {
+            ErrorCode::Shutdown
+        }
+        _ => ErrorCode::Internal,
+    }
+}
+
+/// Client-side mapping of a wire error code back to a typed [`Error`],
+/// so remote failures match on the same classes as in-process ones
+/// (`Busy` stays [`Error::Busy`], etc.).
+pub fn error_from_wire(code: ErrorCode, message: String) -> Error {
+    match code {
+        ErrorCode::Busy => Error::Busy(message),
+        ErrorCode::TooLarge => Error::TooLarge(message),
+        ErrorCode::Invalid => Error::InvalidInput(message),
+        ErrorCode::Shutdown => Error::Coordinator(message),
+        ErrorCode::Malformed | ErrorCode::Internal => Error::Remote {
+            code: code.as_str().to_string(),
+            message,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Key / payload byte serialization
+// ---------------------------------------------------------------------------
+
+/// Wire tag of a [`KeyType`].
+pub fn key_type_to_u8(kt: KeyType) -> u8 {
+    match kt {
+        KeyType::U32 => 0,
+        KeyType::U64 => 1,
+        KeyType::I32 => 2,
+        KeyType::I64 => 3,
+        KeyType::F32 => 4,
+    }
+}
+
+/// Parse a [`KeyType`] wire tag.
+pub fn key_type_from_u8(b: u8) -> Result<KeyType, WireError> {
+    match b {
+        0 => Ok(KeyType::U32),
+        1 => Ok(KeyType::U64),
+        2 => Ok(KeyType::I32),
+        3 => Ok(KeyType::I64),
+        4 => Ok(KeyType::F32),
+        other => Err(WireError::Malformed(format!("unknown key type {other}"))),
+    }
+}
+
+/// Serialize typed keys to little-endian bytes (`f32` by raw IEEE bit
+/// pattern, so NaN payload bits survive the round trip exactly).
+pub fn key_data_to_bytes(keys: &KeyData) -> Vec<u8> {
+    match keys {
+        KeyData::U32(v) => {
+            let mut out = Vec::with_capacity(v.len() * 4);
+            for k in v {
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            out
+        }
+        KeyData::U64(v) => {
+            let mut out = Vec::with_capacity(v.len() * 8);
+            for k in v {
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            out
+        }
+        KeyData::I32(v) => {
+            let mut out = Vec::with_capacity(v.len() * 4);
+            for k in v {
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            out
+        }
+        KeyData::I64(v) => {
+            let mut out = Vec::with_capacity(v.len() * 8);
+            for k in v {
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            out
+        }
+        KeyData::F32(v) => {
+            let mut out = Vec::with_capacity(v.len() * 4);
+            for k in v {
+                // Inherent f32::to_bits — raw IEEE-754 bits, not the
+                // SortKey order-preserving mapping.
+                out.extend_from_slice(&k.to_bits().to_le_bytes());
+            }
+            out
+        }
+    }
+}
+
+/// Deserialize typed keys from little-endian bytes. The byte count must
+/// be an exact multiple of the key width.
+pub fn key_data_from_bytes(kt: KeyType, bytes: &[u8]) -> Result<KeyData, WireError> {
+    let width = kt.width_bytes();
+    if bytes.len() % width != 0 {
+        return Err(WireError::Malformed(format!(
+            "{} key bytes are not a multiple of width {width}",
+            bytes.len()
+        )));
+    }
+    Ok(match kt {
+        KeyType::U32 => KeyData::U32(
+            bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        KeyType::U64 => KeyData::U64(
+            bytes
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                .collect(),
+        ),
+        KeyType::I32 => KeyData::I32(
+            bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        KeyType::I64 => KeyData::I64(
+            bytes
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                .collect(),
+        ),
+        KeyType::F32 => KeyData::F32(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                .collect(),
+        ),
+    })
+}
+
+/// Serialize a `u64` payload vector to little-endian bytes.
+pub fn payload_to_bytes(payload: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() * 8);
+    for p in payload {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize a `u64` payload vector from little-endian bytes.
+pub fn payload_from_bytes(bytes: &[u8]) -> Result<Vec<u64>, WireError> {
+    if bytes.len() % 8 != 0 {
+        return Err(WireError::Malformed(format!(
+            "{} payload bytes are not a multiple of 8",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+fn engine_to_u8(e: crate::config::EngineKind) -> u8 {
+    match e {
+        crate::config::EngineKind::Native => 0,
+        crate::config::EngineKind::Sim => 1,
+        crate::config::EngineKind::Pjrt => 2,
+        crate::config::EngineKind::Sharded => 3,
+    }
+}
+
+fn engine_from_u8(b: u8) -> Result<crate::config::EngineKind, WireError> {
+    match b {
+        0 => Ok(crate::config::EngineKind::Native),
+        1 => Ok(crate::config::EngineKind::Sim),
+        2 => Ok(crate::config::EngineKind::Pjrt),
+        3 => Ok(crate::config::EngineKind::Sharded),
+        other => Err(WireError::Malformed(format!("unknown engine tag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc_known_vector() {
+        // The canonical IEEE CRC32 check value.
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[]), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = Frame {
+            opcode: Opcode::KeyChunk,
+            flags: FLAG_LAST,
+            id: 42,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        let bytes = encode_frame(&f);
+        assert_eq!(bytes.len(), HEADER_LEN + 5);
+        let (back, used) = decode_frame(&bytes, 1 << 20).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(used, bytes.len());
+        // Streaming path agrees.
+        let mut cur = std::io::Cursor::new(bytes);
+        assert_eq!(read_frame(&mut cur, 1 << 20).unwrap().unwrap(), f);
+        assert!(read_frame(&mut cur, 1 << 20).unwrap().is_none());
+    }
+
+    #[test]
+    fn decoder_rejects_corruption() {
+        let f = Frame::control(Opcode::Ping, 7);
+        let good = encode_frame(&f);
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            decode_frame(&bad, 1 << 20),
+            Err(WireError::BadMagic)
+        ));
+
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            decode_frame(&bad, 1 << 20),
+            Err(WireError::BadVersion(99))
+        ));
+
+        let mut bad = good.clone();
+        bad[8] ^= 0xFF; // id byte: caught by CRC
+        assert!(matches!(decode_frame(&bad, 1 << 20), Err(WireError::BadCrc)));
+
+        // Oversized length prefix rejected before allocation.
+        let mut bad = good.clone();
+        bad[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&bad, 1 << 20),
+            Err(WireError::Oversized { .. })
+        ));
+
+        // Truncation at every prefix length.
+        for cut in 0..good.len() {
+            assert!(matches!(
+                decode_frame(&good[..cut], 1 << 20),
+                Err(WireError::Truncated)
+            ));
+        }
+    }
+
+    #[test]
+    fn mid_frame_eof_is_truncated() {
+        let f = Frame {
+            opcode: Opcode::KeyChunk,
+            flags: 0,
+            id: 1,
+            payload: vec![9; 100],
+        };
+        let bytes = encode_frame(&f);
+        let mut cur = std::io::Cursor::new(&bytes[..50]);
+        assert!(matches!(
+            read_frame(&mut cur, 1 << 20),
+            Err(WireError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn message_roundtrips() {
+        let begin = SortBeginMsg {
+            key_type: KeyType::F32,
+            descending: true,
+            self_check: false,
+            has_payload: true,
+            total_keys: 12345,
+            tag: Some("bench".into()),
+        };
+        assert_eq!(SortBeginMsg::decode(&begin.encode()).unwrap(), begin);
+
+        let header = SortHeaderMsg {
+            key_type: KeyType::U64,
+            total_keys: 99,
+            has_payload: false,
+            engine: crate::config::EngineKind::Native,
+            worker: 3,
+            batch_size: 7,
+            queue_ms: 0.25,
+            service_ms: 1.5,
+            tag: None,
+        };
+        assert_eq!(SortHeaderMsg::decode(&header.encode()).unwrap(), header);
+
+        let err = ErrorMsg {
+            code: ErrorCode::Busy,
+            message: "queue full — backpressure".into(),
+        };
+        assert_eq!(ErrorMsg::decode(&err.encode()).unwrap(), err);
+
+        let hello = HelloMsg {
+            max_frame_len: 4096,
+        };
+        assert_eq!(HelloMsg::decode(&hello.encode()).unwrap(), hello);
+        let ack = HelloAckMsg {
+            credits: 8,
+            max_frame_len: 1 << 20,
+            max_request_keys: 1 << 26,
+        };
+        assert_eq!(HelloAckMsg::decode(&ack.encode()).unwrap(), ack);
+        let credit = CreditMsg { credits: 2 };
+        assert_eq!(CreditMsg::decode(&credit.encode()).unwrap(), credit);
+    }
+
+    #[test]
+    fn key_bytes_roundtrip_bitwise() {
+        let data = KeyData::F32(vec![0.5, -0.0, f32::NAN, f32::INFINITY, -3.25]);
+        let bytes = key_data_to_bytes(&data);
+        let back = key_data_from_bytes(KeyType::F32, &bytes).unwrap();
+        // NaN != NaN under PartialEq, so compare the byte images.
+        assert_eq!(key_data_to_bytes(&back), bytes);
+        assert!(key_data_from_bytes(KeyType::U64, &bytes[..12]).is_err());
+
+        let p = vec![u64::MAX, 0, 42];
+        assert_eq!(payload_from_bytes(&payload_to_bytes(&p)).unwrap(), p);
+        assert!(payload_from_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn chunking_marks_last() {
+        let frames = chunk_frames(Opcode::KeyChunk, 5, &[0u8; 10], 4);
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0].payload.len(), 4);
+        assert_eq!(frames[2].payload.len(), 2);
+        assert_eq!(frames[0].flags & FLAG_LAST, 0);
+        assert_eq!(frames[2].flags & FLAG_LAST, FLAG_LAST);
+        assert!(chunk_frames(Opcode::KeyChunk, 5, &[], 4).is_empty());
+    }
+
+    #[test]
+    fn error_mapping_is_symmetric_enough() {
+        let busy = Error::Busy("queue full — backpressure".into());
+        assert_eq!(classify_error(&busy), ErrorCode::Busy);
+        let back = error_from_wire(ErrorCode::Busy, busy.to_string());
+        assert!(back.is_busy());
+        assert!(back.to_string().contains("backpressure"));
+        assert_eq!(
+            classify_error(&Error::Coordinator("service stopped".into())),
+            ErrorCode::Shutdown
+        );
+        assert_eq!(
+            classify_error(&Error::Runtime("boom".into())),
+            ErrorCode::Internal
+        );
+        for code in ErrorCode::ALL {
+            // Wire tags round-trip.
+            assert_eq!(ErrorCode::from_u8(code.to_u8()).unwrap(), code);
+        }
+    }
+}

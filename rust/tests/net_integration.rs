@@ -1,0 +1,411 @@
+//! Network-tier integration: end-to-end byte identity over TCP,
+//! fault injection (malformed frames, half-written frames, mid-stream
+//! disconnects), graceful drain with in-flight work, and wire-level
+//! backpressure against a saturated scheduler queue.
+//!
+//! Every test binds an ephemeral port (`127.0.0.1:0`) so suites can
+//! run in parallel.
+
+use gpu_bucket_sort::config::{BatchConfig, EngineKind, NetConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{JobData, SortEngine, SortRequest, SortService};
+use gpu_bucket_sort::net::wire::{self, Frame, HelloMsg, Opcode, SortBeginMsg};
+use gpu_bucket_sort::net::{NetClient, NetServer};
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{KeyData, KeyType};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        verify: true,
+        batch: BatchConfig {
+            max_batch_keys: 1 << 20,
+            max_batch_requests: 8,
+            max_wait_ms: 1,
+            queue_capacity: 256,
+            max_queued_keys: 1 << 26,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// An engine that holds every batch until the shared gate opens —
+/// lets tests pin work "in flight" deterministically.
+struct SlowEngine(Arc<(Mutex<bool>, Condvar)>);
+
+impl SortEngine for SlowEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Native
+    }
+    fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<gpu_bucket_sort::Result<JobData>> {
+        let (lock, cv) = &*self.0;
+        let mut go = lock.lock().unwrap();
+        while !*go {
+            go = cv.wait(go).unwrap();
+        }
+        drop(go);
+        jobs.into_iter()
+            .map(|mut j| {
+                if let KeyData::U32(v) = &mut j.keys {
+                    v.sort_unstable();
+                }
+                Ok(j)
+            })
+            .collect()
+    }
+}
+
+fn release(gate: &(Mutex<bool>, Condvar)) {
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+}
+
+/// Raw-socket handshake: returns a stream past the `HelloAck`, ready
+/// to speak arbitrary (possibly hostile) frames.
+fn raw_handshake(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let hello = HelloMsg { max_frame_len: 1 << 20 };
+    wire::write_frame(&mut s, &Frame::message(Opcode::Hello, 0, hello.encode())).unwrap();
+    let ack = wire::read_frame(&mut s, 1 << 20).unwrap().unwrap();
+    assert_eq!(ack.opcode, Opcode::HelloAck);
+    s
+}
+
+/// The tentpole contract: N pipelined connections, mixed key types,
+/// payloads and sort directions (including NaN f32 keys), 2 workers —
+/// every TCP response is **byte-identical** to the same request served
+/// through an in-process clone of the very same service handle.
+#[test]
+fn tcp_responses_byte_identical_to_in_process() {
+    let service = SortService::start(ServiceConfig { workers: 2, ..cfg() }).unwrap();
+    let local = service.clone();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let remote = NetClient::connect(&addr, 3, NetConfig::default()).unwrap();
+    assert_eq!(remote.connections(), 3);
+
+    let types = [KeyType::U32, KeyType::U64, KeyType::F32];
+    let total = 18usize;
+    let mk = |i: usize| -> SortRequest {
+        let n = 2_000 + 1_117 * (i % 5);
+        let dist = Distribution::ALL[i % Distribution::ALL.len()];
+        let mut keys = dist.generate_data(types[i % types.len()], n, i as u64);
+        if let KeyData::F32(v) = &mut keys {
+            // NaN and infinities must survive the wire bit-exactly.
+            v[0] = f32::NAN;
+            v[1] = f32::NEG_INFINITY;
+        }
+        let mut b = SortRequest::builder(keys).descending(i % 3 == 0).tag(format!("req-{i}"));
+        if i % 2 == 0 {
+            b = b.payload((0..n as u64).collect::<Vec<u64>>());
+        }
+        b.build().unwrap()
+    };
+
+    // Pipelined: every remote request is in flight before the first
+    // response is read (per-connection credits keep this bounded).
+    let remote_rxs: Vec<_> = (0..total).map(|i| remote.submit(mk(i)).unwrap()).collect();
+    let local_rxs: Vec<_> = (0..total).map(|i| local.submit(mk(i)).unwrap()).collect();
+    for (i, (rrx, lrx)) in remote_rxs.into_iter().zip(local_rxs).enumerate() {
+        let r = rrx.recv().unwrap().unwrap();
+        let l = lrx.recv().unwrap().unwrap();
+        // KeyData equality is NaN-poisoned; compare the wire bytes.
+        assert_eq!(
+            wire::key_data_to_bytes(&r.keys),
+            wire::key_data_to_bytes(&l.keys),
+            "request {i}: TCP keys diverged from in-process"
+        );
+        assert_eq!(r.payload, l.payload, "request {i}: payload diverged");
+        assert_eq!(r.tag.as_deref(), Some(format!("req-{i}").as_str()));
+        assert!(r.worker < 2);
+        assert_eq!(r.engine, l.engine);
+    }
+
+    drop(remote);
+    drop(local);
+    let snap = server.shutdown();
+    assert_eq!(snap.counters["net_requests"], total as u64);
+    assert_eq!(snap.counters["net_responses"], total as u64);
+    // Remote + local halves both completed in the one service.
+    assert_eq!(snap.counters["requests_completed"], 2 * total as u64);
+    assert!(!snap.counters.contains_key("net_malformed"));
+    assert!(!snap.counters.contains_key("net_drain_timeout"));
+}
+
+/// Protocol torture: garbage bytes, a half-written frame followed by
+/// socket close, and an oversized length prefix each kill only their
+/// own connection — the listener keeps serving well-formed clients.
+#[test]
+fn malformed_frames_never_kill_the_listener() {
+    let service = SortService::start(cfg()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // (1) Pure garbage instead of a handshake.
+    {
+        use std::io::Write as _;
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n this is not the protocol").unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Write);
+    }
+    // (2) Valid handshake, then a half-written frame and an abrupt close.
+    {
+        use std::io::Write as _;
+        let mut s = raw_handshake(&addr);
+        let begin = SortBeginMsg {
+            key_type: KeyType::U32,
+            descending: false,
+            self_check: false,
+            has_payload: false,
+            total_keys: 64,
+            tag: None,
+        };
+        let bytes = wire::encode_frame(&Frame::message(Opcode::SortBegin, 7, begin.encode()));
+        s.write_all(&bytes[..bytes.len() / 2]).unwrap();
+        drop(s); // socket closes mid-frame
+    }
+    // (3) A header whose length prefix claims u32::MAX bytes: the
+    // decoder must refuse before allocating, and only this connection
+    // dies.
+    {
+        use std::io::Write as _;
+        let mut s = raw_handshake(&addr);
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&wire::MAGIC);
+        hdr.push(wire::VERSION);
+        hdr.push(0x07); // Ping
+        hdr.extend_from_slice(&0u16.to_le_bytes()); // flags
+        hdr.extend_from_slice(&9u64.to_le_bytes()); // id
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd length
+        hdr.extend_from_slice(&0u32.to_le_bytes()); // (checked after length)
+        assert_eq!(hdr.len(), wire::HEADER_LEN);
+        s.write_all(&hdr).unwrap();
+        // The server answers with a typed malformed error, then closes.
+        let reply = wire::read_frame(&mut s, 1 << 20).unwrap();
+        if let Some(f) = reply {
+            assert_eq!(f.opcode, Opcode::ErrorFrame);
+        }
+    }
+
+    // After all three attacks a well-formed client is served normally.
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+    client.ping().unwrap();
+    let keys = Distribution::Uniform.generate(5_000, 42);
+    let out = client.sort(SortRequest::new(keys.clone())).unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, out.keys_u32()));
+
+    drop(client);
+    let snap = server.shutdown();
+    assert!(snap.counters["net_malformed"] >= 2, "{:?}", snap.counters);
+    assert_eq!(snap.counters["requests_completed"], 1);
+    assert!(!snap.counters.contains_key("net_drain_timeout"));
+}
+
+/// A client that vanishes mid-stream (SortBegin + some chunks, no
+/// Commit) leaves nothing behind: no service submission, no stuck
+/// credit, and shutdown completes immediately (no 60 s drain stall).
+#[test]
+fn mid_stream_disconnect_leaks_nothing() {
+    let service = SortService::start(cfg()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    {
+        let mut s = raw_handshake(&addr);
+        let begin = SortBeginMsg {
+            key_type: KeyType::U32,
+            descending: false,
+            self_check: false,
+            has_payload: false,
+            total_keys: 1_000,
+            tag: None,
+        };
+        wire::write_frame(&mut s, &Frame::message(Opcode::SortBegin, 1, begin.encode())).unwrap();
+        // 25 of the declared 1000 keys, then gone.
+        let chunk = Frame { opcode: Opcode::KeyChunk, flags: 0, id: 1, payload: vec![0xAB; 100] };
+        wire::write_frame(&mut s, &chunk).unwrap();
+        drop(s);
+    }
+
+    // An unrelated client is still served while the half-open request
+    // is being abandoned.
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+    let keys = Distribution::Staggered.generate(8_000, 7);
+    let out = client.sort(SortRequest::new(keys.clone())).unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, out.keys_u32()));
+    drop(client);
+
+    // The abandoned partial never reached the service, and it must not
+    // count as in-flight: a leaked lease would stall this for 60 s and
+    // leave a net_drain_timeout marker.
+    let start = std::time::Instant::now();
+    let snap = server.shutdown();
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "drain stalled on an abandoned partial request"
+    );
+    assert!(!snap.counters.contains_key("net_drain_timeout"));
+    assert_eq!(snap.counters["net_requests"], 2); // partial + completed
+    assert_eq!(snap.counters["requests_completed"], 1);
+}
+
+/// Graceful drain: a request already committed to the service finishes
+/// and its response is flushed to the client, while submissions that
+/// arrive after drain starts are shed with a typed shutdown error.
+#[test]
+fn drain_completes_in_flight_and_sheds_new_work() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let service = SortService::start_with_engine(
+        ServiceConfig { verify: false, ..cfg() },
+        SlowEngine(gate.clone()),
+    )
+    .unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+    let late_client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+
+    // Committed and dispatched into the gated engine: in flight.
+    let keys = Distribution::Uniform.generate(4_000, 3);
+    let rx = client.submit(SortRequest::new(keys.clone())).unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+
+    let drainer = std::thread::spawn(move || server.shutdown());
+    std::thread::sleep(Duration::from_millis(200));
+
+    // New work on a surviving connection is shed, not hung.
+    let err = late_client.sort(SortRequest::new(vec![3u32, 1, 2])).unwrap_err();
+    assert!(err.to_string().contains("draining"), "{err}");
+
+    // Open the gate: the in-flight sort completes and reaches us even
+    // though the drain is already under way.
+    release(&gate);
+    let out = rx.recv().unwrap().unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, out.keys_u32()));
+
+    let snap = drainer.join().unwrap();
+    assert_eq!(snap.counters["requests_completed"], 1);
+    assert_eq!(snap.counters["net_responses"], 1);
+    assert!(snap.counters["net_shed_shutdown"] >= 1);
+    assert!(!snap.counters.contains_key("net_drain_timeout"));
+    drop(client);
+    drop(late_client);
+}
+
+/// Backpressure over the wire: a saturated scheduler queue surfaces as
+/// typed `Busy` errors (never a hang), every one of three connections
+/// keeps working afterwards, and a fresh client can reconnect and sort
+/// after the shed.
+#[test]
+fn backpressure_sheds_busy_and_recovers_fairly() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    // The coordinator's own saturation shape: 1-request batches, no
+    // batching delay, a 2-deep dispatch queue.
+    let service = SortService::start_with_engine(
+        ServiceConfig {
+            verify: false,
+            batch: BatchConfig {
+                max_batch_keys: 10,
+                max_batch_requests: 1,
+                max_wait_ms: 0,
+                queue_capacity: 2,
+                max_queued_keys: 1 << 20,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        SlowEngine(gate.clone()),
+    )
+    .unwrap();
+    // Generous credits so the wire never throttles before the queue.
+    let net = NetConfig { credits: 64, ..NetConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", service, net).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let clients: Vec<NetClient> = (0..3)
+        .map(|_| NetClient::connect(&addr, 1, net).unwrap())
+        .collect();
+
+    // Interleave 8 pipelined submissions per connection against the
+    // gated engine; the 2-deep queue must shed most of them.
+    let mut rxs = Vec::new();
+    for round in 0..8u64 {
+        for c in &clients {
+            rxs.push(c.submit(SortRequest::new(vec![2u32, 1, round as u32])).unwrap());
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    release(&gate);
+
+    let mut completed = 0u32;
+    let mut busy = 0u32;
+    for rx in rxs {
+        match rx.recv().unwrap() {
+            Ok(out) => {
+                assert!(gpu_bucket_sort::is_sorted(out.keys_u32()));
+                completed += 1;
+            }
+            Err(e) => {
+                assert!(e.is_busy(), "non-busy failure under saturation: {e}");
+                assert!(e.to_string().contains("backpressure"), "{e}");
+                busy += 1;
+            }
+        }
+    }
+    assert!(completed >= 1, "nothing completed");
+    assert!(busy >= 1, "queue never shed: {completed} completed");
+
+    // Fairness: after the storm, every connection still serves
+    // sequential requests — no wedged readers, no lost credits.
+    for (i, c) in clients.iter().enumerate() {
+        let keys = vec![9u32, 4, 6, 1, i as u32];
+        let out = c.sort(SortRequest::new(keys.clone())).unwrap();
+        assert!(
+            gpu_bucket_sort::is_sorted_permutation(&keys, out.keys_u32()),
+            "connection {i} wedged after shed"
+        );
+    }
+
+    // Reconnect-after-shed: a brand-new client gets a fresh credit
+    // window and full service.
+    let fresh = NetClient::connect(&addr, 1, net).unwrap();
+    fresh.ping().unwrap();
+    let out = fresh.sort(SortRequest::new(vec![5u32, 2, 8])).unwrap();
+    assert_eq!(out.keys_u32(), &[2, 5, 8]);
+
+    drop(clients);
+    drop(fresh);
+    let snap = server.shutdown();
+    assert!(snap.counters["net_shed_busy"] >= 1, "{:?}", snap.counters);
+    assert!(snap.counters["requests_rejected"] >= 1);
+    assert!(
+        snap.counters.get("scheduler_queue_depth_peak").copied().unwrap_or(0) >= 1,
+        "queue depth metric never moved"
+    );
+    assert!(!snap.counters.contains_key("net_drain_timeout"));
+}
+
+/// The CLI drain path: `Drain` frames are acknowledged, latch the
+/// server-side signal that `gbs serve --listen` blocks on, and the
+/// subsequent shutdown drains cleanly.
+#[test]
+fn drain_frame_latches_the_drain_signal() {
+    let service = SortService::start(cfg()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+    client.ping().unwrap();
+    assert!(!server.drain_requested());
+    client.drain_server().unwrap();
+    assert!(server.drain_requested());
+    assert!(server.wait_for_drain_request(Some(Duration::from_secs(1))));
+    drop(client);
+
+    let snap = server.shutdown();
+    assert_eq!(snap.counters["net_pings"], 1);
+    assert_eq!(snap.counters["net_connections"], 1);
+}

@@ -80,6 +80,34 @@ fn dropping_every_client_joins_the_service_threads() {
     drop(clone);
 }
 
+/// The transport-agnostic drain contract (the network tier's shutdown
+/// path): `drain(&self)` through one handle completes queued work while
+/// other clones stay alive, surviving clones then fail fast with the
+/// typed "service stopped" error, repeated drains are idempotent, and
+/// dropping the survivors still joins every thread.
+#[test]
+fn drain_through_one_clone_leaves_survivors_with_typed_errors() {
+    let client = SortService::start(cfg()).unwrap();
+    let survivor = client.clone();
+    assert_eq!(client.sort_keys(vec![3, 1, 2]).unwrap(), vec![1, 2, 3]);
+
+    let snap = client.drain();
+    assert_eq!(snap.counters["requests_completed"], 1);
+
+    // No hang, no panic — a typed rejection, exactly what a network
+    // front end needs to turn into a `shutdown` error frame.
+    let err = survivor.sort_keys(vec![5, 4]).unwrap_err();
+    assert!(err.to_string().contains("service stopped"), "{err}");
+
+    // Idempotent: draining an already-drained service just returns the
+    // final snapshot.
+    let again = survivor.drain();
+    assert_eq!(again.counters["requests_completed"], 1);
+
+    drop(client);
+    drop(survivor); // last handle: joins intake + workers cleanly
+}
+
 #[test]
 fn verify_mode_catches_a_corrupting_engine() {
     /// An engine that returns sorted output for the wrong keys.
