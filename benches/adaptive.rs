@@ -1,0 +1,252 @@
+//! Adaptive front-end benchmarks — the PR-7 per-distribution matrix:
+//!
+//! * every [`Distribution`] is sorted by three engines — the adaptive
+//!   front-end (`KernelKind::Adaptive`, cost model from
+//!   `configs/cost_model.json` when present, built-ins otherwise), the
+//!   static planned-radix kernel and the static comparison kernel —
+//!   and the per-distribution Mkeys/s plus the front-end's recorded
+//!   [`PlanChoice`] go into `BENCH_adaptive.json`;
+//! * the CI validator (`ci/validate_bench.py`) gates the matrix:
+//!   sorted/reverse early exits ≥ 5× the static radix engine,
+//!   all-equal/few-unique beating uniform via digit skips,
+//!   splitter-killer within 0.9× of uniform, and adaptive never below
+//!   0.9× the best static engine on any distribution;
+//! * byte-identity is gated *here*: on every distribution the adaptive
+//!   output must equal the comparison-kernel output exactly — the
+//!   bench exits non-zero otherwise;
+//! * the bench doubles as the offline calibrator: it fits the linear
+//!   cost-model coefficients from its own measurements and writes the
+//!   suggested JSON to `results/cost_model_suggested.json` (compare,
+//!   then check in as `configs/cost_model.json` to recalibrate).
+
+mod common;
+
+use gpu_bucket_sort::algos::adaptive::{Choice, CostModel, PlanChoice};
+use gpu_bucket_sort::algos::plan;
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::util::bench::Bencher;
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{ExecContext, KernelKind};
+
+/// One matrix cell: a distribution measured on all three engines.
+struct Cell {
+    dist: Distribution,
+    adaptive_ms: f64,
+    radix_ms: f64,
+    comparison_ms: f64,
+    choice: Option<PlanChoice>,
+    outputs_agree: bool,
+}
+
+fn mkeys_s(n: usize, ms: f64) -> f64 {
+    n as f64 / ms / 1e3
+}
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let fast = std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 1 << 19 } else { 1 << 21 };
+
+    // The checked-in calibration when present, built-ins otherwise —
+    // same resolution order as the service.
+    let model_path = "configs/cost_model.json";
+    let (cost, model_source) = match CostModel::load(model_path) {
+        Ok(m) => (m, model_path),
+        Err(_) => (CostModel::default(), "builtin"),
+    };
+    println!("    cost model: {model_source}");
+
+    let engine = |kernel: KernelKind| {
+        NativeEngine::with_context(
+            NativeParams::default(),
+            ExecContext::new(kernel, 0).with_cost_model(cost),
+        )
+        .expect("engine construction")
+    };
+    let adaptive = engine(KernelKind::Adaptive);
+    let radix = engine(KernelKind::Radix);
+    let comparison = engine(KernelKind::Bitonic);
+
+    let mut results = Vec::new();
+    let mut cells = Vec::new();
+    for dist in Distribution::ALL {
+        let input = dist.generate(n, 7);
+        // Warm every arena once, untimed, and take the byte-identity
+        // evidence from the warmup outputs.
+        let mut a_out = input.clone();
+        adaptive.sort(&mut a_out);
+        let mut c_out = input.clone();
+        comparison.sort(&mut c_out);
+        let mut r_out = input.clone();
+        radix.sort(&mut r_out);
+        let outputs_agree = a_out == c_out && a_out == r_out;
+
+        let clone_r = bencher.bench(format!("adaptive/clone/{dist}"), || input.clone());
+        let clone_ms = clone_r.median_ms();
+        let a_r = bencher.bench(format!("adaptive/adaptive/{dist}"), || {
+            let mut k = input.clone();
+            adaptive.sort(&mut k);
+            k
+        });
+        let r_r = bencher.bench(format!("adaptive/radix/{dist}"), || {
+            let mut k = input.clone();
+            radix.sort(&mut k);
+            k
+        });
+        let c_r = bencher.bench(format!("adaptive/comparison/{dist}"), || {
+            let mut k = input.clone();
+            comparison.sort(&mut k);
+            k
+        });
+        let cell = Cell {
+            dist,
+            adaptive_ms: (a_r.median_ms() - clone_ms).max(1e-3),
+            radix_ms: (r_r.median_ms() - clone_ms).max(1e-3),
+            comparison_ms: (c_r.median_ms() - clone_ms).max(1e-3),
+            choice: adaptive.last_plan_choice(),
+            outputs_agree,
+        };
+        let chosen = cell
+            .choice
+            .map(|c| c.chosen.id())
+            .unwrap_or("none");
+        println!(
+            "    {dist:<20} adaptive {:>8.1} Mkeys/s ({chosen:<18}) | radix {:>8.1} | \
+             comparison {:>8.1} | agree {}",
+            mkeys_s(n, cell.adaptive_ms),
+            mkeys_s(n, cell.radix_ms),
+            mkeys_s(n, cell.comparison_ms),
+            cell.outputs_agree,
+        );
+        cells.push(cell);
+        results.push(clone_r);
+        results.push(a_r);
+        results.push(r_r);
+        results.push(c_r);
+    }
+
+    let totals = adaptive.plan_totals();
+    println!(
+        "    plan totals: {} requests — {} early-exit sorted, {} early-exit reverse, \
+         {} radix, {} comparison",
+        totals.requests,
+        totals.early_exit_sorted,
+        totals.early_exit_reverse,
+        totals.chose_radix,
+        totals.chose_comparison,
+    );
+
+    // ---- offline calibration --------------------------------------
+    // Fit the linear coefficients from the matrix itself: the verify
+    // scan and reverse from the early-exit rows, the radix per-key-pass
+    // rate from uniform, the comparison n·log n rate from uniform.
+    // Overheads and the nearly-sorted discount keep their defaults —
+    // they need dedicated small-n sweeps, not this matrix.
+    let by_dist = |d: Distribution| cells.iter().find(|c| c.dist == d).expect("cell");
+    let uniform = by_dist(Distribution::Uniform);
+    let sorted = by_dist(Distribution::Sorted);
+    let reverse = by_dist(Distribution::ReverseSorted);
+    let uniform_passes = plan::plan_for(
+        &Distribution::Uniform.generate(n, 7),
+        plan::DEFAULT_DIGIT_BITS,
+    )
+    .passes
+    .len()
+    .max(1);
+    let mut fitted = cost;
+    fitted.scan_ns_per_key = (sorted.adaptive_ms * 1e6 / n as f64).max(0.01);
+    fitted.reverse_ns_per_key =
+        ((reverse.adaptive_ms - sorted.adaptive_ms).max(0.0) * 1e6 / n as f64).max(0.01);
+    fitted.radix_ns_per_key_pass =
+        (uniform.radix_ms * 1e6 / (n as f64 * uniform_passes as f64)).max(0.01);
+    fitted.comparison_ns_per_key_log =
+        (uniform.comparison_ms * 1e6 / (n as f64 * (n as f64).log2())).max(0.01);
+    let suggested = fitted.to_json().to_string_pretty();
+    std::fs::create_dir_all("results").ok();
+    match std::fs::write("results/cost_model_suggested.json", &suggested) {
+        Ok(()) => println!("→ results/cost_model_suggested.json (calibration)"),
+        Err(e) => eprintln!("(calibration write failed: {e})"),
+    }
+
+    // ---- report ---------------------------------------------------
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("distribution", Json::str(c.dist.id())),
+                ("n", Json::num(n as f64)),
+                ("adaptive_mkeys_s", Json::num(mkeys_s(n, c.adaptive_ms))),
+                ("radix_mkeys_s", Json::num(mkeys_s(n, c.radix_ms))),
+                (
+                    "comparison_mkeys_s",
+                    Json::num(mkeys_s(n, c.comparison_ms)),
+                ),
+                (
+                    "chosen",
+                    Json::str(c.choice.map(|p| p.chosen.id()).unwrap_or("none")),
+                ),
+                (
+                    "predicted_ms",
+                    Json::num(c.choice.map(|p| p.predicted_ms).unwrap_or(-1.0)),
+                ),
+                (
+                    "actual_ms",
+                    Json::num(c.choice.map(|p| p.actual_ms).unwrap_or(-1.0)),
+                ),
+                ("outputs_agree", Json::Bool(c.outputs_agree)),
+            ])
+        })
+        .collect();
+    let all_agree = cells.iter().all(|c| c.outputs_agree);
+    let early_exits = [Choice::EarlyExitSorted, Choice::EarlyExitReverse];
+    let took_early_exits = cells.iter().any(|c| {
+        c.choice
+            .map(|p| early_exits.contains(&p.chosen))
+            .unwrap_or(false)
+    });
+    let report = Json::obj(vec![
+        ("bench", Json::str("adaptive")),
+        ("mode", Json::str(if fast { "smoke" } else { "full" })),
+        ("engine", Json::str("native")),
+        ("n", Json::num(n as f64)),
+        ("cost_model", Json::str(model_source)),
+        ("digit_bits", Json::num(plan::DEFAULT_DIGIT_BITS as f64)),
+        ("outputs_agree", Json::Bool(all_agree)),
+        ("took_early_exits", Json::Bool(took_early_exits)),
+        (
+            "plan_totals",
+            Json::obj(vec![
+                ("requests", Json::num(totals.requests as f64)),
+                (
+                    "early_exit_sorted",
+                    Json::num(totals.early_exit_sorted as f64),
+                ),
+                (
+                    "early_exit_reverse",
+                    Json::num(totals.early_exit_reverse as f64),
+                ),
+                ("chose_radix", Json::num(totals.chose_radix as f64)),
+                (
+                    "chose_comparison",
+                    Json::num(totals.chose_comparison as f64),
+                ),
+            ]),
+        ),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_adaptive.json", report.to_string_pretty())
+        .expect("write BENCH_adaptive.json");
+    println!("→ BENCH_adaptive.json");
+
+    common::emit_measurements("adaptive", &results);
+
+    if !all_agree {
+        eprintln!("FAIL: adaptive outputs diverged from the static kernels");
+        std::process::exit(1);
+    }
+    if !took_early_exits {
+        eprintln!("FAIL: adaptive front-end never took an early exit on sorted/reverse inputs");
+        std::process::exit(1);
+    }
+}

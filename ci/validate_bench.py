@@ -1,0 +1,290 @@
+#!/usr/bin/env python3
+"""Schema-driven validator for the CI bench reports.
+
+One definition of every BENCH_*.json / results/*.json contract the
+bench-smoke job gates on, replacing the per-report inline python that
+used to be copy-pasted through ci.yml. Each report spec names the
+file, the required top-level fields, the row array and its required
+fields, and the perf/correctness gates.
+
+Usage:
+    python3 ci/validate_bench.py [--sha GITSHA] [REPORT ...]
+
+With no REPORT arguments every known report is validated (and must
+exist). A `BENCH_manifest.json` summarising the run — the git SHA plus
+every validated report and its headline gate numbers — is written
+beside the reports so the whole perf trajectory uploads as one
+artifact.
+"""
+
+import argparse
+import json
+import sys
+
+
+def _rows(report, key):
+    rows = report.get(key)
+    assert rows, f"no measurement rows under {key!r}"
+    return rows
+
+
+def require(report, fields):
+    for field in fields:
+        assert field in report, f"missing field {field!r}"
+
+
+def require_rows(report, key, fields, positive=()):
+    for row in _rows(report, key):
+        for field in fields:
+            assert field in row, f"row missing {field!r}: {row}"
+        for field in positive:
+            assert row[field] > 0, f"{field} must be > 0: {row}"
+
+
+# ---------------------------------------------------------------------------
+# Per-report gates. Each returns a headline string for the manifest.
+# ---------------------------------------------------------------------------
+
+
+def gate_service_throughput(report):
+    require(report, ("bench", "mode", "engine", "results", "scaling"))
+    assert report["bench"] == "service_throughput"
+    require_rows(
+        report,
+        "results",
+        ("distribution", "workers", "wall_ms", "throughput_mkeys_s",
+         "p50_request_ms", "p99_request_ms"),
+        positive=("wall_ms", "throughput_mkeys_s"),
+    )
+    uniform = [s for s in report["scaling"]
+               if s["distribution"] == "uniform" and s["workers"] == 4]
+    assert uniform, "no uniform 4-worker scaling row"
+    speedup = uniform[0]["speedup"]
+    assert speedup >= 2.0, f"uniform 4-worker speedup {speedup:.2f} < 2x"
+    return f"uniform 4-worker speedup {speedup:.2f}x"
+
+
+def gate_typed_keys(report):
+    require(report, ("bench", "mode", "engine", "n",
+                     "std_sort_median_ms", "u32_vs_std_ratio", "results"))
+    assert report["bench"] == "typed_keys"
+    require_rows(
+        report,
+        "results",
+        ("key_type", "variant", "n", "median_ms",
+         "throughput_mkeys_s", "sim_estimated_ms"),
+        positive=("median_ms", "throughput_mkeys_s"),
+    )
+    rows = report["results"]
+    # Full coverage: u32/u64/f32 x key-only/key-value.
+    combos = {(r["key_type"], r["variant"]) for r in rows}
+    for kt in ("u32", "u64", "f32"):
+        for variant in ("key_only", "key_value"):
+            assert (kt, variant) in combos, f"missing {kt}/{variant}"
+    # The ledger's key-width scaling: the simulated estimate for u64
+    # keys must exceed u32's at the same n.
+    est = {(r["key_type"], r["variant"]): r["sim_estimated_ms"] for r in rows}
+    assert est[("u64", "key_only")] > est[("u32", "key_only")]
+    assert est[("u32", "key_value")] > est[("u32", "key_only")]
+    ratio = report["u32_vs_std_ratio"]
+    assert ratio <= 1.5, f"typed u32 path regressed: {ratio:.2f}x of std sort"
+    return f"u32 vs std ratio {ratio:.2f}x"
+
+
+def gate_hot_paths(report):
+    require(report, ("bench", "mode", "gate_n", "clone_median_ms",
+                     "native_vs_std_speedup", "native_vs_legacy_speedup",
+                     "tile", "arena", "kernels_agree", "results"))
+    assert report["bench"] == "hot_paths"
+    assert report["gate_n"] == 1 << 24
+    require_rows(report, "results",
+                 ("name", "median_ms", "mean_ms", "min_ms", "samples"))
+    for row in report["results"]:
+        assert row["median_ms"] >= 0
+    # Gate 1: kernel output equality (radix vs bitonic, incl. f32 NaN
+    # bits and key-value stability) — checked by the bench, recorded
+    # here.
+    assert report["kernels_agree"] is True, "radix/bitonic outputs diverged"
+    # Gate 2: the native engine must beat slice::sort_unstable at 16M
+    # uniform keys (clone-debiased).
+    vs_std = report["native_vs_std_speedup"]
+    assert vs_std >= 1.0, f"native engine slower than std sort: {vs_std:.2f}x"
+    # Gate 3: the arena'd radix path must at least match the pre-PR
+    # native configuration (0.9 allows CI noise).
+    vs_legacy = report["native_vs_legacy_speedup"]
+    assert vs_legacy >= 0.9, f"hot path regressed vs pre-PR config: {vs_legacy:.2f}x"
+    # Gate 4: the radix tile kernel must beat the bitonic network.
+    tile = report["tile"]["radix_speedup"]
+    assert tile > 1.0, f"radix tile kernel not faster: {tile:.2f}x"
+    return (f"native {vs_std:.2f}x std, {vs_legacy:.2f}x pre-PR, "
+            f"tile radix {tile:.2f}x bitonic")
+
+
+def gate_planner(report):
+    require(report, ("bench", "mode", "digit_bits", "gate_n",
+                     "planned_passes", "planned_vs_bytewise",
+                     "low_entropy", "dispatch", "kernels_agree", "results"))
+    assert report["bench"] == "planner"
+    assert report["gate_n"] == 1 << 24
+    require_rows(report, "results",
+                 ("name", "median_ms", "mean_ms", "min_ms", "samples"))
+    for row in report["results"]:
+        assert row["median_ms"] >= 0
+    # Gate 1: output equality — planned (several digit widths),
+    # byte-wise and comparison sorts agree; coalesced responses are
+    # byte-identical to per-request responses.
+    assert report["kernels_agree"] is True, "planned/byte-wise outputs diverged"
+    assert report["dispatch"]["responses_agree"] is True, \
+        "coalesced responses diverged from per-request"
+    # Gate 2: the wide-digit planner beats the byte-wise kernel at 16M
+    # uniform u32 keys (3 passes vs 4 -> headroom over the 1.1x floor).
+    kernel = report["planned_vs_bytewise"]
+    assert kernel >= 1.1, f"planner only {kernel:.2f}x over byte-wise"
+    assert report["planned_passes"] == 3, \
+        f"u32 at 11-bit digits must plan 3 passes, got {report['planned_passes']}"
+    # Gate 3: constant digits are actually elided on low-entropy keys
+    # (16-bit entropy -> 2 of 3 digits survive at 11 bits).
+    low = report["low_entropy"]
+    assert low["skipped"] >= 1, f"no passes skipped: {low}"
+    # Gate 4: coalesced dispatch beats per-request dispatch on the
+    # 256 x 64K-key serving batch.
+    dispatch = report["dispatch"]["coalesced_vs_per_request"]
+    assert dispatch >= 1.5, f"coalescing only {dispatch:.2f}x over per-request"
+    return (f"planner {kernel:.2f}x byte-wise, {low['skipped']} low-entropy "
+            f"passes skipped, coalesced {dispatch:.2f}x per-request")
+
+
+def gate_net(report):
+    require(report, ("bench", "mode", "workers", "requests_per_client",
+                     "keys_per_request", "byte_identity",
+                     "shed_light_load", "results"))
+    assert report["bench"] == "net_throughput"
+    rows = report["results"]
+    assert len(rows) >= 2, f"need >= 2 client counts, got {len(rows)}"
+    for row in rows:
+        for field in ("clients", "requests", "wall_ms", "p50_ms",
+                      "p99_ms", "mkeys_s", "shed_busy"):
+            assert field in row, f"row missing {field!r}: {row}"
+        assert row["wall_ms"] > 0 and row["mkeys_s"] > 0
+        assert row["p50_ms"] > 0 and row["p99_ms"] >= row["p50_ms"]
+    # Gate 1: every response in every client process was byte-identical
+    # to a local sort of the same input.
+    assert report["byte_identity"] is True, "byte identity violated over TCP"
+    # Gate 2: light sequential load must never trip the shedder — a
+    # Busy under these conditions is a flow-control bug.
+    shed = report["shed_light_load"]
+    assert shed == 0, f"{shed} Busy sheds under light load"
+    counts = sorted(r["clients"] for r in rows)
+    return f"clients {counts}, byte identity held, zero sheds under light load"
+
+
+def gate_adaptive(report):
+    require(report, ("bench", "mode", "engine", "n", "cost_model",
+                     "digit_bits", "outputs_agree", "took_early_exits",
+                     "plan_totals", "results"))
+    assert report["bench"] == "adaptive"
+    require_rows(
+        report,
+        "results",
+        ("distribution", "n", "adaptive_mkeys_s", "radix_mkeys_s",
+         "comparison_mkeys_s", "chosen", "predicted_ms", "actual_ms",
+         "outputs_agree"),
+        positive=("adaptive_mkeys_s", "radix_mkeys_s", "comparison_mkeys_s"),
+    )
+    # Gate 1: byte identity — on every distribution the adaptive output
+    # matched both static kernels (checked by the bench, recorded here).
+    assert report["outputs_agree"] is True, "adaptive outputs diverged"
+    rows = {r["distribution"]: r for r in report["results"]}
+    for dist, row in rows.items():
+        assert row["outputs_agree"] is True, f"outputs diverged on {dist}"
+    # Full matrix: every distribution the workload generator knows.
+    expected = {"uniform", "gaussian", "zipf", "staggered", "sorted",
+                "nearly_sorted", "reverse", "all_equal", "two_values",
+                "few_unique", "splitter_killer", "nearly_sorted_blocks"}
+    assert expected <= set(rows), f"missing distributions: {expected - set(rows)}"
+
+    def mkeys(dist):
+        return rows[dist]["adaptive_mkeys_s"]
+
+    # Gate 2: sorted/reverse inputs take the early exits and beat the
+    # static radix engine by >= 5x — the whole point of the front-end.
+    assert rows["sorted"]["chosen"] == "early_exit_sorted", rows["sorted"]
+    assert rows["reverse"]["chosen"] == "early_exit_reverse", rows["reverse"]
+    for dist in ("sorted", "reverse"):
+        ratio = mkeys(dist) / rows[dist]["radix_mkeys_s"]
+        assert ratio >= 5.0, \
+            f"{dist}: early exit only {ratio:.2f}x of static radix"
+    # Gate 3: degenerate key ranges beat uniform via digit skips (and
+    # all-equal's sorted early exit).
+    for dist in ("all_equal", "few_unique"):
+        assert mkeys(dist) > mkeys("uniform"), \
+            f"{dist} ({mkeys(dist):.1f} Mkeys/s) not faster than uniform " \
+            f"({mkeys('uniform'):.1f})"
+    # Gate 4: the sampling adversary costs at most 10% vs uniform.
+    assert mkeys("splitter_killer") >= 0.9 * mkeys("uniform"), \
+        f"splitter_killer {mkeys('splitter_killer'):.1f} < 0.9x uniform " \
+        f"{mkeys('uniform'):.1f}"
+    # Gate 5: adaptive is never a regression — within 0.9x of the best
+    # static kernel on every distribution.
+    for dist, row in rows.items():
+        best = max(row["radix_mkeys_s"], row["comparison_mkeys_s"])
+        assert row["adaptive_mkeys_s"] >= 0.9 * best, \
+            f"{dist}: adaptive {row['adaptive_mkeys_s']:.1f} < 0.9x best " \
+            f"static {best:.1f}"
+    sorted_ratio = mkeys("sorted") / rows["sorted"]["radix_mkeys_s"]
+    return (f"{len(rows)} distributions, sorted early exit "
+            f"{sorted_ratio:.1f}x radix, byte identity held")
+
+
+REPORTS = {
+    "service_throughput": ("results/service_throughput.json", gate_service_throughput),
+    "typed_keys": ("results/typed_keys.json", gate_typed_keys),
+    "hot_paths": ("BENCH_hot_paths.json", gate_hot_paths),
+    "planner": ("BENCH_planner.json", gate_planner),
+    "net": ("BENCH_net.json", gate_net),
+    "adaptive": ("BENCH_adaptive.json", gate_adaptive),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("reports", nargs="*", metavar="REPORT",
+                    help=f"reports to validate (default: all of "
+                         f"{', '.join(REPORTS)})")
+    ap.add_argument("--sha", default="unknown",
+                    help="git SHA embedded in BENCH_manifest.json")
+    ap.add_argument("--manifest", default="BENCH_manifest.json",
+                    help="manifest output path ('' to skip)")
+    args = ap.parse_args()
+    for name in args.reports:
+        if name not in REPORTS:
+            ap.error(f"unknown report {name!r} (choose from {', '.join(REPORTS)})")
+    names = args.reports or list(REPORTS)
+
+    manifest = {"sha": args.sha, "reports": []}
+    failed = False
+    for name in names:
+        path, gate = REPORTS[name]
+        try:
+            with open(path) as f:
+                report = json.load(f)  # malformed JSON fails here
+            headline = gate(report)
+            print(f"{path} OK — {headline}")
+            manifest["reports"].append(
+                {"name": name, "path": path, "ok": True, "headline": headline})
+        except (OSError, json.JSONDecodeError, AssertionError, KeyError) as e:
+            print(f"{path} FAILED — {e}", file=sys.stderr)
+            manifest["reports"].append(
+                {"name": name, "path": path, "ok": False, "error": str(e)})
+            failed = True
+
+    if args.manifest:
+        with open(args.manifest, "w") as f:
+            json.dump(manifest, f, indent=2)
+            f.write("\n")
+        print(f"-> {args.manifest} (sha {args.sha})")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,738 @@
+//! The adaptive front-end: let the data choose the algorithm.
+//!
+//! The paper's headline claim is that deterministic sample sort has no
+//! input-dependent fluctuations — but a *service* can go further and
+//! turn input shape into wins instead of merely tolerating it. Before
+//! any kernel runs, this module builds an [`InputProfile`] from the
+//! planner's equidistant occupancy sketch plus a ~128-point
+//! run-detection probe, then consults a [`CostModel`] (per-kernel
+//! coefficients, calibrated offline by `benches/adaptive.rs` and
+//! loadable from versioned JSON) to pick the cheapest path:
+//!
+//! * **Early exit** — a profile that looks sorted (or reverse sorted)
+//!   triggers an O(n) verify scan; on success the sort is a no-op (or a
+//!   single in-place reversal). The verify aborts at the first
+//!   violation, so unsorted inputs pay only the probe.
+//! * **Comparison** — tiny or nearly-sorted runs where the planned
+//!   radix kernel's per-pass fixed costs dominate.
+//! * **Planned radix** — everything else: the wide-digit LSD schedule
+//!   with constant digits elided ([`super::plan`]).
+//!
+//! Every decision is recorded as a [`PlanChoice`] (chosen path,
+//! predicted vs. actual cost) and aggregated into [`PlanTotals`] — the
+//! scheduler surfaces both in metrics and, on request, in the response
+//! tag, so benches and tests can assert *why* a kernel was chosen.
+//!
+//! ## Correctness of the early exits
+//!
+//! [`crate::SortKey::key_cmp`] equality implies bit equality (the
+//! comparison is on the injective ordered bit pattern), so a sorted
+//! sequence of any key multiset is a *unique byte sequence*. The sorted
+//! check therefore returns exactly what any kernel would produce, and
+//! reversing a non-increasing sequence produces that same unique
+//! sequence. Stability for key–value jobs is inherited: [`crate::Record`]s
+//! carry a tie-breaking index in their low bits, so records are never
+//! `key_cmp`-equal — a reverse-sorted-by-key run with duplicate keys is
+//! *not* non-increasing as records (the index ascends inside a tie) and
+//! takes the full sort instead of a stability-breaking reversal.
+
+use super::plan;
+use crate::error::{Error, Result};
+use crate::util::Json;
+use crate::{KernelKind, SortKey};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::Mutex;
+
+/// Elements probed by the run-detection scan (matches the planner's
+/// sketch granularity: O(1) in the input size).
+pub const PROFILE_SAMPLES: usize = 128;
+
+/// Cost-model JSON format version this build reads and writes.
+pub const COST_MODEL_VERSION: u64 = 1;
+
+/// What the profile measured about one input, from O(sample) work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InputProfile {
+    /// Input length.
+    pub n: usize,
+    /// Elements probed (≤ [`PROFILE_SAMPLES`]).
+    pub sampled: usize,
+    /// Ordered pairs of consecutive probes compared.
+    pub pairs: usize,
+    /// Probe pairs that were strictly descending.
+    pub descending_pairs: usize,
+    /// Probe pairs that were equal (bit-identical keys).
+    pub equal_pairs: usize,
+    /// Distinct bit patterns among the probes (duplicate-density /
+    /// entropy estimate).
+    pub distinct_sampled: usize,
+    /// Bit positions the occupancy sketch *proved* vary.
+    pub varying_bits: u32,
+    /// Radix passes the sketch plan would execute (a lower bound: an
+    /// unproven-constant digit may still vary off the sample grid).
+    pub planned_passes: usize,
+    /// Radix passes the key width implies before any skipping.
+    pub nominal_passes: usize,
+}
+
+impl InputProfile {
+    /// Profile `data`: the planner's occupancy sketch plus an
+    /// equidistant direction/duplicate probe.
+    pub fn sample<K: SortKey>(data: &[K], digit_bits: u32) -> InputProfile {
+        let n = data.len();
+        let occ = plan::Occupancy::sketch(data);
+        let sketch_plan = plan::plan_from_occupancy::<K>(&occ, digit_bits);
+        let stride = (n / PROFILE_SAMPLES).max(1);
+        let mut bits: Vec<K::Bits> = Vec::with_capacity(n.div_ceil(stride).min(n));
+        let (mut pairs, mut descending, mut equal) = (0usize, 0usize, 0usize);
+        let mut prev: Option<K> = None;
+        let mut i = 0usize;
+        while i < n {
+            let x = data[i];
+            bits.push(x.to_bits());
+            if let Some(p) = prev {
+                pairs += 1;
+                match K::key_cmp(&p, &x) {
+                    std::cmp::Ordering::Greater => descending += 1,
+                    std::cmp::Ordering::Equal => equal += 1,
+                    std::cmp::Ordering::Less => {}
+                }
+            }
+            prev = Some(x);
+            i += stride;
+        }
+        let sampled = bits.len();
+        bits.sort_unstable();
+        bits.dedup();
+        InputProfile {
+            n,
+            sampled,
+            pairs,
+            descending_pairs: descending,
+            equal_pairs: equal,
+            distinct_sampled: bits.len(),
+            varying_bits: occ.varying_bits(K::WIDTH_BYTES),
+            planned_passes: sketch_plan.passes.len(),
+            nominal_passes: sketch_plan.nominal_passes,
+        }
+    }
+
+    /// No probe pair descended — the input *may* be sorted (always true
+    /// for a genuinely sorted input, since sortedness is transitive
+    /// across the probe grid).
+    pub fn looks_sorted(&self) -> bool {
+        self.descending_pairs == 0
+    }
+
+    /// Every probe pair was non-increasing and at least one strictly
+    /// descended — the input *may* be reverse sorted.
+    pub fn looks_reverse_sorted(&self) -> bool {
+        self.descending_pairs > 0 && self.descending_pairs + self.equal_pairs == self.pairs
+    }
+
+    /// Estimated fraction of duplicate keys (0 = all probes distinct,
+    /// → 1 = all probes equal).
+    pub fn duplicate_density(&self) -> f64 {
+        if self.sampled == 0 {
+            return 0.0;
+        }
+        1.0 - self.distinct_sampled as f64 / self.sampled as f64
+    }
+
+    /// Fraction of probe pairs that descended (sampled disorder).
+    pub fn inversion_fraction(&self) -> f64 {
+        self.descending_pairs as f64 / self.pairs.max(1) as f64
+    }
+}
+
+/// Per-kernel cost coefficients: nanosecond budgets the planner uses to
+/// predict each candidate path from an [`InputProfile`].
+///
+/// The built-in [`Default`] is a sane portable estimate; the calibrated
+/// set for a given host is produced by `cargo bench --bench adaptive`
+/// (which prints and writes the fitted JSON) and checked in at
+/// `configs/cost_model.json`. Load order: `--cost-model PATH` /
+/// `config.cost_model` → built-in defaults when empty.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// One sequential read pass over the input (verify scan, occupancy
+    /// confirm), per key.
+    pub scan_ns_per_key: f64,
+    /// One radix counting+scatter pass, per key.
+    pub radix_ns_per_key_pass: f64,
+    /// Fixed per-pass cost (bin clear + prefix over 2^digit_bits bins).
+    pub radix_pass_overhead_ns: f64,
+    /// Comparison sort, per key per log2(n) (pdqsort on bit patterns).
+    pub comparison_ns_per_key_log: f64,
+    /// In-place reversal, per key.
+    pub reverse_ns_per_key: f64,
+    /// Multiplier on the comparison estimate when the sampled disorder
+    /// is below [`CostModel::nearly_sorted_max_inversions`] (pdqsort
+    /// exploits long runs). 1.0 disables the discount.
+    pub nearly_sorted_comparison_factor: f64,
+    /// Sampled inversion fraction below which an input counts as
+    /// nearly sorted.
+    pub nearly_sorted_max_inversions: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            scan_ns_per_key: 0.25,
+            radix_ns_per_key_pass: 2.0,
+            radix_pass_overhead_ns: 2000.0,
+            comparison_ns_per_key_log: 0.45,
+            reverse_ns_per_key: 0.15,
+            nearly_sorted_comparison_factor: 0.65,
+            nearly_sorted_max_inversions: 0.02,
+        }
+    }
+}
+
+impl CostModel {
+    /// All coefficient names, in serialization order (shared by the
+    /// reader, the writer and the calibration bench).
+    pub const FIELDS: [&'static str; 7] = [
+        "scan_ns_per_key",
+        "radix_ns_per_key_pass",
+        "radix_pass_overhead_ns",
+        "comparison_ns_per_key_log",
+        "reverse_ns_per_key",
+        "nearly_sorted_comparison_factor",
+        "nearly_sorted_max_inversions",
+    ];
+
+    fn field(&self, name: &str) -> f64 {
+        match name {
+            "scan_ns_per_key" => self.scan_ns_per_key,
+            "radix_ns_per_key_pass" => self.radix_ns_per_key_pass,
+            "radix_pass_overhead_ns" => self.radix_pass_overhead_ns,
+            "comparison_ns_per_key_log" => self.comparison_ns_per_key_log,
+            "reverse_ns_per_key" => self.reverse_ns_per_key,
+            "nearly_sorted_comparison_factor" => self.nearly_sorted_comparison_factor,
+            "nearly_sorted_max_inversions" => self.nearly_sorted_max_inversions,
+            _ => unreachable!("unknown cost-model field {name}"),
+        }
+    }
+
+    fn field_mut(&mut self, name: &str) -> &mut f64 {
+        match name {
+            "scan_ns_per_key" => &mut self.scan_ns_per_key,
+            "radix_ns_per_key_pass" => &mut self.radix_ns_per_key_pass,
+            "radix_pass_overhead_ns" => &mut self.radix_pass_overhead_ns,
+            "comparison_ns_per_key_log" => &mut self.comparison_ns_per_key_log,
+            "reverse_ns_per_key" => &mut self.reverse_ns_per_key,
+            "nearly_sorted_comparison_factor" => &mut self.nearly_sorted_comparison_factor,
+            "nearly_sorted_max_inversions" => &mut self.nearly_sorted_max_inversions,
+            _ => unreachable!("unknown cost-model field {name}"),
+        }
+    }
+
+    /// The versioned JSON form (`{"version": 1, "<coefficient>": ...}`).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("version", Json::num(COST_MODEL_VERSION as f64))];
+        for name in Self::FIELDS {
+            pairs.push((name, Json::num(self.field(name))));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse the versioned JSON form. Rejects unknown fields and wrong
+    /// versions (a misspelt coefficient must not silently keep its
+    /// default); missing coefficients keep their defaults so the file
+    /// can carry a partial calibration.
+    pub fn from_json(text: &str) -> Result<CostModel> {
+        let v = Json::parse(text).map_err(|e| Error::Config(format!("cost model: {e}")))?;
+        let pairs = match &v {
+            Json::Obj(pairs) => pairs,
+            _ => return Err(Error::Config("cost model: expected a JSON object".into())),
+        };
+        let version = v
+            .req("version")
+            .map_err(|_| Error::Config("cost model: missing \"version\"".into()))?
+            .as_u64()
+            .ok_or_else(|| Error::Config("cost model: \"version\" must be an integer".into()))?;
+        if version != COST_MODEL_VERSION {
+            return Err(Error::Config(format!(
+                "cost model: version {version} unsupported (this build reads {COST_MODEL_VERSION})"
+            )));
+        }
+        let mut model = CostModel::default();
+        for (key, value) in pairs {
+            if key == "version" {
+                continue;
+            }
+            if !Self::FIELDS.contains(&key.as_str()) {
+                return Err(Error::Config(format!("cost model: unknown field {key:?}")));
+            }
+            let num = value.as_f64().ok_or_else(|| {
+                Error::Config(format!("cost model: field {key:?} must be a number"))
+            })?;
+            if !num.is_finite() || num < 0.0 {
+                return Err(Error::Config(format!(
+                    "cost model: field {key:?} must be finite and non-negative, got {num}"
+                )));
+            }
+            *model.field_mut(key) = num;
+        }
+        Ok(model)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<CostModel> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cost model {path:?}: {e}")))?;
+        Self::from_json(&text)
+    }
+
+    /// Resolve a config/CLI path: empty → built-in defaults, otherwise
+    /// load the file.
+    pub fn resolve(path: &str) -> Result<CostModel> {
+        if path.is_empty() {
+            Ok(CostModel::default())
+        } else {
+            Self::load(path)
+        }
+    }
+
+    /// Predicted cost of the planned radix path, in milliseconds. Uses
+    /// the sketch's pass count plus the confirming occupancy scan the
+    /// planner performs whenever the sketch left skips unproven.
+    pub fn predict_radix_ms(&self, p: &InputProfile) -> f64 {
+        let passes = p.planned_passes as f64;
+        let mut ns = p.n as f64 * passes * self.radix_ns_per_key_pass
+            + passes * self.radix_pass_overhead_ns;
+        if p.planned_passes < p.nominal_passes {
+            ns += p.n as f64 * self.scan_ns_per_key;
+        }
+        ns / 1e6
+    }
+
+    /// Predicted cost of the comparison path, in milliseconds, with the
+    /// nearly-sorted discount when the sampled disorder is low.
+    pub fn predict_comparison_ms(&self, p: &InputProfile) -> f64 {
+        let n = p.n as f64;
+        let mut ns = n * n.max(2.0).log2() * self.comparison_ns_per_key_log;
+        if p.descending_pairs > 0 && p.inversion_fraction() <= self.nearly_sorted_max_inversions {
+            ns *= self.nearly_sorted_comparison_factor;
+        }
+        ns / 1e6
+    }
+
+    /// Predicted cost of the sorted early exit (one verify scan).
+    pub fn predict_verify_ms(&self, n: usize) -> f64 {
+        n as f64 * self.scan_ns_per_key / 1e6
+    }
+
+    /// Predicted cost of the reverse early exit (verify + reversal).
+    pub fn predict_reverse_ms(&self, n: usize) -> f64 {
+        n as f64 * (self.scan_ns_per_key + self.reverse_ns_per_key) / 1e6
+    }
+
+    /// Pick the cheaper executed kernel for this profile.
+    pub fn decide(&self, p: &InputProfile) -> (KernelKind, f64) {
+        let radix = self.predict_radix_ms(p);
+        let comparison = self.predict_comparison_ms(p);
+        if comparison < radix {
+            (KernelKind::Bitonic, comparison)
+        } else {
+            (KernelKind::Radix, radix)
+        }
+    }
+}
+
+/// The path the adaptive front-end chose for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Choice {
+    /// Input verified already sorted: returned untouched.
+    EarlyExitSorted,
+    /// Input verified non-increasing: one in-place reversal.
+    EarlyExitReverse,
+    /// Planned wide-digit radix kernel.
+    Radix,
+    /// Comparison kernel (tiny or nearly-sorted run).
+    Comparison,
+}
+
+impl Choice {
+    /// Stable identifier (metrics keys, bench JSON, response tags).
+    pub fn id(&self) -> &'static str {
+        match self {
+            Choice::EarlyExitSorted => "early_exit_sorted",
+            Choice::EarlyExitReverse => "early_exit_reverse",
+            Choice::Radix => "radix",
+            Choice::Comparison => "comparison",
+        }
+    }
+}
+
+impl std::fmt::Display for Choice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// One recorded adaptive decision: what was chosen, for how many keys,
+/// and the predicted vs. measured cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanChoice {
+    /// Chosen path.
+    pub chosen: Choice,
+    /// Keys in the request.
+    pub n: usize,
+    /// Cost-model prediction for the chosen path (ms).
+    pub predicted_ms: f64,
+    /// Measured wall time of the request (ms), filled after execution.
+    pub actual_ms: f64,
+    /// Sketch-planned radix passes at decision time.
+    pub planned_passes: usize,
+    /// Sampled duplicate density at decision time.
+    pub duplicate_density: f64,
+}
+
+impl PlanChoice {
+    /// Compact single-token summary for response tags:
+    /// `choice=<id>;n=<n>;passes=<p>;pred_ms=<x>;act_ms=<y>`.
+    pub fn summary(&self) -> String {
+        format!(
+            "choice={};n={};passes={};pred_ms={:.3};act_ms={:.3}",
+            self.chosen.id(),
+            self.n,
+            self.planned_passes,
+            self.predicted_ms,
+            self.actual_ms
+        )
+    }
+}
+
+/// Lifetime totals of adaptive decisions, for metrics deltas (the
+/// scheduler polls these the same way it polls coalescing totals).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PlanTotals {
+    /// Requests that went through the adaptive front-end.
+    pub requests: u64,
+    /// Sorted early exits taken.
+    pub early_exit_sorted: u64,
+    /// Reverse early exits taken.
+    pub early_exit_reverse: u64,
+    /// Requests dispatched to the planned radix kernel.
+    pub chose_radix: u64,
+    /// Requests dispatched to the comparison kernel.
+    pub chose_comparison: u64,
+}
+
+/// Thread-safe decision log an engine embeds: monotonic counters for
+/// metrics plus the most recent [`PlanChoice`] for response tagging.
+#[derive(Debug, Default)]
+pub struct ChoiceLog {
+    requests: AtomicU64,
+    early_exit_sorted: AtomicU64,
+    early_exit_reverse: AtomicU64,
+    chose_radix: AtomicU64,
+    chose_comparison: AtomicU64,
+    last: Mutex<Option<PlanChoice>>,
+}
+
+impl ChoiceLog {
+    /// Record one decision.
+    pub fn record(&self, choice: &PlanChoice) {
+        self.requests.fetch_add(1, AtomicOrdering::Relaxed);
+        let counter = match choice.chosen {
+            Choice::EarlyExitSorted => &self.early_exit_sorted,
+            Choice::EarlyExitReverse => &self.early_exit_reverse,
+            Choice::Radix => &self.chose_radix,
+            Choice::Comparison => &self.chose_comparison,
+        };
+        counter.fetch_add(1, AtomicOrdering::Relaxed);
+        *self.last.lock().expect("choice log poisoned") = Some(*choice);
+    }
+
+    /// Snapshot of the lifetime totals.
+    pub fn totals(&self) -> PlanTotals {
+        PlanTotals {
+            requests: self.requests.load(AtomicOrdering::Relaxed),
+            early_exit_sorted: self.early_exit_sorted.load(AtomicOrdering::Relaxed),
+            early_exit_reverse: self.early_exit_reverse.load(AtomicOrdering::Relaxed),
+            chose_radix: self.chose_radix.load(AtomicOrdering::Relaxed),
+            chose_comparison: self.chose_comparison.load(AtomicOrdering::Relaxed),
+        }
+    }
+
+    /// The most recent decision, if any.
+    pub fn last(&self) -> Option<PlanChoice> {
+        *self.last.lock().expect("choice log poisoned")
+    }
+}
+
+/// Outcome of [`resolve`]: either the data is already in final order
+/// (the early exit ran), or the caller must run the named concrete
+/// kernel over it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolved {
+    /// Early exit already applied — `data` is sorted in place.
+    Done,
+    /// Run this concrete kernel (never [`KernelKind::Adaptive`]).
+    Run(KernelKind),
+}
+
+/// The adaptive front-end: profile `data`, take an early exit when the
+/// verify scan confirms the profile's hint, otherwise pick the cheaper
+/// kernel. `PlanChoice::actual_ms` is left 0.0 for the caller to fill
+/// after execution.
+pub fn resolve<K: SortKey>(
+    data: &mut [K],
+    cost: &CostModel,
+    digit_bits: u32,
+) -> (Resolved, PlanChoice) {
+    let profile = InputProfile::sample(data, digit_bits);
+    let n = data.len();
+    let choice = |chosen: Choice, predicted_ms: f64| PlanChoice {
+        chosen,
+        n,
+        predicted_ms,
+        actual_ms: 0.0,
+        planned_passes: profile.planned_passes,
+        duplicate_density: profile.duplicate_density(),
+    };
+    // The verify scans abort at the first violation, so a wrong hint
+    // costs O(prefix), not O(n).
+    if profile.looks_sorted() && data.windows(2).all(|w| w[0].key_le(&w[1])) {
+        return (
+            Resolved::Done,
+            choice(Choice::EarlyExitSorted, cost.predict_verify_ms(n)),
+        );
+    }
+    if profile.looks_reverse_sorted() && data.windows(2).all(|w| w[1].key_le(&w[0])) {
+        data.reverse();
+        return (
+            Resolved::Done,
+            choice(Choice::EarlyExitReverse, cost.predict_reverse_ms(n)),
+        );
+    }
+    let (kernel, predicted_ms) = cost.decide(&profile);
+    let chosen = match kernel {
+        KernelKind::Bitonic => Choice::Comparison,
+        _ => Choice::Radix,
+    };
+    (Resolved::Run(kernel), choice(chosen, predicted_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Record;
+
+    fn scrambled(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect()
+    }
+
+    #[test]
+    fn profile_detects_direction_and_duplicates() {
+        let sorted: Vec<u32> = (0..50_000).collect();
+        let p = InputProfile::sample(&sorted, plan::DEFAULT_DIGIT_BITS);
+        assert!(p.looks_sorted());
+        assert!(!p.looks_reverse_sorted());
+        assert!(p.duplicate_density() < 0.01);
+
+        let reversed: Vec<u32> = (0..50_000).rev().collect();
+        let p = InputProfile::sample(&reversed, plan::DEFAULT_DIGIT_BITS);
+        assert!(!p.looks_sorted());
+        assert!(p.looks_reverse_sorted());
+
+        let constant = vec![42u32; 50_000];
+        let p = InputProfile::sample(&constant, plan::DEFAULT_DIGIT_BITS);
+        // All-equal counts as sorted (and never as reverse sorted).
+        assert!(p.looks_sorted());
+        assert!(!p.looks_reverse_sorted());
+        assert!((p.duplicate_density() - 1.0).abs() < 1e-9);
+        assert_eq!(p.planned_passes, 0);
+
+        let random = scrambled(50_000);
+        let p = InputProfile::sample(&random, plan::DEFAULT_DIGIT_BITS);
+        assert!(!p.looks_sorted());
+        assert!(!p.looks_reverse_sorted());
+        assert_eq!(p.planned_passes, 3);
+        assert!(p.varying_bits > 24);
+    }
+
+    #[test]
+    fn profile_handles_degenerate_sizes() {
+        for n in [0usize, 1, 2, 3, 127, 128, 129] {
+            let data: Vec<u32> = (0..n as u32).collect();
+            let p = InputProfile::sample(&data, plan::DEFAULT_DIGIT_BITS);
+            assert_eq!(p.n, n);
+            assert!(p.looks_sorted(), "n={n}");
+            assert!(p.sampled <= n.max(1));
+        }
+    }
+
+    #[test]
+    fn cost_model_json_round_trips() {
+        let m = CostModel {
+            radix_ns_per_key_pass: 3.25,
+            ..Default::default()
+        };
+        let text = m.to_json().to_string_pretty();
+        let back = CostModel::from_json(&text).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn cost_model_rejects_bad_input() {
+        // Unknown fields are typos, not extensions.
+        assert!(CostModel::from_json(r#"{"version":1,"scan_ns":1.0}"#).is_err());
+        // Version gate.
+        assert!(CostModel::from_json(r#"{"version":2}"#).is_err());
+        assert!(CostModel::from_json(r#"{"scan_ns_per_key":1.0}"#).is_err());
+        // Values must be finite non-negative numbers.
+        assert!(CostModel::from_json(r#"{"version":1,"scan_ns_per_key":-1}"#).is_err());
+        assert!(CostModel::from_json(r#"{"version":1,"scan_ns_per_key":"fast"}"#).is_err());
+        // Not an object / not JSON.
+        assert!(CostModel::from_json("[1,2]").is_err());
+        assert!(CostModel::from_json("{nope").is_err());
+        // Partial calibration keeps defaults for the rest.
+        let m = CostModel::from_json(r#"{"version":1,"scan_ns_per_key":9.5}"#).unwrap();
+        assert_eq!(m.scan_ns_per_key, 9.5);
+        assert_eq!(
+            m.radix_ns_per_key_pass,
+            CostModel::default().radix_ns_per_key_pass
+        );
+    }
+
+    #[test]
+    fn cost_model_resolve_empty_is_default() {
+        assert_eq!(CostModel::resolve("").unwrap(), CostModel::default());
+        assert!(CostModel::resolve("/nonexistent/cost.json").is_err());
+    }
+
+    #[test]
+    fn decide_prefers_comparison_for_tiny_and_radix_for_large() {
+        let m = CostModel::default();
+        let tiny = InputProfile::sample(&scrambled(200), plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(m.decide(&tiny).0, KernelKind::Bitonic);
+        let large = InputProfile::sample(&scrambled(4_000_000), plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(m.decide(&large).0, KernelKind::Radix);
+    }
+
+    #[test]
+    fn resolve_early_exits_sorted_and_reverse() {
+        let m = CostModel::default();
+        let mut sorted: Vec<u32> = (0..10_000).collect();
+        let (r, c) = resolve(&mut sorted, &m, plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(r, Resolved::Done);
+        assert_eq!(c.chosen, Choice::EarlyExitSorted);
+        assert!(crate::is_sorted(&sorted));
+
+        let mut reversed: Vec<u32> = (0..10_000).rev().collect();
+        let (r, c) = resolve(&mut reversed, &m, plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(r, Resolved::Done);
+        assert_eq!(c.chosen, Choice::EarlyExitReverse);
+        assert!(crate::is_sorted(&reversed));
+
+        // Non-increasing with duplicate runs still reverses correctly:
+        // equal keys are bit-identical, so any sorted arrangement is
+        // the unique sorted byte sequence.
+        let mut dups: Vec<u32> = (0..10_000u32).rev().map(|x| x / 7).collect();
+        let input = dups.clone();
+        let (r, _) = resolve(&mut dups, &m, plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(r, Resolved::Done);
+        assert!(crate::is_sorted_permutation(&input, &dups));
+    }
+
+    #[test]
+    fn resolve_rejects_false_hints() {
+        let m = CostModel::default();
+        // Sorted except one off-grid violation: the hint says sorted,
+        // the verify scan must catch it and fall through to a kernel.
+        let mut nearly: Vec<u32> = (0..100_000).collect();
+        nearly.swap(11, 12);
+        let before = nearly.clone();
+        let (r, c) = resolve(&mut nearly, &m, plan::DEFAULT_DIGIT_BITS);
+        assert!(matches!(r, Resolved::Run(_)));
+        assert_ne!(c.chosen, Choice::EarlyExitSorted);
+        assert_eq!(nearly, before, "resolve must not mutate on Run");
+    }
+
+    #[test]
+    fn resolve_never_reverses_records_with_duplicate_keys() {
+        let m = CostModel::default();
+        // Keys descend with duplicates; record indices ascend. A naive
+        // reversal would flip the tie order — the record total order
+        // (key, idx) makes the run non-monotonic, forcing a full sort.
+        let recs: Vec<Record<u32>> = (0..1000u32)
+            .map(|i| Record {
+                key: (1000 - i) / 4,
+                idx: i,
+            })
+            .collect();
+        let mut data = recs.clone();
+        let (r, _) = resolve(&mut data, &m, plan::DEFAULT_DIGIT_BITS);
+        assert!(matches!(r, Resolved::Run(_)), "must not early-exit");
+        assert_eq!(data, recs);
+
+        // Strictly descending records reverse safely.
+        let mut strict: Vec<Record<u32>> = (0..1000u32)
+            .map(|i| Record {
+                key: 1000 - i,
+                idx: i,
+            })
+            .collect();
+        let (r, _) = resolve(&mut strict, &m, plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(r, Resolved::Done);
+        assert!(crate::is_sorted(&strict));
+    }
+
+    #[test]
+    fn resolve_handles_empty_and_single() {
+        let m = CostModel::default();
+        let mut empty: Vec<u32> = vec![];
+        let (r, c) = resolve(&mut empty, &m, plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(r, Resolved::Done);
+        assert_eq!(c.chosen, Choice::EarlyExitSorted);
+        let mut one = vec![7u32];
+        let (r, _) = resolve(&mut one, &m, plan::DEFAULT_DIGIT_BITS);
+        assert_eq!(r, Resolved::Done);
+    }
+
+    #[test]
+    fn choice_log_accumulates_and_reports_last() {
+        let log = ChoiceLog::default();
+        assert_eq!(log.totals(), PlanTotals::default());
+        assert_eq!(log.last(), None);
+        let c = PlanChoice {
+            chosen: Choice::Radix,
+            n: 100,
+            predicted_ms: 1.0,
+            actual_ms: 2.0,
+            planned_passes: 3,
+            duplicate_density: 0.0,
+        };
+        log.record(&c);
+        log.record(&PlanChoice {
+            chosen: Choice::EarlyExitSorted,
+            ..c
+        });
+        let t = log.totals();
+        assert_eq!(t.requests, 2);
+        assert_eq!(t.chose_radix, 1);
+        assert_eq!(t.early_exit_sorted, 1);
+        assert_eq!(log.last().unwrap().chosen, Choice::EarlyExitSorted);
+    }
+
+    #[test]
+    fn plan_choice_summary_is_parseable() {
+        let c = PlanChoice {
+            chosen: Choice::EarlyExitReverse,
+            n: 4096,
+            predicted_ms: 0.5,
+            actual_ms: 0.75,
+            planned_passes: 0,
+            duplicate_density: 0.25,
+        };
+        let s = c.summary();
+        assert!(s.contains("choice=early_exit_reverse"));
+        assert!(s.contains("n=4096"));
+        assert!(s.contains("pred_ms=0.500"));
+        assert!(s.contains("act_ms=0.750"));
+    }
+}

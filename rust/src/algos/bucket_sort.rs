@@ -251,7 +251,7 @@ impl BucketSort {
         let digit_bits = ctx.digit_bits.clamp(plan::MIN_DIGIT_BITS, plan::MAX_DIGIT_BITS);
         let prep_radix = 1usize << digit_bits;
         let mut prep_counts = match ctx.kernel {
-            KernelKind::Radix => Some(ctx.arena.take_empty::<usize>()),
+            KernelKind::Radix | KernelKind::Adaptive => Some(ctx.arena.take_empty::<usize>()),
             KernelKind::Bitonic => None,
         };
         match prep_counts.as_mut() {
@@ -461,7 +461,9 @@ fn sort_bucket<K: SortKey>(b: &mut [K], cap: usize, ctx: &ExecContext, prebuilt:
         return;
     }
     match ctx.kernel {
-        KernelKind::Radix => {
+        // Adaptive selection happens per request, not per bucket — the
+        // executed bucket kernel is the planned radix path.
+        KernelKind::Radix | KernelKind::Adaptive => {
             let mut scratch = ctx.arena.take_empty::<K>();
             let mut counts = ctx.arena.take_empty::<usize>();
             plan::planned_sort(b, &mut scratch, &mut counts, ctx.digit_bits, prebuilt);

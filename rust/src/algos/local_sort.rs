@@ -102,7 +102,10 @@ fn sort_tile<K: SortKey>(t: &mut [K], ctx: &ExecContext) {
             let ces = bitonic::sort_slice(t);
             debug_assert_eq!(ces, bitonic::ce_count(t.len()));
         }
-        KernelKind::Radix => {
+        // The adaptive front-end decides at whole-request granularity;
+        // inside a tile it executes as the radix kernel so the
+        // simulated engines stay kernel-invariant.
+        KernelKind::Radix | KernelKind::Adaptive => {
             let mut scratch = ctx.arena.take_empty::<K>();
             let mut counts = ctx.arena.take_empty::<usize>();
             plan::planned_sort(t, &mut scratch, &mut counts, ctx.digit_bits, None);

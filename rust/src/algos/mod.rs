@@ -16,11 +16,13 @@
 //! | [`relocation`] | Step 8 (coalesced bucket move) |
 //! | [`bucket_sort`] | Algorithm 1 end-to-end |
 //! | [`plan`] | execution planner: wide-digit pass schedules for the executed kernels (beyond the paper) |
+//! | [`adaptive`] | cost-model-driven kernel selection + sorted/reverse early exits (beyond the paper) |
 //! | [`sharded`] | Algorithm 1 sharded across a multi-GPU pool (beyond the paper) |
 //! | [`randomized`] | Leischner et al. randomized sample sort [9] |
 //! | [`thrust_merge`] | Satish et al. Thrust Merge [14] |
 //! | [`radix`] | Satish et al. integer radix sort [14] |
 
+pub mod adaptive;
 pub mod bitonic;
 pub mod bucket_sort;
 pub mod indexing;
@@ -60,8 +62,15 @@ pub enum KernelKind {
     /// [`crate::SortKey::radix_digit`] digits ([`plan::planned_sort`]):
     /// O(n·⌈W·8/digit_bits⌉) passes with constant digits elided, the
     /// executed default since PR 4 (byte-wise) / PR 5 (planned).
-    #[default]
     Radix,
+    /// Cost-model-driven selection per request ([`adaptive`]): profile
+    /// the input, take the sorted/reverse early exit when it verifies,
+    /// otherwise run whichever concrete kernel the model predicts
+    /// cheaper. The default since PR 7. On the simulated tile/bucket
+    /// paths it executes exactly as [`KernelKind::Radix`] (the
+    /// front-end lives on whole-request boundaries, not inside tiles).
+    #[default]
+    Adaptive,
 }
 
 impl KernelKind {
@@ -70,6 +79,7 @@ impl KernelKind {
         match s.to_ascii_lowercase().as_str() {
             "bitonic" | "comparison" => Some(KernelKind::Bitonic),
             "radix" | "lsd" => Some(KernelKind::Radix),
+            "adaptive" | "auto" => Some(KernelKind::Adaptive),
             _ => None,
         }
     }
@@ -79,6 +89,7 @@ impl KernelKind {
         match self {
             KernelKind::Bitonic => "bitonic",
             KernelKind::Radix => "radix",
+            KernelKind::Adaptive => "adaptive",
         }
     }
 }
@@ -113,6 +124,12 @@ pub struct ExecContext {
     /// kernel. Affects wall time only — outputs and ledgers are
     /// digit-width-invariant.
     pub digit_bits: u32,
+    /// Cost coefficients the [`KernelKind::Adaptive`] front-end
+    /// consults (built-in defaults unless overridden via
+    /// `config.cost_model` / `--cost-model`). Ignored by the concrete
+    /// kernels. Affects wall time only — every candidate path produces
+    /// the identical bytes.
+    pub cost: adaptive::CostModel,
 }
 
 impl Default for ExecContext {
@@ -130,12 +147,19 @@ impl ExecContext {
             workers,
             kernel,
             digit_bits: plan::DEFAULT_DIGIT_BITS,
+            cost: adaptive::CostModel::default(),
         }
     }
 
     /// Override the planner digit width (builder style).
     pub fn with_digit_bits(mut self, digit_bits: u32) -> Self {
         self.digit_bits = digit_bits;
+        self
+    }
+
+    /// Override the adaptive cost model (builder style).
+    pub fn with_cost_model(mut self, cost: adaptive::CostModel) -> Self {
+        self.cost = cost;
         self
     }
 
@@ -314,13 +338,14 @@ mod tests {
 
     #[test]
     fn kernel_kind_parse_round_trips() {
-        for k in [KernelKind::Bitonic, KernelKind::Radix] {
+        for k in [KernelKind::Bitonic, KernelKind::Radix, KernelKind::Adaptive] {
             assert_eq!(KernelKind::parse(k.id()), Some(k));
         }
         assert_eq!(KernelKind::parse("LSD"), Some(KernelKind::Radix));
         assert_eq!(KernelKind::parse("comparison"), Some(KernelKind::Bitonic));
+        assert_eq!(KernelKind::parse("auto"), Some(KernelKind::Adaptive));
         assert_eq!(KernelKind::parse("quick"), None);
-        assert_eq!(KernelKind::default(), KernelKind::Radix);
+        assert_eq!(KernelKind::default(), KernelKind::Adaptive);
     }
 
     #[test]
@@ -376,6 +401,16 @@ mod tests {
         assert!(
             (ms_a - ms_b).abs() < 1e-9,
             "estimate must not depend on kernel: {ms_a} vs {ms_b}"
+        );
+        let mut c = input.clone();
+        let mut sim_c = GpuSim::new(GpuModel::Gtx285_2G.spec());
+        let ms_c = Algorithm::BucketSort
+            .run_in(&mut c, &mut sim_c, &ExecContext::new(KernelKind::Adaptive, 2))
+            .unwrap();
+        assert_eq!(a, c, "adaptive kernel must not change the bytes");
+        assert!(
+            (ms_a - ms_c).abs() < 1e-9,
+            "estimate must not depend on the adaptive kernel: {ms_a} vs {ms_c}"
         );
     }
 

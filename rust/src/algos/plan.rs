@@ -61,6 +61,13 @@ pub const MAX_DIGIT_BITS: u32 = 16;
 /// Elements sampled by the occupancy sketch.
 const SKETCH_SAMPLES: usize = 128;
 
+/// Below this length the sketch scans exactly instead of sampling: a
+/// tiny input can't amortize a wrong hint, and at these sizes the
+/// sample grid covers most of the data anyway, so the exact scan costs
+/// nearly the same and can never produce a bogus "everything constant"
+/// reading.
+const SKETCH_EXACT_MAX: usize = 256;
+
 /// Widest element the occupancy mask covers ([`crate::Record`] over
 /// `Segmented<u64>` is 16 bytes).
 const MAX_WIDTH_BYTES: usize = 16;
@@ -107,12 +114,15 @@ impl Occupancy {
     }
 
     /// Sampled occupancy: up to [`SKETCH_SAMPLES`] equidistant
-    /// elements. O(1) in the input size.
+    /// elements. O(1) in the input size. Inputs of [`SKETCH_EXACT_MAX`]
+    /// elements or fewer take the exact [`Occupancy::scan`] instead —
+    /// sampling a tiny run saves nothing and risks a misleadingly
+    /// constant-looking hint.
     pub fn sketch<K: SortKey>(data: &[K]) -> Occupancy {
-        let mut occ = Occupancy::empty();
-        if data.is_empty() {
-            return occ;
+        if data.len() <= SKETCH_EXACT_MAX {
+            return Occupancy::scan(data);
         }
+        let mut occ = Occupancy::empty();
         let stride = (data.len() / SKETCH_SAMPLES).max(1);
         for x in data.iter().step_by(stride) {
             occ.accumulate(*x);
@@ -136,6 +146,15 @@ impl Occupancy {
             let (byte, bit) = (b as usize / 8, b % 8);
             byte < MAX_WIDTH_BYTES && (self.or[byte] ^ self.and[byte]) >> bit & 1 == 1
         })
+    }
+
+    /// Bit positions within the first `width_bytes` bytes proven to
+    /// differ across the accumulated elements — the adaptive front-end's
+    /// bit-occupancy summary.
+    pub fn varying_bits(&self, width_bytes: usize) -> u32 {
+        (0..width_bytes.min(MAX_WIDTH_BYTES))
+            .map(|i| (self.or[i] ^ self.and[i]).count_ones())
+            .sum()
     }
 }
 
@@ -420,6 +439,31 @@ mod tests {
         let mut expect = keys;
         expect.sort_unstable();
         assert_eq!(sorted, expect);
+    }
+
+    #[test]
+    fn tiny_sketch_is_exact() {
+        // Below SKETCH_EXACT_MAX the sketch must equal the full scan:
+        // a sampled sketch of a tiny input could otherwise report a
+        // bogus "everything constant" hint.
+        for n in [0usize, 1, 2, 100, 255, 256] {
+            let data: Vec<u32> = (0..n as u32).map(|x| x.wrapping_mul(2654435761)).collect();
+            assert_eq!(Occupancy::sketch(&data), Occupancy::scan(&data), "n={n}");
+        }
+        // Just above the threshold the sampled path resumes (and stays
+        // a sound over-approximation of constancy: proven-varying bits
+        // are a subset of the scan's).
+        let data: Vec<u32> = (0..1000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        let (sk, sc) = (Occupancy::sketch(&data), Occupancy::scan(&data));
+        assert!(sk.varying_bits(4) <= sc.varying_bits(4));
+    }
+
+    #[test]
+    fn varying_bits_counts_proven_positions() {
+        let occ = Occupancy::scan(&[0u32, 0b1011]);
+        assert_eq!(occ.varying_bits(4), 3);
+        assert_eq!(Occupancy::scan(&[7u32; 50]).varying_bits(4), 0);
+        assert_eq!(Occupancy::scan(&[0u32, u32::MAX]).varying_bits(4), 32);
     }
 
     #[test]

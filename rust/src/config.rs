@@ -164,10 +164,15 @@ pub struct ServiceConfig {
     /// Algorithm-1 parameters (tile, s).
     pub sort: BucketSortParams,
     /// Executed tile/bucket kernel for every engine's hot path
-    /// (`radix` by default; `bitonic` restores the paper's comparison
-    /// path — outputs are byte-identical either way, see
-    /// [`KernelKind`]).
+    /// (`adaptive` by default — the cost-model front-end picks per
+    /// request; `radix` / `bitonic` pin a static kernel. Outputs are
+    /// byte-identical in every case, see [`KernelKind`]).
     pub kernel: KernelKind,
+    /// Path to a calibrated cost-model JSON for the adaptive front-end
+    /// (`""` = the built-in defaults; see
+    /// [`crate::algos::adaptive::CostModel`]). Exposed as
+    /// `--cost-model`.
+    pub cost_model: String,
     /// Digit width of the planned radix kernel, in bits (1–16; default
     /// 11 → 2048 counting bins, ⌈32/11⌉ = 3 passes over u32 keys).
     /// Exposed as `--digit-bits`; wall time only, never bytes.
@@ -194,6 +199,7 @@ impl Default for ServiceConfig {
             devices: DevicePool::DEFAULT_DEVICES.to_vec(),
             sort: BucketSortParams::default(),
             kernel: KernelKind::default(),
+            cost_model: String::new(),
             digit_bits: crate::algos::plan::DEFAULT_DIGIT_BITS,
             native: NativeParams::default(),
             batch: BatchConfig::default(),
@@ -263,6 +269,9 @@ impl ServiceConfig {
                     cfg.kernel = KernelKind::parse(&s)
                         .ok_or_else(|| Error::Config(format!("unknown kernel {s:?}")))?;
                 }
+                "cost_model" => {
+                    cfg.cost_model = str_field(val, "cost_model")?;
+                }
                 "digit_bits" => {
                     let v = val
                         .as_usize()
@@ -331,6 +340,9 @@ impl ServiceConfig {
         self.sort.validate()?;
         self.net.validate()?;
         crate::algos::plan::validate_digit_bits(self.digit_bits)?;
+        // A configured cost-model file must load (exist, parse, carry
+        // the right version) — fail at config time, not mid-request.
+        crate::algos::adaptive::CostModel::resolve(&self.cost_model)?;
         if self.workers == 0 {
             return Err(Error::Config("workers must be at least 1".into()));
         }
@@ -377,6 +389,7 @@ impl ServiceConfig {
                 ]),
             ),
             ("kernel", Json::str(self.kernel.id())),
+            ("cost_model", Json::str(self.cost_model.clone())),
             ("digit_bits", Json::num(self.digit_bits as f64)),
             (
                 "native",
@@ -480,7 +493,8 @@ mod tests {
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.sort, BucketSortParams::default());
         assert_eq!(cfg.batch, BatchConfig::default());
-        assert_eq!(cfg.kernel, KernelKind::Radix);
+        assert_eq!(cfg.kernel, KernelKind::Adaptive);
+        assert_eq!(cfg.cost_model, "");
     }
 
     #[test]
@@ -488,8 +502,34 @@ mod tests {
         let cfg = ServiceConfig::from_json(r#"{"kernel":"bitonic"}"#).unwrap();
         assert_eq!(cfg.kernel, KernelKind::Bitonic);
         assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        let auto = ServiceConfig::from_json(r#"{"kernel":"auto"}"#).unwrap();
+        assert_eq!(auto.kernel, KernelKind::Adaptive);
         assert!(ServiceConfig::from_json(r#"{"kernel":"quick"}"#).is_err());
         assert!(ServiceConfig::from_json(r#"{"kernel":3}"#).is_err());
+    }
+
+    #[test]
+    fn cost_model_field_roundtrips_and_validates() {
+        // Empty path (the default) round-trips and means built-ins.
+        let cfg = ServiceConfig::from_json(r#"{"cost_model":""}"#).unwrap();
+        assert_eq!(cfg.cost_model, "");
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // A missing file is rejected at config time.
+        assert!(
+            ServiceConfig::from_json(r#"{"cost_model":"/nonexistent/model.json"}"#).is_err()
+        );
+        // A valid calibration file is accepted and round-trips.
+        let dir = std::env::temp_dir().join(format!("gbs_cm_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.json");
+        std::fs::write(&p, crate::algos::adaptive::CostModel::default().to_json().to_string_pretty())
+            .unwrap();
+        let loaded =
+            ServiceConfig::from_json(&format!(r#"{{"cost_model":"{}"}}"#, p.display()))
+                .unwrap();
+        assert_eq!(loaded.cost_model, p.display().to_string());
+        assert_eq!(ServiceConfig::from_json(&loaded.to_json()).unwrap(), loaded);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! scheduler applies the requested direction afterwards, uniformly.
 
 use super::coalesce::{self, CoalesceStats};
+use crate::algos::adaptive;
 use crate::algos::bucket_sort::{BucketSort, BucketSortParams};
 use crate::algos::sharded::{ShardedSort, ShardedSortParams};
 use crate::algos::ExecContext;
@@ -59,6 +60,21 @@ pub trait SortEngine {
     fn coalesced_totals(&self) -> Option<CoalesceStats> {
         None
     }
+
+    /// Lifetime totals of the adaptive front-end's plan decisions, if
+    /// this engine runs the front-end at all (today: the native engine
+    /// under [`crate::KernelKind::Adaptive`]). The scheduler polls this
+    /// after each batch to export `adaptive_*` metrics.
+    fn plan_totals(&self) -> Option<adaptive::PlanTotals> {
+        None
+    }
+
+    /// The most recent [`adaptive::PlanChoice`] this engine recorded,
+    /// if any — surfaced in the service response tag on request (see
+    /// the scheduler's `#plan` tag suffix).
+    fn last_plan_choice(&self) -> Option<adaptive::PlanChoice> {
+        None
+    }
 }
 
 pub use super::request::JobData;
@@ -79,7 +95,9 @@ impl NativeSortEngine {
     /// arena warm across batches), so repeated batches of similar
     /// shapes allocate nothing.
     pub fn new(cfg: &ServiceConfig) -> Result<Self> {
-        let ctx = ExecContext::new(cfg.kernel, 0).with_digit_bits(cfg.digit_bits);
+        let ctx = ExecContext::new(cfg.kernel, 0)
+            .with_digit_bits(cfg.digit_bits)
+            .with_cost_model(adaptive::CostModel::resolve(&cfg.cost_model)?);
         Ok(NativeSortEngine {
             engine: NativeEngine::with_context(cfg.native, ctx)?,
             coalesce_max_keys: cfg.batch.coalesce_max_keys,
@@ -117,6 +135,14 @@ impl SortEngine for NativeSortEngine {
     fn coalesced_totals(&self) -> Option<CoalesceStats> {
         Some(self.coalesced)
     }
+
+    fn plan_totals(&self) -> Option<adaptive::PlanTotals> {
+        Some(self.engine.plan_totals())
+    }
+
+    fn last_plan_choice(&self) -> Option<adaptive::PlanChoice> {
+        self.engine.last_plan_choice()
+    }
 }
 
 /// Simulated-GPU backend: Algorithm 1 with full traffic accounting and
@@ -138,6 +164,7 @@ impl SimSortEngine {
         let mut engine = Self::from_parts(cfg.device.spec(), cfg.sort)?;
         engine.ctx.kernel = cfg.kernel;
         engine.ctx.digit_bits = cfg.digit_bits;
+        engine.ctx.cost = adaptive::CostModel::resolve(&cfg.cost_model)?;
         Ok(engine)
     }
 
@@ -223,6 +250,7 @@ impl ShardedSortEngine {
         )?;
         engine.ctx.kernel = cfg.kernel;
         engine.ctx.digit_bits = cfg.digit_bits;
+        engine.ctx.cost = adaptive::CostModel::resolve(&cfg.cost_model)?;
         Ok(engine)
     }
 
@@ -245,19 +273,22 @@ impl ShardedSortEngine {
 
     /// Build over devices leased from a shared registry — the
     /// multi-worker path, where each scheduler worker holds a disjoint
-    /// subset of the configured pool. `kernel` and `digit_bits` are the
-    /// executed tile/bucket kernel selection (`cfg.kernel` /
-    /// `cfg.digit_bits`), passed explicitly so the lease path cannot
-    /// silently diverge from [`ShardedSortEngine::new`].
+    /// subset of the configured pool. `kernel`, `digit_bits` and `cost`
+    /// are the executed tile/bucket kernel selection (`cfg.kernel` /
+    /// `cfg.digit_bits` / the resolved `cfg.cost_model`), passed
+    /// explicitly so the lease path cannot silently diverge from
+    /// [`ShardedSortEngine::new`].
     pub fn with_lease(
         lease: DeviceLease,
         params: ShardedSortParams,
         kernel: crate::KernelKind,
         digit_bits: u32,
+        cost: adaptive::CostModel,
     ) -> Result<Self> {
         let mut engine = Self::from_parts(lease.models().to_vec(), params)?;
         engine.ctx.kernel = kernel;
         engine.ctx.digit_bits = digit_bits;
+        engine.ctx.cost = cost;
         engine._lease = Some(lease);
         Ok(engine)
     }
@@ -501,6 +532,7 @@ pub fn build_worker_engine(
                 },
                 cfg.kernel,
                 cfg.digit_bits,
+                adaptive::CostModel::resolve(&cfg.cost_model)?,
             )?))
         }
         _ => build_engine(cfg),
@@ -598,6 +630,17 @@ mod tests {
             ));
         }
         assert_eq!(e.kind(), EngineKind::Native);
+        // The default kernel is Adaptive, so the front-end ran (the
+        // small same-shaped jobs coalesce into one segment-tagged
+        // invocation, so the totals count composed units, not jobs) and
+        // the trait surface exposes its decisions.
+        let totals = e.plan_totals().expect("native engine reports plan totals");
+        assert!(totals.requests >= 1, "{totals:?}");
+        assert!(e.last_plan_choice().is_some());
+        // Engines without a front-end keep the default-None surface.
+        let sim = SimSortEngine::new(&cfg).unwrap();
+        assert!(sim.plan_totals().is_none());
+        assert!(sim.last_plan_choice().is_none());
     }
 
     #[test]
@@ -838,6 +881,7 @@ mod tests {
             ShardedSortParams::default(),
             crate::KernelKind::Bitonic,
             13,
+            adaptive::CostModel::default(),
         )
         .unwrap();
         assert_eq!(leased.ctx.kernel, crate::KernelKind::Bitonic);

@@ -292,6 +292,8 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
     // the shared metrics after every batch (the engine itself has no
     // metrics handle).
     let mut coalesced_seen = engine.coalesced_totals().unwrap_or_default();
+    // Same delta scheme for the adaptive front-end's plan decisions.
+    let mut plan_seen = engine.plan_totals().unwrap_or_default();
 
     loop {
         let batch = {
@@ -324,6 +326,30 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
                     .metrics
                     .incr("coalesced_groups", totals.groups - coalesced_seen.groups);
                 coalesced_seen = totals;
+            }
+        }
+
+        if let Some(totals) = engine.plan_totals() {
+            if totals != plan_seen {
+                let m = &shared.metrics;
+                m.incr("adaptive_requests", totals.requests - plan_seen.requests);
+                m.incr(
+                    "adaptive_early_exit_sorted",
+                    totals.early_exit_sorted - plan_seen.early_exit_sorted,
+                );
+                m.incr(
+                    "adaptive_early_exit_reverse",
+                    totals.early_exit_reverse - plan_seen.early_exit_reverse,
+                );
+                m.incr(
+                    "adaptive_chose_radix",
+                    totals.chose_radix - plan_seen.chose_radix,
+                );
+                m.incr(
+                    "adaptive_chose_comparison",
+                    totals.chose_comparison - plan_seen.chose_comparison,
+                );
+                plan_seen = totals;
             }
         }
 
@@ -409,11 +435,25 @@ fn execute_batch(
                 }
                 metrics.incr("requests_completed", 1);
                 metrics.incr("keys_sorted", job.keys.len() as u64);
+                // Decision observability is opt-in per request: a tag
+                // ending in `#plan` gets the engine's latest
+                // [`crate::algos::adaptive::PlanChoice`] summary
+                // appended (engines without a front-end echo the tag
+                // unchanged, like every other tag).
+                let mut tag = req.request.tag;
+                if let Some(t) = tag.as_mut() {
+                    if t.ends_with("#plan") {
+                        if let Some(choice) = engine.last_plan_choice() {
+                            t.push(';');
+                            t.push_str(&choice.summary());
+                        }
+                    }
+                }
                 Ok(SortResponse {
                     id: req.id,
                     keys: job.keys,
                     payload: job.payload,
-                    tag: req.request.tag,
+                    tag,
                     engine: engine.kind(),
                     worker,
                     batch_size,
@@ -520,6 +560,94 @@ mod tests {
             .map(|h| h.count)
             .sum();
         assert_eq!(busy, 10);
+    }
+
+    #[test]
+    fn plan_totals_flow_to_metrics_and_plan_tags() {
+        use crate::algos::adaptive::{Choice, PlanChoice, PlanTotals};
+        // An engine with an adaptive front-end: totals grow per job,
+        // the last choice is available for tag echoing.
+        struct PlannyEngine {
+            totals: PlanTotals,
+        }
+        impl SortEngine for PlannyEngine {
+            fn kind(&self) -> EngineKind {
+                EngineKind::Native
+            }
+            fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
+                self.totals.requests += jobs.len() as u64;
+                self.totals.chose_radix += jobs.len() as u64;
+                jobs.into_iter()
+                    .map(|mut j| {
+                        if let KeyData::U32(v) = &mut j.keys {
+                            v.sort_unstable();
+                        }
+                        Ok(j)
+                    })
+                    .collect()
+            }
+            fn plan_totals(&self) -> Option<PlanTotals> {
+                Some(self.totals)
+            }
+            fn last_plan_choice(&self) -> Option<PlanChoice> {
+                (self.totals.requests > 0).then_some(PlanChoice {
+                    chosen: Choice::Radix,
+                    n: 3,
+                    predicted_ms: 0.5,
+                    actual_ms: 0.4,
+                    planned_passes: 3,
+                    duplicate_density: 0.0,
+                })
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            &test_cfg(1),
+            Arc::new(|_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(PlannyEngine {
+                    totals: PlanTotals::default(),
+                }) as Box<dyn SortEngine>)
+            }),
+            metrics.clone(),
+            Box::new(|| {}),
+        )
+        .unwrap();
+
+        let tagged = |tag: &str| {
+            let (tx, rx) = mpsc::channel();
+            let batch = Batch {
+                requests: vec![PendingRequest {
+                    id: 1,
+                    request: SortRequest::tagged(vec![3u32, 1, 2], tag),
+                    admitted_at: Instant::now(),
+                    respond_to: tx,
+                }],
+                total_keys: 3,
+            };
+            (batch, rx)
+        };
+        // A `#plan` tag gets the choice summary appended…
+        let (batch, rx_plan) = tagged("probe#plan");
+        scheduler.dispatch_blocking(batch).unwrap();
+        // …any other tag is echoed untouched.
+        let (batch, rx_other) = tagged("probe");
+        scheduler.dispatch_blocking(batch).unwrap();
+        scheduler.shutdown();
+
+        let out = rx_plan.recv().unwrap().unwrap();
+        let tag = out.tag.unwrap();
+        assert!(
+            tag.starts_with("probe#plan;choice=radix;n=3;"),
+            "unexpected tag {tag:?}"
+        );
+        assert_eq!(
+            rx_other.recv().unwrap().unwrap().tag.as_deref(),
+            Some("probe")
+        );
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counters["adaptive_requests"], 2);
+        assert_eq!(snap.counters["adaptive_chose_radix"], 2);
+        assert_eq!(snap.counters["adaptive_early_exit_sorted"], 0);
     }
 
     #[test]

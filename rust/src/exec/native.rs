@@ -17,7 +17,7 @@
 //! (≤ 2n/s + chunking slack), so the critical path is balanced without
 //! work stealing.
 
-use crate::algos::{plan, ExecContext, KernelKind};
+use crate::algos::{adaptive, plan, ExecContext, KernelKind};
 use crate::error::Result;
 use crate::key::Record;
 use crate::util::pool;
@@ -115,6 +115,10 @@ pub struct NativeEngine {
     /// Held for the engine's lifetime, so repeated sorts of similar
     /// shapes allocate nothing.
     ctx: ExecContext,
+    /// Adaptive decisions taken ([`KernelKind::Adaptive`] only):
+    /// lifetime totals for metrics plus the latest choice for response
+    /// tagging.
+    choices: adaptive::ChoiceLog,
 }
 
 impl NativeEngine {
@@ -137,6 +141,7 @@ impl NativeEngine {
             params,
             workers,
             ctx,
+            choices: adaptive::ChoiceLog::default(),
         })
     }
 
@@ -155,8 +160,60 @@ impl NativeEngine {
         self.workers
     }
 
+    /// Lifetime totals of adaptive decisions (all zero unless the
+    /// engine runs [`KernelKind::Adaptive`]).
+    pub fn plan_totals(&self) -> adaptive::PlanTotals {
+        self.choices.totals()
+    }
+
+    /// The most recent adaptive decision, if any.
+    pub fn last_plan_choice(&self) -> Option<adaptive::PlanChoice> {
+        self.choices.last()
+    }
+
     /// Sort `keys` in place (any [`SortKey`]; ordering by key bits).
+    ///
+    /// Under [`KernelKind::Adaptive`] the request first passes the
+    /// adaptive front-end: a verified-sorted input returns untouched, a
+    /// verified-reverse input is reversed in place, and everything else
+    /// runs whichever concrete kernel the context's cost model predicts
+    /// cheaper. Every candidate path produces identical bytes.
     pub fn sort<K: SortKey>(&self, keys: &mut [K]) -> NativeReport {
+        if self.ctx.kernel != KernelKind::Adaptive {
+            return self.sort_with(keys, &self.ctx);
+        }
+        let start = Instant::now();
+        let (resolved, mut choice) =
+            adaptive::resolve(keys, &self.ctx.cost, self.ctx.digit_bits);
+        let mut report = match resolved {
+            adaptive::Resolved::Done => NativeReport {
+                n: keys.len(),
+                chunks: 1,
+                buckets: 1,
+                phases: PhaseTimes {
+                    local_sort_ms: start.elapsed().as_secs_f64() * 1e3,
+                    ..Default::default()
+                },
+                wall_ms: 0.0,
+                max_bucket: keys.len(),
+            },
+            adaptive::Resolved::Run(kernel) => {
+                // The clone shares the arena (it is a handle): only the
+                // kernel selection changes for this request.
+                let mut ctx = self.ctx.clone();
+                ctx.kernel = kernel;
+                self.sort_with(keys, &ctx)
+            }
+        };
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        report.wall_ms = wall_ms;
+        choice.actual_ms = wall_ms;
+        self.choices.record(&choice);
+        report
+    }
+
+    /// Sort with an explicit (concrete-kernel) context.
+    fn sort_with<K: SortKey>(&self, keys: &mut [K], ctx: &ExecContext) -> NativeReport {
         let n = keys.len();
         let start = Instant::now();
         // With one worker the PSRS machinery is pure overhead (an extra
@@ -164,7 +221,7 @@ impl NativeEngine {
         // kernel (§Perf).
         if n <= self.params.sequential_cutoff || self.workers <= 1 {
             let t0 = Instant::now();
-            sort_run(keys, &self.ctx);
+            sort_run(keys, ctx);
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             return NativeReport {
                 n,
@@ -178,7 +235,7 @@ impl NativeEngine {
                 max_bucket: n,
             };
         }
-        let report = self.sort_parallel(keys);
+        let report = self.sort_parallel(keys, ctx);
         NativeReport {
             wall_ms: start.elapsed().as_secs_f64() * 1e3,
             ..report
@@ -202,7 +259,7 @@ impl NativeEngine {
         Ok(report)
     }
 
-    fn sort_parallel<K: SortKey>(&self, keys: &mut [K]) -> NativeReport {
+    fn sort_parallel<K: SortKey>(&self, keys: &mut [K], ctx: &ExecContext) -> NativeReport {
         let n = keys.len();
         let workers = self.workers;
         let chunks = workers;
@@ -214,7 +271,6 @@ impl NativeEngine {
         // Steps 1–2: parallel chunk sorts with the selected kernel
         // (scratch per worker from the arena).
         let t0 = Instant::now();
-        let ctx = &self.ctx;
         pool::parallel_chunks_mut(keys, chunk_len, workers, |_, c| sort_run(c, ctx));
         phases.local_sort_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -272,7 +328,7 @@ impl NativeEngine {
         // output slice (the output buffer is arena-recycled, so the
         // steady state performs no allocation here).
         let t0 = Instant::now();
-        let mut out = self.ctx.arena.take(n, K::PAD);
+        let mut out = ctx.arena.take(n, K::PAD);
         {
             let mut slices: Vec<&mut [K]> = Vec::with_capacity(buckets);
             let mut rest: &mut [K] = out.as_mut_slice();
@@ -339,7 +395,10 @@ impl NativeEngine {
 /// would waste the CPU's branch predictor on O(n log² n) work).
 fn sort_run<K: SortKey>(keys: &mut [K], ctx: &ExecContext) {
     match ctx.kernel {
-        KernelKind::Radix => {
+        // Adaptive resolves to a concrete kernel at the request
+        // boundary (NativeEngine::sort); a run-level Adaptive context
+        // executes the radix default.
+        KernelKind::Radix | KernelKind::Adaptive => {
             let mut scratch = ctx.arena.take_empty::<K>();
             let mut counts = ctx.arena.take_empty::<usize>();
             plan::planned_sort(keys, &mut scratch, &mut counts, ctx.digit_bits, None);
@@ -455,7 +514,7 @@ mod tests {
         let input: Vec<Key> = (0..300_000u32).map(|x| x.wrapping_mul(2654435761) % 4096).collect();
         let payload: Vec<u64> = (0..input.len() as u64).collect();
         let mut reference: Option<(Vec<Key>, Vec<u64>)> = None;
-        for kernel in [KernelKind::Bitonic, KernelKind::Radix] {
+        for kernel in [KernelKind::Bitonic, KernelKind::Radix, KernelKind::Adaptive] {
             for workers in [1usize, 2, 4] {
                 let e = NativeEngine::with_context(
                     NativeParams {
@@ -481,6 +540,74 @@ mod tests {
                     }
                 }
                 assert!(e.context().arena.stats().hits > 0, "arena never reused");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_engine_takes_early_exits_and_records_choices() {
+        use crate::algos::adaptive::Choice;
+        let e = engine(); // default context → adaptive kernel
+        assert_eq!(e.context().kernel, KernelKind::Adaptive);
+        assert_eq!(e.plan_totals(), Default::default());
+
+        let mut sorted: Vec<Key> = (0..100_000).collect();
+        let r = e.sort(&mut sorted);
+        assert_eq!(r.chunks, 1, "early exit must not launch the PSRS path");
+        assert!(is_sorted(&sorted));
+        let last = e.last_plan_choice().unwrap();
+        assert_eq!(last.chosen, Choice::EarlyExitSorted);
+        assert!(last.actual_ms >= 0.0 && last.predicted_ms > 0.0);
+
+        let mut reversed: Vec<Key> = (0..100_000).rev().collect();
+        e.sort(&mut reversed);
+        assert!(is_sorted(&reversed));
+        assert_eq!(
+            e.last_plan_choice().unwrap().chosen,
+            Choice::EarlyExitReverse
+        );
+
+        let mut random: Vec<Key> =
+            (0..100_000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        e.sort(&mut random);
+        assert!(is_sorted(&random));
+        assert_eq!(e.last_plan_choice().unwrap().chosen, Choice::Radix);
+
+        let mut tiny: Vec<Key> = (0..300u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        e.sort(&mut tiny);
+        assert!(is_sorted(&tiny));
+        assert_eq!(e.last_plan_choice().unwrap().chosen, Choice::Comparison);
+
+        let t = e.plan_totals();
+        assert_eq!(t.requests, 4);
+        assert_eq!(t.early_exit_sorted, 1);
+        assert_eq!(t.early_exit_reverse, 1);
+        assert_eq!(t.chose_radix, 1);
+        assert_eq!(t.chose_comparison, 1);
+    }
+
+    #[test]
+    fn adaptive_early_exit_preserves_pair_stability() {
+        let e = engine();
+        // Sorted keys with heavy duplicates: the early exit must return
+        // the payload untouched — exactly the stable order.
+        let kin: Vec<u32> = (0..50_000u32).map(|x| x / 16).collect();
+        let pin: Vec<u64> = (0..kin.len() as u64).collect();
+        let (mut k, mut p) = (kin.clone(), pin.clone());
+        e.sort_pairs(&mut k, &mut p).unwrap();
+        assert_eq!(k, kin);
+        assert_eq!(p, pin, "sorted early exit must preserve payload order");
+
+        // Reverse-sorted keys with duplicates: a blind reversal would
+        // flip tie order; the record front-end must take the full sort
+        // and keep ties in input order.
+        let kin: Vec<u32> = (0..50_000u32).rev().map(|x| x / 16).collect();
+        let (mut k, mut p) = (kin.clone(), pin.clone());
+        e.sort_pairs(&mut k, &mut p).unwrap();
+        assert!(is_sorted(&k));
+        for (w, pw) in k.windows(2).zip(p.windows(2)) {
+            if w[0] == w[1] {
+                assert!(pw[0] < pw[1], "unstable at key {}", w[0]);
             }
         }
     }

@@ -74,14 +74,19 @@ COMMANDS
   sort        --n 32M [--dist uniform] [--algo {algos}]
               [--engine native|sim|pjrt|sharded] [--device gtx285]
               [--devices gtx285,tesla,gtx285-1g,gtx260] [--seed 1]
-              [--kernel radix|bitonic] [--digit-bits 11]
+              [--kernel adaptive|radix|bitonic] [--digit-bits 11]
+              [--cost-model configs/cost_model.json]
               [--key-type u32|u64|i32|i64|f32] [--payload true]
               [--descending true] [--verify true] [--analytic true]
               (sharded: shard across a multi-GPU pool; --analytic prices
                paper-scale n, e.g. 768M over 4 devices, without data;
-               --kernel picks the executed tile/bucket kernel — radix is
-               the fast default, bitonic the paper's comparison path,
-               outputs byte-identical either way; --digit-bits sets the
+               --kernel picks the executed kernel — adaptive (default)
+               profiles each request and picks radix, comparison or a
+               sorted/reverse early exit via the cost model loaded from
+               --cost-model (built-in defaults when omitted); radix and
+               bitonic pin a static kernel, the latter the paper's
+               comparison path — outputs byte-identical in every case;
+               --digit-bits sets the
                planned radix kernel's digit width (1–16, default 11 →
                3 passes over u32) — wall time only, never bytes;
                --key-type/--payload/--descending route through the typed
@@ -92,7 +97,8 @@ COMMANDS
                to ask that server to drain gracefully instead)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
               [--engine native|sharded] [--workers 4] [--config file.json]
-              [--kernel radix|bitonic] [--digit-bits 11]
+              [--kernel adaptive|radix|bitonic] [--digit-bits 11]
+              [--cost-model configs/cost_model.json]
               [--coalesce-max-keys 128K]
               [--key-type u32] [--payload true] [--descending true]
               [--listen 127.0.0.1:4750]
@@ -179,7 +185,14 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
     .parse()
     .map_err(|e| format!("bad --digit-bits: {e}"))?;
     gpu_bucket_sort::algos::plan::validate_digit_bits(digit_bits).map_err(|e| e.to_string())?;
-    let ctx = || ExecContext::new(kernel, 0).with_digit_bits(digit_bits);
+    let cost_model = flag(flags, "cost-model", "").to_string();
+    let cost = gpu_bucket_sort::algos::adaptive::CostModel::resolve(&cost_model)
+        .map_err(|e| e.to_string())?;
+    let ctx = || {
+        ExecContext::new(kernel, 0)
+            .with_digit_bits(digit_bits)
+            .with_cost_model(cost)
+    };
 
     if key_type != KeyType::U32 || payload || descending {
         if analytic {
@@ -187,7 +200,7 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
         }
         return cmd_sort_typed(
             flags, n, dist, seed, engine, verify, key_type, payload, descending, kernel,
-            digit_bits,
+            digit_bits, cost_model,
         );
     }
 
@@ -350,6 +363,7 @@ fn cmd_sort_typed(
     descending: bool,
     kernel: KernelKind,
     digit_bits: u32,
+    cost_model: String,
 ) -> Result<(), String> {
     // The typed path serves the deterministic sample sort; the
     // baselines (radix in particular) are u32-only, so an explicit
@@ -367,6 +381,7 @@ fn cmd_sort_typed(
         engine,
         kernel,
         digit_bits,
+        cost_model,
         ..ServiceConfig::default()
     };
     if let Some(d) = flags.get("device") {
@@ -519,6 +534,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(d) = flags.get("digit-bits") {
         cfg.digit_bits = d.parse().map_err(|e| format!("bad --digit-bits: {e}"))?;
+    }
+    if let Some(m) = flags.get("cost-model") {
+        cfg.cost_model = m.clone();
     }
     if let Some(c) = flags.get("coalesce-max-keys") {
         cfg.batch.coalesce_max_keys = parse_size(c)?;

@@ -34,6 +34,19 @@ pub enum Distribution {
     AllEqual,
     /// Two interleaved values — maximal tie pressure on splitters.
     TwoValues,
+    /// Uniform draws folded onto 4096 distinct values — heavy duplicate
+    /// density with only the low 12 bits varying, the case where the
+    /// planner's constant-digit elision beats the uniform plan.
+    FewUnique,
+    /// First half one constant from the middle of the domain, second
+    /// half uniform — poisons equidistant splitter samples (half of
+    /// them land on the constant), stressing deterministic bucketing.
+    SplitterKiller,
+    /// Eight concatenated internally-sorted blocks (a sawtooth /
+    /// pipe-organ ramp): high local sortedness with block-boundary
+    /// inversions, the nearly-sorted-but-not-sorted stress for the
+    /// adaptive front-end's early-exit verification.
+    NearlySortedBlocks,
 }
 
 impl Distribution {
@@ -49,7 +62,7 @@ impl Distribution {
     ];
 
     /// Every distribution, including the degenerate extras.
-    pub const ALL: [Distribution; 9] = [
+    pub const ALL: [Distribution; 12] = [
         Distribution::Uniform,
         Distribution::Gaussian,
         Distribution::Zipf,
@@ -59,6 +72,9 @@ impl Distribution {
         Distribution::ReverseSorted,
         Distribution::AllEqual,
         Distribution::TwoValues,
+        Distribution::FewUnique,
+        Distribution::SplitterKiller,
+        Distribution::NearlySortedBlocks,
     ];
 
     /// Parse a CLI name.
@@ -73,6 +89,11 @@ impl Distribution {
             "reverse" | "reversesorted" => Some(Distribution::ReverseSorted),
             "allequal" | "equal" | "constant" => Some(Distribution::AllEqual),
             "twovalues" | "binary" => Some(Distribution::TwoValues),
+            "fewunique" | "lowcardinality" => Some(Distribution::FewUnique),
+            "splitterkiller" | "halfconstant" => Some(Distribution::SplitterKiller),
+            "nearlysortedblocks" | "sawtooth" | "pipeorgan" => {
+                Some(Distribution::NearlySortedBlocks)
+            }
             _ => None,
         }
     }
@@ -89,6 +110,9 @@ impl Distribution {
             Distribution::ReverseSorted => "reverse",
             Distribution::AllEqual => "all_equal",
             Distribution::TwoValues => "two_values",
+            Distribution::FewUnique => "few_unique",
+            Distribution::SplitterKiller => "splitter_killer",
+            Distribution::NearlySortedBlocks => "nearly_sorted_blocks",
         }
     }
 
@@ -204,6 +228,34 @@ impl Distribution {
             Distribution::TwoValues => (0..n)
                 .map(|i| K::from_raw_bits(if i % 2 == 0 { 10 } else { 20 }))
                 .collect(),
+            Distribution::FewUnique => (0..n)
+                .map(|_| K::from_raw_bits(draw(&mut rng, wide) % 4096))
+                .collect(),
+            Distribution::SplitterKiller => {
+                let pivot = domain_max / 2;
+                (0..n)
+                    .map(|i| {
+                        if i < n / 2 {
+                            // Constant half first: every equidistant
+                            // sample over the prefix hits the pivot.
+                            K::from_raw_bits(pivot)
+                        } else {
+                            K::from_raw_bits(draw(&mut rng, wide))
+                        }
+                    })
+                    .collect()
+            }
+            Distribution::NearlySortedBlocks => {
+                let blocks = 8usize;
+                let mut v: Vec<K> = (0..n)
+                    .map(|_| K::from_raw_bits(draw(&mut rng, wide)))
+                    .collect();
+                let block_len = n.div_ceil(blocks).max(1);
+                for chunk in v.chunks_mut(block_len) {
+                    chunk.sort_unstable_by(K::key_cmp);
+                }
+                v
+            }
         }
     }
 
@@ -231,6 +283,9 @@ impl Distribution {
             Distribution::ReverseSorted => 7,
             Distribution::AllEqual => 8,
             Distribution::TwoValues => 9,
+            Distribution::FewUnique => 10,
+            Distribution::SplitterKiller => 11,
+            Distribution::NearlySortedBlocks => 12,
         }
     }
 }
@@ -310,6 +365,43 @@ mod tests {
         let lo = v.iter().filter(|&&x| x < u32::MAX / 4).count();
         let hi = v.iter().filter(|&&x| x > 3 * (u32::MAX / 4)).count();
         assert!(lo > 0 && hi > 0, "staggered should span the range");
+    }
+
+    #[test]
+    fn few_unique_has_low_cardinality() {
+        let v = Distribution::FewUnique.generate(100_000, 3);
+        assert!(v.iter().all(|&x| x < 4096));
+        let mut distinct = v.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() > 1000, "too few values: {}", distinct.len());
+        assert!(distinct.len() <= 4096);
+    }
+
+    #[test]
+    fn splitter_killer_is_half_constant() {
+        let n = 10_000;
+        let v = Distribution::SplitterKiller.generate(n, 3);
+        let pivot = (u32::MAX as u64 / 2) as u32;
+        assert!(v[..n / 2].iter().all(|&x| x == pivot));
+        // The uniform half is genuinely varied.
+        let mut tail = v[n / 2..].to_vec();
+        tail.sort_unstable();
+        tail.dedup();
+        assert!(tail.len() > n / 4, "uniform half degenerate: {}", tail.len());
+    }
+
+    #[test]
+    fn nearly_sorted_blocks_is_blockwise_sorted() {
+        let n = 10_000;
+        let v = Distribution::NearlySortedBlocks.generate(n, 3);
+        let block_len = n.div_ceil(8);
+        for chunk in v.chunks(block_len) {
+            assert!(crate::is_sorted(chunk));
+        }
+        // The whole array is (almost surely) not sorted — the blocks
+        // overlap in value range.
+        assert!(!crate::is_sorted(&v));
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Property tests over the adaptive front-end (PR 7): the
+//! `KernelKind::Adaptive` output is byte-identical to the static
+//! comparison kernel across worker counts, engines and every workload
+//! distribution (including the adversarial ones the cost model was
+//! built to recognise), and the sorted/reverse early exits preserve
+//! `Record` payload stability exactly.
+
+use gpu_bucket_sort::algos::adaptive::Choice;
+use gpu_bucket_sort::config::{BatchConfig, EngineKind, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortRequest, SortService};
+use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
+use gpu_bucket_sort::key::tag_records;
+use gpu_bucket_sort::util::propcheck::forall;
+use gpu_bucket_sort::workload::Distribution;
+use gpu_bucket_sort::{ExecContext, KernelKind, SortKey};
+
+fn engine(kernel: KernelKind) -> NativeEngine {
+    NativeEngine::with_context(NativeParams::default(), ExecContext::new(kernel, 0)).unwrap()
+}
+
+/// Comparison-kernel reference output for a key vector.
+fn comparison_sorted(keys: &[u32]) -> Vec<u32> {
+    let mut out = keys.to_vec();
+    engine(KernelKind::Bitonic).sort(&mut out);
+    out
+}
+
+/// The adaptive front-end behind the full batched service is
+/// byte-identical to the static comparison kernel for every
+/// distribution, across 1/2/4 workers on both the native and the
+/// sharded engine.
+#[test]
+fn adaptive_service_matches_comparison_everywhere() {
+    let n = 40_000;
+    // Reference outputs once per distribution, from the static
+    // comparison kernel (and sanity-checked against std's sort — for
+    // u32 the bit order is the numeric order).
+    let cases: Vec<(Distribution, Vec<u32>, Vec<u32>)> = Distribution::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, &dist)| {
+            let keys = dist.generate(n, i as u64);
+            let expect = comparison_sorted(&keys);
+            let mut std_sorted = keys.clone();
+            std_sorted.sort_unstable();
+            assert_eq!(expect, std_sorted, "comparison kernel reference ({dist})");
+            (dist, keys, expect)
+        })
+        .collect();
+
+    for engine_kind in [EngineKind::Native, EngineKind::Sharded] {
+        for workers in [1usize, 2, 4] {
+            let cfg = ServiceConfig {
+                engine: engine_kind,
+                workers,
+                kernel: KernelKind::Adaptive,
+                batch: BatchConfig {
+                    max_batch_keys: 1 << 20,
+                    max_batch_requests: 8,
+                    max_wait_ms: 1,
+                    queue_capacity: 64,
+                    max_queued_keys: 1 << 24,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let client = SortService::start(cfg).unwrap();
+            for (dist, keys, expect) in &cases {
+                let out = client
+                    .sort(SortRequest::new(keys.clone()))
+                    .unwrap_or_else(|e| panic!("{engine_kind:?}/{workers}w/{dist}: {e}"));
+                assert_eq!(
+                    out.keys_u32(),
+                    expect.as_slice(),
+                    "adaptive != comparison ({engine_kind:?}, {workers} workers, {dist})"
+                );
+            }
+            let snap = client.shutdown();
+            assert_eq!(
+                snap.counters["requests_completed"],
+                cases.len() as u64,
+                "{engine_kind:?}/{workers}w"
+            );
+            if engine_kind == EngineKind::Native {
+                // Native engines report adaptive decisions to metrics.
+                assert!(
+                    snap.counters["adaptive_requests"] >= 1,
+                    "{engine_kind:?}/{workers}w: {:?}",
+                    snap.counters
+                );
+            }
+        }
+    }
+}
+
+/// A `#plan`-suffixed request tag comes back extended with the
+/// decision summary on the native engine.
+#[test]
+fn plan_tag_reports_adaptive_choice() {
+    let cfg = ServiceConfig {
+        kernel: KernelKind::Adaptive,
+        ..Default::default()
+    };
+    let client = SortService::start(cfg).unwrap();
+    let keys: Vec<u32> = (0..60_000u32).rev().collect();
+    let out = client
+        .sort(SortRequest::tagged(keys, "probe#plan"))
+        .unwrap();
+    let tag = out.tag.expect("tag survives");
+    assert!(
+        tag.starts_with("probe#plan;choice="),
+        "tag carries the decision summary: {tag}"
+    );
+    client.shutdown();
+}
+
+/// Sorted early exit on records: an already record-sorted key–value
+/// input (duplicate keys, ties by payload index) is returned untouched
+/// — bitwise-equal payload order, same bytes as the comparison kernel.
+#[test]
+fn early_exit_sorted_preserves_record_payload_stability() {
+    // Duplicate-heavy sorted keys; tagging yields ascending idx within
+    // every equal-key run, so the records are fully sorted.
+    let keys: Vec<u32> = (0..50_000u32).map(|i| i / 8).collect();
+    let records = tag_records(&keys).unwrap();
+
+    let adaptive = engine(KernelKind::Adaptive);
+    let mut a_out = records.clone();
+    adaptive.sort(&mut a_out);
+    let choice = adaptive.last_plan_choice().expect("records a decision");
+    assert_eq!(choice.chosen, Choice::EarlyExitSorted, "{choice:?}");
+
+    let mut c_out = records.clone();
+    engine(KernelKind::Bitonic).sort(&mut c_out);
+    assert_eq!(a_out, records, "early exit returns the input untouched");
+    assert_eq!(a_out, c_out, "early exit == comparison kernel");
+}
+
+/// Reverse early exit on records: strictly descending keys reverse in
+/// place to exactly the comparison-kernel order; non-increasing keys
+/// with duplicates are *not* reverse-sorted as records (ties carry
+/// ascending indices) and must fall through to a full sort that still
+/// matches the comparison kernel.
+#[test]
+fn early_exit_reverse_preserves_record_payload_stability() {
+    let adaptive = engine(KernelKind::Adaptive);
+    let comparison = engine(KernelKind::Bitonic);
+
+    // Strictly descending: record bits (key, idx) are strictly
+    // descending too, so the front-end may reverse in place.
+    let strict: Vec<u32> = (0..50_000u32).rev().collect();
+    let records = tag_records(&strict).unwrap();
+    let mut a_out = records.clone();
+    adaptive.sort(&mut a_out);
+    let choice = adaptive.last_plan_choice().expect("records a decision");
+    assert_eq!(choice.chosen, Choice::EarlyExitReverse, "{choice:?}");
+    let mut c_out = records.clone();
+    comparison.sort(&mut c_out);
+    assert_eq!(a_out, c_out, "reversal == comparison kernel");
+    assert!(
+        a_out.windows(2).all(|w| w[0].key_le(&w[1])),
+        "reversed records are sorted"
+    );
+
+    // Non-increasing with duplicates: within an equal-key run the
+    // payload indices ascend, so a blind reversal would flip them —
+    // the front-end must detect this and run a real sort instead.
+    let dups: Vec<u32> = (0..50_000u32).rev().map(|i| i / 8).collect();
+    let records = tag_records(&dups).unwrap();
+    let mut a_out = records.clone();
+    adaptive.sort(&mut a_out);
+    let choice = adaptive.last_plan_choice().expect("records a decision");
+    assert_ne!(
+        choice.chosen,
+        Choice::EarlyExitReverse,
+        "duplicate-key ties must not blind-reverse"
+    );
+    let mut c_out = records.clone();
+    comparison.sort(&mut c_out);
+    assert_eq!(a_out, c_out, "duplicate-run fallback == comparison kernel");
+    // Stability: equal keys keep ascending payload indices.
+    for w in a_out.windows(2) {
+        if w[0].key == w[1].key {
+            assert!(w[0].idx < w[1].idx, "stable ties: {:?}", &w[..2]);
+        }
+    }
+}
+
+/// Arbitrary inputs (any size, any shape — including the tiny runs the
+/// cost model routes to the comparison kernel): adaptive output is
+/// byte-identical to the comparison kernel's.
+#[test]
+fn adaptive_matches_comparison_on_arbitrary_inputs() {
+    let adaptive = engine(KernelKind::Adaptive);
+    let comparison = engine(KernelKind::Bitonic);
+    forall(60, "adaptive == comparison kernel", |g| {
+        let keys = g.vec_u32(0..6000);
+        let mut a_out = keys.clone();
+        adaptive.sort(&mut a_out);
+        let mut c_out = keys;
+        comparison.sort(&mut c_out);
+        assert_eq!(a_out, c_out);
+    });
+}
+
+/// The three PR-7 adversarial distributions generate what their names
+/// promise, at the type level the engines actually consume, and sort
+/// identically under every static kernel.
+#[test]
+fn new_distributions_sort_identically_under_all_kernels() {
+    for dist in [
+        Distribution::FewUnique,
+        Distribution::SplitterKiller,
+        Distribution::NearlySortedBlocks,
+    ] {
+        let keys = dist.generate(30_000, 3);
+        let expect = comparison_sorted(&keys);
+        for kernel in [KernelKind::Adaptive, KernelKind::Radix, KernelKind::Bitonic] {
+            let mut out = keys.clone();
+            engine(kernel).sort(&mut out);
+            assert_eq!(out, expect, "{dist} under {kernel:?}");
+        }
+    }
+}
