@@ -68,9 +68,16 @@ impl Batcher {
         Ok(())
     }
 
-    /// Admit a request, or reject it with a backpressure error.
-    pub fn admit(&mut self, req: PendingRequest) -> Result<()> {
-        self.can_admit(req.len())?;
+    /// Admit a request, or reject it with a backpressure error. The
+    /// rejected request comes back with the error so the caller can
+    /// answer its response channel instead of dropping it.
+    pub fn admit(
+        &mut self,
+        req: PendingRequest,
+    ) -> std::result::Result<(), (Error, PendingRequest)> {
+        if let Err(e) = self.can_admit(req.len()) {
+            return Err((e, req));
+        }
         self.queued_keys += req.len();
         self.queue.push_back(req);
         Ok(())
@@ -272,10 +279,12 @@ mod tests {
             rxs.push(rx);
         }
         let (r, _x) = req(99, 1, t0);
-        let err = b.admit(r).unwrap_err();
+        let (err, rejected) = b.admit(r).unwrap_err();
         assert!(matches!(err, Error::Busy(_)));
         assert!(err.is_busy());
         assert!(err.to_string().contains("backpressure"));
+        // The rejected request comes back intact for a typed reply.
+        assert_eq!(rejected.id, 99);
     }
 
     #[test]

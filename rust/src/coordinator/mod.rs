@@ -12,6 +12,9 @@
 //! * [`engine`] — the backends (native multicore, simulated GPU,
 //!   device-paced sim, PJRT/AOT, sharded multi-device) behind one
 //!   [`engine::SortEngine`] trait.
+//! * [`queue`] — the generic bounded MPMC dispatch queue the scheduler
+//!   wraps; extracted so the loom models can exhaustively check its
+//!   submit / drain / shutdown orderings.
 //! * [`scheduler`] — the multi-worker pool: N engine workers behind a
 //!   condvar-signalled bounded queue, out-of-order completion with
 //!   byte-deterministic per-request results.
@@ -30,6 +33,7 @@
 pub mod batcher;
 pub mod coalesce;
 pub mod engine;
+pub mod queue;
 pub mod request;
 pub mod scheduler;
 pub mod service;

@@ -1,0 +1,279 @@
+//! The scheduler's **bounded dispatch queue**, extracted to a generic
+//! structure so the loom models can exhaustively check its submit /
+//! drain / shutdown orderings without dragging in engines, metrics or
+//! response channels (`rust/tests/loom_models.rs`).
+//!
+//! Semantics (shared with the scheduler that wraps it):
+//! * `capacity` bounds queued items; producers either bounce
+//!   ([`BoundedQueue::try_push`]) or wait for a slot
+//!   ([`BoundedQueue::push_blocking`]).
+//! * Each consumer owns an *active slot*; [`BoundedQueue::pop`] marks
+//!   it busy, [`BoundedQueue::finish`] frees it. Spare capacity means
+//!   some consumer is neither busy nor promised a queued item.
+//! * [`BoundedQueue::drain`] lets consumers finish the queue and then
+//!   return `None` from `pop` — nothing accepted is ever dropped.
+//! * A consumer that dies (engine panic) must call
+//!   [`BoundedQueue::retire`] — the scheduler does this from a drop
+//!   guard — so producers blocked on a dead pool wake up and get their
+//!   item back instead of waiting forever.
+//!
+//! Two condvars signal the one state mutex: `work` towards consumers
+//! (item arrived / drain started), `slots` towards producers (queue
+//! shrank / consumer freed / consumer died). All waits re-check their
+//! predicate under the lock, and every state change that can satisfy a
+//! predicate notifies while the change and the check share the mutex —
+//! the no-lost-wakeup discipline the loom model verifies.
+
+use std::collections::VecDeque;
+
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned, Condvar, Mutex};
+
+/// Why a push did not go through; the item comes back intact.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity — retry after a slot-free wake-up.
+    Full(T),
+    /// Every consumer has retired; the item can never be served.
+    Dead(T),
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    queue: VecDeque<T>,
+    /// `active[c]` = consumer `c` is processing an item.
+    active: Vec<bool>,
+    active_count: usize,
+    /// Consumers still able to serve. Retirement wakes producers so
+    /// nobody waits on a dead pool.
+    live_consumers: usize,
+    /// Set by [`BoundedQueue::drain`]: consumers empty the queue, then
+    /// `pop` returns `None`.
+    draining: bool,
+}
+
+/// A bounded MPMC queue with per-consumer busy slots. See module docs.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    /// Consumers wait here for items (or the drain signal).
+    work: Condvar,
+    /// Producers wait here for queue/consumer capacity.
+    slots: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue for `consumers` consumers holding at most `capacity`
+    /// queued items.
+    pub fn new(consumers: usize, capacity: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                active: vec![false; consumers],
+                active_count: 0,
+                live_consumers: consumers,
+                draining: false,
+            }),
+            work: Condvar::new(),
+            slots: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Number of consumer slots (live or not).
+    pub fn consumers(&self) -> usize {
+        lock_unpoisoned(&self.state).active.len()
+    }
+
+    /// Consumers currently processing an item.
+    pub fn active_count(&self) -> usize {
+        lock_unpoisoned(&self.state).active_count
+    }
+
+    /// Consumers that have not retired.
+    pub fn live_consumers(&self) -> usize {
+        lock_unpoisoned(&self.state).live_consumers
+    }
+
+    /// True when an item pushed right now could start immediately:
+    /// some consumer is neither busy nor already promised a queued
+    /// item.
+    pub fn has_spare_capacity(&self) -> bool {
+        let st = lock_unpoisoned(&self.state);
+        st.active_count + st.queue.len() < st.active.len()
+    }
+
+    /// Push without blocking. On success returns the queue depth just
+    /// after the push (the scheduler's depth metrics want it); on
+    /// failure hands the item back tagged with the reason.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.live_consumers == 0 {
+            return Err(PushError::Dead(item));
+        }
+        if st.queue.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.queue.push_back(item);
+        let depth = st.queue.len();
+        self.work.notify_one();
+        Ok(depth)
+    }
+
+    /// Push, waiting for capacity. Hands the item back only when every
+    /// consumer has retired.
+    pub fn push_blocking(&self, item: T) -> Result<usize, T> {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            if st.live_consumers == 0 {
+                return Err(item);
+            }
+            if st.queue.len() < self.capacity {
+                break;
+            }
+            st = wait_unpoisoned(&self.slots, st);
+        }
+        st.queue.push_back(item);
+        let depth = st.queue.len();
+        self.work.notify_one();
+        Ok(depth)
+    }
+
+    /// Take the next item as consumer `consumer`, marking its slot
+    /// busy; blocks while the queue is empty. Returns `None` once the
+    /// queue is draining and empty (the consumer should exit).
+    pub fn pop(&self, consumer: usize) -> Option<T> {
+        let item = {
+            let mut st = lock_unpoisoned(&self.state);
+            loop {
+                if let Some(item) = st.queue.pop_front() {
+                    st.active[consumer] = true;
+                    st.active_count += 1;
+                    break item;
+                }
+                if st.draining {
+                    return None;
+                }
+                st = wait_unpoisoned(&self.work, st);
+            }
+        };
+        // The queue shrank: a producer blocked on capacity can move.
+        self.slots.notify_all();
+        Some(item)
+    }
+
+    /// Free consumer `consumer`'s busy slot after it finished an item.
+    pub fn finish(&self, consumer: usize) {
+        {
+            let mut st = lock_unpoisoned(&self.state);
+            if st.active[consumer] {
+                st.active[consumer] = false;
+                st.active_count -= 1;
+            }
+        }
+        self.slots.notify_all();
+    }
+
+    /// Permanently remove consumer `consumer` (normal exit or panic —
+    /// the scheduler calls this from a drop guard). Frees its busy
+    /// slot and wakes producers, so a dead pool bounces pushes instead
+    /// of stranding them.
+    pub fn retire(&self, consumer: usize) {
+        {
+            let mut st = lock_unpoisoned(&self.state);
+            if st.active[consumer] {
+                st.active[consumer] = false;
+                st.active_count -= 1;
+            }
+            st.live_consumers = st.live_consumers.saturating_sub(1);
+        }
+        self.slots.notify_all();
+    }
+
+    /// Start draining: consumers finish every queued item, then `pop`
+    /// returns `None`.
+    pub fn drain(&self) {
+        let mut st = lock_unpoisoned(&self.state);
+        st.draining = true;
+        self.work.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_through_one_consumer() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1, 4);
+        assert_eq!(q.try_push(1).expect("push 1"), 1);
+        assert_eq!(q.try_push(2).expect("push 2"), 2);
+        assert_eq!(q.pop(0), Some(1));
+        q.finish(0);
+        assert_eq!(q.pop(0), Some(2));
+        q.finish(0);
+        q.drain();
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn bounces_when_full_and_after_death() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1, 1);
+        q.try_push(1).expect("first fits");
+        match q.try_push(2) {
+            Err(PushError::Full(item)) => assert_eq!(item, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        q.retire(0);
+        match q.try_push(3) {
+            Err(PushError::Dead(item)) => assert_eq!(item, 3),
+            other => panic!("expected Dead, got {other:?}"),
+        }
+        assert!(q.push_blocking(4).is_err());
+    }
+
+    #[test]
+    fn spare_capacity_tracks_active_and_queued() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2, 4);
+        assert!(q.has_spare_capacity());
+        q.try_push(1).expect("push");
+        // One consumer busy, one idle: still spare.
+        assert_eq!(q.pop(0), Some(1));
+        assert!(q.has_spare_capacity());
+        assert_eq!(q.active_count(), 1);
+        // Second consumer busy too: no spare.
+        q.try_push(2).expect("push");
+        assert_eq!(q.pop(1), Some(2));
+        assert!(!q.has_spare_capacity());
+        q.finish(0);
+        assert!(q.has_spare_capacity());
+    }
+
+    #[test]
+    fn drain_lets_consumers_exit_across_threads() {
+        let q = std::sync::Arc::new(BoundedQueue::<u32>::new(2, 4));
+        let consumers: Vec<_> = (0..2)
+            .map(|c| {
+                let q = std::sync::Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut served = 0u32;
+                    while let Some(_item) = q.pop(c) {
+                        served += 1;
+                        q.finish(c);
+                    }
+                    q.retire(c);
+                    served
+                })
+            })
+            .collect();
+        for i in 0..8 {
+            q.push_blocking(i).expect("live consumers");
+        }
+        q.drain();
+        let served: u32 = consumers
+            .into_iter()
+            .map(|h| h.join().expect("consumer thread"))
+            .sum();
+        assert_eq!(served, 8);
+    }
+}

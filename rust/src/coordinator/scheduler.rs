@@ -31,35 +31,19 @@
 //! spare capacity (else it eats a full batching wait).
 
 use super::engine::{self, SortEngine};
+use super::queue::{BoundedQueue, PushError};
 use super::request::{Batch, JobData, SortResponse};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
-use std::collections::VecDeque;
+use crate::util::sync::{self as sync, Arc};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Builds one worker's engine, on that worker's thread. Called once per
 /// worker with the worker index.
 pub type WorkerEngineFactory =
     dyn Fn(&ServiceConfig, usize) -> Result<Box<dyn SortEngine>> + Send + Sync;
-
-/// Queue + in-flight bookkeeping, under the scheduler mutex.
-#[derive(Debug)]
-struct State {
-    queue: VecDeque<Batch>,
-    /// `active[w]` = worker `w` is executing a batch.
-    active: Vec<bool>,
-    active_count: usize,
-    /// Workers able to serve batches. Decremented when a worker exits —
-    /// including by panic (a drop guard) — so dispatchers never wait on
-    /// a dead pool.
-    live_workers: usize,
-    /// Set by [`Scheduler::shutdown`]: workers drain the queue and exit.
-    draining: bool,
-}
 
 /// Why a dispatch did not go through. The batch is handed back intact
 /// either way.
@@ -74,13 +58,10 @@ pub enum DispatchError {
 }
 
 struct Shared {
-    state: Mutex<State>,
-    /// Workers wait here for queued batches (or the drain signal).
-    work: Condvar,
-    /// Dispatchers wait here for queue/worker capacity.
-    slots: Condvar,
-    /// Queue bound in batches.
-    capacity: usize,
+    /// The bounded dispatch queue (see [`super::queue`]) — queue,
+    /// per-worker busy slots, drain/retire protocol. Extracted so the
+    /// loom models check its orderings in isolation.
+    queue: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
     verify: bool,
     /// Fired after every finished batch — the service's intake loop
@@ -92,14 +73,13 @@ struct Shared {
 /// [`Scheduler::shutdown`] drains and joins it.
 pub struct Scheduler {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<sync::thread::JoinHandle<()>>,
 }
 
 impl std::fmt::Debug for Scheduler {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Scheduler")
             .field("workers", &self.workers.len())
-            .field("capacity", &self.shared.capacity)
             .finish()
     }
 }
@@ -116,16 +96,9 @@ impl Scheduler {
     ) -> Result<Scheduler> {
         let workers = cfg.workers;
         let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                queue: VecDeque::new(),
-                active: vec![false; workers],
-                active_count: 0,
-                live_workers: workers,
-                draining: false,
-            }),
-            work: Condvar::new(),
-            slots: Condvar::new(),
-            capacity: 2 * workers,
+            // Queue bound: 2 batches per worker, the same depth-2
+            // stream the single-engine service's channel gave.
+            queue: BoundedQueue::new(workers, 2 * workers),
             metrics,
             verify: cfg.verify,
             on_slot_free,
@@ -138,26 +111,25 @@ impl Scheduler {
             let factory = factory.clone();
             let cfg = cfg.clone();
             let ready_tx = ready_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("gbs-worker-{w}"))
-                .spawn(move || match factory(&cfg, w) {
-                    Ok(engine) => {
-                        let _ = ready_tx.send(Ok(()));
-                        // Release the readiness channel before serving:
-                        // if a *sibling* factory panics (drops its
-                        // sender without sending), `start` must see the
-                        // disconnect rather than block on workers that
-                        // are already in their serve loop.
-                        drop(ready_tx);
-                        worker_loop(w, engine, &shared);
+            let handle =
+                sync::thread::spawn_named(format!("gbs-worker-{w}"), move || {
+                    match factory(&cfg, w) {
+                        Ok(engine) => {
+                            let _ = ready_tx.send(Ok(()));
+                            // Release the readiness channel before serving:
+                            // if a *sibling* factory panics (drops its
+                            // sender without sending), `start` must see the
+                            // disconnect rather than block on workers that
+                            // are already in their serve loop.
+                            drop(ready_tx);
+                            worker_loop(w, engine, &shared);
+                        }
+                        Err(e) => {
+                            shared.queue.retire(w);
+                            let _ = ready_tx.send(Err(e));
+                        }
                     }
-                    Err(e) => {
-                        shared.state.lock().unwrap().live_workers -= 1;
-                        shared.slots.notify_all();
-                        let _ = ready_tx.send(Err(e));
-                    }
-                })
-                .map_err(|e| Error::Coordinator(format!("spawn worker {w}: {e}")))?;
+                });
             handles.push(handle);
         }
         drop(ready_tx);
@@ -193,7 +165,7 @@ impl Scheduler {
 
     /// Number of workers in the pool.
     pub fn worker_count(&self) -> usize {
-        self.shared.state.lock().unwrap().active.len()
+        self.shared.queue.consumers()
     }
 
     /// True when a batch dispatched right now could start immediately:
@@ -201,60 +173,43 @@ impl Scheduler {
     /// batch. The intake loop uses this to skip the batching window on
     /// an unloaded service.
     pub fn has_spare_capacity(&self) -> bool {
-        let st = self.shared.state.lock().unwrap();
-        st.active_count + st.queue.len() < st.active.len()
+        self.shared.queue.has_spare_capacity()
     }
 
     /// Dispatch without blocking; hands the batch back when the queue is
     /// at capacity (the caller re-queues it and waits for a slot-free
     /// wake-up) or the pool is dead.
     pub fn try_dispatch(&self, batch: Batch) -> std::result::Result<(), DispatchError> {
-        let mut st = self.shared.state.lock().unwrap();
-        if st.live_workers == 0 {
-            return Err(DispatchError::Dead(batch));
+        match self.shared.queue.try_push(batch) {
+            Ok(depth) => {
+                self.record_depth(depth);
+                Ok(())
+            }
+            Err(PushError::Full(batch)) => Err(DispatchError::Full(batch)),
+            Err(PushError::Dead(batch)) => Err(DispatchError::Dead(batch)),
         }
-        if st.queue.len() >= self.shared.capacity {
-            return Err(DispatchError::Full(batch));
-        }
-        self.push(&mut st, batch);
-        Ok(())
     }
 
     /// Dispatch, waiting for queue capacity (shutdown drain — admitted
     /// work must reach a worker even under a full queue). Hands the
     /// batch back only if every worker has died.
     pub fn dispatch_blocking(&self, batch: Batch) -> std::result::Result<(), Batch> {
-        let mut st = self.shared.state.lock().unwrap();
-        loop {
-            if st.live_workers == 0 {
-                return Err(batch);
-            }
-            if st.queue.len() < self.shared.capacity {
-                break;
-            }
-            st = self.shared.slots.wait(st).unwrap();
-        }
-        self.push(&mut st, batch);
+        let depth = self.shared.queue.push_blocking(batch)?;
+        self.record_depth(depth);
         Ok(())
     }
 
-    fn push(&self, st: &mut State, batch: Batch) {
-        st.queue.push_back(batch);
-        let depth = st.queue.len() as u64;
+    fn record_depth(&self, depth: usize) {
+        let depth = depth as u64;
         self.shared.metrics.record_max("scheduler_queue_depth_peak", depth);
         self.shared.metrics.incr("scheduler_queue_depth_sum", depth);
         self.shared.metrics.incr("scheduler_queue_depth_samples", 1);
-        self.shared.work.notify_one();
     }
 
     /// Drain and stop: workers finish every queued batch, then exit;
     /// returns once all worker threads have been joined.
     pub fn shutdown(self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.draining = true;
-            self.shared.work.notify_all();
-        }
+        self.shared.queue.drain();
         for handle in self.workers {
             let _ = handle.join();
         }
@@ -274,15 +229,7 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
     }
     impl Drop for Retire<'_> {
         fn drop(&mut self) {
-            {
-                let mut st = self.shared.state.lock().unwrap();
-                if st.active[self.worker] {
-                    st.active[self.worker] = false;
-                    st.active_count -= 1;
-                }
-                st.live_workers -= 1;
-            }
-            self.shared.slots.notify_all();
+            self.shared.queue.retire(self.worker);
             (self.shared.on_slot_free)();
         }
     }
@@ -296,23 +243,9 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
     let mut plan_seen = engine.plan_totals().unwrap_or_default();
 
     loop {
-        let batch = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if let Some(batch) = st.queue.pop_front() {
-                    st.active[worker] = true;
-                    st.active_count += 1;
-                    break Some(batch);
-                }
-                if st.draining {
-                    break None;
-                }
-                st = shared.work.wait(st).unwrap();
-            }
-        };
-        let Some(batch) = batch else { return };
-        // The queue shrank: a dispatcher blocked on capacity can move.
-        shared.slots.notify_all();
+        // `pop` marks this worker's busy slot and wakes a dispatcher
+        // blocked on capacity; `None` means drained — exit.
+        let Some(batch) = shared.queue.pop(worker) else { return };
 
         let outcomes = execute_batch(worker, engine.as_mut(), batch, shared);
 
@@ -353,12 +286,7 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
             }
         }
 
-        {
-            let mut st = shared.state.lock().unwrap();
-            st.active[worker] = false;
-            st.active_count -= 1;
-        }
-        shared.slots.notify_all();
+        shared.queue.finish(worker);
         (shared.on_slot_free)();
 
         // Deliver only after freeing the slot (see module docs).
@@ -476,6 +404,7 @@ mod tests {
     use crate::coordinator::request::{PendingRequest, SortRequest};
     use crate::KeyData;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Condvar, Mutex};
 
     struct CountingEngine;
     impl SortEngine for CountingEngine {
@@ -685,7 +614,7 @@ mod tests {
         let (first, rx) = batch_of(vec![2, 1]);
         scheduler.try_dispatch(first).unwrap();
         rxs.push(rx);
-        while scheduler.shared.state.lock().unwrap().active_count == 0 {
+        while scheduler.shared.queue.active_count() == 0 {
             std::thread::yield_now();
         }
         // …two more fill the bounded queue; the fourth is refused and
@@ -743,7 +672,7 @@ mod tests {
         assert!(rx.recv().is_err());
         // The response channels drop mid-unwind, before the retire
         // guard runs — wait for the bookkeeping to settle.
-        while scheduler.shared.state.lock().unwrap().live_workers > 0 {
+        while scheduler.shared.queue.live_consumers() > 0 {
             std::thread::yield_now();
         }
         // The pool is now dead: both dispatch paths hand the batch back

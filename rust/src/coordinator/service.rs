@@ -38,9 +38,8 @@ use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::sim::DeviceRegistry;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{self as sync, lock_unpoisoned, Arc, AtomicU64, Mutex, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 enum ClientMsg {
@@ -61,7 +60,7 @@ enum ClientMsg {
 #[derive(Debug)]
 struct ClientCore {
     tx: mpsc::Sender<ClientMsg>,
-    intake: Option<std::thread::JoinHandle<()>>,
+    intake: Option<sync::thread::JoinHandle<()>>,
 }
 
 impl Drop for ClientCore {
@@ -114,11 +113,12 @@ impl SortClient {
 
     /// Convenience: sort a plain `u32` key vector (the classic path).
     pub fn sort_keys(&self, keys: Vec<crate::Key>) -> Result<Vec<crate::Key>> {
-        Ok(self
-            .sort(SortRequest::new(keys))?
+        self.sort(SortRequest::new(keys))?
             .keys
             .into_u32()
-            .expect("u32 request returns u32 keys"))
+            .ok_or_else(|| {
+                Error::Coordinator("u32 request returned a different key type".into())
+            })
     }
 
     /// Snapshot of the service metrics.
@@ -200,11 +200,9 @@ impl SortService {
         }
         let factory = Mutex::new(Some(factory));
         Self::start_with_worker_factory(cfg, move |cfg: &ServiceConfig, _worker: usize| {
-            let f = factory
-                .lock()
-                .unwrap()
-                .take()
-                .expect("single-worker factory called once");
+            let f = lock_unpoisoned(&factory).take().ok_or_else(|| {
+                Error::Coordinator("single-worker engine factory invoked twice".into())
+            })?;
             f(cfg)
         })
     }
@@ -231,10 +229,9 @@ impl SortService {
 
         let intake_metrics = metrics.clone();
         let batcher = Batcher::new(cfg.batch);
-        let intake = std::thread::Builder::new()
-            .name("gbs-intake".into())
-            .spawn(move || intake_loop(client_rx, scheduler, batcher, intake_metrics))
-            .map_err(|e| Error::Coordinator(format!("spawn intake thread: {e}")))?;
+        let intake = sync::thread::spawn_named("gbs-intake".into(), move || {
+            intake_loop(client_rx, scheduler, batcher, intake_metrics)
+        });
 
         Ok(SortClient {
             core: Arc::new(ClientCore {
@@ -342,11 +339,9 @@ fn intake_loop(
                     let _ = req.respond_to.send(Ok(outcome));
                     continue;
                 }
-                if let Err(e) = batcher.can_admit(req.len()) {
+                if let Err((e, rejected)) = batcher.admit(req) {
                     metrics.incr("requests_rejected", 1);
-                    let _ = req.respond_to.send(Err(e));
-                } else {
-                    batcher.admit(req).expect("can_admit checked");
+                    let _ = rejected.respond_to.send(Err(e));
                 }
             }
             Some(ClientMsg::SlotFreed) => continue,

@@ -266,6 +266,9 @@ impl SortKey for f32 {
     // of the IEEE-754 total order. (`f32::from_bits` is not a const fn
     // on the MSRV, hence the transmute; the two are defined to agree.)
     #[allow(clippy::transmute_int_to_float)]
+    // SAFETY: `u32` and `f32` have identical size and alignment, and
+    // every u32 bit pattern is a valid f32 (0x7FFF_FFFF is a quiet
+    // NaN); this is exactly `f32::from_bits`, just usable in `const`.
     const PAD: Self = unsafe { std::mem::transmute::<u32, f32>(0x7FFF_FFFF) };
 
     // The classic IEEE-754 total-order trick: non-negative floats get

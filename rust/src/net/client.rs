@@ -12,6 +12,7 @@
 //! request [`Error::TooLarge`], a drain-time rejection a
 //! "service stopped"-style [`Error::Coordinator`].
 
+use super::credit::CreditGate;
 use super::wire::{
     chunk_frames, encode_frame, error_from_wire, key_data_from_bytes, key_data_to_bytes,
     payload_from_bytes, payload_to_bytes, read_frame, write_frame, CreditMsg, ErrorMsg, Frame,
@@ -20,12 +21,15 @@ use super::wire::{
 use crate::config::NetConfig;
 use crate::coordinator::{SortRequest, SortResponse};
 use crate::error::{Error, Result};
+use crate::util::sync::{
+    self as sync, lock_unpoisoned, Arc, AtomicU64, AtomicUsize, Mutex, Ordering,
+};
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::mpsc;
+
+use sync::thread::JoinHandle;
 
 /// One request awaiting frames from the server.
 enum Pending {
@@ -41,11 +45,12 @@ enum Pending {
     Control(mpsc::Sender<()>),
 }
 
-/// Mutable per-connection state behind one mutex: the credit window,
-/// the pending-request table and the liveness flag share it so that
-/// credit waiters always observe connection death.
+/// The pending-request table and the liveness flag, behind one mutex.
+/// The credit window lives in the connection's [`CreditGate`], which
+/// keeps its *own* dead flag — [`Conn::fail_all`] sets this one first
+/// (so in-flight `submit`s re-checking under this lock bounce), then
+/// kills the gate (so credit waiters wake with a refusal).
 struct ConnState {
-    credits: u32,
     dead: bool,
     pending: HashMap<u64, Pending>,
 }
@@ -55,7 +60,8 @@ struct Conn {
     stream: TcpStream,
     writer: Mutex<TcpStream>,
     state: Mutex<ConnState>,
-    cv: Condvar,
+    /// Admission credits granted by the server's handshake.
+    gate: CreditGate,
     next_id: AtomicU64,
     /// Request chunk size: ours clamped to the server's frame ceiling.
     chunk: usize,
@@ -99,11 +105,10 @@ impl Conn {
             stream,
             writer: Mutex::new(write_half),
             state: Mutex::new(ConnState {
-                credits: ack.credits,
                 dead: false,
                 pending: HashMap::new(),
             }),
-            cv: Condvar::new(),
+            gate: CreditGate::new(ack.credits),
             next_id: AtomicU64::new(1),
             chunk: net
                 .chunk_bytes
@@ -113,37 +118,33 @@ impl Conn {
             reader: Mutex::new(None),
         });
         let rd_conn = conn.clone();
-        let handle = std::thread::Builder::new()
-            .name("gbs-net-client".into())
-            .spawn(move || reader_loop(rd_conn, reader))
-            .map_err(|e| Error::Coordinator(format!("spawn client reader: {e}")))?;
-        *conn.reader.lock().unwrap() = Some(handle);
+        let handle = sync::thread::spawn_named("gbs-net-client".into(), move || {
+            reader_loop(rd_conn, reader)
+        });
+        *lock_unpoisoned(&conn.reader) = Some(handle);
         Ok(conn)
     }
 
     fn is_dead(&self) -> bool {
-        self.state.lock().unwrap().dead
+        lock_unpoisoned(&self.state).dead
     }
 
     /// Block until an admission credit is free (or the connection dies).
     fn acquire_credit(&self) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.dead {
-                return Err(Error::Coordinator("connection closed".into()));
-            }
-            if st.credits > 0 {
-                st.credits -= 1;
-                return Ok(());
-            }
-            st = self.cv.wait(st).unwrap();
+        if self.gate.acquire() {
+            Ok(())
+        } else {
+            Err(Error::Coordinator("connection closed".into()))
         }
     }
 
     /// Mark the connection dead and fail every pending request with a
     /// fresh typed error from `mk`; wakes all credit waiters.
     fn fail_all(&self, mk: &dyn Fn() -> Error) {
-        let mut st = self.state.lock().unwrap();
+        // Order matters: the state flag first (so a `submit` that
+        // already holds a credit bounces at its re-check), then the
+        // gate kill (so blocked credit waiters wake with a refusal).
+        let mut st = lock_unpoisoned(&self.state);
         st.dead = true;
         for (_, p) in st.pending.drain() {
             if let Pending::Sort { tx, .. } = p {
@@ -152,7 +153,7 @@ impl Conn {
             // Control entries resolve by sender drop (RecvError).
         }
         drop(st);
-        self.cv.notify_all();
+        self.gate.kill();
     }
 
     fn submit(&self, request: SortRequest) -> Result<mpsc::Receiver<Result<SortResponse>>> {
@@ -161,7 +162,7 @@ impl Conn {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             if st.dead {
                 return Err(Error::Coordinator("connection closed".into()));
             }
@@ -201,7 +202,7 @@ impl Conn {
         }
         buf.extend_from_slice(&encode_frame(&Frame::control(Opcode::Commit, id)));
         let wrote = {
-            let mut w = self.writer.lock().unwrap();
+            let mut w = lock_unpoisoned(&self.writer);
             w.write_all(&buf)
         };
         if let Err(e) = wrote {
@@ -216,14 +217,14 @@ impl Conn {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             if st.dead {
                 return Err(Error::Coordinator("connection closed".into()));
             }
             st.pending.insert(id, Pending::Control(tx));
         }
         let wrote = {
-            let mut w = self.writer.lock().unwrap();
+            let mut w = lock_unpoisoned(&self.writer);
             w.write_all(&encode_frame(&Frame::control(opcode, id)))
         };
         if let Err(e) = wrote {
@@ -238,11 +239,11 @@ impl Conn {
         {
             // Best-effort orderly goodbye; the socket shutdown below is
             // what actually unblocks the reader.
-            let mut w = self.writer.lock().unwrap();
+            let mut w = lock_unpoisoned(&self.writer);
             let _ = w.write_all(&encode_frame(&Frame::control(Opcode::Goodbye, 0)));
         }
         let _ = self.stream.shutdown(Shutdown::Both);
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        if let Some(h) = lock_unpoisoned(&self.reader).take() {
             let _ = h.join();
         }
     }
@@ -268,13 +269,13 @@ fn handle_frame(conn: &Conn, frame: Frame) -> Result<()> {
     match frame.opcode {
         Opcode::SortHeader => {
             let hdr = SortHeaderMsg::decode(&frame.payload)?;
-            let mut st = conn.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&conn.state);
             if let Some(Pending::Sort { header, .. }) = st.pending.get_mut(&frame.id) {
                 *header = Some(hdr);
             }
         }
         Opcode::ResultKeyChunk | Opcode::ResultPayloadChunk => {
-            let mut st = conn.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&conn.state);
             if let Some(Pending::Sort {
                 key_bytes,
                 payload_bytes,
@@ -289,7 +290,7 @@ fn handle_frame(conn: &Conn, frame: Frame) -> Result<()> {
             }
         }
         Opcode::ResultEnd => {
-            let entry = conn.state.lock().unwrap().pending.remove(&frame.id);
+            let entry = lock_unpoisoned(&conn.state).pending.remove(&frame.id);
             if let Some(Pending::Sort {
                 tx,
                 header,
@@ -307,20 +308,17 @@ fn handle_frame(conn: &Conn, frame: Frame) -> Result<()> {
                 // this socket; surface the typed failure everywhere.
                 return Err(error_from_wire(msg.code, msg.message));
             }
-            let entry = conn.state.lock().unwrap().pending.remove(&frame.id);
+            let entry = lock_unpoisoned(&conn.state).pending.remove(&frame.id);
             if let Some(Pending::Sort { tx, .. }) = entry {
                 let _ = tx.send(Err(error_from_wire(msg.code, msg.message)));
             }
         }
         Opcode::Credit => {
             let msg = CreditMsg::decode(&frame.payload)?;
-            let mut st = conn.state.lock().unwrap();
-            st.credits = st.credits.saturating_add(msg.credits);
-            drop(st);
-            conn.cv.notify_all();
+            conn.gate.grant(msg.credits);
         }
         Opcode::Pong | Opcode::DrainAck => {
-            let entry = conn.state.lock().unwrap().pending.remove(&frame.id);
+            let entry = lock_unpoisoned(&conn.state).pending.remove(&frame.id);
             if let Some(Pending::Control(tx)) = entry {
                 let _ = tx.send(());
             }

@@ -1,0 +1,186 @@
+//! Credit-window flow control, extracted from the TCP client/server so
+//! the loom models (`rust/tests/loom_models.rs`) can exhaustively check
+//! its orderings without sockets.
+//!
+//! Two halves of the same protocol:
+//!
+//! * [`CreditGate`] — the **client's** admission gate. The handshake
+//!   seeds it with the server's credit grant; [`CreditGate::acquire`]
+//!   blocks a submitter until a credit is free, each `Credit` frame
+//!   [`CreditGate::grant`]s one back, and connection death
+//!   ([`CreditGate::kill`]) wakes every waiter with a refusal so no
+//!   submitter blocks on a dead socket forever.
+//! * [`ServerWindow`] — the **server's** defensive mirror: a counter of
+//!   admission slots in use on one connection. Only the connection's
+//!   reader thread calls [`ServerWindow::begin`] (after checking
+//!   [`ServerWindow::is_exhausted`]), so check-then-begin is
+//!   single-writer and race-free; the pump thread and the reader's
+//!   error paths call [`ServerWindow::release`].
+//!
+//! The load-bearing ordering invariant (modeled under loom): the pump
+//! must `release()` the window **before** writing the `Credit` frame.
+//! Once the client sees the frame it may immediately spend the credit,
+//! and the resulting `SortBegin` must not trip the server's defensive
+//! exhaustion check.
+
+use crate::util::sync::{
+    lock_unpoisoned, wait_unpoisoned, AtomicUsize, Condvar, Mutex, Ordering,
+};
+
+struct GateState {
+    credits: u32,
+    dead: bool,
+}
+
+/// Client-side admission gate: a counted semaphore with a kill switch.
+/// See the module docs.
+pub struct CreditGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl CreditGate {
+    /// Gate seeded with the server's handshake credit grant.
+    pub fn new(credits: u32) -> Self {
+        CreditGate {
+            state: Mutex::new(GateState {
+                credits,
+                dead: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Take one credit, blocking while none are free. Returns `false`
+    /// when the gate has been killed (the connection died) — then and
+    /// only then no credit was consumed.
+    pub fn acquire(&self) -> bool {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            if st.dead {
+                return false;
+            }
+            if st.credits > 0 {
+                st.credits -= 1;
+                return true;
+            }
+            st = wait_unpoisoned(&self.cv, st);
+        }
+    }
+
+    /// Return `n` credits (a `Credit` frame arrived) and wake waiters.
+    pub fn grant(&self, n: u32) {
+        {
+            let mut st = lock_unpoisoned(&self.state);
+            st.credits = st.credits.saturating_add(n);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Kill the gate: every current and future [`CreditGate::acquire`]
+    /// returns `false`. Idempotent.
+    pub fn kill(&self) {
+        {
+            let mut st = lock_unpoisoned(&self.state);
+            st.dead = true;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Credits currently free (diagnostics/tests; racy by nature).
+    pub fn available(&self) -> u32 {
+        lock_unpoisoned(&self.state).credits
+    }
+}
+
+/// Server-side in-use counter for one connection's credit window. See
+/// the module docs for the threading contract.
+pub struct ServerWindow {
+    in_use: AtomicUsize,
+    limit: usize,
+}
+
+impl ServerWindow {
+    /// Window of `limit` admission slots.
+    pub fn new(limit: usize) -> Self {
+        ServerWindow {
+            in_use: AtomicUsize::new(0),
+            limit,
+        }
+    }
+
+    /// True when every slot is in use — a conforming client never
+    /// submits past its credits, so a `true` here means the peer is
+    /// broken or hostile and the request is shed without a credit.
+    pub fn is_exhausted(&self) -> bool {
+        self.in_use.load(Ordering::SeqCst) >= self.limit
+    }
+
+    /// Occupy one slot. Reader-thread only (single writer); callers
+    /// check [`ServerWindow::is_exhausted`] first.
+    pub fn begin(&self) {
+        self.in_use.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Free one slot. Must happen **before** the matching `Credit`
+    /// frame is written — see the module docs.
+    pub fn release(&self) {
+        self.in_use.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Slots currently in use.
+    pub fn in_use(&self) -> usize {
+        self.in_use.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn gate_counts_and_blocks() {
+        let gate = CreditGate::new(2);
+        assert!(gate.acquire());
+        assert!(gate.acquire());
+        assert_eq!(gate.available(), 0);
+        gate.grant(1);
+        assert!(gate.acquire());
+    }
+
+    #[test]
+    fn kill_wakes_blocked_acquirers() {
+        let gate = Arc::new(CreditGate::new(0));
+        let g2 = Arc::clone(&gate);
+        let waiter = std::thread::spawn(move || g2.acquire());
+        // The waiter blocks on zero credits until the kill lands.
+        gate.kill();
+        assert!(!waiter.join().expect("waiter thread"));
+        // Killed gates refuse immediately, even with credits granted.
+        gate.grant(5);
+        assert!(!gate.acquire());
+    }
+
+    #[test]
+    fn grant_hands_off_to_a_waiter() {
+        let gate = Arc::new(CreditGate::new(1));
+        assert!(gate.acquire());
+        let g2 = Arc::clone(&gate);
+        let waiter = std::thread::spawn(move || g2.acquire());
+        gate.grant(1);
+        assert!(waiter.join().expect("waiter thread"));
+    }
+
+    #[test]
+    fn window_tracks_slots() {
+        let w = ServerWindow::new(2);
+        assert!(!w.is_exhausted());
+        w.begin();
+        w.begin();
+        assert!(w.is_exhausted());
+        assert_eq!(w.in_use(), 2);
+        w.release();
+        assert!(!w.is_exhausted());
+    }
+}

@@ -5,6 +5,9 @@
 //! * [`wire`] — the framed, CRC-checked, length-prefixed binary
 //!   protocol (versioned header, typed opcodes, chunked streaming of
 //!   large key arrays, typed error frames). Pure codec: no sockets.
+//! * [`credit`] — the credit-window flow-control primitives shared by
+//!   both ends ([`credit::CreditGate`], [`credit::ServerWindow`]),
+//!   extracted so the loom models can check their orderings.
 //! * [`server`] — [`NetServer`]: a listener in front of a running
 //!   [`crate::coordinator::SortClient`], with credit-based admission,
 //!   typed load-shedding (`busy` / `too_large` / `shutdown` error
@@ -18,6 +21,7 @@
 //! layout and the flow-control state machine.
 
 pub mod client;
+pub mod credit;
 pub mod server;
 pub mod wire;
 

@@ -30,6 +30,7 @@
 //! new submissions with `shutdown` error frames, wait for in-flight
 //! sorts to complete and flush, then drain the inner service.
 
+use super::credit::ServerWindow;
 use super::wire::{
     chunk_frames, classify_error, encode_frame, error_frame, key_data_from_bytes,
     key_data_to_bytes, payload_from_bytes, payload_to_bytes, read_frame, CreditMsg, ErrorCode,
@@ -39,13 +40,17 @@ use crate::config::NetConfig;
 use crate::coordinator::{SortClient, SortRequest, SortResponse};
 use crate::error::{Error, Result};
 use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::util::sync::{
+    self as sync, lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned, Arc, AtomicBool,
+    Condvar, Mutex, Ordering,
+};
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+use sync::thread::JoinHandle;
 
 /// How long [`NetServer::shutdown`] waits for in-flight sorts before
 /// giving up and closing sockets anyway.
@@ -61,11 +66,11 @@ struct Gauge {
 
 impl Gauge {
     fn incr(&self) {
-        *self.n.lock().unwrap() += 1;
+        *lock_unpoisoned(&self.n) += 1;
     }
 
     fn decr(&self) {
-        let mut g = self.n.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.n);
         *g = g.saturating_sub(1);
         if *g == 0 {
             self.cv.notify_all();
@@ -74,13 +79,13 @@ impl Gauge {
 
     fn wait_zero(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
-        let mut g = self.n.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.n);
         while *g != 0 {
             let now = Instant::now();
             if now >= deadline {
                 return false;
             }
-            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = wait_timeout_unpoisoned(&self.cv, g, deadline - now);
             g = guard;
         }
         true
@@ -132,10 +137,9 @@ impl NetServer {
             conns: Mutex::new(Vec::new()),
         });
         let accept_shared = shared.clone();
-        let accept = std::thread::Builder::new()
-            .name("gbs-net-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared))
-            .map_err(|e| Error::Coordinator(format!("spawn accept thread: {e}")))?;
+        let accept = sync::thread::spawn_named("gbs-net-accept".into(), move || {
+            accept_loop(listener, accept_shared)
+        });
         Ok(NetServer {
             local_addr,
             shared,
@@ -158,18 +162,18 @@ impl NetServer {
 
     /// True once some client has sent a `Drain` frame.
     pub fn drain_requested(&self) -> bool {
-        *self.shared.drain.requested.lock().unwrap()
+        *lock_unpoisoned(&self.shared.drain.requested)
     }
 
     /// Block until a client requests a drain (or the timeout passes);
     /// returns whether a drain was requested. `gbs serve --listen` sits
     /// here, then calls [`NetServer::shutdown`].
     pub fn wait_for_drain_request(&self, timeout: Option<Duration>) -> bool {
-        let mut g = self.shared.drain.requested.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.shared.drain.requested);
         match timeout {
             None => {
                 while !*g {
-                    g = self.shared.drain.cv.wait(g).unwrap();
+                    g = wait_unpoisoned(&self.shared.drain.cv, g);
                 }
                 true
             }
@@ -180,12 +184,8 @@ impl NetServer {
                     if now >= deadline {
                         return false;
                     }
-                    let (guard, _) = self
-                        .shared
-                        .drain
-                        .cv
-                        .wait_timeout(g, deadline - now)
-                        .unwrap();
+                    let (guard, _) =
+                        wait_timeout_unpoisoned(&self.shared.drain.cv, g, deadline - now);
                     g = guard;
                 }
                 true
@@ -216,7 +216,7 @@ impl NetServer {
             self.shared.metrics.incr("net_drain_timeout", 1);
         }
         // Unblock idle readers; their threads exit on the closed socket.
-        for s in self.shared.conns.lock().unwrap().iter() {
+        for s in lock_unpoisoned(&self.shared.conns).iter() {
             let _ = s.shutdown(Shutdown::Both);
         }
         for h in conn_handles {
@@ -253,15 +253,12 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>
         let Ok(stream) = stream else { continue };
         shared.metrics.incr("net_connections", 1);
         if let Ok(clone) = stream.try_clone() {
-            shared.conns.lock().unwrap().push(clone);
+            lock_unpoisoned(&shared.conns).push(clone);
         }
         let conn_shared = shared.clone();
-        if let Ok(h) = std::thread::Builder::new()
-            .name("gbs-net-conn".into())
-            .spawn(move || handle_connection(stream, conn_shared))
-        {
-            handles.push(h);
-        }
+        handles.push(sync::thread::spawn_named("gbs-net-conn".into(), move || {
+            handle_connection(stream, conn_shared)
+        }));
     }
     handles
 }
@@ -274,7 +271,7 @@ type PumpItem = (u64, mpsc::Receiver<Result<SortResponse>>);
 /// reader notices.
 fn send(writer: &Mutex<TcpStream>, shared: &Shared, frame: &Frame) -> bool {
     let bytes = encode_frame(frame);
-    let mut w = writer.lock().unwrap();
+    let mut w = lock_unpoisoned(writer);
     match w.write_all(&bytes) {
         Ok(()) => {
             shared.metrics.incr("net_frames_tx", 1);
@@ -336,27 +333,25 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
         .min((hello.max_frame_len as usize).max(64));
 
     // In-order completion pump; shares the connection's credit window.
-    let window = Arc::new(AtomicUsize::new(0));
+    let window = Arc::new(ServerWindow::new(shared.net.credits));
     let (pump_tx, pump_rx) = mpsc::channel::<PumpItem>();
     let pump_writer = writer.clone();
     let pump_shared = shared.clone();
     let pump_window = window.clone();
-    let pump = std::thread::Builder::new()
-        .name("gbs-net-pump".into())
-        .spawn(move || pump_loop(pump_rx, pump_writer, pump_shared, pump_window, chunk));
+    let pump = sync::thread::spawn_named("gbs-net-pump".into(), move || {
+        pump_loop(pump_rx, pump_writer, pump_shared, pump_window, chunk)
+    });
 
     read_loop(&mut reader, &writer, &shared, &window, pump_tx);
 
-    if let Ok(h) = pump {
-        let _ = h.join();
-    }
+    let _ = pump.join();
 }
 
 fn pump_loop(
     rx: mpsc::Receiver<PumpItem>,
     writer: Arc<Mutex<TcpStream>>,
     shared: Arc<Shared>,
-    window: Arc<AtomicUsize>,
+    window: Arc<ServerWindow>,
     chunk: usize,
 ) {
     while let Ok((id, resp_rx)) = rx.recv() {
@@ -377,7 +372,8 @@ fn pump_loop(
         // Free the window slot *before* returning the credit: once the
         // client sees the Credit frame it may immediately spend it, and
         // the next SortBegin must not trip the defensive window check.
-        window.fetch_sub(1, Ordering::SeqCst);
+        // (`rust/tests/loom_models.rs` checks this ordering.)
+        window.release();
         send(
             &writer,
             &shared,
@@ -445,7 +441,7 @@ fn read_loop(
     reader: &mut BufReader<TcpStream>,
     writer: &Arc<Mutex<TcpStream>>,
     shared: &Arc<Shared>,
-    window: &Arc<AtomicUsize>,
+    window: &Arc<ServerWindow>,
     pump_tx: mpsc::Sender<PumpItem>,
 ) {
     let mut partials: HashMap<u64, PartialRequest> = HashMap::new();
@@ -489,7 +485,7 @@ fn read_loop(
                 }
                 // Defensive credit enforcement: a conforming client
                 // never trips this, so no credit is returned.
-                if window.load(Ordering::SeqCst) >= shared.net.credits {
+                if window.is_exhausted() {
                     shared.metrics.incr("net_shed_busy", 1);
                     send(
                         writer,
@@ -538,7 +534,7 @@ fn read_loop(
                     continue;
                 }
                 shared.metrics.incr("net_requests", 1);
-                window.fetch_add(1, Ordering::SeqCst);
+                window.begin();
                 partials.insert(
                     frame.id,
                     PartialRequest {
@@ -579,7 +575,7 @@ fn read_loop(
                         shared,
                         &error_frame(0, ErrorCode::Malformed, "chunk bytes exceed declared total"),
                     );
-                    window.fetch_sub(1, Ordering::SeqCst);
+                    window.release();
                     partials.remove(&frame.id);
                     break;
                 }
@@ -602,12 +598,12 @@ fn read_loop(
                             // The pump owns the credit/window release.
                             if pump_tx.send((frame.id, rx)).is_err() {
                                 shared.inflight.decr();
-                                window.fetch_sub(1, Ordering::SeqCst);
+                                window.release();
                             }
                         }
                         Err(e) => {
                             shared.metrics.incr("net_requests_failed", 1);
-                            window.fetch_sub(1, Ordering::SeqCst);
+                            window.release();
                             send(
                                 writer,
                                 shared,
@@ -626,7 +622,7 @@ fn read_loop(
                     },
                     Err(e) => {
                         shared.metrics.incr("net_malformed", 1);
-                        window.fetch_sub(1, Ordering::SeqCst);
+                        window.release();
                         send(
                             writer,
                             shared,
@@ -650,7 +646,7 @@ fn read_loop(
             }
             Opcode::Drain => {
                 send(writer, shared, &Frame::control(Opcode::DrainAck, frame.id));
-                let mut g = shared.drain.requested.lock().unwrap();
+                let mut g = lock_unpoisoned(&shared.drain.requested);
                 *g = true;
                 shared.drain.cv.notify_all();
             }
@@ -671,7 +667,7 @@ fn read_loop(
     // Abandoned partials release their credit-window slots; they never
     // reached the service, so there is nothing to leak there.
     for _ in partials.drain() {
-        window.fetch_sub(1, Ordering::SeqCst);
+        window.release();
     }
 }
 

@@ -173,6 +173,11 @@ impl PjrtRuntime {
 
 /// Build a rank-1 U32 literal from a key slice.
 fn literal_from_u32(data: &[Key]) -> Result<xla::Literal> {
+    // SAFETY: the pointer and length come from a live `&[u32]`, so the
+    // region is valid, initialized and borrowed for this scope;
+    // `size_of_val` gives its exact byte length, and any alignment
+    // satisfies `u8`'s. The view is read-only and never outlives
+    // `data`.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     };

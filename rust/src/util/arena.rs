@@ -32,7 +32,8 @@ use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::fmt;
 use std::ops::{Deref, DerefMut};
-use std::sync::{Arc, Mutex};
+
+use crate::util::sync::{lock_unpoisoned, Arc, Mutex, MutexGuard};
 
 /// Free buffers retained per shelf — enough for every worker of a
 /// large engine to hold one plus spares, small enough that a
@@ -99,11 +100,8 @@ impl ScratchArena {
         ScratchArena::default()
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, ArenaInner> {
-        match self.inner.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        }
+    fn lock(&self) -> MutexGuard<'_, ArenaInner> {
+        lock_unpoisoned(&self.inner)
     }
 
     /// Check out an empty buffer (recycled capacity when available).
@@ -194,10 +192,7 @@ impl<T: Send + 'static> Drop for ScratchBuf<T> {
         }
         vec.clear();
         let bytes = vec.capacity() * std::mem::size_of::<T>();
-        let mut g = match self.home.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
+        let mut g = lock_unpoisoned(&self.home);
         let shelf = g
             .shelves
             .entry(TypeId::of::<Vec<T>>())

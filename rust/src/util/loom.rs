@@ -1,0 +1,955 @@
+//! A miniature, in-tree **model checker** for the crate's sync core —
+//! the offline stand-in for the `loom` crate (this build has no
+//! crates.io access, so the exploration engine lives here).
+//!
+//! [`model`] runs a closure repeatedly, exploring every distinct
+//! scheduling of the model threads it spawns (bounded by a preemption
+//! budget). The closure builds its concurrent scenario out of the
+//! mirrored primitives in this module — [`Mutex`], [`Condvar`], the
+//! atomics, and [`thread::spawn`] — which all route through a
+//! deterministic token scheduler instead of the OS:
+//!
+//! * Exactly **one** model thread runs at a time. Every sync operation
+//!   is a *choice point* where the scheduler may hand the token to any
+//!   runnable thread; DFS over those choices enumerates interleavings.
+//! * Memory is sequentially consistent (a sound over-approximation for
+//!   the repo, whose hot-path atomics are `SeqCst`/`Relaxed` counters
+//!   guarded by the dispatch protocol itself).
+//! * If no thread can run and some are still blocked, the iteration
+//!   **deadlocks** and `model` panics with the blocked set — this is
+//!   how lost wakeups surface.
+//!
+//! Exploration is bounded two ways: `GBS_LOOM_MAX_PREEMPTIONS`
+//! (default 2) caps involuntary context switches per execution, the
+//! standard state-space reduction from CHESS-style checkers, and
+//! `GBS_LOOM_MAX_ITER` (default 50 000) caps total executions —
+//! exceeding it panics rather than silently truncating coverage.
+//!
+//! The crate's production code reaches these types through the
+//! [`crate::util::sync`] facade under `--cfg loom`; the models
+//! themselves live in `rust/tests/loom_models.rs`. Two rules keep the
+//! checker sound: create every modeled object *inside* the closure
+//! (object identity is per-execution), and keep the closure
+//! deterministic apart from scheduling (no time, no OS randomness).
+
+use std::any::Any;
+use std::cell::{RefCell, UnsafeCell};
+use std::collections::{HashMap, VecDeque};
+use std::ops::{Deref, DerefMut};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::Ordering as StdOrdering;
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex, OnceLock};
+
+/// `Arc` needs no modeling (its refcounts never order user memory the
+/// models care about under SeqCst); re-exported so facade users can
+/// import everything from one place.
+pub use std::sync::Arc;
+/// Orderings are accepted and ignored — the model is SeqCst-only.
+pub use std::sync::atomic::Ordering;
+
+const DEFAULT_MAX_ITER: usize = 50_000;
+const DEFAULT_MAX_PREEMPTIONS: usize = 2;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Panic payload used to unwind model threads when an execution is
+/// aborted (deadlock or a user panic elsewhere). Swallowed by the
+/// per-thread catch handler; never escapes to the test.
+struct AbortExec;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ThreadSt {
+    Runnable,
+    Blocked,
+    Finished,
+}
+
+/// One decision point with more than one runnable candidate. The DFS
+/// path is the sequence of these; single-candidate points are not
+/// recorded (they replay deterministically).
+struct Branch {
+    choices: Vec<usize>,
+    index: usize,
+}
+
+struct SchedState {
+    threads: Vec<ThreadSt>,
+    active: Option<usize>,
+    live: usize,
+    path: Vec<Branch>,
+    /// Decision index within `path` for the current execution.
+    depth: usize,
+    preemptions: usize,
+    abort: bool,
+    deadlock: Option<String>,
+    panic: Option<Box<dyn Any + Send>>,
+    mutexes: HashMap<usize, MutexSt>,
+    cv_waiters: HashMap<usize, VecDeque<usize>>,
+    join_waiters: HashMap<usize, Vec<usize>>,
+    next_obj_id: usize,
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+#[derive(Default)]
+struct MutexSt {
+    held: bool,
+    waiters: VecDeque<usize>,
+}
+
+struct Sched {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    max_preemptions: usize,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(StdArc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(StdArc<Sched>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+impl Sched {
+    /// Poison-tolerant state access — the checker must keep working
+    /// while model threads unwind (their guard drops re-enter here).
+    fn st(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Pick the next thread to run. `prev` is the thread giving up the
+    /// token (None when it just finished). Called with the state lock
+    /// held; must not panic while holding it.
+    fn reschedule(&self, st: &mut SchedState, prev: Option<usize>) {
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| **t == ThreadSt::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            if st.live == 0 {
+                st.active = None;
+            } else if !st.abort {
+                let blocked: Vec<usize> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| **t == ThreadSt::Blocked)
+                    .map(|(i, _)| i)
+                    .collect();
+                st.deadlock = Some(format!(
+                    "loom model: deadlock — no runnable thread, blocked threads {blocked:?} \
+                     (a lost wakeup or missing notify)"
+                ));
+                st.abort = true;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let prev_runnable = prev.is_some_and(|p| st.threads[p] == ThreadSt::Runnable);
+        let mut choices = runnable;
+        if prev_runnable {
+            // Explore "keep running" first; preempting costs budget.
+            let p = prev.expect("prev_runnable implies prev");
+            choices.retain(|&t| t != p);
+            choices.insert(0, p);
+            if st.preemptions >= self.max_preemptions {
+                choices.truncate(1);
+            }
+        }
+        let next = if choices.len() == 1 {
+            choices[0]
+        } else if st.depth < st.path.len() {
+            let b = &st.path[st.depth];
+            if b.choices != choices {
+                // The closure behaved differently on replay — give a
+                // diagnosable failure instead of exploring garbage.
+                st.abort = true;
+                st.deadlock = Some(format!(
+                    "loom model: nondeterministic closure — replay expected choices \
+                     {:?} at decision {}, got {choices:?}",
+                    b.choices, st.depth
+                ));
+                self.cv.notify_all();
+                return;
+            }
+            let n = b.choices[b.index];
+            st.depth += 1;
+            n
+        } else {
+            let n = choices[0];
+            st.path.push(Branch { choices, index: 0 });
+            st.depth += 1;
+            n
+        };
+        if prev_runnable && Some(next) != prev {
+            st.preemptions += 1;
+        }
+        st.active = Some(next);
+        self.cv.notify_all();
+    }
+
+    /// Park the calling OS thread until the scheduler hands `me` the
+    /// token. On abort, unwinds via [`AbortExec`] — unless this thread
+    /// is already panicking (a guard drop mid-unwind), where a second
+    /// panic would abort the process; then it simply returns and the
+    /// unwind continues under the (discarded) aborted execution.
+    fn wait_for_turn(&self, me: usize) {
+        let mut st = self.st();
+        loop {
+            if st.abort {
+                drop(st);
+                if std::thread::panicking() {
+                    return;
+                }
+                panic::panic_any(AbortExec);
+            }
+            if st.active == Some(me) {
+                return;
+            }
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// A voluntary choice point: offer the token to any runnable
+    /// thread (including `me`), then wait to be scheduled again.
+    fn explore_point(&self, me: usize) {
+        {
+            let mut st = self.st();
+            if st.abort {
+                return;
+            }
+            self.reschedule(&mut st, Some(me));
+        }
+        self.wait_for_turn(me);
+    }
+
+    /// Block `me` after registering it in a waiter queue, atomically
+    /// with respect to the scheduler. Returns once `me` is runnable
+    /// again *and* holds the token.
+    fn block_on<F: FnOnce(&mut SchedState)>(&self, me: usize, register: F) {
+        {
+            let mut st = self.st();
+            if st.abort {
+                drop(st);
+                if std::thread::panicking() {
+                    return;
+                }
+                panic::panic_any(AbortExec);
+            }
+            register(&mut st);
+            st.threads[me] = ThreadSt::Blocked;
+            self.reschedule(&mut st, Some(me));
+        }
+        self.wait_for_turn(me);
+    }
+
+    fn mutex_acquire(&self, me: usize, id: usize) {
+        loop {
+            {
+                let mut st = self.st();
+                let abort = st.abort;
+                let ms = st.mutexes.entry(id).or_default();
+                if abort || !ms.held {
+                    // Under abort the grant is unconditional: lockers on
+                    // the unwind path must make progress, and the
+                    // execution's data is discarded anyway.
+                    ms.held = true;
+                    return;
+                }
+            }
+            self.block_on(me, |st| {
+                st.mutexes.entry(id).or_default().waiters.push_back(me);
+            });
+            // Woken by a release — retry; another thread may have
+            // grabbed the lock in between.
+        }
+    }
+
+    fn release_mutex_locked(st: &mut SchedState, id: usize) {
+        let ms = st.mutexes.entry(id).or_default();
+        ms.held = false;
+        if let Some(w) = ms.waiters.pop_front() {
+            st.threads[w] = ThreadSt::Runnable;
+        }
+    }
+
+    fn mutex_release(&self, id: usize) {
+        let mut st = self.st();
+        Self::release_mutex_locked(&mut st, id);
+        // No choice point on release: the next shared-memory operation
+        // of every thread carries its own pre-operation point, which
+        // explores the post-release interleavings.
+    }
+
+    /// Atomically release the mutex and enqueue on the condvar, then
+    /// block — the wait half of `Condvar::wait`.
+    fn condvar_wait(&self, me: usize, cv_id: usize, mutex_id: usize) {
+        self.block_on(me, |st| {
+            st.cv_waiters.entry(cv_id).or_default().push_back(me);
+            Self::release_mutex_locked(st, mutex_id);
+        });
+    }
+
+    fn notify(&self, me: usize, cv_id: usize, all: bool) {
+        self.explore_point(me);
+        let mut st = self.st();
+        if let Some(q) = st.cv_waiters.get_mut(&cv_id) {
+            let n = if all { q.len() } else { 1.min(q.len()) };
+            let woken: Vec<usize> = q.drain(..n).collect();
+            for w in woken {
+                st.threads[w] = ThreadSt::Runnable;
+            }
+        }
+    }
+
+    fn obj_id(&self, cell: &OnceLock<usize>) -> usize {
+        *cell.get_or_init(|| {
+            let mut st = self.st();
+            st.next_obj_id += 1;
+            st.next_obj_id
+        })
+    }
+}
+
+/// Choice point for the calling thread, if it is a model thread.
+fn point() {
+    if let Some((sched, me)) = current() {
+        sched.explore_point(me);
+    }
+}
+
+fn thread_main(sched: StdArc<Sched>, me: usize, body: impl FnOnce()) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((StdArc::clone(&sched), me)));
+    let result = panic::catch_unwind(AssertUnwindSafe(|| {
+        sched.wait_for_turn(me);
+        body();
+    }));
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    let mut st = sched.st();
+    st.threads[me] = ThreadSt::Finished;
+    st.live -= 1;
+    if let Some(ws) = st.join_waiters.remove(&me) {
+        for w in ws {
+            st.threads[w] = ThreadSt::Runnable;
+        }
+    }
+    if let Err(payload) = result {
+        if !payload.is::<AbortExec>() && st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+        st.abort = true;
+        sched.cv.notify_all();
+    } else {
+        sched.reschedule(&mut st, None);
+    }
+    if st.live == 0 {
+        sched.cv.notify_all();
+    }
+}
+
+/// Advance the DFS path to the next unexplored schedule. Returns false
+/// when the space is exhausted.
+fn advance(path: &mut Vec<Branch>) -> bool {
+    while let Some(b) = path.last_mut() {
+        if b.index + 1 < b.choices.len() {
+            b.index += 1;
+            return true;
+        }
+        path.pop();
+    }
+    false
+}
+
+/// Run `f` under every distinct bounded schedule. Panics (with the
+/// first failing schedule's payload) if any interleaving panics,
+/// deadlocks, or exceeds the iteration cap. Bounds come from
+/// `GBS_LOOM_MAX_ITER` / `GBS_LOOM_MAX_PREEMPTIONS`.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    model_with_limits(
+        f,
+        env_usize("GBS_LOOM_MAX_ITER", DEFAULT_MAX_ITER),
+        env_usize("GBS_LOOM_MAX_PREEMPTIONS", DEFAULT_MAX_PREEMPTIONS),
+    );
+}
+
+/// [`model`] with explicit bounds — for callers (and the checker's own
+/// tests) that must not depend on process-global env vars.
+pub fn model_with_limits<F>(f: F, max_iter: usize, max_preemptions: usize)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let max_pre = max_preemptions;
+    let f = StdArc::new(f);
+    let mut path: Vec<Branch> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        assert!(
+            iterations <= max_iter,
+            "loom model: exceeded {max_iter} executions (raise GBS_LOOM_MAX_ITER or \
+             shrink the model)"
+        );
+        let sched = StdArc::new(Sched {
+            state: StdMutex::new(SchedState {
+                threads: vec![ThreadSt::Runnable],
+                active: Some(0),
+                live: 1,
+                path: std::mem::take(&mut path),
+                depth: 0,
+                preemptions: 0,
+                abort: false,
+                deadlock: None,
+                panic: None,
+                mutexes: HashMap::new(),
+                cv_waiters: HashMap::new(),
+                join_waiters: HashMap::new(),
+                next_obj_id: 0,
+                os_handles: Vec::new(),
+            }),
+            cv: StdCondvar::new(),
+            max_preemptions: max_pre,
+        });
+        let body = StdArc::clone(&f);
+        let s2 = StdArc::clone(&sched);
+        let root = std::thread::Builder::new()
+            .name("loom-0".into())
+            .spawn(move || thread_main(s2, 0, move || body()))
+            .expect("spawn loom root thread");
+        sched.st().os_handles.push(root);
+        {
+            let mut st = sched.st();
+            while st.live > 0 && !st.abort {
+                st = match sched.cv.wait(st) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        }
+        // Join every OS thread of this execution (aborted ones unwind
+        // out of their parks) so no thread leaks into the next one.
+        loop {
+            let handle = sched.st().os_handles.pop();
+            match handle {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+        let mut st = sched.st();
+        if let Some(p) = st.panic.take() {
+            drop(st);
+            panic::resume_unwind(p);
+        }
+        if let Some(d) = st.deadlock.take() {
+            drop(st);
+            panic!("{d} (execution {iterations})");
+        }
+        path = std::mem::take(&mut st.path);
+        drop(st);
+        drop(sched);
+        if !advance(&mut path) {
+            break;
+        }
+    }
+}
+
+/// Mutual exclusion under the model scheduler. API mirrors
+/// `std::sync::Mutex` (lock never reports poison — an in-model panic
+/// aborts the whole execution instead). Objects must be created inside
+/// the [`model`] closure; outside a model the lock degenerates to an
+/// unchecked grant (single-threaded use only).
+pub struct Mutex<T: ?Sized> {
+    id: OnceLock<usize>,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: the scheduler's `held` flag grants at most one live guard at
+// a time while a model runs (only one model thread executes at any
+// instant, and the flag is toggled under the scheduler lock); outside
+// a model the type is documented single-threaded. `T: Send` bounds
+// match std's Mutex.
+unsafe impl<T: ?Sized + Send> Send for Mutex<T> {}
+// SAFETY: as above — shared references only hand out data through the
+// exclusion protocol.
+unsafe impl<T: ?Sized + Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Mutex {
+            id: OnceLock::new(),
+            data: UnsafeCell::new(value),
+        }
+    }
+}
+
+// The mirrored types print opaquely (no data access — a `Debug` format
+// must not become a scheduler choice point) so facade structs can keep
+// `#[derive(Debug)]` under `--cfg loom`.
+impl<T: ?Sized> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad("Mutex { .. }")
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> std::sync::LockResult<MutexGuard<'_, T>> {
+        if let Some((sched, me)) = current() {
+            let id = sched.obj_id(&self.id);
+            sched.explore_point(me);
+            sched.mutex_acquire(me, id);
+        }
+        Ok(MutexGuard { lock: self })
+    }
+}
+
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: the guard exists only while the model scheduler (or
+        // documented single-threaded use) grants exclusive access.
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as in `deref` — exclusive access for the guard's
+        // lifetime.
+        unsafe { &mut *self.lock.data.get() }
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((sched, _)) = current() {
+            if let Some(&id) = self.lock.id.get() {
+                sched.mutex_release(id);
+            }
+        }
+    }
+}
+
+/// Condition variable under the model scheduler. `notify_one` wakes
+/// the FIFO-first waiter; waits never wake spuriously and never time
+/// out (the facade's timed-wait helper degrades to a plain wait under
+/// `--cfg loom`).
+#[derive(Default)]
+pub struct Condvar {
+    id: OnceLock<usize>,
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad("Condvar { .. }")
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar { id: OnceLock::new() }
+    }
+
+    pub fn wait<'a, T: ?Sized>(
+        &self,
+        guard: MutexGuard<'a, T>,
+    ) -> std::sync::LockResult<MutexGuard<'a, T>> {
+        if let Some((sched, me)) = current() {
+            let lock = guard.lock;
+            let cv_id = sched.obj_id(&self.id);
+            let mutex_id = sched.obj_id(&lock.id);
+            // The manual release below replaces the guard's unlock.
+            std::mem::forget(guard);
+            sched.condvar_wait(me, cv_id, mutex_id);
+            sched.mutex_acquire(me, mutex_id);
+            Ok(MutexGuard { lock })
+        } else {
+            // Outside a model there is no scheduler to block on;
+            // return as a spurious wakeup (callers loop on predicates).
+            Ok(guard)
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((sched, me)) = current() {
+            let id = sched.obj_id(&self.id);
+            sched.notify(me, id, false);
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((sched, me)) = current() {
+            let id = sched.obj_id(&self.id);
+            sched.notify(me, id, true);
+        }
+    }
+}
+
+macro_rules! model_atomic_int {
+    ($name:ident, $std:ty, $ty:ty) => {
+        /// Sequentially consistent model atomic; every access is a
+        /// scheduler choice point. Ordering arguments are ignored.
+        pub struct $name {
+            v: $std,
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                // Opaque on purpose: reading the value would be a
+                // scheduler choice point.
+                f.pad(concat!(stringify!($name), " { .. }"))
+            }
+        }
+
+        impl $name {
+            pub const fn new(v: $ty) -> Self {
+                Self { v: <$std>::new(v) }
+            }
+            pub fn load(&self, _order: Ordering) -> $ty {
+                point();
+                self.v.load(StdOrdering::SeqCst)
+            }
+            pub fn store(&self, val: $ty, _order: Ordering) {
+                point();
+                self.v.store(val, StdOrdering::SeqCst);
+            }
+            pub fn swap(&self, val: $ty, _order: Ordering) -> $ty {
+                point();
+                self.v.swap(val, StdOrdering::SeqCst)
+            }
+            pub fn fetch_add(&self, val: $ty, _order: Ordering) -> $ty {
+                point();
+                self.v.fetch_add(val, StdOrdering::SeqCst)
+            }
+            pub fn fetch_sub(&self, val: $ty, _order: Ordering) -> $ty {
+                point();
+                self.v.fetch_sub(val, StdOrdering::SeqCst)
+            }
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                point();
+                self.v
+                    .compare_exchange(current, new, StdOrdering::SeqCst, StdOrdering::SeqCst)
+            }
+        }
+    };
+}
+
+model_atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+model_atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+model_atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+
+/// Sequentially consistent model `AtomicBool`; every access is a
+/// scheduler choice point.
+pub struct AtomicBool {
+    v: std::sync::atomic::AtomicBool,
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad("AtomicBool { .. }")
+    }
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self {
+            v: std::sync::atomic::AtomicBool::new(v),
+        }
+    }
+    pub fn load(&self, _order: Ordering) -> bool {
+        point();
+        self.v.load(StdOrdering::SeqCst)
+    }
+    pub fn store(&self, val: bool, _order: Ordering) {
+        point();
+        self.v.store(val, StdOrdering::SeqCst);
+    }
+    pub fn swap(&self, val: bool, _order: Ordering) -> bool {
+        point();
+        self.v.swap(val, StdOrdering::SeqCst)
+    }
+}
+
+/// Model threads — `spawn`/`JoinHandle` mirroring `std::thread` for
+/// code routed through the facade. Outside a model, spawns fall back
+/// to real OS threads.
+pub mod thread {
+    use super::{
+        current, panic, point, thread_main, AbortExec, Any, StdArc, StdMutex, ThreadSt,
+    };
+
+    enum Inner<T> {
+        Model {
+            sched: StdArc<super::Sched>,
+            id: usize,
+            slot: StdArc<StdMutex<Option<T>>>,
+        },
+        Os(std::thread::JoinHandle<T>),
+    }
+
+    pub struct JoinHandle<T>(Inner<T>);
+
+    impl<T> std::fmt::Debug for JoinHandle<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            // Mirrors `std::thread::JoinHandle`'s `Debug` so facade
+            // structs can keep `#[derive(Debug)]` under `--cfg loom`.
+            f.pad("JoinHandle { .. }")
+        }
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                Inner::Os(h) => h.join(),
+                Inner::Model { sched, id, slot } => {
+                    let (_, me) = current().expect("model JoinHandle joined outside its model");
+                    loop {
+                        {
+                            let st = sched.st();
+                            if st.abort {
+                                drop(st);
+                                if std::thread::panicking() {
+                                    return Err(Box::new(AbortExec) as Box<dyn Any + Send>);
+                                }
+                                panic::panic_any(AbortExec);
+                            }
+                            if st.threads[id] == ThreadSt::Finished {
+                                break;
+                            }
+                        }
+                        sched.block_on(me, |st| {
+                            st.join_waiters.entry(id).or_default().push(me);
+                        });
+                    }
+                    point();
+                    let value = match slot.lock() {
+                        Ok(mut g) => g.take(),
+                        Err(p) => p.into_inner().take(),
+                    };
+                    Ok(value.expect("joined model thread stored no result"))
+                }
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match current() {
+            None => JoinHandle(Inner::Os(std::thread::spawn(f))),
+            Some((sched, me)) => {
+                let id = {
+                    let mut st = sched.st();
+                    if st.abort {
+                        drop(st);
+                        panic::panic_any(AbortExec);
+                    }
+                    let id = st.threads.len();
+                    st.threads.push(ThreadSt::Runnable);
+                    st.live += 1;
+                    id
+                };
+                let slot = StdArc::new(StdMutex::new(None));
+                let slot2 = StdArc::clone(&slot);
+                let s2 = StdArc::clone(&sched);
+                let os = std::thread::Builder::new()
+                    .name(format!("loom-{id}"))
+                    .spawn(move || {
+                        thread_main(s2, id, move || {
+                            let value = f();
+                            match slot2.lock() {
+                                Ok(mut g) => *g = Some(value),
+                                Err(p) => *p.into_inner() = Some(value),
+                            }
+                        });
+                    })
+                    .expect("spawn model thread");
+                sched.st().os_handles.push(os);
+                // The new thread is now schedulable — choice point.
+                sched.explore_point(me);
+                JoinHandle(Inner::Model { sched, id, slot })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Mutex as TestMutex;
+
+    #[test]
+    fn explores_both_store_orders() {
+        // Two racing stores: exhaustive exploration must observe both
+        // final values across iterations.
+        let seen = StdArc::new(TestMutex::new(HashSet::new()));
+        let record = StdArc::clone(&seen);
+        model(move || {
+            let x = Arc::new(AtomicUsize::new(0));
+            let x2 = Arc::clone(&x);
+            let t = thread::spawn(move || x2.store(1, Ordering::SeqCst));
+            x.store(2, Ordering::SeqCst);
+            t.join().expect("store thread");
+            record
+                .lock()
+                .expect("recorder")
+                .insert(x.load(Ordering::SeqCst));
+        });
+        let seen = seen.lock().expect("recorder");
+        assert!(seen.contains(&1) && seen.contains(&2), "saw {seen:?}");
+    }
+
+    #[test]
+    fn mutex_provides_exclusion() {
+        model(|| {
+            let m = Arc::new(Mutex::new(0usize));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = Arc::clone(&m);
+                    thread::spawn(move || {
+                        for _ in 0..2 {
+                            let mut g = m.lock().expect("model mutex");
+                            let v = *g;
+                            *g = v + 1;
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("incrementer");
+            }
+            assert_eq!(*m.lock().expect("model mutex"), 4);
+        });
+    }
+
+    #[test]
+    fn condvar_handoff_completes() {
+        // Correct predicate-loop handoff: no interleaving deadlocks.
+        model(|| {
+            let m = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+            let t = thread::spawn(move || {
+                *m2.lock().expect("flag") = true;
+                cv2.notify_one();
+            });
+            let mut g = m.lock().expect("flag");
+            while !*g {
+                g = cv.wait(g).expect("wait");
+            }
+            drop(g);
+            t.join().expect("producer");
+        });
+    }
+
+    #[test]
+    fn detects_lost_wakeup_as_deadlock() {
+        // Buggy consumer: reads the flag *outside* the mutex, so the
+        // producer can set-and-notify between the read and the wait —
+        // a classic lost wakeup the checker must flag as a deadlock.
+        let result = panic::catch_unwind(|| {
+            model(|| {
+                let flag = Arc::new(AtomicUsize::new(0));
+                let m = Arc::new(Mutex::new(()));
+                let cv = Arc::new(Condvar::new());
+                let (flag2, m2, cv2) = (Arc::clone(&flag), Arc::clone(&m), Arc::clone(&cv));
+                let t = thread::spawn(move || {
+                    flag2.store(1, Ordering::SeqCst);
+                    cv2.notify_one();
+                });
+                if flag.load(Ordering::SeqCst) == 0 {
+                    let g = m.lock().expect("gate");
+                    let _g = cv.wait(g).expect("wait");
+                }
+                t.join().expect("producer");
+            });
+        });
+        let err = result.expect_err("lost wakeup must be detected");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("deadlock"), "unexpected panic: {msg:?}");
+    }
+
+    #[test]
+    fn join_returns_value() {
+        model(|| {
+            let t = thread::spawn(|| 41usize + 1);
+            assert_eq!(t.join().expect("worker"), 42);
+        });
+    }
+
+    #[test]
+    fn model_panics_propagate() {
+        let result = panic::catch_unwind(|| {
+            model(|| {
+                let t = thread::spawn(|| panic!("model thread exploded"));
+                let _ = t.join();
+            });
+        });
+        let err = result.expect_err("panic must propagate");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("exploded"), "unexpected payload {msg:?}");
+    }
+
+    #[test]
+    fn iteration_cap_is_enforced() {
+        // Racing atomics need far more than 2 schedules — the checker
+        // must refuse to silently under-explore when capped that low.
+        let result = panic::catch_unwind(|| {
+            model_with_limits(
+                || {
+                    let x = Arc::new(AtomicUsize::new(0));
+                    let hs: Vec<_> = (0..2)
+                        .map(|_| {
+                            let x = Arc::clone(&x);
+                            thread::spawn(move || {
+                                x.fetch_add(1, Ordering::SeqCst);
+                                x.fetch_add(1, Ordering::SeqCst);
+                            })
+                        })
+                        .collect();
+                    for h in hs {
+                        h.join().expect("adder");
+                    }
+                },
+                2,
+                DEFAULT_MAX_PREEMPTIONS,
+            );
+        });
+        let err = result.expect_err("tiny cap must trip");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("exceeded 2 executions"), "got {msg:?}");
+    }
+}

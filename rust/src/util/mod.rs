@@ -11,13 +11,18 @@
 //!   the executed sort pipeline allocates nothing after warm-up.
 //! * [`bench`] — warmup/sampling benchmark harness (⇒ criterion).
 //! * [`propcheck`] — seeded property-test driver (⇒ proptest).
+//! * [`loom`] — deterministic interleaving model checker (⇒ loom).
+//! * [`sync`] — the sync facade the concurrency core imports from:
+//!   `std::sync` normally, the [`loom`] mirror under `--cfg loom`.
 
 pub mod arena;
 pub mod bench;
 pub mod json;
+pub mod loom;
 pub mod pool;
 pub mod propcheck;
 pub mod rng;
+pub mod sync;
 
 pub use arena::{ArenaStats, ScratchArena, ScratchBuf};
 pub use json::Json;

@@ -31,11 +31,23 @@
 //! cursor), but every API assigns task *index* `i` to input region `i`,
 //! so outputs never depend on which thread ran what — byte-determinism
 //! at any worker count.
+//!
+//! Synchronization goes through the [`crate::util::sync`] facade, so a
+//! `--cfg loom` build runs the park/unpark, nested-dispatch and
+//! shutdown protocols under the exhaustive interleaving checker
+//! (`rust/tests/loom_models.rs`). Model runs use private
+//! [`WorkerPool::with_residents`] pools and [`WorkerPool::shutdown`]
+//! so every execution terminates; the process-wide [`WorkerPool::global`]
+//! pool never stops.
 
 use std::collections::VecDeque;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::OnceLock;
+
+use crate::util::sync::{
+    self as sync, lock_unpoisoned, wait_unpoisoned, Arc, AtomicBool, AtomicUsize, Condvar, Mutex,
+    Ordering,
+};
 
 /// Default worker count: logical cores.
 pub fn default_workers() -> usize {
@@ -53,10 +65,12 @@ const MAX_RESIDENT_THREADS: usize = 256;
 /// job's completion, which is what keeps the erased lifetime honest.
 struct TaskPtr(*const (dyn Fn(usize) + Sync));
 
-// Safety: the pointee is `Sync` (shared calls from many threads are
+// SAFETY: the pointee is `Sync` (shared calls from many threads are
 // fine) and is only dereferenced during the dispatcher's `run` call,
 // which outlives every worker access by construction.
 unsafe impl Send for TaskPtr {}
+// SAFETY: as above — `&TaskPtr` only exposes a pointer to a `Sync`
+// closure that outlives the job.
 unsafe impl Sync for TaskPtr {}
 
 /// Completion state of one job, under the job's mutex.
@@ -81,14 +95,11 @@ struct Job {
 /// Claim and run one task of `job`, recording completion (and any
 /// panic) in the job's done state.
 fn run_task(job: &Job, index: usize) {
-    // Safety: see `TaskPtr` — the dispatcher is blocked in `run` until
+    // SAFETY: see `TaskPtr` — the dispatcher is blocked in `run` until
     // `pending` reaches zero, so the closure is alive here.
     let task = unsafe { &*job.task.0 };
     let result = panic::catch_unwind(AssertUnwindSafe(|| task(index)));
-    let mut done = match job.done.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    };
+    let mut done = lock_unpoisoned(&job.done);
     if let Err(payload) = result {
         if done.panic.is_none() {
             done.panic = Some(payload);
@@ -103,14 +114,19 @@ fn run_task(job: &Job, index: usize) {
 struct PoolShared {
     /// FIFO of live jobs; a job is popped once fully claimed.
     queue: Mutex<VecDeque<Arc<Job>>>,
-    /// Signals residents that a job arrived.
+    /// Signals residents that a job arrived (or that the pool stops).
     work: Condvar,
+    /// Set by [`WorkerPool::shutdown`]; residents exit once the queue
+    /// is drained. Checked under the queue lock before parking, and
+    /// the setter notifies while holding that lock, so the stop signal
+    /// can never be lost between the check and the wait.
+    stop: AtomicBool,
 }
 
 fn worker_loop(shared: Arc<PoolShared>) {
     loop {
         let (job, index) = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = lock_unpoisoned(&shared.queue);
             loop {
                 let mut claimed = None;
                 while let Some(job) = queue.front() {
@@ -124,7 +140,12 @@ fn worker_loop(shared: Arc<PoolShared>) {
                 }
                 match claimed {
                     Some(c) => break c,
-                    None => queue = shared.work.wait(queue).unwrap(),
+                    None => {
+                        if shared.stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        queue = wait_unpoisoned(&shared.work, queue);
+                    }
                 }
             }
         };
@@ -136,11 +157,15 @@ fn worker_loop(shared: Arc<PoolShared>) {
 /// ([`WorkerPool::global`]) serves every caller: the native PSRS
 /// engine, the executed Algorithm 1 (Steps 2 and 9), and the
 /// coordinator's engine workers all dispatch into the same resident
-/// threads.
+/// threads. Private instances ([`WorkerPool::with_residents`]) exist
+/// for tests and interleaving models, which need a pool they can
+/// [`WorkerPool::shutdown`].
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     /// Resident thread count (grow-only, capped).
     resident: Mutex<usize>,
+    /// Join handles of resident threads, consumed by `shutdown`.
+    handles: Mutex<Vec<sync::thread::JoinHandle<()>>>,
 }
 
 impl WorkerPool {
@@ -149,8 +174,10 @@ impl WorkerPool {
             shared: Arc::new(PoolShared {
                 queue: Mutex::new(VecDeque::new()),
                 work: Condvar::new(),
+                stop: AtomicBool::new(false),
             }),
             resident: Mutex::new(0),
+            handles: Mutex::new(Vec::new()),
         }
     }
 
@@ -162,9 +189,42 @@ impl WorkerPool {
         POOL.get_or_init(WorkerPool::new)
     }
 
+    /// A private pool with `workers` residents spawned eagerly. Unlike
+    /// [`WorkerPool::global`] it is meant to be torn down: call
+    /// [`WorkerPool::shutdown`] to stop and join the residents. This
+    /// is what the loom models dispatch into, so every modeled
+    /// execution terminates.
+    pub fn with_residents(workers: usize) -> WorkerPool {
+        let pool = WorkerPool::new();
+        pool.ensure_residents(workers);
+        pool
+    }
+
     /// Number of resident worker threads currently alive.
     pub fn resident_threads(&self) -> usize {
-        *self.resident.lock().unwrap()
+        *lock_unpoisoned(&self.resident)
+    }
+
+    /// Stop the residents once the queue drains and join them.
+    /// Idempotent; only meaningful for private pools.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        {
+            // Notify under the queue lock: a resident that just saw
+            // `stop == false` is either still holding the lock (it
+            // will re-check after we notify) or already parked (the
+            // notify reaches it). Notifying without the lock could
+            // slip between its check and its wait and be lost.
+            let _queue = lock_unpoisoned(&self.shared.queue);
+            self.shared.work.notify_all();
+        }
+        let handles: Vec<_> = {
+            let mut guard = lock_unpoisoned(&self.handles);
+            guard.drain(..).collect()
+        };
+        for handle in handles {
+            let _ = handle.join();
+        }
     }
 
     /// Grow the resident set so at least `want` workers exist (the
@@ -173,13 +233,14 @@ impl WorkerPool {
     /// satisfied and spawn nothing.
     fn ensure_residents(&self, want: usize) {
         let want = want.min(MAX_RESIDENT_THREADS);
-        let mut count = self.resident.lock().unwrap();
+        let mut count = lock_unpoisoned(&self.resident);
         while *count < want {
             let shared = Arc::clone(&self.shared);
-            std::thread::Builder::new()
-                .name(format!("gbs-pool-{}", *count))
-                .spawn(move || worker_loop(shared))
-                .expect("spawn resident pool worker");
+            let handle =
+                sync::thread::spawn_named(format!("gbs-pool-{}", *count), move || {
+                    worker_loop(shared)
+                });
+            lock_unpoisoned(&self.handles).push(handle);
             *count += 1;
         }
     }
@@ -210,7 +271,7 @@ impl WorkerPool {
             }),
             finished: Condvar::new(),
         });
-        self.shared.queue.lock().unwrap().push_back(Arc::clone(&job));
+        lock_unpoisoned(&self.shared.queue).push_back(Arc::clone(&job));
         self.shared.work.notify_all();
 
         // Participate in our own job until its tasks are all claimed.
@@ -222,15 +283,9 @@ impl WorkerPool {
             run_task(&job, i);
         }
         // Wait for tasks claimed by residents to finish.
-        let mut done = match job.done.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
+        let mut done = lock_unpoisoned(&job.done);
         while done.pending > 0 {
-            done = match job.finished.wait(done) {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
+            done = wait_unpoisoned(&job.finished, done);
         }
         let panicked = done.panic.take();
         drop(done);
@@ -252,9 +307,11 @@ impl<T> Clone for SendPtr<T> {
 }
 impl<T> Copy for SendPtr<T> {}
 
-// Safety: see the type docs — regions are disjoint by construction and
+// SAFETY: see the type docs — regions are disjoint by construction and
 // the pointee outlives the dispatch (the dispatcher blocks in `run`).
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: as above — sharing the pointer is fine because tasks index
+// disjoint regions through it.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Run `f(index, chunk)` over `chunk_len`-sized chunks of `data` on up
@@ -276,7 +333,7 @@ where
     WorkerPool::global().run(chunks, workers, &move |i| {
         let start = i * chunk_len;
         let len = chunk_len.min(n - start);
-        // Safety: chunk regions [start, start+len) are disjoint per
+        // SAFETY: chunk regions [start, start+len) are disjoint per
         // task index, within bounds, and `data` outlives the dispatch.
         let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
         f(i, chunk);
@@ -296,7 +353,7 @@ where
     }
     let base = SendPtr(slices.as_mut_ptr());
     WorkerPool::global().run(n, workers, &move |i| {
-        // Safety: each task reborrows only element `i` of the slice
+        // SAFETY: each task reborrows only element `i` of the slice
         // list; the list itself outlives the dispatch.
         let slice: &mut [T] = unsafe { &mut **base.0.add(i) };
         f(i, slice);
@@ -314,7 +371,7 @@ struct ConsumedBuf<I> {
 
 impl<I> Drop for ConsumedBuf<I> {
     fn drop(&mut self) {
-        // Safety: all elements moved out (see type docs); free the
+        // SAFETY: all elements moved out (see type docs); free the
         // allocation without running element destructors.
         unsafe {
             self.vec.set_len(0);
@@ -346,12 +403,13 @@ where
     let src = SendPtr(items.vec.as_ptr() as *mut I);
     let dst = SendPtr(slots.as_mut_ptr());
     WorkerPool::global().run(n, workers, &move |i| {
-        // Safety: task indices are unique, so each input is moved out
+        // SAFETY: task indices are unique, so each input is moved out
         // exactly once and each `None` slot overwritten at most once
         // (plain assignment — dropping a `None` is free, and a panic
         // before the write leaves a droppable `None` behind).
         let item = unsafe { std::ptr::read(src.0.add(i)) };
         let value = f(item);
+        // SAFETY: slot `i` belongs to this task alone; see above.
         unsafe { *dst.0.add(i) = Some(value) };
     });
     drop(items); // frees the consumed input buffer
@@ -377,7 +435,7 @@ where
     let dst = SendPtr(slots.as_mut_ptr());
     WorkerPool::global().run(n_tasks, workers, &move |i| {
         let value = f(i);
-        // Safety: unique slot per task index; see `parallel_map`.
+        // SAFETY: unique slot per task index; see `parallel_map`.
         unsafe { *dst.0.add(i) = Some(value) };
     });
     slots
@@ -389,7 +447,14 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Heavy/timing-sensitive cases opt out under `GBS_MIRI=1` — the
+    /// Miri CI job sets it so the UB-relevant pool paths still run
+    /// while wall-clock assertions (meaningless under the interpreter)
+    /// are skipped.
+    fn under_miri() -> bool {
+        std::env::var_os("GBS_MIRI").is_some()
+    }
 
     #[test]
     fn chunks_cover_everything() {
@@ -427,6 +492,9 @@ mod tests {
 
     #[test]
     fn map_actually_parallel() {
+        if under_miri() {
+            return; // wall-clock assertion is meaningless under Miri
+        }
         // With 4 workers and 4 sleepy tasks, wall time ≈ 1 task.
         let t0 = std::time::Instant::now();
         parallel_for(4, 4, |_| std::thread::sleep(std::time::Duration::from_millis(50)));
@@ -475,6 +543,20 @@ mod tests {
         // it further, but repeated dispatches never grow it themselves.
         assert!(after_first >= 2);
         assert!(WorkerPool::global().resident_threads() < MAX_RESIDENT_THREADS);
+    }
+
+    #[test]
+    fn private_pool_runs_and_shuts_down() {
+        let pool = WorkerPool::with_residents(2);
+        assert_eq!(pool.resident_threads(), 2);
+        let counter = AtomicUsize::new(0);
+        pool.run(8, 3, &|_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+        pool.shutdown();
+        // Idempotent: a second shutdown has nothing left to join.
+        pool.shutdown();
     }
 
     #[test]

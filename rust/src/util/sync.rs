@@ -1,0 +1,164 @@
+//! The crate's **sync facade** — the one import path for the
+//! primitives the concurrency core is built on.
+//!
+//! Normally everything re-exports `std::sync`; under `--cfg loom` the
+//! same names resolve to the in-tree model checker's mirrored types
+//! ([`crate::util::loom`]), so the worker pool, scratch arena, bounded
+//! scheduler queue and net credit window can be compiled into
+//! exhaustive interleaving models (`rust/tests/loom_models.rs`)
+//! without any source changes. The `xtask lint` job enforces that
+//! facade-covered modules never import `std::sync::{Mutex, Condvar}`
+//! or `std::sync::atomic` directly.
+//!
+//! The facade also centralizes the repo's poison policy: a panicking
+//! task must not cascade into `PoisonError` unwraps on unrelated
+//! threads (the pool re-raises the original panic instead), so lock
+//! and wait sites go through [`lock_unpoisoned`] /
+//! [`wait_unpoisoned`] / [`wait_timeout_unpoisoned`] rather than
+//! `.lock().unwrap()`.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use crate::util::loom::{
+    Arc, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard,
+};
+
+/// Memory orderings are shared: the model accepts and ignores them
+/// (it is sequentially consistent), std honours them.
+pub use std::sync::atomic::Ordering;
+
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard from a poisoned lock. Poisoning
+/// only happens after another thread panicked while holding the guard;
+/// every structure behind the facade keeps its invariants across
+/// panics (counters are adjusted before work runs, queues hold owned
+/// values), so continuing with the inner guard is sound and keeps one
+/// task's panic from cascading into unrelated threads.
+pub fn lock_unpoisoned<T: ?Sized>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    match mutex.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Condvar wait with the same poison policy as [`lock_unpoisoned`].
+pub fn wait_unpoisoned<'a, T: ?Sized>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Timed condvar wait; returns the reacquired guard and whether the
+/// wait timed out. Under `--cfg loom` this degrades to an untimed wait
+/// (the model has no clock), so timed paths must not be the only thing
+/// preventing a modeled deadlock.
+#[cfg(not(loom))]
+pub fn wait_timeout_unpoisoned<'a, T: ?Sized>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((guard, result)) => (guard, result.timed_out()),
+        Err(poisoned) => {
+            let (guard, result) = poisoned.into_inner();
+            (guard, result.timed_out())
+        }
+    }
+}
+
+/// Model-side timed wait: no clock, so it never reports a timeout.
+#[cfg(loom)]
+pub fn wait_timeout_unpoisoned<'a, T: ?Sized>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    let _ = timeout;
+    (wait_unpoisoned(cv, guard), false)
+}
+
+/// Thread spawning for facade-covered modules: real named OS threads
+/// normally, model threads under `--cfg loom` (where thread identity
+/// feeds the scheduler and names are dropped).
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::JoinHandle;
+
+    /// Spawn a named thread; panics only if the OS refuses to spawn
+    /// (same behaviour the pool has always had).
+    pub fn spawn_named<F, T>(name: String, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(f)
+            .expect("spawn thread")
+    }
+}
+
+/// Model-side thread spawning (see the non-loom twin above).
+#[cfg(loom)]
+pub mod thread {
+    pub use crate::util::loom::thread::JoinHandle;
+
+    pub fn spawn_named<F, T>(name: String, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let _ = name;
+        crate::util::loom::thread::spawn(f)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpoisoned_lock_recovers_after_panic() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().expect("first lock");
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn timed_wait_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let mut guard = lock_unpoisoned(&m);
+        // Spurious wakeups report `timed_out == false`; loop until the
+        // timeout genuinely fires (nobody ever notifies).
+        loop {
+            let (reacquired, timed_out) =
+                wait_timeout_unpoisoned(&cv, guard, Duration::from_millis(1));
+            if timed_out {
+                break;
+            }
+            guard = reacquired;
+        }
+    }
+
+    #[test]
+    fn spawn_named_runs_and_joins() {
+        let h = thread::spawn_named("gbs-sync-test".into(), || 5usize);
+        assert_eq!(h.join().expect("named thread"), 5);
+    }
+}

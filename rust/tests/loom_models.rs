@@ -1,0 +1,344 @@
+//! Interleaving models for the sync core, run under the in-tree
+//! model checker (`rust/src/util/loom.rs`).
+//!
+//! Two personalities:
+//!
+//! * `RUSTFLAGS="--cfg loom" cargo test --test loom_models` — the
+//!   facade (`util::sync`) resolves to the model checker's mirrored
+//!   primitives and every scenario below explores **all** bounded
+//!   thread interleavings (preemption bound
+//!   `GBS_LOOM_MAX_PREEMPTIONS`, default 2). A lost wakeup surfaces as
+//!   a detected deadlock; an ordering bug as the failing schedule's
+//!   assertion.
+//! * plain `cargo test` — the same scenarios run as ordinary
+//!   multi-threaded smoke tests (facade = `std::sync`). The modeled
+//!   structures cannot go *untested* on the tier-1 path just because
+//!   loom is a separate CI job.
+//!
+//! Scenarios (the tentpole list):
+//! 1. worker-pool dispatch: park/unpark, nested dispatch, shutdown
+//!    without lost wakeups;
+//! 2. the scheduler's bounded queue: submit / drain / retire;
+//! 3. scratch-arena take/put under concurrent misses;
+//! 4. the net credit window: a slot must be freed **before** the
+//!    `Credit` frame is written (and the checker must catch the
+//!    reversed ordering).
+
+use std::collections::VecDeque;
+
+use gpu_bucket_sort::coordinator::queue::{BoundedQueue, PushError};
+use gpu_bucket_sort::net::credit::{CreditGate, ServerWindow};
+use gpu_bucket_sort::util::arena::ScratchArena;
+use gpu_bucket_sort::util::pool::WorkerPool;
+use gpu_bucket_sort::util::sync::{
+    self as sync, lock_unpoisoned, wait_unpoisoned, Arc, AtomicUsize, Condvar, Mutex, Ordering,
+};
+
+/// A tiny blocking channel on the facade primitives — the stand-in for
+/// the TCP wire in the credit models (a frame "arrives" when the
+/// receiver pops it).
+#[derive(Default)]
+struct Chan {
+    q: Mutex<VecDeque<u32>>,
+    cv: Condvar,
+}
+
+impl Chan {
+    fn send(&self, v: u32) {
+        lock_unpoisoned(&self.q).push_back(v);
+        self.cv.notify_one();
+    }
+
+    fn recv(&self) -> u32 {
+        let mut q = lock_unpoisoned(&self.q);
+        loop {
+            if let Some(v) = q.pop_front() {
+                return v;
+            }
+            q = wait_unpoisoned(&self.cv, q);
+        }
+    }
+}
+
+/// One round trip of the credit-window protocol with `reqs` pipelined
+/// requests and a window of 1, exercising all four protocol actors:
+/// submitter (this thread), server reader, server pump, client reader.
+/// `release_first` selects the correct ordering (free the window slot,
+/// then write the Credit frame) or the buggy reversal the loom model
+/// must catch.
+fn credit_protocol(reqs: u32, release_first: bool) {
+    let gate = Arc::new(CreditGate::new(1));
+    let window = Arc::new(ServerWindow::new(1));
+    let begin_wire = Arc::new(Chan::default()); // client → server reader
+    let pump_wire = Arc::new(Chan::default()); // server reader → pump
+    let credit_wire = Arc::new(Chan::default()); // pump → client reader
+
+    let srv_window = Arc::clone(&window);
+    let srv_in = Arc::clone(&begin_wire);
+    let srv_out = Arc::clone(&pump_wire);
+    let server_reader = sync::thread::spawn_named("srv-reader".into(), move || {
+        for _ in 0..reqs {
+            let id = srv_in.recv();
+            // The server's defensive check: a conforming client (one
+            // that only spends granted credits) must never find the
+            // window exhausted.
+            assert!(
+                !srv_window.is_exhausted(),
+                "credit spent before window slot was freed"
+            );
+            srv_window.begin();
+            srv_out.send(id);
+        }
+    });
+
+    let pump_window = Arc::clone(&window);
+    let pump_in = Arc::clone(&pump_wire);
+    let pump_out = Arc::clone(&credit_wire);
+    let pump = sync::thread::spawn_named("srv-pump".into(), move || {
+        for _ in 0..reqs {
+            let id = pump_in.recv();
+            if release_first {
+                pump_window.release();
+                pump_out.send(id);
+            } else {
+                // The bug under test: credit on the wire while the
+                // window slot is still occupied.
+                pump_out.send(id);
+                pump_window.release();
+            }
+        }
+    });
+
+    let client_gate = Arc::clone(&gate);
+    let client_in = Arc::clone(&credit_wire);
+    let client_reader = sync::thread::spawn_named("cli-reader".into(), move || {
+        for _ in 0..reqs {
+            let _ = client_in.recv();
+            client_gate.grant(1);
+        }
+    });
+
+    // The submitter: spend a credit, put a SortBegin on the wire.
+    for id in 1..=reqs {
+        assert!(gate.acquire(), "gate died mid-model");
+        begin_wire.send(id);
+    }
+
+    server_reader.join().expect("server reader");
+    pump.join().expect("pump");
+    client_reader.join().expect("client reader");
+}
+
+/// Pool scenario: 1 resident + the dispatcher run a 2-task job (the
+/// resident must be unparked), then the pool shuts down (the resident
+/// must see the stop signal — a lost wakeup deadlocks the model).
+fn pool_dispatch_and_shutdown() {
+    let pool = WorkerPool::with_residents(1);
+    let count = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&count);
+    pool.run(2, 2, &move |_| {
+        c.fetch_add(1, Ordering::SeqCst);
+    });
+    assert_eq!(count.load(Ordering::SeqCst), 2);
+    pool.shutdown();
+}
+
+/// Pool scenario: shutdown races the resident's very first park.
+fn pool_immediate_shutdown() {
+    let pool = WorkerPool::with_residents(1);
+    pool.shutdown();
+}
+
+/// Pool scenario: a task itself dispatches into the pool. The inner
+/// dispatcher participates in its own job, so this must never deadlock
+/// even with every resident busy.
+fn pool_nested_dispatch() {
+    let pool = WorkerPool::with_residents(1);
+    let count = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&count);
+    let inner_pool: &WorkerPool = &pool;
+    pool.run(2, 2, &move |i| {
+        if i == 0 {
+            let cc = Arc::clone(&c);
+            inner_pool.run(2, 2, &move |_| {
+                cc.fetch_add(1, Ordering::SeqCst);
+            });
+        } else {
+            c.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    assert_eq!(count.load(Ordering::SeqCst), 3);
+    pool.shutdown();
+}
+
+/// Queue scenario: a capacity-1 queue forces the producer to block on
+/// the slots condvar; the consumer drains everything after `drain`.
+fn queue_submit_drain() {
+    let q = Arc::new(BoundedQueue::<u32>::new(1, 1));
+    let qc = Arc::clone(&q);
+    let consumer = sync::thread::spawn_named("consumer".into(), move || {
+        let mut served = 0u32;
+        while let Some(_item) = qc.pop(0) {
+            served += 1;
+            qc.finish(0);
+        }
+        served
+    });
+    q.push_blocking(1).expect("live consumer");
+    q.push_blocking(2).expect("live consumer");
+    q.drain();
+    assert_eq!(consumer.join().expect("consumer"), 2);
+}
+
+/// Queue scenario: a producer blocked on a full queue must be woken
+/// (with its item handed back) when the last consumer retires — the
+/// no-lost-wakeup half of `retire`.
+fn queue_retire_unblocks_producer() {
+    let q = Arc::new(BoundedQueue::<u32>::new(1, 1));
+    q.try_push(1).expect("first push fits");
+    let qc = Arc::clone(&q);
+    let retirer = sync::thread::spawn_named("retirer".into(), move || {
+        qc.retire(0);
+    });
+    // Queue full and the only consumer retiring: this must return the
+    // item, not hang. (A lost retire notification deadlocks the model.)
+    assert_eq!(q.push_blocking(2), Err(2));
+    match q.try_push(3) {
+        Err(PushError::Dead(item)) => assert_eq!(item, 3),
+        other => panic!("expected Dead, got {other:?}"),
+    }
+    retirer.join().expect("retirer");
+}
+
+/// Arena scenario: two threads check out and return buffers
+/// concurrently; every checkout resolves to exactly one hit or miss
+/// and at most two buffers end up parked.
+fn arena_concurrent_take_put() {
+    let arena = ScratchArena::new();
+    let a2 = arena.clone();
+    let peer = sync::thread::spawn_named("arena-peer".into(), move || {
+        let buf = a2.take::<u32>(4, 7);
+        assert_eq!(buf.len(), 4);
+    });
+    {
+        let buf = arena.take::<u32>(4, 9);
+        assert!(buf.iter().all(|&x| x == 9));
+    }
+    peer.join().expect("arena peer");
+    let stats = arena.stats();
+    assert_eq!(stats.hits + stats.misses, 2);
+    assert!(stats.buffers <= 2, "{stats:?}");
+}
+
+#[cfg(loom)]
+mod models {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// All models run with explicit bounds (not the env-var defaults):
+    /// a generous execution cap and the standard preemption bound of 2,
+    /// which catches every bug class these scenarios encode.
+    fn explore<F: Fn() + Send + Sync + 'static>(f: F) {
+        gpu_bucket_sort::util::loom::model_with_limits(f, 500_000, 2);
+    }
+
+    #[test]
+    fn pool_dispatch_park_unpark() {
+        explore(pool_dispatch_and_shutdown);
+    }
+
+    #[test]
+    fn pool_shutdown_races_first_park() {
+        explore(pool_immediate_shutdown);
+    }
+
+    #[test]
+    fn pool_nested_dispatch_is_deadlock_free() {
+        explore(pool_nested_dispatch);
+    }
+
+    #[test]
+    fn bounded_queue_submit_drain() {
+        explore(queue_submit_drain);
+    }
+
+    #[test]
+    fn bounded_queue_retire_wakes_producer() {
+        explore(queue_retire_unblocks_producer);
+    }
+
+    #[test]
+    fn arena_take_put_concurrent_misses() {
+        explore(arena_concurrent_take_put);
+    }
+
+    #[test]
+    fn credit_window_freed_before_credit_frame() {
+        // The correct ordering holds under every bounded interleaving.
+        explore(|| credit_protocol(2, true));
+    }
+
+    #[test]
+    fn credit_model_catches_reversed_release() {
+        // Reversing the release/send order must be *caught*: some
+        // schedule lets the client spend the credit while the window
+        // slot is still occupied.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            explore(|| credit_protocol(2, false));
+        }));
+        let payload = result.expect_err("the checker must find the violation");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("window slot"),
+            "unexpected failure payload: {msg:?}"
+        );
+    }
+}
+
+/// The same scenarios as plain multi-threaded smokes on std
+/// primitives, so `cargo test` (tier-1) exercises this file too.
+#[cfg(not(loom))]
+mod smoke {
+    use super::*;
+
+    #[test]
+    fn pool_dispatch_park_unpark() {
+        pool_dispatch_and_shutdown();
+    }
+
+    #[test]
+    fn pool_shutdown_races_first_park() {
+        pool_immediate_shutdown();
+    }
+
+    #[test]
+    fn pool_nested_dispatch_is_deadlock_free() {
+        pool_nested_dispatch();
+    }
+
+    #[test]
+    fn bounded_queue_submit_drain() {
+        queue_submit_drain();
+    }
+
+    #[test]
+    fn bounded_queue_retire_wakes_producer() {
+        queue_retire_unblocks_producer();
+    }
+
+    #[test]
+    fn arena_take_put_concurrent_misses() {
+        arena_concurrent_take_put();
+    }
+
+    #[test]
+    fn credit_window_round_trips() {
+        // Many pipelined rounds through all four protocol actors; the
+        // reader's defensive assert doubles as the invariant check.
+        credit_protocol(64, true);
+    }
+}

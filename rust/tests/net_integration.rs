@@ -388,6 +388,56 @@ fn backpressure_sheds_busy_and_recovers_fairly() {
     assert!(!snap.counters.contains_key("net_drain_timeout"));
 }
 
+/// Regression for the reader/pump `unwrap` removal: garbage arriving
+/// **mid-stream on an established connection** (after a served ping)
+/// takes the typed malformed path — the connection dies alone and the
+/// same listener keeps serving — and a pooled client that outlives the
+/// server gets typed `connection closed` refusals, never a panicked
+/// reader thread or a poisoned lock.
+#[test]
+fn garbage_mid_stream_then_clean_listener_reuse() {
+    let service = SortService::start(cfg()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // An established, previously well-behaved connection goes rogue.
+    {
+        use std::io::{Read as _, Write as _};
+        let mut s = raw_handshake(&addr);
+        wire::write_frame(&mut s, &Frame::control(Opcode::Ping, 11)).unwrap();
+        let pong = wire::read_frame(&mut s, 1 << 20).unwrap().unwrap();
+        assert_eq!(pong.opcode, Opcode::Pong);
+        assert_eq!(pong.id, 11);
+        // Now garbage where the next frame header should start.
+        s.write_all(b"\x00\x00\x00\x00 not a frame header at all").unwrap();
+        // The server answers with a typed error frame and/or closes —
+        // either way this socket reaches EOF instead of hanging.
+        let mut rest = Vec::new();
+        let _ = s.read_to_end(&mut rest);
+    }
+
+    // Same listener, fresh connection: full service.
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+    client.ping().unwrap();
+    let keys = Distribution::Uniform.generate(6_000, 11);
+    let out = client.sort(SortRequest::new(keys.clone())).unwrap();
+    assert!(gpu_bucket_sort::is_sorted_permutation(&keys, out.keys_u32()));
+
+    // The server goes away while the client lives on: its reader
+    // thread exits through the shutdown path and every later call is a
+    // typed refusal (a panicking reader would poison the conn locks
+    // and turn this into a test abort instead).
+    let snap = server.shutdown();
+    assert!(snap.counters["net_malformed"] >= 1, "{:?}", snap.counters);
+    assert_eq!(snap.counters["requests_completed"], 1);
+    let err = client.sort(SortRequest::new(vec![4u32, 2])).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("closed") || msg.contains("connection"),
+        "expected a typed connection error, got: {msg}"
+    );
+}
+
 /// The CLI drain path: `Drain` frames are acknowledged, latch the
 /// server-side signal that `gbs serve --listen` blocks on, and the
 /// subsequent shutdown drains cleanly.
