@@ -1,0 +1,258 @@
+//! Chaos resilience: throughput under degraded hardware and the cost
+//! of end-to-end recovery.
+//!
+//! Three scenarios, all byte-identity-checked against a local
+//! `sort_unstable` (violations are counted and gated at zero):
+//!
+//! * **healthy** — sharded service over the full 4-device pool;
+//! * **degraded** — same load with a fault plan that kills one device
+//!   on the first step, so every request runs failover re-planning
+//!   over the 3 survivors. The headline gate (`ci/validate_bench.py`)
+//!   requires `degraded_ratio ≥ 0.6` — losing a quarter of the pool
+//!   may cost throughput, but never more than a bounded slice and
+//!   never bytes;
+//! * **recovery** — a TCP round-trip load where a seeded `socket_cut`
+//!   severs the connection mid-run; the reconnecting client must ride
+//!   through it (reconnect + idempotent resubmit), and the cut
+//!   request's latency is reported as `recovered_request_ms` next to
+//!   the healthy median.
+//!
+//! Emits `BENCH_chaos.json` at the repo root — validated by CI's
+//! `chaos` job. `GBS_BENCH_FAST=1` selects the smoke profile.
+
+use gpu_bucket_sort::config::{EngineKind, NetConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortRequest, SortService};
+use gpu_bucket_sort::net::{ClientOptions, NetClient, NetServer};
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+use std::time::Instant;
+
+struct Profile {
+    mode: &'static str,
+    requests: usize,
+    keys_per_request: usize,
+}
+
+impl Profile {
+    fn from_env() -> Profile {
+        if std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1") {
+            Profile {
+                mode: "smoke",
+                requests: 16,
+                keys_per_request: 50_000,
+            }
+        } else {
+            Profile {
+                mode: "full",
+                requests: 32,
+                keys_per_request: 200_000,
+            }
+        }
+    }
+}
+
+/// Write a fault plan beside the bench artifacts; returns its path.
+fn write_plan(name: &str, json: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("gbs_chaos_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let p = dir.join(format!("{name}.json"));
+    std::fs::write(&p, json).expect("write plan");
+    p.display().to_string()
+}
+
+struct LoadResult {
+    wall_ms: f64,
+    mkeys_s: f64,
+    latencies_ms: Vec<f64>,
+    violations: u64,
+}
+
+/// Sequential in-process load against a service; byte-identity checked
+/// per request.
+fn run_service_load(cfg: ServiceConfig, profile: &Profile, seed: u64) -> LoadResult {
+    let service = SortService::start(cfg).expect("service starts");
+    let n = profile.keys_per_request;
+    let mut latencies_ms = Vec::with_capacity(profile.requests);
+    let mut violations = 0u64;
+    let t0 = Instant::now();
+    for r in 0..profile.requests {
+        let keys = Distribution::Uniform.generate(n, seed * 10_000 + r as u64 + 1);
+        let mut expected = keys.clone();
+        expected.sort_unstable();
+        let t = Instant::now();
+        let out = service.sort(SortRequest::new(keys)).expect("sort succeeds");
+        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        if out.keys_u32() != expected.as_slice() {
+            violations += 1;
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let _ = service.shutdown();
+    LoadResult {
+        wall_ms,
+        mkeys_s: (profile.requests * n) as f64 / wall_ms * 1e3 / 1e6,
+        latencies_ms,
+        violations,
+    }
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[sorted.len() / 2]
+}
+
+fn main() {
+    let profile = Profile::from_env();
+    println!(
+        "chaos_resilience [{}]: {} requests × {} u32 keys, sharded over 4 devices",
+        profile.mode, profile.requests, profile.keys_per_request
+    );
+
+    // Scenario 1: healthy pool.
+    let healthy_cfg = ServiceConfig {
+        engine: EngineKind::Sharded,
+        verify: false,
+        ..ServiceConfig::default()
+    };
+    let healthy = run_service_load(healthy_cfg.clone(), &profile, 1);
+    println!(
+        "  healthy   {:>8.1} ms  {:>7.2} Mkeys/s",
+        healthy.wall_ms, healthy.mkeys_s
+    );
+
+    // Scenario 2: one device lost on the first step — every request
+    // thereafter re-plans over the 3 survivors.
+    let degraded_plan = write_plan(
+        "degraded",
+        r#"{"version":1,"seed":1,"rules":[{"point":"device_lost","target":0,"count":1}]}"#,
+    );
+    let degraded_cfg = ServiceConfig {
+        fault_plan: degraded_plan,
+        ..healthy_cfg
+    };
+    let degraded = run_service_load(degraded_cfg, &profile, 2);
+    let ratio = if healthy.mkeys_s > 0.0 {
+        degraded.mkeys_s / healthy.mkeys_s
+    } else {
+        0.0
+    };
+    println!(
+        "  degraded  {:>8.1} ms  {:>7.2} Mkeys/s  ({:.2}× healthy)",
+        degraded.wall_ms, degraded.mkeys_s, ratio
+    );
+
+    // Scenario 3: TCP recovery — a seeded socket cut mid-run; the
+    // reconnecting client rides through with identical bytes.
+    let cut_at = profile.requests / 2;
+    let recovery_plan = write_plan(
+        "recovery",
+        &format!(
+            r#"{{"version":1,"seed":2,"rules":[{{"point":"socket_cut","target":0,"after":{cut_at},"count":1}}]}}"#
+        ),
+    );
+    let service = SortService::start(ServiceConfig {
+        fault_plan: recovery_plan,
+        verify: false,
+        ..ServiceConfig::default()
+    })
+    .expect("service starts");
+    let server =
+        NetServer::bind("127.0.0.1:0", service.clone(), NetConfig::default()).expect("bind");
+    let addr = server.local_addr().to_string();
+    let client = NetClient::connect_with(
+        &addr,
+        1,
+        NetConfig::default(),
+        ClientOptions {
+            reconnect: true,
+            faults: service.fault_injector(),
+        },
+    )
+    .expect("connect");
+    let n = profile.keys_per_request;
+    let mut violations = 0u64;
+    let mut recovered_request_ms = 0.0f64;
+    let mut net_latencies = Vec::with_capacity(profile.requests);
+    for r in 0..profile.requests {
+        let keys = Distribution::Uniform.generate(n, 77_000 + r as u64);
+        let mut expected = keys.clone();
+        expected.sort_unstable();
+        let before = client.reconnects();
+        let t = Instant::now();
+        let out = client.sort(SortRequest::new(keys)).expect("sort succeeds");
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        if client.reconnects() > before {
+            recovered_request_ms = ms;
+        } else {
+            net_latencies.push(ms);
+        }
+        if out.keys_u32() != expected.as_slice() {
+            violations += 1;
+        }
+    }
+    let reconnects = client.reconnects();
+    let resubmits = client.resubmits();
+    drop(client);
+    let _ = server.shutdown();
+    net_latencies.sort_by(f64::total_cmp);
+    let median_healthy_ms = median(&net_latencies);
+    println!(
+        "  recovery  reconnects={reconnects} resubmits={resubmits}  \
+         cut request {recovered_request_ms:.1} ms vs healthy median {median_healthy_ms:.1} ms"
+    );
+
+    let total_violations = healthy.violations + degraded.violations + violations;
+    let mut h = healthy.latencies_ms.clone();
+    h.sort_by(f64::total_cmp);
+    let mut d = degraded.latencies_ms.clone();
+    d.sort_by(f64::total_cmp);
+    let report = Json::obj(vec![
+        ("bench", Json::str("chaos_resilience")),
+        ("schema_version", Json::num(1.0)),
+        ("mode", Json::str(profile.mode)),
+        ("engine", Json::str("sharded")),
+        ("requests", Json::num(profile.requests as f64)),
+        ("keys_per_request", Json::num(profile.keys_per_request as f64)),
+        ("byte_identity_violations", Json::num(total_violations as f64)),
+        ("healthy_mkeys_s", Json::num(healthy.mkeys_s)),
+        ("degraded_mkeys_s", Json::num(degraded.mkeys_s)),
+        ("degraded_ratio", Json::num(ratio)),
+        (
+            "recovery",
+            Json::obj(vec![
+                ("reconnects", Json::num(reconnects as f64)),
+                ("resubmits", Json::num(resubmits as f64)),
+                ("recovered_request_ms", Json::num(recovered_request_ms)),
+                ("median_healthy_ms", Json::num(median_healthy_ms)),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("scenario", Json::str("healthy")),
+                    ("wall_ms", Json::num(healthy.wall_ms)),
+                    ("mkeys_s", Json::num(healthy.mkeys_s)),
+                    ("p50_ms", Json::num(median(&h))),
+                ]),
+                Json::obj(vec![
+                    ("scenario", Json::str("degraded")),
+                    ("wall_ms", Json::num(degraded.wall_ms)),
+                    ("mkeys_s", Json::num(degraded.mkeys_s)),
+                    ("p50_ms", Json::num(median(&d))),
+                ]),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_chaos.json", report.to_string_pretty()).expect("write BENCH_chaos.json");
+    println!("→ BENCH_chaos.json");
+
+    // In-bench gates (CI re-checks them from the JSON): bytes are
+    // sacred, and the cut must actually have been exercised.
+    assert_eq!(total_violations, 0, "byte identity violated under chaos");
+    assert!(reconnects >= 1, "the socket cut never fired");
+    assert!(resubmits >= 1, "the cut request was never resubmitted");
+    println!("gate OK: 0 byte-identity violations, recovery exercised");
+}

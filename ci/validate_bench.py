@@ -236,6 +236,39 @@ def gate_adaptive(report):
             f"{sorted_ratio:.1f}x radix, byte identity held")
 
 
+def gate_chaos(report):
+    require(report, ("bench", "mode", "engine", "requests", "keys_per_request",
+                     "byte_identity_violations", "healthy_mkeys_s",
+                     "degraded_mkeys_s", "degraded_ratio", "recovery",
+                     "results"))
+    assert report["bench"] == "chaos_resilience"
+    require_rows(report, "results",
+                 ("scenario", "wall_ms", "mkeys_s", "p50_ms"),
+                 positive=("wall_ms", "mkeys_s"))
+    scenarios = {r["scenario"] for r in report["results"]}
+    assert {"healthy", "degraded"} <= scenarios, \
+        f"missing scenarios: {scenarios}"
+    # Gate 1: recovery never changes bytes — every response under every
+    # fault (device loss, socket cut, resubmission) matched a local sort.
+    violations = report["byte_identity_violations"]
+    assert violations == 0, f"{violations} byte-identity violations under chaos"
+    # Gate 2: losing 1 of 4 devices costs at most a bounded throughput
+    # slice — failover must re-plan, not serialize.
+    ratio = report["degraded_ratio"]
+    assert ratio >= 0.6, f"degraded pool only {ratio:.2f}x healthy throughput"
+    # Gate 3: the seeded socket cut actually exercised the reconnect +
+    # idempotent-resubmit path (a green run that never reconnected
+    # proves nothing).
+    rec = report["recovery"]
+    for field in ("reconnects", "resubmits", "recovered_request_ms",
+                  "median_healthy_ms"):
+        assert field in rec, f"recovery missing {field!r}: {rec}"
+    assert rec["reconnects"] >= 1, "the socket cut never forced a reconnect"
+    assert rec["resubmits"] >= 1, "the cut request was never resubmitted"
+    return (f"degraded {ratio:.2f}x healthy, 0 byte violations, "
+            f"{rec['reconnects']} reconnect(s) ridden through")
+
+
 REPORTS = {
     "service_throughput": ("results/service_throughput.json", gate_service_throughput),
     "typed_keys": ("results/typed_keys.json", gate_typed_keys),
@@ -243,6 +276,7 @@ REPORTS = {
     "planner": ("BENCH_planner.json", gate_planner),
     "net": ("BENCH_net.json", gate_net),
     "adaptive": ("BENCH_adaptive.json", gate_adaptive),
+    "chaos": ("BENCH_chaos.json", gate_chaos),
 }
 
 

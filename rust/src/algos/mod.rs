@@ -130,6 +130,12 @@ pub struct ExecContext {
     /// kernels. Affects wall time only — every candidate path produces
     /// the identical bytes.
     pub cost: adaptive::CostModel,
+    /// Fault injector compiled from `config.fault_plan` / `--fault-plan`
+    /// (None — the default — costs one pointer check at each
+    /// instrumented point). The sharded engine probes it per device
+    /// step; injected faults surface as typed errors that drive the
+    /// failover/retry machinery.
+    pub faults: Option<std::sync::Arc<crate::sim::fault::FaultInjector>>,
 }
 
 impl Default for ExecContext {
@@ -148,6 +154,7 @@ impl ExecContext {
             kernel,
             digit_bits: plan::DEFAULT_DIGIT_BITS,
             cost: adaptive::CostModel::default(),
+            faults: None,
         }
     }
 
@@ -160,6 +167,16 @@ impl ExecContext {
     /// Override the adaptive cost model (builder style).
     pub fn with_cost_model(mut self, cost: adaptive::CostModel) -> Self {
         self.cost = cost;
+        self
+    }
+
+    /// Attach a fault injector (builder style). `None` — the default —
+    /// keeps every instrumented point free.
+    pub fn with_faults(
+        mut self,
+        faults: Option<std::sync::Arc<crate::sim::fault::FaultInjector>>,
+    ) -> Self {
+        self.faults = faults;
         self
     }
 

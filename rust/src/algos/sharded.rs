@@ -32,8 +32,9 @@
 
 use super::bucket_sort::{BucketSort, BucketSortParams, BucketSortReport};
 use super::{bitonic, indexing, prefix, sampling, ExecContext};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::key::Record;
+use crate::sim::fault::DeviceFault;
 use crate::sim::ledger::{KernelClass, Ledger};
 use crate::sim::pool::DevicePool;
 use crate::sim::spec::MAX_BLOCK_THREADS;
@@ -85,8 +86,15 @@ pub struct ShardedSortReport {
     /// Per-device Algorithm-1 report for the local sort phase.
     pub local: Vec<BucketSortReport>,
     /// Coordinator-side combine traffic (sampling, splitter sort,
-    /// partition, prefix, exchange), recorded on device 0.
+    /// partition, prefix, exchange), recorded on the coordinating
+    /// device ([`ShardedSortReport::coordinator`]).
     pub combine: Ledger,
+    /// Pool index of the device that coordinated the combine phase —
+    /// the lowest-indexed *healthy* device (0 on a fault-free run).
+    pub coordinator: usize,
+    /// Device-lost failovers survived during this run: each one marked
+    /// a device unhealthy and re-planned the sort over the survivors.
+    pub failovers: u32,
     /// Per-destination-device merge traffic.
     pub merge: Vec<Ledger>,
     /// Peak simulated memory per device over the whole run.
@@ -114,7 +122,8 @@ impl ShardedSortReport {
             .enumerate()
             .map(|(d, r)| CostModel::default_params(pool.spec(d)).ledger_ms(&r.ledger))
             .fold(0.0, f64::max);
-        let combine = CostModel::default_params(pool.spec(0)).ledger_ms(&self.combine);
+        let combine =
+            CostModel::default_params(pool.spec(self.coordinator)).ledger_ms(&self.combine);
         let merge = self
             .merge
             .iter()
@@ -195,7 +204,48 @@ impl ShardedSort {
     /// Step 2+3 / Step 8+9 traversals and the wide-digit pass schedule
     /// (see [`crate::algos::plan`]) exactly like the single-device
     /// path.
+    ///
+    /// **Failover:** a [`Error::DeviceLost`] mid-attempt (fault
+    /// injection, or a real device dropping off) marks the device
+    /// unhealthy in the pool and re-plans the whole sort over the
+    /// survivors — deterministic splitter selection re-runs at the new
+    /// shard count, and because a sorted sequence is the unique ordering
+    /// of its input multiset (key–value jobs carry tie-breaking
+    /// indices), the recovered output is **byte-identical** to the
+    /// fault-free run. `keys` is never written by a failed attempt (the
+    /// final `copy_from_slice` is the only write), so retrying is safe.
+    /// The pool's sims are reset between attempts: ledgers and peaks
+    /// describe the final, successful attempt. The loss of the last
+    /// healthy device is returned as the typed error.
     pub fn sort_in<K: SortKey>(
+        &self,
+        keys: &mut [K],
+        pool: &mut DevicePool,
+        ctx: &ExecContext,
+    ) -> Result<ShardedSortReport> {
+        let mut failovers = 0u32;
+        loop {
+            match self.sort_attempt(keys, pool, ctx) {
+                Ok(mut report) => {
+                    report.failovers = failovers;
+                    return Ok(report);
+                }
+                Err(Error::DeviceLost { device, name }) if pool.healthy_count() > 1 => {
+                    let _ = name;
+                    pool.mark_unhealthy(device)?;
+                    pool.reset();
+                    failovers += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One attempt of the sharded sort over the pool's *healthy*
+    /// devices. Report vectors stay pool-aligned (dead devices hold an
+    /// empty local report, zero share and an empty merge ledger) so
+    /// callers can keep indexing by pool position.
+    fn sort_attempt<K: SortKey>(
         &self,
         keys: &mut [K],
         pool: &mut DevicePool,
@@ -204,22 +254,32 @@ impl ShardedSort {
         let n = keys.len();
         let elem_bytes = K::WIDTH_BYTES;
         let p = pool.len();
-        let shares = pool.shares(n);
-        // Inputs too small to give every device at least one tile are
-        // not worth sharding (the combine overhead dominates): route
-        // them to the highest-capacity device. The rule depends only on
-        // (n, pool), keeping Execute/Analytic agreement.
-        if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
+        let active = pool.healthy_indices();
+        let ap = active.len();
+        let shares = pool.shares(n); // pool-aligned; zero at dead devices
+        // Inputs too small to give every (healthy) device at least one
+        // tile are not worth sharding (the combine overhead dominates):
+        // route them to the highest-capacity device. The rule depends
+        // only on (n, pool, health), keeping Execute/Analytic agreement.
+        if ap == 1 || active.iter().any(|&d| shares[d] < self.params.sort.tile) {
             return self.fallback(FallbackInput::Execute(keys), pool, ctx);
         }
+        let c0 = active[0];
         let sorter = BucketSort::try_new(self.params.sort)?;
 
         // Phase 1: per-device Algorithm 1 over the capacity-weighted
-        // shards (devices run in parallel; ledgers are per-sim).
+        // shards (devices run in parallel; ledgers are per-sim). Dead
+        // devices idle with an empty report; each live device's step is
+        // an instrumented fault point.
         let mut local = Vec::with_capacity(p);
-        let mut shards: Vec<crate::util::ScratchBuf<K>> = Vec::with_capacity(p);
+        let mut shards: Vec<crate::util::ScratchBuf<K>> = Vec::with_capacity(ap);
         let mut off = 0usize;
         for (d, &len) in shares.iter().enumerate() {
+            if !pool.is_healthy(d) {
+                local.push(sorter.sort_in(&mut [] as &mut [K], pool.sim_mut(d), ctx)?);
+                continue;
+            }
+            probe_device(pool, ctx, d)?;
             let mut shard = ctx.arena.take_from(&keys[off..off + len]);
             off += len;
             local.push(sorter.sort_in(shard.as_mut_slice(), pool.sim_mut(d), ctx)?);
@@ -227,12 +287,13 @@ impl ShardedSort {
         }
 
         // Phase 2: deterministic cross-device splitter selection and
-        // exchange, coordinated on device 0.
-        let plan = self.combine_plan(&shares);
+        // exchange, coordinated on the lowest-indexed healthy device.
+        let ashares: Vec<usize> = active.iter().map(|&d| shares[d]).collect();
+        let plan = self.combine_plan(&ashares);
         let mut combine = Ledger::default();
         let combine_alloc = pool
-            .sim_mut(0)
-            .alloc(plan.padded_samples * elem_bytes + 3 * p * p * KEY_BYTES)?;
+            .sim_mut(c0)
+            .alloc(plan.padded_samples * elem_bytes + 3 * ap * ap * KEY_BYTES)?;
 
         // Regular samples from every sorted shard (the PSRS step).
         let mut samples = ctx.arena.take_empty::<K>();
@@ -244,23 +305,23 @@ impl ShardedSort {
         }
         debug_assert_eq!(samples.len(), plan.total_samples);
         record_shard_samples(
-            p,
+            ap,
             self.params.merge_samples,
             plan.total_samples,
             elem_bytes,
             &mut combine,
         );
 
-        // Sort all samples globally; p−1 equidistant picks become the
+        // Sort all samples globally; ap−1 equidistant picks become the
         // cross-device splitters.
         samples.resize(plan.padded_samples, K::PAD);
         bitonic::global_sort(samples.as_mut_slice(), self.params.sort.tile, &mut combine, 0);
         let splitters =
-            sampling::select_splitters(&samples[..plan.total_samples], p, &mut combine);
+            sampling::select_splitters(&samples[..plan.total_samples], ap, &mut combine);
 
         // Partition every sorted shard by the splitters (fixed-trip
         // binary searches, shape-determined probe counts).
-        let mut counts = vec![0u32; p * p];
+        let mut counts = vec![0u32; ap * ap];
         let mut probes = 0u64;
         for (i, shard) in shards.iter().enumerate() {
             let mut prev = 0usize;
@@ -274,61 +335,63 @@ impl ShardedSort {
                 .chain(std::iter::once(shard.len()))
                 .enumerate()
             {
-                counts[i * p + j] = (bound - prev) as u32;
+                counts[i * ap + j] = (bound - prev) as u32;
                 prev = bound;
             }
         }
         debug_assert_eq!(probes, plan.probes);
-        record_partition(p, plan.probes, &mut combine);
+        record_partition(ap, plan.probes, &mut combine);
 
         // Destination layout (column-major, exactly Step 7's machinery
-        // with m = s = p) and the all-to-all exchange.
-        let layout = prefix::column_prefix(&counts, p, p, &mut combine);
+        // with m = s = ap) and the all-to-all exchange.
+        let layout = prefix::column_prefix(&counts, ap, ap, &mut combine);
         let mut out = ctx.arena.take(n, K::PAD);
         for (i, shard) in shards.iter().enumerate() {
             let mut seg_start = 0usize;
-            for j in 0..p {
-                let len = counts[i * p + j] as usize;
-                let dst = layout.loc[i * p + j] as usize;
+            for j in 0..ap {
+                let len = counts[i * ap + j] as usize;
+                let dst = layout.loc[i * ap + j] as usize;
                 out[dst..dst + len].copy_from_slice(&shard[seg_start..seg_start + len]);
                 seg_start += len;
             }
             debug_assert_eq!(seg_start, shard.len());
         }
-        record_exchange(n, p, elem_bytes, &mut combine);
-        pool.sim_mut(0).free(combine_alloc);
-        pool.sim_mut(0).ledger_mut().extend_from(&combine);
+        record_exchange(n, ap, elem_bytes, &mut combine);
+        pool.sim_mut(c0).free(combine_alloc);
+        pool.sim_mut(c0).ledger_mut().extend_from(&combine);
 
-        // Phase 3: every destination device p-way merges its sorted
+        // Phase 3: every destination device ap-way merges its sorted
         // runs. Priced at the balanced (capacity-weighted) size so the
         // ledger stays input-independent — the same discipline as
-        // Step 9's guaranteed-capacity pricing.
-        let mut merge = Vec::with_capacity(p);
+        // Step 9's guaranteed-capacity pricing. Each destination step is
+        // an instrumented fault point.
+        let mut merge = vec![Ledger::default(); p];
         let mut max_out_shard = 0u64;
-        for j in 0..p {
+        for (j, &dj) in active.iter().enumerate() {
+            probe_device(pool, ctx, dj)?;
             let start = layout.bucket_start[j] as usize;
             let len = layout.bucket_size[j] as usize;
             max_out_shard = max_out_shard.max(len as u64);
-            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * elem_bytes)?;
-            let mut bounds = Vec::with_capacity(p + 1);
+            let alloc = pool.sim_mut(dj).alloc(2 * ashares[j] * elem_bytes)?;
+            let mut bounds = Vec::with_capacity(ap + 1);
             bounds.push(0usize);
-            for i in 0..p {
-                bounds.push(bounds[i] + counts[i * p + j] as usize);
+            for i in 0..ap {
+                bounds.push(bounds[i] + counts[i * ap + j] as usize);
             }
-            debug_assert_eq!(bounds[p], len);
+            debug_assert_eq!(bounds[ap], len);
             let rounds = merge_runs(&mut out[start..start + len], &bounds, &ctx.arena);
             debug_assert_eq!(rounds, plan.merge_rounds);
             let mut ledger = Ledger::default();
             record_merge(
-                shares[j],
+                ashares[j],
                 self.params.sort.tile,
                 plan.merge_rounds,
                 elem_bytes,
                 &mut ledger,
             );
-            pool.sim_mut(j).free(alloc);
-            pool.sim_mut(j).ledger_mut().extend_from(&ledger);
-            merge.push(ledger);
+            pool.sim_mut(dj).free(alloc);
+            pool.sim_mut(dj).ledger_mut().extend_from(&ledger);
+            merge[dj] = ledger;
         }
 
         keys.copy_from_slice(out.as_slice());
@@ -337,6 +400,8 @@ impl ShardedSort {
             shard_sizes: shares,
             local,
             combine,
+            coordinator: c0,
+            failovers: 0,
             merge,
             peak_device_bytes: pool.sims().iter().map(|s| s.peak_bytes()).collect(),
             max_out_shard,
@@ -390,14 +455,17 @@ impl ShardedSort {
         pool: &mut DevicePool,
     ) -> Result<ShardedSortReport> {
         let p = pool.len();
+        let active = pool.healthy_indices();
+        let ap = active.len();
         let shares = pool.shares(n);
-        if p == 1 || shares.iter().any(|&s| s < self.params.sort.tile) {
+        if ap == 1 || active.iter().any(|&d| shares[d] < self.params.sort.tile) {
             return self.fallback(
                 FallbackInput::<u32>::Analytic(n, elem_bytes),
                 pool,
                 &ExecContext::default(),
             );
         }
+        let c0 = active[0];
         let sorter = BucketSort::try_new(self.params.sort)?;
 
         let mut local = Vec::with_capacity(p);
@@ -405,13 +473,14 @@ impl ShardedSort {
             local.push(sorter.sort_analytic_bytes(len, elem_bytes, pool.sim_mut(d))?);
         }
 
-        let plan = self.combine_plan(&shares);
+        let ashares: Vec<usize> = active.iter().map(|&d| shares[d]).collect();
+        let plan = self.combine_plan(&ashares);
         let mut combine = Ledger::default();
         let combine_alloc = pool
-            .sim_mut(0)
-            .alloc(plan.padded_samples * elem_bytes + 3 * p * p * KEY_BYTES)?;
+            .sim_mut(c0)
+            .alloc(plan.padded_samples * elem_bytes + 3 * ap * ap * KEY_BYTES)?;
         record_shard_samples(
-            p,
+            ap,
             self.params.merge_samples,
             plan.total_samples,
             elem_bytes,
@@ -424,27 +493,27 @@ impl ShardedSort {
             &mut combine,
             0,
         );
-        sampling::analytic_splitters_bytes(plan.total_samples, p, elem_bytes, &mut combine);
-        record_partition(p, plan.probes, &mut combine);
-        prefix::analytic(p, p, &mut combine);
-        record_exchange(n, p, elem_bytes, &mut combine);
-        pool.sim_mut(0).free(combine_alloc);
-        pool.sim_mut(0).ledger_mut().extend_from(&combine);
+        sampling::analytic_splitters_bytes(plan.total_samples, ap, elem_bytes, &mut combine);
+        record_partition(ap, plan.probes, &mut combine);
+        prefix::analytic(ap, ap, &mut combine);
+        record_exchange(n, ap, elem_bytes, &mut combine);
+        pool.sim_mut(c0).free(combine_alloc);
+        pool.sim_mut(c0).ledger_mut().extend_from(&combine);
 
-        let mut merge = Vec::with_capacity(p);
-        for j in 0..p {
-            let alloc = pool.sim_mut(j).alloc(2 * shares[j] * elem_bytes)?;
+        let mut merge = vec![Ledger::default(); p];
+        for (j, &dj) in active.iter().enumerate() {
+            let alloc = pool.sim_mut(dj).alloc(2 * ashares[j] * elem_bytes)?;
             let mut ledger = Ledger::default();
             record_merge(
-                shares[j],
+                ashares[j],
                 self.params.sort.tile,
                 plan.merge_rounds,
                 elem_bytes,
                 &mut ledger,
             );
-            pool.sim_mut(j).free(alloc);
-            pool.sim_mut(j).ledger_mut().extend_from(&ledger);
-            merge.push(ledger);
+            pool.sim_mut(dj).free(alloc);
+            pool.sim_mut(dj).ledger_mut().extend_from(&ledger);
+            merge[dj] = ledger;
         }
 
         Ok(ShardedSortReport {
@@ -452,6 +521,8 @@ impl ShardedSort {
             shard_sizes: shares,
             local,
             combine,
+            coordinator: c0,
+            failovers: 0,
             merge,
             peak_device_bytes: pool.sims().iter().map(|s| s.peak_bytes()).collect(),
             max_out_shard: 0,
@@ -459,8 +530,8 @@ impl ShardedSort {
     }
 
     /// Single-device route for pools of one and inputs too small to
-    /// shard: the highest-capacity device sorts everything, the others
-    /// idle (empty reports, empty combine/merge ledgers).
+    /// shard: the highest-capacity *healthy* device sorts everything,
+    /// the others idle (empty reports, empty combine/merge ledgers).
     fn fallback<K: SortKey>(
         &self,
         input: FallbackInput<'_, K>,
@@ -470,8 +541,9 @@ impl ShardedSort {
         let p = pool.len();
         let n = input.len();
         let target = (0..p)
+            .filter(|&d| pool.is_healthy(d))
             .max_by_key(|&d| (pool.spec(d).max_sortable_keys(), std::cmp::Reverse(d)))
-            .expect("pool is never empty");
+            .expect("a pool always has a healthy device");
         let sorter = BucketSort::try_new(self.params.sort)?;
         let mut shard_sizes = vec![0usize; p];
         shard_sizes[target] = n;
@@ -479,6 +551,7 @@ impl ShardedSort {
         let mut max_out_shard = 0u64;
         match input {
             FallbackInput::Execute(keys) => {
+                probe_device(pool, ctx, target)?;
                 for d in 0..p {
                     local.push(if d == target {
                         max_out_shard = n as u64;
@@ -500,6 +573,8 @@ impl ShardedSort {
             shard_sizes,
             local,
             combine: Ledger::default(),
+            coordinator: target,
+            failovers: 0,
             merge: vec![Ledger::default(); p],
             peak_device_bytes: pool.sims().iter().map(|s| s.peak_bytes()).collect(),
             max_out_shard,
@@ -542,6 +617,30 @@ impl<K> FallbackInput<'_, K> {
             FallbackInput::Execute(keys) => keys.len(),
             FallbackInput::Analytic(n, _) => *n,
         }
+    }
+}
+
+/// Ask the context's fault injector (if any) whether pool device `d`
+/// fails at this step, and map the injected fault onto the typed error
+/// the recovery machinery dispatches on. One `Option` check when no
+/// plan is loaded.
+fn probe_device(pool: &DevicePool, ctx: &ExecContext, d: usize) -> Result<()> {
+    let Some(inj) = ctx.faults.as_ref() else {
+        return Ok(());
+    };
+    match inj.device_fault(d) {
+        None => Ok(()),
+        Some(DeviceFault::Lost) => Err(Error::DeviceLost {
+            device: d,
+            name: pool.spec(d).name.clone(),
+        }),
+        // An injected mid-step allocation failure: capacity errors are
+        // fatal for the request (retrying cannot grow the device).
+        Some(DeviceFault::Oom) => Err(Error::DeviceOom {
+            requested: pool.spec(d).usable_global_memory_bytes(),
+            available: 0,
+            device: pool.spec(d).name.clone(),
+        }),
     }
 }
 
@@ -876,6 +975,130 @@ mod tests {
                 "payload {p} no longer points at its key"
             );
         }
+    }
+
+    fn fault_ctx(plan_json: &str) -> ExecContext {
+        ExecContext::default()
+            .with_faults(Some(crate::sim::FaultPlan::parse(plan_json).unwrap().injector()))
+    }
+
+    #[test]
+    fn device_loss_fails_over_byte_identically() {
+        let sorter = ShardedSort::new(small_params());
+        let n = 60_000;
+        let input = scrambled(n);
+
+        let mut baseline = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        sorter.sort(&mut baseline, &mut pool).unwrap();
+
+        // Lose each device in turn (including the coordinator, device 0)
+        // mid-run: the output must match the fault-free bytes exactly.
+        for dead in 0..4usize {
+            let mut keys = input.clone();
+            let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+            let ctx = fault_ctx(&format!(
+                r#"{{"version":1,"rules":[{{"point":"device_lost","target":{dead}}}]}}"#
+            ));
+            let report = sorter.sort_in(&mut keys, &mut pool, &ctx).unwrap();
+            assert_eq!(keys, baseline, "dead={dead}");
+            assert_eq!(report.failovers, 1, "dead={dead}");
+            assert_eq!(report.shard_sizes[dead], 0, "dead={dead}");
+            assert!(!pool.is_healthy(dead));
+            assert_eq!(pool.healthy_count(), 3);
+            // The combine moved off a dead coordinator.
+            assert_ne!(report.coordinator, dead);
+            for sim in pool.sims() {
+                assert_eq!(sim.allocated_bytes(), 0, "dead={dead}");
+            }
+        }
+    }
+
+    #[test]
+    fn failover_report_matches_analytic_on_degraded_pool() {
+        // A run that failed over to 3 devices prices exactly like a run
+        // that started with the same device already unhealthy.
+        let sorter = ShardedSort::new(small_params());
+        let n = 60_000;
+        let mut keys = scrambled(n);
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let ctx =
+            fault_ctx(r#"{"version":1,"rules":[{"point":"device_lost","target":2}]}"#);
+        let exec = sorter.sort_in(&mut keys, &mut pool, &ctx).unwrap();
+
+        let mut pool_a = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        pool_a.mark_unhealthy(2).unwrap();
+        let ana = sorter.sort_analytic(n, &mut pool_a).unwrap();
+        assert_eq!(exec.shard_sizes, ana.shard_sizes);
+        assert_eq!(exec.combine, ana.combine);
+        assert_eq!(exec.merge, ana.merge);
+        assert_eq!(exec.coordinator, ana.coordinator);
+        for d in 0..4 {
+            assert_eq!(exec.local[d].ledger, ana.local[d].ledger, "d={d}");
+        }
+    }
+
+    #[test]
+    fn repeated_losses_survive_down_to_one_device() {
+        let sorter = ShardedSort::new(small_params());
+        let n = 50_000;
+        let input = scrambled(n);
+        let mut baseline = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        sorter.sort(&mut baseline, &mut pool).unwrap();
+
+        // Three losses leave one healthy device; the sort still lands
+        // byte-identically via the fallback route.
+        let mut keys = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let ctx = fault_ctx(r#"{"version":1,"rules":[{"point":"device_lost","count":3}]}"#);
+        let report = sorter.sort_in(&mut keys, &mut pool, &ctx).unwrap();
+        assert_eq!(keys, baseline);
+        assert_eq!(report.failovers, 3);
+        assert_eq!(pool.healthy_count(), 1);
+
+        // A fourth loss has nowhere to go: typed error, input untouched.
+        let mut keys = input.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let ctx = fault_ctx(r#"{"version":1,"rules":[{"point":"device_lost","count":4}]}"#);
+        let err = sorter.sort_in(&mut keys, &mut pool, &ctx).unwrap_err();
+        assert!(matches!(err, Error::DeviceLost { .. }), "{err}");
+        assert_eq!(keys, input, "failed sort must not touch the input");
+    }
+
+    #[test]
+    fn injected_oom_is_fatal_not_retried() {
+        let sorter = ShardedSort::new(small_params());
+        let mut keys = scrambled(60_000);
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let ctx = fault_ctx(r#"{"version":1,"rules":[{"point":"device_oom","target":1}]}"#);
+        let err = sorter.sort_in(&mut keys, &mut pool, &ctx).unwrap_err();
+        assert!(err.is_oom(), "{err}");
+        assert_eq!(pool.healthy_count(), 4, "OOM must not mark devices dead");
+    }
+
+    #[test]
+    fn key_value_failover_keeps_payloads_married() {
+        let sorter = ShardedSort::new(small_params());
+        let keys_in: Vec<u64> = (0..50_000u64)
+            .map(|x| (x % 97).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        let payload_in: Vec<u64> = (0..keys_in.len() as u64).collect();
+
+        let mut bk = keys_in.clone();
+        let mut bp = payload_in.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        sorter.sort_pairs(&mut bk, &mut bp, &mut pool).unwrap();
+
+        let mut fk = keys_in.clone();
+        let mut fp = payload_in.clone();
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let ctx =
+            fault_ctx(r#"{"version":1,"rules":[{"point":"device_lost","target":0}]}"#);
+        sorter.sort_pairs_in(&mut fk, &mut fp, &mut pool, &ctx).unwrap();
+        // Duplicate-heavy keys: payload order is the tie-break proof.
+        assert_eq!(fk, bk);
+        assert_eq!(fp, bp, "tie-broken payload order must survive failover");
     }
 
     #[test]

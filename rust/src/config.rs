@@ -173,6 +173,10 @@ pub struct ServiceConfig {
     /// [`crate::algos::adaptive::CostModel`]). Exposed as
     /// `--cost-model`.
     pub cost_model: String,
+    /// Path to a deterministic fault-injection plan JSON (`""` = no
+    /// injection, the production default; see
+    /// [`crate::sim::FaultPlan`]). Exposed as `--fault-plan`.
+    pub fault_plan: String,
     /// Digit width of the planned radix kernel, in bits (1–16; default
     /// 11 → 2048 counting bins, ⌈32/11⌉ = 3 passes over u32 keys).
     /// Exposed as `--digit-bits`; wall time only, never bytes.
@@ -200,6 +204,7 @@ impl Default for ServiceConfig {
             sort: BucketSortParams::default(),
             kernel: KernelKind::default(),
             cost_model: String::new(),
+            fault_plan: String::new(),
             digit_bits: crate::algos::plan::DEFAULT_DIGIT_BITS,
             native: NativeParams::default(),
             batch: BatchConfig::default(),
@@ -272,6 +277,9 @@ impl ServiceConfig {
                 "cost_model" => {
                     cfg.cost_model = str_field(val, "cost_model")?;
                 }
+                "fault_plan" => {
+                    cfg.fault_plan = str_field(val, "fault_plan")?;
+                }
                 "digit_bits" => {
                     let v = val
                         .as_usize()
@@ -343,6 +351,9 @@ impl ServiceConfig {
         // A configured cost-model file must load (exist, parse, carry
         // the right version) — fail at config time, not mid-request.
         crate::algos::adaptive::CostModel::resolve(&self.cost_model)?;
+        // Same discipline for a configured fault plan: it must exist,
+        // parse, and carry a supported version before any request runs.
+        crate::sim::FaultPlan::resolve(&self.fault_plan)?;
         if self.workers == 0 {
             return Err(Error::Config("workers must be at least 1".into()));
         }
@@ -390,6 +401,7 @@ impl ServiceConfig {
             ),
             ("kernel", Json::str(self.kernel.id())),
             ("cost_model", Json::str(self.cost_model.clone())),
+            ("fault_plan", Json::str(self.fault_plan.clone())),
             ("digit_bits", Json::num(self.digit_bits as f64)),
             (
                 "native",
@@ -529,6 +541,39 @@ mod tests {
                 .unwrap();
         assert_eq!(loaded.cost_model, p.display().to_string());
         assert_eq!(ServiceConfig::from_json(&loaded.to_json()).unwrap(), loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_plan_field_roundtrips_and_validates() {
+        // Empty path (the default) round-trips and means no injection.
+        let cfg = ServiceConfig::from_json(r#"{"fault_plan":""}"#).unwrap();
+        assert_eq!(cfg.fault_plan, "");
+        assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // A missing file is rejected at config time.
+        assert!(
+            ServiceConfig::from_json(r#"{"fault_plan":"/nonexistent/plan.json"}"#).is_err()
+        );
+        // A valid plan file is accepted and round-trips.
+        let dir = std::env::temp_dir().join(format!("gbs_fp_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("plan.json");
+        std::fs::write(
+            &p,
+            r#"{"version":1,"seed":3,"rules":[{"point":"device_lost","target":0}]}"#,
+        )
+        .unwrap();
+        let loaded =
+            ServiceConfig::from_json(&format!(r#"{{"fault_plan":"{}"}}"#, p.display()))
+                .unwrap();
+        assert_eq!(loaded.fault_plan, p.display().to_string());
+        assert_eq!(ServiceConfig::from_json(&loaded.to_json()).unwrap(), loaded);
+        // A plan that fails validation (bad version) is rejected.
+        std::fs::write(&p, r#"{"version":2,"rules":[]}"#).unwrap();
+        assert!(
+            ServiceConfig::from_json(&format!(r#"{{"fault_plan":"{}"}}"#, p.display()))
+                .is_err()
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -26,8 +26,22 @@ use crate::error::{Error, Result};
 use crate::exec::NativeEngine;
 use crate::key::for_each_key_vec_mut;
 use crate::runtime::PjrtRuntime;
+use crate::sim::fault::FaultInjector;
 use crate::sim::{DeviceLease, DevicePool, GpuModel, GpuSim, GpuSpec};
 use crate::{KeyData, SortKey};
+use std::sync::Arc;
+
+/// Lifetime fault-recovery totals of an engine, polled by the scheduler
+/// after each batch (delta-style, like [`CoalesceStats`]) to export the
+/// `failover_*` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTotals {
+    /// Device-lost failovers survived: each one marked a device
+    /// unhealthy and re-planned the affected job over the survivors.
+    pub failovers: u64,
+    /// Devices currently marked unhealthy in this engine's pool.
+    pub devices_lost: u64,
+}
 
 /// A sort backend able to process a batch of independent jobs.
 ///
@@ -73,6 +87,13 @@ pub trait SortEngine {
     /// if any — surfaced in the service response tag on request (see
     /// the scheduler's `#plan` tag suffix).
     fn last_plan_choice(&self) -> Option<adaptive::PlanChoice> {
+        None
+    }
+
+    /// Lifetime fault-recovery totals, if this engine can survive
+    /// device loss at all (today: the sharded engine). The scheduler
+    /// polls this after each batch to export `failover_*` metrics.
+    fn fault_totals(&self) -> Option<FaultTotals> {
         None
     }
 }
@@ -231,10 +252,12 @@ pub struct ShardedSortEngine {
     sorter: ShardedSort,
     pool: DevicePool,
     ctx: ExecContext,
+    /// Lifetime device-lost failovers survived across all jobs.
+    failovers: u64,
     /// Held when the devices were checked out of a shared
     /// [`crate::sim::DeviceRegistry`] (multi-worker schedulers); the
     /// devices return to the registry when the engine drops.
-    _lease: Option<DeviceLease>,
+    lease: Option<DeviceLease>,
 }
 
 impl ShardedSortEngine {
@@ -267,7 +290,8 @@ impl ShardedSortEngine {
             models,
             sorter: ShardedSort::try_new(params)?,
             ctx: ExecContext::default(),
-            _lease: None,
+            failovers: 0,
+            lease: None,
         })
     }
 
@@ -289,13 +313,32 @@ impl ShardedSortEngine {
         engine.ctx.kernel = kernel;
         engine.ctx.digit_bits = digit_bits;
         engine.ctx.cost = cost;
-        engine._lease = Some(lease);
+        engine.lease = Some(lease);
         Ok(engine)
     }
 
     /// The device models backing each job's pool.
     pub fn models(&self) -> &[GpuModel] {
         &self.models
+    }
+
+    /// Arm (or disarm) deterministic fault injection for every
+    /// subsequent job. `None` is the production state: the probes in
+    /// [`crate::algos::sharded`] are a single `Option` check.
+    pub fn set_fault_injector(&mut self, faults: Option<Arc<FaultInjector>>) {
+        self.ctx.faults = faults;
+    }
+
+    /// Push this engine's pool-health verdicts out to the shared
+    /// registry (multi-worker schedulers), so replacement engines built
+    /// later skip devices already known dead.
+    fn propagate_health(&self) {
+        let Some(lease) = &self.lease else { return };
+        for d in 0..self.models.len() {
+            if !self.pool.is_healthy(d) {
+                lease.mark_unhealthy(d);
+            }
+        }
     }
 }
 
@@ -305,17 +348,13 @@ fn sharded_job<K: SortKey>(
     ctx: &ExecContext,
     keys: &mut [K],
     payload: &mut Option<Vec<u64>>,
-) -> Result<()> {
+) -> Result<u32> {
     pool.reset();
-    match payload {
-        None => {
-            sorter.sort_in(keys, pool, ctx)?;
-        }
-        Some(vals) => {
-            sorter.sort_pairs_in(keys, vals, pool, ctx)?;
-        }
-    }
-    Ok(())
+    let report = match payload {
+        None => sorter.sort_in(keys, pool, ctx)?,
+        Some(vals) => sorter.sort_pairs_in(keys, vals, pool, ctx)?,
+    };
+    Ok(report.failovers)
 }
 
 impl SortEngine for ShardedSortEngine {
@@ -324,24 +363,35 @@ impl SortEngine for ShardedSortEngine {
     }
 
     fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
-        jobs.into_iter()
+        let results = jobs
+            .into_iter()
             .map(|mut job| {
-                for_each_key_vec_mut!(
+                let failovers = for_each_key_vec_mut!(
                     job.keys,
                     v => sharded_job(&self.sorter, &mut self.pool, &self.ctx, v, &mut job.payload)
                 )?;
+                self.failovers += u64::from(failovers);
                 Ok(job)
             })
-            .collect()
+            .collect();
+        // Health marks persist across jobs (a lost device stays lost),
+        // so surviving jobs keep planning over the survivors; tell the
+        // shared registry, if any, so it stops handing the device out.
+        self.propagate_health();
+        results
     }
 
     fn max_job_keys(&self) -> Option<usize> {
-        Some(
-            self.models
-                .iter()
-                .map(|m| m.spec().max_sortable_keys())
-                .sum(),
-        )
+        // Advertise the *healthy* capacity: after a failover the pool
+        // is smaller, and admission control must track that.
+        Some(self.pool.max_sortable_keys())
+    }
+
+    fn fault_totals(&self) -> Option<FaultTotals> {
+        Some(FaultTotals {
+            failovers: self.failovers,
+            devices_lost: (self.models.len() - self.pool.healthy_count()) as u64,
+        })
     }
 }
 
@@ -498,33 +548,50 @@ impl SortEngine for PacedSimEngine {
     }
 }
 
-/// Build the engine selected by `cfg.engine`.
+/// Build the engine selected by `cfg.engine`, with fault injection
+/// disarmed (the production path; see [`build_engine_with_faults`]).
 pub fn build_engine(cfg: &ServiceConfig) -> Result<Box<dyn SortEngine>> {
+    build_engine_with_faults(cfg, None)
+}
+
+/// Build the engine selected by `cfg.engine`, arming the sharded
+/// engine's instrumented fault points when an injector is supplied
+/// (resolved from `cfg.fault_plan` by the service). Engines without
+/// instrumented points ignore the injector.
+pub fn build_engine_with_faults(
+    cfg: &ServiceConfig,
+    faults: Option<Arc<FaultInjector>>,
+) -> Result<Box<dyn SortEngine>> {
     match cfg.engine {
         EngineKind::Native => Ok(Box::new(NativeSortEngine::new(cfg)?)),
         EngineKind::Sim => Ok(Box::new(SimSortEngine::new(cfg)?)),
         EngineKind::Pjrt => Ok(Box::new(PjrtSortEngine::new(cfg)?)),
-        EngineKind::Sharded => Ok(Box::new(ShardedSortEngine::new(cfg)?)),
+        EngineKind::Sharded => {
+            let mut engine = ShardedSortEngine::new(cfg)?;
+            engine.set_fault_injector(faults);
+            Ok(Box::new(engine))
+        }
     }
 }
 
 /// Build the engine for scheduler worker `worker` of `cfg.workers`.
 ///
-/// Identical to [`build_engine`] except for the sharded engine in a
-/// multi-worker scheduler: there each worker checks its share of
-/// `cfg.devices` out of the shared `registry`, so concurrent workers
-/// hold disjoint device subsets (no oversubscription).
+/// Identical to [`build_engine_with_faults`] except for the sharded
+/// engine in a multi-worker scheduler: there each worker checks its
+/// share of `cfg.devices` out of the shared `registry`, so concurrent
+/// workers hold disjoint device subsets (no oversubscription).
 pub fn build_worker_engine(
     cfg: &ServiceConfig,
     worker: usize,
     registry: Option<&crate::sim::DeviceRegistry>,
+    faults: Option<Arc<FaultInjector>>,
 ) -> Result<Box<dyn SortEngine>> {
     match (cfg.engine, registry) {
         (EngineKind::Sharded, Some(registry)) => {
             let share =
                 crate::sim::DeviceRegistry::share_for(worker, cfg.workers, registry.total());
             let lease = registry.checkout(share)?;
-            Ok(Box::new(ShardedSortEngine::with_lease(
+            let mut engine = ShardedSortEngine::with_lease(
                 lease,
                 ShardedSortParams {
                     sort: cfg.sort,
@@ -533,9 +600,23 @@ pub fn build_worker_engine(
                 cfg.kernel,
                 cfg.digit_bits,
                 adaptive::CostModel::resolve(&cfg.cost_model)?,
-            )?))
+            )?;
+            engine.set_fault_injector(faults);
+            Ok(Box::new(engine))
         }
-        _ => build_engine(cfg),
+        _ => build_engine_with_faults(cfg, faults),
+    }
+}
+
+/// Stall scheduler worker `worker` for an injected slow-device delay,
+/// if the plan has one armed. This (and the [`PacedSimEngine`] stream
+/// wait above) are the two sanctioned pacing sleeps outside
+/// [`crate::util::backoff`] — pure test-time pacing, never a retry
+/// loop, so determinism of *results* is unaffected.
+pub fn pace_for_injected_slowdown(faults: Option<&FaultInjector>, worker: usize) {
+    let Some(inj) = faults else { return };
+    if let Some(ms) = inj.slow_device_ms(worker) {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
     }
 }
 
@@ -868,8 +949,8 @@ mod tests {
             ..Default::default()
         };
         let registry = DeviceRegistry::new(cfg.devices.clone());
-        let e0 = build_worker_engine(&cfg, 0, Some(&registry)).unwrap();
-        let e1 = build_worker_engine(&cfg, 1, Some(&registry)).unwrap();
+        let e0 = build_worker_engine(&cfg, 0, Some(&registry), None).unwrap();
+        let e1 = build_worker_engine(&cfg, 1, Some(&registry), None).unwrap();
         assert_eq!(e0.kind(), EngineKind::Sharded);
         assert_eq!(e1.kind(), EngineKind::Sharded);
         // cfg.kernel must survive the lease path (regression: it used
@@ -889,15 +970,81 @@ mod tests {
         // 4 devices over 2 workers: both leases hold 2, none left over.
         assert_eq!(registry.available(), 0);
         // A third worker would oversubscribe and is refused.
-        assert!(build_worker_engine(&cfg, 2, Some(&registry)).is_err());
+        assert!(build_worker_engine(&cfg, 2, Some(&registry), None).is_err());
         // Dropping an engine returns its devices.
         drop(e0);
         assert_eq!(registry.available(), 2);
         drop(e1);
         assert_eq!(registry.available(), 4);
         // Without a registry the plain config path is used.
-        let plain = build_worker_engine(&cfg, 0, None).unwrap();
+        let plain = build_worker_engine(&cfg, 0, None, None).unwrap();
         assert_eq!(plain.kind(), EngineKind::Sharded);
+    }
+
+    #[test]
+    fn sharded_engine_survives_device_loss_and_reports_totals() {
+        use crate::sim::{DeviceRegistry, FaultPlan};
+        let cfg = ServiceConfig {
+            engine: EngineKind::Sharded,
+            workers: 1,
+            sort: BucketSortParams { tile: 256, s: 16 },
+            ..Default::default()
+        };
+        let plan = FaultPlan::parse(
+            r#"{"version":1,"seed":7,"rules":[{"point":"device_lost","target":1,"count":1}]}"#,
+        )
+        .unwrap();
+        let registry = DeviceRegistry::new(cfg.devices.clone());
+        let mut e =
+            build_worker_engine(&cfg, 0, Some(&registry), Some(plan.injector())).unwrap();
+        let keys: Vec<u32> = (0..40_000u32).map(|x| x.wrapping_mul(2654435761)).collect();
+        let results = e.sort_batch(vec![kv_u32(keys.clone(), None)]);
+        let out = results[0].as_ref().unwrap();
+        let mut want = keys;
+        want.sort_unstable();
+        assert_eq!(out.keys.as_u32().unwrap(), &want[..]);
+        // One failover survived, one device lost — and the shared
+        // registry learned about it.
+        assert_eq!(
+            e.fault_totals(),
+            Some(FaultTotals {
+                failovers: 1,
+                devices_lost: 1,
+            })
+        );
+        assert_eq!(registry.unhealthy_count(), 1);
+        // Advertised capacity shrank to the healthy share.
+        let full: usize = cfg
+            .devices
+            .iter()
+            .map(|m| m.spec().max_sortable_keys())
+            .sum();
+        assert!(e.max_job_keys().unwrap() < full);
+        // Follow-up jobs keep working on the degraded pool without
+        // re-paying a failover (the rule is exhausted, the mark sticks).
+        let results = e.sort_batch(vec![kv_u32(vec![3, 1, 2], None)]);
+        assert_eq!(results[0].as_ref().unwrap().keys.as_u32().unwrap(), &[1, 2, 3]);
+        assert_eq!(e.fault_totals().unwrap().failovers, 1);
+        // Engines without fault instrumentation keep the default-None
+        // surface.
+        let native = NativeSortEngine::new(&ServiceConfig::default()).unwrap();
+        assert!(native.fault_totals().is_none());
+    }
+
+    #[test]
+    fn pace_helper_fires_only_for_targeted_worker() {
+        use crate::sim::FaultPlan;
+        // No injector: free no-op.
+        pace_for_injected_slowdown(None, 0);
+        let plan = FaultPlan::parse(
+            r#"{"version":1,"seed":1,"rules":[{"point":"slow_device","target":0,"delay_ms":1}]}"#,
+        )
+        .unwrap();
+        let inj = plan.injector();
+        pace_for_injected_slowdown(Some(&inj), 1); // wrong worker: no stall
+        assert_eq!(inj.injected().get("slow_device"), None);
+        pace_for_injected_slowdown(Some(&inj), 0); // 1 ms stall, rule fires
+        assert_eq!(inj.injected().get("slow_device"), Some(&1));
     }
 
     #[test]

@@ -41,8 +41,9 @@ pub mod service;
 pub use batcher::Batcher;
 pub use coalesce::CoalesceStats;
 pub use engine::{
-    build_engine, build_worker_engine, verify_outcome, NativeSortEngine, PacedSimEngine,
-    PjrtSortEngine, ShardedSortEngine, SimSortEngine, SortEngine,
+    build_engine, build_engine_with_faults, build_worker_engine, verify_outcome, FaultTotals,
+    NativeSortEngine, PacedSimEngine, PjrtSortEngine, ShardedSortEngine, SimSortEngine,
+    SortEngine,
 };
 pub use request::{
     Batch, JobData, PendingRequest, RequestId, SortJob, SortOutcome, SortRequest,

@@ -40,6 +40,13 @@ pub struct SortRequest {
     /// Optional client-side tag echoed back in the response (workload
     /// name, tenant, …).
     pub tag: Option<String>,
+    /// Optional per-request deadline, in milliseconds measured from
+    /// admission. A request still waiting or retrying when its deadline
+    /// passes fails with a typed [`crate::Error::Timeout`] instead of
+    /// occupying the queue forever. `None` (the default) never times
+    /// out. The deadline is checked at dispatch and retry boundaries —
+    /// a batch already executing runs to completion.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Legacy name of [`SortRequest`] (pre-typed API).
@@ -121,6 +128,13 @@ impl SortRequestBuilder {
     /// Echo `tag` back in the response.
     pub fn tag(mut self, tag: impl Into<String>) -> Self {
         self.req.tag = Some(tag.into());
+        self
+    }
+
+    /// Fail the request with [`crate::Error::Timeout`] if it is still
+    /// waiting (or retrying) `ms` milliseconds after admission.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.req.deadline_ms = Some(ms);
         self
     }
 
@@ -287,6 +301,12 @@ mod tests {
         assert!(req.descending && req.self_check);
         assert_eq!(req.payload.as_deref(), Some(&[50u64, 20, 90][..]));
         assert_eq!(req.tag.as_deref(), Some("kv"));
+        assert_eq!(req.deadline_ms, None);
+        let with_deadline = SortRequest::builder(vec![1u32])
+            .deadline_ms(250)
+            .build()
+            .unwrap();
+        assert_eq!(with_deadline.deadline_ms, Some(250));
         // Mismatched payload is rejected at build time.
         let err = SortRequest::builder(vec![1u32, 2])
             .payload(vec![1])

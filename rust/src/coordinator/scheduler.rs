@@ -32,13 +32,21 @@
 
 use super::engine::{self, SortEngine};
 use super::queue::{BoundedQueue, PushError};
-use super::request::{Batch, JobData, SortResponse};
+use super::request::{Batch, JobData, PendingRequest, SortResponse};
 use crate::config::ServiceConfig;
-use crate::error::{Error, Result};
+use crate::error::{Error, FailureClass, Result};
 use crate::metrics::Metrics;
+use crate::sim::fault::FaultInjector;
+use crate::util::backoff::{self, Backoff};
 use crate::util::sync::{self as sync, Arc};
 use std::sync::mpsc;
 use std::time::Instant;
+
+/// Bounded retry budget for a retryable per-request failure (injected
+/// device loss that exhausted failover, contained engine panics, …).
+/// Attempt-counted — the backoff between attempts paces the worker but
+/// never decides the outcome.
+const RETRY_MAX_ATTEMPTS: u32 = 3;
 
 /// Builds one worker's engine, on that worker's thread. Called once per
 /// worker with the worker index.
@@ -64,6 +72,11 @@ struct Shared {
     queue: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
     verify: bool,
+    /// Deterministic fault injector resolved from `config.fault_plan`
+    /// (`None` in production — every probe is a single `Option` check).
+    /// Shared with the worker engines and the net tier so rule counters
+    /// span the whole service.
+    faults: Option<Arc<FaultInjector>>,
     /// Fired after every finished batch — the service's intake loop
     /// turns it into a wake-up message so it never has to poll.
     on_slot_free: Box<dyn Fn() + Send + Sync>,
@@ -93,6 +106,7 @@ impl Scheduler {
         factory: Arc<WorkerEngineFactory>,
         metrics: Arc<Metrics>,
         on_slot_free: Box<dyn Fn() + Send + Sync>,
+        faults: Option<Arc<FaultInjector>>,
     ) -> Result<Scheduler> {
         let workers = cfg.workers;
         let shared = Arc::new(Shared {
@@ -101,6 +115,7 @@ impl Scheduler {
             queue: BoundedQueue::new(workers, 2 * workers),
             metrics,
             verify: cfg.verify,
+            faults,
             on_slot_free,
         });
 
@@ -241,11 +256,17 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
     let mut coalesced_seen = engine.coalesced_totals().unwrap_or_default();
     // Same delta scheme for the adaptive front-end's plan decisions.
     let mut plan_seen = engine.plan_totals().unwrap_or_default();
+    // …and for the engine's fault-recovery totals.
+    let mut fault_seen = engine.fault_totals().unwrap_or_default();
 
     loop {
         // `pop` marks this worker's busy slot and wakes a dispatcher
         // blocked on capacity; `None` means drained — exit.
         let Some(batch) = shared.queue.pop(worker) else { return };
+
+        // An armed slow-device rule paces this worker before the batch
+        // runs (a stall, never a failure).
+        engine::pace_for_injected_slowdown(shared.faults.as_deref(), worker);
 
         let outcomes = execute_batch(worker, engine.as_mut(), batch, shared);
 
@@ -286,6 +307,27 @@ fn worker_loop(worker: usize, mut engine: Box<dyn SortEngine>, shared: &Shared) 
             }
         }
 
+        if let Some(totals) = engine.fault_totals() {
+            if totals != fault_seen {
+                shared.metrics.incr(
+                    "failover_events",
+                    totals.failovers - fault_seen.failovers,
+                );
+                shared
+                    .metrics
+                    .record_max("failover_devices_lost", totals.devices_lost);
+                fault_seen = totals;
+            }
+        }
+
+        // The injector's own per-point counters are lifetime totals
+        // shared across workers — export as a max, not a delta.
+        if let Some(inj) = shared.faults.as_deref() {
+            for (point, n) in inj.injected() {
+                shared.metrics.record_max(&format!("fault_injected_{point}"), n);
+            }
+        }
+
         shared.queue.finish(worker);
         (shared.on_slot_free)();
 
@@ -306,11 +348,73 @@ type Delivery = (
     Result<SortResponse>,
 );
 
+/// Deadline check at a dispatch/retry boundary: `Some(Timeout)` when
+/// the request's budget (measured from admission) has passed. Batches
+/// already executing always run to completion — this is only consulted
+/// between engine dispatches.
+fn past_deadline(req: &PendingRequest) -> Option<Error> {
+    let ms = req.request.deadline_ms?;
+    let waited = Instant::now().saturating_duration_since(req.admitted_at);
+    (waited.as_millis() as u64 > ms).then(|| {
+        Error::Timeout(format!(
+            "request {} exceeded its {ms} ms deadline after {} ms",
+            req.id,
+            waited.as_millis()
+        ))
+    })
+}
+
+/// One panic-contained engine dispatch. An injected `worker_panic`
+/// fires *inside* the contained scope, so fault plans exercise the real
+/// recovery path. Returns the panic message on unwind; the engine
+/// object itself stays usable (every engine resets per-job device
+/// state, and the facade's poison policy keeps shared structures sane).
+fn run_engine(
+    worker: usize,
+    engine: &mut dyn SortEngine,
+    jobs: Vec<JobData>,
+    faults: Option<&FaultInjector>,
+) -> std::result::Result<Vec<Result<JobData>>, String> {
+    let n = jobs.len();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if let Some(inj) = faults {
+            if inj.worker_panic(worker) {
+                panic!("injected worker panic (fault plan)");
+            }
+        }
+        engine.sort_batch(jobs)
+    }));
+    match caught {
+        Ok(results) => {
+            debug_assert_eq!(results.len(), n, "engine must answer every job");
+            Ok(results)
+        }
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(format!("worker {worker} engine panicked: {msg}"))
+        }
+    }
+}
+
 /// Run one batch on this worker's engine and prepare the responses
 /// (identical per-request semantics to the old single-engine loop: jobs
 /// fail individually, verify/self-check modes check each output against
 /// its own input). Engines sort ascending; the requested direction is
 /// applied here, uniformly, before verification.
+///
+/// Resilience layers, in order:
+/// 1. requests past their deadline fail typed before any engine work;
+/// 2. an engine panic (real or injected) is contained to this batch —
+///    the worker survives;
+/// 3. retryable failures are re-dispatched *individually* with bounded,
+///    attempt-counted backoff, which both recovers transient faults and
+///    isolates a poisoned job from its batch-mates.
 fn execute_batch(
     worker: usize,
     engine: &mut dyn SortEngine,
@@ -320,20 +424,112 @@ fn execute_batch(
     let dispatched = Instant::now();
     let batch_size = batch.len();
     let mut reqs = batch.requests;
+    let faults = shared.faults.as_deref();
+
+    // Layer 1: deadline check at the dispatch boundary. An expired
+    // request's slot becomes an empty job (keeps indices aligned, costs
+    // the engine nothing) and its result is forced to Timeout below.
+    let timed_out: Vec<Option<Error>> = reqs.iter().map(past_deadline).collect();
+
     let jobs: Vec<JobData> = reqs
         .iter_mut()
-        .map(|r| JobData {
-            keys: std::mem::take(&mut r.request.keys),
-            payload: r.request.payload.take(),
+        .zip(&timed_out)
+        .map(|(r, expired)| {
+            if expired.is_some() {
+                JobData::default()
+            } else {
+                JobData {
+                    keys: std::mem::take(&mut r.request.keys),
+                    payload: r.request.payload.take(),
+                }
+            }
         })
         .collect();
-    // Clone inputs only for requests that will be verified.
+    // Clone inputs for requests that will be verified — and for
+    // everyone when a fault plan is armed: retry needs the original
+    // bytes back after a failed dispatch, and chaos runs want every
+    // recovered response verified against its input.
     let inputs: Vec<Option<JobData>> = reqs
         .iter()
         .zip(&jobs)
-        .map(|(r, job)| (shared.verify || r.request.self_check).then(|| job.clone()))
+        .map(|(r, job)| {
+            (shared.verify || r.request.self_check || faults.is_some()).then(|| job.clone())
+        })
         .collect();
-    let mut results = engine.sort_batch(jobs);
+
+    // Layer 2: panic-contained dispatch of the whole batch.
+    let mut results: Vec<Result<JobData>> = match run_engine(worker, engine, jobs, faults) {
+        Ok(results) => results,
+        Err(msg) => {
+            shared.metrics.incr("fault_worker_panics_contained", 1);
+            (0..batch_size)
+                .map(|_| Err(Error::Internal(msg.clone())))
+                .collect()
+        }
+    };
+
+    for (result, expired) in results.iter_mut().zip(timed_out) {
+        if let Some(e) = expired {
+            shared.metrics.incr("requests_timed_out", 1);
+            *result = Err(e);
+        }
+    }
+
+    // Layer 3: bounded per-request retry of retryable failures with a
+    // captured input. Deadlines are re-checked at every boundary.
+    for i in 0..batch_size {
+        let retryable =
+            matches!(&results[i], Err(e) if e.failure_class() == FailureClass::Retryable);
+        if !retryable {
+            continue;
+        }
+        let Some(input) = &inputs[i] else { continue };
+        let mut attempt: u32 = 0;
+        loop {
+            if let Some(e) = past_deadline(&reqs[i]) {
+                shared.metrics.incr("requests_timed_out", 1);
+                results[i] = Err(e);
+                break;
+            }
+            if attempt >= RETRY_MAX_ATTEMPTS {
+                shared.metrics.incr("retry_exhausted", 1);
+                break;
+            }
+            backoff::sleep_backoff(&Backoff::SCHEDULER, attempt);
+            attempt += 1;
+            shared.metrics.incr("retry_attempts", 1);
+            match run_engine(worker, engine, vec![input.clone()], faults) {
+                Ok(mut one) => {
+                    let outcome = match one.pop() {
+                        Some(r) => r,
+                        None => Err(Error::Internal(
+                            "engine answered nothing for a retried job".into(),
+                        )),
+                    };
+                    let recovered = outcome.is_ok();
+                    let again = matches!(
+                        &outcome,
+                        Err(e) if e.failure_class() == FailureClass::Retryable
+                    );
+                    results[i] = outcome;
+                    if recovered {
+                        shared.metrics.incr("retry_recovered", 1);
+                        break;
+                    }
+                    if !again {
+                        break;
+                    }
+                }
+                Err(msg) => {
+                    // Panicked again, alone: contained, still retryable
+                    // (bounded by the attempt budget above).
+                    shared.metrics.incr("fault_worker_panics_contained", 1);
+                    results[i] = Err(Error::Internal(msg));
+                }
+            }
+        }
+    }
+
     debug_assert_eq!(results.len(), batch_size, "engine must answer every job");
     for (req, result) in reqs.iter().zip(results.iter_mut()) {
         if req.request.descending {
@@ -459,6 +655,7 @@ mod tests {
             Box::new(move || {
                 freed_hook.fetch_add(1, Ordering::SeqCst);
             }),
+            None,
         )
         .unwrap();
         assert_eq!(scheduler.worker_count(), 3);
@@ -539,6 +736,7 @@ mod tests {
             }),
             metrics.clone(),
             Box::new(|| {}),
+            None,
         )
         .unwrap();
 
@@ -606,6 +804,7 @@ mod tests {
             }),
             metrics,
             Box::new(|| {}),
+            None,
         )
         .unwrap();
 
@@ -646,7 +845,10 @@ mod tests {
     }
 
     #[test]
-    fn panicked_workers_retire_and_dispatch_fails_dead() {
+    fn engine_panics_are_contained_and_the_worker_survives() {
+        // An engine that always panics: every request fails with a
+        // typed Internal error (never a hang, never a dropped channel)
+        // and the worker keeps serving — the pool never goes dead.
         struct PanicEngine;
         impl SortEngine for PanicEngine {
             fn kind(&self) -> EngineKind {
@@ -662,28 +864,193 @@ mod tests {
             Arc::new(|_cfg: &ServiceConfig, _w: usize| {
                 Ok(Box::new(PanicEngine) as Box<dyn SortEngine>)
             }),
-            metrics,
+            metrics.clone(),
             Box::new(|| {}),
+            None,
         )
         .unwrap();
         let (batch, rx) = batch_of(vec![2, 1]);
         scheduler.try_dispatch(batch).unwrap();
-        // The caller sees a disconnect, not a hang.
-        assert!(rx.recv().is_err());
-        // The response channels drop mid-unwind, before the retire
-        // guard runs — wait for the bookkeeping to settle.
-        while scheduler.shared.queue.live_consumers() > 0 {
-            std::thread::yield_now();
-        }
-        // The pool is now dead: both dispatch paths hand the batch back
-        // instead of stranding it (or the dispatcher).
-        let (batch, _rx2) = batch_of(vec![2, 1]);
-        let batch = match scheduler.try_dispatch(batch) {
-            Err(DispatchError::Dead(b)) => b,
-            other => panic!("expected dead pool, got {other:?}"),
-        };
-        assert!(scheduler.dispatch_blocking(batch).is_err());
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Internal(_)), "{err}");
+        assert_eq!(err.failure_class(), FailureClass::Retryable);
+        // The worker survived the panic and still serves (and fails)
+        // follow-up batches — no dead pool, no stranded dispatcher.
+        let (batch, rx2) = batch_of(vec![4, 3]);
+        scheduler.dispatch_blocking(batch).unwrap();
+        assert!(rx2.recv().unwrap().is_err());
+        assert!(scheduler.has_spare_capacity());
         scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counters["fault_worker_panics_contained"], 2);
+        assert_eq!(snap.counters["requests_failed"], 2);
+    }
+
+    #[test]
+    fn engine_panic_is_isolated_per_request_when_inputs_are_captured() {
+        // A poisoned job (key 666) panics the engine; with verify on
+        // (inputs captured) the retry pass re-dispatches each job alone,
+        // so the batch-mate recovers and only the poisoned request
+        // fails — with a typed error, after a bounded retry budget.
+        struct PoisonEngine;
+        impl SortEngine for PoisonEngine {
+            fn kind(&self) -> EngineKind {
+                EngineKind::Native
+            }
+            fn sort_batch(&mut self, jobs: Vec<JobData>) -> Vec<Result<JobData>> {
+                jobs.into_iter()
+                    .map(|mut j| {
+                        if let KeyData::U32(v) = &mut j.keys {
+                            if v.contains(&666) {
+                                panic!("poisoned job");
+                            }
+                            v.sort_unstable();
+                        }
+                        Ok(j)
+                    })
+                    .collect()
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let cfg = ServiceConfig {
+            workers: 1,
+            verify: true,
+            ..Default::default()
+        };
+        let scheduler = Scheduler::start(
+            &cfg,
+            Arc::new(|_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(PoisonEngine) as Box<dyn SortEngine>)
+            }),
+            metrics.clone(),
+            Box::new(|| {}),
+            None,
+        )
+        .unwrap();
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let batch = Batch {
+            requests: vec![
+                PendingRequest {
+                    id: 1,
+                    request: SortRequest::new(vec![666u32, 3, 1]),
+                    admitted_at: Instant::now(),
+                    respond_to: tx1,
+                },
+                PendingRequest {
+                    id: 2,
+                    request: SortRequest::new(vec![9u32, 8, 7]),
+                    admitted_at: Instant::now(),
+                    respond_to: tx2,
+                },
+            ],
+            total_keys: 6,
+        };
+        scheduler.dispatch_blocking(batch).unwrap();
+        let err = rx1.recv().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Internal(_)), "{err}");
+        assert_eq!(rx2.recv().unwrap().unwrap().keys_u32(), &[7, 8, 9]);
+        // The worker survived the poisoned job.
+        let (batch, rx3) = batch_of(vec![2, 1]);
+        scheduler.dispatch_blocking(batch).unwrap();
+        assert_eq!(rx3.recv().unwrap().unwrap().keys_u32(), &[1, 2]);
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        // Whole batch + 3 solo retries of the poisoned job panicked.
+        assert_eq!(snap.counters["fault_worker_panics_contained"], 4);
+        assert_eq!(snap.counters["retry_exhausted"], 1);
+        assert_eq!(snap.counters["retry_recovered"], 1);
+        assert_eq!(snap.counters["requests_failed"], 1);
+    }
+
+    #[test]
+    fn injected_worker_panic_recovers_by_retry() {
+        use crate::sim::FaultPlan;
+        let plan = FaultPlan::parse(
+            r#"{"version":1,"seed":1,"rules":[{"point":"worker_panic","count":1}]}"#,
+        )
+        .unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            &test_cfg(1),
+            Arc::new(|_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(CountingEngine) as Box<dyn SortEngine>)
+            }),
+            metrics.clone(),
+            Box::new(|| {}),
+            Some(plan.injector()),
+        )
+        .unwrap();
+        let (batch, rx) = batch_of(vec![5, 3, 4]);
+        scheduler.dispatch_blocking(batch).unwrap();
+        // The injected panic hits the first dispatch; the bounded retry
+        // recovers the request byte-identically.
+        assert_eq!(rx.recv().unwrap().unwrap().keys_u32(), &[3, 4, 5]);
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counters["fault_worker_panics_contained"], 1);
+        assert_eq!(snap.counters["retry_recovered"], 1);
+        assert_eq!(snap.counters["retry_attempts"], 1);
+        assert_eq!(snap.counters["fault_injected_worker_panic"], 1);
+    }
+
+    #[test]
+    fn expired_deadlines_fail_typed_without_engine_work() {
+        use std::time::Duration;
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            &test_cfg(1),
+            Arc::new(|_cfg: &ServiceConfig, _w: usize| {
+                Ok(Box::new(CountingEngine) as Box<dyn SortEngine>)
+            }),
+            metrics.clone(),
+            Box::new(|| {}),
+            None,
+        )
+        .unwrap();
+        // Admitted 50 ms ago with a 1 ms budget: expired before
+        // dispatch, fails typed.
+        let (tx, rx) = mpsc::channel();
+        let expired_admission = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .unwrap();
+        let batch = Batch {
+            requests: vec![PendingRequest {
+                id: 7,
+                request: SortRequest::builder(vec![3u32, 1, 2])
+                    .deadline_ms(1)
+                    .build()
+                    .unwrap(),
+                admitted_at: expired_admission,
+                respond_to: tx,
+            }],
+            total_keys: 3,
+        };
+        scheduler.dispatch_blocking(batch).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert_eq!(err.failure_class(), FailureClass::Fatal);
+        // A generous deadline sails through untouched.
+        let (tx, rx) = mpsc::channel();
+        let batch = Batch {
+            requests: vec![PendingRequest {
+                id: 8,
+                request: SortRequest::builder(vec![3u32, 1, 2])
+                    .deadline_ms(60_000)
+                    .build()
+                    .unwrap(),
+                admitted_at: Instant::now(),
+                respond_to: tx,
+            }],
+            total_keys: 3,
+        };
+        scheduler.dispatch_blocking(batch).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().keys_u32(), &[1, 2, 3]);
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counters["requests_timed_out"], 1);
+        assert_eq!(snap.counters["requests_failed"], 1);
+        assert_eq!(snap.counters["requests_completed"], 1);
     }
 
     #[test]
@@ -700,6 +1067,7 @@ mod tests {
             }),
             metrics,
             Box::new(|| {}),
+            None,
         )
         .unwrap_err();
         assert!(err.to_string().contains("exploded"), "{err}");

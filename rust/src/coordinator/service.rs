@@ -37,7 +37,8 @@ use super::scheduler::{DispatchError, Scheduler, WorkerEngineFactory};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::metrics::{Metrics, MetricsSnapshot};
-use crate::sim::DeviceRegistry;
+use crate::sim::fault::FaultInjector;
+use crate::sim::{DeviceRegistry, FaultPlan};
 use crate::util::sync::{self as sync, lock_unpoisoned, Arc, AtomicU64, Mutex, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::time::Instant;
@@ -84,6 +85,11 @@ pub struct SortClient {
     core: Arc<ClientCore>,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
+    /// The service's fault injector, when a plan is armed. Exposed so
+    /// chaos tests (and the net tier) can share one injector — every
+    /// injection, wherever probed, lands in the same
+    /// `fault_injected_*` totals.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl SortClient {
@@ -122,6 +128,16 @@ impl SortClient {
     }
 
     /// Snapshot of the service metrics.
+    /// The service's live fault injector, when `cfg.fault_plan` armed
+    /// one. Chaos tests hand this to
+    /// [`crate::net::ClientOptions::faults`] so client-side probes
+    /// (`socket_cut`, `frame_corrupt`) draw from the same seeded rule
+    /// set — and count into the same `fault_injected_*` totals — as
+    /// the device- and scheduler-level points.
+    pub fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        self.faults.clone()
+    }
+
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -167,12 +183,23 @@ impl SortService {
     /// multi-worker sharded service checks each worker's devices out of
     /// one shared [`DeviceRegistry`], so concurrent workers hold
     /// disjoint slices of `cfg.devices`.
+    ///
+    /// A configured `cfg.fault_plan` compiles into **one**
+    /// [`FaultInjector`] shared by the scheduler and every worker
+    /// engine, so rule counters and `fault_injected_*` metrics span the
+    /// whole service.
     pub fn start(cfg: ServiceConfig) -> Result<SortClient> {
+        let faults = FaultPlan::resolve(&cfg.fault_plan)?.map(|plan| plan.injector());
         let registry = (cfg.engine == crate::config::EngineKind::Sharded && cfg.workers > 1)
             .then(|| DeviceRegistry::new(cfg.devices.clone()));
-        Self::start_with_worker_factory(cfg, move |cfg: &ServiceConfig, worker: usize| {
-            engine::build_worker_engine(cfg, worker, registry.as_ref())
-        })
+        let engine_faults = faults.clone();
+        Self::start_inner(
+            cfg,
+            move |cfg: &ServiceConfig, worker: usize| {
+                engine::build_worker_engine(cfg, worker, registry.as_ref(), engine_faults.clone())
+            },
+            faults,
+        )
     }
 
     /// Start with an explicit engine (tests inject mocks/tiny devices).
@@ -208,8 +235,23 @@ impl SortService {
     }
 
     /// Start with a per-worker engine factory: called once per worker,
-    /// on that worker's thread, with the worker index.
+    /// on that worker's thread, with the worker index. A configured
+    /// `cfg.fault_plan` still arms the *scheduler-level* fault points
+    /// (worker panic, slow device, deadlines/retries); injected engines
+    /// that want device-level faults must wire the injector themselves.
     pub fn start_with_worker_factory<F>(cfg: ServiceConfig, factory: F) -> Result<SortClient>
+    where
+        F: Fn(&ServiceConfig, usize) -> Result<Box<dyn SortEngine>> + Send + Sync + 'static,
+    {
+        let faults = FaultPlan::resolve(&cfg.fault_plan)?.map(|plan| plan.injector());
+        Self::start_inner(cfg, factory, faults)
+    }
+
+    fn start_inner<F>(
+        cfg: ServiceConfig,
+        factory: F,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<SortClient>
     where
         F: Fn(&ServiceConfig, usize) -> Result<Box<dyn SortEngine>> + Send + Sync + 'static,
     {
@@ -225,12 +267,14 @@ impl SortService {
             Box::new(move || {
                 let _ = slot_tx.send(ClientMsg::SlotFreed);
             }),
+            faults.clone(),
         )?;
 
         let intake_metrics = metrics.clone();
         let batcher = Batcher::new(cfg.batch);
+        let intake_faults = faults.clone();
         let intake = sync::thread::spawn_named("gbs-intake".into(), move || {
-            intake_loop(client_rx, scheduler, batcher, intake_metrics)
+            intake_loop(client_rx, scheduler, batcher, intake_metrics, intake_faults)
         });
 
         Ok(SortClient {
@@ -240,6 +284,7 @@ impl SortService {
             }),
             metrics,
             next_id: Arc::new(AtomicU64::new(1)),
+            faults,
         })
     }
 }
@@ -249,6 +294,7 @@ fn intake_loop(
     scheduler: Scheduler,
     mut batcher: Batcher,
     metrics: Arc<Metrics>,
+    faults: Option<Arc<FaultInjector>>,
 ) {
     let mut shutdown_ack: Option<mpsc::Sender<()>> = None;
     loop {
@@ -369,6 +415,14 @@ fn intake_loop(
     // Stops the workers once the queue is empty and joins them;
     // outcomes are still delivered through per-request channels.
     scheduler.shutdown();
+    // Final export of the injector's per-point totals, so the shutdown
+    // snapshot also covers faults injected after the last batch (net
+    // tier probes share this injector).
+    if let Some(inj) = &faults {
+        for (point, n) in inj.injected() {
+            metrics.record_max(&format!("fault_injected_{point}"), n);
+        }
+    }
     if let Some(ack) = shutdown_ack {
         let _ = ack.send(());
     }

@@ -60,6 +60,48 @@ pub enum Error {
     Config(String),
     /// Wrapped I/O error.
     Io(std::io::Error),
+    /// A simulated device died mid-step (fault injection, or a real
+    /// accelerator dropping off the bus). The sharded engine treats this
+    /// as retryable: mark the device unhealthy and re-plan over the
+    /// survivors.
+    DeviceLost {
+        /// Pool-local index of the lost device.
+        device: usize,
+        /// Human-readable device name (e.g. "GTX 285 (2 GB)").
+        name: String,
+    },
+    /// A per-request deadline expired before the job ran to completion.
+    /// Deadlines are attempt-counted at the scheduler, never inside
+    /// kernels (the R4 lint keeps wall-clock out of `src/algos/`).
+    Timeout(String),
+    /// An internal invariant broke — most prominently a kernel job that
+    /// panicked and was contained at the worker boundary. The request
+    /// fails; the worker and every other in-flight request survive.
+    Internal(String),
+    /// The TCP connection died with requests still in flight. Carries the
+    /// request ids that were pending so callers (and the auto-resubmit
+    /// path) know exactly what was lost.
+    ConnectionLost {
+        /// Wire ids of the requests that were in flight on the dead
+        /// connection.
+        request_ids: Vec<u64>,
+    },
+}
+
+/// Coarse failure taxonomy the scheduler's retry loop switches on.
+///
+/// `Retryable` failures are transient — a lost device, a contained panic,
+/// a dropped socket — and re-executing the request is both safe (sorting
+/// is deterministic, so a retry is byte-identical) and likely to succeed.
+/// `Fatal` failures are properties of the request itself (invalid input,
+/// too large, deadline already blown): retrying burns capacity without
+/// changing the outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureClass {
+    /// Transient: bounded retry with deterministic backoff is warranted.
+    Retryable,
+    /// Permanent for this request: fail fast with the typed error.
+    Fatal,
 }
 
 impl fmt::Display for Error {
@@ -83,6 +125,16 @@ impl fmt::Display for Error {
             Error::Remote { code, message } => write!(f, "remote error [{code}]: {message}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::DeviceLost { device, name } => {
+                write!(f, "device lost: {name} (device {device})")
+            }
+            Error::Timeout(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+            Error::ConnectionLost { request_ids } => write!(
+                f,
+                "connection lost with {} request(s) in flight: {request_ids:?}",
+                request_ids.len()
+            ),
         }
     }
 }
@@ -114,6 +166,25 @@ impl Error {
     /// request as permanently failed.
     pub fn is_busy(&self) -> bool {
         matches!(self, Error::Busy(_))
+    }
+
+    /// Classify this failure for the scheduler's retry loop.
+    ///
+    /// Retryable: transient infrastructure faults where re-executing the
+    /// deterministic sort is safe and useful (`DeviceLost`, contained
+    /// `Internal` panics, `Io`/`ConnectionLost` transport drops, `Busy`
+    /// backpressure). Everything else — bad input, capacity ceilings,
+    /// expired deadlines, config errors — is a property of the request or
+    /// the deployment and stays `Fatal`.
+    pub fn failure_class(&self) -> FailureClass {
+        match self {
+            Error::DeviceLost { .. }
+            | Error::Internal(_)
+            | Error::Busy(_)
+            | Error::Io(_)
+            | Error::ConnectionLost { .. } => FailureClass::Retryable,
+            _ => FailureClass::Fatal,
+        }
     }
 }
 
@@ -149,6 +220,51 @@ mod tests {
         };
         assert!(remote.to_string().contains("internal"));
         assert!(remote.to_string().contains("engine exploded"));
+    }
+
+    #[test]
+    fn failure_classes_partition_the_enum() {
+        let lost = Error::DeviceLost {
+            device: 2,
+            name: "GTX 285 (2 GB)".into(),
+        };
+        assert_eq!(lost.failure_class(), FailureClass::Retryable);
+        assert!(lost.to_string().contains("GTX 285"));
+        assert!(lost.to_string().contains("device 2"));
+
+        let conn = Error::ConnectionLost {
+            request_ids: vec![7, 9],
+        };
+        assert_eq!(conn.failure_class(), FailureClass::Retryable);
+        assert!(conn.to_string().contains("2 request(s)"));
+        assert!(conn.to_string().contains('7'));
+
+        assert_eq!(
+            Error::Internal("kernel job panicked".into()).failure_class(),
+            FailureClass::Retryable
+        );
+        assert_eq!(
+            Error::Busy("queue full".into()).failure_class(),
+            FailureClass::Retryable
+        );
+
+        // Fatal: request-shaped failures where a retry changes nothing.
+        for fatal in [
+            Error::Timeout("2 ms deadline".into()),
+            Error::InvalidInput("sentinel".into()),
+            Error::TooLarge("10 > 5".into()),
+            Error::DeviceOom {
+                requested: 1,
+                available: 0,
+                device: "GTX 260".into(),
+            },
+            Error::Config("bad".into()),
+        ] {
+            assert_eq!(fatal.failure_class(), FailureClass::Fatal, "{fatal}");
+        }
+        assert!(Error::Timeout("2 ms".into())
+            .to_string()
+            .contains("deadline exceeded"));
     }
 
     #[test]

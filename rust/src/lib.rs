@@ -69,7 +69,7 @@ pub mod util;
 pub mod workload;
 
 pub use algos::{ExecContext, KernelKind};
-pub use error::{Error, Result};
+pub use error::{Error, FailureClass, Result};
 pub use key::{KeyData, KeyType, Record, Segmented, SortKey, TypedKeys};
 
 /// The paper's key type (32-bit keys, 4-byte data items) — kept as the

@@ -15,7 +15,9 @@
 use gpu_bucket_sort::algos::sharded::{ShardedSort, ShardedSortParams};
 use gpu_bucket_sort::algos::Algorithm;
 use gpu_bucket_sort::config::{EngineKind, NetConfig, ServiceConfig};
-use gpu_bucket_sort::coordinator::{build_engine, verify_outcome, JobData, SortRequest, SortService};
+use gpu_bucket_sort::coordinator::{
+    build_engine_with_faults, verify_outcome, JobData, SortRequest, SortService,
+};
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
 use gpu_bucket_sort::experiments as exp;
 use gpu_bucket_sort::net::{NetClient, NetServer};
@@ -76,6 +78,7 @@ COMMANDS
               [--devices gtx285,tesla,gtx285-1g,gtx260] [--seed 1]
               [--kernel adaptive|radix|bitonic] [--digit-bits 11]
               [--cost-model configs/cost_model.json]
+              [--fault-plan configs/fault_plan.json]
               [--key-type u32|u64|i32|i64|f32] [--payload true]
               [--descending true] [--verify true] [--analytic true]
               (sharded: shard across a multi-GPU pool; --analytic prices
@@ -99,6 +102,7 @@ COMMANDS
               [--engine native|sharded] [--workers 4] [--config file.json]
               [--kernel adaptive|radix|bitonic] [--digit-bits 11]
               [--cost-model configs/cost_model.json]
+              [--fault-plan configs/fault_plan.json]
               [--coalesce-max-keys 128K]
               [--key-type u32] [--payload true] [--descending true]
               [--listen 127.0.0.1:4750]
@@ -302,6 +306,10 @@ fn cmd_sort_sharded(
     let models = DevicePool::parse_list(flag(flags, "devices", &default_devices))
         .ok_or("unknown device in --devices list")?;
     let mut pool = DevicePool::new(&models).map_err(|e| e.to_string())?;
+    let faults = gpu_bucket_sort::sim::FaultPlan::resolve(flag(flags, "fault-plan", ""))
+        .map_err(|e| e.to_string())?
+        .map(|plan| plan.injector());
+    let ctx = ctx.with_faults(faults.clone());
     let sorter = ShardedSort::try_new(ShardedSortParams::default()).map_err(|e| e.to_string())?;
     println!(
         "device pool: {} devices, aggregate capacity {} keys",
@@ -344,6 +352,11 @@ fn cmd_sort_sharded(
         report.makespan_ms(&pool),
         report.sort_rate_mkeys_s(&pool)
     );
+    if let Some(inj) = &faults {
+        for (point, count) in inj.injected() {
+            println!("  fault injected: {point} ×{count} (recovered)");
+        }
+    }
     Ok(())
 }
 
@@ -393,7 +406,13 @@ fn cmd_sort_typed(
     if let Some(dir) = flags.get("artifacts-dir") {
         cfg.artifacts_dir = dir.clone();
     }
+    if let Some(p) = flags.get("fault-plan") {
+        cfg.fault_plan = p.clone();
+    }
     cfg.validate().map_err(|e| e.to_string())?;
+    let faults = gpu_bucket_sort::sim::FaultPlan::resolve(&cfg.fault_plan)
+        .map_err(|e| e.to_string())?
+        .map(|plan| plan.injector());
 
     println!(
         "generating {n} {key_type} keys ({dist}){} …",
@@ -406,7 +425,7 @@ fn cmd_sort_typed(
     };
     let reference = job.clone();
 
-    let mut eng = build_engine(&cfg).map_err(|e| e.to_string())?;
+    let mut eng = build_engine_with_faults(&cfg, faults).map_err(|e| e.to_string())?;
     let t0 = Instant::now();
     let result = eng
         .sort_batch(vec![job])
@@ -537,6 +556,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(m) = flags.get("cost-model") {
         cfg.cost_model = m.clone();
+    }
+    if let Some(p) = flags.get("fault-plan") {
+        cfg.fault_plan = p.clone();
     }
     if let Some(c) = flags.get("coalesce-max-keys") {
         cfg.batch.coalesce_max_keys = parse_size(c)?;

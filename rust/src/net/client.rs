@@ -11,6 +11,24 @@
 //! in-process ones: a load-shed is [`Error::Busy`], an oversized
 //! request [`Error::TooLarge`], a drain-time rejection a
 //! "service stopped"-style [`Error::Coordinator`].
+//!
+//! # Disconnects and recovery
+//!
+//! A connection that dies with requests in flight fails them with a
+//! typed [`Error::ConnectionLost`] naming every lost request id — the
+//! caller knows exactly what was pending, not just that "something
+//! closed". With [`ClientOptions::reconnect`] the client instead
+//! recovers end to end: the reader thread that observes the dead
+//! socket reconnects with capped exponential backoff
+//! ([`Backoff::RECONNECT`]) and *resubmits* every in-flight request on
+//! the new socket under its original wire id, reusing the original
+//! response channels — callers blocked in [`NetClient::sort`] never
+//! notice. Request ids are allocated client-wide (unique across
+//! reconnects) and the handshake carries a per-client session id, so
+//! the server's dedup window can replay responses it already
+//! completed instead of re-executing; a re-execution is byte-identical
+//! anyway (sorting is deterministic), which is what makes blind
+//! resubmission idempotent.
 
 use super::credit::CreditGate;
 use super::wire::{
@@ -21,8 +39,10 @@ use super::wire::{
 use crate::config::NetConfig;
 use crate::coordinator::{SortRequest, SortResponse};
 use crate::error::{Error, Result};
+use crate::sim::fault::FaultInjector;
+use crate::util::backoff::{self, Backoff};
 use crate::util::sync::{
-    self as sync, lock_unpoisoned, Arc, AtomicU64, AtomicUsize, Mutex, Ordering,
+    self as sync, lock_unpoisoned, Arc, AtomicBool, AtomicU64, AtomicUsize, Mutex, Ordering,
 };
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
@@ -31,12 +51,30 @@ use std::sync::mpsc;
 
 use sync::thread::JoinHandle;
 
+/// How many times a dead slot is re-dialed (with [`Backoff::RECONNECT`]
+/// pacing) before its in-flight requests fail with
+/// [`Error::ConnectionLost`].
+const RECONNECT_MAX_ATTEMPTS: u32 = 5;
+
+/// How many reconnects a single request may ride through before it
+/// fails instead of resubmitting again (guards against a server that
+/// accepts connections only to drop them mid-request forever).
+const MAX_RESUBMITS: u32 = 3;
+
+/// Response channel of one in-flight sort.
+type SortSender = mpsc::Sender<Result<SortResponse>>;
+
 /// One request awaiting frames from the server.
 enum Pending {
     /// An in-flight sort: response frames accumulate here until
     /// `ResultEnd` (or an error frame) resolves the oneshot.
     Sort {
-        tx: mpsc::Sender<Result<SortResponse>>,
+        tx: SortSender,
+        /// The submitted request, kept only when reconnection is on —
+        /// it is what gets resubmitted on the replacement socket.
+        request: Option<SortRequest>,
+        /// Reconnects this request has already ridden through.
+        attempts: u32,
         header: Option<SortHeaderMsg>,
         key_bytes: Vec<u8>,
         payload_bytes: Vec<u8>,
@@ -45,33 +83,88 @@ enum Pending {
     Control(mpsc::Sender<()>),
 }
 
+/// Client-wide state shared by every connection (and every replacement
+/// connection): the dial target, the session identity, the request-id
+/// allocator and the recovery counters.
+struct ClientShared {
+    addr: String,
+    net: NetConfig,
+    /// Nonzero session id sent in every `Hello`; keys the server's
+    /// idempotency window together with the request id.
+    session: u64,
+    reconnect: bool,
+    /// Probed at the socket-cut / frame-corrupt injection points.
+    faults: Option<Arc<FaultInjector>>,
+    /// Request ids are allocated here — client-wide, so an id is never
+    /// reused across reconnects (the server dedup window depends on
+    /// that).
+    next_id: AtomicU64,
+    reconnects: AtomicU64,
+    resubmits: AtomicU64,
+}
+
+/// Recovery/fault options for [`NetClient::connect_with`].
+#[derive(Clone, Debug, Default)]
+pub struct ClientOptions {
+    /// Reconnect dead connections automatically (capped exponential
+    /// backoff) and idempotently resubmit in-flight requests on the
+    /// replacement socket. Off by default: plain
+    /// [`NetClient::connect`] fails in-flight requests with a typed
+    /// [`Error::ConnectionLost`] instead.
+    pub reconnect: bool,
+    /// Optional fault injector probed before each submission write
+    /// (`socket_cut`, `frame_corrupt` points). Chaos tests pass the
+    /// service's own injector here so client-side injections land in
+    /// the same `fault_injected_*` totals the service exports.
+    pub faults: Option<Arc<FaultInjector>>,
+}
+
 /// The pending-request table and the liveness flag, behind one mutex.
 /// The credit window lives in the connection's [`CreditGate`], which
-/// keeps its *own* dead flag — [`Conn::fail_all`] sets this one first
-/// (so in-flight `submit`s re-checking under this lock bounce), then
-/// kills the gate (so credit waiters wake with a refusal).
+/// keeps its *own* dead flag — retirement sets this one first (so
+/// in-flight `submit`s re-checking under this lock bounce), then kills
+/// the gate (so blocked credit waiters wake with a refusal).
 struct ConnState {
     dead: bool,
     pending: HashMap<u64, Pending>,
 }
 
+/// One pool slot: holds the slot's live connection (if any) and is the
+/// lock recovery and submission serialize on when replacing it.
+struct Slot {
+    index: usize,
+    shared: Arc<ClientShared>,
+    conn: Mutex<Option<Arc<Conn>>>,
+}
+
 struct Conn {
+    shared: Arc<ClientShared>,
+    /// Slot index — the `target` the fault plan's `socket_cut` /
+    /// `frame_corrupt` rules match on.
+    index: usize,
     /// Kept for `Shutdown::Both` on close (unblocks the reader).
     stream: TcpStream,
     writer: Mutex<TcpStream>,
     state: Mutex<ConnState>,
     /// Admission credits granted by the server's handshake.
     gate: CreditGate,
-    next_id: AtomicU64,
     /// Request chunk size: ours clamped to the server's frame ceiling.
     chunk: usize,
     max_frame_len: usize,
+    /// Set by an orderly [`Conn::close`] so the reader's recovery pass
+    /// knows not to reconnect.
+    closing: AtomicBool,
     reader: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Conn {
-    fn open(addr: &str, net: &NetConfig) -> Result<Arc<Conn>> {
-        let stream = TcpStream::connect(addr)?;
+    /// Dial, handshake and spawn the reader. The caller installs the
+    /// returned connection into `slot` — the reader's recovery pass
+    /// serializes on the slot lock, so open-then-install races resolve
+    /// there.
+    fn open(slot: &Arc<Slot>) -> Result<Arc<Conn>> {
+        let shared = &slot.shared;
+        let stream = TcpStream::connect(&shared.addr)?;
         let _ = stream.set_nodelay(true);
         let mut write_half = stream.try_clone()?;
         // Synchronous handshake before the reader thread exists.
@@ -81,13 +174,14 @@ impl Conn {
                 Opcode::Hello,
                 0,
                 HelloMsg {
-                    max_frame_len: net.max_frame_len as u32,
+                    max_frame_len: shared.net.max_frame_len as u32,
+                    session: shared.session,
                 }
                 .encode(),
             ),
         )?;
         let mut reader = BufReader::new(stream.try_clone()?);
-        let frame = read_frame(&mut reader, net.max_frame_len)?
+        let frame = read_frame(&mut reader, shared.net.max_frame_len)?
             .ok_or_else(|| Error::Coordinator("server closed during handshake".into()))?;
         let ack = match frame.opcode {
             Opcode::HelloAck => HelloAckMsg::decode(&frame.payload)?,
@@ -102,6 +196,8 @@ impl Conn {
             }
         };
         let conn = Arc::new(Conn {
+            shared: shared.clone(),
+            index: slot.index,
             stream,
             writer: Mutex::new(write_half),
             state: Mutex::new(ConnState {
@@ -109,17 +205,20 @@ impl Conn {
                 pending: HashMap::new(),
             }),
             gate: CreditGate::new(ack.credits),
-            next_id: AtomicU64::new(1),
-            chunk: net
+            chunk: shared
+                .net
                 .chunk_bytes
                 .min((ack.max_frame_len as usize).max(64))
                 .max(1),
-            max_frame_len: net.max_frame_len,
+            max_frame_len: shared.net.max_frame_len,
+            closing: AtomicBool::new(false),
             reader: Mutex::new(None),
         });
         let rd_conn = conn.clone();
+        let rd_slot = slot.clone();
         let handle = sync::thread::spawn_named("gbs-net-client".into(), move || {
-            reader_loop(rd_conn, reader)
+            reader_loop(&rd_conn, reader);
+            recover(&rd_slot, &rd_conn);
         });
         *lock_unpoisoned(&conn.reader) = Some(handle);
         Ok(conn)
@@ -138,29 +237,53 @@ impl Conn {
         }
     }
 
-    /// Mark the connection dead and fail every pending request with a
-    /// fresh typed error from `mk`; wakes all credit waiters.
-    fn fail_all(&self, mk: &dyn Fn() -> Error) {
+    /// Mark the connection dead, kill the credit gate and hand back
+    /// every pending entry. Idempotent: a second caller gets nothing.
+    fn retire(&self) -> Vec<(u64, Pending)> {
         // Order matters: the state flag first (so a `submit` that
         // already holds a credit bounces at its re-check), then the
         // gate kill (so blocked credit waiters wake with a refusal).
         let mut st = lock_unpoisoned(&self.state);
         st.dead = true;
-        for (_, p) in st.pending.drain() {
-            if let Pending::Sort { tx, .. } = p {
-                let _ = tx.send(Err(mk()));
-            }
-            // Control entries resolve by sender drop (RecvError).
-        }
+        let entries: Vec<(u64, Pending)> = st.pending.drain().collect();
         drop(st);
         self.gate.kill();
+        entries
+    }
+
+    /// Retire and fail every pending sort with a typed
+    /// [`Error::ConnectionLost`] naming all lost ids; control waiters
+    /// resolve by sender drop.
+    fn fail_disconnected(&self) {
+        fail_with_connection_lost(self.retire());
     }
 
     fn submit(&self, request: SortRequest) -> Result<mpsc::Receiver<Result<SortResponse>>> {
         request.validate()?;
         self.acquire_credit()?;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        self.send_request(id, request, &tx, 0)?;
+        Ok(rx)
+    }
+
+    /// Resubmission path of the recovery pass: same wire id, original
+    /// response channel, bumped attempt counter.
+    fn resubmit(&self, id: u64, request: SortRequest, tx: &SortSender, attempts: u32) -> Result<()> {
+        self.acquire_credit()?;
+        self.send_request(id, request, tx, attempts)
+    }
+
+    /// Register `id` in the pending table and stream the submission
+    /// frames (begin + chunks + commit in one buffered write, so they
+    /// never interleave with another thread's frames).
+    fn send_request(
+        &self,
+        id: u64,
+        request: SortRequest,
+        tx: &SortSender,
+        attempts: u32,
+    ) -> Result<()> {
         {
             let mut st = lock_unpoisoned(&self.state);
             if st.dead {
@@ -169,7 +292,9 @@ impl Conn {
             st.pending.insert(
                 id,
                 Pending::Sort {
-                    tx,
+                    tx: tx.clone(),
+                    request: self.shared.reconnect.then(|| request.clone()),
+                    attempts,
                     header: None,
                     key_bytes: Vec::new(),
                     payload_bytes: Vec::new(),
@@ -184,8 +309,6 @@ impl Conn {
             total_keys: request.keys.len() as u64,
             tag: request.tag.clone(),
         };
-        // One buffered write for the whole submission: begin + chunks +
-        // commit never interleave with another thread's frames.
         let mut buf = encode_frame(&Frame::message(Opcode::SortBegin, id, begin.encode()));
         for f in chunk_frames(
             Opcode::KeyChunk,
@@ -201,20 +324,41 @@ impl Conn {
             }
         }
         buf.extend_from_slice(&encode_frame(&Frame::control(Opcode::Commit, id)));
+        // Fault probes, in wire order: corrupt one byte of the
+        // submission (the server's CRC check rejects it and closes the
+        // connection with a typed error) or cut the socket outright.
+        // Both drive the full disconnect→reconnect→resubmit path.
+        if let Some(inj) = &self.shared.faults {
+            if inj.frame_corrupt(self.index) {
+                if let Some(last) = buf.last_mut() {
+                    *last ^= 0xFF;
+                }
+            }
+            if inj.socket_cut(self.index) {
+                let _ = self.stream.shutdown(Shutdown::Both);
+            }
+        }
         let wrote = {
             let mut w = lock_unpoisoned(&self.writer);
             w.write_all(&buf)
         };
         if let Err(e) = wrote {
-            self.fail_all(&|| Error::Coordinator("connection closed".into()));
+            if self.shared.reconnect {
+                // Leave the request pending: the reader observes the
+                // dead socket and the recovery pass resubmits it on
+                // the replacement connection.
+                let _ = self.stream.shutdown(Shutdown::Both);
+                return Ok(());
+            }
+            self.fail_disconnected();
             return Err(Error::Io(e));
         }
-        Ok(rx)
+        Ok(())
     }
 
     /// A control round trip: send `opcode`, wait for its echo-id reply.
     fn control(&self, opcode: Opcode) -> Result<()> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         {
             let mut st = lock_unpoisoned(&self.state);
@@ -228,7 +372,7 @@ impl Conn {
             w.write_all(&encode_frame(&Frame::control(opcode, id)))
         };
         if let Err(e) = wrote {
-            self.fail_all(&|| Error::Coordinator("connection closed".into()));
+            self.fail_disconnected();
             return Err(Error::Io(e));
         }
         rx.recv()
@@ -236,6 +380,9 @@ impl Conn {
     }
 
     fn close(&self) {
+        // Orderly close: flag first, so the reader's recovery pass
+        // fails any stragglers instead of reconnecting.
+        self.closing.store(true, Ordering::SeqCst);
         {
             // Best-effort orderly goodbye; the socket shutdown below is
             // what actually unblocks the reader.
@@ -249,19 +396,119 @@ impl Conn {
     }
 }
 
-fn reader_loop(conn: Arc<Conn>, mut reader: BufReader<TcpStream>) {
-    let fatal: String = loop {
+/// Fail every pending sort in `entries` with one
+/// [`Error::ConnectionLost`] carrying the full list of lost ids.
+fn fail_with_connection_lost(entries: Vec<(u64, Pending)>) {
+    let ids: Vec<u64> = entries
+        .iter()
+        .filter(|(_, p)| matches!(p, Pending::Sort { .. }))
+        .map(|(id, _)| *id)
+        .collect();
+    for (_, p) in entries {
+        if let Pending::Sort { tx, .. } = p {
+            let _ = tx.send(Err(Error::ConnectionLost {
+                request_ids: ids.clone(),
+            }));
+        }
+        // Control entries resolve by sender drop (RecvError).
+    }
+}
+
+fn reader_loop(conn: &Arc<Conn>, mut reader: BufReader<TcpStream>) {
+    loop {
         match read_frame(&mut reader, conn.max_frame_len) {
             Ok(Some(frame)) => {
-                if let Err(e) = handle_frame(&conn, frame) {
-                    break e.to_string();
+                if handle_frame(conn, frame).is_err() {
+                    break;
                 }
             }
-            Ok(None) => break "connection closed".into(),
-            Err(e) => break format!("connection failed: {e}"),
+            Ok(None) => break,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Reader-exit recovery: retire the dead connection, then either
+/// reconnect-and-resubmit (when [`ClientOptions::reconnect`] is on) or
+/// fail every in-flight request with a typed
+/// [`Error::ConnectionLost`].
+fn recover(slot: &Arc<Slot>, dead: &Arc<Conn>) {
+    let entries = dead.retire();
+    let shared = &slot.shared;
+    if dead.closing.load(Ordering::SeqCst) || !shared.reconnect {
+        fail_with_connection_lost(entries);
+        return;
+    }
+    let mut sorts = Vec::new();
+    let mut kept: Vec<(u64, Pending)> = Vec::new();
+    for (id, p) in entries {
+        match p {
+            Pending::Sort {
+                tx,
+                request: Some(req),
+                attempts,
+                ..
+            } if attempts < MAX_RESUBMITS => sorts.push((id, tx, req, attempts)),
+            other => kept.push((id, other)),
+        }
+    }
+    // Entries that cannot ride another reconnect fail now.
+    fail_with_connection_lost(kept);
+    // Replace the connection, serialized on the slot lock (concurrent
+    // submits to this slot wait here instead of racing the re-dial).
+    let mut guard = lock_unpoisoned(&slot.conn);
+    let target = match guard.as_ref() {
+        // Another path (an inline `pick` reconnect) already replaced it.
+        Some(c) if !Arc::ptr_eq(c, dead) && !c.is_dead() => c.clone(),
+        _ => {
+            let mut attempt = 0u32;
+            loop {
+                if attempt >= RECONNECT_MAX_ATTEMPTS {
+                    *guard = None;
+                    drop(guard);
+                    let entries = sorts
+                        .into_iter()
+                        .map(|(id, tx, req, attempts)| {
+                            (
+                                id,
+                                Pending::Sort {
+                                    tx,
+                                    request: Some(req),
+                                    attempts,
+                                    header: None,
+                                    key_bytes: Vec::new(),
+                                    payload_bytes: Vec::new(),
+                                },
+                            )
+                        })
+                        .collect();
+                    fail_with_connection_lost(entries);
+                    return;
+                }
+                backoff::sleep_backoff(&Backoff::RECONNECT, attempt);
+                attempt += 1;
+                match Conn::open(slot) {
+                    Ok(c) => {
+                        shared.reconnects.fetch_add(1, Ordering::Relaxed);
+                        *guard = Some(c.clone());
+                        break c;
+                    }
+                    Err(_) => continue,
+                }
+            }
         }
     };
-    conn.fail_all(&|| Error::Coordinator(fatal.clone()));
+    drop(guard);
+    // Idempotent resubmission: same wire id, same request, original
+    // response channel. The server's dedup window replays responses it
+    // already completed; anything else re-executes — byte-identical
+    // either way, because sorting is deterministic.
+    for (id, tx, request, attempts) in sorts {
+        shared.resubmits.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = target.resubmit(id, request, &tx, attempts + 1) {
+            let _ = tx.send(Err(e));
+        }
+    }
 }
 
 /// Dispatch one server frame; `Err` is fatal for the connection.
@@ -296,6 +543,7 @@ fn handle_frame(conn: &Conn, frame: Frame) -> Result<()> {
                 header,
                 key_bytes,
                 payload_bytes,
+                ..
             }) = entry
             {
                 let _ = tx.send(assemble_response(frame.id, header, key_bytes, payload_bytes));
@@ -305,7 +553,7 @@ fn handle_frame(conn: &Conn, frame: Frame) -> Result<()> {
             let msg = ErrorMsg::decode(&frame.payload)?;
             if frame.id == 0 {
                 // Connection-level error: the server is about to close
-                // this socket; surface the typed failure everywhere.
+                // this socket; the recovery pass takes it from here.
                 return Err(error_from_wire(msg.code, msg.message));
             }
             let entry = lock_unpoisoned(&conn.state).pending.remove(&frame.id);
@@ -374,13 +622,31 @@ fn assemble_response(
     })
 }
 
+/// A nonzero session id for the server's idempotency window. Wall-clock
+/// nanoseconds mixed with a heap address: two clients of one server
+/// would have to collide on both to share a window — and even then the
+/// window only ever replays *completed* responses under ids the
+/// colliding client resubmits.
+fn fresh_session() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x5eed);
+    let probe = Box::new(0u8);
+    let salt = (&*probe as *const u8) as u64;
+    drop(probe);
+    (nanos ^ salt.rotate_left(32)) | 1
+}
+
 /// A pooled, pipelined client for a remote sort server.
 ///
 /// Requests round-robin across `connections` sockets; each socket
 /// pipelines up to its server-granted credit window. Dropping the
 /// client sends `Goodbye` on every connection and joins the readers.
 pub struct NetClient {
-    conns: Vec<Arc<Conn>>,
+    shared: Arc<ClientShared>,
+    slots: Vec<Arc<Slot>>,
     next: AtomicUsize,
 }
 
@@ -388,32 +654,92 @@ impl NetClient {
     /// Connect a pool of `connections` (≥ 1) sockets to `addr` (e.g.
     /// `"127.0.0.1:4750"`). `net` carries the client-side frame ceiling
     /// and preferred chunk size; the admission credit window comes from
-    /// the server's handshake reply.
+    /// the server's handshake reply. Reconnection is off: a dead
+    /// connection fails its in-flight requests with a typed
+    /// [`Error::ConnectionLost`].
     pub fn connect(addr: &str, connections: usize, net: NetConfig) -> Result<NetClient> {
+        Self::connect_with(addr, connections, net, ClientOptions::default())
+    }
+
+    /// [`NetClient::connect`] with explicit [`ClientOptions`]
+    /// (auto-reconnect, fault injection).
+    pub fn connect_with(
+        addr: &str,
+        connections: usize,
+        net: NetConfig,
+        opts: ClientOptions,
+    ) -> Result<NetClient> {
         net.validate()?;
-        let mut conns = Vec::new();
-        for _ in 0..connections.max(1) {
-            conns.push(Conn::open(addr, &net)?);
+        let shared = Arc::new(ClientShared {
+            addr: addr.to_string(),
+            net,
+            session: fresh_session(),
+            reconnect: opts.reconnect,
+            faults: opts.faults,
+            next_id: AtomicU64::new(1),
+            reconnects: AtomicU64::new(0),
+            resubmits: AtomicU64::new(0),
+        });
+        let mut slots = Vec::new();
+        for index in 0..connections.max(1) {
+            let slot = Arc::new(Slot {
+                index,
+                shared: shared.clone(),
+                conn: Mutex::new(None),
+            });
+            let conn = Conn::open(&slot)?;
+            *lock_unpoisoned(&slot.conn) = Some(conn);
+            slots.push(slot);
         }
         Ok(NetClient {
-            conns,
+            shared,
+            slots,
             next: AtomicUsize::new(0),
         })
     }
 
     /// Number of pooled connections.
     pub fn connections(&self) -> usize {
-        self.conns.len()
+        self.slots.len()
     }
 
-    fn pick(&self) -> Result<&Arc<Conn>> {
-        let n = self.conns.len();
+    /// Successful automatic reconnects performed so far.
+    pub fn reconnects(&self) -> u64 {
+        self.shared.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// In-flight requests resubmitted across a reconnect so far.
+    pub fn resubmits(&self) -> u64 {
+        self.shared.resubmits.load(Ordering::Relaxed)
+    }
+
+    fn pick(&self) -> Result<Arc<Conn>> {
+        let n = self.slots.len();
         let start = self.next.fetch_add(1, Ordering::Relaxed);
         for k in 0..n {
-            let c = &self.conns[(start + k) % n];
-            if !c.is_dead() {
-                return Ok(c);
+            let slot = &self.slots[(start + k) % n];
+            let conn = lock_unpoisoned(&slot.conn).clone();
+            if let Some(c) = conn {
+                if !c.is_dead() {
+                    return Ok(c);
+                }
             }
+        }
+        if self.shared.reconnect {
+            // Every connection is down: re-dial one slot inline. The
+            // slot lock serializes this with reader-driven recovery —
+            // whoever wins installs, the other reuses.
+            let slot = &self.slots[start % n];
+            let mut guard = lock_unpoisoned(&slot.conn);
+            if let Some(c) = guard.as_ref() {
+                if !c.is_dead() {
+                    return Ok(c.clone());
+                }
+            }
+            let c = Conn::open(slot)?;
+            self.shared.reconnects.fetch_add(1, Ordering::Relaxed);
+            *guard = Some(c.clone());
+            return Ok(c);
         }
         Err(Error::Coordinator("every pooled connection closed".into()))
     }
@@ -448,8 +774,18 @@ impl NetClient {
 
 impl Drop for NetClient {
     fn drop(&mut self) {
-        for c in &self.conns {
-            c.close();
+        for slot in &self.slots {
+            // Closing a connection joins its reader, whose recovery
+            // pass may have installed a replacement meanwhile — close
+            // that too. Recovery never reinstalls once `closing` is
+            // set on the connection it retired, so this terminates.
+            loop {
+                let conn = lock_unpoisoned(&slot.conn).take();
+                match conn {
+                    Some(c) => c.close(),
+                    None => break,
+                }
+            }
         }
     }
 }

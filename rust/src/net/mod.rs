@@ -14,7 +14,11 @@
 //!   frames), per-connection fairness and graceful drain.
 //! * [`client`] — [`NetClient`]: a pooled, pipelined client whose
 //!   failures come back as the same typed [`crate::error::Error`]
-//!   classes as in-process calls.
+//!   classes as in-process calls. With [`ClientOptions::reconnect`] it
+//!   recovers from dead connections end to end: capped-backoff re-dial
+//!   plus idempotent resubmission of in-flight requests under their
+//!   original wire ids, matched by the server's per-session dedup
+//!   window.
 //!
 //! `gbs serve --listen ADDR` and `gbs sort --connect ADDR` are the CLI
 //! entry points; `docs/ARCHITECTURE.md` (§ Network tier) has the frame
@@ -25,5 +29,5 @@ pub mod credit;
 pub mod server;
 pub mod wire;
 
-pub use client::NetClient;
+pub use client::{ClientOptions, NetClient};
 pub use server::NetServer;

@@ -44,7 +44,7 @@ use crate::util::sync::{
     self as sync, lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned, Arc, AtomicBool,
     Condvar, Mutex, Ordering,
 };
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -55,6 +55,43 @@ use sync::thread::JoinHandle;
 /// How long [`NetServer::shutdown`] waits for in-flight sorts before
 /// giving up and closing sockets anyway.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Size of the sliding idempotency window: the most recent completed
+/// responses, keyed by `(session, request id)`, kept server-wide so a
+/// reconnecting client that resubmits an already-completed request gets
+/// the cached response replayed instead of a re-execution.
+const DEDUP_WINDOW: usize = 256;
+
+/// Responses larger than this many keys are not cached (bounds the
+/// window's memory). An uncached resubmission simply re-executes —
+/// sorting is deterministic, so the replay is byte-identical anyway;
+/// the window is an optimization, not a correctness requirement.
+const DEDUP_MAX_KEYS: u64 = 1 << 16;
+
+/// The idempotency window: FIFO-evicted map of completed responses.
+/// Session id `0` (a client that never reconnects) disables it.
+#[derive(Default)]
+struct Dedup {
+    order: VecDeque<(u64, u64)>,
+    map: HashMap<(u64, u64), SortResponse>,
+}
+
+impl Dedup {
+    fn insert(&mut self, session: u64, id: u64, resp: SortResponse) {
+        if self.map.insert((session, id), resp).is_none() {
+            self.order.push_back((session, id));
+            while self.order.len() > DEDUP_WINDOW {
+                if let Some(k) = self.order.pop_front() {
+                    self.map.remove(&k);
+                }
+            }
+        }
+    }
+
+    fn get(&self, session: u64, id: u64) -> Option<SortResponse> {
+        self.map.get(&(session, id)).cloned()
+    }
+}
 
 /// A zero-counting gauge: incremented per submitted request, waited on
 /// at drain time.
@@ -107,6 +144,8 @@ struct Shared {
     inflight: Gauge,
     drain: DrainSignal,
     conns: Mutex<Vec<TcpStream>>,
+    /// Idempotency window for reconnecting clients (see [`Dedup`]).
+    dedup: Mutex<Dedup>,
 }
 
 /// A running TCP sort server. Dropping (or calling
@@ -135,6 +174,7 @@ impl NetServer {
             inflight: Gauge::default(),
             drain: DrainSignal::default(),
             conns: Mutex::new(Vec::new()),
+            dedup: Mutex::new(Dedup::default()),
         });
         let accept_shared = shared.clone();
         let accept = sync::thread::spawn_named("gbs-net-accept".into(), move || {
@@ -338,11 +378,12 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
     let pump_writer = writer.clone();
     let pump_shared = shared.clone();
     let pump_window = window.clone();
+    let session = hello.session;
     let pump = sync::thread::spawn_named("gbs-net-pump".into(), move || {
-        pump_loop(pump_rx, pump_writer, pump_shared, pump_window, chunk)
+        pump_loop(pump_rx, pump_writer, pump_shared, pump_window, chunk, session)
     });
 
-    read_loop(&mut reader, &writer, &shared, &window, pump_tx);
+    read_loop(&mut reader, &writer, &shared, &window, pump_tx, session, chunk);
 
     let _ = pump.join();
 }
@@ -353,13 +394,22 @@ fn pump_loop(
     shared: Arc<Shared>,
     window: Arc<ServerWindow>,
     chunk: usize,
+    session: u64,
 ) {
     while let Ok((id, resp_rx)) = rx.recv() {
         let outcome = resp_rx
             .recv()
             .unwrap_or_else(|_| Err(Error::Coordinator("request dropped during shutdown".into())));
         match outcome {
-            Ok(resp) => send_response(&writer, &shared, id, &resp, chunk),
+            Ok(resp) => {
+                send_response(&writer, &shared, id, &resp, chunk);
+                // Remember the completed response for the idempotency
+                // window — errors are not cached (they may be
+                // transient; a resubmission deserves a fresh attempt).
+                if session != 0 && resp.keys.len() as u64 <= DEDUP_MAX_KEYS {
+                    lock_unpoisoned(&shared.dedup).insert(session, id, resp);
+                }
+            }
             Err(e) => {
                 let code = classify_error(&e);
                 if code == ErrorCode::Busy {
@@ -430,11 +480,35 @@ fn send_response(
     }
 }
 
+/// Replay path: stream a cached response, then return the credit the
+/// client spent on the resubmission. (Replays bypass the pump thread,
+/// which normally owns the credit return.)
+fn send_response_with_credit(
+    writer: &Mutex<TcpStream>,
+    shared: &Shared,
+    id: u64,
+    resp: &SortResponse,
+    chunk: usize,
+) {
+    send_response(writer, shared, id, resp, chunk);
+    send(
+        writer,
+        shared,
+        &Frame::message(Opcode::Credit, id, CreditMsg { credits: 1 }.encode()),
+    );
+}
+
 /// A request mid-stream: `SortBegin` seen, `Commit` pending.
 struct PartialRequest {
     begin: SortBeginMsg,
     key_bytes: Vec<u8>,
     payload_bytes: Vec<u8>,
+    /// Set when the idempotency window already holds this request's
+    /// response: the submission frames are consumed as usual (the
+    /// client has already pipelined them), but `Commit` replays the
+    /// cached response instead of re-executing. Replay partials never
+    /// took a window slot, so they release none.
+    replay: Option<SortResponse>,
 }
 
 fn read_loop(
@@ -443,6 +517,8 @@ fn read_loop(
     shared: &Arc<Shared>,
     window: &Arc<ServerWindow>,
     pump_tx: mpsc::Sender<PumpItem>,
+    session: u64,
+    chunk: usize,
 ) {
     let mut partials: HashMap<u64, PartialRequest> = HashMap::new();
     loop {
@@ -533,6 +609,29 @@ fn read_loop(
                     );
                     continue;
                 }
+                // Idempotency window: a resubmission of a request this
+                // server already completed (the client reconnected
+                // before its response arrived) replays the cached
+                // response at Commit time. The submission frames are
+                // still consumed normally — the client has already
+                // pipelined its chunks, and rejecting them here would
+                // trip the unknown-id check below.
+                if session != 0 {
+                    let cached = lock_unpoisoned(&shared.dedup).get(session, frame.id);
+                    if let Some(resp) = cached {
+                        shared.metrics.incr("net_dedup_replays", 1);
+                        partials.insert(
+                            frame.id,
+                            PartialRequest {
+                                begin,
+                                key_bytes: Vec::new(),
+                                payload_bytes: Vec::new(),
+                                replay: Some(resp),
+                            },
+                        );
+                        continue;
+                    }
+                }
                 shared.metrics.incr("net_requests", 1);
                 window.begin();
                 partials.insert(
@@ -541,6 +640,7 @@ fn read_loop(
                         begin,
                         key_bytes: Vec::new(),
                         payload_bytes: Vec::new(),
+                        replay: None,
                     },
                 );
             }
@@ -575,8 +675,11 @@ fn read_loop(
                         shared,
                         &error_frame(0, ErrorCode::Malformed, "chunk bytes exceed declared total"),
                     );
-                    window.release();
-                    partials.remove(&frame.id);
+                    if let Some(p) = partials.remove(&frame.id) {
+                        if p.replay.is_none() {
+                            window.release();
+                        }
+                    }
                     break;
                 }
                 buf.extend_from_slice(&frame.payload);
@@ -591,6 +694,14 @@ fn read_loop(
                     );
                     break;
                 };
+                if let Some(resp) = partial.replay {
+                    // Replay from the idempotency window: the cached
+                    // response, byte-identical to the original. No
+                    // window slot was taken, but the client spent a
+                    // credit on the resubmission — return it.
+                    send_response_with_credit(writer, shared, frame.id, &resp, chunk);
+                    continue;
+                }
                 match assemble_request(&partial) {
                     Ok(request) => match shared.client.submit(request) {
                         Ok(rx) => {
@@ -665,9 +776,12 @@ fn read_loop(
         }
     }
     // Abandoned partials release their credit-window slots; they never
-    // reached the service, so there is nothing to leak there.
-    for _ in partials.drain() {
-        window.release();
+    // reached the service, so there is nothing to leak there. Replay
+    // partials never took a slot.
+    for (_, p) in partials.drain() {
+        if p.replay.is_none() {
+            window.release();
+        }
     }
 }
 
@@ -704,5 +818,8 @@ fn assemble_request(partial: &PartialRequest) -> std::result::Result<SortRequest
         descending: begin.descending,
         self_check: begin.self_check,
         tag: begin.tag.clone(),
+        // Deadlines are client-local: a remote caller's clock should
+        // not start a server-side timer it cannot observe.
+        deadline_ms: None,
     })
 }

@@ -460,12 +460,22 @@ pub struct HelloMsg {
     /// The largest frame payload the *client* is willing to receive;
     /// the server clamps its response chunks to this.
     pub max_frame_len: u32,
+    /// Client session id for idempotent resubmission. The server keys
+    /// its bounded window of completed responses on
+    /// `(session, request id)`, so a reconnecting client that replays
+    /// an id it already submitted gets the cached response frames back
+    /// instead of a re-execution. `0` disables the window (request ids
+    /// are then only meaningful within one connection).
+    pub session: u64,
 }
 
 impl HelloMsg {
     /// Serialize.
     pub fn encode(&self) -> Vec<u8> {
-        self.max_frame_len.to_le_bytes().to_vec()
+        let mut out = Vec::with_capacity(12);
+        out.extend_from_slice(&self.max_frame_len.to_le_bytes());
+        out.extend_from_slice(&self.session.to_le_bytes());
+        out
     }
 
     /// Deserialize.
@@ -473,6 +483,7 @@ impl HelloMsg {
         let mut r = ByteReader::new(buf);
         let msg = HelloMsg {
             max_frame_len: r.u32()?,
+            session: r.u64()?,
         };
         r.done()?;
         Ok(msg)
@@ -694,17 +705,20 @@ pub enum ErrorCode {
     Shutdown,
     /// Any other server-side failure.
     Internal,
+    /// The request's per-request deadline expired before it completed.
+    Timeout,
 }
 
 impl ErrorCode {
     /// Every code (for exhaustive property tests).
-    pub const ALL: [ErrorCode; 6] = [
+    pub const ALL: [ErrorCode; 7] = [
         ErrorCode::Busy,
         ErrorCode::TooLarge,
         ErrorCode::Invalid,
         ErrorCode::Malformed,
         ErrorCode::Shutdown,
         ErrorCode::Internal,
+        ErrorCode::Timeout,
     ];
 
     /// Stable wire name.
@@ -716,6 +730,7 @@ impl ErrorCode {
             ErrorCode::Malformed => "malformed",
             ErrorCode::Shutdown => "shutdown",
             ErrorCode::Internal => "internal",
+            ErrorCode::Timeout => "timeout",
         }
     }
 
@@ -727,6 +742,7 @@ impl ErrorCode {
             ErrorCode::Malformed => 3,
             ErrorCode::Shutdown => 4,
             ErrorCode::Internal => 5,
+            ErrorCode::Timeout => 6,
         }
     }
 
@@ -814,6 +830,7 @@ pub fn classify_error(e: &Error) -> ErrorCode {
         Error::Coordinator(m) if m.contains("stopped") || m.contains("shutdown") => {
             ErrorCode::Shutdown
         }
+        Error::Timeout(_) => ErrorCode::Timeout,
         _ => ErrorCode::Internal,
     }
 }
@@ -827,6 +844,7 @@ pub fn error_from_wire(code: ErrorCode, message: String) -> Error {
         ErrorCode::TooLarge => Error::TooLarge(message),
         ErrorCode::Invalid => Error::InvalidInput(message),
         ErrorCode::Shutdown => Error::Coordinator(message),
+        ErrorCode::Timeout => Error::Timeout(message),
         ErrorCode::Malformed | ErrorCode::Internal => Error::Remote {
             code: code.as_str().to_string(),
             message,
@@ -1111,6 +1129,7 @@ mod tests {
 
         let hello = HelloMsg {
             max_frame_len: 4096,
+            session: 0xDEAD_BEEF_F00D,
         };
         assert_eq!(HelloMsg::decode(&hello.encode()).unwrap(), hello);
         let ack = HelloAckMsg {
@@ -1163,6 +1182,14 @@ mod tests {
             classify_error(&Error::Runtime("boom".into())),
             ErrorCode::Internal
         );
+        assert_eq!(
+            classify_error(&Error::Timeout("50 ms deadline".into())),
+            ErrorCode::Timeout
+        );
+        assert!(matches!(
+            error_from_wire(ErrorCode::Timeout, "50 ms deadline".into()),
+            Error::Timeout(_)
+        ));
         for code in ErrorCode::ALL {
             // Wire tags round-trip.
             assert_eq!(ErrorCode::from_u8(code.to_u8()).unwrap(), code);

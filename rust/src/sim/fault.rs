@@ -1,0 +1,566 @@
+//! Deterministic fault injection.
+//!
+//! A [`FaultPlan`] is a small, versioned JSON document (loaded via
+//! `--fault-plan` / `config.fault_plan`) describing *which* faults to
+//! inject *where* and *when*. The plan compiles into a [`FaultInjector`]
+//! that the service threads through [`crate::ExecContext`] and the net
+//! tier; instrumented points ask the injector "should I fail here?" and
+//! get a deterministic answer:
+//!
+//! * **Attempt-counted, not wall-clock.** Rules trigger on the N-th
+//!   eligible hit of an instrumented point (`after`/`count`), so a
+//!   schedule replays exactly — no timing races decide whether a fault
+//!   lands.
+//! * **Seeded.** Rules with `probability < 1` draw from a
+//!   [`Rng`](crate::util::Rng) seeded by the plan, so even probabilistic
+//!   schedules replay bit-for-bit when the sequence of injector calls is
+//!   deterministic (single worker). Multi-worker sweeps should stick to
+//!   `probability: 1.0` (the default), which never consumes randomness.
+//! * **Zero overhead when absent.** The injector lives behind an
+//!   `Option<Arc<…>>`; with no plan loaded every instrumented point is a
+//!   single `None` check.
+//!
+//! Plan format (`version` is required and must be `1`):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "seed": 42,
+//!   "rules": [
+//!     { "point": "device_lost", "target": 3, "after": 0, "count": 1 },
+//!     { "point": "slow_device", "delay_ms": 5, "probability": 0.5 }
+//!   ]
+//! }
+//! ```
+//!
+//! Points: `device_lost`, `device_oom`, `slow_device` (paces the worker
+//! by `delay_ms` per job), `worker_panic`, `socket_cut`, `frame_corrupt`.
+//! `target` restricts a rule to one device/worker/connection index;
+//! omitted means "any". `after` skips the first N eligible hits, `count`
+//! bounds how many times the rule fires (default 1).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::{Json, Rng};
+
+/// An instrumented failure point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultPoint {
+    /// The device drops off the bus mid-step → [`Error::DeviceLost`],
+    /// retried by sharded failover.
+    DeviceLost,
+    /// A mid-step device allocation fails → [`Error::DeviceOom`], fatal
+    /// for the request (capacity is a property of the plan, not luck).
+    DeviceOom,
+    /// The worker paces itself by `delay_ms` per job — models a thermal-
+    /// throttled or contended device without failing anything.
+    SlowDevice,
+    /// The kernel job panics inside the engine — must be contained at
+    /// the worker boundary ([`Error::Internal`] for that request only).
+    WorkerPanic,
+    /// The client-side socket is severed mid-stream — exercises
+    /// reconnect + idempotent resubmit.
+    SocketCut,
+    /// A frame leaving the client is corrupted (payload bit-flip) — the
+    /// server must reject it by CRC and the stream recovers.
+    FrameCorrupt,
+}
+
+impl FaultPoint {
+    /// All points, in the order they appear in docs and counters.
+    pub const ALL: [FaultPoint; 6] = [
+        FaultPoint::DeviceLost,
+        FaultPoint::DeviceOom,
+        FaultPoint::SlowDevice,
+        FaultPoint::WorkerPanic,
+        FaultPoint::SocketCut,
+        FaultPoint::FrameCorrupt,
+    ];
+
+    /// Stable snake_case name used in plan JSON and metrics counters.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultPoint::DeviceLost => "device_lost",
+            FaultPoint::DeviceOom => "device_oom",
+            FaultPoint::SlowDevice => "slow_device",
+            FaultPoint::WorkerPanic => "worker_panic",
+            FaultPoint::SocketCut => "socket_cut",
+            FaultPoint::FrameCorrupt => "frame_corrupt",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultPoint> {
+        FaultPoint::ALL
+            .iter()
+            .copied()
+            .find(|p| p.as_str() == s)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown fault point {s:?} (expected one of: {})",
+                    FaultPoint::ALL.map(|p| p.as_str()).join(", ")
+                ))
+            })
+    }
+}
+
+/// The device-level faults an instrumented step can receive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceFault {
+    /// Treat the device as gone: [`Error::DeviceLost`].
+    Lost,
+    /// Treat the next allocation as failed: [`Error::DeviceOom`].
+    Oom,
+}
+
+/// One injection rule: fire `count` times at `point` (optionally only on
+/// `target`), skipping the first `after` eligible hits, each hit gated
+/// by `probability`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    /// Which instrumented point this rule arms.
+    pub point: FaultPoint,
+    /// Restrict to one device/worker/connection index; `None` = any.
+    pub target: Option<usize>,
+    /// Skip this many eligible hits before becoming armed.
+    pub after: u64,
+    /// Fire at most this many times (default 1).
+    pub count: u64,
+    /// Chance each armed hit actually fires (default 1.0 — no RNG draw).
+    pub probability: f64,
+    /// Pacing for `slow_device`; ignored by other points.
+    pub delay_ms: u64,
+}
+
+/// A parsed, validated fault plan. Compile it into a live injector with
+/// [`FaultPlan::injector`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Plan format version — always 1 today.
+    pub version: u64,
+    /// Seed for probabilistic rules.
+    pub seed: u64,
+    /// The injection rules, in plan order.
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse and validate a plan from JSON text.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let j = Json::parse(text).map_err(|e| Error::Config(format!("fault plan: {e}")))?;
+        let version = j
+            .req("version")
+            .ok()
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::Config("fault plan: missing numeric \"version\"".into()))?;
+        if version != 1 {
+            return Err(Error::Config(format!(
+                "fault plan: unsupported version {version} (this build understands 1)"
+            )));
+        }
+        let seed = j.get("seed").and_then(Json::as_u64).unwrap_or(0);
+        let rules_json = j
+            .get("rules")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("fault plan: missing \"rules\" array".into()))?;
+        let mut rules = Vec::with_capacity(rules_json.len());
+        for (i, r) in rules_json.iter().enumerate() {
+            let at = |m: String| Error::Config(format!("fault plan rule {i}: {m}"));
+            let point_name = r
+                .get("point")
+                .and_then(Json::as_str)
+                .ok_or_else(|| at("missing string \"point\"".into()))?;
+            let point = FaultPoint::parse(point_name)?;
+            let target = match r.get("target") {
+                None => None,
+                Some(t) => Some(
+                    t.as_usize()
+                        .ok_or_else(|| at("\"target\" must be a non-negative integer".into()))?,
+                ),
+            };
+            let after = r.get("after").and_then(Json::as_u64).unwrap_or(0);
+            let count = r.get("count").and_then(Json::as_u64).unwrap_or(1);
+            if count == 0 {
+                return Err(at("\"count\" must be >= 1 (omit the rule instead)".into()));
+            }
+            let probability = r.get("probability").and_then(Json::as_f64).unwrap_or(1.0);
+            if !(0.0..=1.0).contains(&probability) {
+                return Err(at(format!(
+                    "\"probability\" must be in [0, 1], got {probability}"
+                )));
+            }
+            let delay_ms = r.get("delay_ms").and_then(Json::as_u64).unwrap_or(0);
+            if point == FaultPoint::SlowDevice && delay_ms == 0 {
+                return Err(at("slow_device requires \"delay_ms\" >= 1".into()));
+            }
+            rules.push(FaultRule {
+                point,
+                target,
+                after,
+                count,
+                probability,
+                delay_ms,
+            });
+        }
+        Ok(FaultPlan {
+            version,
+            seed,
+            rules,
+        })
+    }
+
+    /// Load and validate a plan from a JSON file.
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("fault plan {path:?}: {e}")))?;
+        FaultPlan::parse(&text)
+    }
+
+    /// Resolve a `--fault-plan` / `config.fault_plan` value: the empty
+    /// string means "no plan" (and costs nothing at runtime); anything
+    /// else must be a readable, valid plan file.
+    pub fn resolve(spec: &str) -> Result<Option<FaultPlan>> {
+        if spec.is_empty() {
+            return Ok(None);
+        }
+        FaultPlan::load(spec).map(Some)
+    }
+
+    /// Serialize back to plan JSON (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: FaultPlan::parse
+    pub fn to_json(&self) -> Json {
+        let rules = self
+            .rules
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![("point", Json::str(r.point.as_str()))];
+                if let Some(t) = r.target {
+                    pairs.push(("target", Json::num(t as f64)));
+                }
+                pairs.push(("after", Json::num(r.after as f64)));
+                pairs.push(("count", Json::num(r.count as f64)));
+                pairs.push(("probability", Json::num(r.probability)));
+                pairs.push(("delay_ms", Json::num(r.delay_ms as f64)));
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("rules", Json::Arr(rules)),
+        ])
+    }
+
+    /// Compile the plan into a live, shareable injector.
+    pub fn injector(&self) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector::new(self.clone()))
+    }
+}
+
+struct RuleState {
+    rule: FaultRule,
+    /// Eligible hits seen so far (matching point + target).
+    hits: u64,
+    /// Times this rule actually fired.
+    fired: u64,
+}
+
+struct State {
+    rng: Rng,
+    rules: Vec<RuleState>,
+    /// Count of injected faults per point name — exported into the
+    /// metrics snapshot as `fault_injected_<point>`.
+    injected: BTreeMap<&'static str, u64>,
+}
+
+/// Live injector compiled from a [`FaultPlan`]. Instrumented points call
+/// the `device_fault` / `worker_panic` / … probes; each probe consults
+/// the armed rules under a single short lock.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    state: Mutex<State>,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("rules", &self.plan.rules.len())
+            .field("seed", &self.plan.seed)
+            .finish_non_exhaustive()
+    }
+}
+
+impl FaultInjector {
+    /// Build a fresh injector (all rule counters at zero).
+    pub fn new(plan: FaultPlan) -> Self {
+        let state = State {
+            rng: Rng::new(plan.seed ^ 0x6661756c745f7267), // "fault_rg"
+            rules: plan
+                .rules
+                .iter()
+                .map(|r| RuleState {
+                    rule: r.clone(),
+                    hits: 0,
+                    fired: 0,
+                })
+                .collect(),
+            injected: BTreeMap::new(),
+        };
+        FaultInjector {
+            plan,
+            state: Mutex::new(state),
+        }
+    }
+
+    /// The plan this injector was compiled from.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Core probe: does any rule at `point` fire for `target`? Returns
+    /// the firing rule's `delay_ms` when it does. Exactly one rule fires
+    /// per probe (the first armed match, in plan order).
+    fn probe(&self, point: FaultPoint, target: usize) -> Option<u64> {
+        // The injector is shared read-mostly state guarded by one short
+        // lock; a poisoned lock here can only come from a panic *inside
+        // this module*, which has no unwind paths while holding it.
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let State {
+            rng,
+            rules,
+            injected,
+        } = &mut *st;
+        for rs in rules.iter_mut() {
+            if rs.rule.point != point {
+                continue;
+            }
+            if rs.rule.target.is_some_and(|t| t != target) {
+                continue;
+            }
+            rs.hits += 1;
+            if rs.hits <= rs.rule.after || rs.fired >= rs.rule.count {
+                continue;
+            }
+            // probability 1.0 never consumes randomness, so fully
+            // deterministic plans stay order-independent across workers.
+            if rs.rule.probability < 1.0 && rng.next_f64() >= rs.rule.probability {
+                continue;
+            }
+            rs.fired += 1;
+            *injected.entry(point.as_str()).or_insert(0) += 1;
+            return Some(rs.rule.delay_ms);
+        }
+        None
+    }
+
+    /// Should the step running on `device` see a device-level fault?
+    /// Lost takes precedence over OOM when both are armed.
+    pub fn device_fault(&self, device: usize) -> Option<DeviceFault> {
+        if self.probe(FaultPoint::DeviceLost, device).is_some() {
+            return Some(DeviceFault::Lost);
+        }
+        if self.probe(FaultPoint::DeviceOom, device).is_some() {
+            return Some(DeviceFault::Oom);
+        }
+        None
+    }
+
+    /// Pacing delay (ms) for this worker's current job, if a
+    /// `slow_device` rule fires.
+    pub fn slow_device_ms(&self, worker: usize) -> Option<u64> {
+        self.probe(FaultPoint::SlowDevice, worker)
+    }
+
+    /// Should the kernel job on `worker` panic?
+    pub fn worker_panic(&self, worker: usize) -> bool {
+        self.probe(FaultPoint::WorkerPanic, worker).is_some()
+    }
+
+    /// Should connection `conn` sever its socket before the next write?
+    pub fn socket_cut(&self, conn: usize) -> bool {
+        self.probe(FaultPoint::SocketCut, conn).is_some()
+    }
+
+    /// Should connection `conn` corrupt the frame it is about to send?
+    pub fn frame_corrupt(&self, conn: usize) -> bool {
+        self.probe(FaultPoint::FrameCorrupt, conn).is_some()
+    }
+
+    /// Injected-fault totals per point name, for the metrics snapshot.
+    pub fn injected(&self) -> BTreeMap<&'static str, u64> {
+        let st = match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        st.injected.clone()
+    }
+}
+
+impl fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("seed", &self.plan.seed)
+            .field("rules", &self.plan.rules.len())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(text: &str) -> FaultPlan {
+        FaultPlan::parse(text).expect("valid plan")
+    }
+
+    #[test]
+    fn parses_full_plan_and_roundtrips() {
+        let p = plan(
+            r#"{"version":1,"seed":42,"rules":[
+                {"point":"device_lost","target":3},
+                {"point":"slow_device","delay_ms":5,"probability":0.5,
+                 "after":2,"count":7}
+            ]}"#,
+        );
+        assert_eq!(p.version, 1);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].point, FaultPoint::DeviceLost);
+        assert_eq!(p.rules[0].target, Some(3));
+        assert_eq!(p.rules[0].count, 1);
+        assert_eq!(p.rules[0].probability, 1.0);
+        assert_eq!(p.rules[1].after, 2);
+        assert_eq!(p.rules[1].count, 7);
+        assert_eq!(p.rules[1].delay_ms, 5);
+        let round = FaultPlan::parse(&p.to_json().to_string_pretty()).unwrap();
+        assert_eq!(round, p);
+    }
+
+    #[test]
+    fn rejects_bad_plans() {
+        for (text, needle) in [
+            (r#"{"seed":1,"rules":[]}"#, "version"),
+            (r#"{"version":2,"rules":[]}"#, "unsupported version"),
+            (r#"{"version":1}"#, "rules"),
+            (
+                r#"{"version":1,"rules":[{"point":"meteor_strike"}]}"#,
+                "unknown fault point",
+            ),
+            (
+                r#"{"version":1,"rules":[{"point":"device_lost","count":0}]}"#,
+                "count",
+            ),
+            (
+                r#"{"version":1,"rules":[{"point":"device_lost","probability":1.5}]}"#,
+                "probability",
+            ),
+            (
+                r#"{"version":1,"rules":[{"point":"slow_device"}]}"#,
+                "delay_ms",
+            ),
+        ] {
+            let err = FaultPlan::parse(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text} -> {err}");
+        }
+    }
+
+    #[test]
+    fn resolve_empty_is_none() {
+        assert!(FaultPlan::resolve("").unwrap().is_none());
+        assert!(FaultPlan::resolve("/nonexistent/plan.json").is_err());
+    }
+
+    #[test]
+    fn after_count_and_target_gate_firing() {
+        let inj = plan(
+            r#"{"version":1,"rules":[
+                {"point":"device_lost","target":1,"after":1,"count":2}
+            ]}"#,
+        )
+        .injector();
+        // Wrong target: never eligible.
+        assert_eq!(inj.device_fault(0), None);
+        // Hit 1 on target 1: skipped by `after`.
+        assert_eq!(inj.device_fault(1), None);
+        // Hits 2 and 3: fire (count 2).
+        assert_eq!(inj.device_fault(1), Some(DeviceFault::Lost));
+        assert_eq!(inj.device_fault(1), Some(DeviceFault::Lost));
+        // Exhausted.
+        assert_eq!(inj.device_fault(1), None);
+        assert_eq!(inj.injected().get("device_lost"), Some(&2));
+    }
+
+    #[test]
+    fn oom_and_lost_precedence() {
+        let inj = plan(
+            r#"{"version":1,"rules":[
+                {"point":"device_oom"},
+                {"point":"device_lost"}
+            ]}"#,
+        )
+        .injector();
+        // Lost is probed first even though OOM is listed first.
+        assert_eq!(inj.device_fault(5), Some(DeviceFault::Lost));
+        assert_eq!(inj.device_fault(5), Some(DeviceFault::Oom));
+        assert_eq!(inj.device_fault(5), None);
+    }
+
+    #[test]
+    fn probabilistic_rules_replay_with_same_seed() {
+        let text = r#"{"version":1,"seed":99,"rules":[
+            {"point":"worker_panic","probability":0.5,"count":1000000}
+        ]}"#;
+        let a = plan(text).injector();
+        let b = plan(text).injector();
+        let fire_a: Vec<bool> = (0..64).map(|_| a.worker_panic(0)).collect();
+        let fire_b: Vec<bool> = (0..64).map(|_| b.worker_panic(0)).collect();
+        assert_eq!(fire_a, fire_b);
+        assert!(fire_a.iter().any(|&f| f), "0.5 never fired in 64 draws");
+        assert!(!fire_a.iter().all(|&f| f), "0.5 always fired in 64 draws");
+    }
+
+    #[test]
+    fn point_probes_are_independent() {
+        let inj = plan(
+            r#"{"version":1,"rules":[
+                {"point":"socket_cut","target":0},
+                {"point":"frame_corrupt","target":1},
+                {"point":"slow_device","delay_ms":7}
+            ]}"#,
+        )
+        .injector();
+        assert!(!inj.socket_cut(1));
+        assert!(inj.socket_cut(0));
+        assert!(!inj.frame_corrupt(0));
+        assert!(inj.frame_corrupt(1));
+        assert_eq!(inj.slow_device_ms(4), Some(7));
+        assert_eq!(inj.slow_device_ms(4), None);
+        let totals = inj.injected();
+        assert_eq!(totals.get("socket_cut"), Some(&1));
+        assert_eq!(totals.get("frame_corrupt"), Some(&1));
+        assert_eq!(totals.get("slow_device"), Some(&1));
+        assert_eq!(totals.get("device_lost"), None);
+    }
+
+    #[test]
+    fn loads_from_file() {
+        let dir = std::env::temp_dir().join("gbs_fault_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        std::fs::write(
+            &path,
+            r#"{"version":1,"seed":7,"rules":[{"point":"device_lost"}]}"#,
+        )
+        .unwrap();
+        let p = FaultPlan::resolve(path.to_str().unwrap()).unwrap().unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -25,11 +25,13 @@
 //!   ledgers on small inputs.
 
 pub mod cost;
+pub mod fault;
 pub mod ledger;
 pub mod pool;
 pub mod spec;
 
 pub use cost::{CostModel, CostParams};
+pub use fault::{DeviceFault, FaultInjector, FaultPlan, FaultPoint};
 pub use ledger::{KernelClass, KernelStats, Ledger, StepLedger};
 pub use pool::{DeviceLease, DevicePool, DeviceRegistry};
 pub use spec::{GpuModel, GpuSpec};

@@ -22,9 +22,19 @@ use std::sync::{Arc, Mutex};
 
 /// A fixed set of simulated devices, each with its own traffic ledger
 /// and memory-capacity tracking.
+///
+/// Devices can be marked **unhealthy** (a [`crate::Error::DeviceLost`]
+/// mid-step): an unhealthy device keeps its slot — so pool indices stay
+/// stable and reports stay pool-aligned — but receives a zero share in
+/// [`DevicePool::shares`] and contributes nothing to the capacity sum.
+/// The last healthy device can never be marked, so a pool always has
+/// somewhere to run.
 #[derive(Debug, Clone)]
 pub struct DevicePool {
     sims: Vec<GpuSim>,
+    /// `true` at index `d` once device `d` was lost. Survives
+    /// [`DevicePool::reset`] — a dead device stays dead across jobs.
+    unhealthy: Vec<bool>,
 }
 
 impl DevicePool {
@@ -51,9 +61,9 @@ impl DevicePool {
                 "a device pool needs at least one device".into(),
             ));
         }
-        Ok(DevicePool {
-            sims: specs.into_iter().map(GpuSim::new).collect(),
-        })
+        let sims: Vec<GpuSim> = specs.into_iter().map(GpuSim::new).collect();
+        let unhealthy = vec![false; sims.len()];
+        Ok(DevicePool { sims, unhealthy })
     }
 
     /// Parse a comma-separated device list, e.g. `"gtx285,tesla,gtx260"`.
@@ -93,14 +103,56 @@ impl DevicePool {
         self.sims[device].spec()
     }
 
-    /// Pool capacity in keys: the sum of every member's single-device
-    /// ceiling. This is the number the sharded engine advertises to the
-    /// coordinator's admission control.
+    /// Pool capacity in keys: the sum of every *healthy* member's
+    /// single-device ceiling. This is the number the sharded engine
+    /// advertises to the coordinator's admission control; it shrinks
+    /// when a device is lost.
     pub fn max_sortable_keys(&self) -> usize {
         self.sims
             .iter()
-            .map(|s| s.spec().max_sortable_keys())
+            .zip(&self.unhealthy)
+            .filter(|(_, &dead)| !dead)
+            .map(|(s, _)| s.spec().max_sortable_keys())
             .sum()
+    }
+
+    /// Mark device `d` unhealthy after a [`crate::Error::DeviceLost`]:
+    /// it keeps its slot but gets zero-weighted in [`DevicePool::shares`]
+    /// and excluded from the capacity sum. Refuses to mark the last
+    /// healthy device — a pool must always have somewhere to run.
+    pub fn mark_unhealthy(&mut self, device: usize) -> Result<()> {
+        if self.healthy_count() <= 1 && !self.unhealthy[device] {
+            return Err(Error::Coordinator(format!(
+                "cannot mark device {device} ({}) unhealthy: it is the pool's \
+                 last healthy device",
+                self.sims[device].spec().name
+            )));
+        }
+        self.unhealthy[device] = true;
+        Ok(())
+    }
+
+    /// True while device `d` has not been lost.
+    pub fn is_healthy(&self, device: usize) -> bool {
+        !self.unhealthy[device]
+    }
+
+    /// Number of devices still healthy.
+    pub fn healthy_count(&self) -> usize {
+        self.unhealthy.iter().filter(|&&dead| !dead).count()
+    }
+
+    /// Pool indices of the healthy devices, ascending.
+    pub fn healthy_indices(&self) -> Vec<usize> {
+        (0..self.sims.len())
+            .filter(|&d| !self.unhealthy[d])
+            .collect()
+    }
+
+    /// Clear all unhealthy marks (benchmarks re-baselining between
+    /// scenarios; a real recovery would re-probe the device first).
+    pub fn restore_health(&mut self) {
+        self.unhealthy.iter_mut().for_each(|d| *d = false);
     }
 
     /// Capacity-weighted partition of `n` keys: `shares[d]` is
@@ -112,15 +164,27 @@ impl DevicePool {
         let weights: Vec<u128> = self
             .sims
             .iter()
-            .map(|s| s.spec().max_sortable_keys() as u128)
+            .zip(&self.unhealthy)
+            .map(|(s, &dead)| {
+                if dead {
+                    0
+                } else {
+                    s.spec().max_sortable_keys() as u128
+                }
+            })
             .collect();
         let total: u128 = weights.iter().sum();
+        // mark_unhealthy never kills the last device, so the healthy
+        // weight sum stays positive.
         debug_assert!(total > 0, "devices always have positive capacity");
         let mut shares: Vec<usize> = weights
             .iter()
             .map(|w| (n as u128 * w / total) as usize)
             .collect();
         let mut rest = n - shares.iter().sum::<usize>();
+        // rest < (number of devices with nonzero weight), and the
+        // descending sort puts zero-weight (unhealthy) devices last, so
+        // the remainder never lands on a dead device.
         let mut order: Vec<usize> = (0..weights.len()).collect();
         order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
         let mut i = 0;
@@ -152,30 +216,57 @@ impl DevicePool {
 /// is cheap to clone; clones share one checkout ledger.
 #[derive(Debug, Clone)]
 pub struct DeviceRegistry {
+    slots: Arc<Mutex<RegistrySlots>>,
+}
+
+/// Registry state under one lock: the checkout ledger plus per-slot
+/// health. A slot marked unhealthy (via [`DeviceLease::mark_unhealthy`])
+/// still returns on lease drop but is skipped by future checkouts, so a
+/// restarted worker never re-leases a dead device.
+#[derive(Debug)]
+struct RegistrySlots {
     /// `Some(model)` = free, `None` = checked out.
-    slots: Arc<Mutex<Vec<Option<GpuModel>>>>,
+    free: Vec<Option<GpuModel>>,
+    /// `true` once the device at this slot was lost.
+    unhealthy: Vec<bool>,
 }
 
 impl DeviceRegistry {
     /// New registry over a device list.
     pub fn new(models: Vec<GpuModel>) -> Self {
+        let unhealthy = vec![false; models.len()];
         DeviceRegistry {
-            slots: Arc::new(Mutex::new(models.into_iter().map(Some).collect())),
+            slots: Arc::new(Mutex::new(RegistrySlots {
+                free: models.into_iter().map(Some).collect(),
+                unhealthy,
+            })),
         }
     }
 
-    /// Total number of devices (free or leased).
+    /// Total number of devices (free or leased, healthy or not).
     pub fn total(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        self.slots.lock().unwrap().free.len()
     }
 
-    /// Number of devices currently free.
+    /// Number of devices currently free *and* healthy.
     pub fn available(&self) -> usize {
-        self.slots.lock().unwrap().iter().filter(|s| s.is_some()).count()
+        let slots = self.slots.lock().unwrap();
+        slots
+            .free
+            .iter()
+            .zip(&slots.unhealthy)
+            .filter(|(s, &dead)| s.is_some() && !dead)
+            .count()
     }
 
-    /// Lease `count` devices (the first free ones, configuration order).
-    /// Fails — rather than oversubscribing — when fewer are free.
+    /// Number of devices marked unhealthy so far.
+    pub fn unhealthy_count(&self) -> usize {
+        let slots = self.slots.lock().unwrap();
+        slots.unhealthy.iter().filter(|&&d| d).count()
+    }
+
+    /// Lease `count` devices (the first free healthy ones, configuration
+    /// order). Fails — rather than oversubscribing — when fewer are free.
     pub fn checkout(&self, count: usize) -> Result<DeviceLease> {
         if count == 0 {
             return Err(Error::InvalidParams(
@@ -184,21 +275,23 @@ impl DeviceRegistry {
         }
         let mut slots = self.slots.lock().unwrap();
         let free: Vec<usize> = slots
+            .free
             .iter()
             .enumerate()
-            .filter_map(|(i, s)| s.is_some().then_some(i))
+            .filter(|&(i, s)| s.is_some() && !slots.unhealthy[i])
+            .map(|(i, _)| i)
             .take(count)
             .collect();
         if free.len() < count {
             return Err(Error::InvalidParams(format!(
                 "device registry oversubscribed: {count} requested, {} free of {}",
                 free.len(),
-                slots.len()
+                slots.free.len()
             )));
         }
         let models: Vec<GpuModel> = free
             .iter()
-            .map(|&i| slots[i].take().expect("slot was free"))
+            .map(|&i| slots.free[i].take().expect("slot was free"))
             .collect();
         Ok(DeviceLease {
             registry: self.clone(),
@@ -233,6 +326,16 @@ impl DeviceLease {
     pub fn models(&self) -> &[GpuModel] {
         &self.models
     }
+
+    /// Report the lease-local device `local` (index into
+    /// [`DeviceLease::models`]) as lost. The registry slot is flagged so
+    /// future checkouts — including a restarted worker's — skip it; the
+    /// slot still returns on drop (it stays accounted, just unusable).
+    pub fn mark_unhealthy(&self, local: usize) {
+        if let Some(&slot) = self.indices.get(local) {
+            self.registry.slots.lock().unwrap().unhealthy[slot] = true;
+        }
+    }
 }
 
 impl Drop for DeviceLease {
@@ -240,7 +343,7 @@ impl Drop for DeviceLease {
         let mut slots = self.registry.slots.lock().unwrap();
         debug_assert!(self.indices.len() == self.models.len());
         for (&i, &model) in self.indices.iter().zip(&self.models) {
-            slots[i] = Some(model);
+            slots.free[i] = Some(model);
         }
     }
 }
@@ -354,6 +457,70 @@ mod tests {
         assert_eq!(DeviceRegistry::share_for(0, 0, 4), 0);
         // More workers than devices: some worker's share is zero.
         assert_eq!(DeviceRegistry::share_for(4, 5, 4), 0);
+    }
+
+    #[test]
+    fn unhealthy_devices_get_zero_share_and_no_capacity() {
+        let mut pool = DevicePool::new(&DevicePool::DEFAULT_DEVICES).unwrap();
+        let healthy_cap = pool.max_sortable_keys();
+        assert_eq!(pool.healthy_count(), 4);
+        pool.mark_unhealthy(1).unwrap(); // Tesla, the biggest card
+        assert!(!pool.is_healthy(1));
+        assert_eq!(pool.healthy_count(), 3);
+        assert_eq!(pool.healthy_indices(), vec![0, 2, 3]);
+        assert_eq!(
+            pool.max_sortable_keys(),
+            healthy_cap - GpuModel::TeslaC1060.spec().max_sortable_keys()
+        );
+        for n in [0usize, 1, 1000, (1 << 20) + 17] {
+            let shares = pool.shares(n);
+            assert_eq!(shares.len(), 4);
+            assert_eq!(shares[1], 0, "dead device got keys: {shares:?}");
+            assert_eq!(shares.iter().sum::<usize>(), n);
+        }
+        // Health survives reset (a dead device stays dead across jobs)…
+        pool.reset();
+        assert_eq!(pool.healthy_count(), 3);
+        // …until an explicit restore.
+        pool.restore_health();
+        assert_eq!(pool.healthy_count(), 4);
+        assert_eq!(pool.max_sortable_keys(), healthy_cap);
+    }
+
+    #[test]
+    fn last_healthy_device_cannot_be_marked() {
+        let mut pool = DevicePool::new(&[GpuModel::Gtx260, GpuModel::Gtx260]).unwrap();
+        pool.mark_unhealthy(0).unwrap();
+        // Re-marking an already-dead device is a no-op, not an error.
+        pool.mark_unhealthy(0).unwrap();
+        let err = pool.mark_unhealthy(1).unwrap_err();
+        assert!(err.to_string().contains("last healthy"), "{err}");
+        assert!(pool.is_healthy(1));
+        assert_eq!(pool.shares(100), vec![0, 100]);
+    }
+
+    #[test]
+    fn registry_skips_unhealthy_slots() {
+        let reg = DeviceRegistry::new(DevicePool::DEFAULT_DEVICES.to_vec());
+        let lease = reg.checkout(2).unwrap();
+        assert_eq!(reg.available(), 2);
+        // Local device 1 of the lease = registry slot 1 (Tesla).
+        lease.mark_unhealthy(1);
+        assert_eq!(reg.unhealthy_count(), 1);
+        drop(lease);
+        // The dead slot returned but is not checkable-out.
+        assert_eq!(reg.total(), 4);
+        assert_eq!(reg.available(), 3);
+        let next = reg.checkout(3).unwrap();
+        assert_eq!(
+            next.models(),
+            &[GpuModel::Gtx285_2G, GpuModel::Gtx285_1G, GpuModel::Gtx260],
+            "checkout must skip the dead Tesla slot"
+        );
+        assert!(reg.checkout(1).is_err(), "only the dead slot remains");
+        // Out-of-range local index is ignored.
+        next.mark_unhealthy(99);
+        assert_eq!(reg.unhealthy_count(), 1);
     }
 
     #[test]

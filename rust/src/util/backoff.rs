@@ -1,0 +1,107 @@
+//! Deterministic, attempt-counted exponential backoff.
+//!
+//! Every retry loop in the crate computes its delay here and sleeps
+//! through [`sleep_backoff`] — the **only** place outside tests where a
+//! retry is allowed to call `std::thread::sleep` (enforced by xtask lint
+//! R6). Centralising the sleep keeps two invariants easy to audit:
+//!
+//! * **Decisions are attempt-counted, never wall-clock.** The delay for
+//!   attempt `k` is a pure function of `k` and the policy — no
+//!   `Instant::now()` feeds back into whether or how long to retry, so a
+//!   retry schedule is replayable and the R4 lint (no wall-clock in
+//!   kernels) stays honest one layer up.
+//! * **Delays are capped.** Exponential growth stops at `max`, so a
+//!   misbehaving dependency produces bounded, predictable pressure
+//!   instead of an unbounded sleep.
+
+use std::time::Duration;
+
+/// An attempt-counted exponential backoff policy: attempt `k` (0-based)
+/// waits `min(base << k, max)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backoff {
+    /// Delay before the first retry (attempt 0).
+    pub base: Duration,
+    /// Hard cap on any single delay.
+    pub max: Duration,
+}
+
+impl Backoff {
+    /// Policy used by the scheduler's bounded in-process retry loop:
+    /// 2 ms doubling to a 50 ms cap. Short, because the failure it
+    /// covers (device lost, contained panic) is resolved by re-planning,
+    /// not by waiting for an external system.
+    pub const SCHEDULER: Backoff = Backoff {
+        base: Duration::from_millis(2),
+        max: Duration::from_millis(50),
+    };
+
+    /// Policy used by the TCP client's reconnect loop: 10 ms doubling to
+    /// a 500 ms cap — long enough to ride out a server restart without
+    /// hammering the listener.
+    pub const RECONNECT: Backoff = Backoff {
+        base: Duration::from_millis(10),
+        max: Duration::from_millis(500),
+    };
+
+    /// The delay before retry `attempt` (0-based): `min(base << attempt,
+    /// max)`. Saturates instead of overflowing for absurd attempt counts.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let shifted = self
+            .base
+            .checked_mul(1u32.checked_shl(attempt).unwrap_or(u32::MAX))
+            .unwrap_or(self.max);
+        shifted.min(self.max)
+    }
+}
+
+/// Sleep for the policy's delay at `attempt`. This is the one sanctioned
+/// `thread::sleep` retry site (xtask lint R6); callers decide *whether*
+/// to retry from typed [`crate::error::FailureClass`] values and an
+/// attempt counter, then come here to pace the retry.
+pub fn sleep_backoff(policy: &Backoff, attempt: u32) {
+    let d = policy.delay(attempt);
+    if !d.is_zero() {
+        std::thread::sleep(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_double_then_cap() {
+        let b = Backoff {
+            base: Duration::from_millis(2),
+            max: Duration::from_millis(50),
+        };
+        assert_eq!(b.delay(0), Duration::from_millis(2));
+        assert_eq!(b.delay(1), Duration::from_millis(4));
+        assert_eq!(b.delay(2), Duration::from_millis(8));
+        assert_eq!(b.delay(4), Duration::from_millis(32));
+        assert_eq!(b.delay(5), Duration::from_millis(50)); // 64 -> cap
+        assert_eq!(b.delay(30), Duration::from_millis(50));
+        assert_eq!(b.delay(200), Duration::from_millis(50)); // shift sat
+    }
+
+    #[test]
+    fn delay_is_attempt_pure() {
+        // Same attempt, same delay — the schedule is replayable.
+        for k in 0..12 {
+            assert_eq!(Backoff::SCHEDULER.delay(k), Backoff::SCHEDULER.delay(k));
+        }
+        assert_eq!(Backoff::RECONNECT.delay(0), Duration::from_millis(10));
+        assert_eq!(Backoff::RECONNECT.delay(10), Duration::from_millis(500));
+    }
+
+    #[test]
+    fn zero_base_never_sleeps() {
+        let b = Backoff {
+            base: Duration::ZERO,
+            max: Duration::ZERO,
+        };
+        sleep_backoff(&b, 7); // must return immediately
+        assert_eq!(b.delay(7), Duration::ZERO);
+    }
+}

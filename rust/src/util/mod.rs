@@ -9,6 +9,8 @@
 //!   not a thread spawn.
 //! * [`arena`] — recyclable scratch buffers keyed by element type, so
 //!   the executed sort pipeline allocates nothing after warm-up.
+//! * [`backoff`] — attempt-counted exponential retry pacing; the only
+//!   sanctioned `thread::sleep` retry site (xtask lint R6).
 //! * [`bench`] — warmup/sampling benchmark harness (⇒ criterion).
 //! * [`propcheck`] — seeded property-test driver (⇒ proptest).
 //! * [`loom`] — deterministic interleaving model checker (⇒ loom).
@@ -16,6 +18,7 @@
 //!   `std::sync` normally, the [`loom`] mirror under `--cfg loom`.
 
 pub mod arena;
+pub mod backoff;
 pub mod bench;
 pub mod json;
 pub mod loom;

@@ -1,0 +1,297 @@
+//! Chaos integration: a seeded fault plan drives failures through the
+//! whole stack — client socket cuts, corrupted frames, device loss —
+//! and every one must recover *end to end* with byte-identical
+//! results.
+//!
+//! The recovery chain under test:
+//!
+//! * client-side `socket_cut` / `frame_corrupt` → reader death →
+//!   capped-backoff reconnect → idempotent resubmission under the
+//!   original wire id;
+//! * server-side dedup window → a resubmitted, already-completed
+//!   request replays the cached response instead of re-executing;
+//! * device `device_lost` mid-step → sharded failover re-plans over
+//!   the surviving devices, still byte-identical;
+//! * a client without reconnect gets the typed
+//!   [`Error::ConnectionLost`] naming every in-flight request id.
+//!
+//! Every test binds an ephemeral port so suites run in parallel, and
+//! every fault is attempt-counted (never wall-clock), so the schedule
+//! replays exactly.
+
+use gpu_bucket_sort::config::{EngineKind, NetConfig, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortRequest, SortService};
+use gpu_bucket_sort::Error;
+use gpu_bucket_sort::net::wire::{self, Frame, HelloAckMsg, HelloMsg, Opcode, SortBeginMsg};
+use gpu_bucket_sort::net::{ClientOptions, NetClient, NetServer};
+use gpu_bucket_sort::{KeyData, KeyType};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+
+/// Write a fault plan to a unique temp file; returns its path.
+fn write_plan(name: &str, json: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("gbs_chaos_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("{name}.json"));
+    std::fs::write(&p, json).unwrap();
+    p.display().to_string()
+}
+
+/// Deterministic pseudo-random u32 keys (xorshift-mixed index).
+fn keys(n: usize, seed: u64) -> Vec<u32> {
+    (0..n as u64)
+        .map(|i| {
+            let mut x = i.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed;
+            x ^= x >> 33;
+            x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            (x >> 32) as u32
+        })
+        .collect()
+}
+
+fn service_cfg(fault_plan: String) -> ServiceConfig {
+    ServiceConfig {
+        fault_plan,
+        verify: true,
+        ..Default::default()
+    }
+}
+
+/// A socket severed mid-submission must be invisible to the caller:
+/// the client reconnects with backoff, resubmits under the original
+/// wire id, and every response stays byte-identical.
+#[test]
+fn socket_cut_reconnects_and_stays_byte_identical() {
+    let plan = write_plan(
+        "socket_cut",
+        r#"{"version":1,"seed":7,"rules":[
+            {"point":"socket_cut","target":0,"after":1,"count":1}
+        ]}"#,
+    );
+    let service = SortService::start(service_cfg(plan)).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service.clone(), NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let client = NetClient::connect_with(
+        &addr,
+        1,
+        NetConfig::default(),
+        ClientOptions {
+            reconnect: true,
+            faults: service.fault_injector(),
+        },
+    )
+    .unwrap();
+    assert!(service.fault_injector().is_some(), "plan must arm the injector");
+
+    for r in 0..6 {
+        let data = keys(2_000, 100 + r);
+        let mut expected = data.clone();
+        expected.sort_unstable();
+        let resp = client.sort(SortRequest::new(data)).unwrap();
+        assert_eq!(resp.keys_u32(), &expected[..], "request {r} diverged");
+    }
+    assert!(client.reconnects() >= 1, "the cut must force a reconnect");
+    assert!(client.resubmits() >= 1, "the in-flight request must resubmit");
+    drop(client);
+
+    let snap = server.shutdown();
+    assert!(
+        snap.counters.get("fault_injected_socket_cut").copied().unwrap_or(0) >= 1,
+        "client-side injections must surface in the service totals: {:?}",
+        snap.counters
+    );
+}
+
+/// A corrupted frame is rejected by the server's CRC check (connection
+/// closed with a typed error) — same recovery chain, same bytes.
+#[test]
+fn frame_corruption_recovers_via_reconnect() {
+    let plan = write_plan(
+        "frame_corrupt",
+        r#"{"version":1,"seed":11,"rules":[
+            {"point":"frame_corrupt","target":0,"count":1}
+        ]}"#,
+    );
+    let service = SortService::start(service_cfg(plan)).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service.clone(), NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let client = NetClient::connect_with(
+        &addr,
+        1,
+        NetConfig::default(),
+        ClientOptions {
+            reconnect: true,
+            faults: service.fault_injector(),
+        },
+    )
+    .unwrap();
+
+    for r in 0..4 {
+        let data = keys(1_500, 300 + r);
+        let mut expected = data.clone();
+        expected.sort_unstable();
+        let resp = client.sort(SortRequest::new(data)).unwrap();
+        assert_eq!(resp.keys_u32(), &expected[..], "request {r} diverged");
+    }
+    assert!(client.reconnects() >= 1);
+    assert!(client.resubmits() >= 1);
+    drop(client);
+
+    let snap = server.shutdown();
+    assert!(snap.counters.get("fault_injected_frame_corrupt").copied().unwrap_or(0) >= 1);
+    // The server must have counted (and survived) the bad frame.
+    assert!(snap.counters.get("net_malformed").copied().unwrap_or(0) >= 1);
+}
+
+/// A device lost mid-step on the sharded engine fails over to the
+/// survivors — over TCP, the response is still byte-identical.
+#[test]
+fn device_loss_failover_stays_byte_identical_over_tcp() {
+    let plan = write_plan(
+        "device_lost_tcp",
+        r#"{"version":1,"seed":3,"rules":[
+            {"point":"device_lost","target":1,"count":1}
+        ]}"#,
+    );
+    let cfg = ServiceConfig {
+        engine: EngineKind::Sharded,
+        ..service_cfg(plan)
+    };
+    let service = SortService::start(cfg).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service.clone(), NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+
+    for r in 0..3 {
+        let data = keys(4_096, 40 + r);
+        let mut expected = data.clone();
+        expected.sort_unstable();
+        let resp = client.sort(SortRequest::new(data)).unwrap();
+        assert_eq!(resp.keys_u32(), &expected[..], "request {r} diverged");
+    }
+    drop(client);
+
+    let snap = server.shutdown();
+    assert!(
+        snap.counters.get("failover_events").copied().unwrap_or(0) >= 1,
+        "device loss must surface as a failover: {:?}",
+        snap.counters
+    );
+    assert_eq!(snap.counters.get("fault_injected_device_lost").copied(), Some(1));
+}
+
+/// Raw-protocol dedup check: resubmitting an already-completed request
+/// id within the same session replays the cached response — the server
+/// counts a `net_dedup_replays` and the bytes match the original
+/// exactly (no re-execution needed for idempotency, but the window
+/// spares one).
+#[test]
+fn dedup_window_replays_completed_requests_byte_identically() {
+    let service = SortService::start(ServiceConfig::default()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let hello = HelloMsg {
+        max_frame_len: 1 << 20,
+        session: 0xC0FFEE, // nonzero: arms the dedup window
+    };
+    wire::write_frame(&mut w, &Frame::message(Opcode::Hello, 0, hello.encode())).unwrap();
+    let ack_frame = wire::read_frame(&mut r, 1 << 20).unwrap().unwrap();
+    assert_eq!(ack_frame.opcode, Opcode::HelloAck);
+    HelloAckMsg::decode(&ack_frame.payload).unwrap();
+
+    let data = keys(1_000, 9);
+    let key_bytes = wire::key_data_to_bytes(&KeyData::U32(data.clone()));
+    let submit = |w: &mut TcpStream| {
+        let begin = SortBeginMsg {
+            key_type: KeyType::U32,
+            descending: false,
+            self_check: false,
+            has_payload: false,
+            total_keys: data.len() as u64,
+            tag: None,
+        };
+        wire::write_frame(w, &Frame::message(Opcode::SortBegin, 7, begin.encode())).unwrap();
+        for f in wire::chunk_frames(Opcode::KeyChunk, 7, &key_bytes, 4096) {
+            wire::write_frame(w, &f).unwrap();
+        }
+        wire::write_frame(w, &Frame::control(Opcode::Commit, 7)).unwrap();
+    };
+    // Read one full response (skipping Credit frames): returns the
+    // concatenated result-key bytes.
+    let read_response = |r: &mut BufReader<TcpStream>| -> Vec<u8> {
+        let mut out = Vec::new();
+        loop {
+            let f = wire::read_frame(r, 1 << 20).unwrap().unwrap();
+            match f.opcode {
+                Opcode::ResultKeyChunk => out.extend_from_slice(&f.payload),
+                Opcode::ResultEnd => return out,
+                Opcode::SortHeader | Opcode::Credit => {}
+                other => panic!("unexpected frame {other:?} in response"),
+            }
+        }
+    };
+
+    submit(&mut w);
+    let first = read_response(&mut r);
+    // Same id, same session, already completed: the dedup window must
+    // replay, not re-execute.
+    submit(&mut w);
+    let second = read_response(&mut r);
+    assert_eq!(first, second, "replayed response must be byte-identical");
+
+    let mut expected = data;
+    expected.sort_unstable();
+    let sorted = wire::key_data_from_bytes(KeyType::U32, &first).unwrap();
+    assert_eq!(sorted.as_u32().unwrap(), &expected[..]);
+
+    let net = server.net_metrics();
+    assert_eq!(net.counters.get("net_dedup_replays").copied(), Some(1));
+    let _ = server.shutdown();
+}
+
+/// Without reconnect, a dead connection surfaces as the typed
+/// [`Error::ConnectionLost`] naming the in-flight request ids — not a
+/// stringly "connection closed".
+#[test]
+fn connection_lost_carries_in_flight_request_ids() {
+    // A miniature "server" that handshakes, swallows one submission,
+    // and hangs up without responding.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accept = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let hello = wire::read_frame(&mut r, 1 << 20).unwrap().unwrap();
+        assert_eq!(hello.opcode, Opcode::Hello);
+        let ack = HelloAckMsg {
+            credits: 4,
+            max_frame_len: 1 << 20,
+            max_request_keys: 1 << 20,
+        };
+        wire::write_frame(&mut w, &Frame::message(Opcode::HelloAck, 0, ack.encode())).unwrap();
+        // Consume the full submission, then drop the connection.
+        loop {
+            let f = wire::read_frame(&mut r, 1 << 20).unwrap().unwrap();
+            if f.opcode == Opcode::Commit {
+                break;
+            }
+        }
+    });
+
+    let client = NetClient::connect(&addr, 1, NetConfig::default()).unwrap();
+    let rx = client.submit(SortRequest::new(keys(512, 1))).unwrap();
+    let err = rx.recv().unwrap().unwrap_err();
+    match err {
+        Error::ConnectionLost { ref request_ids } => {
+            assert_eq!(request_ids, &[1], "the lost id list must name the request");
+        }
+        other => panic!("expected ConnectionLost, got {other:?}"),
+    }
+    assert!(err.to_string().contains("connection lost"));
+    accept.join().unwrap();
+}

@@ -66,7 +66,7 @@ fn release(gate: &(Mutex<bool>, Condvar)) {
 /// to speak arbitrary (possibly hostile) frames.
 fn raw_handshake(addr: &str) -> TcpStream {
     let mut s = TcpStream::connect(addr).unwrap();
-    let hello = HelloMsg { max_frame_len: 1 << 20 };
+    let hello = HelloMsg { max_frame_len: 1 << 20, session: 0 };
     wire::write_frame(&mut s, &Frame::message(Opcode::Hello, 0, hello.encode())).unwrap();
     let ack = wire::read_frame(&mut s, 1 << 20).unwrap().unwrap();
     assert_eq!(ack.opcode, Opcode::HelloAck);

@@ -1,0 +1,166 @@
+//! Property: fault recovery never changes bytes.
+//!
+//! For random request mixes (u32/u64/f32 keys, with and without
+//! payloads, both directions) across 1/2/4 workers and the native and
+//! sharded engines, a service running under an armed fault plan —
+//! device loss mid-step, contained worker panics — must return
+//! responses **byte-identical** to an undisturbed service with the
+//! same configuration. Failover and retry are allowed to cost time,
+//! never bytes: the sorted sequence is the unique ordering of the
+//! input's bit-pattern multiset, so any recovery path that completes
+//! must land on it.
+
+use gpu_bucket_sort::config::{EngineKind, ServiceConfig};
+use gpu_bucket_sort::coordinator::{SortRequest, SortService};
+use gpu_bucket_sort::net::wire::key_data_to_bytes;
+use gpu_bucket_sort::sim::DevicePool;
+use gpu_bucket_sort::util::propcheck::forall;
+use gpu_bucket_sort::{KeyData, KeyType};
+
+/// Write a fault plan to a unique temp file; returns its path.
+fn write_plan(name: &str, json: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("gbs_pfail_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("{name}.json"));
+    std::fs::write(&p, json).unwrap();
+    p.display().to_string()
+}
+
+fn gen_keys(g: &mut gpu_bucket_sort::util::propcheck::Gen, kt: KeyType, n: usize) -> KeyData {
+    match kt {
+        KeyType::U32 => KeyData::U32((0..n).map(|_| g.u32()).collect()),
+        KeyType::U64 => KeyData::U64((0..n).map(|_| g.rng().next_u64()).collect()),
+        KeyType::F32 => KeyData::F32(
+            (0..n)
+                .map(|_| {
+                    // Mix ordinary values with negatives, zeros and NaNs
+                    // — recovery must preserve total-order semantics.
+                    let x = g.u32();
+                    match x % 17 {
+                        0 => f32::NAN,
+                        1 => -f32::NAN,
+                        2 => 0.0,
+                        3 => -0.0,
+                        4 => f32::INFINITY,
+                        5 => f32::NEG_INFINITY,
+                        _ => f32::from_bits(x) % 1e6,
+                    }
+                })
+                .collect(),
+        ),
+        other => unreachable!("matrix does not cover {other:?}"),
+    }
+}
+
+fn random_request(g: &mut gpu_bucket_sort::util::propcheck::Gen, kt: KeyType) -> SortRequest {
+    let n = g.usize_in(1..3_000);
+    let keys = gen_keys(g, kt, n);
+    let mut b = SortRequest::builder(keys).descending(g.bool(0.4));
+    if g.bool(0.5) {
+        b = b.payload((0..n as u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect());
+    }
+    b.build().unwrap()
+}
+
+/// Run the same request list through a faulted and a fault-free
+/// service; every pair of responses must match exactly.
+fn assert_byte_identity(faulted: ServiceConfig, clean: ServiceConfig, requests: Vec<SortRequest>) {
+    let chaos = SortService::start(faulted).unwrap();
+    let baseline = SortService::start(clean).unwrap();
+    for (i, req) in requests.into_iter().enumerate() {
+        let a = chaos.sort(req.clone()).unwrap();
+        let b = baseline.sort(req).unwrap();
+        // Bitwise, not `==`: NaN f32 keys are byte-identical but never
+        // IEEE-equal, and byte identity is the actual contract.
+        assert_eq!(
+            key_data_to_bytes(&a.keys),
+            key_data_to_bytes(&b.keys),
+            "request {i}: key bytes diverged between faulted and clean runs"
+        );
+        assert_eq!(
+            a.payload, b.payload,
+            "request {i}: payload pairing diverged between faulted and clean runs"
+        );
+    }
+    // The plan must actually have fired — otherwise this test proves
+    // nothing about recovery.
+    let snap = chaos.shutdown();
+    let injected: u64 = snap
+        .counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("fault_injected_"))
+        .map(|(_, v)| *v)
+        .sum();
+    assert!(injected >= 1, "no fault fired: {:?}", snap.counters);
+    let _ = baseline.shutdown();
+}
+
+/// Sharded engine, 1/2/4 workers: a device lost mid-step (and another
+/// later) fails over to the surviving devices with identical bytes.
+#[test]
+fn sharded_device_loss_byte_identity_across_workers() {
+    let key_types = [KeyType::U32, KeyType::U64, KeyType::F32];
+    forall(9, "sharded failover: faulted == clean", |g| {
+        let workers = *g.choose(&[1usize, 2, 4]);
+        let kt = *g.choose(&key_types);
+        // Targets 0/1 exist in every per-worker lease (8 devices across
+        // at most 4 workers ⇒ every lease holds ≥ 2), so one loss
+        // always leaves that lease a survivor to fail over to.
+        let target = g.usize_in(0..2);
+        let plan = write_plan(
+            &format!("dev_lost_w{workers}_{target}"),
+            &format!(
+                r#"{{"version":1,"seed":5,"rules":[
+                    {{"point":"device_lost","target":{target},"count":1}}
+                ]}}"#
+            ),
+        );
+        let mut devices = DevicePool::DEFAULT_DEVICES.to_vec();
+        devices.extend_from_slice(&DevicePool::DEFAULT_DEVICES);
+        let faulted = ServiceConfig {
+            engine: EngineKind::Sharded,
+            workers,
+            devices,
+            fault_plan: plan,
+            verify: true,
+            ..Default::default()
+        };
+        let clean = ServiceConfig {
+            fault_plan: String::new(),
+            ..faulted.clone()
+        };
+        let requests: Vec<SortRequest> = (0..6).map(|_| random_request(g, kt)).collect();
+        assert_byte_identity(faulted, clean, requests);
+    });
+}
+
+/// Native engine, 1/2/4 workers: contained worker panics retried by
+/// the scheduler land on identical bytes.
+#[test]
+fn native_worker_panic_retry_byte_identity_across_workers() {
+    let key_types = [KeyType::U32, KeyType::U64, KeyType::F32];
+    forall(9, "panic retry: faulted == clean", |g| {
+        let workers = *g.choose(&[1usize, 2, 4]);
+        let kt = *g.choose(&key_types);
+        let plan = write_plan(
+            &format!("panic_w{workers}"),
+            r#"{"version":1,"seed":13,"rules":[
+                {"point":"worker_panic","count":1},
+                {"point":"worker_panic","after":3,"count":1}
+            ]}"#,
+        );
+        let faulted = ServiceConfig {
+            engine: EngineKind::Native,
+            workers,
+            fault_plan: plan,
+            verify: true,
+            ..Default::default()
+        };
+        let clean = ServiceConfig {
+            fault_plan: String::new(),
+            ..faulted.clone()
+        };
+        let requests: Vec<SortRequest> = (0..8).map(|_| random_request(g, kt)).collect();
+        assert_byte_identity(faulted, clean, requests);
+    });
+}

@@ -166,6 +166,7 @@ fn typed_messages_roundtrip() {
 
         let hello = HelloMsg {
             max_frame_len: g.u32(),
+            session: g.rng().next_u64(),
         };
         assert_eq!(HelloMsg::decode(&hello.encode()).unwrap(), hello);
         let ack = HelloAckMsg {

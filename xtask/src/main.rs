@@ -1,12 +1,12 @@
 //! Repo task runner. One subcommand today:
 //!
 //! ```text
-//! cargo run -p xtask -- lint            # scan rust/src against R1–R5
+//! cargo run -p xtask -- lint            # scan rust/src against R1–R6
 //! cargo run -p xtask -- lint --self-test # prove every rule still fires
 //! ```
 //!
 //! The lint is the blocking CI gate for the repo's concurrency and
-//! panic-safety invariants (`ci/correctness.sh` runs it). Five rules,
+//! panic-safety invariants (`ci/correctness.sh` runs it). Six rules,
 //! scanned with a hand-rolled comment/string-stripping tokenizer (the
 //! build is dependency-free, so no `syn`):
 //!
@@ -30,9 +30,13 @@
 //!   in non-test `rust/src/net/` or `coordinator/service.rs`: a
 //!   malformed frame or dead peer must become a typed error, never a
 //!   panicked reader/pump thread with poisoned locks behind it.
+//! * **R6 — bounded backoff only.** No `thread::sleep` outside
+//!   `util/backoff.rs`: ad-hoc sleep-retry loops hide unbounded waits
+//!   and drift; retries route through `util::backoff::sleep_backoff`
+//!   so every wait is capped, attempt-indexed and greppable.
 //!
 //! Test regions (`#[cfg(test)]` / `#[cfg(all(test, …))]` items) are
-//! exempt from R2/R3/R5. Deliberate exceptions go in
+//! exempt from R2/R3/R5/R6. Deliberate exceptions go in
 //! `ci/lint_allow.txt` as `<RULE> <path>` lines.
 
 use std::fmt;
@@ -74,7 +78,7 @@ fn run_lint() -> ExitCode {
     }
     violations.retain(|v| !allow.iter().any(|(r, p)| r == v.rule && p == &v.path));
     if violations.is_empty() {
-        println!("xtask lint: {} files clean (R1–R5)", files.len());
+        println!("xtask lint: {} files clean (R1–R6)", files.len());
         ExitCode::SUCCESS
     } else {
         for v in &violations {
@@ -194,6 +198,7 @@ fn scan_file(rel: &str, text: &str) -> Vec<Violation> {
     let spawn_ok = SPAWN_ALLOWED.iter().any(|s| suffix_matches(s));
     let in_algos = rel.contains("src/algos/");
     let no_panic = rel.contains("src/net/") || rel.ends_with("src/coordinator/service.rs");
+    let sleep_ok = suffix_matches("src/util/backoff.rs");
 
     for (i, line) in code.iter().enumerate() {
         let lineno = i + 1;
@@ -261,6 +266,19 @@ fn scan_file(rel: &str, text: &str) -> Vec<Violation> {
                 line: lineno,
                 msg: "`.unwrap()`/`.expect(` on a service path — return a typed \
                       error; a panic here poisons connection locks"
+                    .into(),
+            });
+        }
+
+        // R6: raw sleeps outside the backoff helper.
+        if !test && !sleep_ok && line.contains("thread::sleep") {
+            out.push(Violation {
+                rule: "R6",
+                path: rel.to_string(),
+                line: lineno,
+                msg: "raw `thread::sleep` — route the wait through \
+                      util::backoff::sleep_backoff so it stays capped and \
+                      attempt-indexed"
                     .into(),
             });
         }
@@ -599,6 +617,18 @@ fn self_test() -> Result<usize, String> {
             src: "pub fn f(x: Option<u32>) -> &'static str {\n    // .unwrap() in a comment\n    let _ = x.unwrap_or_else(|| 0);\n    \".unwrap()\"\n}\n",
             expect_rule: None,
         },
+        Case {
+            name: "R6 fires on a raw sleep-retry",
+            path: "src/net/seeded.rs",
+            src: "pub fn f() {\n    std::thread::sleep(std::time::Duration::from_millis(5));\n}\n",
+            expect_rule: Some("R6"),
+        },
+        Case {
+            name: "R6 quiet in the backoff helper and in tests",
+            path: "src/util/backoff.rs",
+            src: "pub fn f() {\n    std::thread::sleep(std::time::Duration::from_millis(5));\n}\n#[cfg(test)]\nmod tests {\n    fn g() {\n        std::thread::sleep(std::time::Duration::from_millis(5));\n    }\n}\n",
+            expect_rule: None,
+        },
     ];
     let mut fired = std::collections::BTreeSet::new();
     for c in &cases {
@@ -620,8 +650,8 @@ fn self_test() -> Result<usize, String> {
             }
         }
     }
-    if fired.len() != 5 {
-        return Err(format!("only {:?} fired — expected all five rules", fired));
+    if fired.len() != 6 {
+        return Err(format!("only {:?} fired — expected all six rules", fired));
     }
     Ok(fired.len())
 }
@@ -632,7 +662,7 @@ mod tests {
 
     #[test]
     fn every_rule_fires_and_clean_twins_pass() {
-        assert_eq!(self_test().expect("self-test"), 5);
+        assert_eq!(self_test().expect("self-test"), 6);
     }
 
     #[test]
