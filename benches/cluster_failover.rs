@@ -1,0 +1,371 @@
+//! Cluster failover: throughput and recovery latency of the
+//! registry-backed multi-node tier, as real processes.
+//!
+//! Harness: one `gbs registry` process, three `gbs serve --registry`
+//! node processes, and M in-process client threads, each driving its
+//! own [`ClusterClient`] (registry-resolved routing, cross-node
+//! failover). Two scenarios:
+//!
+//! * **healthy** — all three nodes stay up for the whole load;
+//! * **one node killed** — once roughly a third of the load has
+//!   completed, the parent SIGKILLs the node the clients are routed
+//!   to. Every in-flight request must fail over to a survivor: the
+//!   gate is **zero** failed client requests, **zero** byte-identity
+//!   violations (each response is checked against a local
+//!   `sort_unstable` — the same bytes a single-node run produces,
+//!   because sorting is deterministic), and degraded throughput no
+//!   worse than half of healthy. The latency of each request that rode
+//!   a failover is reported next to the healthy median.
+//!
+//! Emits `BENCH_cluster.json` at the repo root — validated by CI's
+//! chaos job via `ci/validate_bench.py cluster`. `GBS_BENCH_FAST=1`
+//! selects the smoke profile.
+
+use gpu_bucket_sort::config::NetConfig;
+use gpu_bucket_sort::coordinator::SortRequest;
+use gpu_bucket_sort::net::{ClusterClient, ClusterOptions};
+use gpu_bucket_sort::util::Json;
+use gpu_bucket_sort::workload::Distribution;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const NODES: usize = 3;
+
+struct Profile {
+    mode: &'static str,
+    clients: usize,
+    requests_per_client: usize,
+    keys_per_request: usize,
+}
+
+impl Profile {
+    fn from_env() -> Profile {
+        if std::env::var("GBS_BENCH_FAST").as_deref() == Ok("1") {
+            Profile {
+                mode: "smoke",
+                clients: 2,
+                requests_per_client: 8,
+                keys_per_request: 40_000,
+            }
+        } else {
+            Profile {
+                mode: "full",
+                clients: 4,
+                requests_per_client: 16,
+                keys_per_request: 150_000,
+            }
+        }
+    }
+
+    fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+}
+
+/// A spawned `gbs` child whose stdout pipe stays open (dropping it
+/// would EPIPE the child's later prints).
+struct Proc {
+    child: Child,
+    _out: BufReader<ChildStdout>,
+}
+
+impl Proc {
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `gbs` and scrape its machine-readable address line.
+fn spawn_gbs(args: &[&str], scrape_prefix: &str) -> (Proc, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_gbs"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn gbs");
+    let mut out = BufReader::new(child.stdout.take().expect("child stdout piped"));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if out.read_line(&mut line).expect("read child stdout") == 0 {
+            panic!("gbs {args:?} exited before announcing {scrape_prefix}");
+        }
+        if let Some(rest) = line.strip_prefix(scrape_prefix) {
+            return (Proc { child, _out: out }, rest.trim().to_string());
+        }
+    }
+}
+
+/// Registry + `NODES` node processes; returns (registry, nodes keyed
+/// by advertised address, registry address).
+fn spawn_cluster() -> (Proc, Vec<(Proc, String)>, String) {
+    let (registry, reg_addr) = spawn_gbs(
+        &["registry", "--listen", "127.0.0.1:0", "--heartbeat-ms", "50"],
+        "GBS_REGISTRY_ADDR ",
+    );
+    let nodes: Vec<(Proc, String)> = (0..NODES)
+        .map(|_| {
+            spawn_gbs(
+                &[
+                    "serve", "--listen", "127.0.0.1:0", "--registry", &reg_addr,
+                    "--workers", "2",
+                ],
+                "GBS_NET_ADDR ",
+            )
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let listed = gpu_bucket_sort::net::registry::node_list(&reg_addr)
+            .map(|v| v.len())
+            .unwrap_or(0);
+        if listed == NODES {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "registry never listed all {NODES} nodes (currently {listed})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    (registry, nodes, reg_addr)
+}
+
+#[derive(Default)]
+struct ClientResult {
+    latencies_ms: Vec<f64>,
+    failover_latencies_ms: Vec<f64>,
+    violations: u64,
+    failed: u64,
+    failovers: u64,
+}
+
+/// One client thread: sequential byte-identity-checked sorts through
+/// its own cluster client. Requests that rode a failover report their
+/// latency separately.
+fn run_client(
+    reg_addr: &str,
+    seed0: u64,
+    requests: usize,
+    n: usize,
+    completed: &AtomicU64,
+) -> ClientResult {
+    let mut out = ClientResult::default();
+    let cluster = match ClusterClient::connect(reg_addr, NetConfig::default(), ClusterOptions::default())
+    {
+        Ok(c) => c,
+        Err(_) => {
+            out.failed = requests as u64;
+            // Still count toward progress so the kill choreography in
+            // the parent never waits on requests that will not happen.
+            completed.fetch_add(requests as u64, Ordering::Relaxed);
+            return out;
+        }
+    };
+    for r in 0..requests {
+        let keys = Distribution::Uniform.generate(n, seed0 * 10_000 + r as u64 + 1);
+        let mut expected = keys.clone();
+        expected.sort_unstable();
+        let before = cluster.failovers();
+        let t = Instant::now();
+        match cluster.sort(SortRequest::new(keys)) {
+            Ok(resp) => {
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                if cluster.failovers() > before {
+                    out.failover_latencies_ms.push(ms);
+                } else {
+                    out.latencies_ms.push(ms);
+                }
+                if resp.keys_u32() != expected.as_slice() {
+                    out.violations += 1;
+                }
+            }
+            Err(_) => out.failed += 1,
+        }
+        completed.fetch_add(1, Ordering::Relaxed);
+    }
+    out.failovers = cluster.failovers();
+    out
+}
+
+struct Scenario {
+    wall_ms: f64,
+    mkeys_s: f64,
+    merged: ClientResult,
+}
+
+/// Drive the full client load against a fresh cluster. When
+/// `kill_one_node` is set, the routed node is SIGKILLed after roughly
+/// a third of the total requests have completed.
+fn run_scenario(profile: &Profile, kill_one_node: bool) -> Scenario {
+    let (registry, mut nodes, reg_addr) = spawn_cluster();
+    let completed = AtomicU64::new(0);
+    let kill_after = (profile.total_requests() / 3).max(1) as u64;
+
+    let t0 = Instant::now();
+    let merged = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..profile.clients)
+            .map(|c| {
+                let reg_addr = reg_addr.clone();
+                let completed = &completed;
+                scope.spawn(move || {
+                    run_client(
+                        &reg_addr,
+                        c as u64 + 1,
+                        profile.requests_per_client,
+                        profile.keys_per_request,
+                        completed,
+                    )
+                })
+            })
+            .collect();
+        if kill_one_node {
+            // With equal advertised loads every client routes to the
+            // first node in address order — that is the one to kill.
+            let mut routed: Vec<String> = nodes.iter().map(|(_, a)| a.clone()).collect();
+            routed.sort();
+            let victim_addr = routed[0].clone();
+            while completed.load(Ordering::Relaxed) < kill_after {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let pos = nodes
+                .iter()
+                .position(|(_, a)| *a == victim_addr)
+                .expect("victim among spawned nodes");
+            let (victim, _) = nodes.swap_remove(pos);
+            victim.kill(); // SIGKILL mid-load — no drain, no deregister
+        }
+        let mut merged = ClientResult::default();
+        for h in handles {
+            let r = h.join().expect("client thread");
+            merged.latencies_ms.extend(r.latencies_ms);
+            merged.failover_latencies_ms.extend(r.failover_latencies_ms);
+            merged.violations += r.violations;
+            merged.failed += r.failed;
+            merged.failovers += r.failovers;
+        }
+        merged
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    for (node, _) in nodes {
+        node.kill();
+    }
+    registry.kill();
+
+    let keys_done =
+        (profile.total_requests() as u64 - merged.failed) * profile.keys_per_request as u64;
+    Scenario {
+        wall_ms,
+        mkeys_s: keys_done as f64 / wall_ms * 1e3 / 1e6,
+        merged,
+    }
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[sorted.len() / 2]
+}
+
+fn max_of(values: &[f64]) -> f64 {
+    values.iter().copied().fold(0.0, f64::max)
+}
+
+fn main() {
+    let profile = Profile::from_env();
+    println!(
+        "cluster_failover [{}]: registry + {NODES} nodes, {} clients × {} requests × {} u32 keys",
+        profile.mode, profile.clients, profile.requests_per_client, profile.keys_per_request
+    );
+
+    let healthy = run_scenario(&profile, false);
+    println!(
+        "  healthy      {:>8.1} ms  {:>7.2} Mkeys/s  (failed {}, violations {})",
+        healthy.wall_ms, healthy.mkeys_s, healthy.merged.failed, healthy.merged.violations
+    );
+
+    let degraded = run_scenario(&profile, true);
+    let ratio = if healthy.mkeys_s > 0.0 {
+        degraded.mkeys_s / healthy.mkeys_s
+    } else {
+        0.0
+    };
+    let mut healthy_lat = healthy.merged.latencies_ms.clone();
+    healthy_lat.sort_by(f64::total_cmp);
+    let healthy_p50 = median(&healthy_lat);
+    let max_failover_ms = max_of(&degraded.merged.failover_latencies_ms);
+    println!(
+        "  node killed  {:>8.1} ms  {:>7.2} Mkeys/s  ({ratio:.2}× healthy, failed {}, \
+         violations {}, {} failover(s), worst failover {max_failover_ms:.1} ms vs \
+         healthy p50 {healthy_p50:.1} ms)",
+        degraded.wall_ms, degraded.mkeys_s, degraded.merged.failed, degraded.merged.violations,
+        degraded.merged.failovers
+    );
+
+    let violations = healthy.merged.violations + degraded.merged.violations;
+    let failed = healthy.merged.failed + degraded.merged.failed;
+    let mut degraded_lat = degraded.merged.latencies_ms.clone();
+    degraded_lat.sort_by(f64::total_cmp);
+    let report = Json::obj(vec![
+        ("bench", Json::str("cluster_failover")),
+        ("schema_version", Json::num(1.0)),
+        ("mode", Json::str(profile.mode)),
+        ("nodes", Json::num(NODES as f64)),
+        ("clients", Json::num(profile.clients as f64)),
+        ("requests", Json::num(profile.total_requests() as f64)),
+        ("keys_per_request", Json::num(profile.keys_per_request as f64)),
+        ("byte_identity_violations", Json::num(violations as f64)),
+        ("failed_requests", Json::num(failed as f64)),
+        ("healthy_mkeys_s", Json::num(healthy.mkeys_s)),
+        ("degraded_mkeys_s", Json::num(degraded.mkeys_s)),
+        ("degraded_ratio", Json::num(ratio)),
+        (
+            "failover",
+            Json::obj(vec![
+                ("failovers", Json::num(degraded.merged.failovers as f64)),
+                ("max_failover_ms", Json::num(max_failover_ms)),
+                ("healthy_p50_ms", Json::num(healthy_p50)),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("scenario", Json::str("healthy")),
+                    ("wall_ms", Json::num(healthy.wall_ms)),
+                    ("mkeys_s", Json::num(healthy.mkeys_s)),
+                    ("p50_ms", Json::num(healthy_p50)),
+                ]),
+                Json::obj(vec![
+                    ("scenario", Json::str("one_node_killed")),
+                    ("wall_ms", Json::num(degraded.wall_ms)),
+                    ("mkeys_s", Json::num(degraded.mkeys_s)),
+                    ("p50_ms", Json::num(median(&degraded_lat))),
+                ]),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_cluster.json", report.to_string_pretty())
+        .expect("write BENCH_cluster.json");
+    println!("→ BENCH_cluster.json");
+
+    // In-bench gates (CI re-checks them from the JSON): no request may
+    // fail, no byte may differ, and the kill must actually have been
+    // ridden through.
+    assert_eq!(violations, 0, "byte identity violated across the cluster");
+    assert_eq!(failed, 0, "a client request failed despite failover");
+    assert!(
+        degraded.merged.failovers >= 1,
+        "the killed node was never routed to — the scenario proved nothing"
+    );
+    assert!(
+        ratio >= 0.5,
+        "losing 1 of {NODES} nodes cost more than half the throughput ({ratio:.2}x)"
+    );
+    println!("gate OK: 0 failed requests, 0 byte-identity violations, failover exercised");
+}

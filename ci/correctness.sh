@@ -5,7 +5,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== xtask lint (R1-R6) =="
+echo "== xtask lint (R1-R7) =="
 cargo run -q -p xtask -- lint
 
 echo "== xtask lint self-test (every rule still fires) =="

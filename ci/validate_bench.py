@@ -269,6 +269,41 @@ def gate_chaos(report):
             f"{rec['reconnects']} reconnect(s) ridden through")
 
 
+def gate_cluster(report):
+    require(report, ("bench", "mode", "nodes", "clients", "requests",
+                     "keys_per_request", "byte_identity_violations",
+                     "failed_requests", "healthy_mkeys_s",
+                     "degraded_mkeys_s", "degraded_ratio", "failover",
+                     "results"))
+    assert report["bench"] == "cluster_failover"
+    require_rows(report, "results",
+                 ("scenario", "wall_ms", "mkeys_s", "p50_ms"),
+                 positive=("wall_ms", "mkeys_s"))
+    scenarios = {r["scenario"] for r in report["results"]}
+    assert {"healthy", "one_node_killed"} <= scenarios, \
+        f"missing scenarios: {scenarios}"
+    # Gate 1: failover never changes bytes — every response, including
+    # the resubmitted ones, matched a local sort.
+    violations = report["byte_identity_violations"]
+    assert violations == 0, \
+        f"{violations} byte-identity violations across the cluster"
+    # Gate 2: node death is invisible to callers — zero failed client
+    # requests across both scenarios.
+    failed = report["failed_requests"]
+    assert failed == 0, f"{failed} client request(s) failed despite failover"
+    # Gate 3: losing 1 of 3 nodes costs at most half the throughput.
+    ratio = report["degraded_ratio"]
+    assert ratio >= 0.5, f"one-node-killed only {ratio:.2f}x healthy throughput"
+    # Gate 4: the kill actually landed on a routed node — a run where
+    # nothing failed over proves nothing.
+    fo = report["failover"]
+    for field in ("failovers", "max_failover_ms", "healthy_p50_ms"):
+        assert field in fo, f"failover missing {field!r}: {fo}"
+    assert fo["failovers"] >= 1, "the killed node was never routed to"
+    return (f"one node killed: {ratio:.2f}x healthy, 0 failed requests, "
+            f"0 byte violations, {fo['failovers']:.0f} failover(s)")
+
+
 REPORTS = {
     "service_throughput": ("results/service_throughput.json", gate_service_throughput),
     "typed_keys": ("results/typed_keys.json", gate_typed_keys),
@@ -277,6 +312,7 @@ REPORTS = {
     "net": ("BENCH_net.json", gate_net),
     "adaptive": ("BENCH_adaptive.json", gate_adaptive),
     "chaos": ("BENCH_chaos.json", gate_chaos),
+    "cluster": ("BENCH_cluster.json", gate_cluster),
 }
 
 

@@ -107,6 +107,16 @@ pub struct NetConfig {
     /// with a typed `TooLarge` error frame at `SortBegin`, before any
     /// key bytes are buffered.
     pub max_request_keys: usize,
+    /// How long a graceful drain waits for in-flight sorts before
+    /// giving up and closing sockets anyway, in milliseconds. Also
+    /// bounds how long a cluster node waits for the registry to ack
+    /// its deregister on shutdown.
+    pub drain_timeout_ms: u64,
+    /// Capacity of the per-`(session, request id)` idempotency window
+    /// of completed responses (replayed to reconnecting clients
+    /// instead of re-executing). `0` disables caching; evictions under
+    /// pressure are counted as `net_dedup_evictions`.
+    pub dedup_window: usize,
 }
 
 impl Default for NetConfig {
@@ -116,6 +126,8 @@ impl Default for NetConfig {
             credits: 8,
             chunk_bytes: 1 << 18,
             max_request_keys: 1 << 26,
+            drain_timeout_ms: 60_000,
+            dedup_window: 256,
         }
     }
 }
@@ -140,6 +152,12 @@ impl NetConfig {
         if self.max_request_keys == 0 {
             return Err(Error::Config(
                 "net.max_request_keys must be positive".into(),
+            ));
+        }
+        if self.drain_timeout_ms == 0 {
+            return Err(Error::Config(
+                "net.drain_timeout_ms must be at least 1 (use a large value, not 0, to wait long)"
+                    .into(),
             ));
         }
         Ok(())
@@ -324,6 +342,11 @@ impl ServiceConfig {
                             .unwrap_or(cfg.net.chunk_bytes),
                         max_request_keys: usize_field(val, "max_request_keys")
                             .unwrap_or(cfg.net.max_request_keys),
+                        drain_timeout_ms: usize_field(val, "drain_timeout_ms")
+                            .map(|v| v as u64)
+                            .unwrap_or(cfg.net.drain_timeout_ms),
+                        dedup_window: usize_field(val, "dedup_window")
+                            .unwrap_or(cfg.net.dedup_window),
                     };
                 }
                 "verify" => {
@@ -448,6 +471,11 @@ impl ServiceConfig {
                         "max_request_keys",
                         Json::num(self.net.max_request_keys as f64),
                     ),
+                    (
+                        "drain_timeout_ms",
+                        Json::num(self.net.drain_timeout_ms as f64),
+                    ),
+                    ("dedup_window", Json::num(self.net.dedup_window as f64)),
                 ]),
             ),
             ("verify", Json::Bool(self.verify)),
@@ -605,18 +633,25 @@ mod tests {
     #[test]
     fn net_field_roundtrips_and_validates() {
         let cfg = ServiceConfig::from_json(
-            r#"{"net":{"max_frame_len":65536,"credits":4,"chunk_bytes":4096,"max_request_keys":1000000}}"#,
+            r#"{"net":{"max_frame_len":65536,"credits":4,"chunk_bytes":4096,"max_request_keys":1000000,"drain_timeout_ms":2500,"dedup_window":32}}"#,
         )
         .unwrap();
         assert_eq!(cfg.net.max_frame_len, 65536);
         assert_eq!(cfg.net.credits, 4);
         assert_eq!(cfg.net.chunk_bytes, 4096);
         assert_eq!(cfg.net.max_request_keys, 1_000_000);
+        assert_eq!(cfg.net.drain_timeout_ms, 2500);
+        assert_eq!(cfg.net.dedup_window, 32);
         assert_eq!(ServiceConfig::from_json(&cfg.to_json()).unwrap(), cfg);
         // Partial net objects keep defaults for the rest.
         let partial = ServiceConfig::from_json(r#"{"net":{"credits":2}}"#).unwrap();
         assert_eq!(partial.net.credits, 2);
         assert_eq!(partial.net.max_frame_len, NetConfig::default().max_frame_len);
+        assert_eq!(partial.net.drain_timeout_ms, 60_000);
+        assert_eq!(partial.net.dedup_window, 256);
+        // dedup_window 0 is valid (caching off); drain_timeout_ms 0 is not.
+        assert!(ServiceConfig::from_json(r#"{"net":{"dedup_window":0}}"#).is_ok());
+        assert!(ServiceConfig::from_json(r#"{"net":{"drain_timeout_ms":0}}"#).is_err());
         // Invalid combinations are rejected.
         assert!(ServiceConfig::from_json(r#"{"net":{"credits":0}}"#).is_err());
         assert!(ServiceConfig::from_json(r#"{"net":{"max_frame_len":16}}"#).is_err());

@@ -3,6 +3,7 @@
 //! ```text
 //! gbs sort        one-shot sort (native / sim / pjrt engine, any algorithm)
 //! gbs serve       run the batched sort service under a synthetic load
+//! gbs registry    run the cluster membership registry
 //! gbs experiment  regenerate the paper's tables and figures (CSV + console)
 //! gbs specs       print Table 1
 //! gbs config      print or validate a service config
@@ -20,13 +21,16 @@ use gpu_bucket_sort::coordinator::{
 };
 use gpu_bucket_sort::exec::{NativeEngine, NativeParams};
 use gpu_bucket_sort::experiments as exp;
-use gpu_bucket_sort::net::{NetClient, NetServer};
+use gpu_bucket_sort::net::{
+    registry, ClusterClient, ClusterOptions, NetClient, NetServer, NodeRegistration, Registry,
+    RegistryConfig,
+};
 use gpu_bucket_sort::runtime::PjrtRuntime;
 use gpu_bucket_sort::sim::{DevicePool, GpuModel, GpuSim};
 use gpu_bucket_sort::workload::Distribution;
 use gpu_bucket_sort::{is_sorted_permutation, ExecContext, Key, KernelKind, KeyType};
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +53,7 @@ fn run(args: &[String]) -> Result<(), String> {
     match cmd.as_str() {
         "sort" => cmd_sort(&flags),
         "serve" => cmd_serve(&flags),
+        "registry" => cmd_registry(&flags),
         "experiment" | "exp" => cmd_experiment(&flags),
         "specs" => {
             println!("{}", exp::table1().to_markdown());
@@ -97,7 +102,11 @@ COMMANDS
                --connect HOST:PORT submits the sort to a remote
                `gbs serve --listen` server over the framed TCP protocol,
                with [--connections 1] pooled sockets — add --drain true
-               to ask that server to drain gracefully instead)
+               to ask that server to drain gracefully instead;
+               --registry HOST:PORT instead resolves the node set from a
+               `gbs registry` process and routes to the least-loaded
+               node, failing over to survivors on node death — with
+               --drain true it asks the *registry* to drain)
   serve       [--requests 64] [--concurrency 8] [--n 1M] [--dist uniform]
               [--engine native|sharded] [--workers 4] [--config file.json]
               [--kernel adaptive|radix|bitonic] [--digit-bits 11]
@@ -105,14 +114,25 @@ COMMANDS
               [--fault-plan configs/fault_plan.json]
               [--coalesce-max-keys 128K]
               [--key-type u32] [--payload true] [--descending true]
-              [--listen 127.0.0.1:4750]
+              [--listen 127.0.0.1:4750] [--registry HOST:PORT]
+              [--advertise HOST:PORT] [--drain-timeout-ms 60000]
               (--workers runs N engine instances concurrently; sharded
                engines lease disjoint device subsets per worker;
                small same-shaped requests coalesce into one kernel
                invocation up to --coalesce-max-keys each, 0 disables;
                --listen serves sorts over TCP instead of running the
                synthetic load — port 0 picks a free port — until a
-               client requests a drain)
+               client requests a drain; --registry self-registers the
+               node with a cluster registry and heartbeats until
+               shutdown, which deregisters *before* draining —
+               --advertise overrides the address published to the
+               registry, --drain-timeout-ms bounds the drain wait)
+  registry    [--listen 127.0.0.1:0] [--heartbeat-ms 100]
+              [--suspect-misses 3] [--evict-misses 6]
+              (lease-based cluster membership: nodes register and
+               heartbeat; a node that misses --suspect-misses beats is
+               withheld from routing, one that misses --evict-misses is
+               evicted — stop with `gbs sort --registry ADDR --drain true`)
   experiment  <table1|fig3|fig4|fig5|fig6|fig7|robustness|rates|sharded|all>
               [--out results] [--fast true]
   specs       print the paper's Table 1
@@ -177,6 +197,14 @@ fn cmd_sort(flags: &HashMap<String, String>) -> Result<(), String> {
         }
         return cmd_sort_remote(
             flags, n, dist, seed, verify, key_type, payload, descending, addr,
+        );
+    }
+    if let Some(reg_addr) = flags.get("registry") {
+        if analytic {
+            return Err("--analytic runs locally; it cannot combine with --registry".into());
+        }
+        return cmd_sort_cluster(
+            flags, n, dist, seed, verify, key_type, payload, descending, reg_addr,
         );
     }
     let kernel = KernelKind::parse(flag(flags, "kernel", KernelKind::default().id()))
@@ -521,6 +549,81 @@ fn cmd_sort_remote(
     Ok(())
 }
 
+/// `gbs sort --registry HOST:PORT`: resolve the cluster's node set
+/// from the registry, route to the least-loaded node, and fail over to
+/// a survivor if the chosen node dies mid-request.
+#[allow(clippy::too_many_arguments)]
+fn cmd_sort_cluster(
+    flags: &HashMap<String, String>,
+    n: usize,
+    dist: Distribution,
+    seed: u64,
+    verify: bool,
+    key_type: KeyType,
+    payload: bool,
+    descending: bool,
+    reg_addr: &str,
+) -> Result<(), String> {
+    if flag(flags, "drain", "false") == "true" {
+        registry::drain_registry(reg_addr).map_err(|e| e.to_string())?;
+        println!("drain acknowledged by registry {reg_addr}");
+        return Ok(());
+    }
+    let connections: usize = flag(flags, "connections", "1")
+        .parse()
+        .map_err(|e| format!("bad --connections: {e}"))?;
+    let client = ClusterClient::connect(
+        reg_addr,
+        NetConfig::default(),
+        ClusterOptions {
+            connections_per_node: connections,
+            ..ClusterOptions::default()
+        },
+    )
+    .map_err(|e| e.to_string())?;
+    let nodes = client.nodes();
+    println!("cluster via registry {reg_addr}: {} node(s) {:?}", nodes.len(), nodes);
+    println!(
+        "generating {n} {key_type} keys ({dist}){} …",
+        if payload { " with u64 payloads" } else { "" }
+    );
+    let keys = dist.generate_data(key_type, n, seed);
+    let reference = JobData {
+        keys: keys.clone(),
+        payload: payload.then(|| (0..n as u64).collect()),
+    };
+    let mut builder = SortRequest::builder(keys).descending(descending);
+    if payload {
+        builder = builder.payload((0..n as u64).collect());
+    }
+    let request = builder.build().map_err(|e| e.to_string())?;
+    let t0 = Instant::now();
+    let resp = client.sort(request).map_err(|e| e.to_string())?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "cluster sort: {wall_ms:.2} ms round trip ({:.1} Mkeys/s) — engine {}, \
+         worker {}, batch {}, {} failover(s)",
+        n as f64 / wall_ms / 1e3,
+        resp.engine.id(),
+        resp.worker,
+        resp.batch_size,
+        client.failovers(),
+    );
+    if verify {
+        let out = JobData {
+            keys: resp.keys,
+            payload: resp.payload,
+        };
+        verify_outcome(&reference, &out, descending)
+            .map_err(|e| format!("verification FAILED: {e}"))?;
+        println!(
+            "  verified: sorted permutation{} ✓",
+            if payload { " + payload pairing" } else { "" }
+        );
+    }
+    Ok(())
+}
+
 fn check(input: &[Key], output: &[Key], verify: bool) -> Result<(), String> {
     if verify {
         if is_sorted_permutation(input, output) {
@@ -563,9 +666,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
     if let Some(c) = flags.get("coalesce-max-keys") {
         cfg.batch.coalesce_max_keys = parse_size(c)?;
     }
+    if let Some(d) = flags.get("drain-timeout-ms") {
+        cfg.net.drain_timeout_ms = d
+            .parse()
+            .map_err(|e| format!("bad --drain-timeout-ms: {e}"))?;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     if let Some(addr) = flags.get("listen") {
-        return cmd_serve_listen(cfg, addr);
+        return cmd_serve_listen(
+            cfg,
+            addr,
+            flags.get("registry").map(String::as_str),
+            flags.get("advertise").map(String::as_str),
+        );
+    }
+    if flags.contains_key("registry") {
+        return Err("--registry requires --listen (a clusterable node serves over TCP)".into());
     }
     let requests: usize = flag(flags, "requests", "64").parse().map_err(|e| format!("{e}"))?;
     let concurrency: usize = flag(flags, "concurrency", "8").parse().map_err(|e| format!("{e}"))?;
@@ -619,8 +735,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
 
 /// `gbs serve --listen ADDR`: serve sorts over TCP until some client
 /// sends a `Drain` frame, then drain gracefully (in-flight sorts
-/// complete and flush before the listener goes down).
-fn cmd_serve_listen(cfg: ServiceConfig, addr: &str) -> Result<(), String> {
+/// complete and flush before the listener goes down). With
+/// `--registry`, the node self-registers on start and — in that order —
+/// deregisters, *then* drains on shutdown, so the registry stops
+/// routing new work here before the node starts shedding.
+fn cmd_serve_listen(
+    cfg: ServiceConfig,
+    addr: &str,
+    registry_addr: Option<&str>,
+    advertise: Option<&str>,
+) -> Result<(), String> {
     let net = cfg.net;
     let engine = cfg.engine;
     let workers = cfg.workers;
@@ -629,6 +753,23 @@ fn cmd_serve_listen(cfg: ServiceConfig, addr: &str) -> Result<(), String> {
     // The machine-scrapable address line comes first (port 0 resolves
     // to the ephemeral port actually bound).
     println!("GBS_NET_ADDR {}", server.local_addr());
+    let registration = match registry_addr {
+        Some(reg_addr) => {
+            let advertised = advertise
+                .map(str::to_string)
+                .unwrap_or_else(|| server.local_addr().to_string());
+            let reg = NodeRegistration::start(
+                reg_addr,
+                &advertised,
+                server.load_probe(),
+                Duration::from_millis(net.drain_timeout_ms),
+            )
+            .map_err(|e| e.to_string())?;
+            println!("registered with {reg_addr} as {advertised}");
+            Some(reg)
+        }
+        None => None,
+    };
     println!(
         "serving sorts over TCP: engine={engine:?}, {workers} worker(s), \
          {} credits/connection — stop with `gbs sort --connect {} --drain true`",
@@ -640,8 +781,56 @@ fn cmd_serve_listen(cfg: ServiceConfig, addr: &str) -> Result<(), String> {
         let _ = std::io::stdout().flush();
     }
     server.wait_for_drain_request(None);
-    println!("drain requested — completing in-flight sorts …");
+    // Deregister-then-drain: the registry must stop routing to this
+    // node before in-flight work starts shedding.
+    if let Some(reg) = registration {
+        let acked = reg.deregister();
+        println!(
+            "deregistered from registry ({}) — completing in-flight sorts …",
+            if acked { "acked" } else { "no ack; lease will expire" }
+        );
+    } else {
+        println!("drain requested — completing in-flight sorts …");
+    }
     let snap = server.shutdown();
+    println!("{}", snap.summary());
+    Ok(())
+}
+
+/// `gbs registry`: run the cluster membership registry until some
+/// client asks it to drain (`gbs sort --registry ADDR --drain true`).
+fn cmd_registry(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = flag(flags, "listen", "127.0.0.1:0");
+    let mut cfg = RegistryConfig::default();
+    if let Some(v) = flags.get("heartbeat-ms") {
+        cfg.heartbeat_ms = v.parse().map_err(|e| format!("bad --heartbeat-ms: {e}"))?;
+    }
+    if let Some(v) = flags.get("suspect-misses") {
+        cfg.suspect_misses = v
+            .parse()
+            .map_err(|e| format!("bad --suspect-misses: {e}"))?;
+    }
+    if let Some(v) = flags.get("evict-misses") {
+        cfg.evict_misses = v.parse().map_err(|e| format!("bad --evict-misses: {e}"))?;
+    }
+    let reg = Registry::bind(addr, cfg).map_err(|e| e.to_string())?;
+    // Machine-scrapable address line first (port 0 resolves here).
+    println!("GBS_REGISTRY_ADDR {}", reg.local_addr());
+    println!(
+        "registry: heartbeat {} ms, suspect after {} missed, evict after {} missed \
+         — stop with `gbs sort --registry {} --drain true`",
+        cfg.heartbeat_ms,
+        cfg.suspect_misses,
+        cfg.evict_misses,
+        reg.local_addr()
+    );
+    {
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    }
+    reg.wait_for_drain_request(None);
+    println!("drain requested — closing registry …");
+    let snap = reg.shutdown();
     println!("{}", snap.summary());
     Ok(())
 }

@@ -1,0 +1,325 @@
+//! Multi-node sort client: registry-resolved routing with
+//! health-checked failover.
+//!
+//! A [`ClusterClient`] never takes node addresses directly — it asks
+//! the registry ([`super::registry::node_list`]) for the alive set and
+//! keeps a pooled [`NetClient`] per node. Each request is routed to
+//! the node with the lowest apparent load:
+//!
+//! * **advertised in-flight** — from the node's last heartbeat, via the
+//!   registry (refreshed every [`ClusterOptions::refresh_every`]
+//!   requests);
+//! * **local in-flight** — requests this client currently has
+//!   outstanding on the node (fresher than any heartbeat);
+//! * **advertised credit headroom** — the tiebreak: more spare
+//!   admission credits wins.
+//!
+//! # Failover
+//!
+//! Per-node clients run with reconnection *off* — when a node dies,
+//! same-node retry is exactly wrong. The cluster client instead marks
+//! the node dead, refreshes the node list, and resubmits the request
+//! on a surviving node, paced by [`Backoff::RECONNECT`]. Blind
+//! resubmission is safe for the same reason PR 9's single-node
+//! recovery is: sorting is deterministic, so a request that secretly
+//! completed on the dying node and is re-executed elsewhere produces a
+//! byte-identical response. Only *loss-class* errors fail over
+//! ([`Error::ConnectionLost`], [`Error::Io`], pool-exhaustion
+//! [`Error::Coordinator`]); a typed rejection such as
+//! [`Error::InvalidInput`] or [`Error::TooLarge`] would fail
+//! identically everywhere and is returned as-is.
+
+use super::client::{ClientOptions, NetClient};
+use super::registry::node_list;
+use crate::config::NetConfig;
+use crate::coordinator::{SortRequest, SortResponse};
+use crate::error::{Error, Result};
+use crate::sim::fault::FaultInjector;
+use crate::util::backoff::{sleep_backoff, Backoff};
+use crate::util::sync::{lock_unpoisoned, Arc, AtomicBool, AtomicU64, Mutex, Ordering};
+
+/// Routing/failover knobs for [`ClusterClient::connect`].
+#[derive(Clone)]
+pub struct ClusterOptions {
+    /// Pooled connections per node (the per-node
+    /// [`NetClient::connect`] pool size).
+    pub connections_per_node: usize,
+    /// How many times one request may fail over to another node before
+    /// its loss-class error is returned to the caller.
+    pub max_failovers: u32,
+    /// Refresh the node list from the registry every this many
+    /// requests (failover refreshes immediately regardless). 0 keeps
+    /// the resolve-time list until a failover forces a refresh.
+    pub refresh_every: u64,
+    /// Optional fault injector forwarded to every per-node client
+    /// (`socket_cut`, `frame_corrupt` points).
+    pub faults: Option<Arc<FaultInjector>>,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            connections_per_node: 1,
+            max_failovers: 4,
+            refresh_every: 32,
+            faults: None,
+        }
+    }
+}
+
+/// One resolved node: its pooled client plus the load inputs routing
+/// reads. Advertised load comes from the registry; local in-flight is
+/// maintained by this client around each submission.
+struct NodeSlot {
+    addr: String,
+    client: NetClient,
+    /// `(inflight, credit_headroom)` from the node's last heartbeat.
+    advertised: Mutex<(u32, u32)>,
+    /// Requests this cluster client currently has outstanding here.
+    local_inflight: AtomicU64,
+    /// Set on a loss-class failure; dead slots are never routed to and
+    /// are dropped at the next refresh.
+    dead: AtomicBool,
+}
+
+/// Decrement-on-drop guard so a panicking response path cannot leak a
+/// node's local in-flight count.
+struct InflightGuard<'a>(&'a NodeSlot);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.local_inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A sorting client for a registry-coordinated cluster of sort
+/// servers. See the module docs for routing and failover semantics.
+pub struct ClusterClient {
+    registry_addr: String,
+    net: NetConfig,
+    opts: ClusterOptions,
+    nodes: Mutex<Vec<Arc<NodeSlot>>>,
+    requests: AtomicU64,
+    failovers: AtomicU64,
+}
+
+impl ClusterClient {
+    /// Resolve the alive node set from the registry at `registry_addr`
+    /// and connect to every node. Fails if the registry lists no alive
+    /// nodes or none of them accepts a connection.
+    pub fn connect(
+        registry_addr: &str,
+        net: NetConfig,
+        opts: ClusterOptions,
+    ) -> Result<ClusterClient> {
+        net.validate()?;
+        let cluster = ClusterClient {
+            registry_addr: registry_addr.to_string(),
+            net,
+            opts,
+            nodes: Mutex::new(Vec::new()),
+            requests: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+        };
+        cluster.refresh()?;
+        if cluster.alive_count() == 0 {
+            return Err(Error::Coordinator(format!(
+                "registry {} lists no connectable nodes",
+                cluster.registry_addr
+            )));
+        }
+        Ok(cluster)
+    }
+
+    /// Addresses of the nodes currently considered routable, in
+    /// routing-table order.
+    pub fn nodes(&self) -> Vec<String> {
+        lock_unpoisoned(&self.nodes)
+            .iter()
+            .filter(|n| !n.dead.load(Ordering::Relaxed))
+            .map(|n| n.addr.clone())
+            .collect()
+    }
+
+    /// How many requests failed over to another node so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Total requests submitted through this client.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    fn alive_count(&self) -> usize {
+        lock_unpoisoned(&self.nodes)
+            .iter()
+            .filter(|n| !n.dead.load(Ordering::Relaxed))
+            .count()
+    }
+
+    fn connect_node(&self, addr: &str) -> Result<Arc<NodeSlot>> {
+        let client = NetClient::connect_with(
+            addr,
+            self.opts.connections_per_node,
+            self.net.clone(),
+            ClientOptions {
+                // Cluster failover replaces same-node reconnection: a
+                // dead node's requests move to a survivor instead.
+                reconnect: false,
+                faults: self.opts.faults.clone(),
+            },
+        )?;
+        Ok(Arc::new(NodeSlot {
+            addr: addr.to_string(),
+            client,
+            advertised: Mutex::new((0, 0)),
+            local_inflight: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+        }))
+    }
+
+    /// Re-resolve from the registry: update advertised load for known
+    /// nodes, connect to newly listed ones, drop dead slots. Slots
+    /// missing from the reply but still healthy are kept — the
+    /// registry may merely suspect them, and a working connection
+    /// beats an empty routing table.
+    fn refresh(&self) -> Result<()> {
+        let entries = node_list(&self.registry_addr)?;
+        let mut nodes = lock_unpoisoned(&self.nodes);
+        nodes.retain(|n| !n.dead.load(Ordering::Relaxed));
+        for entry in entries {
+            if let Some(slot) = nodes.iter().find(|n| n.addr == entry.addr) {
+                *lock_unpoisoned(&slot.advertised) = (entry.inflight, entry.credit_headroom);
+                continue;
+            }
+            // A node this client has never connected to (or one it
+            // declared dead and dropped — re-listed means recovered).
+            match self.connect_node(&entry.addr) {
+                Ok(slot) => {
+                    *lock_unpoisoned(&slot.advertised) = (entry.inflight, entry.credit_headroom);
+                    nodes.push(slot);
+                }
+                Err(_) => continue,
+            }
+        }
+        Ok(())
+    }
+
+    /// Pick the routable node with the lowest apparent load:
+    /// advertised in-flight plus local in-flight, tiebreak on larger
+    /// advertised credit headroom, then address order (determinism).
+    fn pick(&self) -> Result<Arc<NodeSlot>> {
+        let nodes = lock_unpoisoned(&self.nodes);
+        let mut best: Option<(&Arc<NodeSlot>, u64, u32)> = None;
+        for slot in nodes.iter() {
+            if slot.dead.load(Ordering::Relaxed) {
+                continue;
+            }
+            let (adv_inflight, headroom) = *lock_unpoisoned(&slot.advertised);
+            let load =
+                u64::from(adv_inflight) + slot.local_inflight.load(Ordering::Relaxed);
+            let better = match best {
+                None => true,
+                Some((_, best_load, best_headroom)) => {
+                    load < best_load || (load == best_load && headroom > best_headroom)
+                }
+            };
+            if better {
+                best = Some((slot, load, headroom));
+            }
+        }
+        match best {
+            Some((slot, _, _)) => Ok(slot.clone()),
+            None => Err(Error::Coordinator(
+                "no routable cluster node (all dead or deregistered)".into(),
+            )),
+        }
+    }
+
+    /// Sort on the least-loaded node, failing over to survivors on
+    /// node death (up to [`ClusterOptions::max_failovers`] times).
+    pub fn sort(&self, request: SortRequest) -> Result<SortResponse> {
+        let seq = self.requests.fetch_add(1, Ordering::Relaxed);
+        if self.opts.refresh_every > 0 && seq > 0 && seq % self.opts.refresh_every == 0 {
+            // Periodic load refresh is best effort: a briefly
+            // unreachable registry must not fail sorts on healthy,
+            // already-connected nodes.
+            let _ = self.refresh();
+        }
+        let mut attempt: u32 = 0;
+        loop {
+            let slot = self.pick()?;
+            slot.local_inflight.fetch_add(1, Ordering::Relaxed);
+            let outcome = {
+                let _guard = InflightGuard(&slot);
+                slot.client.sort(request.clone())
+            };
+            match outcome {
+                Ok(resp) => return Ok(resp),
+                Err(e) if is_loss(&e) => {
+                    slot.dead.store(true, Ordering::Relaxed);
+                    if attempt >= self.opts.max_failovers {
+                        return Err(e);
+                    }
+                    self.failovers.fetch_add(1, Ordering::Relaxed);
+                    sleep_backoff(&Backoff::RECONNECT, attempt);
+                    attempt = attempt.saturating_add(1);
+                    // Learn the survivors (and drop the corpse) before
+                    // resubmitting. Deterministic sorting makes the
+                    // resubmission idempotent even if the dead node
+                    // already executed it.
+                    let _ = self.refresh();
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// True for failures that mean "this node (or the path to it) is
+/// gone", where the same request on another node can still succeed.
+fn is_loss(e: &Error) -> bool {
+    matches!(
+        e,
+        Error::ConnectionLost { .. } | Error::Io(_) | Error::Coordinator(_)
+    )
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_classification() {
+        assert!(is_loss(&Error::ConnectionLost {
+            request_ids: vec![1]
+        }));
+        assert!(is_loss(&Error::Io(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "gone"
+        ))));
+        assert!(is_loss(&Error::Coordinator(
+            "every pooled connection closed".into()
+        )));
+        assert!(!is_loss(&Error::InvalidInput("bad key width".into())));
+        assert!(!is_loss(&Error::TooLarge("2 keys > limit 1".into())));
+    }
+
+    #[test]
+    fn connect_refuses_empty_cluster() {
+        // A registry with no nodes must be rejected at connect time.
+        let reg = crate::net::registry::Registry::bind(
+            "127.0.0.1:0",
+            crate::net::registry::RegistryConfig::default(),
+        )
+        .expect("bind registry");
+        let err = ClusterClient::connect(
+            &reg.local_addr().to_string(),
+            NetConfig::default(),
+            ClusterOptions::default(),
+        );
+        assert!(err.is_err(), "empty cluster must not connect");
+        reg.shutdown();
+    }
+}

@@ -1,6 +1,6 @@
 //! Sort-as-a-service over TCP.
 //!
-//! Three layers:
+//! Three layers plus the cluster tier:
 //!
 //! * [`wire`] — the framed, CRC-checked, length-prefixed binary
 //!   protocol (versioned header, typed opcodes, chunked streaming of
@@ -19,15 +19,31 @@
 //!   plus idempotent resubmission of in-flight requests under their
 //!   original wire ids, matched by the server's per-session dedup
 //!   window.
+//! * [`registry`] — [`Registry`]: lease-based cluster membership
+//!   (`Register`/`Heartbeat`/`NodeList` opcodes). Nodes self-register
+//!   and heartbeat; silent nodes turn suspect (unroutable), then are
+//!   evicted. [`NodeRegistration`] is the node-side lifecycle,
+//!   including deregister-before-drain shutdown ordering.
+//! * [`cluster`] — [`ClusterClient`]: resolves nodes from the
+//!   registry, routes each request to the least-loaded node
+//!   (advertised in-flight + local in-flight, credit-headroom
+//!   tiebreak), and on node death fails in-flight requests over to a
+//!   survivor — safe because sorting is deterministic.
 //!
 //! `gbs serve --listen ADDR` and `gbs sort --connect ADDR` are the CLI
-//! entry points; `docs/ARCHITECTURE.md` (§ Network tier) has the frame
-//! layout and the flow-control state machine.
+//! entry points; `gbs registry`, `serve --registry` and
+//! `sort --registry` form the multi-node path. `docs/ARCHITECTURE.md`
+//! (§ Network tier, § Cluster tier) has the frame layout, the
+//! flow-control state machine and the lease/failover state machines.
 
 pub mod client;
+pub mod cluster;
 pub mod credit;
+pub mod registry;
 pub mod server;
 pub mod wire;
 
 pub use client::{ClientOptions, NetClient};
+pub use cluster::{ClusterClient, ClusterOptions};
+pub use registry::{NodeRegistration, Registry, RegistryConfig};
 pub use server::NetServer;

@@ -1,0 +1,862 @@
+//! The cluster registry: lease-based membership for a fleet of sort
+//! servers, plus the node-side registration/heartbeat lifecycle.
+//!
+//! Topology:
+//!
+//! ```text
+//!   node A ──Register/Heartbeat──▶ ┌──────────┐ ◀──NodeList── client
+//!   node B ──Register/Heartbeat──▶ │ registry │ ◀──NodeList── client
+//!   node C ──Deregister─────────▶  └──────────┘
+//! ```
+//!
+//! Membership is a **lease**: a registered node renews by heartbeating
+//! every `heartbeat_ms`; the registry never pings anybody. Lease state
+//! is swept *lazily* — there is no sweeper thread and no registry-side
+//! sleep; staleness is computed from the last heartbeat's timestamp at
+//! the moment somebody asks:
+//!
+//! * `misses < suspect_misses` — **alive**: listed to routing clients.
+//! * `suspect_misses ≤ misses < evict_misses` — **suspect**: withheld
+//!   from `NodeList` replies (clients stop routing there) but kept in
+//!   the table, so a late heartbeat reinstates it without a
+//!   re-registration round trip.
+//! * `misses ≥ evict_misses` — **evicted**: removed from the table; the
+//!   node must `Register` again to rejoin.
+//!
+//! Shutdown ordering matters: a draining node first `Deregister`s (the
+//! registry acks after removing it — from that ack on, no `NodeList`
+//! reply routes new work to the node) and only then starts shedding
+//! in-flight work. The ack read is bounded by the node's
+//! [`crate::config::NetConfig::drain_timeout_ms`] so a dead registry
+//! cannot wedge a node's shutdown.
+//!
+//! The registry speaks the same framed wire protocol as the sort
+//! servers (`Register`/`Heartbeat`/`Deregister`/`NodeList` plus
+//! `Ping`/`Drain`/`Goodbye`), but skips the `Hello` handshake — its
+//! messages are tiny and carry no credits.
+
+use super::wire::{
+    error_frame, read_frame, write_frame, ErrorCode, Frame, HeartbeatMsg, NodeEntry, NodeListMsg,
+    Opcode, RegisterAckMsg, RegisterMsg, WireError,
+};
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::util::backoff::{sleep_backoff, Backoff};
+use crate::util::sync::{
+    self as sync, lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned, Arc, AtomicBool,
+    Condvar, Mutex, Ordering,
+};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use sync::thread::JoinHandle;
+
+/// Frame ceiling on registry connections. Registry payloads are node
+/// tables and addresses — a few KB at most; anything larger is hostile.
+pub const REGISTRY_MAX_FRAME: usize = 1 << 16;
+
+/// Lease parameters for a [`Registry`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryConfig {
+    /// Expected heartbeat interval, in milliseconds. Echoed to nodes in
+    /// the `RegisterAck` so the registry's clock is the one source of
+    /// pacing truth.
+    pub heartbeat_ms: u64,
+    /// Consecutive missed heartbeats before a node turns **suspect**
+    /// (withheld from `NodeList` replies).
+    pub suspect_misses: u64,
+    /// Consecutive missed heartbeats before a suspect node is
+    /// **evicted** from the membership table.
+    pub evict_misses: u64,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            heartbeat_ms: 100,
+            suspect_misses: 3,
+            evict_misses: 6,
+        }
+    }
+}
+
+impl RegistryConfig {
+    /// Sanity-check the combination.
+    pub fn validate(&self) -> Result<()> {
+        if self.heartbeat_ms == 0 {
+            return Err(Error::Config("registry.heartbeat_ms must be >= 1".into()));
+        }
+        if self.suspect_misses == 0 {
+            return Err(Error::Config("registry.suspect_misses must be >= 1".into()));
+        }
+        if self.evict_misses < self.suspect_misses {
+            return Err(Error::Config(format!(
+                "registry.evict_misses ({}) must be >= suspect_misses ({})",
+                self.evict_misses, self.suspect_misses
+            )));
+        }
+        Ok(())
+    }
+
+    /// The lease a registration grants: silence for this long gets the
+    /// node evicted.
+    pub fn lease_ms(&self) -> u64 {
+        self.heartbeat_ms.saturating_mul(self.evict_misses)
+    }
+}
+
+/// Lease phase of one membership entry, as reported by
+/// [`Registry::snapshot`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseState {
+    /// Heartbeating on schedule — listed to routing clients.
+    Alive,
+    /// Missed `suspect_misses` beats — withheld from routing, not yet
+    /// forgotten.
+    Suspect,
+}
+
+/// One row of [`Registry::snapshot`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeStatus {
+    /// Advertised sort address.
+    pub addr: String,
+    /// Last-advertised in-flight count.
+    pub inflight: u32,
+    /// Last-advertised credit headroom.
+    pub credit_headroom: u32,
+    /// Lease phase at snapshot time.
+    pub state: LeaseState,
+}
+
+struct NodeState {
+    last: Instant,
+    inflight: u32,
+    credit_headroom: u32,
+}
+
+/// Latched "a client asked us to drain" signal (same shape as the sort
+/// server's).
+#[derive(Default)]
+struct DrainSignal {
+    requested: Mutex<bool>,
+    cv: Condvar,
+}
+
+struct Shared {
+    cfg: RegistryConfig,
+    metrics: Metrics,
+    nodes: Mutex<HashMap<String, NodeState>>,
+    draining: AtomicBool,
+    drain: DrainSignal,
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+impl Shared {
+    fn misses(&self, st: &NodeState) -> u64 {
+        (st.last.elapsed().as_millis() as u64) / self.cfg.heartbeat_ms.max(1)
+    }
+
+    /// Lazy lease sweep: drop evicted entries, return the alive set.
+    /// Called under no other lock; the membership mutex is the only one
+    /// taken.
+    fn sweep_and_list(&self) -> Vec<NodeEntry> {
+        let mut nodes = lock_unpoisoned(&self.nodes);
+        let before = nodes.len();
+        let evict = self.cfg.evict_misses;
+        nodes.retain(|_, st| self.misses(st) < evict);
+        let evicted = before - nodes.len();
+        if evicted > 0 {
+            self.metrics.incr("registry_evictions", evicted as u64);
+        }
+        let mut alive: Vec<NodeEntry> = nodes
+            .iter()
+            .filter(|(_, st)| self.misses(st) < self.cfg.suspect_misses)
+            .map(|(addr, st)| NodeEntry {
+                addr: addr.clone(),
+                inflight: st.inflight,
+                credit_headroom: st.credit_headroom,
+            })
+            .collect();
+        // Deterministic reply order (HashMap iteration is not).
+        alive.sort_by(|a, b| a.addr.cmp(&b.addr));
+        alive
+    }
+
+    fn upsert(&self, addr: String, inflight: u32, credit_headroom: u32) {
+        let mut nodes = lock_unpoisoned(&self.nodes);
+        nodes.insert(
+            addr,
+            NodeState {
+                last: Instant::now(),
+                inflight,
+                credit_headroom,
+            },
+        );
+    }
+}
+
+/// A running registry process. Dropping (or calling
+/// [`Registry::shutdown`]) stops the listener and closes every node and
+/// client connection.
+pub struct Registry {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+    finished: bool,
+}
+
+impl Registry {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving membership.
+    pub fn bind(addr: &str, cfg: RegistryConfig) -> Result<Registry> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cfg,
+            metrics: Metrics::new(),
+            nodes: Mutex::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+            drain: DrainSignal::default(),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept = sync::thread::spawn_named("gbs-registry-accept".into(), move || {
+            accept_loop(listener, accept_shared)
+        });
+        Ok(Registry {
+            local_addr,
+            shared,
+            accept: Some(accept),
+            finished: false,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The lease configuration this registry runs.
+    pub fn config(&self) -> RegistryConfig {
+        self.shared.cfg
+    }
+
+    /// Registry counters (`registry_*`).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Current membership, with lease phases computed now (evicted
+    /// entries are swept as a side effect). Sorted by address.
+    pub fn snapshot(&self) -> Vec<NodeStatus> {
+        let shared = &*self.shared;
+        let mut nodes = lock_unpoisoned(&shared.nodes);
+        let evict = shared.cfg.evict_misses;
+        nodes.retain(|_, st| shared.misses(st) < evict);
+        let mut out: Vec<NodeStatus> = nodes
+            .iter()
+            .map(|(addr, st)| NodeStatus {
+                addr: addr.clone(),
+                inflight: st.inflight,
+                credit_headroom: st.credit_headroom,
+                state: if shared.misses(st) < shared.cfg.suspect_misses {
+                    LeaseState::Alive
+                } else {
+                    LeaseState::Suspect
+                },
+            })
+            .collect();
+        out.sort_by(|a, b| a.addr.cmp(&b.addr));
+        out
+    }
+
+    /// True once some client has sent a `Drain` frame.
+    pub fn drain_requested(&self) -> bool {
+        *lock_unpoisoned(&self.shared.drain.requested)
+    }
+
+    /// Block until a client requests a drain (or the timeout passes);
+    /// returns whether a drain was requested. `gbs registry` sits here,
+    /// then calls [`Registry::shutdown`].
+    pub fn wait_for_drain_request(&self, timeout: Option<Duration>) -> bool {
+        let mut g = lock_unpoisoned(&self.shared.drain.requested);
+        match timeout {
+            None => {
+                while !*g {
+                    g = wait_unpoisoned(&self.shared.drain.cv, g);
+                }
+                true
+            }
+            Some(t) => {
+                let deadline = Instant::now() + t;
+                while !*g {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return false;
+                    }
+                    let (guard, _) =
+                        wait_timeout_unpoisoned(&self.shared.drain.cv, g, deadline - now);
+                    g = guard;
+                }
+                true
+            }
+        }
+    }
+
+    /// Stop accepting, close every connection, return final counters.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown_impl()
+    }
+
+    fn shutdown_impl(&mut self) -> MetricsSnapshot {
+        self.finished = true;
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Poke the accept loop out of its blocking accept.
+        let _ = TcpStream::connect(self.local_addr);
+        let conn_handles = self
+            .accept
+            .take()
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default();
+        for s in lock_unpoisoned(&self.shared.conns).iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in conn_handles {
+            let _ = h.join();
+        }
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = self.shutdown_impl();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
+    let mut handles = Vec::new();
+    for stream in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        shared.metrics.incr("registry_connections", 1);
+        if let Ok(clone) = stream.try_clone() {
+            lock_unpoisoned(&shared.conns).push(clone);
+        }
+        let conn_shared = shared.clone();
+        handles.push(sync::thread::spawn_named(
+            "gbs-registry-conn".into(),
+            move || handle_connection(stream, conn_shared),
+        ));
+    }
+    handles
+}
+
+fn send(writer: &mut TcpStream, frame: &Frame) -> bool {
+    write_frame(writer, frame).is_ok()
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let Ok(mut writer) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader, REGISTRY_MAX_FRAME) {
+            Ok(Some(f)) => f,
+            // Clean close or abrupt drop: the lease machinery (not the
+            // connection) decides liveness, so just stop reading.
+            Ok(None) | Err(WireError::Truncated) | Err(WireError::Io(_)) => return,
+            Err(e) => {
+                shared.metrics.incr("registry_malformed", 1);
+                send(
+                    &mut writer,
+                    &error_frame(0, ErrorCode::Malformed, &e.to_string()),
+                );
+                return;
+            }
+        };
+        match frame.opcode {
+            Opcode::Register => {
+                let msg = match RegisterMsg::decode(&frame.payload) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        shared.metrics.incr("registry_malformed", 1);
+                        send(
+                            &mut writer,
+                            &error_frame(0, ErrorCode::Malformed, &e.to_string()),
+                        );
+                        return;
+                    }
+                };
+                shared.metrics.incr("registry_registers", 1);
+                shared.upsert(msg.addr, 0, 0);
+                let ack = RegisterAckMsg {
+                    heartbeat_ms: shared.cfg.heartbeat_ms,
+                    lease_ms: shared.cfg.lease_ms(),
+                };
+                send(
+                    &mut writer,
+                    &Frame::message(Opcode::RegisterAck, frame.id, ack.encode()),
+                );
+            }
+            Opcode::Heartbeat => {
+                let msg = match HeartbeatMsg::decode(&frame.payload) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        shared.metrics.incr("registry_malformed", 1);
+                        send(
+                            &mut writer,
+                            &error_frame(0, ErrorCode::Malformed, &e.to_string()),
+                        );
+                        return;
+                    }
+                };
+                shared.metrics.incr("registry_heartbeats", 1);
+                // A heartbeat is an implicit re-registration: if the
+                // node was suspect (or evicted and the registry
+                // restarted), this reinstates it.
+                shared.upsert(msg.addr, msg.inflight, msg.credit_headroom);
+            }
+            Opcode::Deregister => {
+                let msg = match RegisterMsg::decode(&frame.payload) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        shared.metrics.incr("registry_malformed", 1);
+                        send(
+                            &mut writer,
+                            &error_frame(0, ErrorCode::Malformed, &e.to_string()),
+                        );
+                        return;
+                    }
+                };
+                shared.metrics.incr("registry_deregisters", 1);
+                // Remove *before* acking: once the node sees the ack it
+                // starts draining, and from that moment no NodeList
+                // reply may route new work to it.
+                lock_unpoisoned(&shared.nodes).remove(&msg.addr);
+                let ack = RegisterAckMsg {
+                    heartbeat_ms: shared.cfg.heartbeat_ms,
+                    lease_ms: 0,
+                };
+                send(
+                    &mut writer,
+                    &Frame::message(Opcode::RegisterAck, frame.id, ack.encode()),
+                );
+            }
+            Opcode::NodeList => {
+                shared.metrics.incr("registry_node_lists", 1);
+                let reply = NodeListMsg {
+                    nodes: shared.sweep_and_list(),
+                };
+                send(
+                    &mut writer,
+                    &Frame::message(Opcode::NodeListReply, frame.id, reply.encode()),
+                );
+            }
+            Opcode::Ping => {
+                send(&mut writer, &Frame::control(Opcode::Pong, frame.id));
+            }
+            Opcode::Drain => {
+                send(&mut writer, &Frame::control(Opcode::DrainAck, frame.id));
+                let mut g = lock_unpoisoned(&shared.drain.requested);
+                *g = true;
+                shared.drain.cv.notify_all();
+            }
+            Opcode::Goodbye => return,
+            _ => {
+                shared.metrics.incr("registry_malformed", 1);
+                send(
+                    &mut writer,
+                    &error_frame(0, ErrorCode::Malformed, "unexpected opcode"),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// One registry round trip on a fresh connection: ask for the routable
+/// node set. Used by the cluster client's resolve/refresh path, the
+/// failover tests and the bench harness.
+pub fn node_list(registry_addr: &str) -> Result<Vec<NodeEntry>> {
+    let mut stream = TcpStream::connect(registry_addr)?;
+    let _ = stream.set_nodelay(true);
+    write_frame(&mut stream, &Frame::control(Opcode::NodeList, 1))?;
+    match read_frame(&mut stream, REGISTRY_MAX_FRAME) {
+        Ok(Some(f)) if f.opcode == Opcode::NodeListReply => {
+            Ok(NodeListMsg::decode(&f.payload)?.nodes)
+        }
+        Ok(Some(f)) => Err(Error::Remote {
+            code: "registry".into(),
+            message: format!("expected NodeListReply, got {:?}", f.opcode),
+        }),
+        Ok(None) => Err(Error::Remote {
+            code: "registry".into(),
+            message: "registry closed the connection mid-query".into(),
+        }),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Ask a registry process to drain (the `gbs registry` exit path).
+pub fn drain_registry(registry_addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(registry_addr)?;
+    write_frame(&mut stream, &Frame::control(Opcode::Drain, 1))?;
+    match read_frame(&mut stream, REGISTRY_MAX_FRAME) {
+        Ok(Some(f)) if f.opcode == Opcode::DrainAck => Ok(()),
+        Ok(Some(f)) => Err(Error::Remote {
+            code: "registry".into(),
+            message: format!("expected DrainAck, got {:?}", f.opcode),
+        }),
+        Ok(None) => Err(Error::Remote {
+            code: "registry".into(),
+            message: "registry closed the connection mid-drain".into(),
+        }),
+        Err(e) => Err(e.into()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Node-side lifecycle
+// ---------------------------------------------------------------------------
+
+/// Load probe handed to [`NodeRegistration::start`]: returns
+/// `(inflight, credit_headroom)` (see
+/// [`crate::net::NetServer::load_probe`]).
+pub type LoadProbe = Arc<dyn Fn() -> (u32, u32) + Send + Sync>;
+
+struct RegShared {
+    registry_addr: String,
+    advertised: String,
+    drain_timeout: Duration,
+    load: LoadProbe,
+    stop: Mutex<bool>,
+    cv: Condvar,
+    /// Whether the final `Deregister` was acked by the registry.
+    deregistered: AtomicBool,
+}
+
+/// A node's live membership in a cluster: registers on start, renews
+/// the lease from a background heartbeat thread, and deregisters
+/// *before* the caller starts draining (call
+/// [`NodeRegistration::deregister`] first, then drain the server).
+pub struct NodeRegistration {
+    shared: Arc<RegShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl NodeRegistration {
+    /// Register `advertised` with the registry at `registry_addr` and
+    /// start heartbeating at the interval the registry's ack dictates.
+    /// `load` is probed once per beat; `drain_timeout` bounds how long
+    /// the final deregister waits for its ack.
+    pub fn start(
+        registry_addr: &str,
+        advertised: &str,
+        load: LoadProbe,
+        drain_timeout: Duration,
+    ) -> Result<NodeRegistration> {
+        let (stream, ack) = dial_and_register(registry_addr, advertised)?;
+        let shared = Arc::new(RegShared {
+            registry_addr: registry_addr.to_string(),
+            advertised: advertised.to_string(),
+            drain_timeout,
+            load,
+            stop: Mutex::new(false),
+            cv: Condvar::new(),
+            deregistered: AtomicBool::new(false),
+        });
+        let hb_shared = shared.clone();
+        let interval = Duration::from_millis(ack.heartbeat_ms.max(1));
+        let handle = sync::thread::spawn_named("gbs-node-heartbeat".into(), move || {
+            heartbeat_loop(hb_shared, stream, interval)
+        });
+        Ok(NodeRegistration {
+            shared,
+            handle: Some(handle),
+        })
+    }
+
+    /// The lease this node registered under.
+    pub fn advertised(&self) -> &str {
+        &self.shared.advertised
+    }
+
+    /// Deregister-then-drain, step one: send the `Deregister`, wait
+    /// (bounded by `drain_timeout`) for the registry's ack, stop the
+    /// heartbeat thread. Returns whether the registry acked — after a
+    /// `true`, the registry routes no new work here and the caller may
+    /// start shedding. Safe to call once; Drop does the same best
+    /// effort if the caller forgets.
+    pub fn deregister(mut self) -> bool {
+        self.stop_and_join();
+        self.shared.deregistered.load(Ordering::SeqCst)
+    }
+
+    fn stop_and_join(&mut self) {
+        {
+            let mut g = lock_unpoisoned(&self.shared.stop);
+            *g = true;
+            self.shared.cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeRegistration {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn dial_and_register(registry_addr: &str, advertised: &str) -> Result<(TcpStream, RegisterAckMsg)> {
+    let mut stream = TcpStream::connect(registry_addr)?;
+    let _ = stream.set_nodelay(true);
+    let msg = RegisterMsg {
+        addr: advertised.to_string(),
+    };
+    write_frame(
+        &mut stream,
+        &Frame::message(Opcode::Register, 1, msg.encode()),
+    )?;
+    match read_frame(&mut stream, REGISTRY_MAX_FRAME) {
+        Ok(Some(f)) if f.opcode == Opcode::RegisterAck => {
+            let ack = RegisterAckMsg::decode(&f.payload)?;
+            Ok((stream, ack))
+        }
+        Ok(Some(f)) => Err(Error::Remote {
+            code: "registry".into(),
+            message: format!("expected RegisterAck, got {:?}", f.opcode),
+        }),
+        Ok(None) => Err(Error::Remote {
+            code: "registry".into(),
+            message: "registry closed the connection during registration".into(),
+        }),
+        Err(e) => Err(e.into()),
+    }
+}
+
+fn heartbeat_loop(shared: Arc<RegShared>, mut stream: TcpStream, mut interval: Duration) {
+    // Reconnect attempts since the last successful write; resets on
+    // success so a long-lived node backs off afresh per outage.
+    let mut attempt: u32 = 0;
+    loop {
+        let stopped = {
+            let g = lock_unpoisoned(&shared.stop);
+            if *g {
+                true
+            } else {
+                let (g, _) = wait_timeout_unpoisoned(&shared.cv, g, interval);
+                *g
+            }
+        };
+        if stopped {
+            // Deregister-then-drain: tell the registry to stop routing
+            // here and wait (bounded) for the ack before the caller
+            // sheds. A dead registry forfeits the ack — the lease
+            // expires on its own.
+            let msg = RegisterMsg {
+                addr: shared.advertised.clone(),
+            };
+            if write_frame(
+                &mut stream,
+                &Frame::message(Opcode::Deregister, 1, msg.encode()),
+            )
+            .is_ok()
+            {
+                let _ = stream.set_read_timeout(Some(shared.drain_timeout));
+                if let Ok(Some(f)) = read_frame(&mut stream, REGISTRY_MAX_FRAME) {
+                    if f.opcode == Opcode::RegisterAck {
+                        shared.deregistered.store(true, Ordering::SeqCst);
+                    }
+                }
+            }
+            return;
+        }
+        let (inflight, credit_headroom) = (shared.load)();
+        let hb = HeartbeatMsg {
+            addr: shared.advertised.clone(),
+            inflight,
+            credit_headroom,
+        };
+        if write_frame(
+            &mut stream,
+            &Frame::message(Opcode::Heartbeat, 0, hb.encode()),
+        )
+        .is_ok()
+        {
+            attempt = 0;
+            continue;
+        }
+        // Registry connection lost: re-dial and re-register, paced by
+        // the reconnect backoff — one attempt per loop turn so a stop
+        // request stays responsive.
+        sleep_backoff(&Backoff::RECONNECT, attempt);
+        attempt = attempt.saturating_add(1).min(16);
+        if let Ok((s, ack)) = dial_and_register(&shared.registry_addr, &shared.advertised) {
+            stream = s;
+            interval = Duration::from_millis(ack.heartbeat_ms.max(1));
+            attempt = 0;
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> RegistryConfig {
+        RegistryConfig {
+            heartbeat_ms: 20,
+            suspect_misses: 2,
+            evict_misses: 4,
+        }
+    }
+
+    fn fixed_load(inflight: u32, headroom: u32) -> LoadProbe {
+        Arc::new(move || (inflight, headroom))
+    }
+
+    #[test]
+    fn config_validates() {
+        assert!(RegistryConfig::default().validate().is_ok());
+        assert!(RegistryConfig {
+            heartbeat_ms: 0,
+            ..RegistryConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(RegistryConfig {
+            suspect_misses: 0,
+            ..RegistryConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(RegistryConfig {
+            suspect_misses: 5,
+            evict_misses: 4,
+            ..RegistryConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert_eq!(RegistryConfig::default().lease_ms(), 600);
+    }
+
+    #[test]
+    fn register_heartbeat_list_deregister_roundtrip() {
+        let reg = Registry::bind("127.0.0.1:0", fast_cfg()).expect("bind registry");
+        let addr = reg.local_addr().to_string();
+
+        let a = NodeRegistration::start(
+            &addr,
+            "10.0.0.1:4750",
+            fixed_load(2, 6),
+            Duration::from_secs(5),
+        )
+        .expect("register a");
+        let _b = NodeRegistration::start(
+            &addr,
+            "10.0.0.2:4750",
+            fixed_load(0, 8),
+            Duration::from_secs(5),
+        )
+        .expect("register b");
+
+        let nodes = node_list(&addr).expect("node list");
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].addr, "10.0.0.1:4750");
+        assert_eq!(nodes[1].addr, "10.0.0.2:4750");
+
+        // Deregister-before-drain ordering: the ack means the node is
+        // already unroutable.
+        assert!(a.deregister(), "registry must ack the deregister");
+        let nodes = node_list(&addr).expect("node list after deregister");
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].addr, "10.0.0.2:4750");
+
+        let snap = reg.shutdown();
+        assert_eq!(snap.counters.get("registry_deregisters"), Some(&1));
+        assert!(snap.counters.get("registry_registers").copied().unwrap_or(0) >= 2);
+    }
+
+    #[test]
+    fn lease_expiry_suspects_then_evicts() {
+        let cfg = fast_cfg();
+        let reg = Registry::bind("127.0.0.1:0", cfg).expect("bind registry");
+        let addr = reg.local_addr().to_string();
+
+        // Register directly (no heartbeat thread) so the lease decays.
+        let (_stream, ack) =
+            dial_and_register(&addr, "10.0.0.9:4750").expect("manual registration");
+        assert_eq!(ack.heartbeat_ms, cfg.heartbeat_ms);
+        assert_eq!(ack.lease_ms, cfg.lease_ms());
+
+        assert_eq!(node_list(&addr).expect("fresh list").len(), 1);
+
+        // Past suspect_misses beats: withheld from routing, still known.
+        std::thread::sleep(Duration::from_millis(
+            cfg.heartbeat_ms * (cfg.suspect_misses + 1),
+        ));
+        assert!(
+            node_list(&addr).expect("suspect list").is_empty(),
+            "suspect node must not be routable"
+        );
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].state, LeaseState::Suspect);
+
+        // Past evict_misses beats: forgotten entirely.
+        std::thread::sleep(Duration::from_millis(
+            cfg.heartbeat_ms * (cfg.evict_misses - cfg.suspect_misses + 1),
+        ));
+        assert!(reg.snapshot().is_empty(), "expired lease must be evicted");
+        let metrics = reg.shutdown();
+        assert!(metrics.counters.get("registry_evictions").copied().unwrap_or(0) >= 1);
+    }
+
+    #[test]
+    fn heartbeats_keep_the_lease_alive_and_update_load() {
+        let cfg = fast_cfg();
+        let reg = Registry::bind("127.0.0.1:0", cfg).expect("bind registry");
+        let addr = reg.local_addr().to_string();
+        let node = NodeRegistration::start(
+            &addr,
+            "10.0.0.3:4750",
+            fixed_load(5, 11),
+            Duration::from_secs(5),
+        )
+        .expect("register");
+
+        // Well past the eviction horizon — heartbeats must renew.
+        std::thread::sleep(Duration::from_millis(cfg.lease_ms() * 2));
+        let nodes = node_list(&addr).expect("list");
+        assert_eq!(nodes.len(), 1, "heartbeating node must stay routable");
+        assert_eq!(nodes[0].inflight, 5);
+        assert_eq!(nodes[0].credit_headroom, 11);
+        drop(node);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn drain_latch_and_helpers() {
+        let reg = Registry::bind("127.0.0.1:0", RegistryConfig::default()).expect("bind");
+        let addr = reg.local_addr().to_string();
+        assert!(!reg.drain_requested());
+        assert!(!reg.wait_for_drain_request(Some(Duration::from_millis(10))));
+        drain_registry(&addr).expect("drain ack");
+        assert!(reg.wait_for_drain_request(Some(Duration::from_secs(5))));
+        assert!(reg.drain_requested());
+        reg.shutdown();
+    }
+}

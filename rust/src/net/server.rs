@@ -52,40 +52,49 @@ use std::time::{Duration, Instant};
 
 use sync::thread::JoinHandle;
 
-/// How long [`NetServer::shutdown`] waits for in-flight sorts before
-/// giving up and closing sockets anyway.
-const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
-
-/// Size of the sliding idempotency window: the most recent completed
-/// responses, keyed by `(session, request id)`, kept server-wide so a
-/// reconnecting client that resubmits an already-completed request gets
-/// the cached response replayed instead of a re-execution.
-const DEDUP_WINDOW: usize = 256;
-
 /// Responses larger than this many keys are not cached (bounds the
 /// window's memory). An uncached resubmission simply re-executes —
 /// sorting is deterministic, so the replay is byte-identical anyway;
 /// the window is an optimization, not a correctness requirement.
 const DEDUP_MAX_KEYS: u64 = 1 << 16;
 
-/// The idempotency window: FIFO-evicted map of completed responses.
+/// The idempotency window: FIFO-evicted map of completed responses,
+/// capacity-bounded by [`crate::config::NetConfig::dedup_window`].
 /// Session id `0` (a client that never reconnects) disables it.
-#[derive(Default)]
 struct Dedup {
+    window: usize,
     order: VecDeque<(u64, u64)>,
     map: HashMap<(u64, u64), SortResponse>,
 }
 
 impl Dedup {
-    fn insert(&mut self, session: u64, id: u64, resp: SortResponse) {
+    fn new(window: usize) -> Dedup {
+        Dedup {
+            window,
+            order: VecDeque::new(),
+            map: HashMap::new(),
+        }
+    }
+
+    /// Cache a completed response; returns how many older entries were
+    /// evicted to make room (surfaced as `net_dedup_evictions` — a
+    /// nonzero rate means reconnecting clients may miss replays and
+    /// re-execute instead).
+    fn insert(&mut self, session: u64, id: u64, resp: SortResponse) -> u64 {
+        if self.window == 0 {
+            return 0;
+        }
+        let mut evicted = 0;
         if self.map.insert((session, id), resp).is_none() {
             self.order.push_back((session, id));
-            while self.order.len() > DEDUP_WINDOW {
+            while self.order.len() > self.window {
                 if let Some(k) = self.order.pop_front() {
                     self.map.remove(&k);
+                    evicted += 1;
                 }
             }
         }
+        evicted
     }
 
     fn get(&self, session: u64, id: u64) -> Option<SortResponse> {
@@ -104,6 +113,10 @@ struct Gauge {
 impl Gauge {
     fn incr(&self) {
         *lock_unpoisoned(&self.n) += 1;
+    }
+
+    fn get(&self) -> usize {
+        *lock_unpoisoned(&self.n)
     }
 
     fn decr(&self) {
@@ -146,6 +159,9 @@ struct Shared {
     conns: Mutex<Vec<TcpStream>>,
     /// Idempotency window for reconnecting clients (see [`Dedup`]).
     dedup: Mutex<Dedup>,
+    /// The service's fault injector (when a plan is armed), probed for
+    /// the `node_down` point at request admission.
+    faults: Option<Arc<crate::sim::FaultInjector>>,
 }
 
 /// A running TCP sort server. Dropping (or calling
@@ -166,6 +182,7 @@ impl NetServer {
         net.validate()?;
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
+        let faults = client.fault_injector();
         let shared = Arc::new(Shared {
             client,
             net,
@@ -174,7 +191,8 @@ impl NetServer {
             inflight: Gauge::default(),
             drain: DrainSignal::default(),
             conns: Mutex::new(Vec::new()),
-            dedup: Mutex::new(Dedup::default()),
+            dedup: Mutex::new(Dedup::new(net.dedup_window)),
+            faults,
         });
         let accept_shared = shared.clone();
         let accept = sync::thread::spawn_named("gbs-net-accept".into(), move || {
@@ -203,6 +221,20 @@ impl NetServer {
     /// True once some client has sent a `Drain` frame.
     pub fn drain_requested(&self) -> bool {
         *lock_unpoisoned(&self.shared.drain.requested)
+    }
+
+    /// A cheap, clonable probe of this server's advertised load:
+    /// `(inflight, credit_headroom)`. The cluster heartbeat thread
+    /// calls it each beat; both numbers are instantaneous reads (the
+    /// registry smooths nothing — routing only needs relative order).
+    pub fn load_probe(&self) -> Arc<dyn Fn() -> (u32, u32) + Send + Sync> {
+        let shared = Arc::clone(&self.shared);
+        Arc::new(move || {
+            let inflight = shared.inflight.get() as u32;
+            let conns = lock_unpoisoned(&shared.conns).len() as u32;
+            let total = conns.saturating_mul(shared.net.credits as u32);
+            (inflight, total.saturating_sub(inflight))
+        })
     }
 
     /// Block until a client requests a drain (or the timeout passes);
@@ -252,7 +284,8 @@ impl NetServer {
             .and_then(|h| h.join().ok())
             .unwrap_or_default();
         // Complete and flush in-flight sorts before touching sockets.
-        if !self.shared.inflight.wait_zero(DRAIN_TIMEOUT) {
+        let drain_timeout = Duration::from_millis(self.shared.net.drain_timeout_ms);
+        if !self.shared.inflight.wait_zero(drain_timeout) {
             self.shared.metrics.incr("net_drain_timeout", 1);
         }
         // Unblock idle readers; their threads exit on the closed socket.
@@ -407,7 +440,10 @@ fn pump_loop(
                 // window — errors are not cached (they may be
                 // transient; a resubmission deserves a fresh attempt).
                 if session != 0 && resp.keys.len() as u64 <= DEDUP_MAX_KEYS {
-                    lock_unpoisoned(&shared.dedup).insert(session, id, resp);
+                    let evicted = lock_unpoisoned(&shared.dedup).insert(session, id, resp);
+                    if evicted > 0 {
+                        shared.metrics.incr("net_dedup_evictions", evicted);
+                    }
                 }
             }
             Err(e) => {
@@ -558,6 +594,19 @@ fn read_loop(
                         &error_frame(0, ErrorCode::Malformed, "duplicate or zero request id"),
                     );
                     break;
+                }
+                // Deterministic whole-node crash (chaos plans only):
+                // the `node_down` point fires at admission and the
+                // process dies abruptly — no drain, no goodbye, no
+                // deregister — modelling a kill -9. Cluster failover
+                // (registry eviction + client resubmission to a
+                // surviving node) is what recovers the request. Each
+                // node process owns its plan file, so the probe index
+                // is always 0.
+                if let Some(inj) = &shared.faults {
+                    if inj.node_down(0) {
+                        std::process::exit(113);
+                    }
                 }
                 // Defensive credit enforcement: a conforming client
                 // never trips this, so no credit is returned.

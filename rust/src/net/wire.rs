@@ -55,6 +55,19 @@ pub enum Opcode {
     Goodbye = 0x06,
     /// Liveness probe; the server echoes the id in a [`Opcode::Pong`].
     Ping = 0x07,
+    /// Node → registry: join the cluster. Payload is a [`RegisterMsg`];
+    /// acked with [`Opcode::RegisterAck`].
+    Register = 0x08,
+    /// Node → registry: lease renewal plus advertised load. Payload is
+    /// a [`HeartbeatMsg`]; fire-and-forget (no reply frame).
+    Heartbeat = 0x09,
+    /// Client → registry: ask for the routable node set. Answered with
+    /// a [`Opcode::NodeListReply`].
+    NodeList = 0x0A,
+    /// Node → registry: leave the cluster *before* draining, so the
+    /// registry stops routing to the node while it still answers.
+    /// Payload is a [`RegisterMsg`]; acked with [`Opcode::RegisterAck`].
+    Deregister = 0x0B,
     /// Ask the server to drain gracefully (finish in-flight sorts, then
     /// stop). Acked with [`Opcode::DrainAck`] before the drain begins.
     Drain = 0x0F,
@@ -78,11 +91,17 @@ pub enum Opcode {
     DrainAck = 0x88,
     /// Liveness reply.
     Pong = 0x89,
+    /// Registry → node: acknowledges a [`Opcode::Register`] or
+    /// [`Opcode::Deregister`]. Payload is a [`RegisterAckMsg`].
+    RegisterAck = 0x8A,
+    /// Registry → client: the routable node set. Payload is a
+    /// [`NodeListMsg`].
+    NodeListReply = 0x8B,
 }
 
 impl Opcode {
     /// Every opcode (for exhaustive property tests).
-    pub const ALL: [Opcode; 17] = [
+    pub const ALL: [Opcode; 23] = [
         Opcode::Hello,
         Opcode::SortBegin,
         Opcode::KeyChunk,
@@ -90,6 +109,10 @@ impl Opcode {
         Opcode::Commit,
         Opcode::Goodbye,
         Opcode::Ping,
+        Opcode::Register,
+        Opcode::Heartbeat,
+        Opcode::NodeList,
+        Opcode::Deregister,
         Opcode::Drain,
         Opcode::HelloAck,
         Opcode::SortHeader,
@@ -100,6 +123,8 @@ impl Opcode {
         Opcode::Credit,
         Opcode::DrainAck,
         Opcode::Pong,
+        Opcode::RegisterAck,
+        Opcode::NodeListReply,
     ];
 
     /// Parse a wire byte.
@@ -808,6 +833,154 @@ impl CreditMsg {
     }
 }
 
+/// `Register` / `Deregister` payload: the node's advertised sort
+/// address (what *clients* should dial — not the registry connection's
+/// peer address, which may be a loopback or NAT artifact).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegisterMsg {
+    /// Advertised `host:port` of the node's sort listener.
+    pub addr: String,
+}
+
+impl RegisterMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + self.addr.len());
+        push_str_u16(&mut out, &self.addr);
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = RegisterMsg { addr: r.str_u16()? };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// `Heartbeat` payload: lease renewal plus the load the registry
+/// advertises to routing clients.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HeartbeatMsg {
+    /// Advertised `host:port` (doubles as implicit re-registration if
+    /// the registry restarted and lost the membership table).
+    pub addr: String,
+    /// Requests currently executing or queued on the node.
+    pub inflight: u32,
+    /// Unused admission credits across the node's connections.
+    pub credit_headroom: u32,
+}
+
+impl HeartbeatMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(10 + self.addr.len());
+        push_str_u16(&mut out, &self.addr);
+        out.extend_from_slice(&self.inflight.to_le_bytes());
+        out.extend_from_slice(&self.credit_headroom.to_le_bytes());
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = HeartbeatMsg {
+            addr: r.str_u16()?,
+            inflight: r.u32()?,
+            credit_headroom: r.u32()?,
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// `RegisterAck` payload: the lease the registry granted. The node
+/// paces its heartbeats from `heartbeat_ms` (registry config wins over
+/// any node-side default), and knows that `lease_ms` of silence gets it
+/// evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegisterAckMsg {
+    /// Interval the registry expects between heartbeats.
+    pub heartbeat_ms: u64,
+    /// Milliseconds of missed heartbeats before the node is evicted
+    /// (`heartbeat_ms × evict_misses`). `0` on a deregister ack — the
+    /// lease is gone.
+    pub lease_ms: u64,
+}
+
+impl RegisterAckMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.heartbeat_ms.to_le_bytes());
+        out.extend_from_slice(&self.lease_ms.to_le_bytes());
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let msg = RegisterAckMsg {
+            heartbeat_ms: r.u64()?,
+            lease_ms: r.u64()?,
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// One routable node in a [`NodeListMsg`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeEntry {
+    /// Advertised `host:port` of the node's sort listener.
+    pub addr: String,
+    /// Last heartbeat's in-flight count.
+    pub inflight: u32,
+    /// Last heartbeat's credit headroom.
+    pub credit_headroom: u32,
+}
+
+/// `NodeListReply` payload: every node currently holding a live lease
+/// (suspect and evicted nodes are excluded — the registry stops routing
+/// before the node is gone).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeListMsg {
+    /// Routable nodes with their last-advertised load.
+    pub nodes: Vec<NodeEntry>,
+}
+
+impl NodeListMsg {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + self.nodes.len() * 16);
+        let count = self.nodes.len().min(u16::MAX as usize);
+        out.extend_from_slice(&(count as u16).to_le_bytes());
+        for node in &self.nodes[..count] {
+            push_str_u16(&mut out, &node.addr);
+            out.extend_from_slice(&node.inflight.to_le_bytes());
+            out.extend_from_slice(&node.credit_headroom.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let count = r.u16()? as usize;
+        let mut nodes = Vec::with_capacity(count.min(1024));
+        for _ in 0..count {
+            nodes.push(NodeEntry {
+                addr: r.str_u16()?,
+                inflight: r.u32()?,
+                credit_headroom: r.u32()?,
+            });
+        }
+        r.done()?;
+        Ok(NodeListMsg { nodes })
+    }
+}
+
 /// Build an [`Opcode::ErrorFrame`] for `id`.
 pub fn error_frame(id: u64, code: ErrorCode, message: &str) -> Frame {
     Frame::message(
@@ -1140,6 +1313,49 @@ mod tests {
         assert_eq!(HelloAckMsg::decode(&ack.encode()).unwrap(), ack);
         let credit = CreditMsg { credits: 2 };
         assert_eq!(CreditMsg::decode(&credit.encode()).unwrap(), credit);
+    }
+
+    #[test]
+    fn registry_message_roundtrips() {
+        let reg = RegisterMsg {
+            addr: "10.0.0.7:4750".into(),
+        };
+        assert_eq!(RegisterMsg::decode(&reg.encode()).unwrap(), reg);
+
+        let hb = HeartbeatMsg {
+            addr: "10.0.0.7:4750".into(),
+            inflight: 3,
+            credit_headroom: 13,
+        };
+        assert_eq!(HeartbeatMsg::decode(&hb.encode()).unwrap(), hb);
+
+        let ack = RegisterAckMsg {
+            heartbeat_ms: 100,
+            lease_ms: 600,
+        };
+        assert_eq!(RegisterAckMsg::decode(&ack.encode()).unwrap(), ack);
+
+        let list = NodeListMsg {
+            nodes: vec![
+                NodeEntry {
+                    addr: "a:1".into(),
+                    inflight: 0,
+                    credit_headroom: 16,
+                },
+                NodeEntry {
+                    addr: "b:2".into(),
+                    inflight: 9,
+                    credit_headroom: 0,
+                },
+            ],
+        };
+        assert_eq!(NodeListMsg::decode(&list.encode()).unwrap(), list);
+        let empty = NodeListMsg { nodes: vec![] };
+        assert_eq!(NodeListMsg::decode(&empty.encode()).unwrap(), empty);
+        // Truncated entry tables are malformed, not a panic.
+        let mut bytes = list.encode();
+        bytes.truncate(bytes.len() - 3);
+        assert!(NodeListMsg::decode(&bytes).is_err());
     }
 
     #[test]

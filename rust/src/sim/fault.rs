@@ -34,13 +34,14 @@
 //! ```
 //!
 //! Points: `device_lost`, `device_oom`, `slow_device` (paces the worker
-//! by `delay_ms` per job), `worker_panic`, `socket_cut`, `frame_corrupt`.
+//! by `delay_ms` per job), `worker_panic`, `socket_cut`, `frame_corrupt`,
+//! `node_down` (a whole sort-server process dies — exercises cluster
+//! failover).
 //! `target` restricts a rule to one device/worker/connection index;
 //! omitted means "any". `after` skips the first N eligible hits, `count`
 //! bounds how many times the rule fires (default 1).
 
 use std::collections::BTreeMap;
-use std::fmt;
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
@@ -67,17 +68,21 @@ pub enum FaultPoint {
     /// A frame leaving the client is corrupted (payload bit-flip) — the
     /// server must reject it by CRC and the stream recovers.
     FrameCorrupt,
+    /// A whole sort-server process dies abruptly (crash, OOM-kill,
+    /// power loss) — exercises registry eviction and cluster failover.
+    NodeDown,
 }
 
 impl FaultPoint {
     /// All points, in the order they appear in docs and counters.
-    pub const ALL: [FaultPoint; 6] = [
+    pub const ALL: [FaultPoint; 7] = [
         FaultPoint::DeviceLost,
         FaultPoint::DeviceOom,
         FaultPoint::SlowDevice,
         FaultPoint::WorkerPanic,
         FaultPoint::SocketCut,
         FaultPoint::FrameCorrupt,
+        FaultPoint::NodeDown,
     ];
 
     /// Stable snake_case name used in plan JSON and metrics counters.
@@ -89,6 +94,7 @@ impl FaultPoint {
             FaultPoint::WorkerPanic => "worker_panic",
             FaultPoint::SocketCut => "socket_cut",
             FaultPoint::FrameCorrupt => "frame_corrupt",
+            FaultPoint::NodeDown => "node_down",
         }
     }
 
@@ -392,6 +398,13 @@ impl FaultInjector {
         self.probe(FaultPoint::FrameCorrupt, conn).is_some()
     }
 
+    /// Should sort-server process `node` die now? Probed at request
+    /// admission; a `true` here is followed by an abrupt process exit
+    /// (no drain, no goodbye — modelling a crash).
+    pub fn node_down(&self, node: usize) -> bool {
+        self.probe(FaultPoint::NodeDown, node).is_some()
+    }
+
     /// Injected-fault totals per point name, for the metrics snapshot.
     pub fn injected(&self) -> BTreeMap<&'static str, u64> {
         let st = match self.state.lock() {
@@ -399,15 +412,6 @@ impl FaultInjector {
             Err(p) => p.into_inner(),
         };
         st.injected.clone()
-    }
-}
-
-impl fmt::Debug for FaultInjector {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.debug_struct("FaultInjector")
-            .field("seed", &self.plan.seed)
-            .field("rules", &self.plan.rules.len())
-            .finish_non_exhaustive()
     }
 }
 
@@ -546,6 +550,24 @@ mod tests {
         assert_eq!(totals.get("frame_corrupt"), Some(&1));
         assert_eq!(totals.get("slow_device"), Some(&1));
         assert_eq!(totals.get("device_lost"), None);
+    }
+
+    #[test]
+    fn node_down_probe_fires_once_per_count() {
+        let inj = plan(
+            r#"{"version":1,"rules":[
+                {"point":"node_down","target":0,"after":2}
+            ]}"#,
+        )
+        .injector();
+        // Wrong node index: never eligible.
+        assert!(!inj.node_down(1));
+        // Hits 1 and 2 skipped by `after`, hit 3 fires, then exhausted.
+        assert!(!inj.node_down(0));
+        assert!(!inj.node_down(0));
+        assert!(inj.node_down(0));
+        assert!(!inj.node_down(0));
+        assert_eq!(inj.injected().get("node_down"), Some(&1));
     }
 
     #[test]

@@ -18,15 +18,28 @@
 //! Every test binds an ephemeral port so suites run in parallel, and
 //! every fault is attempt-counted (never wall-clock), so the schedule
 //! replays exactly.
+//!
+//! The cluster-tier tests go one level up: real `gbs` *processes* (a
+//! registry plus three nodes) with one node killed mid-load — via the
+//! deterministic `node_down` probe and via a hard SIGKILL — asserting
+//! zero failed client requests and byte-identical outputs, plus
+//! registry lease-expiry and deregister-before-drain ordering.
 
 use gpu_bucket_sort::config::{EngineKind, NetConfig, ServiceConfig};
 use gpu_bucket_sort::coordinator::{SortRequest, SortService};
 use gpu_bucket_sort::Error;
-use gpu_bucket_sort::net::wire::{self, Frame, HelloAckMsg, HelloMsg, Opcode, SortBeginMsg};
-use gpu_bucket_sort::net::{ClientOptions, NetClient, NetServer};
+use gpu_bucket_sort::net::registry::{node_list, LeaseState, Registry, RegistryConfig};
+use gpu_bucket_sort::net::wire::{
+    self, Frame, HelloAckMsg, HelloMsg, Opcode, RegisterAckMsg, RegisterMsg, SortBeginMsg,
+};
+use gpu_bucket_sort::net::{
+    ClientOptions, ClusterClient, ClusterOptions, NetClient, NetServer, NodeRegistration,
+};
 use gpu_bucket_sort::{KeyData, KeyType};
-use std::io::BufReader;
+use std::io::{BufRead, BufReader};
 use std::net::{TcpListener, TcpStream};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::time::{Duration, Instant};
 
 /// Write a fault plan to a unique temp file; returns its path.
 fn write_plan(name: &str, json: &str) -> String {
@@ -294,4 +307,280 @@ fn connection_lost_carries_in_flight_request_ids() {
     }
     assert!(err.to_string().contains("connection lost"));
     accept.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Cluster tier: registry + multi-node failover
+// ---------------------------------------------------------------------------
+
+/// A spawned `gbs` child whose stdout pipe is kept open (dropping it
+/// would EPIPE the child's progress prints).
+struct Proc {
+    child: Child,
+    _out: BufReader<ChildStdout>,
+}
+
+impl Proc {
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn the real `gbs` binary and scrape the machine-readable address
+/// line (`GBS_NET_ADDR` / `GBS_REGISTRY_ADDR`) from its stdout.
+fn spawn_gbs(args: &[&str], scrape_prefix: &str) -> (Proc, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_gbs"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn gbs");
+    let mut out = BufReader::new(child.stdout.take().expect("child stdout piped"));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if out.read_line(&mut line).expect("read child stdout") == 0 {
+            panic!("gbs {args:?} exited before announcing {scrape_prefix}");
+        }
+        if let Some(rest) = line.strip_prefix(scrape_prefix) {
+            return (Proc { child, _out: out }, rest.trim().to_string());
+        }
+    }
+}
+
+/// Poll the registry until it lists exactly `want` routable nodes.
+fn wait_for_nodes(reg_addr: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let n = node_list(reg_addr).map(|v| v.len()).unwrap_or(0);
+        if n == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "registry never listed {want} node(s) (currently {n})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn cluster_opts() -> ClusterOptions {
+    ClusterOptions {
+        connections_per_node: 1,
+        max_failovers: 4,
+        // Refresh only on failover: keeps the routing table
+        // deterministic for the kill choreography below.
+        refresh_every: 0,
+        faults: None,
+    }
+}
+
+/// Sort `rounds` requests through the cluster, asserting every single
+/// one succeeds byte-identically (zero failed client requests).
+fn sort_rounds(cluster: &ClusterClient, rounds: u64, n: usize, seed0: u64) {
+    for r in 0..rounds {
+        let data = keys(n, seed0 + r);
+        let mut expected = data.clone();
+        expected.sort_unstable();
+        let resp = cluster
+            .sort(SortRequest::new(data))
+            .unwrap_or_else(|e| panic!("cluster request {r} failed: {e}"));
+        assert_eq!(resp.keys_u32(), &expected[..], "request {r} diverged");
+    }
+}
+
+/// Kill 1 of 3 real node processes mid-load via the deterministic
+/// `node_down` probe (the node exits abruptly at request admission —
+/// no drain, no deregister). The cluster client must fail the
+/// in-flight request over to a survivor: zero failed requests,
+/// byte-identical output throughout.
+#[test]
+fn cluster_survives_node_down_probe_kill() {
+    let (registry, reg_addr) = spawn_gbs(
+        &["registry", "--listen", "127.0.0.1:0", "--heartbeat-ms", "25"],
+        "GBS_REGISTRY_ADDR ",
+    );
+    // The victim dies on its *first* admitted request (`node_down`,
+    // after 0, count 1 — attempt-counted, so the schedule replays).
+    let plan = write_plan(
+        "cluster_node_down",
+        r#"{"version":1,"seed":5,"rules":[
+            {"point":"node_down","target":0,"count":1}
+        ]}"#,
+    );
+    let (victim, _victim_addr) = spawn_gbs(
+        &[
+            "serve", "--listen", "127.0.0.1:0", "--registry", &reg_addr,
+            "--workers", "1", "--fault-plan", &plan,
+        ],
+        "GBS_NET_ADDR ",
+    );
+    wait_for_nodes(&reg_addr, 1);
+
+    // Resolve while only the victim is registered: request 1 *must*
+    // route to it. The survivors register before the first sort, so
+    // the failover's refresh finds them.
+    let cluster = ClusterClient::connect(&reg_addr, NetConfig::default(), cluster_opts())
+        .expect("cluster connect");
+    let (node_b, _) = spawn_gbs(
+        &["serve", "--listen", "127.0.0.1:0", "--registry", &reg_addr, "--workers", "1"],
+        "GBS_NET_ADDR ",
+    );
+    let (node_c, _) = spawn_gbs(
+        &["serve", "--listen", "127.0.0.1:0", "--registry", &reg_addr, "--workers", "1"],
+        "GBS_NET_ADDR ",
+    );
+    wait_for_nodes(&reg_addr, 3);
+
+    sort_rounds(&cluster, 6, 2_000, 700);
+    assert!(
+        cluster.failovers() >= 1,
+        "killing the routed node must force a failover"
+    );
+
+    // The probe's abrupt exit is the dedicated node-death code.
+    let mut victim = victim;
+    let status = victim.child.wait().expect("victim exits");
+    assert_eq!(status.code(), Some(113), "node_down exits with code 113");
+
+    // The dead node's lease expires; the registry stops listing it.
+    wait_for_nodes(&reg_addr, 2);
+
+    node_b.kill();
+    node_c.kill();
+    registry.kill();
+}
+
+/// The hard-kill variant: SIGKILL the node the cluster is routing to,
+/// mid-load. No probe, no exit handler — the process just vanishes.
+/// Same contract: zero failed requests, byte-identical output.
+#[test]
+fn cluster_survives_sigkill_of_routed_node() {
+    let (registry, reg_addr) = spawn_gbs(
+        &["registry", "--listen", "127.0.0.1:0", "--heartbeat-ms", "25"],
+        "GBS_REGISTRY_ADDR ",
+    );
+    let mut nodes: Vec<(Proc, String)> = (0..3)
+        .map(|_| {
+            spawn_gbs(
+                &["serve", "--listen", "127.0.0.1:0", "--registry", &reg_addr, "--workers", "1"],
+                "GBS_NET_ADDR ",
+            )
+        })
+        .collect();
+    wait_for_nodes(&reg_addr, 3);
+
+    let cluster = ClusterClient::connect(&reg_addr, NetConfig::default(), cluster_opts())
+        .expect("cluster connect");
+    // Warm-up load: with equal advertised loads the router sticks to
+    // the first node in address order — which tells us whom to kill.
+    sort_rounds(&cluster, 2, 2_000, 800);
+    let routed = cluster.nodes().first().cloned().expect("a routed node");
+    let pos = nodes
+        .iter()
+        .position(|(_, addr)| *addr == routed)
+        .expect("routed node is one of ours");
+    let (victim, _) = nodes.swap_remove(pos);
+    victim.kill(); // SIGKILL — no drain, no deregister, no goodbye
+
+    sort_rounds(&cluster, 4, 2_000, 900);
+    assert!(
+        cluster.failovers() >= 1,
+        "requests to the SIGKILLed node must fail over"
+    );
+
+    for (node, _) in nodes {
+        node.kill();
+    }
+    registry.kill();
+}
+
+/// Registry lease expiry over the raw wire: a node that registers and
+/// then goes silent turns suspect (withheld from `NodeList`) after
+/// `suspect_misses` beats and is evicted after `evict_misses`.
+#[test]
+fn registry_lease_expiry_suspects_then_evicts_silent_node() {
+    let cfg = RegistryConfig {
+        heartbeat_ms: 30,
+        suspect_misses: 2,
+        evict_misses: 4,
+    };
+    let reg = Registry::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = reg.local_addr().to_string();
+
+    // Register once, then never heartbeat.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let msg = RegisterMsg {
+        addr: "10.9.9.9:4750".into(),
+    };
+    wire::write_frame(&mut s, &Frame::message(Opcode::Register, 1, msg.encode())).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let ack = wire::read_frame(&mut r, 1 << 16).unwrap().unwrap();
+    assert_eq!(ack.opcode, Opcode::RegisterAck);
+    let ack = RegisterAckMsg::decode(&ack.payload).unwrap();
+    assert_eq!(ack.heartbeat_ms, 30, "ack must echo the registry's pace");
+    assert_eq!(ack.lease_ms, 120, "lease = heartbeat_ms × evict_misses");
+
+    assert_eq!(node_list(&addr).unwrap().len(), 1, "fresh lease is routable");
+
+    std::thread::sleep(Duration::from_millis(cfg.heartbeat_ms * (cfg.suspect_misses + 1)));
+    assert!(
+        node_list(&addr).unwrap().is_empty(),
+        "suspect node must be withheld from routing"
+    );
+    let snap = reg.snapshot();
+    assert_eq!(snap.len(), 1, "suspect is withheld, not yet forgotten");
+    assert_eq!(snap[0].state, LeaseState::Suspect);
+
+    std::thread::sleep(Duration::from_millis(
+        cfg.heartbeat_ms * (cfg.evict_misses - cfg.suspect_misses + 1),
+    ));
+    assert!(reg.snapshot().is_empty(), "expired lease must be evicted");
+    let metrics = reg.shutdown();
+    assert!(metrics.counters.get("registry_evictions").copied().unwrap_or(0) >= 1);
+}
+
+/// Deregister-before-drain ordering: the registry removes the node (and
+/// acks) *before* the node starts shedding — after the ack the node is
+/// unroutable via the registry, yet still completes direct traffic
+/// until its own drain begins.
+#[test]
+fn deregister_before_drain_stops_routing_while_node_still_serves() {
+    let reg = Registry::bind("127.0.0.1:0", RegistryConfig::default()).unwrap();
+    let reg_addr = reg.local_addr().to_string();
+    let service = SortService::start(ServiceConfig::default()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", service, NetConfig::default()).unwrap();
+    let node_addr = server.local_addr().to_string();
+    let registration = NodeRegistration::start(
+        &reg_addr,
+        &node_addr,
+        server.load_probe(),
+        Duration::from_secs(5),
+    )
+    .unwrap();
+    wait_for_nodes(&reg_addr, 1);
+
+    // Shutdown step one: deregister. The ack means the registry
+    // already dropped the node — no NodeList reply can route here.
+    assert!(registration.deregister(), "registry must ack the deregister");
+    assert!(
+        node_list(&reg_addr).unwrap().is_empty(),
+        "deregistered node must be unroutable immediately, not lease-later"
+    );
+
+    // Ordering proof: the node has NOT drained yet — direct traffic
+    // still completes after deregistration.
+    let client = NetClient::connect(&node_addr, 1, NetConfig::default()).unwrap();
+    let data = keys(2_048, 5);
+    let mut expected = data.clone();
+    expected.sort_unstable();
+    let resp = client.sort(SortRequest::new(data)).unwrap();
+    assert_eq!(resp.keys_u32(), &expected[..]);
+    drop(client);
+
+    // Only now does the node shed.
+    let _ = server.shutdown();
+    let snap = reg.shutdown();
+    assert_eq!(snap.counters.get("registry_deregisters").copied(), Some(1));
 }

@@ -1,12 +1,12 @@
 //! Repo task runner. One subcommand today:
 //!
 //! ```text
-//! cargo run -p xtask -- lint            # scan rust/src against R1–R6
+//! cargo run -p xtask -- lint            # scan rust/src against R1–R7
 //! cargo run -p xtask -- lint --self-test # prove every rule still fires
 //! ```
 //!
 //! The lint is the blocking CI gate for the repo's concurrency and
-//! panic-safety invariants (`ci/correctness.sh` runs it). Six rules,
+//! panic-safety invariants (`ci/correctness.sh` runs it). Seven rules,
 //! scanned with a hand-rolled comment/string-stripping tokenizer (the
 //! build is dependency-free, so no `syn`):
 //!
@@ -34,6 +34,13 @@
 //!   `util/backoff.rs`: ad-hoc sleep-retry loops hide unbounded waits
 //!   and drift; retries route through `util::backoff::sleep_backoff`
 //!   so every wait is capped, attempt-indexed and greppable.
+//! * **R7 — cluster tier on the facade and backoff.** The cluster
+//!   modules (`net/registry.rs`, `net/cluster.rs`) must import both
+//!   `util::sync` and `util::backoff`: heartbeat pacing, drain
+//!   signalling and failover retries all live there, and a module
+//!   that bypasses the facade (or open-codes its retry waits) would
+//!   silently escape the loom models and the R6 bound. They are also
+//!   FACADE_COVERED, so R3 polices the primitives themselves.
 //!
 //! Test regions (`#[cfg(test)]` / `#[cfg(all(test, …))]` items) are
 //! exempt from R2/R3/R5/R6. Deliberate exceptions go in
@@ -78,7 +85,7 @@ fn run_lint() -> ExitCode {
     }
     violations.retain(|v| !allow.iter().any(|(r, p)| r == v.rule && p == &v.path));
     if violations.is_empty() {
-        println!("xtask lint: {} files clean (R1–R6)", files.len());
+        println!("xtask lint: {} files clean (R1–R7)", files.len());
         ExitCode::SUCCESS
     } else {
         for v in &violations {
@@ -177,7 +184,13 @@ const FACADE_COVERED: &[&str] = &[
     "src/net/server.rs",
     "src/net/client.rs",
     "src/net/credit.rs",
+    "src/net/registry.rs",
+    "src/net/cluster.rs",
 ];
+
+/// Modules that must route every wait and wakeup through the shared
+/// helpers (R7): the cluster tier's heartbeat/failover machinery.
+const CLUSTER_TIER: &[&str] = &["src/net/registry.rs", "src/net/cluster.rs"];
 
 /// Files allowed to spawn raw OS threads (R2): the facade itself and
 /// the model checker it swaps in.
@@ -199,6 +212,27 @@ fn scan_file(rel: &str, text: &str) -> Vec<Violation> {
     let in_algos = rel.contains("src/algos/");
     let no_panic = rel.contains("src/net/") || rel.ends_with("src/coordinator/service.rs");
     let sleep_ok = suffix_matches("src/util/backoff.rs");
+
+    // R7: the cluster-tier modules must go through the shared wait
+    // helpers. A whole-file presence check (reported at line 1): the
+    // heartbeat loop and failover retries cannot be written correctly
+    // without naming both helper modules, so their absence means the
+    // module grew its own pacing.
+    if CLUSTER_TIER.iter().any(|s| suffix_matches(s)) {
+        for (needle, fix) in [
+            ("util::sync", "pace waits through the crate::util::sync facade"),
+            ("util::backoff", "pace retries through util::backoff::sleep_backoff"),
+        ] {
+            if !stripped.contains(needle) {
+                out.push(Violation {
+                    rule: "R7",
+                    path: rel.to_string(),
+                    line: 1,
+                    msg: format!("cluster-tier module never names `{needle}` — {fix}"),
+                });
+            }
+        }
+    }
 
     for (i, line) in code.iter().enumerate() {
         let lineno = i + 1;
@@ -629,6 +663,18 @@ fn self_test() -> Result<usize, String> {
             src: "pub fn f() {\n    std::thread::sleep(std::time::Duration::from_millis(5));\n}\n#[cfg(test)]\nmod tests {\n    fn g() {\n        std::thread::sleep(std::time::Duration::from_millis(5));\n    }\n}\n",
             expect_rule: None,
         },
+        Case {
+            name: "R7 fires on a cluster module bypassing the helpers",
+            path: "src/net/cluster.rs",
+            src: "pub fn f() -> u32 {\n    41 + 1\n}\n",
+            expect_rule: Some("R7"),
+        },
+        Case {
+            name: "R7 quiet when both helper modules are imported",
+            path: "src/net/cluster.rs",
+            src: "use crate::util::backoff::{sleep_backoff, Backoff};\nuse crate::util::sync::lock_unpoisoned;\npub fn f() -> u32 {\n    41 + 1\n}\n",
+            expect_rule: None,
+        },
     ];
     let mut fired = std::collections::BTreeSet::new();
     for c in &cases {
@@ -650,8 +696,8 @@ fn self_test() -> Result<usize, String> {
             }
         }
     }
-    if fired.len() != 6 {
-        return Err(format!("only {:?} fired — expected all six rules", fired));
+    if fired.len() != 7 {
+        return Err(format!("only {:?} fired — expected all seven rules", fired));
     }
     Ok(fired.len())
 }
@@ -662,7 +708,7 @@ mod tests {
 
     #[test]
     fn every_rule_fires_and_clean_twins_pass() {
-        assert_eq!(self_test().expect("self-test"), 6);
+        assert_eq!(self_test().expect("self-test"), 7);
     }
 
     #[test]
